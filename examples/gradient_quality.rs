@@ -1,0 +1,80 @@
+//! Why does MeZO converge slowly? (paper §5.6, Table 3)
+//!
+//! Computes exact LoRA gradients (MeSP) and the MeZO SPSA estimate on the
+//! same batch and model state, then reports per-layer cosine similarity,
+//! sign agreement and relative error — reproducing the paper's finding
+//! that zeroth-order estimates are essentially uncorrelated with truth.
+//!
+//!     cargo run --release --example gradient_quality -- [config] [n_batches]
+
+use mesp::config::{Method, TrainConfig};
+use mesp::coordinator::TrainSession;
+use mesp::metrics::{gradqual, grad_quality};
+use mesp::metrics::tables::TableBuilder;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let config = args.first().cloned().unwrap_or_else(|| "small".into());
+    let n_batches: usize =
+        args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(3);
+
+    let base = TrainConfig { config, log_every: usize::MAX,
+                             ..Default::default() };
+    let mut agg: Vec<gradqual::GradQuality> = Vec::new();
+
+    for b in 0..n_batches {
+        let mut cfg_e = base.clone();
+        cfg_e.method = Method::Mesp;
+        cfg_e.seed = 42 + b as u64;
+        let mut exact_s = TrainSession::new(cfg_e)?;
+        let (batch, _g) = exact_s.loader.next();
+        let exact = exact_s.engine.gradients(&batch)?;
+
+        let mut cfg_z = base.clone();
+        cfg_z.method = Method::Mezo;
+        cfg_z.seed = 42 + b as u64;
+        let mut mezo_s = TrainSession::new(cfg_z)?;
+        let est = mezo_s.engine.gradients(&batch)?;
+
+        let rows = grad_quality(&est, &exact);
+        if agg.is_empty() {
+            agg = rows;
+        } else {
+            for (a, r) in agg.iter_mut().zip(rows) {
+                a.cosine += r.cosine;
+                a.sign_agree += r.sign_agree;
+                a.rel_error += r.rel_error;
+            }
+        }
+    }
+    for a in &mut agg {
+        a.cosine /= n_batches as f64;
+        a.sign_agree /= n_batches as f64;
+        a.rel_error /= n_batches as f64;
+    }
+
+    println!("== MeZO gradient quality vs exact ({n_batches} batches) ==\n");
+    let mut t = TableBuilder::new(&[
+        "Layer", "Cosine", "Sign agree", "Rel. error",
+    ]);
+    for r in &agg {
+        t.row(vec![
+            r.layer.to_string(),
+            format!("{:.4}", r.cosine),
+            format!("{:.1}%", 100.0 * r.sign_agree),
+            format!("{:.1}", r.rel_error),
+        ]);
+    }
+    let avg = gradqual::average(&agg);
+    t.row(vec![
+        "Avg".into(),
+        format!("{:.4}", avg.cosine),
+        format!("{:.1}%", 100.0 * avg.sign_agree),
+        format!("{:.1}", avg.rel_error),
+    ]);
+    println!("{}", t.render());
+    println!("paper (Qwen2.5-0.5B): cosine ≈ 0.001, sign ≈ 48.4%, rel err ~1978");
+    println!("→ SPSA directions are chance-level; this is why MeZO needs");
+    println!("  10-100x more steps and still converges to a worse loss.");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! The paper's core comparison, measured live: run all four strategies on
+//! the same model/data/seed and report tracked peak memory + step time —
+//! the on-testbed analogue of Tables 1 and 5 — then print the analytical
+//! model's Qwen-scale projection next to the paper's numbers.
+//!
+//!     cargo run --release --example memory_comparison -- [config] [steps]
+
+use mesp::config::{presets, Method, TrainConfig};
+use mesp::coordinator::sweep_methods;
+use mesp::memory::model as memmodel;
+use mesp::metrics::tables::TableBuilder;
+use mesp::util::stats::fmt_mb;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let config = args.first().cloned().unwrap_or_else(|| "small".into());
+    let steps: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(5);
+
+    println!("== measured on this machine: config {config}, {steps} steps ==\n");
+    let base = TrainConfig { config, log_every: usize::MAX,
+                             ..Default::default() };
+    let methods = [Method::Mebp, Method::Mezo, Method::StoreH, Method::Mesp];
+    let runs = sweep_methods(&base, &methods, steps)?;
+    let mebp_peak = runs[0].1.peak_bytes as f64;
+    let mebp_time = runs[0].1.mean_step_secs;
+
+    let mut t = TableBuilder::new(&[
+        "Method", "peak MB", "vs MeBP", "s/step", "time vs MeBP",
+    ]);
+    for (m, s, _) in &runs {
+        t.row(vec![
+            m.name().into(),
+            fmt_mb(s.peak_bytes),
+            format!("{:+.0}%", 100.0 * (s.peak_bytes as f64 / mebp_peak - 1.0)),
+            format!("{:.3}", s.mean_step_secs),
+            format!("{:.2}x", s.mean_step_secs / mebp_time),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("== analytical model at the paper's Qwen2.5 dims (seq 256, r8) ==\n");
+    let mut t2 = TableBuilder::new(&[
+        "Model", "Method", "ours MB", "paper MB", "ours red.", "paper red.",
+    ]);
+    let paper: &[(&str, [(f64, f64); 3])] = &[
+        // (model, [(mebp, red), (mezo, red), (mesp, red)]) from Table 1
+        ("0.5b", [(360.8, 0.0), (243.0, 33.0), (136.2, 62.0)]),
+        ("1.5b", [(516.2, 0.0), (376.0, 27.0), (262.6, 49.0)]),
+        ("3b", [(637.6, 0.0), (479.2, 25.0), (368.4, 42.0)]),
+    ];
+    for (model, rows) in paper {
+        let dims = presets::by_name(model, 256, 8)?;
+        for (i, m) in [Method::Mebp, Method::Mezo, Method::Mesp].iter().enumerate() {
+            let ours = memmodel::peak_bytes(*m, &dims);
+            t2.row(vec![
+                model.to_uppercase(),
+                m.name().into(),
+                fmt_mb(ours),
+                format!("{:.1}", rows[i].0),
+                format!("{:.0}%", memmodel::reduction_vs_mebp(*m, &dims)),
+                format!("{:.0}%", rows[i].1),
+            ]);
+        }
+    }
+    println!("{}", t2.render());
+    Ok(())
+}

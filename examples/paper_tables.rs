@@ -1,0 +1,30 @@
+//! Regenerate EVERY table and figure of the paper in one run (the
+//! EXPERIMENTS.md source). Equivalent to `mesp reproduce --all` but as a
+//! library example, with the step counts used for the recorded results.
+//!
+//!     cargo run --release --example paper_tables -- [out.md]
+
+use mesp::reproduce;
+
+fn main() -> anyhow::Result<()> {
+    let out_path = std::env::args().nth(1);
+    let mut out = String::new();
+    for (n, steps) in [
+        (1usize, 5usize), // Table 1 (timing columns measured @small)
+        (2, 0), (3, 0), (4, 0),
+        (5, 5),           // Table 5 (timing measured @small)
+        (6, 0), (7, 0), (8, 0), (9, 0), (10, 0),
+        (11, 120),        // Fig 2 / Table 11 (loss curves @small)
+    ] {
+        eprintln!("[paper_tables] generating table {n} ...");
+        let s = reproduce::run_table(n, steps.max(1))?;
+        println!("{s}");
+        out.push_str(&s);
+        out.push('\n');
+    }
+    if let Some(p) = out_path {
+        std::fs::write(&p, &out)?;
+        eprintln!("[paper_tables] written to {p}");
+    }
+    Ok(())
+}

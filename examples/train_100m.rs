@@ -1,0 +1,53 @@
+//! End-to-end validation run (DESIGN.md §2): train the ~98M-parameter
+//! `e2e100m` config (d=768, 12 blocks, GQA, SwiGLU, LoRA r=8 on all 7
+//! projections, seq 128) for a few hundred steps on the synthetic corpus
+//! and log the loss curve — proving all three layers compose at scale.
+//!
+//!     cargo run --release --example train_100m -- [steps] [method]
+//!
+//! Results are appended to EXPERIMENTS.md §E2E by hand; the JSONL metrics
+//! land in runs/e2e100m-<method>.jsonl.
+
+use mesp::config::{Method, TrainConfig};
+use mesp::coordinator::TrainSession;
+use mesp::util::stats::fmt_mb;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(200);
+    let method = Method::parse(args.get(1).map(|s| s.as_str()).unwrap_or("mesp"))?;
+
+    let cfg = TrainConfig {
+        config: "e2e100m".into(),
+        method,
+        steps,
+        lr: 3e-4,
+        optimizer: mesp::config::OptimizerKind::parse("adam")?,
+        seed: 42,
+        log_every: 10,
+        metrics_path: Some(format!("runs/e2e100m-{}.jsonl",
+                                   method.name().to_lowercase())),
+        ..Default::default()
+    };
+
+    println!("== e2e100m: ~98M params, {} , {steps} steps ==", method.name());
+    let t0 = std::time::Instant::now();
+    let mut sess = TrainSession::new(cfg)?;
+    let summary = sess.run(steps)?;
+    let losses = sess.losses();
+
+    println!("\nloss curve (every {} steps):", (steps / 20).max(1));
+    for (i, l) in losses.iter().enumerate().step_by((steps / 20).max(1)) {
+        let bar = "#".repeat(((l / losses[0]) * 40.0) as usize);
+        println!("  step {:>5}  {l:.4}  {bar}", i + 1);
+    }
+    println!("\nfinal loss {:.4} (from {:.4})", summary.final_loss, losses[0]);
+    println!("peak tracked memory {} MB", fmt_mb(summary.peak_bytes));
+    println!("mean step time {:.2}s, total {:.1}s",
+             summary.mean_step_secs, t0.elapsed().as_secs_f64());
+    println!("\nper-artifact execution profile:");
+    for (name, s) in sess.engine.ctx().rt.exec_stats() {
+        println!("  {name:<22} {:>6} calls  {:>9.2}s", s.calls, s.total_secs);
+    }
+    Ok(())
+}

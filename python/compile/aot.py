@@ -1,0 +1,289 @@
+# AOT compiler: lowers every L2 function of every registered config to HLO
+# TEXT and writes artifacts/<config>/{*.hlo.txt, manifest.json}.
+#
+# HLO text — NOT lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()
+# or jax.export — is the interchange format: jax >= 0.5 emits protos with
+# 64-bit instruction ids which the xla crate's XLA (xla_extension 0.5.1)
+# rejects (`proto.id() <= INT_MAX`); the HLO *text* parser reassigns ids and
+# round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+#
+# Python runs exactly once: `make artifacts` calls this module, and the
+# content hash of the compile/ package is stored per config so unchanged
+# inputs make the build a no-op. The Rust runtime consumes manifest.json
+# (arg names/shapes/dtypes + model dims) and never imports Python.
+
+import argparse
+import dataclasses
+import functools
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import quant
+from .configs import CONFIGS, lora_param_count, param_count
+from .model import FROZEN, PROJS, RESIDUALS, ModelConfig, block_bwd_autodiff
+from .model import block_bwd_mesp, block_bwd_residuals, block_bwd_storeh
+from .model import block_fwd, block_fwd_residuals, block_fwd_saveh
+from .model import embed_fwd, lm_loss_fwd, lm_loss_grad
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+ARTIFACTS = REPO / "artifacts"
+
+
+# ----------------------------------------------------------------- argspec
+def _f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
+
+
+def frozen_args(cfg: ModelConfig):
+    return [(n, _f32(cfg.frozen_shapes()[n])) for n in FROZEN]
+
+
+def lora_args(cfg: ModelConfig):
+    out = []
+    for p in PROJS:
+        out.append((f"a_{p}", _f32(cfg.lora_shapes()[f"a_{p}"])))
+        out.append((f"b_{p}", _f32(cfg.lora_shapes()[f"b_{p}"])))
+    return out
+
+
+def residual_args(cfg: ModelConfig):
+    b, n, d = cfg.batch, cfg.seq, cfg.d_model
+    m = b * n
+    shapes = {
+        "x": (m, d), "h1": (m, d), "h2": (m, d), "x2": (m, d),
+        "q_rope": (b, cfg.n_heads, n, cfg.head_dim),
+        "k_rope": (b, cfg.n_kv_heads, n, cfg.head_dim),
+        "v_heads": (b, cfg.n_kv_heads, n, cfg.head_dim),
+        "probs": (b, cfg.n_heads, n, n),
+        "attn_flat": (m, cfg.q_dim),
+        "gate_out": (m, cfg.d_ff), "up_out": (m, cfg.d_ff),
+        "silu_out": (m, cfg.d_ff),
+    }
+    for p in PROJS:
+        shapes[f"h_{p}"] = (m, cfg.rank)
+    return [(name, _f32(shapes[name])) for name in RESIDUALS]
+
+
+def h_args(cfg: ModelConfig):
+    m = cfg.batch * cfg.seq
+    return [(f"h_{p}", _f32((m, cfg.rank))) for p in PROJS]
+
+
+def x_arg(cfg):
+    return ("x", _f32((cfg.batch, cfg.seq, cfg.d_model)))
+
+
+def gy_arg(cfg):
+    return ("g_y", _f32((cfg.batch, cfg.seq, cfg.d_model)))
+
+
+def artifact_specs(cfg: ModelConfig):
+    """name → (callable(cfg, *args), [(arg_name, ShapeDtypeStruct)…])."""
+    fz, lo = frozen_args(cfg), lora_args(cfg)
+    emb = ("emb", _f32((cfg.vocab, cfg.d_model)))
+    tgt = ("targets", _i32((cfg.batch, cfg.seq)))
+    nw = ("norm_w", _f32((cfg.d_model,)))
+
+    def split_fz_lo(fn, n_lead):
+        # adapt flat positional args → (leads…, frozen tuple, lora tuple)
+        def wrapped(*args):
+            leads = args[:n_lead]
+            rest = args[n_lead:]
+            return fn(cfg, *leads, rest[: len(fz)], rest[len(fz):])
+        return wrapped
+
+    specs = {
+        "embed_fwd": (
+            lambda tokens, e: embed_fwd(cfg, tokens, e),
+            [("tokens", _i32((cfg.batch, cfg.seq))), emb],
+        ),
+        "block_fwd": (split_fz_lo(block_fwd, 1), [x_arg(cfg)] + fz + lo),
+        "block_fwd_saveh": (
+            split_fz_lo(block_fwd_saveh, 1), [x_arg(cfg)] + fz + lo),
+        "block_bwd_mesp": (
+            split_fz_lo(block_bwd_mesp, 2),
+            [x_arg(cfg), gy_arg(cfg)] + fz + lo),
+        "block_bwd_autodiff": (
+            split_fz_lo(block_bwd_autodiff, 2),
+            [x_arg(cfg), gy_arg(cfg)] + fz + lo),
+        "lm_loss_fwd": (
+            lambda h, w, e, t: lm_loss_fwd(cfg, h, w, e, t),
+            [("h", _f32((cfg.batch, cfg.seq, cfg.d_model))), nw, emb, tgt]),
+        "lm_loss_grad": (
+            lambda h, w, e, t: lm_loss_grad(cfg, h, w, e, t),
+            [("h", _f32((cfg.batch, cfg.seq, cfg.d_model))), nw, emb, tgt]),
+    }
+    # quantized-base-weights variant (paper §4.5); requires dims divisible
+    # by the quant group. Compiled for every config that qualifies.
+    from .model import QUANT_MATS, block_fwd_q4
+    from . import quant as quant_mod
+
+    if all(cfg.proj_dims(p)[0] % quant_mod.GROUP == 0
+           for p in ("q", "o", "down")):
+        qargs = []
+        for name in QUANT_MATS:
+            fz_shape = {
+                "wq": ("q",), "wk": ("k",), "wv": ("v",), "wo": ("o",),
+                "wg": ("gate",), "wu": ("up",), "wd": ("down",),
+            }[name]
+            din, dout = cfg.proj_dims(fz_shape[0])
+            qargs.append((f"q_{name}", jax.ShapeDtypeStruct(
+                (din // 2, dout), jnp.int32)))
+            qargs.append((f"s_{name}", _f32((din // quant_mod.GROUP, dout))))
+
+        def fwd_q4(*args):
+            x, l1, l2 = args[0], args[1], args[2]
+            qpairs = args[3: 3 + 2 * len(QUANT_MATS)]
+            rest = args[3 + 2 * len(QUANT_MATS):]
+            return block_fwd_q4(cfg, x, l1, l2, qpairs, rest)
+
+        specs["block_fwd_q4"] = (
+            fwd_q4,
+            [x_arg(cfg), ("ln1", _f32((cfg.d_model,))),
+             ("ln2", _f32((cfg.d_model,)))] + qargs + lo)
+
+    if cfg.attention == "probs":
+        # residual/storeh paths store probs — flash variants skip them.
+        def bwd_storeh(*args):
+            x, g_y = args[0], args[1]
+            hs = args[2: 2 + len(PROJS)]
+            rest = args[2 + len(PROJS):]
+            return block_bwd_storeh(cfg, x, g_y, hs, rest[: len(fz)],
+                                    rest[len(fz):])
+
+        def bwd_res(*args):
+            g_y = args[0]
+            res = args[1: 1 + len(RESIDUALS)]
+            rest = args[1 + len(RESIDUALS):]
+            return block_bwd_residuals(cfg, g_y, res, rest[: len(fz)],
+                                       rest[len(fz):])
+
+        specs["block_fwd_residuals"] = (
+            split_fz_lo(block_fwd_residuals, 1), [x_arg(cfg)] + fz + lo)
+        specs["block_bwd_residuals"] = (
+            bwd_res, [gy_arg(cfg)] + residual_args(cfg) + fz + lo)
+        specs["block_bwd_storeh"] = (
+            bwd_storeh, [x_arg(cfg), gy_arg(cfg)] + h_args(cfg) + fz + lo)
+    return specs
+
+
+# ---------------------------------------------------------------- lowering
+def to_hlo_text(fn, args) -> str:
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(sds) -> str:
+    return {"float32": "f32", "int32": "i32", "uint8": "u8"}[str(sds.dtype)]
+
+
+def _source_hash() -> str:
+    h = hashlib.sha256()
+    pkg = pathlib.Path(__file__).parent
+    for f in sorted(pkg.rglob("*.py")):
+        h.update(f.read_bytes())
+    return h.hexdigest()[:16]
+
+
+def build_config(cfg: ModelConfig, force: bool = False) -> bool:
+    """Lower all artifacts for one config. Returns True if work was done."""
+    outdir = ARTIFACTS / cfg.name
+    stamp = outdir / ".build_hash"
+    want = _source_hash() + ":" + json.dumps(dataclasses.asdict(cfg),
+                                             sort_keys=True, default=list)
+    want = hashlib.sha256(want.encode()).hexdigest()[:16]
+    if not force and stamp.exists() and stamp.read_text() == want:
+        print(f"[aot] {cfg.name}: up to date")
+        return False
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {
+        "config": {
+            **{k: v for k, v in dataclasses.asdict(cfg).items()
+               if not isinstance(v, (list, tuple))},
+            "pallas_ops": list(cfg.pallas_ops),
+            "scale": cfg.scale,
+            "param_count": param_count(cfg),
+            "lora_param_count": lora_param_count(cfg),
+        },
+        "artifacts": {},
+    }
+    for name, (fn, argspec) in artifact_specs(cfg).items():
+        args = [sds for _, sds in argspec]
+        print(f"[aot] {cfg.name}/{name}: lowering "
+              f"({len(args)} args) ...", flush=True)
+        text = to_hlo_text(fn, args)
+        fname = f"{name}.hlo.txt"
+        (outdir / fname).write_text(text)
+        n_out = _count_outputs(fn, args)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "args": [
+                {"name": an, "shape": list(sds.shape),
+                 "dtype": _dtype_name(sds)}
+                for an, sds in argspec
+            ],
+            "outputs": n_out,
+        }
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    stamp.write_text(want)
+    print(f"[aot] {cfg.name}: wrote {len(manifest['artifacts'])} artifacts")
+    return True
+
+
+@functools.lru_cache(maxsize=None)
+def _noop():
+    return None
+
+
+def _count_outputs(fn, args) -> int:
+    out = jax.eval_shape(fn, *args)
+    if isinstance(out, (tuple, list)):
+        return len(out)
+    return 1
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", action="append",
+                    help="config name(s) to build (default: all)")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", help="ignored (Makefile stamp compat)")
+    ns = ap.parse_args()
+    if ns.list:
+        for name, cfg in CONFIGS.items():
+            print(f"{name}: {param_count(cfg)/1e6:.1f}M params, "
+                  f"seq={cfg.seq}, rank={cfg.rank}, attn={cfg.attention}")
+        return 0
+    names = ns.config or list(CONFIGS)
+    for name in names:
+        build_config(CONFIGS[name], force=ns.force)
+    # top-level index so the Rust side can enumerate configs
+    index = {n: f"{n}/manifest.json" for n in names
+             if (ARTIFACTS / n / "manifest.json").exists()}
+    existing = {}
+    idx_path = ARTIFACTS / "index.json"
+    if idx_path.exists():
+        existing = json.loads(idx_path.read_text())
+    existing.update(index)
+    idx_path.write_text(json.dumps(existing, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,58 @@
+# Compiled-config registry: every ModelConfig that `make artifacts` lowers
+# to an HLO artifact set. The Rust side reads the dims back from each
+# config's manifest.json, so this file is the single source of truth for
+# runtime-executable shapes. (The Qwen2.5-{0.5B,1.5B,3B} dims used by the
+# analytical memory model are sim-only — they live in rust/src/config/
+# presets and are never compiled here.)
+
+import dataclasses
+
+from .model import ModelConfig
+
+CONFIGS = {
+    # Minimal dims for fast unit/integration tests and gradcheck.
+    "toy": ModelConfig(
+        name="toy", vocab=256, d_model=64, n_layers=2, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=128, seq=32, batch=1, rank=4,
+        alpha=8.0,
+    ),
+    # Every Pallas kernel on the artifact path + flash attention, to prove
+    # the full kernel set composes end-to-end (extension ablation).
+    "toy_flash": ModelConfig(
+        name="toy_flash", vocab=256, d_model=64, n_layers=2, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=128, seq=32, batch=1, rank=4,
+        alpha=8.0, pallas_ops=("lora", "norm", "mlp"), attention="flash",
+    ),
+    # Convergence runs, MeZO gradient-quality analysis, criterion benches.
+    "small": ModelConfig(
+        name="small", vocab=512, d_model=128, n_layers=4, n_heads=4,
+        n_kv_heads=2, head_dim=32, d_ff=256, seq=64, batch=1, rank=8,
+    ),
+    # The end-to-end validation model: ~98M params (DESIGN.md §2).
+    "e2e100m": ModelConfig(
+        name="e2e100m", vocab=16384, d_model=768, n_layers=12, n_heads=12,
+        n_kv_heads=4, head_dim=64, d_ff=2304, seq=128, batch=1, rank=8,
+    ),
+}
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Frozen + embedding parameter count (LoRA excluded)."""
+    per_block = sum(
+        int(a * b) if len(sh) == 2 else int(sh[0])
+        for sh in cfg.frozen_shapes().values()
+        for a, b in [sh if len(sh) == 2 else (sh[0], 1)]
+    )
+    return cfg.vocab * cfg.d_model + cfg.n_layers * per_block + cfg.d_model
+
+
+def lora_param_count(cfg: ModelConfig) -> int:
+    return sum(
+        sh[0] * sh[1] for sh in cfg.lora_shapes().values()
+    ) * cfg.n_layers
+
+
+def variants(name: str):
+    """Derived configs (e.g. rank sweeps) — reserved for ablation builds."""
+    base = CONFIGS[name]
+    return {r: dataclasses.replace(base, rank=r) for r in (4, 8, 16, 32)}

@@ -1,0 +1,9 @@
+# L1: Pallas kernels for the paper's compute hot-spots, plus pure-jnp
+# oracles (ref.py). All kernels lower with interpret=True so the resulting
+# HLO runs on the CPU PJRT client the Rust runtime uses.
+#
+# Import the submodules, not function re-exports: several kernels share a
+# name with their module (lora_grad.lora_grad), and re-exporting the
+# functions here would shadow the module attributes on the package.
+
+from . import flash_attn, lora_grad, ref, rmsnorm, silu_mul  # noqa: F401

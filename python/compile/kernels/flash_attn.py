@@ -1,0 +1,211 @@
+# L1 Pallas kernels: FlashAttention-style causal attention, fwd + bwd.
+#
+# The paper's Appendix E stores per-block attention probabilities ([b, H,
+# n, n]) as one of the four retained intermediates. That tensor dominates
+# block-intermediate memory at long sequence lengths; FlashAttention (cited
+# by the paper as the same recompute-over-store principle applied to
+# attention) removes it by recomputing probabilities tile-wise from the
+# saved row log-sum-exp. We provide these kernels as the `flash` attention
+# mode (config.attention = "flash"), the memory model's `flash` variant,
+# and the Table-2 extension ablation; the default path matches the paper
+# (store probs).
+#
+# Layout: single head, q/k/v: [n, hd]. Heads/batch are vmapped at L2.
+# The forward streams Q tiles through the grid; K/V are VMEM-resident
+# (they are O(n·hd), vastly smaller than the O(n²) probs we refuse to
+# materialize). Online softmax keeps running (max, sum, acc) per row.
+# interpret=True: CPU lowering, see lora_grad.py.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _pick_tile(m: int, preferred: int) -> int:
+    t = min(preferred, m)
+    while m % t != 0:
+        t -= 1
+    return t
+
+
+# ----------------------------------------------------------------- forward
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, tq, tk, scale, causal):
+    i = pl.program_id(0)
+    q = q_ref[...] * scale                       # [tq, hd]
+    n = k_ref.shape[0]
+    q_pos = i * tq + jax.lax.iota(jnp.int32, tq)
+
+    def body(j, carry):
+        m_i, l_i, acc = carry
+        k_t = jax.lax.dynamic_slice_in_dim(k_ref[...], j * tk, tk, 0)
+        v_t = jax.lax.dynamic_slice_in_dim(v_ref[...], j * tk, tk, 0)
+        s = q @ k_t.T                            # [tq, tk]
+        if causal:
+            k_pos = j * tk + jax.lax.iota(jnp.int32, tk)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_i - m_new)
+        l_new = l_i * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + p @ v_t
+        return m_new, l_new, acc
+
+    hd = q_ref.shape[1]
+    init = (
+        jnp.full((tq,), NEG_INF, q.dtype),
+        jnp.zeros((tq,), q.dtype),
+        jnp.zeros((tq, hd), q.dtype),
+    )
+    m_i, l_i, acc = jax.lax.fori_loop(0, n // tk, body, init)
+    o_ref[...] = acc / l_i[:, None]
+    lse_ref[...] = m_i + jnp.log(l_i)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "tile_q", "tile_k"))
+def flash_attention(q, k, v, causal: bool = True,
+                    tile_q: int = 64, tile_k: int = 64):
+    """Causal flash attention for one head. Returns (out [n,hd], lse [n])."""
+    n, hd = q.shape
+    tq = _pick_tile(n, tile_q)
+    tk = _pick_tile(n, tile_k)
+    scale = 1.0 / float(hd) ** 0.5
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, tq=tq, tk=tk, scale=scale, causal=causal),
+        grid=(n // tq,),
+        in_specs=[
+            pl.BlockSpec((tq, hd), lambda i: (i, 0)),
+            pl.BlockSpec((n, hd), lambda i: (0, 0)),
+            pl.BlockSpec((n, hd), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, hd), lambda i: (i, 0)),
+            pl.BlockSpec((tq,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, hd), q.dtype),
+            jax.ShapeDtypeStruct((n,), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------- backward
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   *, tq, tk, scale, causal):
+    i = pl.program_id(0)
+    q = q_ref[...]
+    do = do_ref[...]
+    lse = lse_ref[...]
+    delta = delta_ref[...]
+    n = k_ref.shape[0]
+    q_pos = i * tq + jax.lax.iota(jnp.int32, tq)
+
+    def body(j, dq):
+        k_t = jax.lax.dynamic_slice_in_dim(k_ref[...], j * tk, tk, 0)
+        v_t = jax.lax.dynamic_slice_in_dim(v_ref[...], j * tk, tk, 0)
+        s = (q @ k_t.T) * scale
+        if causal:
+            k_pos = j * tk + jax.lax.iota(jnp.int32, tk)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])            # recomputed probs tile
+        dp = do @ v_t.T
+        ds = p * (dp - delta[:, None])           # softmax bwd w/ saved delta
+        return dq + (ds @ k_t) * scale
+
+    dq_ref[...] = jax.lax.fori_loop(
+        0, n // tk, body, jnp.zeros_like(q))
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, *, tq, tk, scale, causal):
+    j = pl.program_id(0)
+    k_t = k_ref[...]
+    v_t = v_ref[...]
+    n = q_ref.shape[0]
+    k_pos = j * tk + jax.lax.iota(jnp.int32, tk)
+
+    def body(i, carry):
+        dk, dv = carry
+        q_t = jax.lax.dynamic_slice_in_dim(q_ref[...], i * tq, tq, 0)
+        do_t = jax.lax.dynamic_slice_in_dim(do_ref[...], i * tq, tq, 0)
+        lse_t = jax.lax.dynamic_slice_in_dim(lse_ref[...], i * tq, tq, 0)
+        dl_t = jax.lax.dynamic_slice_in_dim(delta_ref[...], i * tq, tq, 0)
+        s = (q_t @ k_t.T) * scale
+        if causal:
+            q_pos = i * tq + jax.lax.iota(jnp.int32, tq)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse_t[:, None])
+        dp = do_t @ v_t.T
+        ds = p * (dp - dl_t[:, None])
+        dv = dv + p.T @ do_t
+        dk = dk + (ds.T @ q_t) * scale
+        return dk, dv
+
+    dk0 = jnp.zeros_like(k_t)
+    dv0 = jnp.zeros_like(v_t)
+    dk, dv = jax.lax.fori_loop(0, n // tq, body, (dk0, dv0))
+    dk_ref[...] = dk
+    dv_ref[...] = dv
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "tile_q", "tile_k"))
+def flash_attention_bwd(q, k, v, out, lse, d_out, causal: bool = True,
+                        tile_q: int = 64, tile_k: int = 64):
+    """Backward of flash_attention. Returns (dq, dk, dv).
+
+    Probabilities are recomputed tile-wise from `lse`; the only extra saved
+    tensor vs. the forward is `lse` [n] — this is the FlashAttention-2
+    delta trick (delta = rowsum(do ⊙ o))."""
+    n, hd = q.shape
+    tq = _pick_tile(n, tile_q)
+    tk = _pick_tile(n, tile_k)
+    scale = 1.0 / float(hd) ** 0.5
+    delta = jnp.sum(d_out * out, axis=-1)        # [n]
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, tq=tq, tk=tk, scale=scale,
+                          causal=causal),
+        grid=(n // tq,),
+        in_specs=[
+            pl.BlockSpec((tq, hd), lambda i: (i, 0)),
+            pl.BlockSpec((n, hd), lambda i: (0, 0)),
+            pl.BlockSpec((n, hd), lambda i: (0, 0)),
+            pl.BlockSpec((tq, hd), lambda i: (i, 0)),
+            pl.BlockSpec((tq,), lambda i: (i,)),
+            pl.BlockSpec((tq,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tq, hd), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, hd), q.dtype),
+        interpret=True,
+    )(q, k, v, d_out, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, tq=tq, tk=tk, scale=scale,
+                          causal=causal),
+        grid=(n // tk,),
+        in_specs=[
+            pl.BlockSpec((n, hd), lambda j: (0, 0)),
+            pl.BlockSpec((tk, hd), lambda j: (j, 0)),
+            pl.BlockSpec((tk, hd), lambda j: (j, 0)),
+            pl.BlockSpec((n, hd), lambda j: (0, 0)),
+            pl.BlockSpec((n,), lambda j: (0,)),
+            pl.BlockSpec((n,), lambda j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tk, hd), lambda j: (j, 0)),
+            pl.BlockSpec((tk, hd), lambda j: (j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, hd), q.dtype),
+            jax.ShapeDtypeStruct((n, hd), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, d_out, lse, delta)
+    return dq, dk, dv

@@ -1,0 +1,104 @@
+# L1 Pallas kernel: fused LoRA gradient with in-VMEM recomputation of h.
+#
+# This is the paper's core contribution expressed at kernel granularity
+# (MeSP §4.1-4.2): the low-rank intermediate h = xA is NEVER materialized
+# to HBM. Each grid step streams one sequence tile of x and g into VMEM,
+# recomputes h_tile = x_tile @ A on the fly, and accumulates
+#
+#   dA += x_tile^T (s·g_tile B^T)        [d_in, r]
+#   dB += (x_tile A)^T (s·g_tile)        [r, d_out]
+#   gx_tile = (s·g_tile B^T) A^T         [tile_n, d_in]
+#
+# so peak VMEM per step is tile_n·(d_in + d_out + r) + r·(d_in + d_out)
+# floats — independent of sequence length. On a real TPU the two rank-r
+# GEMMs are deliberately shaped [tile_n, d]·[d, r]: with tile_n and d
+# multiples of 128 they map onto the MXU systolic array; r < 128 wastes
+# lanes on the [*, r] side, which is the irreducible cost of low rank (the
+# paper pays the same on the ANE). interpret=True is mandatory on CPU —
+# real lowering emits a Mosaic custom-call the CPU PJRT plugin cannot run.
+#
+# HARDWARE ADAPTATION (DESIGN.md §3): the paper implements this as MLX
+# GEMMs with explicit buffer lifecycle on Apple unified memory; here the
+# lifecycle discipline becomes a BlockSpec HBM↔VMEM schedule, and "never
+# store h" becomes "h lives only in a VMEM temporary inside one grid step".
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_tile(m: int, preferred: int) -> int:
+    """Largest divisor of m that is <= preferred (grid must tile exactly)."""
+    t = min(preferred, m)
+    while m % t != 0:
+        t -= 1
+    return t
+
+
+def _lora_grad_kernel(x_ref, g_ref, a_ref, b_ref, da_ref, db_ref, gx_ref, *, s):
+    i = pl.program_id(0)
+    x_t = x_ref[...]                      # [tn, d_in]
+    sg_t = g_ref[...] * s                 # [tn, d_out]
+    a = a_ref[...]                        # [d_in, r]
+    h_t = x_t @ a                         # recomputed in VMEM — the paper's trick
+    dh_t = sg_t @ b_ref[...].T            # [tn, r]
+
+    @pl.when(i == 0)
+    def _init():
+        da_ref[...] = jnp.zeros_like(da_ref)
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    da_ref[...] += x_t.T @ dh_t
+    db_ref[...] += h_t.T @ sg_t
+    gx_ref[...] = dh_t @ a.T
+
+
+@functools.partial(jax.jit, static_argnames=("s", "tile_n"))
+def lora_grad(x, g, a, b, s: float, tile_n: int = 128):
+    """Fused LoRA backward (recompute-h). See ref.lora_grad_ref.
+
+    Args:
+      x: [M, d_in] layer input (flattened batch*seq).
+      g: [M, d_out] upstream gradient.
+      a: [d_in, r], b: [r, d_out] LoRA matrices.
+      s: LoRA scale alpha/r (static).
+      tile_n: preferred sequence-tile size (static; clipped to a divisor).
+
+    Returns (dA, dB, gx_lora).
+    """
+    m, d_in = x.shape
+    d_out = g.shape[1]
+    r = a.shape[1]
+    tn = _pick_tile(m, tile_n)
+    grid = (m // tn,)
+    return pl.pallas_call(
+        functools.partial(_lora_grad_kernel, s=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, d_in), lambda i: (i, 0)),    # stream x tiles
+            pl.BlockSpec((tn, d_out), lambda i: (i, 0)),   # stream g tiles
+            pl.BlockSpec((d_in, r), lambda i: (0, 0)),     # A resident
+            pl.BlockSpec((r, d_out), lambda i: (0, 0)),    # B resident
+        ],
+        out_specs=[
+            pl.BlockSpec((d_in, r), lambda i: (0, 0)),     # dA accumulator
+            pl.BlockSpec((r, d_out), lambda i: (0, 0)),    # dB accumulator
+            pl.BlockSpec((tn, d_in), lambda i: (i, 0)),    # gx tiles
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_in, r), x.dtype),
+            jax.ShapeDtypeStruct((r, d_out), x.dtype),
+            jax.ShapeDtypeStruct((m, d_in), x.dtype),
+        ],
+        interpret=True,
+    )(x, g, a, b)
+
+
+def vmem_bytes(tile_n: int, d_in: int, d_out: int, r: int,
+               bytes_per_el: int = 2) -> int:
+    """Estimated peak VMEM footprint of one grid step (for DESIGN.md §9)."""
+    stream = tile_n * (d_in + d_out + r) + tile_n * r   # x, g, gx(dh) + h
+    resident = 2 * r * (d_in + d_out)                   # A, B, dA, dB
+    return bytes_per_el * (stream + resident)

@@ -1,0 +1,114 @@
+# Pure-jnp correctness oracles for the Pallas kernels (L1).
+#
+# Every kernel in this package is validated against these references by
+# python/tests/ (pytest + hypothesis). The references are written in the
+# most obvious possible style — no tiling, no fusion — so that a mismatch
+# always indicts the kernel, not the oracle.
+#
+# Shapes follow the paper's notation (Appendix A):
+#   x : [M, d_in]   flattened (batch*seq) LoRA-layer input
+#   g : [M, d_out]  upstream gradient dL/dy
+#   A : [d_in, r]   LoRA down-projection
+#   B : [r, d_out]  LoRA up-projection
+#   s : alpha / r   LoRA scaling
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- LoRA grad
+def lora_grad_ref(x, g, a, b, s):
+    """Reference for the fused LoRA gradient (paper eq. 10-13, LoRA part).
+
+    Returns (dA, dB, gx_lora):
+      dA = x^T (s·g B^T)          [d_in, r]
+      dB = (xA)^T (s·g)           [r, d_out]
+      gx_lora = (s·g) B^T A^T     [M, d_in]   (the LoRA branch of dL/dx)
+    """
+    sg = s * g
+    h = x @ a                     # the intermediate the paper recomputes
+    dh = sg @ b.T
+    da = x.T @ dh
+    db = h.T @ sg
+    gx = dh @ a.T
+    return da, db, gx
+
+
+def lora_fwd_ref(x, w0, a, b, s):
+    """y = x W0 + s · x A B (paper eq. 5)."""
+    return x @ w0 + s * ((x @ a) @ b)
+
+
+# ----------------------------------------------------------------- RMSNorm
+def rmsnorm_ref(x, w, eps=1e-6):
+    """x_hat = x / rms(x) * w, rms over the last axis."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rmsnorm_bwd_ref(x, w, g, eps=1e-6):
+    """dL/dx for RMSNorm with (frozen) weight w (paper eq. 22 + weight).
+
+    With u = x / rms(x) (unweighted normalized input) and gw = g ⊙ w:
+      dL/dx = (gw - u · mean(gw ⊙ u)) / rms
+    """
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps)
+    u = x * inv
+    gw = g * w
+    return (gw - u * jnp.mean(gw * u, axis=-1, keepdims=True)) * inv
+
+
+# ---------------------------------------------------------------- SiLU-mul
+def silu_mul_ref(gate, up):
+    """SwiGLU elementwise core: silu(gate) ⊙ up."""
+    return jax.nn.silu(gate) * up
+
+
+def silu_mul_bwd_ref(gate, up, g):
+    """Backward of silu(gate)·up (paper eq. 23 for the SiLU factor).
+
+    Returns (d_gate, d_up).
+    """
+    sig = jax.nn.sigmoid(gate)
+    silu = gate * sig
+    dsilu = sig * (1.0 + gate * (1.0 - sig))
+    return g * up * dsilu, g * silu
+
+
+# --------------------------------------------------------------- attention
+def attention_ref(q, k, v, causal=True):
+    """Plain softmax attention. q,k,v: [H, n, hd] (k/v may have fewer heads
+    — callers repeat for GQA before calling). Returns ([H, n, hd], probs)."""
+    d = q.shape[-1]
+    scores = (q @ jnp.swapaxes(k, -1, -2)) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    if causal:
+        n, m = scores.shape[-2], scores.shape[-1]
+        mask = jnp.tril(jnp.ones((n, m), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.asarray(-1e30, scores.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    return probs @ v, probs
+
+
+def softmax_bwd_ref(probs, g):
+    """dL/dscores given probs = softmax(scores) and g = dL/dprobs
+    (paper eq. 19)."""
+    return probs * (g - jnp.sum(g * probs, axis=-1, keepdims=True))
+
+
+def attention_bwd_ref(q, k, v, g_out, causal=True):
+    """Full attention backward (paper eq. 17-21). Returns (dq, dk, dv)."""
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    scores = (q @ jnp.swapaxes(k, -1, -2)) * scale
+    if causal:
+        n, m = scores.shape[-2], scores.shape[-1]
+        mask = jnp.tril(jnp.ones((n, m), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.asarray(-1e30, scores.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    dv = jnp.swapaxes(probs, -1, -2) @ g_out            # eq. 17
+    dprobs = g_out @ jnp.swapaxes(v, -1, -2)            # eq. 18
+    dscores = softmax_bwd_ref(probs, dprobs)            # eq. 19
+    dq = (dscores @ k) * scale                          # eq. 20
+    dk = (jnp.swapaxes(dscores, -1, -2) @ q) * scale    # eq. 21
+    return dq, dk, dv

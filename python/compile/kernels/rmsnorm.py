@@ -1,0 +1,73 @@
+# L1 Pallas kernels: RMSNorm forward and backward.
+#
+# Row-tiled: each grid step normalizes a tile of rows entirely in VMEM.
+# The backward implements the paper's eq. 22 extended with the (frozen)
+# elementwise weight that Qwen2.5's RMSNorm carries. Because norm weights
+# are frozen under LoRA fine-tuning, only dL/dx is produced — exactly the
+# tensor-lifecycle discipline MeSP prescribes (nothing is computed that
+# will not be consumed).
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_tile(m: int, preferred: int) -> int:
+    t = min(preferred, m)
+    while m % t != 0:
+        t -= 1
+    return t
+
+
+def _fwd_kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(ms + eps) * w_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "tile_m"))
+def rmsnorm(x, w, eps: float = 1e-6, tile_m: int = 128):
+    """RMSNorm over the last axis. x: [M, d], w: [d]."""
+    m, d = x.shape
+    tm = _pick_tile(m, tile_m)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, eps=eps),
+        grid=(m // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def _bwd_kernel(x_ref, w_ref, g_ref, o_ref, *, eps):
+    x = x_ref[...]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps)
+    u = x * inv
+    gw = g_ref[...] * w_ref[...]
+    o_ref[...] = (gw - u * jnp.mean(gw * u, axis=-1, keepdims=True)) * inv
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "tile_m"))
+def rmsnorm_bwd(x, w, g, eps: float = 1e-6, tile_m: int = 128):
+    """dL/dx of rmsnorm(x, w) given upstream g. Shapes as in rmsnorm."""
+    m, d = x.shape
+    tm = _pick_tile(m, tile_m)
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, eps=eps),
+        grid=(m // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((tm, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=True,
+    )(x, w, g)

@@ -1,0 +1,511 @@
+# L2: the paper's model — a Qwen2.5-style transformer block (RMSNorm →
+# GQA attention with RoPE → RMSNorm → SwiGLU MLP) with LoRA adapters on
+# all 7 projections (q, k, v, o, gate, up, down), plus the *manually
+# derived* backward passes of the paper's Appendix A.
+#
+# Everything here is build-time only: aot.py lowers these functions to HLO
+# text once; the Rust coordinator (L3) executes them via PJRT with no
+# Python on the request path. Weights are function ARGUMENTS (generated in
+# Rust), never constants, so one artifact serves every layer of a model.
+#
+# Function inventory (one HLO artifact each — see aot.py):
+#   embed_fwd            tokens → x
+#   block_fwd            x → y                      (fwd phase, all engines)
+#   block_fwd_saveh      x → (y, h×7)               (store-h ablation fwd)
+#   block_fwd_residuals  x → (y, residual set)      (MeBP's autodiff-saved set)
+#   block_bwd_mesp       (x, g_y) → (g_x, dA×7, dB×7)   ← THE CONTRIBUTION
+#   block_bwd_storeh     (x, g_y, h×7) → (g_x, dA×7, dB×7)
+#   block_bwd_residuals  (g_y, residuals…) → (g_x, dA×7, dB×7)
+#   block_bwd_autodiff   (x, g_y) → (g_x, dA×7, dB×7)   (jax.vjp oracle)
+#   lm_loss_fwd          (h, norm_w, emb, targets) → loss
+#   lm_loss_grad         …                          → (loss, g_h)
+#
+# The MeSP backward is a single fused graph that recomputes the Appendix-E
+# minimal intermediate set and never exposes any intermediate to the host:
+# at runtime the only live cross-call tensors are the block checkpoints.
+# The MeBP backward is deliberately split in two (fwd_residuals → buffers
+# held by the host → bwd_residuals), mechanically mirroring how autodiff
+# frameworks save residuals at forward-recompute time and consume them at
+# backward time; those residuals become real, tracked host-side buffers.
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_attn
+from .kernels.lora_grad import lora_grad as lora_grad_kernel
+from .kernels.rmsnorm import rmsnorm as rmsnorm_kernel
+from .kernels.rmsnorm import rmsnorm_bwd as rmsnorm_bwd_kernel
+from .kernels.silu_mul import silu_mul as silu_mul_kernel
+from .kernels.silu_mul import silu_mul_bwd as silu_mul_bwd_kernel
+from .kernels.ref import (
+    attention_bwd_ref,
+    attention_ref,
+    lora_grad_ref,
+    rmsnorm_bwd_ref,
+    rmsnorm_ref,
+    silu_mul_bwd_ref,
+    silu_mul_ref,
+)
+
+# LoRA adapter sites, in canonical order. This order is the ABI between
+# aot.py, manifest.json and the Rust runtime — never reorder.
+PROJS = ("q", "k", "v", "o", "gate", "up", "down")
+
+# Frozen per-block weights, canonical order (same ABI note).
+FROZEN = ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd")
+
+# Residual-set tensor names emitted by block_fwd_residuals (after y), the
+# set an autodiff framework retains when re-running a checkpointed block:
+# every tensor that feeds a gradient rule, including all seven LoRA h's.
+RESIDUALS = (
+    "x", "h1", "h2", "x2", "q_rope", "k_rope", "v_heads", "probs",
+    "attn_flat", "gate_out", "up_out", "silu_out",
+    "h_q", "h_k", "h_v", "h_o", "h_gate", "h_up", "h_down",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static model/runtime shape configuration (one artifact set each)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    seq: int
+    batch: int = 1
+    rank: int = 8
+    alpha: float = 16.0
+    rope_theta: float = 10000.0
+    eps: float = 1e-6
+    # Which stages run as Pallas kernels inside the lowered graphs.
+    # "lora" is the paper's hot-spot kernel; the rest are optional and
+    # exercised by tests + the kernel-ablation artifacts.
+    pallas_ops: Sequence[str] = ("lora",)
+    # "probs": recompute scores+softmax in bwd, store probs in MeBP's
+    # residual set (matches the paper's Appendix E). "flash": the
+    # FlashAttention kernels (extension; no O(n^2) tensor anywhere).
+    attention: str = "probs"
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / self.rank
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def proj_dims(self, p: str) -> tuple:
+        """(d_in, d_out) of LoRA site p."""
+        d, qd, kvd, f = self.d_model, self.q_dim, self.kv_dim, self.d_ff
+        return {
+            "q": (d, qd), "k": (d, kvd), "v": (d, kvd), "o": (qd, d),
+            "gate": (d, f), "up": (d, f), "down": (f, d),
+        }[p]
+
+    def frozen_shapes(self) -> dict:
+        d, qd, kvd, f = self.d_model, self.q_dim, self.kv_dim, self.d_ff
+        return {
+            "ln1": (d,), "wq": (d, qd), "wk": (d, kvd), "wv": (d, kvd),
+            "wo": (qd, d), "ln2": (d,), "wg": (d, f), "wu": (d, f),
+            "wd": (f, d),
+        }
+
+    def lora_shapes(self) -> dict:
+        out = {}
+        for p in PROJS:
+            din, dout = self.proj_dims(p)
+            out[f"a_{p}"] = (din, self.rank)
+            out[f"b_{p}"] = (self.rank, dout)
+        return out
+
+
+# ------------------------------------------------------------------ helpers
+def _unpack(cfg: ModelConfig, frozen, lora):
+    fz = dict(zip(FROZEN, frozen))
+    lo = {}
+    for i, p in enumerate(PROJS):
+        lo[f"a_{p}"] = lora[2 * i]
+        lo[f"b_{p}"] = lora[2 * i + 1]
+    return fz, lo
+
+
+def _rope_tables(cfg: ModelConfig, dtype):
+    """cos/sin tables [n, hd/2]; static shapes → folded to constants."""
+    half = cfg.head_dim // 2
+    pos = jnp.arange(cfg.seq, dtype=jnp.float32)[:, None]
+    freq = 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos * freq[None, :]
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, cos, sin, inverse: bool = False):
+    """Neox-style rotate-half RoPE; x: [b, H, n, hd]. The VJP of a rotation
+    is the rotation by -θ, which is what inverse=True applies."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    if inverse:
+        return jnp.concatenate([x1 * c + x2 * s, x2 * c - x1 * s], axis=-1)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def _rmsnorm(cfg: ModelConfig, x2d, w):
+    if "norm" in cfg.pallas_ops:
+        return rmsnorm_kernel(x2d, w, eps=cfg.eps)
+    return rmsnorm_ref(x2d, w, eps=cfg.eps)
+
+
+def _rmsnorm_bwd(cfg: ModelConfig, x2d, w, g2d):
+    if "norm" in cfg.pallas_ops:
+        return rmsnorm_bwd_kernel(x2d, w, g2d, eps=cfg.eps)
+    return rmsnorm_bwd_ref(x2d, w, g2d, eps=cfg.eps)
+
+
+def _silu_mul(cfg: ModelConfig, gate, up):
+    if "mlp" in cfg.pallas_ops:
+        return silu_mul_kernel(gate, up)
+    return silu_mul_ref(gate, up)
+
+
+def _silu_mul_bwd(cfg: ModelConfig, gate, up, g):
+    if "mlp" in cfg.pallas_ops:
+        return silu_mul_bwd_kernel(gate, up, g)
+    return silu_mul_bwd_ref(gate, up, g)
+
+
+def _lora_linear(cfg: ModelConfig, x2d, w, a, b):
+    """Forward of a LoRA site (paper eq. 5). Returns (y2d, h2d)."""
+    h = x2d @ a
+    return x2d @ w + cfg.scale * (h @ b), h
+
+
+def _lora_grad(cfg: ModelConfig, x2d, g2d, a, b):
+    """Backward of the LoRA branch, recomputing h (paper eq. 10-13).
+    Returns (dA, dB, gx_lora). Routes through the Pallas hot-spot kernel."""
+    if "lora" in cfg.pallas_ops:
+        return lora_grad_kernel(x2d, g2d, a, b, cfg.scale)
+    return lora_grad_ref(x2d, g2d, a, b, cfg.scale)
+
+
+def _lora_linear_bwd(cfg: ModelConfig, x2d, g2d, w, a, b, h2d=None):
+    """Full LoRA-linear backward. If h2d is given (store-h ablation), dB
+    uses the stored h; otherwise h is recomputed inside the fused kernel.
+    Returns (gx, dA, dB)."""
+    if h2d is None:
+        da, db, gx_lora = _lora_grad(cfg, x2d, g2d, a, b)
+    else:
+        sg = cfg.scale * g2d
+        dh = sg @ b.T
+        da = x2d.T @ dh
+        db = h2d.T @ sg                       # stored h — no recompute
+        gx_lora = dh @ a.T
+    return gx_lora + g2d @ w.T, da, db
+
+
+def _split_heads(cfg: ModelConfig, x2d, n_heads):
+    b, n = cfg.batch, cfg.seq
+    return x2d.reshape(b, n, n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(cfg: ModelConfig, x4d):
+    b, n = cfg.batch, cfg.seq
+    return x4d.transpose(0, 2, 1, 3).reshape(b * n, -1)
+
+
+def _repeat_kv(cfg: ModelConfig, x4d):
+    """[b, KV, n, hd] → [b, H, n, hd] for GQA."""
+    rep = cfg.n_heads // cfg.n_kv_heads
+    return jnp.repeat(x4d, rep, axis=1)
+
+
+def _reduce_kv(cfg: ModelConfig, g4d):
+    """VJP of _repeat_kv: sum grads over the query-head group."""
+    rep = cfg.n_heads // cfg.n_kv_heads
+    b, _, n, hd = g4d.shape
+    return g4d.reshape(b, cfg.n_kv_heads, rep, n, hd).sum(axis=2)
+
+
+def _attention_fwd(cfg: ModelConfig, q, k, v):
+    """Returns (out [b,H,n,hd], saved) where saved is probs or lse."""
+    if cfg.attention == "flash":
+        fa = functools.partial(flash_attn.flash_attention, causal=True)
+        out, lse = jax.vmap(jax.vmap(fa))(q, k, v)
+        return out, lse
+    out, probs = jax.vmap(attention_ref)(q, k, v)   # vmap over batch
+    return out, probs
+
+
+def _attention_bwd(cfg: ModelConfig, q, k, v, out, saved, g_out):
+    if cfg.attention == "flash":
+        fb = functools.partial(flash_attn.flash_attention_bwd, causal=True)
+        return jax.vmap(jax.vmap(fb))(q, k, v, out, saved, g_out)
+    # `saved` is probs; recompute-free softmax backward (paper eq. 17-21).
+    probs = saved
+    scale = 1.0 / float(cfg.head_dim) ** 0.5
+    dv = jnp.swapaxes(probs, -1, -2) @ g_out
+    dprobs = g_out @ jnp.swapaxes(v, -1, -2)
+    dscores = probs * (dprobs - jnp.sum(dprobs * probs, axis=-1, keepdims=True))
+    dq = (dscores @ k) * scale
+    dk = (jnp.swapaxes(dscores, -1, -2) @ q) * scale
+    return dq, dk, dv
+
+
+# --------------------------------------------------------------- block fwd
+def _block_core(cfg: ModelConfig, x, frozen, lora):
+    """Full block forward. Returns (y, cache) with every intermediate a
+    backward pass could need; callers choose what to expose/discard."""
+    fz, lo = _unpack(cfg, frozen, lora)
+    b, n, d = cfg.batch, cfg.seq, cfg.d_model
+    m = b * n
+    x2d = x.reshape(m, d)
+
+    h1 = _rmsnorm(cfg, x2d, fz["ln1"])
+    q2d, h_q = _lora_linear(cfg, h1, fz["wq"], lo["a_q"], lo["b_q"])
+    k2d, h_k = _lora_linear(cfg, h1, fz["wk"], lo["a_k"], lo["b_k"])
+    v2d, h_v = _lora_linear(cfg, h1, fz["wv"], lo["a_v"], lo["b_v"])
+
+    cos, sin = _rope_tables(cfg, x.dtype)
+    q4 = apply_rope(_split_heads(cfg, q2d, cfg.n_heads), cos, sin)
+    k4 = apply_rope(_split_heads(cfg, k2d, cfg.n_kv_heads), cos, sin)
+    v4 = _split_heads(cfg, v2d, cfg.n_kv_heads)
+
+    k_rep = _repeat_kv(cfg, k4)
+    v_rep = _repeat_kv(cfg, v4)
+    attn_out, attn_saved = _attention_fwd(cfg, q4, k_rep, v_rep)
+    attn_flat = _merge_heads(cfg, attn_out)
+
+    o2d, h_o = _lora_linear(cfg, attn_flat, fz["wo"], lo["a_o"], lo["b_o"])
+    x2 = x2d + o2d
+
+    h2 = _rmsnorm(cfg, x2, fz["ln2"])
+    gate_out, h_gate = _lora_linear(cfg, h2, fz["wg"], lo["a_gate"], lo["b_gate"])
+    up_out, h_up = _lora_linear(cfg, h2, fz["wu"], lo["a_up"], lo["b_up"])
+    silu_out = _silu_mul(cfg, gate_out, up_out)
+    d2d, h_down = _lora_linear(cfg, silu_out, fz["wd"], lo["a_down"], lo["b_down"])
+    y2d = x2 + d2d
+
+    cache = dict(
+        x=x2d, h1=h1, h2=h2, x2=x2, q_rope=q4, k_rope=k4, v_heads=v4,
+        attn_out=attn_out, attn_saved=attn_saved, attn_flat=attn_flat,
+        gate_out=gate_out, up_out=up_out, silu_out=silu_out,
+        h_q=h_q, h_k=h_k, h_v=h_v, h_o=h_o, h_gate=h_gate, h_up=h_up,
+        h_down=h_down,
+    )
+    return y2d.reshape(b, n, d), cache
+
+
+def block_fwd(cfg: ModelConfig, x, frozen, lora):
+    """Forward-only: everything but y is a dead value → XLA frees it.
+    This is the MeSP/MeZO forward phase (checkpoint = y only)."""
+    y, _ = _block_core(cfg, x, frozen, lora)
+    return (y,)
+
+
+def block_fwd_saveh(cfg: ModelConfig, x, frozen, lora):
+    """Forward that additionally emits the 7 LoRA intermediates h = xA —
+    the store-h ablation of the paper's Table 5."""
+    y, c = _block_core(cfg, x, frozen, lora)
+    return (y, c["h_q"], c["h_k"], c["h_v"], c["h_o"], c["h_gate"],
+            c["h_up"], c["h_down"])
+
+
+def block_fwd_residuals(cfg: ModelConfig, x, frozen, lora):
+    """Forward that emits the full autodiff-retained residual set (MeBP's
+    backward-phase recompute). The host holds these as live buffers until
+    the block's backward — exactly the framework behaviour the paper says
+    'stores more intermediates than mathematically necessary'."""
+    y, c = _block_core(cfg, x, frozen, lora)
+    assert cfg.attention == "probs", "residual path stores probs"
+    c["probs"] = c["attn_saved"]
+    return (y,) + tuple(c[name] for name in RESIDUALS)
+
+
+# --------------------------------------------------------------- block bwd
+def _block_bwd_math(cfg: ModelConfig, g_y, c, fz, lo, stored_h=None):
+    """The paper's Appendix-A backward, shared by the mesp / storeh /
+    residuals variants; `c` holds whichever intermediates exist (recomputed
+    or retrieved), `stored_h` switches dB to stored-h mode (Table 5)."""
+    b, n, d = cfg.batch, cfg.seq, cfg.d_model
+    m = b * n
+    g_y2d = g_y.reshape(m, d)
+    sh = (lambda p: stored_h[p]) if stored_h is not None else (lambda p: None)
+
+    # y = x2 + down(silu_mul(gate(h2), up(h2)))
+    g_x2 = g_y2d
+    g_silu, da_down, db_down = _lora_linear_bwd(
+        cfg, c["silu_out"], g_y2d, fz["wd"], lo["a_down"], lo["b_down"],
+        h2d=sh("down"))
+    g_gate, g_up = _silu_mul_bwd(cfg, c["gate_out"], c["up_out"], g_silu)
+    g_h2_a, da_gate, db_gate = _lora_linear_bwd(
+        cfg, c["h2"], g_gate, fz["wg"], lo["a_gate"], lo["b_gate"],
+        h2d=sh("gate"))
+    g_h2_b, da_up, db_up = _lora_linear_bwd(
+        cfg, c["h2"], g_up, fz["wu"], lo["a_up"], lo["b_up"], h2d=sh("up"))
+    g_x2 = g_x2 + _rmsnorm_bwd(cfg, c["x2"], fz["ln2"], g_h2_a + g_h2_b)
+
+    # x2 = x + o(attn_flat)
+    g_attn_flat, da_o, db_o = _lora_linear_bwd(
+        cfg, c["attn_flat"], g_x2, fz["wo"], lo["a_o"], lo["b_o"],
+        h2d=sh("o"))
+    g_attn_out = g_attn_flat.reshape(b, n, cfg.n_heads, cfg.head_dim)
+    g_attn_out = g_attn_out.transpose(0, 2, 1, 3)
+
+    k_rep = _repeat_kv(cfg, c["k_rope"])
+    v_rep = _repeat_kv(cfg, c["v_heads"])
+    g_q4, g_k_rep, g_v_rep = _attention_bwd(
+        cfg, c["q_rope"], k_rep, v_rep, c.get("attn_out"), c["attn_saved"],
+        g_attn_out)
+    g_k4 = _reduce_kv(cfg, g_k_rep)
+    g_v4 = _reduce_kv(cfg, g_v_rep)
+
+    cos, sin = _rope_tables(cfg, g_y.dtype)
+    g_q2d = _merge_heads(cfg, apply_rope(g_q4, cos, sin, inverse=True))
+    g_k2d = _merge_heads(cfg, apply_rope(g_k4, cos, sin, inverse=True))
+    g_v2d = _merge_heads(cfg, g_v4)
+
+    g_h1_q, da_q, db_q = _lora_linear_bwd(
+        cfg, c["h1"], g_q2d, fz["wq"], lo["a_q"], lo["b_q"], h2d=sh("q"))
+    g_h1_k, da_k, db_k = _lora_linear_bwd(
+        cfg, c["h1"], g_k2d, fz["wk"], lo["a_k"], lo["b_k"], h2d=sh("k"))
+    g_h1_v, da_v, db_v = _lora_linear_bwd(
+        cfg, c["h1"], g_v2d, fz["wv"], lo["a_v"], lo["b_v"], h2d=sh("v"))
+
+    g_x = g_x2 + _rmsnorm_bwd(cfg, c["x"], fz["ln1"],
+                              g_h1_q + g_h1_k + g_h1_v)
+    grads = (da_q, db_q, da_k, db_k, da_v, db_v, da_o, db_o,
+             da_gate, db_gate, da_up, db_up, da_down, db_down)
+    return (g_x.reshape(b, n, d),) + grads
+
+
+def block_bwd_mesp(cfg: ModelConfig, x, g_y, frozen, lora):
+    """THE paper's contribution: fused recompute-everything backward.
+    One call consumes (checkpointed x, upstream g_y) and produces g_x and
+    all 14 LoRA grads; every intermediate — including all seven h = xA —
+    lives only inside this graph (h only inside a Pallas VMEM tile)."""
+    fz, lo = _unpack(cfg, frozen, lora)
+    _, c = _block_core(cfg, x, frozen, lora)    # recompute minimal set
+    return _block_bwd_math(cfg, g_y, c, fz, lo)
+
+
+def block_bwd_storeh(cfg: ModelConfig, x, g_y, hs, frozen, lora):
+    """Table-5 ablation: identical math, but the seven h tensors were
+    stored at forward time and are consumed here instead of recomputed."""
+    fz, lo = _unpack(cfg, frozen, lora)
+    _, c = _block_core(cfg, x, frozen, lora)
+    stored = dict(zip(PROJS, hs))
+    return _block_bwd_math(cfg, g_y, c, fz, lo, stored_h=stored)
+
+
+def block_bwd_residuals(cfg: ModelConfig, g_y, residuals, frozen, lora):
+    """MeBP backward half: consumes the host-held residual set emitted by
+    block_fwd_residuals (no recompute in this graph — the recompute already
+    happened in the paired forward call, as in framework autodiff)."""
+    fz, lo = _unpack(cfg, frozen, lora)
+    c = dict(zip(RESIDUALS, residuals))
+    c["attn_saved"] = c["probs"]
+    c["attn_out"] = None                        # probs path never needs it
+    stored = {p: c[f"h_{p}"] for p in PROJS}
+    return _block_bwd_math(cfg, g_y, c, fz, lo, stored_h=stored)
+
+
+def block_bwd_autodiff(cfg: ModelConfig, x, g_y, frozen, lora):
+    """Gradcheck oracle: jax.vjp over the plain forward. Mathematically
+    what MeBP computes; used to assert Appendix-A equivalence in tests and
+    from the Rust gradcheck command."""
+    # The oracle differentiates the pure-jnp path: no Pallas kernels (jax
+    # cannot autodiff through interpret-mode pallas_call) and "probs"
+    # attention. Numerically this is the same function, so comparing the
+    # mesp/storeh/residual outputs against it validates flash too.
+    ref_cfg = dataclasses.replace(cfg, pallas_ops=(), attention="probs")
+
+    def f(x_, lora_):
+        y, _ = _block_core(ref_cfg, x_, frozen, lora_)
+        return y
+
+    _, vjp = jax.vjp(f, x, tuple(lora))
+    g_x, g_lora = vjp(g_y)
+    return (g_x,) + tuple(g_lora)
+
+
+# --------------------------------------------------------------- loss head
+def _lm_logits(cfg: ModelConfig, h, norm_w, emb):
+    m = cfg.batch * cfg.seq
+    h2d = h.reshape(m, cfg.d_model)
+    hn = _rmsnorm(cfg, h2d, norm_w)
+    return hn, hn @ emb.T                       # tied lm head
+
+
+def lm_loss_fwd(cfg: ModelConfig, h, norm_w, emb, targets):
+    """Mean causal-LM cross-entropy. h: [b,n,d] (last block's output),
+    targets: [b,n] int32 (pre-shifted by the Rust data pipeline)."""
+    _, logits = _lm_logits(cfg, h, norm_w, emb)
+    t = targets.reshape(-1)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, t[:, None], axis=-1)[:, 0]
+    return (jnp.mean(logz - picked),)
+
+
+def lm_loss_grad(cfg: ModelConfig, h, norm_w, emb, targets):
+    """Loss + manual backward to g_h (softmax-CE grad, then lm-head and
+    final-RMSNorm VJPs — all Appendix-A style, no autodiff)."""
+    m = cfg.batch * cfg.seq
+    hn, logits = _lm_logits(cfg, h, norm_w, emb)
+    t = targets.reshape(-1)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, t[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - picked)
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    g_logits = (probs - jax.nn.one_hot(t, cfg.vocab, dtype=h.dtype)) / m
+    g_hn = g_logits @ emb
+    h2d = h.reshape(m, cfg.d_model)
+    g_h = _rmsnorm_bwd(cfg, h2d, norm_w, g_hn)
+    return loss, g_h.reshape(cfg.batch, cfg.seq, cfg.d_model)
+
+
+def embed_fwd(cfg: ModelConfig, tokens, emb):
+    """Token embedding lookup; tokens: [b,n] int32, emb: [V,d]."""
+    return (jnp.take(emb, tokens, axis=0),)
+
+
+# ------------------------------------------------------- quantized variant
+# The paper keeps base weights int4 with on-the-fly dequantization (§4.5).
+# This artifact takes the 7 projection matrices as (packed uint8, scales)
+# pairs and dequantizes INSIDE the HLO graph: the host never materializes
+# f32 base weights. Norm weights stay f32 (they are [d]-sized).
+QUANT_MATS = ("wq", "wk", "wv", "wo", "wg", "wu", "wd")
+
+
+def block_fwd_q4(cfg: ModelConfig, x, ln1, ln2, qpairs, lora):
+    """Forward with int4 base weights. qpairs: flat
+    [packed_wq, scales_wq, packed_wk, …] in QUANT_MATS order.
+
+    Packed nibbles travel as int32 (values 0..255): the runtime's xla
+    crate (0.1.6) mis-sizes U8 host buffers, so the ABI uses i32 and the
+    graph casts back to uint8 before dequantizing. Byte accounting for the
+    paper's tables still uses true int4 sizes (memory::model)."""
+    from . import quant
+
+    deq = {}
+    for i, name in enumerate(QUANT_MATS):
+        packed, scales = qpairs[2 * i], qpairs[2 * i + 1]
+        packed = packed.astype(jnp.uint8)
+        deq[name] = quant.dequantize(packed, scales)
+    frozen = [ln1, deq["wq"], deq["wk"], deq["wv"], deq["wo"], ln2,
+              deq["wg"], deq["wu"], deq["wd"]]
+    y, _ = _block_core(cfg, x, frozen, lora)
+    return (y,)

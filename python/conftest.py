@@ -1,0 +1,6 @@
+# Make `pytest python/tests/` work from the repo root: the tests import
+# the `compile` package which lives in this directory.
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

@@ -1,0 +1,104 @@
+# AOT pipeline integrity: manifest ↔ config consistency, HLO text parses,
+# the ABI the Rust runtime depends on (arg order, output arity).
+
+import json
+import pathlib
+
+import pytest
+
+from compile import aot
+from compile.configs import CONFIGS
+from compile.model import FROZEN, PROJS, RESIDUALS
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ARTIFACTS / "toy" / "manifest.json").exists(),
+    reason="run `make artifacts` first",
+)
+
+
+def load_manifest(name):
+    return json.loads((ARTIFACTS / name / "manifest.json").read_text())
+
+
+def test_manifest_config_roundtrip():
+    for name, cfg in CONFIGS.items():
+        man = load_manifest(name)
+        mc = man["config"]
+        assert mc["d_model"] == cfg.d_model
+        assert mc["n_layers"] == cfg.n_layers
+        assert mc["rank"] == cfg.rank
+        assert mc["scale"] == pytest.approx(cfg.alpha / cfg.rank)
+        assert mc["param_count"] > 0
+
+
+def test_artifact_files_exist_and_parse():
+    for name in CONFIGS:
+        man = load_manifest(name)
+        for aname, spec in man["artifacts"].items():
+            p = ARTIFACTS / name / spec["file"]
+            assert p.exists(), f"{name}/{aname}"
+            head = p.read_text()[:200]
+            assert head.startswith("HloModule"), f"{name}/{aname}: {head!r}"
+
+
+def test_block_bwd_abi():
+    """Rust unpacks outputs positionally: g_x then (dA, dB) per PROJS."""
+    for name, cfg in CONFIGS.items():
+        man = load_manifest(name)
+        for aname in ("block_bwd_mesp", "block_bwd_autodiff"):
+            spec = man["artifacts"][aname]
+            assert spec["outputs"] == 1 + 2 * len(PROJS)
+            args = [a["name"] for a in spec["args"]]
+            assert args[:2] == ["x", "g_y"]
+            assert args[2:2 + len(FROZEN)] == list(FROZEN)
+            lora_names = args[2 + len(FROZEN):]
+            want = []
+            for p in PROJS:
+                want += [f"a_{p}", f"b_{p}"]
+            assert lora_names == want
+
+
+def test_residual_abi():
+    man = load_manifest("toy")
+    spec = man["artifacts"]["block_bwd_residuals"]
+    args = [a["name"] for a in spec["args"]]
+    assert args[0] == "g_y"
+    assert args[1:1 + len(RESIDUALS)] == list(RESIDUALS)
+    fwd = man["artifacts"]["block_fwd_residuals"]
+    assert fwd["outputs"] == 1 + len(RESIDUALS)
+
+
+def test_h_shapes_in_manifest():
+    """h = xA is [batch*seq, r] — the tensor the whole paper is about."""
+    for name, cfg in CONFIGS.items():
+        man = load_manifest(name)
+        if "block_bwd_storeh" not in man["artifacts"]:
+            continue
+        spec = man["artifacts"]["block_bwd_storeh"]
+        hs = [a for a in spec["args"] if a["name"].startswith("h_")]
+        assert len(hs) == len(PROJS)
+        for a in hs:
+            assert a["shape"] == [cfg.batch * cfg.seq, cfg.rank]
+
+
+def test_loss_artifacts():
+    for name, cfg in CONFIGS.items():
+        man = load_manifest(name)
+        assert man["artifacts"]["lm_loss_fwd"]["outputs"] == 1
+        assert man["artifacts"]["lm_loss_grad"]["outputs"] == 2
+        emb = [a for a in man["artifacts"]["lm_loss_fwd"]["args"]
+               if a["name"] == "emb"][0]
+        assert emb["shape"] == [cfg.vocab, cfg.d_model]
+
+
+def test_index_lists_all_configs():
+    idx = json.loads((ARTIFACTS / "index.json").read_text())
+    for name in CONFIGS:
+        assert name in idx
+
+
+def test_build_is_idempotent():
+    """Second build with unchanged sources is a no-op (stamp check)."""
+    assert aot.build_config(CONFIGS["toy"]) is False

@@ -1,0 +1,87 @@
+# The quantized-base-weights forward (paper §4.5): in-graph int4 dequant
+# must reproduce the f32 forward up to quantization error, and exactly
+# reproduce a forward through host-dequantized weights.
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile import quant
+from compile.configs import CONFIGS
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def setup(seed=0):
+    cfg = CONFIGS["toy"]
+    ks = iter(jax.random.split(jax.random.PRNGKey(seed), 64))
+
+    def rnd(shape, s=0.05):
+        return jax.random.normal(next(ks), shape, jnp.float32) * s
+
+    frozen = [rnd(cfg.frozen_shapes()[n]) for n in M.FROZEN]
+    frozen[0] = frozen[0] * 0.1 + 1.0
+    frozen[5] = frozen[5] * 0.1 + 1.0
+    lora = []
+    for p in M.PROJS:
+        lora.append(rnd(cfg.lora_shapes()[f"a_{p}"], 0.1))
+        lora.append(rnd(cfg.lora_shapes()[f"b_{p}"], 0.1))
+    x = rnd((cfg.batch, cfg.seq, cfg.d_model), 0.5)
+    return cfg, x, frozen, lora
+
+
+def quantize_frozen(frozen):
+    """(ln1, ln2, qpairs) from the FROZEN-ordered tensor list."""
+    by_name = dict(zip(M.FROZEN, frozen))
+    qpairs = []
+    for name in M.QUANT_MATS:
+        packed, scales = quant.quantize(by_name[name])
+        qpairs += [packed, scales]
+    return by_name["ln1"], by_name["ln2"], qpairs
+
+
+def test_q4_matches_host_dequant_exactly():
+    cfg, x, frozen, lora = setup(1)
+    ln1, ln2, qpairs = quantize_frozen(frozen)
+    # rebuild frozen with host-side dequantized weights
+    deq = [quant.dequantize(qpairs[2 * i], qpairs[2 * i + 1])
+           for i in range(len(M.QUANT_MATS))]
+    frozen_dq = [ln1, deq[0], deq[1], deq[2], deq[3], ln2,
+                 deq[4], deq[5], deq[6]]
+    y_host = M.block_fwd(cfg, x, frozen_dq, lora)[0]
+    y_graph = M.block_fwd_q4(cfg, x, ln1, ln2, qpairs, lora)[0]
+    np.testing.assert_allclose(np.asarray(y_graph), np.asarray(y_host),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_q4_close_to_f32_forward():
+    cfg, x, frozen, lora = setup(2)
+    y_f32 = M.block_fwd(cfg, x, frozen, lora)[0]
+    ln1, ln2, qpairs = quantize_frozen(frozen)
+    y_q4 = M.block_fwd_q4(cfg, x, ln1, ln2, qpairs, lora)[0]
+    # int4 error propagates but stays small at toy dims
+    err = np.abs(np.asarray(y_q4) - np.asarray(y_f32)).max()
+    scale = np.abs(np.asarray(y_f32)).max()
+    assert err < 0.15 * scale, f"q4 error {err} vs scale {scale}"
+
+
+def test_q4_artifact_in_manifest():
+    import json
+    import pathlib
+    man_path = (pathlib.Path(__file__).resolve().parents[2]
+                / "artifacts" / "toy" / "manifest.json")
+    if not man_path.exists():
+        import pytest
+        pytest.skip("run make artifacts")
+    man = json.loads(man_path.read_text())
+    if "block_fwd_q4" not in man["artifacts"]:
+        import pytest
+        pytest.skip("artifacts predate the q4 variant; run make artifacts")
+    spec = man["artifacts"]["block_fwd_q4"]
+    names = [a["name"] for a in spec["args"]]
+    assert names[0] == "x" and "q_wq" in names and "s_wd" in names
+    qi = [a for a in spec["args"] if a["name"].startswith("q_")]
+    assert len(qi) == len(M.QUANT_MATS)
+    # packed nibbles travel as i32 (xla-crate U8 buffer bug; see model.py)
+    assert all(a["dtype"] == "i32" for a in qi)

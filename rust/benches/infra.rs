@@ -1,0 +1,71 @@
+//! Bench: L3 infrastructure hot paths — memory tracker, checkpoint store,
+//! tokenizer, corpus generation, JSON parsing. None of these may become a
+//! bottleneck relative to artifact execution (DESIGN.md §9: L3 overhead
+//! < 10% of step time).
+
+#[path = "harness.rs"]
+mod harness;
+
+use mesp::data::tokenizer::{for_vocab, Tokenizer};
+use mesp::data::{BatchSource, CorpusGen};
+use mesp::memory::MemoryTracker;
+use mesp::tensor::HostTensor;
+use mesp::train::CheckpointStore;
+use mesp::util::{Json, Rng};
+
+fn main() {
+    println!("== L3 infrastructure micro-benchmarks ==");
+
+    let tracker = MemoryTracker::new();
+    harness::bench("tracker/track+drop x1000", 3, 50, || {
+        for _ in 0..1000 {
+            let _g = tracker.track("bench", 4096);
+        }
+    });
+
+    let tr2 = MemoryTracker::new();
+    harness::bench("checkpoint_store/8-layer cycle", 3, 50, || {
+        let mut s = CheckpointStore::new(tr2.clone(), 0);
+        for l in 0..8 {
+            s.store(l, HostTensor::f32(&[4096], vec![0.5; 4096])).unwrap();
+        }
+        for l in (0..8).rev() {
+            let _ = s.take(l).unwrap();
+        }
+    });
+
+    let mut gen = CorpusGen::new(1, 1000);
+    let text = gen.generate(20_000);
+    println!("(corpus: {} chars)", text.len());
+    harness::bench("corpus/generate 20k words", 1, 10, || {
+        let mut g = CorpusGen::new(2, 1000);
+        let _ = g.generate(20_000);
+    });
+
+    let tok = for_vocab(16384);
+    harness::bench("tokenizer/hash-word 20k words", 2, 20, || {
+        let _ = tok.encode(&text);
+    });
+    let btok = for_vocab(256);
+    harness::bench("tokenizer/byte 100k chars", 2, 20, || {
+        let _ = btok.encode(&text[..100_000.min(text.len())]);
+    });
+
+    harness::bench("batch_source/seq128 x32", 2, 20, || {
+        let mut src = BatchSource::new(16384, 1, 128, 3);
+        for _ in 0..32 {
+            let _ = src.next_batch();
+        }
+    });
+
+    let manifest = std::fs::read_to_string("artifacts/toy/manifest.json")
+        .expect("run `make artifacts` first");
+    harness::bench("json/parse toy manifest", 3, 100, || {
+        let _ = Json::parse(&manifest).unwrap();
+    });
+
+    let mut rng = Rng::new(1);
+    harness::bench("rng/normal_vec 1M", 1, 10, || {
+        let _ = rng.normal_vec(1_000_000, 1.0);
+    });
+}

@@ -1,0 +1,44 @@
+//! Bench: Table 1's time column — full training-step latency per method
+//! on the compiled `small` config (and `toy` for fast regressions).
+//! The paper's claim to reproduce: MeSP costs ~1.2-1.4x MeBP per step
+//! (its 27-31% overhead) while MeZO's two forwards are cheaper per step.
+
+#[path = "harness.rs"]
+mod harness;
+
+use mesp::config::{Method, TrainConfig};
+use mesp::coordinator::TrainSession;
+
+fn step_bench(config: &str, method: Method, iters: usize)
+    -> harness::BenchResult
+{
+    let cfg = TrainConfig {
+        config: config.into(),
+        method,
+        log_every: usize::MAX,
+        ..Default::default()
+    };
+    let mut sess = TrainSession::new(cfg).expect("session");
+    // pre-fetch a batch and reuse it so data time is excluded
+    let (batch, _g) = sess.loader.next();
+    harness::bench(
+        &format!("{config}/step/{}", method.name()),
+        2,
+        iters,
+        || {
+            sess.engine.step(&batch).expect("step");
+        },
+    )
+}
+
+fn main() {
+    println!("== Table 1 (time column): step latency per method ==");
+    for config in ["toy", "small"] {
+        let mebp = step_bench(config, Method::Mebp, 20);
+        let mezo = step_bench(config, Method::Mezo, 20);
+        let mesp = step_bench(config, Method::Mesp, 20);
+        harness::ratio("MeSP overhead", &mebp, &mesp);
+        harness::ratio("MeZO ratio  ", &mebp, &mezo);
+        println!("paper @0.5B: MeSP 1.26x, MeZO 0.75x of MeBP\n");
+    }
+}

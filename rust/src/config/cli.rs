@@ -1,0 +1,172 @@
+//! Hand-rolled CLI (no clap in the offline build): subcommands + --flag
+//! value parsing with typed accessors and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus --key value flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(cmd) = it.next() {
+            if cmd.starts_with('-') {
+                anyhow::bail!("expected a subcommand before '{cmd}'");
+            }
+            out.command = cmd;
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    anyhow::bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
+                {
+                    out.flags.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> anyhow::Result<f32> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a float, got '{v}'")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()),
+                 Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error on unknown flags (catches typos early).
+    pub fn expect_known(&self, known: &[&str]) -> anyhow::Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                anyhow::bail!(
+                    "unknown flag --{k} for '{}' (known: {})",
+                    self.command,
+                    known.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+pub const USAGE: &str = "\
+mesp — Memory-Efficient Structured Backpropagation (paper reproduction)
+
+USAGE: mesp <command> [--flag value]...
+
+COMMANDS
+  train       Run a training session.
+              --config toy|small|e2e100m  --method mesp|mebp|mezo|storeh
+              --steps N  --lr F  --seed N  --optimizer sgd|momentum|adam
+              --log-every N  --metrics PATH.jsonl  --spill-limit BYTES
+              --artifacts DIR
+  simulate    Evaluate the analytical memory model at Qwen2.5 dims.
+              --model 0.5b|1.5b|3b  --seq N  --rank N  [--breakdown]
+  gradcheck   Assert MeSP ≡ MeBP ≡ store-h gradients on a compiled config.
+              --config toy  --seeds N  --tol F
+  mezo-quality  Gradient-quality analysis (Table 3). --config small
+  reproduce   Regenerate paper tables. --table 1..11 | --all  [--steps N]
+              [--out FILE]
+  inspect     List a config's artifacts and arg specs. --config toy
+  help        This text.
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = parse("train --config toy --steps 50 --verbose");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.str("config", "x"), "toy");
+        assert_eq!(a.usize("steps", 0).unwrap(), 50);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("simulate --model=3b --seq=512");
+        assert_eq!(a.str("model", ""), "3b");
+        assert_eq!(a.usize("seq", 0).unwrap(), 512);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("train");
+        assert_eq!(a.usize("steps", 7).unwrap(), 7);
+        assert_eq!(a.f32("lr", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse("train --steps abc");
+        assert!(a.usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("train --confg toy");
+        assert!(a.expect_known(&["config"]).is_err());
+        let b = parse("train --config toy");
+        assert!(b.expect_known(&["config"]).is_ok());
+    }
+
+    #[test]
+    fn flag_before_command_rejected() {
+        assert!(Args::parse(vec!["--x".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,267 @@
+//! Typed configuration: model dimensions, training settings, method
+//! selection. Compiled configs (toy/small/e2e100m) load their dims from
+//! `artifacts/<name>/manifest.json`; simulation-only configs (the Qwen2.5
+//! family the paper measures on-device) come from `presets` and are only
+//! ever fed to the analytical memory model.
+
+pub mod cli;
+pub mod presets;
+
+/// The seven LoRA adapter sites, canonical order — must match
+/// `python/compile/model.py::PROJS` (artifact ABI).
+pub const PROJS: [&str; 7] = ["q", "k", "v", "o", "gate", "up", "down"];
+
+/// The nine frozen per-block weights, canonical order (artifact ABI).
+pub const FROZEN: [&str; 9] =
+    ["ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd"];
+
+/// Training method — the paper's three systems plus the Table-5 ablation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Memory-efficient Structured Backpropagation (the contribution).
+    Mesp,
+    /// Gradient checkpointing + framework-autodiff baseline.
+    Mebp,
+    /// Zeroth-order (SPSA) baseline.
+    Mezo,
+    /// MeSP variant that stores h = xA instead of recomputing (Table 5).
+    StoreH,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> anyhow::Result<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "mesp" => Ok(Method::Mesp),
+            "mebp" => Ok(Method::Mebp),
+            "mezo" => Ok(Method::Mezo),
+            "storeh" | "store-h" => Ok(Method::StoreH),
+            _ => anyhow::bail!("unknown method '{s}' (mesp|mebp|mezo|storeh)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Mesp => "MeSP",
+            Method::Mebp => "MeBP",
+            Method::Mezo => "MeZO",
+            Method::StoreH => "Store-h",
+        }
+    }
+}
+
+/// Model + runtime shape parameters. Mirrors python ModelConfig.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub rank: usize,
+    pub alpha: f32,
+}
+
+impl ModelDims {
+    pub fn scale(&self) -> f32 {
+        self.alpha / self.rank as f32
+    }
+
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Tokens per micro-batch.
+    pub fn m(&self) -> usize {
+        self.batch * self.seq
+    }
+
+    /// (d_in, d_out) of LoRA site `p`.
+    pub fn proj_dims(&self, p: &str) -> (usize, usize) {
+        let (d, qd, kvd, f) = (self.d_model, self.q_dim(), self.kv_dim(), self.d_ff);
+        match p {
+            "q" => (d, qd),
+            "k" => (d, kvd),
+            "v" => (d, kvd),
+            "o" => (qd, d),
+            "gate" => (d, f),
+            "up" => (d, f),
+            "down" => (f, d),
+            _ => panic!("unknown proj {p}"),
+        }
+    }
+
+    /// Shape of frozen weight `name`.
+    pub fn frozen_shape(&self, name: &str) -> Vec<usize> {
+        let (d, qd, kvd, f) = (self.d_model, self.q_dim(), self.kv_dim(), self.d_ff);
+        match name {
+            "ln1" | "ln2" => vec![d],
+            "wq" => vec![d, qd],
+            "wk" | "wv" => vec![d, kvd],
+            "wo" => vec![qd, d],
+            "wg" | "wu" => vec![d, f],
+            "wd" => vec![f, d],
+            _ => panic!("unknown frozen weight {name}"),
+        }
+    }
+
+    /// LoRA parameter count of one block (all 7 sites, A+B).
+    pub fn lora_params_per_block(&self) -> usize {
+        PROJS
+            .iter()
+            .map(|p| {
+                let (din, dout) = self.proj_dims(p);
+                self.rank * (din + dout)
+            })
+            .sum()
+    }
+
+    pub fn lora_params_total(&self) -> usize {
+        self.lora_params_per_block() * self.n_layers
+    }
+
+    /// Frozen parameter count of one block.
+    pub fn frozen_params_per_block(&self) -> usize {
+        FROZEN
+            .iter()
+            .map(|n| self.frozen_shape(n).iter().product::<usize>())
+            .sum()
+    }
+
+    /// Total frozen params (blocks + embedding + final norm).
+    pub fn frozen_params_total(&self) -> usize {
+        self.n_layers * self.frozen_params_per_block()
+            + self.vocab * self.d_model
+            + self.d_model
+    }
+}
+
+/// Optimizer selection for the exact-gradient engines.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptimizerKind {
+    Sgd,
+    Momentum { beta: f32 },
+    Adam { beta1: f32, beta2: f32, eps: f32 },
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sgd" => Ok(OptimizerKind::Sgd),
+            "momentum" => Ok(OptimizerKind::Momentum { beta: 0.9 }),
+            "adam" => Ok(OptimizerKind::Adam {
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+            }),
+            _ => anyhow::bail!("unknown optimizer '{s}' (sgd|momentum|adam)"),
+        }
+    }
+
+    /// f32 state slots per parameter (memory model input).
+    pub fn state_slots(self) -> usize {
+        match self {
+            OptimizerKind::Sgd => 0,
+            OptimizerKind::Momentum { .. } => 1,
+            OptimizerKind::Adam { .. } => 2,
+        }
+    }
+}
+
+/// Full training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Compiled config name == artifacts/<name>/ directory.
+    pub config: String,
+    pub method: Method,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub optimizer: OptimizerKind,
+    /// MeZO perturbation scale ε.
+    pub mezo_eps: f32,
+    /// Log every N steps.
+    pub log_every: usize,
+    /// Spill checkpoints to disk beyond this many bytes (0 = never).
+    pub spill_limit: u64,
+    /// Where metrics JSONL goes (None = stdout summary only).
+    pub metrics_path: Option<String>,
+    pub artifacts_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            config: "toy".into(),
+            method: Method::Mesp,
+            steps: 10,
+            lr: 1e-4,
+            seed: 42,
+            optimizer: OptimizerKind::Sgd,
+            mezo_eps: 1e-3,
+            log_every: 10,
+            spill_limit: 0,
+            metrics_path: None,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        presets::qwen25_05b(256, 8)
+    }
+
+    #[test]
+    fn qwen_05b_param_count() {
+        let d = dims();
+        // Qwen2.5-0.5B is ~0.49B params incl. tied embedding.
+        let total = d.frozen_params_total();
+        assert!((400_000_000..600_000_000).contains(&total), "{total}");
+    }
+
+    #[test]
+    fn lora_r8_param_count() {
+        let d = dims();
+        // paper: LoRA on 7 projections, 24 blocks, r=8 → a few M params
+        let lora = d.lora_params_total();
+        assert!((2_000_000..8_000_000).contains(&lora), "{lora}");
+    }
+
+    #[test]
+    fn proj_dims_cover_all_sites() {
+        let d = dims();
+        for p in PROJS {
+            let (din, dout) = d.proj_dims(p);
+            assert!(din > 0 && dout > 0);
+        }
+        assert_eq!(d.proj_dims("q").1, d.q_dim());
+        assert_eq!(d.proj_dims("down"), (d.d_ff, d.d_model));
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for (s, m) in [("mesp", Method::Mesp), ("MeBP", Method::Mebp),
+                       ("MEZO", Method::Mezo), ("store-h", Method::StoreH)] {
+            assert_eq!(Method::parse(s).unwrap(), m);
+        }
+        assert!(Method::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn optimizer_state_slots() {
+        assert_eq!(OptimizerKind::parse("sgd").unwrap().state_slots(), 0);
+        assert_eq!(OptimizerKind::parse("adam").unwrap().state_slots(), 2);
+    }
+}

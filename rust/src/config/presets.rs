@@ -1,0 +1,106 @@
+//! Simulation-only model presets: the Qwen2.5 family dims the paper
+//! measures on an iPhone 17 Pro. These are fed to the analytical memory
+//! model (`memory::model`) to regenerate the paper's tables — they are
+//! never compiled to artifacts (0.5B+ params would not train on the CPU
+//! testbed in reasonable time, and peak memory depends only on shapes).
+//!
+//! Dims follow the Qwen2.5 technical report (Qwen Team, 2024):
+//!   0.5B: 24 layers, d=896,  14 Q heads / 2 KV heads, ffn 4864
+//!   1.5B: 28 layers, d=1536, 12 Q heads / 2 KV heads, ffn 8960
+//!   3B:   36 layers, d=2048, 16 Q heads / 2 KV heads, ffn 11008
+//! All with head_dim 128 on 1.5B/3B and 64 on 0.5B, vocab 151936.
+
+use super::ModelDims;
+
+/// Qwen2.5-0.5B at the given sequence length and LoRA rank.
+pub fn qwen25_05b(seq: usize, rank: usize) -> ModelDims {
+    ModelDims {
+        name: format!("qwen2.5-0.5b/seq{seq}/r{rank}"),
+        vocab: 151_936,
+        d_model: 896,
+        n_layers: 24,
+        n_heads: 14,
+        n_kv_heads: 2,
+        head_dim: 64,
+        d_ff: 4864,
+        seq,
+        batch: 1,
+        rank,
+        alpha: 2.0 * rank as f32,
+    }
+}
+
+/// Qwen2.5-1.5B.
+pub fn qwen25_15b(seq: usize, rank: usize) -> ModelDims {
+    ModelDims {
+        name: format!("qwen2.5-1.5b/seq{seq}/r{rank}"),
+        vocab: 151_936,
+        d_model: 1536,
+        n_layers: 28,
+        n_heads: 12,
+        n_kv_heads: 2,
+        head_dim: 128,
+        d_ff: 8960,
+        seq,
+        batch: 1,
+        rank,
+        alpha: 2.0 * rank as f32,
+    }
+}
+
+/// Qwen2.5-3B.
+pub fn qwen25_3b(seq: usize, rank: usize) -> ModelDims {
+    ModelDims {
+        name: format!("qwen2.5-3b/seq{seq}/r{rank}"),
+        vocab: 151_936,
+        d_model: 2048,
+        n_layers: 36,
+        n_heads: 16,
+        n_kv_heads: 2,
+        head_dim: 128,
+        d_ff: 11008,
+        seq,
+        batch: 1,
+        rank,
+        alpha: 2.0 * rank as f32,
+    }
+}
+
+/// Look up a sim preset by the names used in the paper's tables.
+pub fn by_name(name: &str, seq: usize, rank: usize) -> anyhow::Result<ModelDims> {
+    match name.to_ascii_lowercase().as_str() {
+        "0.5b" | "qwen2.5-0.5b" => Ok(qwen25_05b(seq, rank)),
+        "1.5b" | "qwen2.5-1.5b" => Ok(qwen25_15b(seq, rank)),
+        "3b" | "qwen2.5-3b" => Ok(qwen25_3b(seq, rank)),
+        _ => anyhow::bail!("unknown sim preset '{name}' (0.5b|1.5b|3b)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_model_names() {
+        // each preset's frozen params should land near its nominal size
+        let p05 = qwen25_05b(256, 8).frozen_params_total() as f64 / 1e9;
+        let p15 = qwen25_15b(256, 8).frozen_params_total() as f64 / 1e9;
+        let p3 = qwen25_3b(256, 8).frozen_params_total() as f64 / 1e9;
+        assert!((0.35..0.65).contains(&p05), "{p05}");
+        assert!((1.2..1.9).contains(&p15), "{p15}");
+        assert!((2.5..3.5).contains(&p3), "{p3}");
+    }
+
+    #[test]
+    fn gqa_ratio_is_integral() {
+        for d in [qwen25_05b(256, 8), qwen25_15b(256, 8), qwen25_3b(256, 8)] {
+            assert_eq!(d.n_heads % d.n_kv_heads, 0);
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("0.5b", 128, 4).is_ok());
+        assert!(by_name("7b", 128, 4).is_err());
+    }
+}

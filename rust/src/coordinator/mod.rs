@@ -1,0 +1,82 @@
+//! Training session coordinator — the L3 top level that wires config →
+//! runtime → data pipeline → engine → metrics, and the sweep runner the
+//! reproduce drivers use to run method grids.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::{Method, TrainConfig};
+use crate::data::PrefetchLoader;
+use crate::memory::MemoryTracker;
+use crate::metrics::{MetricsLogger, RunSummary};
+use crate::runtime::Runtime;
+use crate::train::{build_engine, common::EngineCtx, Engine};
+
+/// A live training session: one compiled config + one method.
+pub struct TrainSession {
+    pub cfg: TrainConfig,
+    pub engine: Box<dyn Engine>,
+    pub loader: PrefetchLoader,
+    pub metrics: MetricsLogger,
+    pub tracker: MemoryTracker,
+}
+
+impl TrainSession {
+    /// Build a session: load artifacts, init model, spawn the data
+    /// pipeline. Executables compile lazily on first use.
+    pub fn new(cfg: TrainConfig) -> anyhow::Result<TrainSession> {
+        let tracker = MemoryTracker::new();
+        let rt = Arc::new(Runtime::load(
+            Path::new(&cfg.artifacts_dir),
+            &cfg.config,
+            tracker.clone(),
+        )?);
+        let dims = rt.dims().clone();
+        let ctx = EngineCtx::new(rt, cfg.seed, cfg.optimizer, cfg.lr,
+                                 cfg.spill_limit);
+        let engine = build_engine(cfg.method, ctx, cfg.mezo_eps)?;
+        let loader = PrefetchLoader::spawn(
+            dims.vocab, dims.batch, dims.seq, cfg.seed ^ 0xbeef, 4,
+            tracker.clone(),
+        );
+        let metrics = MetricsLogger::new(
+            cfg.metrics_path.as_deref().map(Path::new),
+            cfg.log_every,
+        )?;
+        Ok(TrainSession { cfg, engine, loader, metrics, tracker })
+    }
+
+    /// Run `steps` optimization steps; returns the summary.
+    pub fn run(&mut self, steps: usize) -> anyhow::Result<RunSummary> {
+        for _ in 0..steps {
+            let (batch, _guard) = self.loader.next();
+            let stats = self.engine.step(&batch)?;
+            self.metrics.record(self.engine.name(), &stats)?;
+        }
+        Ok(self.metrics.summary())
+    }
+
+    /// Per-step loss history (Fig-2 data).
+    pub fn losses(&self) -> Vec<f64> {
+        self.metrics.history.iter().map(|s| s.loss).collect()
+    }
+}
+
+/// Run the same (config, steps, seed) under several methods — the
+/// comparison grids behind Tables 1/5 and Figure 2. Returns
+/// (method, summary, losses) triples.
+pub fn sweep_methods(
+    base: &TrainConfig,
+    methods: &[Method],
+    steps: usize,
+) -> anyhow::Result<Vec<(Method, RunSummary, Vec<f64>)>> {
+    let mut out = Vec::new();
+    for &m in methods {
+        let mut cfg = base.clone();
+        cfg.method = m;
+        let mut sess = TrainSession::new(cfg)?;
+        let summary = sess.run(steps)?;
+        out.push((m, summary, sess.losses()));
+    }
+    Ok(out)
+}

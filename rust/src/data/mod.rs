@@ -1,0 +1,10 @@
+//! Data pipeline: synthetic corpus generation (the WikiText-2 stand-in),
+//! tokenization, and a backpressured prefetching batch loader.
+
+pub mod corpus;
+pub mod loader;
+pub mod tokenizer;
+
+pub use corpus::{CorpusGen, TINY_CORPUS};
+pub use loader::{Batch, BatchSource, PrefetchLoader};
+pub use tokenizer::{ByteTokenizer, HashWordTokenizer, Tokenizer};

@@ -1,0 +1,147 @@
+//! Tokenizers: byte-level (vocab 256) and a greedy word-hash tokenizer for
+//! larger vocabularies. The compiled configs have fixed vocab sizes, so
+//! the tokenizer must map any text into [0, vocab); both implementations
+//! guarantee that invariant (property-tested below and in rust/tests/).
+
+/// Tokenizer trait — the data pipeline is generic over it.
+pub trait Tokenizer: Send {
+    fn vocab(&self) -> usize;
+    fn encode(&self, text: &str) -> Vec<i32>;
+    /// Best-effort decode (diagnostics only).
+    fn decode(&self, ids: &[i32]) -> String;
+}
+
+/// Byte-level tokenizer: one token per byte. Exact roundtrip.
+pub struct ByteTokenizer;
+
+impl Tokenizer for ByteTokenizer {
+    fn vocab(&self) -> usize {
+        256
+    }
+
+    fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids.iter().map(|i| (*i & 0xff) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+/// Word-hash tokenizer for vocab > 256: words (and single punctuation
+/// bytes) hash into the id space above the 256 byte ids, which remain
+/// reserved as a fallback for unknown/rare strings. Deterministic and
+/// stateless — adequate for synthetic corpora where exact detokenization
+/// does not matter, while exercising a realistic vocab-sized embedding.
+pub struct HashWordTokenizer {
+    vocab: usize,
+}
+
+impl HashWordTokenizer {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab > 512, "use ByteTokenizer for small vocabs");
+        HashWordTokenizer { vocab }
+    }
+
+    fn word_id(&self, w: &str) -> i32 {
+        let mut h = 0xcbf29ce484222325u64;
+        for b in w.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        (256 + (h % (self.vocab as u64 - 256))) as i32
+    }
+}
+
+impl Tokenizer for HashWordTokenizer {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::new();
+        for word in text.split_whitespace() {
+            let core = word.trim_matches(|c: char| c.is_ascii_punctuation());
+            if !core.is_empty() {
+                out.push(self.word_id(core));
+            }
+            for p in word.chars().rev() {
+                if p.is_ascii_punctuation() {
+                    out.push(p as i32); // punctuation keeps its byte id
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|i| {
+                if *i < 256 {
+                    (*i as u8 as char).to_string()
+                } else {
+                    format!("<w{i}>")
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Pick the right tokenizer for a config's vocab size.
+pub fn for_vocab(vocab: usize) -> Box<dyn Tokenizer> {
+    if vocab <= 512 {
+        Box::new(ByteTokenizer)
+    } else {
+        Box::new(HashWordTokenizer::new(vocab))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_roundtrip() {
+        let t = ByteTokenizer;
+        let s = "hello, world!";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn ids_always_in_vocab() {
+        let texts = ["a b c", "héllo wörld", "x.y,z!", ""];
+        for v in [1024usize, 16384] {
+            let t = HashWordTokenizer::new(v);
+            for s in texts {
+                for id in t.encode(s) {
+                    assert!((0..v as i32).contains(&id), "{id} vocab {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hash_tokenizer_deterministic_and_distinct() {
+        let t = HashWordTokenizer::new(4096);
+        assert_eq!(t.encode("foo bar"), t.encode("foo bar"));
+        let a = t.encode("foo")[0];
+        let b = t.encode("bar")[0];
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn for_vocab_dispatch() {
+        assert_eq!(for_vocab(256).vocab(), 256);
+        assert_eq!(for_vocab(16384).vocab(), 16384);
+    }
+
+    #[test]
+    fn punctuation_preserved() {
+        let t = HashWordTokenizer::new(2048);
+        let ids = t.encode("stop. go");
+        assert!(ids.contains(&('.' as i32)));
+    }
+}

@@ -1,0 +1,32 @@
+//! # mesp — Memory-Efficient Structured Backpropagation
+//!
+//! A full-system reproduction of *"Memory-Efficient Structured
+//! Backpropagation for On-Device LLM Fine-Tuning"* as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the training coordinator: per-block forward
+//!   scheduling with checkpoint-only storage, reverse-order backward with
+//!   immediate optimizer updates and explicit tensor lifecycle management
+//!   (the paper's contribution), plus the MeBP / MeZO / store-h baselines,
+//!   a byte-accurate memory tracker, an analytical Qwen-scale memory
+//!   model, a data pipeline, metrics, and reproduction drivers for every
+//!   table and figure in the paper.
+//! * **L2 (python/compile/model.py)** — the Qwen2.5-style transformer
+//!   block and the manually derived Appendix-A backward passes, AOT-lowered
+//!   to HLO text once (`make artifacts`).
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the hot spots,
+//!   headlined by the fused LoRA gradient that recomputes `h = xA` in VMEM.
+//!
+//! Quickstart: `make artifacts && cargo run --release -- train --config toy`.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod reproduce;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,198 @@
+//! `mesp` CLI — the launcher for the MeSP reproduction system.
+//!
+//! See `mesp help` (config::cli::USAGE) for the command reference. The
+//! binary is self-contained after `make artifacts`: Python never runs on
+//! any code path reachable from here.
+
+use std::path::Path;
+
+use mesp::config::cli::{Args, USAGE};
+use mesp::config::{presets, Method, OptimizerKind, TrainConfig};
+use mesp::coordinator::TrainSession;
+use mesp::memory::model as memmodel;
+use mesp::metrics::grad_quality;
+use mesp::reproduce;
+use mesp::util::stats::fmt_mb;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "simulate" => cmd_simulate(&args),
+        "gradcheck" => cmd_gradcheck(&args),
+        "mezo-quality" => cmd_mezo_quality(&args),
+        "reproduce" => cmd_reproduce(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn train_config(args: &Args) -> anyhow::Result<TrainConfig> {
+    Ok(TrainConfig {
+        config: args.str("config", "toy"),
+        method: Method::parse(&args.str("method", "mesp"))?,
+        steps: args.usize("steps", 10)?,
+        lr: args.f32("lr", 1e-4)?,
+        seed: args.u64("seed", 42)?,
+        optimizer: OptimizerKind::parse(&args.str("optimizer", "sgd"))?,
+        mezo_eps: args.f32("mezo-eps", 1e-3)?,
+        log_every: args.usize("log-every", 10)?,
+        spill_limit: args.u64("spill-limit", 0)?,
+        metrics_path: args.opt_str("metrics"),
+        artifacts_dir: args.str("artifacts", "artifacts"),
+    })
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    args.expect_known(&[
+        "config", "method", "steps", "lr", "seed", "optimizer", "mezo-eps",
+        "log-every", "spill-limit", "metrics", "artifacts",
+    ])?;
+    let cfg = train_config(args)?;
+    let steps = cfg.steps;
+    let method = cfg.method;
+    println!(
+        "training config={} method={} steps={} lr={} optimizer={:?}",
+        cfg.config, method.name(), steps, cfg.lr, cfg.optimizer
+    );
+    let mut sess = TrainSession::new(cfg)?;
+    let summary = sess.run(steps)?;
+    summary.print(method.name());
+    println!("\nper-artifact execution time:");
+    for (name, s) in sess.engine.ctx().rt.exec_stats() {
+        println!("  {name:<22} {:>7} calls  {:>9.3}s total", s.calls,
+                 s.total_secs);
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    args.expect_known(&["model", "seq", "rank", "breakdown"])?;
+    let model = args.str("model", "0.5b");
+    let seq = args.usize("seq", 256)?;
+    let rank = args.usize("rank", 8)?;
+    if args.bool("breakdown") {
+        print!("{}", reproduce::breakdown(&model, seq, rank)?);
+        return Ok(());
+    }
+    let dims = presets::by_name(&model, seq, rank)?;
+    println!("analytical peak memory, {} (paper widths):", dims.name);
+    for m in [Method::Mebp, Method::Mezo, Method::Mesp, Method::StoreH] {
+        let bytes = memmodel::peak_bytes(m, &dims);
+        let red = memmodel::reduction_vs_mebp(m, &dims);
+        println!("  {:<8} {:>8} MB   ({:>5.1}% vs MeBP)", m.name(),
+                 fmt_mb(bytes), red);
+    }
+    Ok(())
+}
+
+fn cmd_gradcheck(args: &Args) -> anyhow::Result<()> {
+    args.expect_known(&["config", "seeds", "tol", "artifacts"])?;
+    let config = args.str("config", "toy");
+    let seeds = args.usize("seeds", 3)?;
+    let tol = args.f32("tol", 2e-4)? as f64;
+    let mut worst: f64 = 0.0;
+    for seed in 0..seeds as u64 {
+        let base = TrainConfig {
+            config: config.clone(),
+            seed: 1000 + seed,
+            log_every: usize::MAX,
+            artifacts_dir: args.str("artifacts", "artifacts"),
+            ..Default::default()
+        };
+        let mut grads = Vec::new();
+        for method in [Method::Mesp, Method::Mebp, Method::StoreH] {
+            let mut cfg = base.clone();
+            cfg.method = method;
+            let mut sess = TrainSession::new(cfg)?;
+            let (batch, _g) = sess.loader.next();
+            grads.push((method, sess.engine.gradients(&batch)?));
+        }
+        let (_, ref mesp_g) = grads[0];
+        for (method, g) in &grads[1..] {
+            for (l, (a, b)) in mesp_g.iter().zip(g).enumerate() {
+                let q = grad_quality(&[a.clone()], &[b.clone()]);
+                let err = q[0].rel_error;
+                worst = worst.max(err);
+                anyhow::ensure!(
+                    err < tol,
+                    "seed {seed} layer {l}: MeSP vs {} rel err {err:.2e} > {tol:.0e}",
+                    method.name()
+                );
+            }
+        }
+        println!("seed {seed}: MeSP ≡ MeBP ≡ store-h  ✓");
+    }
+    println!(
+        "gradcheck PASSED over {seeds} seeds (worst rel err {worst:.2e} \
+         < {tol:.0e}) — the paper's 'mathematically identical gradients'."
+    );
+    Ok(())
+}
+
+fn cmd_mezo_quality(args: &Args) -> anyhow::Result<()> {
+    args.expect_known(&["config"])?;
+    print!("{}", reproduce::table3(&args.str("config", "small"))?);
+    Ok(())
+}
+
+fn cmd_reproduce(args: &Args) -> anyhow::Result<()> {
+    args.expect_known(&["table", "fig", "all", "steps", "out"])?;
+    let steps = args.usize("steps", 5)?;
+    let mut output = String::new();
+    if args.bool("all") {
+        for n in 1..=11 {
+            println!("=== table {n} ===");
+            let s = reproduce::run_table(n, steps)?;
+            println!("{s}");
+            output.push_str(&s);
+            output.push('\n');
+        }
+    } else if let Some(f) = args.opt_str("fig") {
+        anyhow::ensure!(f == "2", "the paper has one figure with data: 2");
+        let s = reproduce::run_table(11, steps.max(100))?;
+        println!("{s}");
+        output = s;
+    } else {
+        let n = args.usize("table", 1)?;
+        let s = reproduce::run_table(n, steps)?;
+        println!("{s}");
+        output = s;
+    }
+    if let Some(path) = args.opt_str("out") {
+        std::fs::write(Path::new(&path), output)?;
+        println!("(written to {path})");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    args.expect_known(&["config", "artifacts"])?;
+    let dir = Path::new(&args.str("artifacts", "artifacts"))
+        .join(args.str("config", "toy"));
+    let man = mesp::runtime::Manifest::load(&dir)?;
+    println!(
+        "config {}: d={} L={} H={}/{} ff={} seq={} r={} ({}M params, {}k LoRA)",
+        man.dims.name, man.dims.d_model, man.dims.n_layers, man.dims.n_heads,
+        man.dims.n_kv_heads, man.dims.d_ff, man.dims.seq, man.dims.rank,
+        man.param_count / 1_000_000, man.lora_param_count / 1000
+    );
+    for a in &man.artifacts {
+        println!("  {:<22} {:>2} args -> {:>2} outputs  ({})",
+                 a.name, a.args.len(), a.outputs,
+                 a.file.file_name().unwrap().to_string_lossy());
+    }
+    Ok(())
+}

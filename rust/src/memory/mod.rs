@@ -1,0 +1,9 @@
+//! Memory subsystem: the runtime tensor-lifecycle tracker (the measured
+//! substitute for the paper's `phys_footprint`) and the analytical peak
+//! model that regenerates the paper's Qwen-scale tables. See DESIGN.md §7.
+
+pub mod model;
+pub mod tracker;
+
+pub use model::{peak, peak_bytes, reduction_vs_mebp, Breakdown, Widths};
+pub use tracker::{Guard, MemoryTracker, Tracked};

@@ -1,0 +1,355 @@
+//! Analytical peak-memory model: a per-strategy inventory of every tensor
+//! class live at the worst moment of a training step (DESIGN.md §7).
+//!
+//! This is how the paper's Qwen-scale tables are regenerated on a testbed
+//! that cannot run a 3B model: the same inventory drives both
+//!   (a) "paper widths" — bf16 activations, f32 grads, int4 base weights
+//!       excluded (file-backed mmap is not part of phys_footprint, which
+//!       is why the paper's 0.5B MeSP peak of 136 MB is *below* the 247 MB
+//!       the quantized base weights alone occupy), and
+//!   (b) "tracked widths" — everything f32, matching what the Rust
+//!       engines actually hold; integration tests assert the tracker's
+//!       measured peak agrees with this mode on real toy/small runs.
+//!
+//! The peak moment per strategy:
+//!   exact-grad methods: max(loss-head phase, worst single block backward)
+//!   MeZO:               second perturbed forward (z + perturbation state
+//!                       live alongside inference activations).
+
+use crate::config::{Method, ModelDims, OptimizerKind, PROJS};
+
+/// Byte widths per tensor class. The two instantiations are
+/// `Widths::paper()` and `Widths::tracked()`.
+#[derive(Debug, Clone, Copy)]
+pub struct Widths {
+    /// Activations / checkpoints / residuals.
+    pub act: u64,
+    /// Logits + loss-head tensors.
+    pub logits: u64,
+    /// Gradient buffers.
+    pub grad: u64,
+    /// LoRA parameters.
+    pub lora: u64,
+    /// MeZO perturbation state.
+    pub z: u64,
+    /// Fixed runtime overhead (allocator, executables, caches).
+    pub runtime_const: u64,
+}
+
+impl Widths {
+    /// The paper's setup: bf16 activations/params, f32 grads/optimizer,
+    /// ~24 MB of framework floor (MLX allocator + compiled functions).
+    pub fn paper() -> Widths {
+        Widths { act: 2, logits: 2, grad: 4, lora: 2, z: 4,
+                 runtime_const: 24 << 20 }
+    }
+
+    /// What the Rust engines hold: all host tensors are f32; no fixed
+    /// floor (the tracker only counts tensors, not the allocator).
+    pub fn tracked() -> Widths {
+        Widths { act: 4, logits: 4, grad: 4, lora: 4, z: 4, runtime_const: 0 }
+    }
+}
+
+/// One strategy's peak-memory breakdown, in bytes.
+#[derive(Debug, Clone, Default)]
+pub struct Breakdown {
+    pub lora_params: u64,
+    pub optimizer_state: u64,
+    pub checkpoints: u64,
+    pub loss_head: u64,
+    pub block_intermediates: u64,
+    pub grad_buffers: u64,
+    pub perturbation: u64,
+    pub stored_h: u64,
+    /// On-the-fly dequantization buffers for the int4 base weights: the
+    /// paper's setup (§4.5) keeps base weights 4-bit and dequantizes
+    /// during compute. Exact-gradient methods re-materialize a FULL
+    /// block's weights during that block's backward (the recompute touches
+    /// every projection); inference-only forwards (MeZO) dequantize
+    /// per-projection, so only the largest projection is live. This is
+    /// the model-size-dependent term behind the paper's observation that
+    /// MeSP's reduction shrinks from 62% → 42% as models grow (§5.2).
+    pub dequant_buffers: u64,
+    pub runtime: u64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> u64 {
+        self.lora_params
+            + self.optimizer_state
+            + self.checkpoints
+            + self.loss_head
+            + self.block_intermediates
+            + self.grad_buffers
+            + self.perturbation
+            + self.stored_h
+            + self.dequant_buffers
+            + self.runtime
+    }
+
+    pub fn rows(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("lora_params", self.lora_params),
+            ("optimizer_state", self.optimizer_state),
+            ("checkpoints", self.checkpoints),
+            ("loss_head", self.loss_head),
+            ("block_intermediates", self.block_intermediates),
+            ("grad_buffers", self.grad_buffers),
+            ("perturbation", self.perturbation),
+            ("stored_h", self.stored_h),
+            ("dequant_buffers", self.dequant_buffers),
+            ("runtime", self.runtime),
+        ]
+    }
+}
+
+// ------------------------------------------------------------- inventories
+/// Appendix-E minimal set MeSP keeps while backward-ing one block:
+/// normed input h1, attention probs, pre-MLP normed h2, gate output.
+fn minimal_set(d: &ModelDims) -> u64 {
+    let m = d.m() as u64;
+    let probs = (d.batch * d.n_heads * d.seq * d.seq) as u64;
+    m * d.d_model as u64            // h1
+        + probs                     // attention probs
+        + m * d.d_model as u64      // h2
+        + m * d.d_ff as u64         // gate_out
+}
+
+/// Transient working set of MeSP's fused recompute-backward (tensors that
+/// coexist with the minimal set at the worst instant inside one block):
+/// attn_flat, silu/up outs, q/k/v heads, plus g_x/g_y ping-pong buffers.
+fn mesp_working_set(d: &ModelDims) -> u64 {
+    let m = d.m() as u64;
+    m * d.q_dim() as u64                        // attn_flat
+        + 2 * m * d.d_ff as u64                 // silu_out, up_out
+        + m * (d.q_dim() + 2 * d.kv_dim()) as u64 // q, k, v
+        + 2 * m * d.d_model as u64              // g_y, g_x
+}
+
+/// The residual set MeBP's framework autodiff saves when re-running a
+/// checkpointed block (mirrors python model.py::RESIDUALS exactly).
+fn residual_set(d: &ModelDims) -> u64 {
+    let m = d.m() as u64;
+    let probs = (d.batch * d.n_heads * d.seq * d.seq) as u64;
+    let h_all: u64 = PROJS.len() as u64 * m * d.rank as u64;
+    4 * m * d.d_model as u64                    // x, h1, h2, x2
+        + m * d.q_dim() as u64                  // q_rope
+        + 2 * m * d.kv_dim() as u64             // k_rope, v_heads
+        + probs
+        + m * d.q_dim() as u64                  // attn_flat
+        + 3 * m * d.d_ff as u64                 // gate, up, silu
+        + h_all
+}
+
+/// Framework slack: tensors autodiff retains *beyond* the mathematically
+/// necessary residuals (projection outputs, pre-softmax scores, LoRA
+/// delta outputs, RoPE temporaries) — the paper's §3.3 critique.
+fn framework_slack(d: &ModelDims) -> u64 {
+    let m = d.m() as u64;
+    let probs = (d.batch * d.n_heads * d.seq * d.seq) as u64;
+    let proj_outs: u64 = PROJS
+        .iter()
+        .map(|p| m * d.proj_dims(p).1 as u64)
+        .sum();
+    proj_outs                                   // xW0 + sxAB per site
+        + proj_outs                             // LoRA delta (s·xAB) per site
+        + probs                                 // pre-softmax scores
+        + 2 * m * d.q_dim() as u64              // rope temporaries
+        + 2 * m * d.d_model as u64              // g_y, g_x
+}
+
+/// Inference-time transient of one block (MeZO's forward working set).
+fn inference_set(d: &ModelDims) -> u64 {
+    let m = d.m() as u64;
+    let probs = (d.batch * d.n_heads * d.seq * d.seq) as u64;
+    m * d.d_model as u64                        // h1 / h2 reuse
+        + m * (d.q_dim() + 2 * d.kv_dim()) as u64
+        + probs
+        + 2 * m * d.d_ff as u64                 // gate, up
+        + m * d.d_model as u64                  // block output
+}
+
+/// Allocator bucket granularity: the paper's measured store-h overhead
+/// (Table 5: ~30 MB for 252 tensors of 4 KB) implies the runtime rounds
+/// small live buffers up to ~128 KB buckets; we model stored h the same
+/// way so the Table-5 delta is comparable.
+const ALLOC_BUCKET: u64 = 128 << 10;
+
+/// Peak-memory breakdown for `method` at dims `d`.
+pub fn peak(method: Method, d: &ModelDims, opt: OptimizerKind, w: Widths) -> Breakdown {
+    let m = d.m() as u64;
+    let lora = d.lora_params_total() as u64;
+    let logits = m * d.vocab as u64;
+    let ckpt = (d.n_layers as u64 + 1) * m * d.d_model as u64;
+    let grads_block = d.lora_params_per_block() as u64;
+    let block_weights = d.frozen_params_per_block() as u64;
+    let largest_proj = PROJS
+        .iter()
+        .map(|p| {
+            let (din, dout) = d.proj_dims(p);
+            (din * dout) as u64
+        })
+        .max()
+        .unwrap();
+
+    let mut b = Breakdown {
+        lora_params: lora * w.lora,
+        optimizer_state: lora * opt.state_slots() as u64 * 4,
+        runtime: w.runtime_const,
+        ..Default::default()
+    };
+
+    match method {
+        Method::Mesp | Method::StoreH => {
+            b.checkpoints = ckpt * w.act;
+            // Manual CE: g_logits overwrites logits in place — one buffer,
+            // plus the [m] log-normalizer column.
+            b.loss_head = logits * w.logits + m * 4;
+            b.block_intermediates =
+                (minimal_set(d) + mesp_working_set(d)) * w.act;
+            b.grad_buffers = grads_block * w.grad;
+            b.dequant_buffers = block_weights * w.act;
+            if method == Method::StoreH {
+                // h = xA stored for all 7 sites of all layers (Table 5),
+                // each rounded to the allocator bucket.
+                let one_h = (m * d.rank as u64 * w.act).max(ALLOC_BUCKET);
+                b.stored_h = (d.n_layers * PROJS.len()) as u64 * one_h;
+            }
+        }
+        Method::Mebp => {
+            b.checkpoints = ckpt * w.act;
+            // Autodiff CE retains logits, the log-normalizer broadcast,
+            // softmax probs and g_logits as separate buffers (mx.grad
+            // cannot update in place) — 4 logits-sized tensors live.
+            b.loss_head = 4 * logits * w.logits;
+            b.block_intermediates =
+                (residual_set(d) + framework_slack(d)) * w.act;
+            b.grad_buffers = grads_block * w.grad;
+            b.dequant_buffers = block_weights * w.act;
+        }
+        Method::Mezo => {
+            // No checkpoints; the live set is one block's inference
+            // transients + the loss evaluation (logits + the logsumexp
+            // temporary — even a fused CE materializes both).
+            b.loss_head = 2 * logits * w.logits;
+            b.block_intermediates = inference_set(d) * w.act;
+            // z, the +ε parameter copy, and the gradient-scale scratch all
+            // live across both forwards (the MLX implementation the paper
+            // measures keeps them materialized; Table 4's rank-32 blow-up).
+            b.perturbation = 3 * lora * w.z;
+            // inference dequantizes per-projection: largest matrix only
+            b.dequant_buffers = largest_proj * w.act;
+        }
+    }
+    b
+}
+
+/// Convenience: peak bytes at paper widths (what the tables report).
+pub fn peak_bytes(method: Method, d: &ModelDims) -> u64 {
+    peak(method, d, OptimizerKind::Sgd, Widths::paper()).total()
+}
+
+/// Reduction vs MeBP in percent (the paper's headline metric).
+pub fn reduction_vs_mebp(method: Method, d: &ModelDims) -> f64 {
+    let base = peak_bytes(Method::Mebp, d) as f64;
+    let ours = peak_bytes(method, d) as f64;
+    100.0 * (1.0 - ours / base)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn d05() -> ModelDims {
+        presets::qwen25_05b(256, 8)
+    }
+
+    #[test]
+    fn ordering_mesp_mezo_mebp() {
+        // The paper's core claim at every scale: MeSP < MeZO < MeBP.
+        for d in [presets::qwen25_05b(256, 8), presets::qwen25_15b(256, 8),
+                  presets::qwen25_3b(256, 8)] {
+            let mesp = peak_bytes(Method::Mesp, &d);
+            let mezo = peak_bytes(Method::Mezo, &d);
+            let mebp = peak_bytes(Method::Mebp, &d);
+            assert!(mesp < mezo, "{}: {mesp} !< {mezo}", d.name);
+            assert!(mezo < mebp, "{}: {mezo} !< {mebp}", d.name);
+        }
+    }
+
+    #[test]
+    fn storeh_above_mesp_below_mebp() {
+        let d = presets::qwen25_3b(256, 8);
+        let mesp = peak_bytes(Method::Mesp, &d);
+        let sh = peak_bytes(Method::StoreH, &d);
+        let mebp = peak_bytes(Method::Mebp, &d);
+        assert!(mesp < sh && sh < mebp);
+    }
+
+    #[test]
+    fn mesp_reduction_in_paper_band() {
+        // Table 1: 42-62% across model sizes at seq 256. Allow slack: the
+        // substrate differs, the *band* is the claim.
+        for (d, lo, hi) in [
+            (presets::qwen25_05b(256, 8), 35.0, 75.0),
+            (presets::qwen25_15b(256, 8), 30.0, 70.0),
+            (presets::qwen25_3b(256, 8), 25.0, 65.0),
+        ] {
+            let r = reduction_vs_mebp(Method::Mesp, &d);
+            assert!((lo..hi).contains(&r), "{}: {r:.1}%", d.name);
+        }
+    }
+
+    #[test]
+    fn mezo_rank_sensitivity() {
+        // Table 4: MeZO's reduction deteriorates with rank (larger z).
+        let r8 = reduction_vs_mebp(Method::Mezo, &presets::qwen25_05b(256, 8));
+        let r32 = reduction_vs_mebp(Method::Mezo, &presets::qwen25_05b(256, 32));
+        assert!(r32 < r8, "r32 {r32:.1}% !< r8 {r8:.1}%");
+    }
+
+    #[test]
+    fn mesp_rank_stability() {
+        // Table 4: MeSP's reduction is stable across ranks (±8 pts).
+        let r4 = reduction_vs_mebp(Method::Mesp, &presets::qwen25_05b(256, 4));
+        let r32 = reduction_vs_mebp(Method::Mesp, &presets::qwen25_05b(256, 32));
+        assert!((r4 - r32).abs() < 8.0, "r4 {r4:.1} vs r32 {r32:.1}");
+    }
+
+    #[test]
+    fn memory_scales_with_seq() {
+        // Table 2: MeBP grows ~linearly in seq; MeSP stays below it.
+        let m128 = peak_bytes(Method::Mebp, &presets::qwen25_05b(128, 8));
+        let m1024 = peak_bytes(Method::Mebp, &presets::qwen25_05b(1024, 8));
+        assert!(m1024 > 5 * m128, "{m128} -> {m1024}");
+        for seq in [128, 256, 512, 1024] {
+            let d = presets::qwen25_05b(seq, 8);
+            assert!(peak_bytes(Method::Mesp, &d) < peak_bytes(Method::Mebp, &d));
+        }
+    }
+
+    #[test]
+    fn breakdown_total_is_sum_of_rows() {
+        let b = peak(Method::Mebp, &d05(), OptimizerKind::Sgd, Widths::paper());
+        let sum: u64 = b.rows().iter().map(|(_, v)| v).sum();
+        assert_eq!(sum, b.total());
+    }
+
+    #[test]
+    fn tracked_widths_all_f32() {
+        let w = Widths::tracked();
+        assert_eq!((w.act, w.logits, w.grad, w.lora), (4, 4, 4, 4));
+        assert_eq!(w.runtime_const, 0);
+    }
+
+    #[test]
+    fn adam_state_increases_total() {
+        let d = d05();
+        let sgd = peak(Method::Mesp, &d, OptimizerKind::Sgd, Widths::paper());
+        let adam = peak(Method::Mesp, &d,
+                        OptimizerKind::parse("adam").unwrap(), Widths::paper());
+        assert!(adam.total() > sgd.total());
+    }
+}

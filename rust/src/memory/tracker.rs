@@ -1,0 +1,235 @@
+//! Byte-accurate tensor-lifecycle tracker — the reproduction's substitute
+//! for the paper's `phys_footprint` measurement (DESIGN.md §2).
+//!
+//! Every tensor the coordinator holds across executable calls (weights,
+//! LoRA params, checkpoints, residuals, gradients, optimizer state, MeZO
+//! perturbations, transient call I/O) registers its logical bytes here via
+//! an RAII guard; dropping the tensor releases the bytes. Peak live bytes
+//! over a step is exactly the quantity the paper's argument is about:
+//! which tensors are alive at the worst moment of each strategy.
+
+use std::sync::{Arc, Mutex};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Monotonic sequence number of the alloc/free.
+    pub seq: u64,
+    /// Signed byte delta.
+    pub delta: i64,
+    /// Live bytes after applying the delta.
+    pub live: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    live: u64,
+    peak: u64,
+    seq: u64,
+    /// Per-tag live bytes, for breakdown reports.
+    tags: std::collections::BTreeMap<String, u64>,
+    /// Optional event timeline (enabled for memory-profile runs).
+    timeline: Option<Vec<Event>>,
+}
+
+/// Shared tracker handle. Cheap to clone; thread-safe (the data-pipeline
+/// thread registers batch buffers concurrently with the trainer).
+#[derive(Debug, Clone, Default)]
+pub struct MemoryTracker {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl MemoryTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enable event-timeline recording (off by default: it grows).
+    pub fn with_timeline() -> Self {
+        let t = Self::new();
+        t.inner.lock().unwrap().timeline = Some(Vec::new());
+        t
+    }
+
+    /// Register `bytes` under `tag`; bytes stay live until the returned
+    /// guard drops.
+    pub fn track(&self, tag: &str, bytes: u64) -> Guard {
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.live += bytes;
+            g.peak = g.peak.max(g.live);
+            g.seq += 1;
+            *g.tags.entry(tag.to_string()).or_insert(0) += bytes;
+            let ev = Event { seq: g.seq, delta: bytes as i64, live: g.live };
+            if let Some(tl) = g.timeline.as_mut() {
+                tl.push(ev);
+            }
+        }
+        Guard { tracker: self.clone(), tag: tag.to_string(), bytes }
+    }
+
+    fn release(&self, tag: &str, bytes: u64) {
+        let mut g = self.inner.lock().unwrap();
+        debug_assert!(g.live >= bytes, "release {bytes} > live {}", g.live);
+        g.live = g.live.saturating_sub(bytes);
+        g.seq += 1;
+        if let Some(t) = g.tags.get_mut(tag) {
+            *t = t.saturating_sub(bytes);
+        }
+        let ev = Event { seq: g.seq, delta: -(bytes as i64), live: g.live };
+        if let Some(tl) = g.timeline.as_mut() {
+            tl.push(ev);
+        }
+    }
+
+    pub fn live(&self) -> u64 {
+        self.inner.lock().unwrap().live
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.inner.lock().unwrap().peak
+    }
+
+    /// Reset the peak to the current live value (call at step boundaries
+    /// to measure per-step peaks).
+    pub fn reset_peak(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.peak = g.live;
+    }
+
+    /// Live bytes per tag (only non-zero tags).
+    pub fn breakdown(&self) -> Vec<(String, u64)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .tags
+            .iter()
+            .filter(|(_, v)| **v > 0)
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+
+    pub fn timeline(&self) -> Vec<Event> {
+        self.inner
+            .lock()
+            .unwrap()
+            .timeline
+            .clone()
+            .unwrap_or_default()
+    }
+}
+
+/// RAII guard: releases its bytes on drop.
+#[derive(Debug)]
+pub struct Guard {
+    tracker: MemoryTracker,
+    tag: String,
+    bytes: u64,
+}
+
+impl Guard {
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for Guard {
+    fn drop(&mut self) {
+        self.tracker.release(&self.tag, self.bytes);
+    }
+}
+
+/// A host tensor with its bytes registered in a tracker — the unit the
+/// engines store (checkpoints, residuals, grads…).
+#[derive(Debug)]
+pub struct Tracked<T> {
+    pub value: T,
+    _guard: Guard,
+}
+
+impl<T> Tracked<T> {
+    pub fn new(value: T, guard: Guard) -> Self {
+        Tracked { value, _guard: guard }
+    }
+}
+
+impl<T> std::ops::Deref for Tracked<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn live_and_peak() {
+        let t = MemoryTracker::new();
+        let a = t.track("a", 100);
+        assert_eq!(t.live(), 100);
+        {
+            let _b = t.track("b", 50);
+            assert_eq!(t.live(), 150);
+            assert_eq!(t.peak(), 150);
+        }
+        assert_eq!(t.live(), 100);
+        assert_eq!(t.peak(), 150, "peak survives frees");
+        drop(a);
+        assert_eq!(t.live(), 0);
+    }
+
+    #[test]
+    fn reset_peak_to_live() {
+        let t = MemoryTracker::new();
+        let _a = t.track("a", 10);
+        {
+            let _b = t.track("b", 90);
+        }
+        t.reset_peak();
+        assert_eq!(t.peak(), 10);
+    }
+
+    #[test]
+    fn breakdown_by_tag() {
+        let t = MemoryTracker::new();
+        let _a = t.track("ckpt", 100);
+        let _b = t.track("ckpt", 20);
+        let _c = t.track("grads", 7);
+        let bd = t.breakdown();
+        assert_eq!(bd, vec![("ckpt".into(), 120), ("grads".into(), 7)]);
+    }
+
+    #[test]
+    fn timeline_records_events() {
+        let t = MemoryTracker::with_timeline();
+        {
+            let _a = t.track("x", 5);
+        }
+        let tl = t.timeline();
+        assert_eq!(tl.len(), 2);
+        assert_eq!(tl[0].delta, 5);
+        assert_eq!(tl[1].delta, -5);
+        assert_eq!(tl[1].live, 0);
+    }
+
+    #[test]
+    fn threaded_consistency() {
+        let t = MemoryTracker::new();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let t = t.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        let _g = t.track("w", 3);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.live(), 0);
+        assert!(t.peak() >= 3);
+    }
+}

@@ -1,0 +1,78 @@
+//! Gradient-quality analysis (paper §5.6, Table 3): how well does an
+//! estimated gradient match the exact one? Metrics per layer: cosine
+//! similarity, sign agreement, relative error.
+
+use crate::util::stats;
+
+/// One layer's gradient-quality row (Table 3 format).
+#[derive(Debug, Clone)]
+pub struct GradQuality {
+    pub layer: usize,
+    pub cosine: f64,
+    pub sign_agree: f64,
+    pub rel_error: f64,
+}
+
+/// Compare estimated vs exact per-layer gradient vectors.
+pub fn grad_quality(estimate: &[Vec<f32>], exact: &[Vec<f32>]) -> Vec<GradQuality> {
+    assert_eq!(estimate.len(), exact.len(), "layer count mismatch");
+    estimate
+        .iter()
+        .zip(exact)
+        .enumerate()
+        .map(|(layer, (e, t))| GradQuality {
+            layer,
+            cosine: stats::cosine(e, t),
+            sign_agree: stats::sign_agreement(e, t),
+            rel_error: stats::rel_error(e, t),
+        })
+        .collect()
+}
+
+/// Average row across layers (the paper's "Avg" line).
+pub fn average(rows: &[GradQuality]) -> GradQuality {
+    let n = rows.len().max(1) as f64;
+    GradQuality {
+        layer: usize::MAX,
+        cosine: rows.iter().map(|r| r.cosine).sum::<f64>() / n,
+        sign_agree: rows.iter().map(|r| r.sign_agree).sum::<f64>() / n,
+        rel_error: rows.iter().map(|r| r.rel_error).sum::<f64>() / n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_gradients_are_perfect() {
+        let g = vec![vec![1.0f32, -2.0, 3.0]];
+        let q = grad_quality(&g, &g);
+        assert!((q[0].cosine - 1.0).abs() < 1e-9);
+        assert_eq!(q[0].sign_agree, 1.0);
+        assert_eq!(q[0].rel_error, 0.0);
+    }
+
+    #[test]
+    fn random_gradients_near_zero_cosine() {
+        use crate::util::Rng;
+        let mut r = Rng::new(0);
+        let a: Vec<f32> = r.normal_vec(10_000, 1.0);
+        let b: Vec<f32> = r.normal_vec(10_000, 1.0);
+        let q = grad_quality(&[a], &[b]);
+        assert!(q[0].cosine.abs() < 0.05, "cos {}", q[0].cosine);
+        assert!((q[0].sign_agree - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn average_row() {
+        let rows = vec![
+            GradQuality { layer: 0, cosine: 0.0, sign_agree: 0.4, rel_error: 1.0 },
+            GradQuality { layer: 1, cosine: 0.2, sign_agree: 0.6, rel_error: 3.0 },
+        ];
+        let avg = average(&rows);
+        assert!((avg.cosine - 0.1).abs() < 1e-12);
+        assert!((avg.sign_agree - 0.5).abs() < 1e-12);
+        assert!((avg.rel_error - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,138 @@
+//! Metrics: step logging (JSONL + console), gradient-quality analysis
+//! (paper Table 3), and markdown table rendering for the reproduce
+//! drivers.
+
+pub mod gradqual;
+pub mod tables;
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::train::StepStats;
+use crate::util::{stats, Json};
+
+pub use gradqual::{grad_quality, GradQuality};
+pub use tables::TableBuilder;
+
+/// Step-metrics sink: JSONL file and/or periodic console lines.
+pub struct MetricsLogger {
+    file: Option<std::fs::File>,
+    log_every: usize,
+    pub history: Vec<StepStats>,
+}
+
+impl MetricsLogger {
+    pub fn new(path: Option<&Path>, log_every: usize) -> anyhow::Result<Self> {
+        let file = match path {
+            Some(p) => {
+                if let Some(parent) = p.parent() {
+                    std::fs::create_dir_all(parent)?;
+                }
+                Some(std::fs::File::create(p)?)
+            }
+            None => None,
+        };
+        Ok(MetricsLogger { file, log_every: log_every.max(1), history: Vec::new() })
+    }
+
+    pub fn record(&mut self, method: &str, s: &StepStats) -> anyhow::Result<()> {
+        if let Some(f) = self.file.as_mut() {
+            let line = Json::obj(vec![
+                ("step", Json::num(s.step as f64)),
+                ("method", Json::str(method)),
+                ("loss", Json::num(s.loss)),
+                ("peak_bytes", Json::num(s.peak_bytes as f64)),
+                ("secs", Json::num(s.secs)),
+                ("live_after", Json::num(s.live_after as f64)),
+            ]);
+            writeln!(f, "{}", line.to_string())?;
+        }
+        if s.step % self.log_every == 0 || s.step == 1 {
+            eprintln!(
+                "[{method}] step {:>6}  loss {:.4}  peak {:>8} MB  {:.3}s",
+                s.step, s.loss,
+                stats::fmt_mb(s.peak_bytes),
+                s.secs
+            );
+        }
+        self.history.push(s.clone());
+        Ok(())
+    }
+
+    /// Summary over the recorded history (excluding warmup step 1).
+    pub fn summary(&self) -> RunSummary {
+        let h: Vec<&StepStats> =
+            self.history.iter().filter(|s| s.step > 1).collect();
+        let losses: Vec<f64> = h.iter().map(|s| s.loss).collect();
+        let times: Vec<f64> = h.iter().map(|s| s.secs).collect();
+        RunSummary {
+            steps: self.history.len(),
+            final_loss: self.history.last().map(|s| s.loss).unwrap_or(f64::NAN),
+            mean_step_secs: stats::mean(&times),
+            p50_step_secs: stats::percentile(&times, 50.0),
+            peak_bytes: self.history.iter().map(|s| s.peak_bytes).max()
+                .unwrap_or(0),
+            mean_loss_last_10: stats::mean(
+                &losses[losses.len().saturating_sub(10)..]),
+        }
+    }
+}
+
+/// Aggregate result of a training run.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub steps: usize,
+    pub final_loss: f64,
+    pub mean_step_secs: f64,
+    pub p50_step_secs: f64,
+    pub peak_bytes: u64,
+    pub mean_loss_last_10: f64,
+}
+
+impl RunSummary {
+    pub fn print(&self, method: &str) {
+        println!(
+            "{method}: {} steps, final loss {:.4} (last-10 mean {:.4}), \
+             peak {} MB, {:.3}s/step (p50 {:.3}s)",
+            self.steps, self.final_loss, self.mean_loss_last_10,
+            stats::fmt_mb(self.peak_bytes), self.mean_step_secs,
+            self.p50_step_secs
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(step: usize, loss: f64) -> StepStats {
+        StepStats { step, loss, peak_bytes: 1000 * step as u64,
+                    secs: 0.1, live_after: 10 }
+    }
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut m = MetricsLogger::new(None, 100).unwrap();
+        for i in 1..=5 {
+            m.record("MeSP", &stat(i, 5.0 - i as f64 * 0.5)).unwrap();
+        }
+        let s = m.summary();
+        assert_eq!(s.steps, 5);
+        assert!((s.final_loss - 2.5).abs() < 1e-9);
+        assert_eq!(s.peak_bytes, 5000);
+    }
+
+    #[test]
+    fn jsonl_file_output() {
+        let dir = std::env::temp_dir().join("mesp-test-metrics");
+        let path = dir.join("run.jsonl");
+        let mut m = MetricsLogger::new(Some(&path), 100).unwrap();
+        m.record("MeBP", &stat(1, 3.3)).unwrap();
+        drop(m);
+        let content = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(content.lines().next().unwrap()).unwrap();
+        assert_eq!(j.get("method").unwrap().as_str(), Some("MeBP"));
+        assert_eq!(j.get("loss").unwrap().as_f64(), Some(3.3));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,96 @@
+//! Markdown table rendering for the reproduce drivers — every paper table
+//! is emitted in the same row/column layout the paper uses, with a
+//! "paper" column next to our measured/modelled values where applicable.
+
+/// Simple aligned markdown table builder.
+#[derive(Debug, Default)]
+pub struct TableBuilder {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TableBuilder {
+    pub fn new(header: &[&str]) -> Self {
+        TableBuilder {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let pad = widths[i] - cells[i].chars().count();
+                s.push(' ');
+                s.push_str(&cells[i]);
+                s.push_str(&" ".repeat(pad + 1));
+                s.push('|');
+            }
+            s
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&"-".repeat(w + 2));
+            out.push('|');
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a percentage like the paper ("62%", "-4%").
+pub fn pct(v: f64) -> String {
+    format!("{}%", v.round() as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = TableBuilder::new(&["Method", "Mem (MB)"]);
+        t.row(vec!["MeBP".into(), "360.8".into()]);
+        t.row(vec!["MeSP".into(), "136.2".into()]);
+        let s = t.render();
+        assert!(s.contains("| MeBP   | 360.8    |"));
+        assert!(s.lines().count() == 4);
+        // all lines same width
+        let widths: Vec<usize> =
+            s.lines().map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_arity_panics() {
+        TableBuilder::new(&["a", "b"]).row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn pct_rounds() {
+        assert_eq!(pct(61.7), "62%");
+        assert_eq!(pct(-4.2), "-4%");
+    }
+}

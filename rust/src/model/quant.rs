@@ -1,0 +1,139 @@
+//! int4 group quantization — Rust mirror of `python/compile/quant.py`
+//! (symmetric int4, group size 64 along d_in, two nibbles per byte, even
+//! row in the low nibble). Used by the q4 artifact path and by the memory
+//! model's byte accounting for 4-bit base weights.
+
+pub const GROUP: usize = 64;
+
+/// Quantize an f32 row-major [din, dout] matrix. Returns (packed bytes
+/// [din/2, dout], scales [din/GROUP, dout]).
+pub fn quantize(w: &[f32], din: usize, dout: usize) -> (Vec<u8>, Vec<f32>) {
+    assert_eq!(w.len(), din * dout);
+    assert!(din % GROUP == 0 && din % 2 == 0, "din={din}");
+    let n_groups = din / GROUP;
+    let mut scales = vec![0f32; n_groups * dout];
+    for g in 0..n_groups {
+        for c in 0..dout {
+            let mut mx = 0f32;
+            for r in 0..GROUP {
+                mx = mx.max(w[(g * GROUP + r) * dout + c].abs());
+            }
+            scales[g * dout + c] = mx / 7.0;
+        }
+    }
+    let mut q = vec![0i8; din * dout];
+    for r in 0..din {
+        let g = r / GROUP;
+        for c in 0..dout {
+            let s = scales[g * dout + c];
+            let v = if s == 0.0 { 0.0 } else { w[r * dout + c] / s };
+            q[r * dout + c] = (v.round().clamp(-8.0, 7.0)) as i8;
+        }
+    }
+    let mut packed = vec![0u8; din / 2 * dout];
+    for r2 in 0..din / 2 {
+        for c in 0..dout {
+            let lo = (q[(2 * r2) * dout + c] as u8) & 0x0f;
+            let hi = (q[(2 * r2 + 1) * dout + c] as u8) & 0x0f;
+            packed[r2 * dout + c] = lo | (hi << 4);
+        }
+    }
+    (packed, scales)
+}
+
+/// Dequantize back to f32 (host-side reference; the q4 artifacts do this
+/// inside the HLO graph).
+pub fn dequantize(packed: &[u8], scales: &[f32], din: usize, dout: usize) -> Vec<f32> {
+    assert_eq!(packed.len(), din / 2 * dout);
+    let mut out = vec![0f32; din * dout];
+    for r2 in 0..din / 2 {
+        for c in 0..dout {
+            let b = packed[r2 * dout + c];
+            let lo = sign_extend(b & 0x0f);
+            let hi = sign_extend((b >> 4) & 0x0f);
+            let g = (2 * r2) / GROUP;
+            let s = scales[g * dout + c];
+            out[(2 * r2) * dout + c] = lo as f32 * s;
+            let g2 = (2 * r2 + 1) / GROUP;
+            out[(2 * r2 + 1) * dout + c] = hi as f32 * scales[g2 * dout + c];
+        }
+    }
+    out
+}
+
+#[inline]
+fn sign_extend(nibble: u8) -> i8 {
+    if nibble > 7 {
+        nibble as i8 - 16
+    } else {
+        nibble as i8
+    }
+}
+
+/// Bytes for a quantized [din, dout] matrix (packed + f32 scales) —
+/// memory-model input.
+pub fn quantized_bytes(din: usize, dout: usize) -> u64 {
+    (din as u64 / 2) * dout as u64 + (din as u64 / GROUP as u64) * dout as u64 * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_error_within_half_step() {
+        let (din, dout) = (128, 16);
+        let mut rng = Rng::new(1);
+        let w = rng.normal_vec(din * dout, 0.1);
+        let (packed, scales) = quantize(&w, din, dout);
+        let w2 = dequantize(&packed, &scales, din, dout);
+        for r in 0..din {
+            for c in 0..dout {
+                let s = scales[(r / GROUP) * dout + c];
+                let err = (w2[r * dout + c] - w[r * dout + c]).abs();
+                assert!(err <= s / 2.0 + 1e-7, "err {err} > step/2 {}", s / 2.0);
+            }
+        }
+    }
+
+    #[test]
+    fn zeros_survive() {
+        let (packed, scales) = quantize(&vec![0.0; 128 * 4], 128, 4);
+        let w2 = dequantize(&packed, &scales, 128, 4);
+        assert!(w2.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn sign_extension() {
+        assert_eq!(sign_extend(0x0f), -1);
+        assert_eq!(sign_extend(0x08), -8);
+        assert_eq!(sign_extend(0x07), 7);
+        assert_eq!(sign_extend(0), 0);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        // 0.5 B/param packed + scale overhead
+        let b = quantized_bytes(896, 896);
+        let params = 896 * 896;
+        assert!(b > params as u64 / 2);
+        assert!(b < params as u64 * 6 / 10);
+    }
+
+    #[test]
+    fn matches_python_scheme_on_known_case() {
+        // one group, values exactly on the grid: w = k * scale, max=7*s
+        let s = 0.02f32;
+        let mut w = vec![0f32; GROUP * 1];
+        for (i, v) in w.iter_mut().enumerate() {
+            *v = ((i % 16) as f32 - 8.0) * s; // values in [-8s, 7s]
+        }
+        let (packed, scales) = quantize(&w, GROUP, 1);
+        assert!((scales[0] - 8.0 * s / 7.0).abs() < 1e-7);
+        let w2 = dequantize(&packed, &scales, GROUP, 1);
+        for (a, b) in w.iter().zip(&w2) {
+            assert!((a - b).abs() <= scales[0] / 2.0 + 1e-7);
+        }
+    }
+}

@@ -1,0 +1,356 @@
+//! Reproduction drivers: one function per paper table/figure (DESIGN.md
+//! §6). Memory tables evaluate the analytical model at the paper's Qwen2.5
+//! dims; behavioural tables (3, 5-timing, Fig 2) run the real engines on
+//! compiled configs. Every driver prints paper-vs-ours side by side.
+
+pub mod paper_data;
+
+use crate::config::{presets, Method, TrainConfig};
+use crate::coordinator::{sweep_methods, TrainSession};
+use crate::memory::model as memmodel;
+use crate::metrics::tables::{pct, TableBuilder};
+use crate::metrics::{gradqual, grad_quality};
+use crate::util::stats::fmt_mb;
+
+use paper_data::{RANK_SWEEP, SEQ_SWEEP};
+
+fn model_mb(method: Method, dims: &crate::config::ModelDims) -> f64 {
+    memmodel::peak_bytes(method, dims) as f64 / (1024.0 * 1024.0)
+}
+
+const METHODS: [Method; 3] = [Method::Mebp, Method::Mezo, Method::Mesp];
+
+/// Table 1: memory and (measured) time per method × model size, seq 256.
+/// Memory comes from the analytical model at Qwen dims; step-time ratios
+/// are measured on the `small` compiled config (`steps` real steps each)
+/// and reported next to the paper's on-device seconds.
+pub fn table1(steps: usize) -> anyhow::Result<String> {
+    let mut out = String::from("## Table 1 — memory & time, seq 256, r8\n\n");
+    // measured step-time ratios on the real engines
+    let base = TrainConfig { config: "small".into(), log_every: usize::MAX,
+                             ..Default::default() };
+    let runs = sweep_methods(&base, &METHODS, steps)?;
+    let mebp_t = runs.iter().find(|(m, ..)| *m == Method::Mebp)
+        .map(|(_, s, _)| s.mean_step_secs).unwrap_or(1.0);
+
+    let mut t = TableBuilder::new(&[
+        "Model", "Method", "Mem MB (paper)", "Mem MB (model)",
+        "Red. (paper)", "Red. (model)", "time ratio vs MeBP (paper)",
+        "time ratio (measured@small)",
+    ]);
+    for (name, seq) in [("0.5B", 256), ("1.5B", 256), ("3B", 256)] {
+        let dims = presets::by_name(name, seq, 8)?;
+        let mebp_model = model_mb(Method::Mebp, &dims);
+        for m in METHODS {
+            let paper = paper_data::TABLE1
+                .iter()
+                .find(|(n, meth, ..)| *n == name && *meth == m.name())
+                .unwrap();
+            let ours = model_mb(m, &dims);
+            let paper_mebp = paper_data::TABLE1
+                .iter()
+                .find(|(n, meth, ..)| *n == name && *meth == "MeBP")
+                .unwrap();
+            let run = runs.iter().find(|(mm, ..)| *mm == m).unwrap();
+            t.row(vec![
+                name.into(),
+                m.name().into(),
+                format!("{:.1}", paper.2),
+                format!("{ours:.1}"),
+                pct(100.0 * (1.0 - paper.2 / paper_mebp.2)),
+                pct(100.0 * (1.0 - ours / mebp_model)),
+                format!("{:.2}", paper.3 / paper_mebp.3),
+                format!("{:.2}", run.1.mean_step_secs / mebp_t),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    Ok(out)
+}
+
+/// Seq-sweep tables (2 on 0.5B, 6 on 1.5B, 7 on 3B).
+pub fn seq_sweep_table(
+    n: usize,
+    model: &str,
+    paper: &[(&str, [f64; 4])],
+) -> anyhow::Result<String> {
+    let mut out = format!(
+        "## Table {n} — peak memory (MB) vs sequence length, {model}, r8\n\n");
+    let mut t = TableBuilder::new(&[
+        "Method", "src", "128", "256", "512", "1024",
+    ]);
+    for m in METHODS {
+        let prow = paper.iter().find(|(pm, _)| *pm == m.name()).unwrap();
+        t.row(vec![
+            m.name().into(), "paper".into(),
+            format!("{:.1}", prow.1[0]), format!("{:.1}", prow.1[1]),
+            format!("{:.1}", prow.1[2]), format!("{:.1}", prow.1[3]),
+        ]);
+        let mut cells = vec![m.name().to_string(), "model".into()];
+        for seq in SEQ_SWEEP {
+            let dims = presets::by_name(model, seq, 8)?;
+            cells.push(format!("{:.1}", model_mb(m, &dims)));
+        }
+        t.row(cells);
+    }
+    // reduction rows
+    for m in [Method::Mezo, Method::Mesp] {
+        let mut cells = vec![format!("{} red.", m.name()), "model".into()];
+        for seq in SEQ_SWEEP {
+            let dims = presets::by_name(model, seq, 8)?;
+            cells.push(pct(memmodel::reduction_vs_mebp(m, &dims)));
+        }
+        t.row(cells);
+    }
+    out.push_str(&t.render());
+    Ok(out)
+}
+
+/// Table 3: MeZO gradient quality vs exact gradients — real run on a
+/// compiled config (`small` by default).
+pub fn table3(config: &str) -> anyhow::Result<String> {
+    let mut out = format!(
+        "## Table 3 — MeZO gradient quality vs exact (config {config})\n\n");
+    let base = TrainConfig { config: config.into(), log_every: usize::MAX,
+                             ..Default::default() };
+    // exact gradients from MeSP (== MeBP, see gradcheck test)
+    let mut cfg_e = base.clone();
+    cfg_e.method = Method::Mesp;
+    let mut exact_s = TrainSession::new(cfg_e)?;
+    let (batch, _g) = exact_s.loader.next();
+    let exact = exact_s.engine.gradients(&batch)?;
+
+    let mut cfg_z = base.clone();
+    cfg_z.method = Method::Mezo;
+    let mut mezo_s = TrainSession::new(cfg_z)?;
+    let estimate = mezo_s.engine.gradients(&batch)?;
+
+    let rows = grad_quality(&estimate, &exact);
+    let mut t = TableBuilder::new(&[
+        "Layer", "Cosine", "Sign agree", "Rel. error",
+        "paper cosine≈", "paper sign≈",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.layer.to_string(),
+            format!("{:.4}", r.cosine),
+            format!("{:.1}%", 100.0 * r.sign_agree),
+            format!("{:.1}", r.rel_error),
+            "0.001".into(),
+            "48.4%".into(),
+        ]);
+    }
+    let avg = gradqual::average(&rows);
+    t.row(vec![
+        "Avg".into(),
+        format!("{:.4}", avg.cosine),
+        format!("{:.1}%", 100.0 * avg.sign_agree),
+        format!("{:.1}", avg.rel_error),
+        "0.001".into(),
+        "48.4%".into(),
+    ]);
+    out.push_str(&t.render());
+    Ok(out)
+}
+
+/// Rank-sweep tables (4 on 0.5B, 9 on 1.5B, 10 on 3B).
+pub fn rank_sweep_table(
+    n: usize,
+    model: &str,
+    paper: &[(&str, [f64; 4])],
+) -> anyhow::Result<String> {
+    let mut out = format!(
+        "## Table {n} — peak memory (MB) vs LoRA rank, {model}, seq 256\n\n");
+    let mut t = TableBuilder::new(&[
+        "Method", "src", "r=4", "r=8", "r=16", "r=32",
+    ]);
+    for m in METHODS {
+        let prow = paper.iter().find(|(pm, _)| *pm == m.name()).unwrap();
+        t.row(vec![
+            m.name().into(), "paper".into(),
+            format!("{:.1}", prow.1[0]), format!("{:.1}", prow.1[1]),
+            format!("{:.1}", prow.1[2]), format!("{:.1}", prow.1[3]),
+        ]);
+        let mut cells = vec![m.name().to_string(), "model".into()];
+        for r in RANK_SWEEP {
+            let dims = presets::by_name(model, 256, r)?;
+            cells.push(format!("{:.1}", model_mb(m, &dims)));
+        }
+        t.row(cells);
+    }
+    for m in [Method::Mezo, Method::Mesp] {
+        let mut cells = vec![format!("{} red.", m.name()), "model".into()];
+        for r in RANK_SWEEP {
+            let dims = presets::by_name(model, 256, r)?;
+            cells.push(pct(memmodel::reduction_vs_mebp(m, &dims)));
+        }
+        t.row(cells);
+    }
+    out.push_str(&t.render());
+    Ok(out)
+}
+
+/// Table 5: store-h vs recompute-h — model memory at 3B dims + measured
+/// time/memory of the real engines on `small`.
+pub fn table5(steps: usize) -> anyhow::Result<String> {
+    let mut out = String::from("## Table 5 — h strategy ablation\n\n");
+    let dims = presets::qwen25_3b(256, 8);
+    let base = TrainConfig { config: "small".into(), log_every: usize::MAX,
+                             ..Default::default() };
+    let runs = sweep_methods(
+        &base, &[Method::Mebp, Method::StoreH, Method::Mesp], steps)?;
+    let mebp_t = runs[0].1.mean_step_secs;
+    let mebp_mem = runs[0].1.peak_bytes as f64;
+
+    let mut t = TableBuilder::new(&[
+        "Strategy", "Mem MB (paper@3B)", "Mem MB (model@3B)",
+        "mem vs MeBP (measured@small)", "time vs MeBP (paper)",
+        "time vs MeBP (measured@small)",
+    ]);
+    for ((method, summary, _), paper) in
+        runs.iter().zip(paper_data::TABLE5)
+    {
+        let model_mem = model_mb(*method, &dims);
+        t.row(vec![
+            paper.0.into(),
+            format!("{:.1}", paper.1),
+            format!("{model_mem:.1}"),
+            format!("{:.2}x", summary.peak_bytes as f64 / mebp_mem),
+            format!("{:.2}x", paper.2 / paper_data::TABLE5[0].2),
+            format!("{:.2}x", summary.mean_step_secs / mebp_t),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str("\npaper: recompute-h saves memory vs store-h at a small \
+                  time cost; same ordering must hold in the measured column.\n");
+    Ok(out)
+}
+
+/// Figure 2 / Table 11: loss curves for the three methods with identical
+/// seeds. `steps` real steps on `config`; MeSP and MeBP must match
+/// step-for-step (exact-gradient equivalence).
+pub fn fig2(config: &str, steps: usize) -> anyhow::Result<String> {
+    let mut out = format!(
+        "## Figure 2 / Table 11 — training loss, config {config}, \
+         {steps} steps, identical seeds\n\n");
+    // lr scaled up so the small config shows the convergence separation
+    // within a few hundred steps (the paper runs 100K steps at 1e-4; the
+    // relative behaviour — MeSP ≡ MeBP exactly, MeZO worse — is lr-
+    // invariant for exact methods and only *helped* for MeZO by more
+    // steps, so a faster schedule is the conservative choice).
+    let base = TrainConfig { config: config.into(),
+                             lr: 3e-3,
+                             log_every: (steps / 10).max(1),
+                             ..Default::default() };
+    let runs = sweep_methods(&base, &METHODS, steps)?;
+    let interval = (steps / 10).max(1);
+    let mut t = TableBuilder::new(&["Step", "MeBP", "MeSP", "MeZO"]);
+    let get = |m: Method| -> &Vec<f64> {
+        &runs.iter().find(|(mm, ..)| *mm == m).unwrap().2
+    };
+    let (mebp, mesp, mezo) = (get(Method::Mebp), get(Method::Mesp),
+                              get(Method::Mezo));
+    for i in (0..steps).step_by(interval) {
+        t.row(vec![
+            (i + 1).to_string(),
+            format!("{:.4}", mebp[i]),
+            format!("{:.4}", mesp[i]),
+            format!("{:.4}", mezo[i]),
+        ]);
+    }
+    out.push_str(&t.render());
+    let max_diff = mebp
+        .iter()
+        .zip(mesp)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    out.push_str(&format!(
+        "\nmax |MeBP − MeSP| loss difference: {max_diff:.2e} \
+         (paper: identical values — mathematical equivalence)\n"));
+    out.push_str(&format!(
+        "final losses: MeBP {:.4}, MeSP {:.4}, MeZO {:.4} \
+         (paper: MeZO converges ~22% higher)\n",
+        mebp.last().unwrap(), mesp.last().unwrap(), mezo.last().unwrap()));
+    Ok(out)
+}
+
+/// Table 8: the reduction summary grid (model sizes × seq lens).
+pub fn table8() -> anyhow::Result<String> {
+    let mut out = String::from(
+        "## Table 8 — memory reduction vs MeBP, all configurations\n\n");
+    let mut t = TableBuilder::new(&[
+        "Model", "Seq", "MeZO red. (model)", "MeSP red. (model)",
+    ]);
+    let (mut sum_z, mut sum_s, mut n) = (0.0, 0.0, 0);
+    for model in ["0.5b", "1.5b", "3b"] {
+        for seq in SEQ_SWEEP {
+            let dims = presets::by_name(model, seq, 8)?;
+            let rz = memmodel::reduction_vs_mebp(Method::Mezo, &dims);
+            let rs = memmodel::reduction_vs_mebp(Method::Mesp, &dims);
+            sum_z += rz;
+            sum_s += rs;
+            n += 1;
+            t.row(vec![
+                model.to_uppercase(), seq.to_string(), pct(rz), pct(rs),
+            ]);
+        }
+    }
+    t.row(vec![
+        "Average".into(), "".into(),
+        pct(sum_z / n as f64), pct(sum_s / n as f64),
+    ]);
+    out.push_str(&t.render());
+    out.push_str("\npaper averages: MeZO 32%, MeSP 50%\n");
+    Ok(out)
+}
+
+/// Run one table by number (2/4/6/7/9/10 take no runtime work).
+pub fn run_table(n: usize, steps: usize) -> anyhow::Result<String> {
+    match n {
+        1 => table1(steps),
+        2 => seq_sweep_table(2, "0.5b", paper_data::TABLE2),
+        3 => table3("small"),
+        4 => rank_sweep_table(4, "0.5b", paper_data::TABLE4),
+        5 => table5(steps),
+        6 => seq_sweep_table(6, "1.5b", paper_data::TABLE6),
+        7 => seq_sweep_table(7, "3b", paper_data::TABLE7),
+        8 => table8(),
+        9 => rank_sweep_table(9, "1.5b", paper_data::TABLE9),
+        10 => rank_sweep_table(10, "3b", paper_data::TABLE10),
+        11 => fig2("small", steps.max(100)),
+        _ => anyhow::bail!("no table {n} in the paper (1-11; 11 = Fig 2)"),
+    }
+}
+
+/// Memory breakdown report for one method at Qwen dims (debugging aid +
+/// DESIGN.md §7 documentation).
+pub fn breakdown(model: &str, seq: usize, rank: usize) -> anyhow::Result<String> {
+    let dims = presets::by_name(model, seq, rank)?;
+    let mut out = format!("## Peak-memory breakdown, {} (paper widths)\n\n",
+                          dims.name);
+    let mut t = TableBuilder::new(&[
+        "Component", "MeBP", "MeZO", "MeSP", "Store-h",
+    ]);
+    let bds: Vec<_> = [Method::Mebp, Method::Mezo, Method::Mesp, Method::StoreH]
+        .iter()
+        .map(|m| memmodel::peak(*m, &dims, crate::config::OptimizerKind::Sgd,
+                                memmodel::Widths::paper()))
+        .collect();
+    for i in 0..bds[0].rows().len() {
+        let name = bds[0].rows()[i].0;
+        t.row(vec![
+            name.into(),
+            fmt_mb(bds[0].rows()[i].1),
+            fmt_mb(bds[1].rows()[i].1),
+            fmt_mb(bds[2].rows()[i].1),
+            fmt_mb(bds[3].rows()[i].1),
+        ]);
+    }
+    t.row(vec![
+        "TOTAL".into(),
+        fmt_mb(bds[0].total()), fmt_mb(bds[1].total()),
+        fmt_mb(bds[2].total()), fmt_mb(bds[3].total()),
+    ]);
+    out.push_str(&t.render());
+    Ok(out)
+}

@@ -1,0 +1,93 @@
+//! The paper's published numbers, transcribed from the tables — printed
+//! next to our modelled/measured values so every reproduce driver shows
+//! paper-vs-ours in one view (EXPERIMENTS.md is generated from these).
+
+/// Table 1: (model, method, mem_mb, time_s) at seq 256, r8.
+pub const TABLE1: &[(&str, &str, f64, f64)] = &[
+    ("0.5B", "MeBP", 360.8, 0.68),
+    ("0.5B", "MeZO", 243.0, 0.51),
+    ("0.5B", "MeSP", 136.2, 0.86),
+    ("1.5B", "MeBP", 516.2, 1.66),
+    ("1.5B", "MeZO", 376.0, 1.21),
+    ("1.5B", "MeSP", 262.6, 2.17),
+    ("3B", "MeBP", 637.6, 3.21),
+    ("3B", "MeZO", 479.2, 2.24),
+    ("3B", "MeSP", 368.4, 4.09),
+];
+
+/// Table 2: peak MB vs seq on 0.5B: (method, [128, 256, 512, 1024]).
+pub const TABLE2: &[(&str, [f64; 4])] = &[
+    ("MeBP", [252.7, 360.8, 582.4, 1050.3]),
+    ("MeZO", [199.0, 243.0, 336.0, 524.0]),
+    ("MeSP", [110.7, 136.2, 245.8, 513.6]),
+];
+
+/// Table 3: MeZO gradient quality on 0.5B: (layer, cosine, sign%, rel err).
+pub const TABLE3: &[(usize, f64, f64, f64)] = &[
+    (0, 0.003, 48.4, 171.0),
+    (5, 0.000, 48.4, 2155.0),
+    (10, -0.000, 48.4, 1906.0),
+    (15, -0.001, 48.4, 2351.0),
+    (20, -0.000, 48.4, 3590.0),
+    (23, 0.001, 48.5, 1692.0),
+];
+
+/// Table 4: peak MB vs rank on 0.5B seq 256: (method, [r4, r8, r16, r32]).
+pub const TABLE4: &[(&str, [f64; 4])] = &[
+    ("MeBP", [355.2, 360.8, 372.4, 395.8]),
+    ("MeZO", [215.0, 243.0, 299.0, 411.0]),
+    ("MeSP", [132.8, 136.2, 143.5, 158.2]),
+];
+
+/// Table 5: h-strategy ablation on 3B seq 256: (strategy, mem MB, time s).
+pub const TABLE5: &[(&str, f64, f64)] = &[
+    ("MeBP (baseline)", 637.6, 3.21),
+    ("Store h", 398.5, 3.85),
+    ("Recompute h (ours)", 368.4, 4.09),
+];
+
+/// Table 6: seq ablation 1.5B.
+pub const TABLE6: &[(&str, [f64; 4])] = &[
+    ("MeBP", [325.4, 516.2, 845.6, 1538.2]),
+    ("MeZO", [268.5, 376.0, 548.4, 878.6]),
+    ("MeSP", [165.2, 262.6, 432.8, 798.5]),
+];
+
+/// Table 7: seq ablation 3B.
+pub const TABLE7: &[(&str, [f64; 4])] = &[
+    ("MeBP", [425.8, 637.6, 930.7, 1685.2]),
+    ("MeZO", [362.4, 479.2, 590.4, 925.8]),
+    ("MeSP", [245.6, 368.4, 505.3, 925.8]),
+];
+
+/// Table 9: rank ablation 1.5B.
+pub const TABLE9: &[(&str, [f64; 4])] = &[
+    ("MeBP", [508.5, 516.2, 532.4, 564.8]),
+    ("MeZO", [365.2, 376.0, 398.5, 445.2]),
+    ("MeSP", [255.8, 262.6, 275.8, 302.5]),
+];
+
+/// Table 10: rank ablation 3B.
+pub const TABLE10: &[(&str, [f64; 4])] = &[
+    ("MeBP", [628.4, 637.6, 658.2, 698.5]),
+    ("MeZO", [475.5, 479.2, 492.8, 525.6]),
+    ("MeSP", [358.2, 368.4, 385.6, 420.8]),
+];
+
+/// Table 11 / Fig 2: loss at 100-step intervals (step, mebp, mesp, mezo).
+pub const TABLE11: &[(usize, f64, f64, f64)] = &[
+    (0, 3.348, 3.348, 3.384),
+    (100, 3.345, 3.345, 3.392),
+    (200, 4.312, 4.312, 3.394),
+    (300, 3.911, 3.911, 3.394),
+    (400, 3.717, 3.717, 3.400),
+    (500, 3.495, 3.495, 3.403),
+    (600, 3.506, 3.506, 3.414),
+    (700, 3.498, 3.498, 3.423),
+    (800, 3.380, 3.380, 3.431),
+    (900, 3.352, 3.352, 3.442),
+    (1000, 3.332, 3.332, 3.451),
+];
+
+pub const SEQ_SWEEP: [usize; 4] = [128, 256, 512, 1024];
+pub const RANK_SWEEP: [usize; 4] = [4, 8, 16, 32];

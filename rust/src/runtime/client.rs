@@ -1,0 +1,330 @@
+//! PJRT runtime: loads HLO-text artifacts, compiles them once on the CPU
+//! client, and executes them with shape/dtype-checked host tensors.
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO *text* is the interchange
+//! format (the crate's XLA 0.5.1 rejects jax≥0.5 serialized protos). All
+//! artifacts return a tuple; outputs are read back via literal decompose —
+//! on the CPU platform "device" memory is host memory, so this is memcpy,
+//! not PCIe. Executables are compiled lazily and cached for the process
+//! lifetime; every call's transient I/O bytes are registered with the
+//! memory tracker so step peaks include call overhead.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::memory::MemoryTracker;
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::tensor::{Data, HostTensor};
+
+/// Cumulative per-artifact execution statistics (perf §L3).
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+/// An argument to `execute_mixed`: either a host tensor (uploaded for the
+/// call) or a persistent device buffer (uploaded once — frozen weights,
+/// embeddings). Keeping weights device-resident removed the dominant
+/// memcpy cost at 100M scale (EXPERIMENTS.md §Perf: 19.5s → see log).
+pub enum Arg<'a> {
+    Host(&'a HostTensor),
+    Device(&'a xla::PjRtBuffer),
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: Mutex<HashMap<String, ExecStats>>,
+    pub tracker: MemoryTracker,
+}
+
+impl Runtime {
+    /// Load a compiled config from `artifacts_dir/<config_name>/`.
+    pub fn load(artifacts_dir: &Path, config: &str, tracker: MemoryTracker)
+        -> anyhow::Result<Runtime>
+    {
+        let dir = artifacts_dir.join(config);
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
+            tracker,
+        })
+    }
+
+    pub fn dims(&self) -> &crate::config::ModelDims {
+        &self.manifest.dims
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    fn executable(&self, name: &str) -> anyhow::Result<()> {
+        let mut exes = self.exes.lock().unwrap();
+        if exes.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of artifacts (so step timing excludes compiles).
+    pub fn warmup(&self, names: &[&str]) -> anyhow::Result<()> {
+        for n in names {
+            if self.manifest.has_artifact(n) {
+                self.executable(n)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn check_args(spec: &ArtifactSpec, args: &[&HostTensor]) -> anyhow::Result<()> {
+        if spec.args.len() != args.len() {
+            anyhow::bail!(
+                "{}: expected {} args, got {}",
+                spec.name, spec.args.len(), args.len()
+            );
+        }
+        for (a, t) in spec.args.iter().zip(args) {
+            if a.shape != t.shape {
+                anyhow::bail!(
+                    "{}: arg '{}' shape {:?} != expected {:?}",
+                    spec.name, a.name, t.shape, a.shape
+                );
+            }
+            if a.dtype != t.dtype() {
+                anyhow::bail!(
+                    "{}: arg '{}' dtype {:?} != expected {:?}",
+                    spec.name, a.name, t.dtype(), a.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn to_literal(t: &HostTensor) -> anyhow::Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
+        let lit = match &t.data {
+            Data::F32(v) => xla::Literal::vec1(v)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))?,
+            Data::I32(v) => xla::Literal::vec1(v)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))?,
+            Data::U8(v) => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::U8, &t.shape, v,
+            )
+            .map_err(|e| anyhow::anyhow!("u8 literal: {e:?}"))?,
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> anyhow::Result<HostTensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+        let ty = lit.ty().map_err(|e| anyhow::anyhow!("literal ty: {e:?}"))?;
+        Ok(match ty {
+            xla::ElementType::F32 => HostTensor::f32(
+                &dims,
+                lit.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))?,
+            ),
+            xla::ElementType::S32 => HostTensor::i32(
+                &dims,
+                lit.to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec i32: {e:?}"))?,
+            ),
+            xla::ElementType::U8 => HostTensor::u8(
+                &dims,
+                lit.to_vec::<u8>()
+                    .map_err(|e| anyhow::anyhow!("to_vec u8: {e:?}"))?,
+            ),
+            other => anyhow::bail!("unsupported output element type {other:?}"),
+        })
+    }
+
+    /// Upload a host tensor to a persistent device buffer (weights path).
+    /// On the CPU platform this is a one-time memcpy; buffers are reused
+    /// across every subsequent `execute_mixed` call.
+    pub fn upload(&self, t: &HostTensor) -> anyhow::Result<xla::PjRtBuffer> {
+        let buf = match &t.data {
+            Data::F32(v) => self
+                .client
+                .buffer_from_host_buffer::<f32>(v, &t.shape, None),
+            Data::I32(v) => self
+                .client
+                .buffer_from_host_buffer::<i32>(v, &t.shape, None),
+            // NOTE: not buffer_from_host_raw_bytes — the vendored crate
+            // passes an ElementType discriminant where the C API expects
+            // PrimitiveType, corrupting the buffer size for U8. The
+            // literal path round-trips correctly.
+            Data::U8(v) => {
+                let lit = xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::U8, &t.shape, v,
+                )
+                .map_err(|e| anyhow::anyhow!("u8 literal: {e:?}"))?;
+                self.client.buffer_from_host_literal(None, &lit)
+            }
+        }
+        .map_err(|e| anyhow::anyhow!("upload: {e:?}"))?;
+        Ok(buf)
+    }
+
+    /// Execute with a mix of host tensors (uploaded per call) and
+    /// persistent device buffers. Host args are shape/dtype-checked
+    /// against the manifest; device args are trusted (validated at upload).
+    pub fn execute_mixed(&self, name: &str, args: &[Arg])
+        -> anyhow::Result<Vec<HostTensor>>
+    {
+        let spec = self.manifest.artifact(name)?.clone();
+        anyhow::ensure!(spec.args.len() == args.len(),
+                        "{name}: expected {} args, got {}",
+                        spec.args.len(), args.len());
+        self.executable(name)?;
+
+        let mut in_bytes = 0u64;
+        for (a, arg) in spec.args.iter().zip(args) {
+            if let Arg::Host(t) = arg {
+                anyhow::ensure!(a.shape == t.shape && a.dtype == t.dtype(),
+                                "{name}: arg '{}' shape/dtype mismatch \
+                                 ({:?} vs {:?})", a.name, t.shape, a.shape);
+                in_bytes += t.bytes();
+            }
+        }
+        let _io_guard = self.tracker.track(&format!("exec:{name}"), in_bytes);
+
+        let start = Instant::now();
+        // upload transient host args; keep them alive for the call
+        let mut transients: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut order: Vec<usize> = Vec::with_capacity(args.len()); // map
+        for arg in args {
+            if let Arg::Host(t) = arg {
+                transients.push(self.upload(t)?);
+                order.push(transients.len() - 1);
+            } else {
+                order.push(usize::MAX);
+            }
+        }
+        let refs: Vec<&xla::PjRtBuffer> = args
+            .iter()
+            .zip(&order)
+            .map(|(a, o)| match a {
+                Arg::Host(_) => &transients[*o],
+                Arg::Device(b) => *b,
+            })
+            .collect();
+        let exes = self.exes.lock().unwrap();
+        let exe = exes.get(name).expect("compiled above");
+        let out = exe
+            .execute_b::<&xla::PjRtBuffer>(&refs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        drop(exes);
+        drop(refs);
+        drop(transients);
+
+        let mut tuple = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("readback {name}: {e:?}"))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("decompose {name}: {e:?}"))?;
+        let outputs: Vec<HostTensor> = parts
+            .iter()
+            .map(Self::from_literal)
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(outputs.len() == spec.outputs,
+                        "{name}: manifest promises {} outputs, got {}",
+                        spec.outputs, outputs.len());
+
+        let dt = start.elapsed().as_secs_f64();
+        let mut stats = self.stats.lock().unwrap();
+        let e = stats.entry(name.to_string()).or_default();
+        e.calls += 1;
+        e.total_secs += dt;
+        Ok(outputs)
+    }
+
+    /// Execute artifact `name` with positional `args`. Returns the
+    /// decomposed output tuple as host tensors, in artifact output order.
+    pub fn execute(&self, name: &str, args: &[&HostTensor])
+        -> anyhow::Result<Vec<HostTensor>>
+    {
+        let spec = self.manifest.artifact(name)?.clone();
+        Self::check_args(&spec, args)?;
+        self.executable(name)?;
+
+        // Transient call I/O is tracked for the duration of the call.
+        let in_bytes: u64 = args.iter().map(|t| t.bytes()).sum();
+        let _io_guard = self.tracker.track(&format!("exec:{name}"), in_bytes);
+
+        let start = Instant::now();
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| Self::to_literal(t))
+            .collect::<anyhow::Result<_>>()?;
+        let exes = self.exes.lock().unwrap();
+        let exe = exes.get(name).expect("compiled above");
+        let out = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        drop(exes);
+        drop(literals);
+
+        let mut tuple = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("readback {name}: {e:?}"))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("decompose {name}: {e:?}"))?;
+        let outputs: Vec<HostTensor> = parts
+            .iter()
+            .map(Self::from_literal)
+            .collect::<anyhow::Result<_>>()?;
+        if outputs.len() != spec.outputs {
+            anyhow::bail!(
+                "{name}: manifest promises {} outputs, got {}",
+                spec.outputs, outputs.len()
+            );
+        }
+
+        let dt = start.elapsed().as_secs_f64();
+        let mut stats = self.stats.lock().unwrap();
+        let e = stats.entry(name.to_string()).or_default();
+        e.calls += 1;
+        e.total_secs += dt;
+        Ok(outputs)
+    }
+
+    /// Snapshot of per-artifact execution stats.
+    pub fn exec_stats(&self) -> Vec<(String, ExecStats)> {
+        let mut v: Vec<_> = self
+            .stats
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        v.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
+        v
+    }
+}

@@ -1,0 +1,159 @@
+//! Artifact manifest: the ABI contract written by `python/compile/aot.py`
+//! (`artifacts/<config>/manifest.json`) — model dims, and for every HLO
+//! artifact its positional argument specs and output arity. The runtime
+//! validates every call against this before touching PJRT.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::ModelDims;
+use crate::tensor::DType;
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ArgSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub args: Vec<ArgSpec>,
+    pub outputs: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dims: ModelDims,
+    pub scale: f32,
+    pub param_count: usize,
+    pub lora_param_count: usize,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let j = Json::parse(&src)?;
+        let c = j.req("config")?;
+        let get = |k: &str| -> anyhow::Result<usize> {
+            c.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("config.{k} not a number"))
+        };
+        let dims = ModelDims {
+            name: c.req("name")?.as_str().unwrap_or_default().to_string(),
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            n_kv_heads: get("n_kv_heads")?,
+            head_dim: get("head_dim")?,
+            d_ff: get("d_ff")?,
+            seq: get("seq")?,
+            batch: get("batch")?,
+            rank: get("rank")?,
+            alpha: c.req("alpha")?.as_f64().unwrap_or(16.0) as f32,
+        };
+        let mut artifacts = Vec::new();
+        for (name, spec) in j
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("artifacts not an object"))?
+        {
+            let mut args = Vec::new();
+            for a in spec.req("args")?.as_arr().unwrap_or(&[]) {
+                args.push(ArgSpec {
+                    name: a.req("name")?.as_str().unwrap_or_default().into(),
+                    shape: a
+                        .req("shape")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|v| v.as_usize())
+                        .collect(),
+                    dtype: DType::parse(
+                        a.req("dtype")?.as_str().unwrap_or("f32"),
+                    )?,
+                });
+            }
+            artifacts.push(ArtifactSpec {
+                name: name.clone(),
+                file: dir.join(spec.req("file")?.as_str().unwrap_or_default()),
+                args,
+                outputs: spec.req("outputs")?.as_usize().unwrap_or(1),
+            });
+        }
+        Ok(Manifest {
+            dims,
+            scale: c.req("scale")?.as_f64().unwrap_or(2.0) as f32,
+            param_count: c.req("param_count")?.as_usize().unwrap_or(0),
+            lora_param_count: c
+                .req("lora_param_count")?
+                .as_usize()
+                .unwrap_or(0),
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "artifact '{name}' not in manifest (have: {})",
+                    self.artifacts
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts.iter().any(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/toy")
+    }
+
+    #[test]
+    fn loads_toy_manifest() {
+        let m = Manifest::load(&toy_dir()).unwrap();
+        assert_eq!(m.dims.d_model, 64);
+        assert_eq!(m.dims.n_layers, 2);
+        assert!(m.has_artifact("block_bwd_mesp"));
+        let bwd = m.artifact("block_bwd_mesp").unwrap();
+        assert_eq!(bwd.outputs, 15);
+        assert_eq!(bwd.args[0].name, "x");
+        assert_eq!(bwd.args[0].shape, vec![1, 32, 64]);
+        assert_eq!(bwd.args.len(), 2 + 9 + 14);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::load(&toy_dir()).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime layer: artifact manifests + executable cache + tracked
+//! execution. The Rust half of the AOT bridge (DESIGN.md §4); Python never
+//! runs after `make artifacts`.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{ExecStats, Runtime};
+pub use manifest::{ArgSpec, ArtifactSpec, Manifest};

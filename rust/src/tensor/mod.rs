@@ -1,0 +1,157 @@
+//! Host-side tensors: the interchange type between the coordinator and the
+//! PJRT runtime. Activations and parameters live here between executable
+//! calls; all heavy math happens inside the AOT-compiled artifacts, so
+//! this type only needs shape bookkeeping plus the small host-side ops the
+//! optimizer / MeZO / metrics require.
+
+use crate::util::Rng;
+
+/// Element type of a tensor. Mirrors the `dtype` strings in manifest.json.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> anyhow::Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            "u8" => Ok(DType::U8),
+            _ => anyhow::bail!("unknown dtype '{s}'"),
+        }
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+        }
+    }
+}
+
+/// Dense host tensor. Storage is always f32 or i32 vectors; u8 only
+/// appears in the quantized-weight path.
+#[derive(Debug, Clone)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} vs len {}", data.len());
+        HostTensor { shape: shape.to_vec(), data: Data::F32(data) }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape: shape.to_vec(), data: Data::I32(data) }
+    }
+
+    pub fn u8(shape: &[usize], data: Vec<u8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape: shape.to_vec(), data: Data::U8(data) }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostTensor::f32(shape, vec![0.0; shape.iter().product()])
+    }
+
+    /// Seeded N(0, std²) init.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        HostTensor::f32(shape, rng.normal_vec(shape.iter().product(), std))
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match &self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+            Data::U8(_) => DType::U8,
+        }
+    }
+
+    /// Logical size in bytes (what the memory tracker accounts).
+    pub fn bytes(&self) -> u64 {
+        (self.len() * self.dtype().size()) as u64
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            Data::F32(v) => v,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            Data::F32(v) => v,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            Data::I32(v) => v,
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+
+    /// First element as f64 — for scalar outputs (loss).
+    pub fn scalar(&self) -> f64 {
+        self.as_f32()[0] as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_len_bytes() {
+        let t = HostTensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.bytes(), 96);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(&[2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = HostTensor::randn(&[16], 1.0, &mut r1);
+        let b = HostTensor::randn(&[16], 1.0, &mut r2);
+        assert_eq!(a.as_f32(), b.as_f32());
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::parse("f32").unwrap().size(), 4);
+        assert_eq!(DType::parse("u8").unwrap().size(), 1);
+        assert!(DType::parse("f64").is_err());
+    }
+}

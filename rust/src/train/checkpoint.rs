@@ -1,0 +1,202 @@
+//! Checkpoint store: the block-input activations the forward phase keeps
+//! (the ONLY cross-block state MeSP retains — paper §4.3 / Appendix E.1).
+//!
+//! Supports an optional disk-spill mode: when live checkpoint bytes would
+//! exceed a budget, older checkpoints are written to a spill file and
+//! reloaded on demand during the backward sweep. This is the "memory cap"
+//! extension a real on-device runtime needs (the paper's unified-memory
+//! budget), exercised by tests and the spill ablation.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+
+use crate::memory::{Guard, MemoryTracker};
+use crate::tensor::HostTensor;
+
+enum Slot {
+    Ram { t: HostTensor, _guard: Guard },
+    Spilled { offset: u64, shape: Vec<usize>, len: usize },
+}
+
+pub struct CheckpointStore {
+    slots: BTreeMap<usize, Slot>,
+    tracker: MemoryTracker,
+    /// 0 = never spill.
+    budget: u64,
+    spill: Option<std::fs::File>,
+    spill_len: u64,
+    pub spill_count: u64,
+}
+
+impl CheckpointStore {
+    pub fn new(tracker: MemoryTracker, budget: u64) -> Self {
+        CheckpointStore {
+            slots: BTreeMap::new(),
+            tracker,
+            budget,
+            spill: None,
+            spill_len: 0,
+            spill_count: 0,
+        }
+    }
+
+    fn ram_bytes(&self) -> u64 {
+        self.slots
+            .values()
+            .map(|s| match s {
+                Slot::Ram { t, .. } => t.bytes(),
+                Slot::Spilled { .. } => 0,
+            })
+            .sum()
+    }
+
+    /// Store block `layer`'s checkpoint tensor.
+    pub fn store(&mut self, layer: usize, t: HostTensor) -> anyhow::Result<()> {
+        if self.budget > 0 && self.ram_bytes() + t.bytes() > self.budget {
+            self.spill_oldest()?;
+        }
+        let guard = self.tracker.track("ckpt:block", t.bytes());
+        self.slots.insert(layer, Slot::Ram { t, _guard: guard });
+        Ok(())
+    }
+
+    fn spill_file(&mut self) -> anyhow::Result<&mut std::fs::File> {
+        if self.spill.is_none() {
+            let path = std::env::temp_dir()
+                .join(format!("mesp-spill-{}.bin", std::process::id()));
+            let f = std::fs::OpenOptions::new()
+                .create(true)
+                .truncate(true)
+                .read(true)
+                .write(true)
+                .open(&path)?;
+            // unlink immediately; the fd keeps it alive
+            let _ = std::fs::remove_file(&path);
+            self.spill = Some(f);
+        }
+        Ok(self.spill.as_mut().unwrap())
+    }
+
+    /// Move the lowest-layer RAM checkpoint to disk (lowest = consumed
+    /// last during the reverse-order backward, so it is the best victim).
+    fn spill_oldest(&mut self) -> anyhow::Result<()> {
+        let victim = self.slots.iter().find_map(|(k, v)| {
+            matches!(v, Slot::Ram { .. }).then_some(*k)
+        });
+        let Some(layer) = victim else { return Ok(()) };
+        let Slot::Ram { t, _guard } = self.slots.remove(&layer).unwrap() else {
+            unreachable!()
+        };
+        let offset = self.spill_len;
+        let data = t.as_f32();
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        let f = self.spill_file()?;
+        f.seek(SeekFrom::Start(offset))?;
+        f.write_all(bytes)?;
+        self.spill_len += bytes.len() as u64;
+        self.spill_count += 1;
+        self.slots.insert(
+            layer,
+            Slot::Spilled { offset, shape: t.shape.clone(), len: data.len() },
+        );
+        Ok(())
+    }
+
+    /// Retrieve and REMOVE block `layer`'s checkpoint (the backward sweep
+    /// consumes each checkpoint exactly once, freeing it immediately —
+    /// the paper's lifecycle discipline).
+    pub fn take(&mut self, layer: usize) -> anyhow::Result<HostTensor> {
+        match self.slots.remove(&layer) {
+            Some(Slot::Ram { t, _guard }) => Ok(t),
+            Some(Slot::Spilled { offset, shape, len }) => {
+                let f = self
+                    .spill
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("spill file missing"))?;
+                let mut buf = vec![0u8; len * 4];
+                f.seek(SeekFrom::Start(offset))?;
+                f.read_exact(&mut buf)?;
+                let mut data = vec![0f32; len];
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        buf.as_ptr(),
+                        data.as_mut_ptr() as *mut u8,
+                        buf.len(),
+                    );
+                }
+                Ok(HostTensor::f32(&shape, data))
+            }
+            None => anyhow::bail!("checkpoint for layer {layer} not stored"),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Drop everything (end of step).
+    pub fn clear(&mut self) {
+        self.slots.clear();
+        self.spill_len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor(val: f32, n: usize) -> HostTensor {
+        HostTensor::f32(&[n], vec![val; n])
+    }
+
+    #[test]
+    fn store_take_roundtrip() {
+        let tr = MemoryTracker::new();
+        let mut s = CheckpointStore::new(tr.clone(), 0);
+        for l in 0..4 {
+            s.store(l, tensor(l as f32, 8)).unwrap();
+        }
+        assert_eq!(tr.live(), 4 * 32);
+        // reverse-order consumption
+        for l in (0..4).rev() {
+            let t = s.take(l).unwrap();
+            assert_eq!(t.as_f32()[0], l as f32);
+        }
+        assert_eq!(tr.live(), 0);
+        assert!(s.take(0).is_err(), "double-take must fail");
+    }
+
+    #[test]
+    fn spill_and_reload() {
+        let tr = MemoryTracker::new();
+        // budget of ~2 tensors of 1024 f32
+        let mut s = CheckpointStore::new(tr.clone(), 2 * 4096 + 100);
+        for l in 0..5 {
+            s.store(l, tensor(l as f32 + 0.5, 1024)).unwrap();
+        }
+        assert!(s.spill_count >= 3, "spilled {} times", s.spill_count);
+        assert!(tr.live() <= 3 * 4096, "ram bounded: {}", tr.live());
+        for l in (0..5).rev() {
+            let t = s.take(l).unwrap();
+            assert_eq!(t.as_f32()[17], l as f32 + 0.5, "layer {l} intact");
+            assert_eq!(t.len(), 1024);
+        }
+    }
+
+    #[test]
+    fn clear_releases_everything() {
+        let tr = MemoryTracker::new();
+        let mut s = CheckpointStore::new(tr.clone(), 0);
+        s.store(0, tensor(1.0, 64)).unwrap();
+        s.store(1, tensor(2.0, 64)).unwrap();
+        s.clear();
+        assert_eq!(tr.live(), 0);
+        assert!(s.is_empty());
+    }
+}

@@ -1,0 +1,202 @@
+//! Shared engine plumbing: the per-block forward sweep, loss-head calls,
+//! and immediate optimizer application — the parts of the schedule that
+//! are identical across methods (paper §4.3's Forward Phase).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::{OptimizerKind, PROJS};
+use crate::data::Batch;
+use crate::memory::MemoryTracker;
+use crate::model::ModelState;
+use crate::runtime::Runtime;
+use crate::tensor::HostTensor;
+
+use super::{CheckpointStore, Optimizer, StepStats};
+
+use crate::memory::Guard;
+use crate::runtime::client::Arg;
+
+/// Everything an engine needs: runtime, model, optimizer, tracker.
+///
+/// Frozen weights and the embedding are uploaded ONCE to persistent
+/// device buffers at construction and their host copies freed — the
+/// paper-equivalent of keeping base weights resident while only LoRA
+/// params move (perf §L3: this removed the dominant per-call memcpy at
+/// 100M scale). LoRA params stay host-side (the optimizer updates them
+/// after every block) and ride along each call as transient uploads.
+pub struct EngineCtx {
+    pub rt: Arc<Runtime>,
+    pub model: ModelState,
+    pub opt: Optimizer,
+    pub tracker: MemoryTracker,
+    pub step: usize,
+    /// Checkpoint-store disk-spill budget in bytes (0 = never spill).
+    pub spill_limit: u64,
+    dev_frozen: Vec<Vec<xla::PjRtBuffer>>,
+    dev_emb: xla::PjRtBuffer,
+    dev_fnorm: xla::PjRtBuffer,
+    _dev_guard: Guard,
+}
+
+impl EngineCtx {
+    /// Standard construction: seeded model + optimizer sized to the LoRA
+    /// tensor groups (layer-major, ABI order), then weight upload.
+    pub fn new(
+        rt: Arc<Runtime>,
+        seed: u64,
+        opt_kind: OptimizerKind,
+        lr: f32,
+        spill_limit: u64,
+    ) -> Self {
+        let tracker = rt.tracker.clone();
+        let mut model = ModelState::init(rt.dims(), seed, &tracker);
+        let group_sizes: Vec<usize> = model
+            .lora
+            .iter()
+            .flat_map(|l| l.tensors.iter().map(|t| t.len()))
+            .collect();
+        let opt = Optimizer::new(opt_kind, lr, &group_sizes, &tracker);
+
+        // Upload frozen state once; free the host copies (their Tracked
+        // guards drop here), accounting the device bytes instead.
+        let mut dev_bytes = 0u64;
+        let mut dev_frozen = Vec::with_capacity(model.blocks.len());
+        for block in &mut model.blocks {
+            let mut bufs = Vec::with_capacity(block.tensors.len());
+            for t in block.tensors.drain(..) {
+                dev_bytes += t.bytes();
+                bufs.push(rt.upload(&t).expect("weight upload"));
+            }
+            dev_frozen.push(bufs);
+        }
+        let dev_emb = rt.upload(&model.embedding.value).expect("emb upload");
+        dev_bytes += model.embedding.bytes();
+        // free the host embedding data (keep shape for introspection)
+        model.embedding.value.data = crate::tensor::Data::F32(Vec::new());
+        model.embedding.value.shape = vec![0];
+        let dev_fnorm = rt.upload(&model.final_norm.value).expect("fnorm");
+        let _dev_guard = tracker.track("weights:device", dev_bytes);
+        EngineCtx {
+            rt, model, opt, tracker, step: 0, spill_limit,
+            dev_frozen, dev_emb, dev_fnorm, _dev_guard,
+        }
+    }
+
+    /// A block's frozen (device) + LoRA (host) tensors in artifact ABI
+    /// order, ready to append after the leading args.
+    pub fn block_args_mixed<'a>(&'a self, layer: usize) -> Vec<Arg<'a>> {
+        let mut v: Vec<Arg> = Vec::with_capacity(23);
+        for b in &self.dev_frozen[layer] {
+            v.push(Arg::Device(b));
+        }
+        for t in &self.model.lora[layer].tensors {
+            v.push(Arg::Host(t));
+        }
+        v
+    }
+
+    /// Token embedding lookup.
+    pub fn embed(&self, tokens: &HostTensor) -> anyhow::Result<HostTensor> {
+        let out = self.rt.execute_mixed(
+            "embed_fwd", &[Arg::Host(tokens), Arg::Device(&self.dev_emb)])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// One block's forward. `x` is consumed conceptually; returns y.
+    pub fn block_fwd(&self, layer: usize, x: &HostTensor)
+        -> anyhow::Result<HostTensor>
+    {
+        let mut args: Vec<Arg> = vec![Arg::Host(x)];
+        args.extend(self.block_args_mixed(layer));
+        let out = self.rt.execute_mixed("block_fwd", &args)?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Loss + gradient w.r.t. the final hidden state (manual CE backward).
+    pub fn loss_grad(&self, h: &HostTensor, targets: &HostTensor)
+        -> anyhow::Result<(f64, HostTensor)>
+    {
+        let out = self.rt.execute_mixed(
+            "lm_loss_grad",
+            &[Arg::Host(h), Arg::Device(&self.dev_fnorm),
+              Arg::Device(&self.dev_emb), Arg::Host(targets)],
+        )?;
+        let mut it = out.into_iter();
+        let loss = it.next().unwrap().scalar();
+        Ok((loss, it.next().unwrap()))
+    }
+
+    /// Loss only (MeZO's forward).
+    pub fn loss_only(&self, h: &HostTensor, targets: &HostTensor)
+        -> anyhow::Result<f64>
+    {
+        let out = self.rt.execute_mixed(
+            "lm_loss_fwd",
+            &[Arg::Host(h), Arg::Device(&self.dev_fnorm),
+              Arg::Device(&self.dev_emb), Arg::Host(targets)],
+        )?;
+        Ok(out[0].scalar())
+    }
+
+    /// Apply a block's 14 LoRA gradients (artifact output order: g_x,
+    /// then (dA, dB) per PROJS site) and update immediately — the paper's
+    /// §4.3 Backward Phase discipline. `outs` is the full backward output
+    /// tuple; returns g_x (the only tensor that survives).
+    pub fn apply_block_grads(
+        &mut self,
+        layer: usize,
+        mut outs: Vec<HostTensor>,
+    ) -> anyhow::Result<HostTensor> {
+        anyhow::ensure!(outs.len() == 1 + 2 * PROJS.len(),
+                        "expected 15 backward outputs, got {}", outs.len());
+        // Gradients are transient: tracked only while the update runs.
+        let g_bytes: u64 = outs[1..].iter().map(|t| t.bytes()).sum();
+        let _g = self.tracker.track("grads:block", g_bytes);
+        self.opt.begin_step();
+        for i in (1..outs.len()).rev() {
+            let grad = outs.pop().unwrap();
+            let idx = i - 1; // 0..14 over lora tensors of this block
+            let group = layer * 2 * PROJS.len() + idx;
+            let params = self.model.lora[layer].tensors[idx].as_f32_mut();
+            self.opt.update(group, params, grad.as_f32());
+            // grad dropped here — "discarded immediately after being used"
+        }
+        Ok(outs.pop().unwrap())
+    }
+
+    /// Forward sweep storing block-INPUT checkpoints (all exact-grad
+    /// engines share this). Returns the final hidden state.
+    pub fn forward_with_checkpoints(
+        &self,
+        batch: &Batch,
+        store: &mut CheckpointStore,
+    ) -> anyhow::Result<HostTensor> {
+        let mut x = self.embed(&batch.tokens)?;
+        for l in 0..self.rt.dims().n_layers {
+            let y = self.block_fwd(l, &x)?;
+            store.store(l, x)?; // the INPUT of block l (Appendix E.1)
+            x = y;
+        }
+        Ok(x)
+    }
+
+    /// Wrap a step body with peak/latency measurement.
+    pub fn measured<F>(&mut self, body: F) -> anyhow::Result<StepStats>
+    where
+        F: FnOnce(&mut Self) -> anyhow::Result<f64>,
+    {
+        self.tracker.reset_peak();
+        let start = Instant::now();
+        let loss = body(self)?;
+        let secs = start.elapsed().as_secs_f64();
+        self.step += 1;
+        Ok(StepStats {
+            step: self.step,
+            loss,
+            peak_bytes: self.tracker.peak(),
+            secs,
+            live_after: self.tracker.live(),
+        })
+    }
+}

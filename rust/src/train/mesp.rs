@@ -1,0 +1,100 @@
+//! MeSP — the paper's contribution (§4).
+//!
+//! Forward: per-block calls storing ONLY block-input checkpoints.
+//! Backward: reverse block order; each block is ONE fused artifact call
+//! (`block_bwd_mesp`) that re-executes the forward internally with the
+//! manually derived Appendix-A VJPs — the LoRA intermediate h = xA exists
+//! only inside a Pallas VMEM tile — and returns (g_x, dA×7, dB×7). LoRA
+//! params are updated immediately and every buffer is dropped before the
+//! next block, so peak memory is checkpoints + ONE block's working set.
+
+use crate::data::Batch;
+use crate::tensor::HostTensor;
+
+use super::common::EngineCtx;
+use super::{CheckpointStore, Engine, StepStats};
+
+pub struct MespEngine {
+    ctx: EngineCtx,
+    store: CheckpointStore,
+}
+
+impl MespEngine {
+    pub fn new(ctx: EngineCtx) -> anyhow::Result<Self> {
+        ctx.rt.warmup(&["embed_fwd", "block_fwd", "block_bwd_mesp",
+                        "lm_loss_grad"])?;
+        let store = CheckpointStore::new(ctx.tracker.clone(), ctx.spill_limit);
+        Ok(MespEngine { ctx, store })
+    }
+
+    /// The paper's backward phase, shared with `gradients()`.
+    fn backward<F>(
+        ctx: &mut EngineCtx,
+        store: &mut CheckpointStore,
+        mut g: HostTensor,
+        mut on_block: F,
+    ) -> anyhow::Result<()>
+    where
+        F: FnMut(&mut EngineCtx, usize, Vec<HostTensor>)
+            -> anyhow::Result<HostTensor>,
+    {
+        for l in (0..ctx.rt.dims().n_layers).rev() {
+            let x = store.take(l)?; // checkpoint consumed, freed after call
+            let mut args = vec![crate::runtime::client::Arg::Host(&x),
+                                crate::runtime::client::Arg::Host(&g)];
+            args.extend(ctx.block_args_mixed(l));
+            let outs = ctx.rt.execute_mixed("block_bwd_mesp", &args)?;
+            drop(args);
+            g = on_block(ctx, l, outs)?;
+            // x and the previous g drop here — explicit lifecycle end
+        }
+        Ok(())
+    }
+}
+
+impl Engine for MespEngine {
+    fn name(&self) -> &'static str {
+        "MeSP"
+    }
+
+    fn step(&mut self, batch: &Batch) -> anyhow::Result<StepStats> {
+        let store = &mut self.store;
+        self.ctx.measured(|ctx| {
+            let h = ctx.forward_with_checkpoints(batch, store)?;
+            let (loss, g) = ctx.loss_grad(&h, &batch.targets)?;
+            drop(h); // logits path done; final hidden state released
+            Self::backward(ctx, store, g, |ctx, l, outs| {
+                ctx.apply_block_grads(l, outs) // update immediately
+            })?;
+            Ok(loss)
+        })
+    }
+
+    fn gradients(&mut self, batch: &Batch) -> anyhow::Result<Vec<Vec<f32>>> {
+        let store = &mut self.store;
+        let ctx = &mut self.ctx;
+        let h = ctx.forward_with_checkpoints(batch, store)?;
+        let (_, g) = ctx.loss_grad(&h, &batch.targets)?;
+        drop(h);
+        let n_layers = ctx.rt.dims().n_layers;
+        let mut grads: Vec<Vec<f32>> = vec![Vec::new(); n_layers];
+        Self::backward(ctx, store, g, |_ctx, l, mut outs| {
+            let mut flat = Vec::new();
+            for t in &outs[1..] {
+                flat.extend_from_slice(t.as_f32());
+            }
+            grads[l] = flat;
+            outs.truncate(1);
+            Ok(outs.pop().unwrap())
+        })?;
+        Ok(grads)
+    }
+
+    fn ctx(&self) -> &EngineCtx {
+        &self.ctx
+    }
+
+    fn ctx_mut(&mut self) -> &mut EngineCtx {
+        &mut self.ctx
+    }
+}

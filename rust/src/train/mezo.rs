@@ -1,0 +1,139 @@
+//! MeZO baseline — zeroth-order SPSA (paper §3.2, eq. 4).
+//!
+//! Two full forward passes per step, one at θ+εz and one at θ−εz, with
+//! z ~ N(0, I) over all LoRA parameters; the update is
+//!     θ ← θ − lr · c · z,   c = (L(θ+εz) − L(θ−εz)) / 2ε.
+//! No checkpoints, no backward artifacts. The perturbation z and the
+//! projected-gradient scratch are held (tracked) across both forwards,
+//! mirroring the measured MLX implementation — this is what makes MeZO's
+//! memory grow with LoRA rank in the paper's Table 4.
+
+use crate::data::Batch;
+use crate::memory::Guard;
+use crate::util::Rng;
+
+use super::common::EngineCtx;
+use super::{Engine, StepStats};
+
+pub struct MezoEngine {
+    ctx: EngineCtx,
+    eps: f32,
+    seed: u64,
+}
+
+impl MezoEngine {
+    pub fn new(ctx: EngineCtx) -> anyhow::Result<Self> {
+        ctx.rt.warmup(&["embed_fwd", "block_fwd", "lm_loss_fwd"])?;
+        Ok(MezoEngine { ctx, eps: 1e-3, seed: 0x5eed })
+    }
+
+    pub fn with_eps(mut self, eps: f32) -> Self {
+        self.eps = eps;
+        self
+    }
+
+    /// Inference forward: no checkpoints — each block's input is dropped
+    /// as soon as its output exists (MeZO's memory advantage).
+    fn forward_loss(ctx: &EngineCtx, batch: &Batch) -> anyhow::Result<f64> {
+        let mut x = ctx.embed(&batch.tokens)?;
+        for l in 0..ctx.rt.dims().n_layers {
+            x = ctx.block_fwd(l, &x)?;
+        }
+        ctx.loss_only(&x, &batch.targets)
+    }
+
+    /// Per-block perturbation vectors for one step, regenerated from the
+    /// step seed (held live across both forwards, tracked).
+    fn sample_z(&self, step: usize) -> (Vec<Vec<f32>>, Guard) {
+        let base = Rng::new(self.seed ^ (step as u64).wrapping_mul(0x9e37));
+        let z: Vec<Vec<f32>> = (0..self.ctx.rt.dims().n_layers)
+            .map(|l| {
+                let mut r = base.fork(l as u64);
+                r.normal_vec(self.ctx.model.lora[l].param_count(), 1.0)
+            })
+            .collect();
+        let bytes: u64 = z.iter().map(|v| 4 * v.len() as u64).sum();
+        // ×2: z itself + the perturbed-parameter scratch the measured
+        // implementation materializes (memory-model parity).
+        let guard = self.ctx.tracker.track("mezo:perturbation", 2 * bytes);
+        (z, guard)
+    }
+
+    fn perturb(ctx: &mut EngineCtx, z: &[Vec<f32>], scale: f32) {
+        for (l, zl) in z.iter().enumerate() {
+            let mut flat = ctx.model.lora[l].flatten();
+            for (p, zi) in flat.iter_mut().zip(zl) {
+                *p += scale * zi;
+            }
+            ctx.model.lora[l].unflatten(&flat);
+        }
+    }
+
+    /// SPSA estimate: returns (loss⁺, loss⁻, c) leaving params restored.
+    fn spsa(&mut self, batch: &Batch, z: &[Vec<f32>])
+        -> anyhow::Result<(f64, f64, f32)>
+    {
+        let eps = self.eps;
+        Self::perturb(&mut self.ctx, z, eps);
+        let l_plus = Self::forward_loss(&self.ctx, batch)?;
+        Self::perturb(&mut self.ctx, z, -2.0 * eps);
+        let l_minus = Self::forward_loss(&self.ctx, batch)?;
+        Self::perturb(&mut self.ctx, z, eps); // restore
+        let c = ((l_plus - l_minus) / (2.0 * eps as f64)) as f32;
+        Ok((l_plus, l_minus, c))
+    }
+}
+
+impl Engine for MezoEngine {
+    fn name(&self) -> &'static str {
+        "MeZO"
+    }
+
+    fn step(&mut self, batch: &Batch) -> anyhow::Result<StepStats> {
+        // Measure the WHOLE step (both forwards included): reset the peak
+        // before z is sampled so the tracked peak covers the perturbation
+        // state living across the two forward passes.
+        self.ctx.tracker.reset_peak();
+        let start = std::time::Instant::now();
+        let (z, z_guard) = self.sample_z(self.ctx.step);
+        let (l_plus, l_minus, c) = self.spsa(batch, &z)?;
+        // θ ← θ − lr·c·z (plain SGD on the SPSA estimate, as in MeZO)
+        let lr = self.ctx.opt.lr();
+        for (l, zl) in z.iter().enumerate() {
+            let mut flat = self.ctx.model.lora[l].flatten();
+            for (p, zi) in flat.iter_mut().zip(zl) {
+                *p -= lr * c * zi;
+            }
+            self.ctx.model.lora[l].unflatten(&flat);
+        }
+        drop(z_guard);
+        self.ctx.step += 1;
+        Ok(StepStats {
+            step: self.ctx.step,
+            loss: 0.5 * (l_plus + l_minus),
+            peak_bytes: self.ctx.tracker.peak(),
+            secs: start.elapsed().as_secs_f64(),
+            live_after: self.ctx.tracker.live(),
+        })
+    }
+
+    /// MeZO's "gradient" is the SPSA estimate ĝ = c·z — the uncorrelated
+    /// estimator the paper dissects in Table 3.
+    fn gradients(&mut self, batch: &Batch) -> anyhow::Result<Vec<Vec<f32>>> {
+        let step = self.ctx.step;
+        let (z, _guard) = self.sample_z(step);
+        let (_, _, c) = self.spsa(batch, &z)?;
+        Ok(z
+            .into_iter()
+            .map(|zl| zl.into_iter().map(|zi| c * zi).collect())
+            .collect())
+    }
+
+    fn ctx(&self) -> &EngineCtx {
+        &self.ctx
+    }
+
+    fn ctx_mut(&mut self) -> &mut EngineCtx {
+        &mut self.ctx
+    }
+}

@@ -1,0 +1,76 @@
+//! Training engines: the paper's three systems plus the Table-5 ablation.
+//!
+//! All engines share the same forward scheduling (per-block calls into the
+//! AOT artifacts, storing block-input checkpoints) and differ exactly
+//! where the paper says they differ:
+//!
+//! * [`mesp::MespEngine`]   — backward = ONE fused call per block that
+//!   recomputes intermediates internally (manual Appendix-A VJPs, Pallas
+//!   LoRA kernel); nothing but checkpoints lives across calls.
+//! * [`mebp::MebpEngine`]   — backward = recompute-forward call that emits
+//!   the framework-retained residual set (held as real, tracked buffers),
+//!   then a consume-residuals gradient call; mirrors checkpointed autodiff.
+//! * [`mezo::MezoEngine`]   — no backward at all: two perturbed forwards
+//!   and an SPSA update (paper eq. 4).
+//! * [`storeh::StoreHEngine`] — MeSP but h = xA is stored at forward time
+//!   and consumed at backward time (paper Table 5's "Store h").
+
+pub mod checkpoint;
+pub mod common;
+pub mod mebp;
+pub mod mesp;
+pub mod mezo;
+pub mod optimizer;
+pub mod storeh;
+
+use crate::data::Batch;
+
+pub use checkpoint::CheckpointStore;
+pub use optimizer::Optimizer;
+
+/// Per-step result every engine reports.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub step: usize,
+    pub loss: f64,
+    /// Peak tracked bytes during this step.
+    pub peak_bytes: u64,
+    /// Wall-clock seconds for the step.
+    pub secs: f64,
+    /// Live tracked bytes after the step (params + state only).
+    pub live_after: u64,
+}
+
+/// A training engine: one method from the paper.
+pub trait Engine {
+    fn name(&self) -> &'static str;
+
+    /// Run one optimization step on `batch`.
+    fn step(&mut self, batch: &Batch) -> anyhow::Result<StepStats>;
+
+    /// Compute exact LoRA gradients for `batch` WITHOUT updating params
+    /// (gradient-quality analysis, Table 3). Layer-major, tensor-ABI
+    /// order. Engines without exact gradients return an estimate.
+    fn gradients(&mut self, batch: &Batch) -> anyhow::Result<Vec<Vec<f32>>>;
+
+    /// Immutable access to shared state (model, runtime, tracker).
+    fn ctx(&self) -> &common::EngineCtx;
+
+    fn ctx_mut(&mut self) -> &mut common::EngineCtx;
+}
+
+/// Build the engine for a method. `mezo_eps` is the SPSA perturbation
+/// scale (ignored by the exact-gradient engines).
+pub fn build_engine(
+    method: crate::config::Method,
+    ctx: common::EngineCtx,
+    mezo_eps: f32,
+) -> anyhow::Result<Box<dyn Engine>> {
+    use crate::config::Method;
+    Ok(match method {
+        Method::Mesp => Box::new(mesp::MespEngine::new(ctx)?),
+        Method::Mebp => Box::new(mebp::MebpEngine::new(ctx)?),
+        Method::Mezo => Box::new(mezo::MezoEngine::new(ctx)?.with_eps(mezo_eps)),
+        Method::StoreH => Box::new(storeh::StoreHEngine::new(ctx)?),
+    })
+}

@@ -1,0 +1,171 @@
+//! Optimizers over host-side LoRA parameters. Parameters are small
+//! (r·(d_in+d_out) per site), so updates run on the host — exactly as the
+//! paper's implementation updates LoRA weights immediately after each
+//! block's backward ("update parameters immediately with the optimizer",
+//! §4.3). State is tracked so optimizer memory shows up in step peaks.
+
+use crate::config::OptimizerKind;
+use crate::memory::{Guard, MemoryTracker};
+
+/// Per-parameter-group optimizer state (one group per LoRA tensor).
+enum State {
+    Sgd,
+    Momentum { v: Vec<Vec<f32>>, beta: f32 },
+    Adam { m: Vec<Vec<f32>>, v: Vec<Vec<f32>>, b1: f32, b2: f32, eps: f32, t: u64 },
+}
+
+pub struct Optimizer {
+    lr: f32,
+    state: State,
+    _guard: Option<Guard>,
+}
+
+impl Optimizer {
+    /// `group_sizes`: element counts of every parameter tensor this
+    /// optimizer will update (layer-major, ABI order).
+    pub fn new(
+        kind: OptimizerKind,
+        lr: f32,
+        group_sizes: &[usize],
+        tracker: &MemoryTracker,
+    ) -> Self {
+        let alloc = |sizes: &[usize]| -> Vec<Vec<f32>> {
+            sizes.iter().map(|n| vec![0.0; *n]).collect()
+        };
+        let (state, bytes) = match kind {
+            OptimizerKind::Sgd => (State::Sgd, 0u64),
+            OptimizerKind::Momentum { beta } => {
+                let v = alloc(group_sizes);
+                let b = 4 * group_sizes.iter().sum::<usize>() as u64;
+                (State::Momentum { v, beta }, b)
+            }
+            OptimizerKind::Adam { beta1, beta2, eps } => {
+                let m = alloc(group_sizes);
+                let v = alloc(group_sizes);
+                let b = 8 * group_sizes.iter().sum::<usize>() as u64;
+                (State::Adam { m, v, b1: beta1, b2: beta2, eps, t: 0 }, b)
+            }
+        };
+        let guard = (bytes > 0).then(|| tracker.track("optimizer:state", bytes));
+        Optimizer { lr, state, _guard: guard }
+    }
+
+    /// Advance the step counter (Adam bias correction). Call once per
+    /// optimizer step, before the per-group updates.
+    pub fn begin_step(&mut self) {
+        if let State::Adam { t, .. } = &mut self.state {
+            *t += 1;
+        }
+    }
+
+    /// Apply one group's gradient in place: params[group] -= lr * f(grad).
+    pub fn update(&mut self, group: usize, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        let lr = self.lr;
+        match &mut self.state {
+            State::Sgd => {
+                for (p, g) in params.iter_mut().zip(grad) {
+                    *p -= lr * g;
+                }
+            }
+            State::Momentum { v, beta } => {
+                let v = &mut v[group];
+                for i in 0..params.len() {
+                    v[i] = *beta * v[i] + grad[i];
+                    params[i] -= lr * v[i];
+                }
+            }
+            State::Adam { m, v, b1, b2, eps, t } => {
+                let (b1v, b2v, epsv, tv) = (*b1, *b2, *eps, *t as i32);
+                let m = &mut m[group];
+                let v = &mut v[group];
+                let bc1 = 1.0 - b1v.powi(tv);
+                let bc2 = 1.0 - b2v.powi(tv);
+                for i in 0..params.len() {
+                    m[i] = b1v * m[i] + (1.0 - b1v) * grad[i];
+                    v[i] = b2v * v[i] + (1.0 - b2v) * grad[i] * grad[i];
+                    let mh = m[i] / bc1;
+                    let vh = v[i] / bc2;
+                    params[i] -= lr * mh / (vh.sqrt() + epsv);
+                }
+            }
+        }
+    }
+
+    pub fn lr(&self) -> f32 {
+        self.lr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr() -> MemoryTracker {
+        MemoryTracker::new()
+    }
+
+    #[test]
+    fn sgd_matches_hand_computed() {
+        let t = tr();
+        let mut o = Optimizer::new(OptimizerKind::Sgd, 0.1, &[2], &t);
+        let mut p = vec![1.0, -2.0];
+        o.begin_step();
+        o.update(0, &mut p, &[0.5, -1.0]);
+        assert_eq!(p, vec![1.0 - 0.05, -2.0 + 0.1]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let t = tr();
+        let mut o = Optimizer::new(
+            OptimizerKind::Momentum { beta: 0.9 }, 1.0, &[1], &t);
+        let mut p = vec![0.0];
+        o.begin_step();
+        o.update(0, &mut p, &[1.0]); // v=1, p=-1
+        o.begin_step();
+        o.update(0, &mut p, &[1.0]); // v=1.9, p=-2.9
+        assert!((p[0] + 2.9).abs() < 1e-6, "{}", p[0]);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // with bias correction, |Δp| ≈ lr on step 1 regardless of grad scale
+        let t = tr();
+        let mut o = Optimizer::new(
+            OptimizerKind::parse("adam").unwrap(), 0.01, &[1], &t);
+        for g in [1e-3f32, 1.0, 100.0] {
+            let mut p = vec![0.0];
+            let mut o2 = Optimizer::new(
+                OptimizerKind::parse("adam").unwrap(), 0.01, &[1], &t);
+            o2.begin_step();
+            o2.update(0, &mut p, &[g]);
+            assert!((p[0].abs() - 0.01).abs() < 1e-3, "g={g} dp={}", p[0]);
+        }
+        let _ = &mut o;
+    }
+
+    #[test]
+    fn state_is_tracked() {
+        let t = tr();
+        let _o = Optimizer::new(
+            OptimizerKind::parse("adam").unwrap(), 0.1, &[100, 50], &t);
+        assert_eq!(t.live(), 8 * 150);
+        let _s = Optimizer::new(OptimizerKind::Sgd, 0.1, &[100], &t);
+        assert_eq!(t.live(), 8 * 150, "sgd adds no state");
+    }
+
+    #[test]
+    fn groups_are_independent() {
+        let t = tr();
+        let mut o = Optimizer::new(
+            OptimizerKind::Momentum { beta: 0.5 }, 1.0, &[1, 1], &t);
+        let (mut p0, mut p1) = (vec![0.0], vec![0.0]);
+        o.begin_step();
+        o.update(0, &mut p0, &[1.0]);
+        o.begin_step();
+        o.update(1, &mut p1, &[1.0]);
+        // group 1 must not see group 0's velocity
+        assert_eq!(p0, p1);
+    }
+}

@@ -1,0 +1,147 @@
+//! Store-h ablation — the paper's Table 5 counterfactual.
+//!
+//! Identical to MeSP except the seven LoRA intermediates h = xA of EVERY
+//! block are stored at forward time (`block_fwd_saveh`) and consumed at
+//! backward time (`block_bwd_storeh`) instead of being recomputed. The
+//! stored h tensors of all L×7 sites live from forward until that block's
+//! backward — the accumulation the paper's §5.7 measures (and rejects in
+//! favour of recomputation).
+
+use crate::data::Batch;
+use crate::memory::Guard;
+use crate::tensor::HostTensor;
+
+use super::common::EngineCtx;
+use super::{CheckpointStore, Engine, StepStats};
+
+pub struct StoreHEngine {
+    ctx: EngineCtx,
+    store: CheckpointStore,
+    /// Per-layer stored h tensors + their tracking guard.
+    saved_h: Vec<Option<(Vec<HostTensor>, Guard)>>,
+}
+
+impl StoreHEngine {
+    pub fn new(ctx: EngineCtx) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            ctx.rt.manifest.has_artifact("block_fwd_saveh")
+                && ctx.rt.manifest.has_artifact("block_bwd_storeh"),
+            "config '{}' lacks the store-h ablation artifacts",
+            ctx.rt.dims().name
+        );
+        ctx.rt.warmup(&["embed_fwd", "block_fwd_saveh", "block_bwd_storeh",
+                        "lm_loss_grad"])?;
+        let store = CheckpointStore::new(ctx.tracker.clone(), ctx.spill_limit);
+        let n = ctx.rt.dims().n_layers;
+        Ok(StoreHEngine {
+            ctx,
+            store,
+            saved_h: (0..n).map(|_| None).collect(),
+        })
+    }
+
+    /// Forward that stores checkpoints AND h×7 per block.
+    fn forward(&mut self, batch: &Batch) -> anyhow::Result<HostTensor> {
+        use crate::runtime::client::Arg;
+        let ctx = &self.ctx;
+        let mut x = ctx.embed(&batch.tokens)?;
+        for l in 0..ctx.rt.dims().n_layers {
+            let mut args: Vec<Arg> = vec![Arg::Host(&x)];
+            args.extend(ctx.block_args_mixed(l));
+            let mut outs = ctx.rt.execute_mixed("block_fwd_saveh", &args)?;
+            drop(args);
+            let hs: Vec<HostTensor> = outs.drain(1..).collect();
+            let h_bytes: u64 = hs.iter().map(|t| t.bytes()).sum();
+            let guard = ctx.tracker.track("storeh:h", h_bytes);
+            self.saved_h[l] = Some((hs, guard));
+            let y = outs.pop().unwrap();
+            self.store.store(l, x)?;
+            x = y;
+        }
+        Ok(x)
+    }
+
+    fn backward<F>(
+        ctx: &mut EngineCtx,
+        store: &mut CheckpointStore,
+        saved_h: &mut [Option<(Vec<HostTensor>, Guard)>],
+        mut g: HostTensor,
+        mut on_block: F,
+    ) -> anyhow::Result<()>
+    where
+        F: FnMut(&mut EngineCtx, usize, Vec<HostTensor>)
+            -> anyhow::Result<HostTensor>,
+    {
+        use crate::runtime::client::Arg;
+        for l in (0..ctx.rt.dims().n_layers).rev() {
+            let x = store.take(l)?;
+            let (hs, h_guard) = saved_h[l]
+                .take()
+                .ok_or_else(|| anyhow::anyhow!("h for layer {l} not saved"))?;
+            let mut args: Vec<Arg> = vec![Arg::Host(&x), Arg::Host(&g)];
+            args.extend(hs.iter().map(Arg::Host));
+            args.extend(ctx.block_args_mixed(l));
+            let outs = ctx.rt.execute_mixed("block_bwd_storeh", &args)?;
+            drop(args);
+            drop(hs);
+            drop(h_guard); // h released only now — the Table-5 cost
+            g = on_block(ctx, l, outs)?;
+        }
+        Ok(())
+    }
+}
+
+impl Engine for StoreHEngine {
+    fn name(&self) -> &'static str {
+        "Store-h"
+    }
+
+    fn step(&mut self, batch: &Batch) -> anyhow::Result<StepStats> {
+        self.ctx.tracker.reset_peak();
+        let start = std::time::Instant::now();
+        let h = self.forward(batch)?;
+        let (loss, g) = self.ctx.loss_grad(&h, &batch.targets)?;
+        drop(h);
+        Self::backward(
+            &mut self.ctx, &mut self.store, &mut self.saved_h, g,
+            |ctx, l, outs| ctx.apply_block_grads(l, outs),
+        )?;
+        self.ctx.step += 1;
+        Ok(StepStats {
+            step: self.ctx.step,
+            loss,
+            peak_bytes: self.ctx.tracker.peak(),
+            secs: start.elapsed().as_secs_f64(),
+            live_after: self.ctx.tracker.live(),
+        })
+    }
+
+    fn gradients(&mut self, batch: &Batch) -> anyhow::Result<Vec<Vec<f32>>> {
+        let h = self.forward(batch)?;
+        let (_, g) = self.ctx.loss_grad(&h, &batch.targets)?;
+        drop(h);
+        let n_layers = self.ctx.rt.dims().n_layers;
+        let mut grads: Vec<Vec<f32>> = vec![Vec::new(); n_layers];
+        Self::backward(
+            &mut self.ctx, &mut self.store, &mut self.saved_h, g,
+            |_ctx, l, mut outs| {
+                let mut flat = Vec::new();
+                for t in &outs[1..] {
+                    flat.extend_from_slice(t.as_f32());
+                }
+                grads[l] = flat;
+                outs.truncate(1);
+                Ok(outs.pop().unwrap())
+            },
+        )?;
+        Ok(grads)
+    }
+
+    fn ctx(&self) -> &EngineCtx {
+        &self.ctx
+    }
+
+    fn ctx_mut(&mut self) -> &mut EngineCtx {
+        &mut self.ctx
+    }
+}

@@ -1,0 +1,10 @@
+//! Self-contained infrastructure the offline build cannot pull from
+//! crates.io: JSON, PRNG, statistics. Kept dependency-free on purpose —
+//! determinism and parseability are load-bearing for reproduction runs.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,125 @@
+//! Small statistics helpers shared by metrics, benches and the reproduce
+//! drivers (mean/std/percentiles over timing or loss series).
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Percentile via nearest-rank on a sorted copy; p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Cosine similarity between two vectors (paper Table 3 metric).
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+    for (x, y) in a.iter().zip(b) {
+        dot += *x as f64 * *y as f64;
+        na += *x as f64 * *x as f64;
+        nb += *y as f64 * *y as f64;
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// Fraction of elements whose signs agree (paper Table 3 metric).
+pub fn sign_agreement(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let agree = a
+        .iter()
+        .zip(b)
+        .filter(|(x, y)| (**x >= 0.0) == (**y >= 0.0))
+        .count();
+    agree as f64 / a.len() as f64
+}
+
+/// Relative error ‖a − b‖ / ‖b‖ (paper Table 3 metric; b is truth).
+pub fn rel_error(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let num: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    let den: f64 = b.iter().map(|y| (*y as f64).powi(2)).sum::<f64>().sqrt();
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    num / den
+}
+
+/// Human-readable byte count (MB with one decimal, like the paper tables).
+pub fn fmt_mb(bytes: u64) -> String {
+    format!("{:.1}", bytes as f64 / (1024.0 * 1024.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - 1.2909944).abs() < 1e-6);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn cosine_identity_and_orthogonal() {
+        let a = [1.0f32, 2.0, 3.0];
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-9);
+        let b = [0.0f32, 0.0, 0.0];
+        assert_eq!(cosine(&a, &b), 0.0);
+        let c = [2.0f32, -1.0, 0.0];
+        assert!(cosine(&a, &c).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sign_agree() {
+        let a = [1.0f32, -1.0, 1.0, -1.0];
+        let b = [1.0f32, 1.0, -1.0, -1.0];
+        assert_eq!(sign_agreement(&a, &b), 0.5);
+    }
+
+    #[test]
+    fn rel_err() {
+        let a = [2.0f32, 0.0];
+        let b = [1.0f32, 0.0];
+        assert!((rel_error(&a, &b) - 1.0).abs() < 1e-9);
+        assert_eq!(rel_error(&b, &b), 0.0);
+    }
+
+    #[test]
+    fn mb_format() {
+        assert_eq!(fmt_mb(361 * 1024 * 1024), "361.0");
+    }
+}

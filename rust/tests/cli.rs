@@ -1,0 +1,102 @@
+//! End-to-end CLI tests: drive the actual `mesp` binary the way a user
+//! would (launcher behaviour, flag validation, output contracts).
+
+use std::process::Command;
+
+fn mesp(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_mesp"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("run mesp");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_prints_usage() {
+    let (ok, text) = mesp(&["help"]);
+    assert!(ok);
+    assert!(text.contains("USAGE"));
+    assert!(text.contains("reproduce"));
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let (ok, text) = mesp(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"));
+}
+
+#[test]
+fn unknown_flag_is_rejected() {
+    let (ok, text) = mesp(&["train", "--confg", "toy"]);
+    assert!(!ok, "typo flags must fail loudly");
+    assert!(text.contains("unknown flag"));
+}
+
+#[test]
+fn simulate_outputs_all_methods() {
+    let (ok, text) = mesp(&["simulate", "--model", "0.5b", "--seq", "256"]);
+    assert!(ok, "{text}");
+    for m in ["MeBP", "MeZO", "MeSP", "Store-h"] {
+        assert!(text.contains(m), "missing {m} in:\n{text}");
+    }
+    assert!(text.contains("% vs MeBP"));
+}
+
+#[test]
+fn simulate_breakdown_table() {
+    let (ok, text) = mesp(&["simulate", "--model", "3b", "--breakdown"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("checkpoints"));
+    assert!(text.contains("dequant_buffers"));
+    assert!(text.contains("TOTAL"));
+}
+
+#[test]
+fn train_toy_runs_and_reports() {
+    let (ok, text) = mesp(&[
+        "train", "--config", "toy", "--method", "mesp", "--steps", "3",
+        "--log-every", "1",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("final loss"));
+    assert!(text.contains("block_bwd_mesp"), "exec stats listed");
+}
+
+#[test]
+fn gradcheck_command_passes() {
+    let (ok, text) = mesp(&["gradcheck", "--config", "toy", "--seeds", "1"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("gradcheck PASSED"));
+}
+
+#[test]
+fn inspect_lists_artifacts() {
+    let (ok, text) = mesp(&["inspect", "--config", "toy"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("block_bwd_mesp"));
+    assert!(text.contains("15 outputs"));
+}
+
+#[test]
+fn reproduce_memory_table_prints_paper_and_model() {
+    let (ok, text) = mesp(&["reproduce", "--table", "2"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("Table 2"));
+    assert!(text.contains("paper"));
+    assert!(text.contains("model"));
+    assert!(text.contains("1024"));
+}
+
+#[test]
+fn simulate_rejects_unknown_model() {
+    let (ok, text) = mesp(&["simulate", "--model", "7b"]);
+    assert!(!ok);
+    assert!(text.contains("unknown sim preset"));
+}

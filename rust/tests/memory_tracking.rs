@@ -1,0 +1,116 @@
+//! Memory behaviour on REAL runs: the tracker-measured peaks must show
+//! the paper's ordering (MeSP < store-h < MeBP for held tensors), the
+//! analytical model must be consistent with the tracker where they
+//! describe the same tensors, and spill mode must bound checkpoint RAM.
+
+use mesp::config::{Method, TrainConfig};
+use mesp::coordinator::TrainSession;
+use mesp::memory::model as memmodel;
+use mesp::memory::Widths;
+
+fn measured_peak(config: &str, method: Method) -> (u64, u64) {
+    let cfg = TrainConfig {
+        config: config.into(),
+        method,
+        log_every: usize::MAX,
+        ..Default::default()
+    };
+    let mut sess = TrainSession::new(cfg).unwrap();
+    // warm step compiles executables; measure the second step
+    sess.run(2).unwrap();
+    let s = &sess.metrics.history[1];
+    (s.peak_bytes, s.live_after)
+}
+
+#[test]
+fn measured_ordering_matches_paper() {
+    // The paper's Tables 1 & 5, measured live on this runtime: MeBP's
+    // held residuals dominate, store-h sits between, MeSP is lowest.
+    let (mesp, _) = measured_peak("toy", Method::Mesp);
+    let (mebp, _) = measured_peak("toy", Method::Mebp);
+    let (storeh, _) = measured_peak("toy", Method::StoreH);
+    assert!(mesp < storeh, "MeSP {mesp} !< store-h {storeh}");
+    assert!(storeh < mebp, "store-h {storeh} !< MeBP {mebp}");
+}
+
+#[test]
+fn mesp_reduction_vs_mebp_is_substantial() {
+    // Compare step-TRANSIENT peaks (peak − always-live baseline): the
+    // paper's phys_footprint excludes the mmap'd base weights, so the
+    // comparable measured quantity here excludes our always-live f32
+    // weights. This is the activation memory MeSP's schedule is about.
+    let (mesp_peak, mesp_live) = measured_peak("small", Method::Mesp);
+    let (mebp_peak, mebp_live) = measured_peak("small", Method::Mebp);
+    let mesp_t = (mesp_peak - mesp_live) as f64;
+    let mebp_t = (mebp_peak - mebp_live) as f64;
+    let red = 100.0 * (1.0 - mesp_t / mebp_t);
+    // paper band at Qwen scale is 42-62%
+    assert!(red > 35.0, "measured transient reduction only {red:.1}% \
+            (MeSP {mesp_t} vs MeBP {mebp_t} bytes)");
+}
+
+#[test]
+fn live_after_step_is_params_only() {
+    // After a step completes, only weights/params/optimizer remain live —
+    // the paper's "explicitly deallocate all intermediates".
+    let cfg = TrainConfig {
+        config: "toy".into(),
+        method: Method::Mesp,
+        log_every: usize::MAX,
+        ..Default::default()
+    };
+    let mut sess = TrainSession::new(cfg).unwrap();
+    let baseline = sess.tracker.live(); // weights + params (+ queued batches)
+    sess.run(3).unwrap();
+    let after = sess.metrics.history[2].live_after;
+    // allow the prefetch queue (4 batches ≈ tiny) but nothing blockwise
+    assert!(
+        after <= baseline + 16 * 1024,
+        "leak: baseline {baseline} -> after {after}"
+    );
+}
+
+#[test]
+fn analytical_model_consistent_with_tracker_ordering() {
+    // Evaluate the model at the toy dims in tracked widths and check it
+    // predicts the same ordering the tracker measures.
+    let cfg = TrainConfig { config: "toy".into(), log_every: usize::MAX,
+                            ..Default::default() };
+    let sess = TrainSession::new(cfg).unwrap();
+    let dims = sess.engine.ctx().rt.dims().clone();
+    let w = Widths::tracked();
+    let opt = mesp::config::OptimizerKind::Sgd;
+    let model_mesp = memmodel::peak(Method::Mesp, &dims, opt, w).total();
+    let model_mebp = memmodel::peak(Method::Mebp, &dims, opt, w).total();
+    assert!(model_mesp < model_mebp);
+    let (real_mesp, _) = measured_peak("toy", Method::Mesp);
+    let (real_mebp, _) = measured_peak("toy", Method::Mebp);
+    // both views must agree on the direction AND rough magnitude of the
+    // gap (within a factor of ~3 — the model includes dequant terms the
+    // runtime doesn't have, the runtime has exec I/O the model folds in)
+    let model_gap = (model_mebp - model_mesp) as f64;
+    let real_gap = (real_mebp - real_mesp) as f64;
+    assert!(real_gap > 0.0);
+    let ratio = model_gap / real_gap;
+    assert!((0.2..5.0).contains(&ratio),
+            "model gap {model_gap} vs real gap {real_gap} (ratio {ratio:.2})");
+}
+
+#[test]
+fn mezo_holds_no_checkpoints() {
+    let (_, _live) = measured_peak("toy", Method::Mezo);
+    let cfg = TrainConfig {
+        config: "toy".into(),
+        method: Method::Mezo,
+        log_every: usize::MAX,
+        ..Default::default()
+    };
+    let mut sess = TrainSession::new(cfg).unwrap();
+    sess.run(1).unwrap();
+    for (tag, bytes) in sess.tracker.breakdown() {
+        assert!(
+            !tag.starts_with("ckpt"),
+            "MeZO must not hold checkpoints ({tag}: {bytes})"
+        );
+    }
+}

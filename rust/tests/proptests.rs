@@ -1,0 +1,178 @@
+//! Property-based tests over the coordinator's invariants. The offline
+//! build has no proptest crate, so properties are checked with an
+//! in-house seeded case generator (util::Rng) — hundreds of random cases
+//! per property, deterministic by seed, with the failing seed printed.
+
+use mesp::data::tokenizer::for_vocab;
+use mesp::data::BatchSource;
+use mesp::memory::MemoryTracker;
+use mesp::model::quant;
+use mesp::tensor::HostTensor;
+use mesp::train::CheckpointStore;
+use mesp::util::{Json, Rng};
+
+/// Run `cases` random cases of a property, reporting the failing seed.
+fn forall(seed0: u64, cases: u64, mut prop: impl FnMut(&mut Rng)) {
+    for c in 0..cases {
+        let mut rng = Rng::new(seed0 ^ c.wrapping_mul(0x9e3779b97f4a7c15));
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(e) = r {
+            panic!("property failed at case {c} (seed0 {seed0}): {e:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_tracker_live_never_negative_peak_monotone() {
+    forall(1, 200, |rng| {
+        let t = MemoryTracker::new();
+        let mut guards = Vec::new();
+        let mut peak_seen = 0u64;
+        for _ in 0..rng.below(100) {
+            if rng.uniform() < 0.6 || guards.is_empty() {
+                guards.push(t.track("x", rng.below(10_000) as u64));
+            } else {
+                let i = rng.below(guards.len());
+                guards.swap_remove(i);
+            }
+            let live = t.live();
+            let peak = t.peak();
+            assert!(peak >= live, "peak {peak} < live {live}");
+            assert!(peak >= peak_seen, "peak decreased");
+            peak_seen = peak;
+        }
+        drop(guards);
+        assert_eq!(t.live(), 0);
+    });
+}
+
+#[test]
+fn prop_checkpoint_store_is_exact_once_per_layer() {
+    // Invariant: every stored layer is retrievable exactly once with its
+    // exact contents, in ANY order, regardless of spill budget.
+    forall(2, 100, |rng| {
+        let tr = MemoryTracker::new();
+        let n_layers = 1 + rng.below(12);
+        let len = 8 + rng.below(64);
+        let budget = if rng.uniform() < 0.5 {
+            0
+        } else {
+            (len * 4 * (1 + rng.below(n_layers))) as u64
+        };
+        let mut store = CheckpointStore::new(tr.clone(), budget);
+        let mut expected = Vec::new();
+        for l in 0..n_layers {
+            let val = rng.uniform() * 100.0;
+            store.store(l, HostTensor::f32(&[len], vec![val; len])).unwrap();
+            expected.push(val);
+        }
+        // consume in random order
+        let mut order: Vec<usize> = (0..n_layers).collect();
+        for i in (1..order.len()).rev() {
+            order.swap(i, rng.below(i + 1));
+        }
+        for l in order {
+            let t = store.take(l).unwrap();
+            assert_eq!(t.as_f32()[len / 2], expected[l], "layer {l}");
+            assert!(store.take(l).is_err(), "double take layer {l}");
+        }
+        assert_eq!(tr.live(), 0, "all checkpoint bytes released");
+    });
+}
+
+#[test]
+fn prop_quant_roundtrip_error_bounded() {
+    forall(3, 60, |rng| {
+        let din = 64 * (1 + rng.below(4));
+        let dout = 1 + rng.below(24);
+        let std = 0.05 + rng.uniform();
+        let w = rng.normal_vec(din * dout, std);
+        let (packed, scales) = quant::quantize(&w, din, dout);
+        let w2 = quant::dequantize(&packed, &scales, din, dout);
+        for r in 0..din {
+            for c in 0..dout {
+                let s = scales[(r / quant::GROUP) * dout + c];
+                let err = (w2[r * dout + c] - w[r * dout + c]).abs();
+                assert!(err <= s / 2.0 + 1e-6);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_tokenizer_ids_in_range() {
+    forall(4, 100, |rng| {
+        let vocab = [256usize, 1024, 4096, 151_936][rng.below(4)];
+        let tok = for_vocab(vocab);
+        let mut text = String::new();
+        for _ in 0..rng.below(200) {
+            text.push((32 + rng.below(95) as u8) as char);
+        }
+        for id in tok.encode(&text) {
+            assert!((0..vocab as i32).contains(&id), "{id} !in 0..{vocab}");
+        }
+    });
+}
+
+#[test]
+fn prop_batch_source_shapes_and_shift() {
+    forall(5, 40, |rng| {
+        let batch = 1 + rng.below(3);
+        let seq = 8 * (1 + rng.below(8));
+        let vocab = [256usize, 2048][rng.below(2)];
+        let mut src = BatchSource::new(vocab, batch, seq, rng.next_u64());
+        for _ in 0..3 {
+            let b = src.next_batch();
+            assert_eq!(b.tokens.shape, vec![batch, seq]);
+            assert_eq!(b.targets.shape, vec![batch, seq]);
+            let toks = b.tokens.as_i32();
+            let tgts = b.targets.as_i32();
+            for i in 0..batch * seq - 1 {
+                assert_eq!(tgts[i], toks[i + 1], "next-token shift");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    // random JSON trees survive serialize → parse → serialize
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        if depth == 0 || rng.uniform() < 0.4 {
+            match rng.below(4) {
+                0 => Json::Null,
+                1 => Json::Bool(rng.uniform() < 0.5),
+                2 => Json::Num((rng.below(100_000) as f64) / 8.0),
+                _ => Json::Str(format!("s{}-\"x\"\n", rng.below(1000))),
+            }
+        } else if rng.uniform() < 0.5 {
+            Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect())
+        } else {
+            Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            )
+        }
+    }
+    forall(6, 150, |rng| {
+        let v = gen(rng, 3);
+        let s = v.to_string();
+        let re = Json::parse(&s).expect("parse own output");
+        assert_eq!(re.to_string(), s, "stable serialization");
+    });
+}
+
+#[test]
+fn prop_rng_fork_streams_do_not_collide() {
+    forall(7, 30, |rng| {
+        let base = Rng::new(rng.next_u64());
+        let mut a = base.fork(rng.below(1000) as u64);
+        let mut b = base.fork(1000 + rng.below(1000) as u64);
+        let collisions =
+            (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(collisions, 0);
+    });
+}

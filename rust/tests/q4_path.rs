@@ -1,0 +1,93 @@
+//! Quantized-base-weights path (paper §4.5): the Rust int4 packer must be
+//! bit-compatible with the Python scheme compiled into the q4 artifact,
+//! and the in-graph dequant forward must match the f32 forward through
+//! host-dequantized weights exactly.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use mesp::config::{FROZEN, PROJS};
+use mesp::memory::MemoryTracker;
+use mesp::model::{quant, ModelState};
+use mesp::runtime::client::Arg;
+use mesp::runtime::Runtime;
+use mesp::tensor::HostTensor;
+use mesp::util::Rng;
+
+const QUANT_MATS: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
+
+#[test]
+fn q4_artifact_matches_host_dequant() {
+    let tracker = MemoryTracker::new();
+    let rt = Arc::new(
+        Runtime::load(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+                          .as_path(),
+                      "toy", tracker.clone())
+        .expect("runtime"),
+    );
+    if !rt.manifest.has_artifact("block_fwd_q4") {
+        eprintln!("skipping: artifacts predate q4 (run make artifacts)");
+        return;
+    }
+    let dims = rt.dims().clone();
+    let model = ModelState::init(&dims, 3, &tracker);
+    let mut rng = Rng::new(7);
+    let x = HostTensor::randn(&[dims.batch, dims.seq, dims.d_model], 0.5,
+                              &mut rng);
+
+    // quantize the 7 projection matrices with the Rust packer
+    let frozen: Vec<&HostTensor> =
+        model.blocks[0].tensors.iter().map(|t| &t.value).collect();
+    let by_name: std::collections::HashMap<&str, &HostTensor> =
+        FROZEN.iter().copied().zip(frozen.iter().copied()).collect();
+    let mut qtensors: Vec<HostTensor> = Vec::new();
+    let mut deq_frozen: Vec<HostTensor> = Vec::new();
+    for name in FROZEN {
+        let t = by_name[name];
+        if QUANT_MATS.contains(&name) {
+            let (din, dout) = (t.shape[0], t.shape[1]);
+            let (packed, scales) = quant::quantize(t.as_f32(), din, dout);
+            deq_frozen.push(HostTensor::f32(
+                &t.shape, quant::dequantize(&packed, &scales, din, dout)));
+            qtensors.push(HostTensor::i32(
+                &[din / 2, dout],
+                packed.iter().map(|b| *b as i32).collect()));
+            qtensors.push(HostTensor::f32(
+                &[din / quant::GROUP, dout], scales));
+        } else {
+            deq_frozen.push(t.clone());
+        }
+    }
+
+    // reference: f32 forward through host-dequantized weights
+    let mut ref_args: Vec<Arg> = vec![Arg::Host(&x)];
+    for t in &deq_frozen {
+        ref_args.push(Arg::Host(t));
+    }
+    let lora: Vec<&HostTensor> = model.lora[0].tensors.iter().collect();
+    for t in &lora {
+        ref_args.push(Arg::Host(t));
+    }
+    let y_ref = rt.execute_mixed("block_fwd", &ref_args).unwrap()
+        .into_iter().next().unwrap();
+
+    // q4 artifact: ln1, ln2 then (packed, scales) pairs then lora
+    let mut q_args: Vec<Arg> = vec![
+        Arg::Host(&x), Arg::Host(by_name["ln1"]), Arg::Host(by_name["ln2"]),
+    ];
+    for t in &qtensors {
+        q_args.push(Arg::Host(t));
+    }
+    for t in &lora {
+        q_args.push(Arg::Host(t));
+    }
+    let y_q4 = rt.execute_mixed("block_fwd_q4", &q_args).unwrap()
+        .into_iter().next().unwrap();
+
+    assert_eq!(y_ref.shape, y_q4.shape);
+    for (a, b) in y_ref.as_f32().iter().zip(y_q4.as_f32()) {
+        assert!((a - b).abs() < 1e-4,
+                "in-graph dequant diverges from host dequant: {a} vs {b}");
+    }
+    let _ = PROJS; // abi sanity import
+}
