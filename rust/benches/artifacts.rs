@@ -1,30 +1,29 @@
-//! Bench: single-artifact execution latency — the L1/L2 hot spots as the
-//! runtime sees them. Separates the fused MeSP backward (one call) from
+//! Bench: single-artifact execution latency — the hot spots as the
+//! backend sees them. Separates the fused MeSP backward (one call) from
 //! MeBP's two-phase backward (fwd_residuals + bwd_residuals) and shows
-//! where the recompute-vs-store tradeoff lands at kernel granularity.
+//! where the recompute-vs-store tradeoff lands at call granularity.
+//! Runs on whichever backend `TrainConfig::default()` selects.
 
 #[path = "harness.rs"]
 mod harness;
 
-use std::path::Path;
 use std::sync::Arc;
 
 use mesp::config::TrainConfig;
+use mesp::coordinator::make_backend;
 use mesp::memory::MemoryTracker;
 use mesp::model::ModelState;
-use mesp::runtime::Runtime;
+use mesp::runtime::{Arg, Backend};
 use mesp::tensor::HostTensor;
 use mesp::util::Rng;
 
 fn main() {
-    let cfg = TrainConfig::default();
     let tracker = MemoryTracker::new();
     for config in ["toy", "small"] {
         println!("== artifact exec latency, config {config} ==");
-        let rt = Arc::new(
-            Runtime::load(Path::new(&cfg.artifacts_dir), config,
-                          tracker.clone()).expect("runtime"),
-        );
+        let cfg = TrainConfig { config: config.into(), ..Default::default() };
+        let rt: Arc<dyn Backend> =
+            make_backend(&cfg, tracker.clone()).expect("backend");
         let dims = rt.dims().clone();
         let model = ModelState::init(&dims, 1, &tracker);
         let mut rng = Rng::new(2);
@@ -49,11 +48,11 @@ fn main() {
             ("block_bwd_mesp", vec![&x, &gy]),
             ("block_bwd_autodiff", vec![&x, &gy]),
         ] {
-            if !rt.manifest.has_artifact(name) {
+            if !rt.has_artifact(name) {
                 continue;
             }
             let args = fwd_args(leads);
-            let refs: Vec<&HostTensor> = args.iter().collect();
+            let refs: Vec<Arg> = args.iter().map(Arg::Host).collect();
             rt.warmup(&[name]).unwrap();
             harness::bench(&format!("{config}/{name}"), 3, 30, || {
                 rt.execute(name, &refs).expect("exec");
@@ -61,9 +60,9 @@ fn main() {
         }
 
         // MeBP's backward = residual fwd + residual bwd chained
-        if rt.manifest.has_artifact("block_bwd_residuals") {
+        if rt.has_artifact("block_bwd_residuals") {
             let args = fwd_args(vec![&x]);
-            let refs: Vec<&HostTensor> = args.iter().collect();
+            let refs: Vec<Arg> = args.iter().map(Arg::Host).collect();
             rt.warmup(&["block_fwd_residuals", "block_bwd_residuals"])
                 .unwrap();
             harness::bench(
@@ -71,11 +70,13 @@ fn main() {
                     let mut outs =
                         rt.execute("block_fwd_residuals", &refs).unwrap();
                     let residuals: Vec<HostTensor> = outs.drain(1..).collect();
-                    let mut bwd_args: Vec<&HostTensor> = vec![&gy];
-                    bwd_args.extend(residuals.iter());
+                    let mut bwd_owned: Vec<HostTensor> = vec![gy.clone()];
+                    bwd_owned.extend(residuals);
                     for t in model.block_args(0) {
-                        bwd_args.push(t);
+                        bwd_owned.push(t.clone());
                     }
+                    let bwd_args: Vec<Arg> =
+                        bwd_owned.iter().map(Arg::Host).collect();
                     rt.execute("block_bwd_residuals", &bwd_args).unwrap();
                 });
         }

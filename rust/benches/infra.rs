@@ -58,9 +58,11 @@ fn main() {
         }
     });
 
+    // Parse a manifest.json if artifacts exist (pjrt builds); otherwise
+    // synthesize a comparable JSON document so the bench runs everywhere.
     let manifest = std::fs::read_to_string("artifacts/toy/manifest.json")
-        .expect("run `make artifacts` first");
-    harness::bench("json/parse toy manifest", 3, 100, || {
+        .unwrap_or_else(|_| synthetic_manifest());
+    harness::bench("json/parse manifest", 3, 100, || {
         let _ = Json::parse(&manifest).unwrap();
     });
 
@@ -68,4 +70,34 @@ fn main() {
     harness::bench("rng/normal_vec 1M", 1, 10, || {
         let _ = rng.normal_vec(1_000_000, 1.0);
     });
+}
+
+/// A manifest-shaped JSON document of realistic size (≈ the toy config's
+/// 10 artifacts × 25 arg specs) for the parse bench.
+fn synthetic_manifest() -> String {
+    let mut s = String::from(
+        r#"{"config":{"name":"toy","vocab":256,"d_model":64,"n_layers":2,
+"n_heads":4,"n_kv_heads":2,"head_dim":16,"d_ff":128,"seq":32,"batch":1,
+"rank":4,"alpha":8.0,"scale":2.0,"param_count":368000,
+"lora_param_count":9216},"artifacts":{"#,
+    );
+    for a in 0..10 {
+        if a > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            r#""artifact_{a}":{{"file":"artifact_{a}.hlo.txt","args":["#
+        ));
+        for i in 0..25 {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                r#"{{"name":"arg_{i}","shape":[1,32,64],"dtype":"f32"}}"#
+            ));
+        }
+        s.push_str(r#"],"outputs":15}"#);
+    }
+    s.push_str("}}");
+    s
 }

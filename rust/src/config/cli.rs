@@ -105,18 +105,24 @@ USAGE: mesp <command> [--flag value]...
 COMMANDS
   train       Run a training session.
               --config toy|small|e2e100m  --method mesp|mebp|mezo|storeh
-              --steps N  --lr F  --seed N  --optimizer sgd|momentum|adam
-              --log-every N  --metrics PATH.jsonl  --spill-limit BYTES
-              --artifacts DIR
+              --backend reference|pjrt  --steps N  --lr F  --seed N
+              --optimizer sgd|momentum|adam  --log-every N
+              --metrics PATH.jsonl  --spill-limit BYTES  --artifacts DIR
   simulate    Evaluate the analytical memory model at Qwen2.5 dims.
               --model 0.5b|1.5b|3b  --seq N  --rank N  [--breakdown]
-  gradcheck   Assert MeSP ≡ MeBP ≡ store-h gradients on a compiled config.
-              --config toy  --seeds N  --tol F
+  gradcheck   Assert MeSP ≡ MeBP ≡ store-h gradients on a runnable config.
+              --config toy  --backend reference|pjrt  --seeds N  --tol F
   mezo-quality  Gradient-quality analysis (Table 3). --config small
   reproduce   Regenerate paper tables. --table 1..11 | --all  [--steps N]
               [--out FILE]
-  inspect     List a config's artifacts and arg specs. --config toy
+  inspect     List a config's artifact specs. --config toy
+              --backend reference|pjrt  [--artifacts DIR]
   help        This text.
+
+The default backend is `reference`: a pure-Rust in-process implementation
+of the artifact surface that needs no XLA toolchain or Python artifacts.
+Build with `--features pjrt` (and run `make artifacts`) to execute the
+AOT-compiled HLO artifacts instead.
 ";
 
 #[cfg(test)]

@@ -49,6 +49,34 @@ impl Method {
     }
 }
 
+/// Compute-backend selection (see `runtime::Backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-Rust in-process reference backend — no external toolchain.
+    #[default]
+    Reference,
+    /// PJRT execution of AOT-compiled HLO artifacts (cargo feature
+    /// `pjrt`; requires `make artifacts`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> anyhow::Result<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "reference" | "ref" | "cpu" => Ok(BackendKind::Reference),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            _ => anyhow::bail!("unknown backend '{s}' (reference|pjrt)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Reference => "reference",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
 /// Model + runtime shape parameters. Mirrors python ModelConfig.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelDims {
@@ -179,8 +207,11 @@ impl OptimizerKind {
 /// Full training-run configuration.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
-    /// Compiled config name == artifacts/<name>/ directory.
+    /// Runnable config name (`presets::compiled` for the reference
+    /// backend; `artifacts/<name>/` directory for pjrt).
     pub config: String,
+    /// Which compute backend executes the artifact surface.
+    pub backend: BackendKind,
     pub method: Method,
     pub steps: usize,
     pub lr: f32,
@@ -201,6 +232,7 @@ impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
             config: "toy".into(),
+            backend: BackendKind::Reference,
             method: Method::Mesp,
             steps: 10,
             lr: 1e-4,
@@ -263,5 +295,14 @@ mod tests {
     fn optimizer_state_slots() {
         assert_eq!(OptimizerKind::parse("sgd").unwrap().state_slots(), 0);
         assert_eq!(OptimizerKind::parse("adam").unwrap().state_slots(), 2);
+    }
+
+    #[test]
+    fn backend_parse_and_default() {
+        assert_eq!(BackendKind::parse("reference").unwrap(), BackendKind::Reference);
+        assert_eq!(BackendKind::parse("PJRT").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(TrainConfig::default().backend, BackendKind::Reference);
+        assert_eq!(BackendKind::Reference.name(), "reference");
     }
 }

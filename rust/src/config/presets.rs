@@ -76,6 +76,81 @@ pub fn by_name(name: &str, seq: usize, rank: usize) -> anyhow::Result<ModelDims>
     }
 }
 
+// ---------------------------------------------------------------------
+// Runnable configs: the dims the reference backend instantiates directly
+// (and the pjrt backend compiles via `make artifacts`). Single source of
+// truth on the Rust side, mirroring python/compile/configs.py — keep the
+// two in sync.
+
+/// Minimal dims for fast unit/integration tests and gradcheck.
+fn toy(name: &str) -> ModelDims {
+    ModelDims {
+        name: name.into(),
+        vocab: 256,
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        n_kv_heads: 2,
+        head_dim: 16,
+        d_ff: 128,
+        seq: 32,
+        batch: 1,
+        rank: 4,
+        alpha: 8.0,
+    }
+}
+
+/// Convergence runs, MeZO gradient-quality analysis, benches.
+fn small() -> ModelDims {
+    ModelDims {
+        name: "small".into(),
+        vocab: 512,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        n_kv_heads: 2,
+        head_dim: 32,
+        d_ff: 256,
+        seq: 64,
+        batch: 1,
+        rank: 8,
+        alpha: 16.0,
+    }
+}
+
+/// The end-to-end validation model: ~98M params (DESIGN.md §2).
+fn e2e100m() -> ModelDims {
+    ModelDims {
+        name: "e2e100m".into(),
+        vocab: 16384,
+        d_model: 768,
+        n_layers: 12,
+        n_heads: 12,
+        n_kv_heads: 4,
+        head_dim: 64,
+        d_ff: 2304,
+        seq: 128,
+        batch: 1,
+        rank: 8,
+        alpha: 16.0,
+    }
+}
+
+/// Dims of a runnable config by name. `toy_flash` shares toy's dims: on
+/// the pjrt backend it selects the flash-attention/all-Pallas artifact
+/// set; on the reference backend both names run the same math.
+pub fn compiled(name: &str) -> anyhow::Result<ModelDims> {
+    match name {
+        "toy" => Ok(toy("toy")),
+        "toy_flash" => Ok(toy("toy_flash")),
+        "small" => Ok(small()),
+        "e2e100m" => Ok(e2e100m()),
+        _ => anyhow::bail!(
+            "unknown config '{name}' (toy|toy_flash|small|e2e100m)"
+        ),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,5 +177,20 @@ mod tests {
     fn by_name_lookup() {
         assert!(by_name("0.5b", 128, 4).is_ok());
         assert!(by_name("7b", 128, 4).is_err());
+    }
+
+    #[test]
+    fn compiled_configs_resolve() {
+        let t = compiled("toy").unwrap();
+        assert_eq!((t.d_model, t.n_layers, t.seq, t.rank), (64, 2, 32, 4));
+        assert_eq!(t.scale(), 2.0);
+        let s = compiled("small").unwrap();
+        assert_eq!((s.d_model, s.n_layers), (128, 4));
+        let e = compiled("e2e100m").unwrap();
+        // ~98M frozen params (DESIGN.md §2)
+        let p = e.frozen_params_total();
+        assert!((80_000_000..120_000_000).contains(&p), "{p}");
+        assert!(compiled("toy_flash").is_ok());
+        assert!(compiled("huge").is_err());
     }
 }

@@ -1,18 +1,47 @@
 //! Training session coordinator — the L3 top level that wires config →
-//! runtime → data pipeline → engine → metrics, and the sweep runner the
+//! backend → data pipeline → engine → metrics, and the sweep runner the
 //! reproduce drivers use to run method grids.
 
-use std::path::Path;
 use std::sync::Arc;
 
-use crate::config::{Method, TrainConfig};
+use crate::config::{presets, BackendKind, Method, TrainConfig};
 use crate::data::PrefetchLoader;
 use crate::memory::MemoryTracker;
 use crate::metrics::{MetricsLogger, RunSummary};
-use crate::runtime::Runtime;
+use crate::runtime::{Backend, ReferenceBackend};
 use crate::train::{build_engine, common::EngineCtx, Engine};
 
-/// A live training session: one compiled config + one method.
+/// Instantiate the compute backend a config asks for.
+///
+/// * [`BackendKind::Reference`] — in-process pure-Rust backend, dims from
+///   `presets::compiled`; no files, no toolchain.
+/// * [`BackendKind::Pjrt`] — the PJRT artifact runtime, dims from
+///   `artifacts/<config>/manifest.json` (requires the `pjrt` cargo
+///   feature and `make artifacts`).
+pub fn make_backend(
+    cfg: &TrainConfig,
+    tracker: MemoryTracker,
+) -> anyhow::Result<Arc<dyn Backend>> {
+    match cfg.backend {
+        BackendKind::Reference => {
+            let dims = presets::compiled(&cfg.config)?;
+            Ok(Arc::new(ReferenceBackend::new(dims, tracker)))
+        }
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => Ok(Arc::new(crate::runtime::Runtime::load(
+            std::path::Path::new(&cfg.artifacts_dir),
+            &cfg.config,
+            tracker,
+        )?)),
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => anyhow::bail!(
+            "this build has no PJRT support; rebuild with `--features pjrt` \
+             (and run `make artifacts`) or use --backend reference"
+        ),
+    }
+}
+
+/// A live training session: one runnable config + one method.
 pub struct TrainSession {
     pub cfg: TrainConfig,
     pub engine: Box<dyn Engine>,
@@ -22,15 +51,11 @@ pub struct TrainSession {
 }
 
 impl TrainSession {
-    /// Build a session: load artifacts, init model, spawn the data
-    /// pipeline. Executables compile lazily on first use.
+    /// Build a session: instantiate the backend, init model, spawn the
+    /// data pipeline.
     pub fn new(cfg: TrainConfig) -> anyhow::Result<TrainSession> {
         let tracker = MemoryTracker::new();
-        let rt = Arc::new(Runtime::load(
-            Path::new(&cfg.artifacts_dir),
-            &cfg.config,
-            tracker.clone(),
-        )?);
+        let rt = make_backend(&cfg, tracker.clone())?;
         let dims = rt.dims().clone();
         let ctx = EngineCtx::new(rt, cfg.seed, cfg.optimizer, cfg.lr,
                                  cfg.spill_limit);
@@ -40,7 +65,7 @@ impl TrainSession {
             tracker.clone(),
         );
         let metrics = MetricsLogger::new(
-            cfg.metrics_path.as_deref().map(Path::new),
+            cfg.metrics_path.as_deref().map(std::path::Path::new),
             cfg.log_every,
         )?;
         Ok(TrainSession { cfg, engine, loader, metrics, tracker })

@@ -1,8 +1,7 @@
 //! # mesp — Memory-Efficient Structured Backpropagation
 //!
 //! A full-system reproduction of *"Memory-Efficient Structured
-//! Backpropagation for On-Device LLM Fine-Tuning"* as a three-layer
-//! Rust + JAX + Pallas stack:
+//! Backpropagation for On-Device LLM Fine-Tuning"*:
 //!
 //! * **L3 (this crate)** — the training coordinator: per-block forward
 //!   scheduling with checkpoint-only storage, reverse-order backward with
@@ -11,13 +10,20 @@
 //!   a byte-accurate memory tracker, an analytical Qwen-scale memory
 //!   model, a data pipeline, metrics, and reproduction drivers for every
 //!   table and figure in the paper.
+//! * **Compute backends** ([`runtime::Backend`]) — the engines talk to a
+//!   pluggable backend trait. The default [`runtime::ReferenceBackend`]
+//!   implements the whole artifact surface (including the Appendix-A
+//!   manual LoRA VJPs that recompute `h = xA` in the backward) in pure
+//!   Rust, so the system builds and trains from a clean checkout. The
+//!   `pjrt` cargo feature adds [`runtime::client::Runtime`], which
+//!   executes AOT-compiled HLO artifacts instead.
 //! * **L2 (python/compile/model.py)** — the Qwen2.5-style transformer
 //!   block and the manually derived Appendix-A backward passes, AOT-lowered
-//!   to HLO text once (`make artifacts`).
+//!   to HLO text once (`make artifacts`; pjrt backend only).
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the hot spots,
 //!   headlined by the fused LoRA gradient that recomputes `h = xA` in VMEM.
 //!
-//! Quickstart: `make artifacts && cargo run --release -- train --config toy`.
+//! Quickstart: `cargo run --release -- train --config toy`.
 
 pub mod config;
 pub mod coordinator;

@@ -1,13 +1,15 @@
 //! `mesp` CLI — the launcher for the MeSP reproduction system.
 //!
 //! See `mesp help` (config::cli::USAGE) for the command reference. The
-//! binary is self-contained after `make artifacts`: Python never runs on
-//! any code path reachable from here.
+//! binary is fully self-contained on the default reference backend; with
+//! `--features pjrt` it can instead execute the AOT artifact sets
+//! produced by `make artifacts` (Python never runs on any code path
+//! reachable from here).
 
 use std::path::Path;
 
 use mesp::config::cli::{Args, USAGE};
-use mesp::config::{presets, Method, OptimizerKind, TrainConfig};
+use mesp::config::{presets, BackendKind, Method, OptimizerKind, TrainConfig};
 use mesp::coordinator::TrainSession;
 use mesp::memory::model as memmodel;
 use mesp::metrics::grad_quality;
@@ -42,6 +44,7 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
 fn train_config(args: &Args) -> anyhow::Result<TrainConfig> {
     Ok(TrainConfig {
         config: args.str("config", "toy"),
+        backend: BackendKind::parse(&args.str("backend", "reference"))?,
         method: Method::parse(&args.str("method", "mesp"))?,
         steps: args.usize("steps", 10)?,
         lr: args.f32("lr", 1e-4)?,
@@ -57,15 +60,16 @@ fn train_config(args: &Args) -> anyhow::Result<TrainConfig> {
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     args.expect_known(&[
-        "config", "method", "steps", "lr", "seed", "optimizer", "mezo-eps",
-        "log-every", "spill-limit", "metrics", "artifacts",
+        "config", "backend", "method", "steps", "lr", "seed", "optimizer",
+        "mezo-eps", "log-every", "spill-limit", "metrics", "artifacts",
     ])?;
     let cfg = train_config(args)?;
     let steps = cfg.steps;
     let method = cfg.method;
     println!(
-        "training config={} method={} steps={} lr={} optimizer={:?}",
-        cfg.config, method.name(), steps, cfg.lr, cfg.optimizer
+        "training config={} backend={} method={} steps={} lr={} optimizer={:?}",
+        cfg.config, cfg.backend.name(), method.name(), steps, cfg.lr,
+        cfg.optimizer
     );
     let mut sess = TrainSession::new(cfg)?;
     let summary = sess.run(steps)?;
@@ -99,7 +103,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_gradcheck(args: &Args) -> anyhow::Result<()> {
-    args.expect_known(&["config", "seeds", "tol", "artifacts"])?;
+    args.expect_known(&["config", "backend", "seeds", "tol", "artifacts"])?;
     let config = args.str("config", "toy");
     let seeds = args.usize("seeds", 3)?;
     let tol = args.f32("tol", 2e-4)? as f64;
@@ -107,6 +111,7 @@ fn cmd_gradcheck(args: &Args) -> anyhow::Result<()> {
     for seed in 0..seeds as u64 {
         let base = TrainConfig {
             config: config.clone(),
+            backend: BackendKind::parse(&args.str("backend", "reference"))?,
             seed: 1000 + seed,
             log_every: usize::MAX,
             artifacts_dir: args.str("artifacts", "artifacts"),
@@ -179,20 +184,34 @@ fn cmd_reproduce(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
-    args.expect_known(&["config", "artifacts"])?;
-    let dir = Path::new(&args.str("artifacts", "artifacts"))
-        .join(args.str("config", "toy"));
-    let man = mesp::runtime::Manifest::load(&dir)?;
+    args.expect_known(&["config", "backend", "artifacts"])?;
+    let backend = BackendKind::parse(&args.str("backend", "reference"))?;
+    let config = args.str("config", "toy");
+    let (dims, artifacts): (_, Vec<mesp::runtime::ArtifactSpec>) = match backend {
+        BackendKind::Reference => {
+            let dims = presets::compiled(&config)?;
+            let be = mesp::runtime::ReferenceBackend::new(
+                dims.clone(), mesp::memory::MemoryTracker::new());
+            (dims, be.artifact_specs().to_vec())
+        }
+        BackendKind::Pjrt => {
+            let dir = Path::new(&args.str("artifacts", "artifacts")).join(&config);
+            let man = mesp::runtime::Manifest::load(&dir)?;
+            (man.dims.clone(), man.artifacts.clone())
+        }
+    };
     println!(
-        "config {}: d={} L={} H={}/{} ff={} seq={} r={} ({}M params, {}k LoRA)",
-        man.dims.name, man.dims.d_model, man.dims.n_layers, man.dims.n_heads,
-        man.dims.n_kv_heads, man.dims.d_ff, man.dims.seq, man.dims.rank,
-        man.param_count / 1_000_000, man.lora_param_count / 1000
+        "config {} (backend {}): d={} L={} H={}/{} ff={} seq={} r={} \
+         ({}M params, {}k LoRA)",
+        dims.name, backend.name(), dims.d_model, dims.n_layers, dims.n_heads,
+        dims.n_kv_heads, dims.d_ff, dims.seq, dims.rank,
+        dims.frozen_params_total() / 1_000_000,
+        dims.lora_params_total() / 1000
     );
-    for a in &man.artifacts {
+    for a in &artifacts {
         println!("  {:<22} {:>2} args -> {:>2} outputs  ({})",
                  a.name, a.args.len(), a.outputs,
-                 a.file.file_name().unwrap().to_string_lossy());
+                 a.file.file_name().unwrap_or_default().to_string_lossy());
     }
     Ok(())
 }

@@ -1,0 +1,121 @@
+//! The compute-backend abstraction: everything above this line (engines,
+//! coordinator, CLI, reproduce drivers) talks to a [`Backend`] trait
+//! object and never to a concrete runtime.
+//!
+//! A backend exposes the paper's artifact surface by NAME — `embed_fwd`,
+//! `block_fwd`, `block_bwd_mesp`, `lm_loss_grad`, … — with positional
+//! arguments in the manifest ABI order. Two implementations exist:
+//!
+//! * [`crate::runtime::ReferenceBackend`] — pure Rust, in-process, no
+//!   external toolchain; the default.
+//! * [`crate::runtime::Runtime`] — the PJRT client over AOT-compiled HLO
+//!   artifacts (cargo feature `pjrt`).
+
+use crate::config::ModelDims;
+use crate::memory::MemoryTracker;
+use crate::tensor::HostTensor;
+
+/// Cumulative per-artifact execution statistics (perf §L3).
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+/// Shared per-artifact stats bookkeeping both backends use.
+#[derive(Debug, Default)]
+pub struct StatsRecorder {
+    inner: std::sync::Mutex<std::collections::HashMap<String, ExecStats>>,
+}
+
+impl StatsRecorder {
+    pub fn new() -> StatsRecorder {
+        StatsRecorder::default()
+    }
+
+    /// Record one call of `name` taking `secs`.
+    pub fn record(&self, name: &str, secs: f64) {
+        let mut stats = self.inner.lock().unwrap();
+        let e = stats.entry(name.to_string()).or_default();
+        e.calls += 1;
+        e.total_secs += secs;
+    }
+
+    /// Snapshot, slowest artifact first.
+    pub fn snapshot(&self) -> Vec<(String, ExecStats)> {
+        let mut v: Vec<_> = self
+            .inner
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        v.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
+        v
+    }
+}
+
+/// A backend-resident buffer: weights uploaded once and reused across
+/// every call (the paper-equivalent of keeping frozen base weights
+/// resident while only LoRA params move).
+pub enum DeviceBuffer {
+    /// The reference backend's "device" is host memory: a resident copy.
+    Resident(HostTensor),
+    /// A PJRT device buffer (CPU platform: device memory IS host memory).
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtBuffer),
+}
+
+/// An argument to [`Backend::execute`]: either a host tensor uploaded for
+/// the duration of the call, or a persistent buffer from
+/// [`Backend::upload`].
+pub enum Arg<'a> {
+    Host(&'a HostTensor),
+    Device(&'a DeviceBuffer),
+}
+
+/// A compute backend serving the artifact surface.
+///
+/// Contract (every implementation must honour all four):
+///
+/// 1. **ABI** — `execute(name, args)` takes positional args in manifest
+///    order and returns the artifact's output tuple in declared order;
+///    arg count, shapes and dtypes of host args are validated against the
+///    artifact spec before any compute runs.
+/// 2. **Gradient parity** — `block_bwd_mesp`, `block_bwd_storeh` and the
+///    `block_fwd_residuals`/`block_bwd_residuals` pair must produce
+///    mathematically identical gradients for identical inputs (the paper's
+///    §4 claim); tests/gradcheck.rs enforces this per backend.
+/// 3. **Memory accounting** — transient host-arg bytes of every call are
+///    registered with the shared [`MemoryTracker`] under `exec:<name>` for
+///    the duration of the call, so step peaks include call overhead.
+/// 4. **Statelessness** — backends hold no model state between calls
+///    beyond buffers explicitly created via `upload`; all training state
+///    lives in the engines.
+pub trait Backend: Send + Sync {
+    /// Human-readable backend name ("reference", "pjrt").
+    fn kind(&self) -> &'static str;
+
+    /// Model dimensions this backend was instantiated for.
+    fn dims(&self) -> &ModelDims;
+
+    /// The shared memory tracker call overhead is accounted against.
+    fn tracker(&self) -> &MemoryTracker;
+
+    /// Whether artifact `name` is available on this backend.
+    fn has_artifact(&self, name: &str) -> bool;
+
+    /// Prepare a set of artifacts (compile executables, etc.) so step
+    /// timing excludes one-time setup. Unknown names are skipped.
+    fn warmup(&self, names: &[&str]) -> anyhow::Result<()>;
+
+    /// Upload a host tensor to a persistent backend-resident buffer.
+    fn upload(&self, t: &HostTensor) -> anyhow::Result<DeviceBuffer>;
+
+    /// Execute artifact `name` with positional `args`; returns the output
+    /// tuple as host tensors in artifact output order.
+    fn execute(&self, name: &str, args: &[Arg]) -> anyhow::Result<Vec<HostTensor>>;
+
+    /// Snapshot of per-artifact execution stats, slowest first.
+    fn exec_stats(&self) -> Vec<(String, ExecStats)>;
+}

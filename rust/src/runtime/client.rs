@@ -1,5 +1,7 @@
-//! PJRT runtime: loads HLO-text artifacts, compiles them once on the CPU
-//! client, and executes them with shape/dtype-checked host tensors.
+//! PJRT runtime (cargo feature `pjrt`): loads HLO-text artifacts,
+//! compiles them once on the CPU client, and executes them with
+//! shape/dtype-checked host tensors — one of the two [`Backend`]
+//! implementations.
 //!
 //! Adapted from /opt/xla-example/load_hlo: HLO *text* is the interchange
 //! format (the crate's XLA 0.5.1 rejects jax≥0.5 serialized protos). All
@@ -15,31 +17,16 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::memory::MemoryTracker;
-use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::backend::{Arg, Backend, DeviceBuffer, ExecStats, StatsRecorder};
+use crate::runtime::manifest::Manifest;
 use crate::tensor::{Data, HostTensor};
-
-/// Cumulative per-artifact execution statistics (perf §L3).
-#[derive(Debug, Clone, Default)]
-pub struct ExecStats {
-    pub calls: u64,
-    pub total_secs: f64,
-}
-
-/// An argument to `execute_mixed`: either a host tensor (uploaded for the
-/// call) or a persistent device buffer (uploaded once — frozen weights,
-/// embeddings). Keeping weights device-resident removed the dominant
-/// memcpy cost at 100M scale (EXPERIMENTS.md §Perf: 19.5s → see log).
-pub enum Arg<'a> {
-    Host(&'a HostTensor),
-    Device(&'a xla::PjRtBuffer),
-}
 
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
-    stats: Mutex<HashMap<String, ExecStats>>,
-    pub tracker: MemoryTracker,
+    stats: StatsRecorder,
+    tracker: MemoryTracker,
 }
 
 impl Runtime {
@@ -55,13 +42,9 @@ impl Runtime {
             client,
             manifest,
             exes: Mutex::new(HashMap::new()),
-            stats: Mutex::new(HashMap::new()),
+            stats: StatsRecorder::new(),
             tracker,
         })
-    }
-
-    pub fn dims(&self) -> &crate::config::ModelDims {
-        &self.manifest.dims
     }
 
     /// Compile (or fetch cached) an artifact's executable.
@@ -84,57 +67,6 @@ impl Runtime {
             .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
         exes.insert(name.to_string(), exe);
         Ok(())
-    }
-
-    /// Pre-compile a set of artifacts (so step timing excludes compiles).
-    pub fn warmup(&self, names: &[&str]) -> anyhow::Result<()> {
-        for n in names {
-            if self.manifest.has_artifact(n) {
-                self.executable(n)?;
-            }
-        }
-        Ok(())
-    }
-
-    fn check_args(spec: &ArtifactSpec, args: &[&HostTensor]) -> anyhow::Result<()> {
-        if spec.args.len() != args.len() {
-            anyhow::bail!(
-                "{}: expected {} args, got {}",
-                spec.name, spec.args.len(), args.len()
-            );
-        }
-        for (a, t) in spec.args.iter().zip(args) {
-            if a.shape != t.shape {
-                anyhow::bail!(
-                    "{}: arg '{}' shape {:?} != expected {:?}",
-                    spec.name, a.name, t.shape, a.shape
-                );
-            }
-            if a.dtype != t.dtype() {
-                anyhow::bail!(
-                    "{}: arg '{}' dtype {:?} != expected {:?}",
-                    spec.name, a.name, t.dtype(), a.dtype
-                );
-            }
-        }
-        Ok(())
-    }
-
-    fn to_literal(t: &HostTensor) -> anyhow::Result<xla::Literal> {
-        let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
-        let lit = match &t.data {
-            Data::F32(v) => xla::Literal::vec1(v)
-                .reshape(&dims)
-                .map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))?,
-            Data::I32(v) => xla::Literal::vec1(v)
-                .reshape(&dims)
-                .map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))?,
-            Data::U8(v) => xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::U8, &t.shape, v,
-            )
-            .map_err(|e| anyhow::anyhow!("u8 literal: {e:?}"))?,
-        };
-        Ok(lit)
     }
 
     fn from_literal(lit: &xla::Literal) -> anyhow::Result<HostTensor> {
@@ -163,10 +95,10 @@ impl Runtime {
         })
     }
 
-    /// Upload a host tensor to a persistent device buffer (weights path).
+    /// Upload a host tensor to a persistent PJRT buffer (weights path).
     /// On the CPU platform this is a one-time memcpy; buffers are reused
-    /// across every subsequent `execute_mixed` call.
-    pub fn upload(&self, t: &HostTensor) -> anyhow::Result<xla::PjRtBuffer> {
+    /// across every subsequent `execute` call.
+    fn upload_buffer(&self, t: &HostTensor) -> anyhow::Result<xla::PjRtBuffer> {
         let buf = match &t.data {
             Data::F32(v) => self
                 .client
@@ -189,13 +121,43 @@ impl Runtime {
         .map_err(|e| anyhow::anyhow!("upload: {e:?}"))?;
         Ok(buf)
     }
+}
+
+impl Backend for Runtime {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn dims(&self) -> &crate::config::ModelDims {
+        &self.manifest.dims
+    }
+
+    fn tracker(&self) -> &MemoryTracker {
+        &self.tracker
+    }
+
+    fn has_artifact(&self, name: &str) -> bool {
+        self.manifest.has_artifact(name)
+    }
+
+    /// Pre-compile a set of artifacts (so step timing excludes compiles).
+    fn warmup(&self, names: &[&str]) -> anyhow::Result<()> {
+        for n in names {
+            if self.manifest.has_artifact(n) {
+                self.executable(n)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn upload(&self, t: &HostTensor) -> anyhow::Result<DeviceBuffer> {
+        Ok(DeviceBuffer::Pjrt(self.upload_buffer(t)?))
+    }
 
     /// Execute with a mix of host tensors (uploaded per call) and
     /// persistent device buffers. Host args are shape/dtype-checked
     /// against the manifest; device args are trusted (validated at upload).
-    pub fn execute_mixed(&self, name: &str, args: &[Arg])
-        -> anyhow::Result<Vec<HostTensor>>
-    {
+    fn execute(&self, name: &str, args: &[Arg]) -> anyhow::Result<Vec<HostTensor>> {
         let spec = self.manifest.artifact(name)?.clone();
         anyhow::ensure!(spec.args.len() == args.len(),
                         "{name}: expected {} args, got {}",
@@ -218,21 +180,24 @@ impl Runtime {
         let mut transients: Vec<xla::PjRtBuffer> = Vec::new();
         let mut order: Vec<usize> = Vec::with_capacity(args.len()); // map
         for arg in args {
-            if let Arg::Host(t) = arg {
-                transients.push(self.upload(t)?);
-                order.push(transients.len() - 1);
-            } else {
-                order.push(usize::MAX);
+            match arg {
+                Arg::Host(t) => {
+                    transients.push(self.upload_buffer(t)?);
+                    order.push(transients.len() - 1);
+                }
+                Arg::Device(_) => order.push(usize::MAX),
             }
         }
-        let refs: Vec<&xla::PjRtBuffer> = args
-            .iter()
-            .zip(&order)
-            .map(|(a, o)| match a {
-                Arg::Host(_) => &transients[*o],
-                Arg::Device(b) => *b,
-            })
-            .collect();
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for (a, o) in args.iter().zip(&order) {
+            match a {
+                Arg::Host(_) => refs.push(&transients[*o]),
+                Arg::Device(DeviceBuffer::Pjrt(b)) => refs.push(b),
+                Arg::Device(DeviceBuffer::Resident(_)) => anyhow::bail!(
+                    "{name}: reference-backend buffer passed to the PJRT runtime"
+                ),
+            }
+        }
         let exes = self.exes.lock().unwrap();
         let exe = exes.get(name).expect("compiled above");
         let out = exe
@@ -256,75 +221,12 @@ impl Runtime {
                         "{name}: manifest promises {} outputs, got {}",
                         spec.outputs, outputs.len());
 
-        let dt = start.elapsed().as_secs_f64();
-        let mut stats = self.stats.lock().unwrap();
-        let e = stats.entry(name.to_string()).or_default();
-        e.calls += 1;
-        e.total_secs += dt;
-        Ok(outputs)
-    }
-
-    /// Execute artifact `name` with positional `args`. Returns the
-    /// decomposed output tuple as host tensors, in artifact output order.
-    pub fn execute(&self, name: &str, args: &[&HostTensor])
-        -> anyhow::Result<Vec<HostTensor>>
-    {
-        let spec = self.manifest.artifact(name)?.clone();
-        Self::check_args(&spec, args)?;
-        self.executable(name)?;
-
-        // Transient call I/O is tracked for the duration of the call.
-        let in_bytes: u64 = args.iter().map(|t| t.bytes()).sum();
-        let _io_guard = self.tracker.track(&format!("exec:{name}"), in_bytes);
-
-        let start = Instant::now();
-        let literals: Vec<xla::Literal> = args
-            .iter()
-            .map(|t| Self::to_literal(t))
-            .collect::<anyhow::Result<_>>()?;
-        let exes = self.exes.lock().unwrap();
-        let exe = exes.get(name).expect("compiled above");
-        let out = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
-        drop(exes);
-        drop(literals);
-
-        let mut tuple = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("readback {name}: {e:?}"))?;
-        let parts = tuple
-            .decompose_tuple()
-            .map_err(|e| anyhow::anyhow!("decompose {name}: {e:?}"))?;
-        let outputs: Vec<HostTensor> = parts
-            .iter()
-            .map(Self::from_literal)
-            .collect::<anyhow::Result<_>>()?;
-        if outputs.len() != spec.outputs {
-            anyhow::bail!(
-                "{name}: manifest promises {} outputs, got {}",
-                spec.outputs, outputs.len()
-            );
-        }
-
-        let dt = start.elapsed().as_secs_f64();
-        let mut stats = self.stats.lock().unwrap();
-        let e = stats.entry(name.to_string()).or_default();
-        e.calls += 1;
-        e.total_secs += dt;
+        self.stats.record(name, start.elapsed().as_secs_f64());
         Ok(outputs)
     }
 
     /// Snapshot of per-artifact execution stats.
-    pub fn exec_stats(&self) -> Vec<(String, ExecStats)> {
-        let mut v: Vec<_> = self
-            .stats
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|(k, s)| (k.clone(), s.clone()))
-            .collect();
-        v.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
-        v
+    fn exec_stats(&self) -> Vec<(String, ExecStats)> {
+        self.stats.snapshot()
     }
 }

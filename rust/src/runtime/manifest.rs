@@ -134,26 +134,73 @@ impl Manifest {
 mod tests {
     use super::*;
 
-    fn toy_dir() -> PathBuf {
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/toy")
+    /// A minimal manifest.json in the exact schema aot.py emits.
+    const TOY_MANIFEST: &str = r#"{
+        "config": {
+            "name": "toy", "vocab": 256, "d_model": 64, "n_layers": 2,
+            "n_heads": 4, "n_kv_heads": 2, "head_dim": 16, "d_ff": 128,
+            "seq": 32, "batch": 1, "rank": 4, "alpha": 8.0, "scale": 2.0,
+            "param_count": 368000, "lora_param_count": 9216
+        },
+        "artifacts": {
+            "block_bwd_mesp": {
+                "file": "block_bwd_mesp.hlo.txt",
+                "args": [
+                    {"name": "x", "shape": [1, 32, 64], "dtype": "f32"},
+                    {"name": "g_y", "shape": [1, 32, 64], "dtype": "f32"}
+                ],
+                "outputs": 15
+            },
+            "embed_fwd": {
+                "file": "embed_fwd.hlo.txt",
+                "args": [
+                    {"name": "tokens", "shape": [1, 32], "dtype": "i32"},
+                    {"name": "emb", "shape": [256, 64], "dtype": "f32"}
+                ],
+                "outputs": 1
+            }
+        }
+    }"#;
+
+    /// Per-test dir: parallel test threads must not share one file.
+    fn write_manifest(test: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("mesp-manifest-{test}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), TOY_MANIFEST).unwrap();
+        dir
     }
 
     #[test]
-    fn loads_toy_manifest() {
-        let m = Manifest::load(&toy_dir()).unwrap();
+    fn parses_manifest_schema() {
+        let dir = write_manifest("schema");
+        let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.dims.d_model, 64);
         assert_eq!(m.dims.n_layers, 2);
+        assert_eq!(m.dims.alpha, 8.0);
+        assert_eq!(m.scale, 2.0);
+        assert_eq!(m.lora_param_count, 9216);
         assert!(m.has_artifact("block_bwd_mesp"));
         let bwd = m.artifact("block_bwd_mesp").unwrap();
         assert_eq!(bwd.outputs, 15);
         assert_eq!(bwd.args[0].name, "x");
         assert_eq!(bwd.args[0].shape, vec![1, 32, 64]);
-        assert_eq!(bwd.args.len(), 2 + 9 + 14);
+        assert_eq!(bwd.file, dir.join("block_bwd_mesp.hlo.txt"));
+        let emb = m.artifact("embed_fwd").unwrap();
+        assert_eq!(emb.args[0].dtype, crate::tensor::DType::I32);
     }
 
     #[test]
     fn missing_artifact_is_error() {
-        let m = Manifest::load(&toy_dir()).unwrap();
-        assert!(m.artifact("nope").is_err());
+        let dir = write_manifest("missing-artifact");
+        let m = Manifest::load(&dir).unwrap();
+        let err = m.artifact("nope").unwrap_err();
+        assert!(err.to_string().contains("not in manifest"));
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        let dir = std::env::temp_dir().join("mesp-manifest-definitely-absent");
+        assert!(Manifest::load(&dir).is_err());
     }
 }

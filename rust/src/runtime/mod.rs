@@ -1,9 +1,49 @@
-//! PJRT runtime layer: artifact manifests + executable cache + tracked
-//! execution. The Rust half of the AOT bridge (DESIGN.md §4); Python never
-//! runs after `make artifacts`.
+//! Runtime layer: the pluggable compute-backend abstraction and its two
+//! implementations.
+//!
+//! # The backend trait contract
+//!
+//! [`Backend`] is the seam between the training coordinator (L3) and
+//! whatever executes the math. A backend serves the paper's artifact
+//! surface **by name** — `embed_fwd`, `block_fwd`, `block_fwd_saveh`,
+//! `block_fwd_residuals`, `block_bwd_mesp`, `block_bwd_storeh`,
+//! `block_bwd_residuals`, `lm_loss_fwd`, `lm_loss_grad`, `block_fwd_q4` —
+//! with positional arguments in manifest ABI order (leading activations,
+//! then the 9 frozen block weights, then the 14 LoRA tensors). Every
+//! implementation must:
+//!
+//! 1. validate host-arg count/shape/dtype against the artifact spec
+//!    before computing;
+//! 2. produce mathematically identical gradients across the three
+//!    backward variants (MeSP's fused recompute ≡ store-h ≡ MeBP's
+//!    residual path — the paper's §4 claim, enforced per backend by
+//!    `tests/gradcheck.rs`);
+//! 3. register transient host-arg bytes of every call with the shared
+//!    [`crate::memory::MemoryTracker`] under `exec:<name>` for the
+//!    duration of the call, so step peaks include call overhead;
+//! 4. hold no training state between calls beyond buffers explicitly
+//!    created via [`Backend::upload`].
+//!
+//! # Implementations
+//!
+//! * [`ReferenceBackend`] (default) — pure Rust, in-process
+//!   ([`refmath`] holds the block/loss math with the paper's Appendix-A
+//!   manual VJPs, recomputing `h = xA` in the backward). Builds and runs
+//!   from a clean checkout with no XLA toolchain or Python artifacts.
+//! * [`client::Runtime`] (cargo feature `pjrt`) — the PJRT client over
+//!   AOT-compiled HLO artifacts described by `manifest.json`
+//!   ([`manifest`] is the ABI contract written by
+//!   `python/compile/aot.py`).
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod manifest;
+pub mod reference;
+pub mod refmath;
 
-pub use client::{ExecStats, Runtime};
+pub use backend::{Arg, Backend, DeviceBuffer, ExecStats};
+#[cfg(feature = "pjrt")]
+pub use client::Runtime;
 pub use manifest::{ArgSpec, ArtifactSpec, Manifest};
+pub use reference::ReferenceBackend;

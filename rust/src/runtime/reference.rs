@@ -1,0 +1,523 @@
+//! The pure-Rust reference backend: implements the full artifact surface
+//! in-process — `embed_fwd`, the three block-forward variants, the three
+//! block-backward variants (MeSP fused recompute, store-h, MeBP
+//! residuals), both loss heads, and the int4 `block_fwd_q4` path — with
+//! no XLA toolchain, no Python artifacts and no files on disk.
+//!
+//! Arguments are validated against programmatically generated
+//! [`ArtifactSpec`]s that mirror what `python/compile/aot.py` writes into
+//! `manifest.json`, so the ABI contract is enforced identically on both
+//! backends. All math lives in [`super::refmath`]; the MeSP / store-h /
+//! residual backward variants share one implementation of the paper's
+//! Appendix-A VJPs and therefore return bitwise identical gradients.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::config::{ModelDims, FROZEN, PROJS};
+use crate::memory::MemoryTracker;
+use crate::model::quant;
+use crate::runtime::backend::{Arg, Backend, DeviceBuffer, ExecStats, StatsRecorder};
+use crate::runtime::manifest::{ArgSpec, ArtifactSpec};
+use crate::runtime::refmath as rm;
+use crate::tensor::{DType, HostTensor};
+
+/// Residual-set tensor names emitted by `block_fwd_residuals` (after y) —
+/// must match `python/compile/model.py::RESIDUALS`.
+pub const RESIDUALS: [&str; 19] = [
+    "x", "h1", "h2", "x2", "q_rope", "k_rope", "v_heads", "probs",
+    "attn_flat", "gate_out", "up_out", "silu_out",
+    "h_q", "h_k", "h_v", "h_o", "h_gate", "h_up", "h_down",
+];
+
+/// The seven quantized projection matrices of the q4 path, ABI order.
+pub const QUANT_MATS: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
+
+pub struct ReferenceBackend {
+    dims: ModelDims,
+    specs: Vec<ArtifactSpec>,
+    tracker: MemoryTracker,
+    stats: StatsRecorder,
+}
+
+impl ReferenceBackend {
+    pub fn new(dims: ModelDims, tracker: MemoryTracker) -> ReferenceBackend {
+        let specs = build_specs(&dims);
+        ReferenceBackend { dims, specs, tracker, stats: StatsRecorder::new() }
+    }
+
+    /// The synthesized artifact specs (what `mesp inspect` lists).
+    pub fn artifact_specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    fn spec(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.name == name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact '{name}' not implemented by the reference backend \
+                 (have: {})",
+                self.specs.iter().map(|s| s.name.as_str())
+                    .collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    fn dispatch(&self, name: &str, t: &[&HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        let d = &self.dims;
+        let (b, n, dm) = (d.batch, d.seq, d.d_model);
+        let m = b * n;
+        let r = d.rank;
+        let bnd = [b, n, dm];
+        let slices = |ts: &[&HostTensor]| -> Vec<&[f32]> { ts.iter().map(|t| t.as_f32()).collect() };
+        let grad_tensors = |g_x: Vec<f32>, grads: Vec<Vec<f32>>| -> Vec<HostTensor> {
+            let mut out = Vec::with_capacity(1 + grads.len());
+            out.push(HostTensor::f32(&bnd, g_x));
+            for (i, gv) in grads.into_iter().enumerate() {
+                let (din, dout) = d.proj_dims(PROJS[i / 2]);
+                let shape = if i % 2 == 0 { vec![din, r] } else { vec![r, dout] };
+                out.push(HostTensor::f32(&shape, gv));
+            }
+            out
+        };
+
+        Ok(match name {
+            "embed_fwd" => {
+                let out = rm::embed_fwd(t[0].as_i32(), t[1].as_f32(), dm);
+                vec![HostTensor::f32(&bnd, out)]
+            }
+            "block_fwd" => {
+                let c = rm::block_forward(d, t[0].as_f32(), &slices(&t[1..10]), &slices(&t[10..24]));
+                vec![HostTensor::f32(&bnd, c.y)]
+            }
+            "block_fwd_saveh" => {
+                let c = rm::block_forward(d, t[0].as_f32(), &slices(&t[1..10]), &slices(&t[10..24]));
+                let mut out = vec![HostTensor::f32(&bnd, c.y)];
+                for h in c.hs {
+                    out.push(HostTensor::f32(&[m, r], h));
+                }
+                out
+            }
+            "block_fwd_residuals" => {
+                let c = rm::block_forward(d, t[0].as_f32(), &slices(&t[1..10]), &slices(&t[10..24]));
+                let mut out = vec![HostTensor::f32(&bnd, c.y)];
+                for (rname, shape) in residual_shapes(d) {
+                    let data = residual_of(&c, rname).to_vec();
+                    out.push(HostTensor::f32(&shape, data));
+                }
+                out
+            }
+            "block_bwd_mesp" => {
+                // THE paper's contribution path: recompute the minimal
+                // intermediate set (h = xA included) inside this one call.
+                let frozen = slices(&t[2..11]);
+                let lora = slices(&t[11..25]);
+                let c = rm::block_forward(d, t[0].as_f32(), &frozen, &lora);
+                let (g_x, grads) = rm::block_backward(
+                    d, t[1].as_f32(), &rm::BwdCtx::from_cache(&c), &frozen, &lora, None,
+                );
+                grad_tensors(g_x, grads)
+            }
+            "block_bwd_storeh" => {
+                // Table-5 ablation: identical math, dB consumes stored h.
+                let frozen = slices(&t[9..18]);
+                let lora = slices(&t[18..32]);
+                let c = rm::block_forward(d, t[0].as_f32(), &frozen, &lora);
+                let hs = slices(&t[2..9]);
+                let (g_x, grads) = rm::block_backward(
+                    d, t[1].as_f32(), &rm::BwdCtx::from_cache(&c), &frozen, &lora, Some(&hs),
+                );
+                grad_tensors(g_x, grads)
+            }
+            "block_bwd_residuals" => {
+                // MeBP backward half: every intermediate comes from the
+                // host-held residual set — no recompute in this call.
+                let res = &t[1..20];
+                let frozen = slices(&t[20..29]);
+                let lora = slices(&t[29..43]);
+                let ctx = rm::BwdCtx {
+                    x2d: res[0].as_f32(),
+                    h1: res[1].as_f32(),
+                    h2: res[2].as_f32(),
+                    x2: res[3].as_f32(),
+                    q_rope: res[4].as_f32(),
+                    k_rope: res[5].as_f32(),
+                    v_heads: res[6].as_f32(),
+                    probs: res[7].as_f32(),
+                    attn_flat: res[8].as_f32(),
+                    gate_out: res[9].as_f32(),
+                    up_out: res[10].as_f32(),
+                    silu_out: res[11].as_f32(),
+                };
+                let hs: Vec<&[f32]> = res[12..19].iter().map(|t| t.as_f32()).collect();
+                let (g_x, grads) = rm::block_backward(
+                    d, t[0].as_f32(), &ctx, &frozen, &lora, Some(&hs),
+                );
+                grad_tensors(g_x, grads)
+            }
+            "lm_loss_fwd" => {
+                let loss = rm::lm_loss(
+                    t[0].as_f32(), t[1].as_f32(), t[2].as_f32(), t[3].as_i32(),
+                    m, dm, d.vocab,
+                );
+                vec![HostTensor::f32(&[1], vec![loss as f32])]
+            }
+            "lm_loss_grad" => {
+                let (loss, g_h) = rm::lm_loss_grad(
+                    t[0].as_f32(), t[1].as_f32(), t[2].as_f32(), t[3].as_i32(),
+                    m, dm, d.vocab,
+                );
+                vec![
+                    HostTensor::f32(&[1], vec![loss as f32]),
+                    HostTensor::f32(&bnd, g_h),
+                ]
+            }
+            "block_fwd_q4" => {
+                // int4 base weights: dequantize in-backend (the host never
+                // holds f32 base weights on this path), then the same fwd.
+                let lora = slices(&t[17..31]);
+                let mut deq: Vec<Vec<f32>> = Vec::with_capacity(QUANT_MATS.len());
+                for (i, mat) in QUANT_MATS.iter().copied().enumerate() {
+                    let shape = d.frozen_shape(mat);
+                    let (din, dout) = (shape[0], shape[1]);
+                    let packed_i32 = t[3 + 2 * i].as_i32();
+                    let packed: Vec<u8> = packed_i32.iter().map(|v| *v as u8).collect();
+                    let scales = t[3 + 2 * i + 1].as_f32();
+                    deq.push(quant::dequantize(&packed, scales, din, dout));
+                }
+                let frozen: Vec<&[f32]> = vec![
+                    t[1].as_f32(), // ln1
+                    deq[0].as_slice(), // wq
+                    deq[1].as_slice(), // wk
+                    deq[2].as_slice(), // wv
+                    deq[3].as_slice(), // wo
+                    t[2].as_f32(), // ln2
+                    deq[4].as_slice(), // wg
+                    deq[5].as_slice(), // wu
+                    deq[6].as_slice(), // wd
+                ];
+                let c = rm::block_forward(d, t[0].as_f32(), &frozen, &lora);
+                vec![HostTensor::f32(&bnd, c.y)]
+            }
+            other => anyhow::bail!("reference backend: unknown artifact '{other}'"),
+        })
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn kind(&self) -> &'static str {
+        "reference"
+    }
+
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    fn tracker(&self) -> &MemoryTracker {
+        &self.tracker
+    }
+
+    fn has_artifact(&self, name: &str) -> bool {
+        self.specs.iter().any(|s| s.name == name)
+    }
+
+    fn warmup(&self, _names: &[&str]) -> anyhow::Result<()> {
+        Ok(()) // nothing to compile in-process
+    }
+
+    fn upload(&self, t: &HostTensor) -> anyhow::Result<DeviceBuffer> {
+        // "Device" memory IS host memory here: keep a resident copy so the
+        // caller can free (or mutate) its own, exactly like a PJRT upload.
+        Ok(DeviceBuffer::Resident(t.clone()))
+    }
+
+    fn execute(&self, name: &str, args: &[Arg]) -> anyhow::Result<Vec<HostTensor>> {
+        let spec = self.spec(name)?;
+        anyhow::ensure!(
+            spec.args.len() == args.len(),
+            "{name}: expected {} args, got {}",
+            spec.args.len(),
+            args.len()
+        );
+        let mut tensors: Vec<&HostTensor> = Vec::with_capacity(args.len());
+        let mut in_bytes = 0u64;
+        for (a, arg) in spec.args.iter().zip(args) {
+            let t = match arg {
+                Arg::Host(t) => {
+                    in_bytes += t.bytes();
+                    *t
+                }
+                Arg::Device(DeviceBuffer::Resident(t)) => t,
+                #[cfg(feature = "pjrt")]
+                Arg::Device(DeviceBuffer::Pjrt(_)) => anyhow::bail!(
+                    "{name}: PJRT device buffer passed to the reference backend"
+                ),
+            };
+            anyhow::ensure!(
+                a.shape == t.shape && a.dtype == t.dtype(),
+                "{name}: arg '{}' shape/dtype {:?}/{:?} != expected {:?}/{:?}",
+                a.name, t.shape, t.dtype(), a.shape, a.dtype
+            );
+            tensors.push(t);
+        }
+        // Transient call I/O is tracked for the duration of the call, the
+        // same accounting discipline as the PJRT runtime.
+        let _io_guard = self.tracker.track(&format!("exec:{name}"), in_bytes);
+
+        let start = Instant::now();
+        let outputs = self.dispatch(name, &tensors)?;
+        anyhow::ensure!(
+            outputs.len() == spec.outputs,
+            "{name}: spec promises {} outputs, got {}",
+            spec.outputs,
+            outputs.len()
+        );
+        self.stats.record(name, start.elapsed().as_secs_f64());
+        Ok(outputs)
+    }
+
+    fn exec_stats(&self) -> Vec<(String, ExecStats)> {
+        self.stats.snapshot()
+    }
+}
+
+/// Access the cache field matching a residual name.
+fn residual_of<'a>(c: &'a rm::BlockCache, name: &str) -> &'a [f32] {
+    match name {
+        "x" => &c.x2d,
+        "h1" => &c.h1,
+        "h2" => &c.h2,
+        "x2" => &c.x2,
+        "q_rope" => &c.q_rope,
+        "k_rope" => &c.k_rope,
+        "v_heads" => &c.v_heads,
+        "probs" => &c.probs,
+        "attn_flat" => &c.attn_flat,
+        "gate_out" => &c.gate_out,
+        "up_out" => &c.up_out,
+        "silu_out" => &c.silu_out,
+        "h_q" => &c.hs[0],
+        "h_k" => &c.hs[1],
+        "h_v" => &c.hs[2],
+        "h_o" => &c.hs[3],
+        "h_gate" => &c.hs[4],
+        "h_up" => &c.hs[5],
+        "h_down" => &c.hs[6],
+        other => panic!("unknown residual {other}"),
+    }
+}
+
+/// Shapes of the residual set, RESIDUALS order.
+fn residual_shapes(d: &ModelDims) -> Vec<(&'static str, Vec<usize>)> {
+    let m = d.m();
+    let (b, n, hd) = (d.batch, d.seq, d.head_dim);
+    RESIDUALS
+        .iter()
+        .map(|&name| {
+            let shape = match name {
+                "x" | "h1" | "h2" | "x2" => vec![m, d.d_model],
+                "q_rope" => vec![b, d.n_heads, n, hd],
+                "k_rope" | "v_heads" => vec![b, d.n_kv_heads, n, hd],
+                "probs" => vec![b, d.n_heads, n, n],
+                "attn_flat" => vec![m, d.q_dim()],
+                "gate_out" | "up_out" | "silu_out" => vec![m, d.d_ff],
+                _ => vec![m, d.rank], // the seven h = xA
+            };
+            (name, shape)
+        })
+        .collect()
+}
+
+/// Programmatically generate the artifact specs for `dims` — the same ABI
+/// `python/compile/aot.py` writes into `manifest.json`.
+fn build_specs(d: &ModelDims) -> Vec<ArtifactSpec> {
+    let m = d.m();
+    let bnd = vec![d.batch, d.seq, d.d_model];
+    let bn = vec![d.batch, d.seq];
+    let f = |name: &str, shape: Vec<usize>| ArgSpec {
+        name: name.to_string(),
+        shape,
+        dtype: DType::F32,
+    };
+    let i = |name: &str, shape: Vec<usize>| ArgSpec {
+        name: name.to_string(),
+        shape,
+        dtype: DType::I32,
+    };
+    let frozen_args = || -> Vec<ArgSpec> {
+        FROZEN.iter().map(|&w| f(w, d.frozen_shape(w))).collect()
+    };
+    let lora_args = || -> Vec<ArgSpec> {
+        let mut v = Vec::with_capacity(2 * PROJS.len());
+        for p in PROJS {
+            let (din, dout) = d.proj_dims(p);
+            v.push(f(&format!("a_{p}"), vec![din, d.rank]));
+            v.push(f(&format!("b_{p}"), vec![d.rank, dout]));
+        }
+        v
+    };
+    let h_args = || -> Vec<ArgSpec> {
+        PROJS.iter().map(|p| f(&format!("h_{p}"), vec![m, d.rank])).collect()
+    };
+    let loss_args = || -> Vec<ArgSpec> {
+        vec![
+            f("h", bnd.clone()),
+            f("norm_w", vec![d.d_model]),
+            f("emb", vec![d.vocab, d.d_model]),
+            i("targets", bn.clone()),
+        ]
+    };
+    let spec = |name: &str, args: Vec<ArgSpec>, outputs: usize| ArtifactSpec {
+        name: name.to_string(),
+        file: PathBuf::from("<builtin:reference>"),
+        args,
+        outputs,
+    };
+    let block_args = |leads: Vec<ArgSpec>| -> Vec<ArgSpec> {
+        let mut v = leads;
+        v.extend(frozen_args());
+        v.extend(lora_args());
+        v
+    };
+
+    let mut specs = vec![
+        spec(
+            "embed_fwd",
+            vec![i("tokens", bn.clone()), f("emb", vec![d.vocab, d.d_model])],
+            1,
+        ),
+        spec("block_fwd", block_args(vec![f("x", bnd.clone())]), 1),
+        spec(
+            "block_fwd_saveh",
+            block_args(vec![f("x", bnd.clone())]),
+            1 + PROJS.len(),
+        ),
+        spec(
+            "block_fwd_residuals",
+            block_args(vec![f("x", bnd.clone())]),
+            1 + RESIDUALS.len(),
+        ),
+        spec(
+            "block_bwd_mesp",
+            block_args(vec![f("x", bnd.clone()), f("g_y", bnd.clone())]),
+            1 + 2 * PROJS.len(),
+        ),
+        spec(
+            "block_bwd_storeh",
+            block_args({
+                let mut v = vec![f("x", bnd.clone()), f("g_y", bnd.clone())];
+                v.extend(h_args());
+                v
+            }),
+            1 + 2 * PROJS.len(),
+        ),
+        spec(
+            "block_bwd_residuals",
+            block_args({
+                let mut v = vec![f("g_y", bnd.clone())];
+                for (name, shape) in residual_shapes(d) {
+                    v.push(f(name, shape));
+                }
+                v
+            }),
+            1 + 2 * PROJS.len(),
+        ),
+        spec("lm_loss_fwd", loss_args(), 1),
+        spec("lm_loss_grad", loss_args(), 2),
+    ];
+    // q4 needs every quantized d_in divisible by the packing group.
+    let q4_ok = QUANT_MATS
+        .iter()
+        .all(|&w| d.frozen_shape(w)[0] % quant::GROUP == 0);
+    if q4_ok {
+        let mut args = vec![
+            f("x", bnd.clone()),
+            f("ln1", vec![d.d_model]),
+            f("ln2", vec![d.d_model]),
+        ];
+        for w in QUANT_MATS {
+            let shape = d.frozen_shape(w);
+            let (din, dout) = (shape[0], shape[1]);
+            args.push(i(&format!("packed_{w}"), vec![din / 2, dout]));
+            args.push(f(&format!("scales_{w}"), vec![din / quant::GROUP, dout]));
+        }
+        args.extend(lora_args());
+        specs.push(spec("block_fwd_q4", args, 1));
+    }
+    specs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::util::Rng;
+
+    fn backend() -> ReferenceBackend {
+        ReferenceBackend::new(presets::compiled("toy").unwrap(), MemoryTracker::new())
+    }
+
+    #[test]
+    fn specs_match_manifest_abi() {
+        let be = backend();
+        let bwd = be.spec("block_bwd_mesp").unwrap();
+        assert_eq!(bwd.outputs, 15);
+        assert_eq!(bwd.args.len(), 2 + 9 + 14);
+        assert_eq!(bwd.args[0].name, "x");
+        assert_eq!(bwd.args[0].shape, vec![1, 32, 64]);
+        assert!(be.has_artifact("block_fwd_residuals"));
+        assert!(be.has_artifact("block_fwd_q4"));
+        assert!(!be.has_artifact("nope"));
+        let res = be.spec("block_bwd_residuals").unwrap();
+        assert_eq!(res.args.len(), 1 + 19 + 9 + 14);
+    }
+
+    #[test]
+    fn arg_validation_rejects_bad_shapes() {
+        let be = backend();
+        let mut rng = Rng::new(1);
+        let bad = HostTensor::randn(&[2, 2], 1.0, &mut rng);
+        let emb = HostTensor::randn(&[256, 64], 0.02, &mut rng);
+        let err = be
+            .execute("embed_fwd", &[Arg::Host(&bad), Arg::Host(&emb)])
+            .unwrap_err();
+        assert!(err.to_string().contains("shape/dtype"), "{err}");
+        // wrong arity
+        let err2 = be.execute("embed_fwd", &[Arg::Host(&emb)]).unwrap_err();
+        assert!(err2.to_string().contains("expected 2 args"), "{err2}");
+    }
+
+    #[test]
+    fn embed_picks_rows() {
+        let be = backend();
+        let d = be.dims().clone();
+        let mut rng = Rng::new(2);
+        let emb = HostTensor::randn(&[d.vocab, d.d_model], 0.02, &mut rng);
+        let tokens = HostTensor::i32(&[1, d.seq], (0..d.seq as i32).collect());
+        let out = be
+            .execute("embed_fwd", &[Arg::Host(&tokens), Arg::Host(&emb)])
+            .unwrap();
+        assert_eq!(out[0].shape, vec![1, d.seq, d.d_model]);
+        assert_eq!(
+            out[0].as_f32()[..d.d_model],
+            emb.as_f32()[..d.d_model],
+            "token 0 row"
+        );
+    }
+
+    #[test]
+    fn exec_stats_accumulate() {
+        let be = backend();
+        let d = be.dims().clone();
+        let mut rng = Rng::new(3);
+        let emb = HostTensor::randn(&[d.vocab, d.d_model], 0.02, &mut rng);
+        let tokens = HostTensor::i32(&[1, d.seq], vec![0; d.seq]);
+        for _ in 0..3 {
+            be.execute("embed_fwd", &[Arg::Host(&tokens), Arg::Host(&emb)])
+                .unwrap();
+        }
+        let stats = be.exec_stats();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].0, "embed_fwd");
+        assert_eq!(stats[0].1.calls, 3);
+    }
+}

@@ -1,0 +1,961 @@
+//! Pure-Rust reference math for the [`super::ReferenceBackend`]: the
+//! Qwen2.5-style block (RMSNorm → GQA attention with RoPE → RMSNorm →
+//! SwiGLU), LoRA adapters on all 7 projections, and the paper's
+//! Appendix-A manual backward passes — including the MeSP discipline
+//! where the LoRA intermediate `h = xA` is *recomputed* in the backward
+//! instead of stored.
+//!
+//! This is the in-process mirror of `python/compile/model.py` +
+//! `python/compile/kernels/ref.py`: same formulas, same operation order,
+//! so the MeSP / store-h / residual backward variants produce bitwise
+//! identical gradients for identical inputs.
+//!
+//! Layout conventions: 2-D tensors are row-major `[rows, cols]` slices;
+//! per-head tensors are flattened `[batch, heads, seq, head_dim]`.
+
+use crate::config::ModelDims;
+
+/// RMSNorm epsilon (matches ModelConfig.eps).
+pub const EPS: f32 = 1e-6;
+/// RoPE base (matches ModelConfig.rope_theta).
+pub const ROPE_THETA: f32 = 10000.0;
+
+// ------------------------------------------------------------- primitives
+
+/// `a[m,k] @ b[k,n] -> [m,n]`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[l * n..(l + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `aᵀ @ b` with `a[k,m]`, `b[k,n] -> [m,n]`.
+pub fn matmul_at(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for l in 0..k {
+        let arow = &a[l * m..(l + 1) * m];
+        let brow = &b[l * n..(l + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `a @ bᵀ` with `a[m,k]`, `b[n,k] -> [m,n]`.
+pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+fn add_into(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+fn added(a: &[f32], b: &[f32]) -> Vec<f32> {
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+// --------------------------------------------------------------- RMSNorm
+
+/// `x_hat = x / rms(x) * w`, rms over the last axis; `x: [rows, d]`.
+pub fn rmsnorm(x: &[f32], w: &[f32], d: usize) -> Vec<f32> {
+    let rows = x.len() / d;
+    let mut out = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let ms = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + EPS).sqrt();
+        for i in 0..d {
+            out[r * d + i] = xr[i] * inv * w[i];
+        }
+    }
+    out
+}
+
+/// dL/dx of RMSNorm with frozen weight `w` (paper eq. 22 + weight):
+/// with `u = x / rms(x)` and `gw = g ⊙ w`:
+/// `dx = (gw - u · mean(gw ⊙ u)) / rms`.
+pub fn rmsnorm_bwd(x: &[f32], w: &[f32], g: &[f32], d: usize) -> Vec<f32> {
+    let rows = x.len() / d;
+    let mut out = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let gr = &g[r * d..(r + 1) * d];
+        let ms = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + EPS).sqrt();
+        let mut dot = 0.0f32;
+        for i in 0..d {
+            dot += gr[i] * w[i] * xr[i] * inv;
+        }
+        let mean = dot / d as f32;
+        for i in 0..d {
+            out[r * d + i] = (gr[i] * w[i] - xr[i] * inv * mean) * inv;
+        }
+    }
+    out
+}
+
+// -------------------------------------------------------------- SiLU-mul
+
+/// SwiGLU elementwise core: `silu(gate) ⊙ up`.
+pub fn silu_mul(gate: &[f32], up: &[f32]) -> Vec<f32> {
+    gate.iter()
+        .zip(up)
+        .map(|(&g, &u)| {
+            let sig = 1.0 / (1.0 + (-g).exp());
+            g * sig * u
+        })
+        .collect()
+}
+
+/// Backward of `silu(gate)·up`; returns `(d_gate, d_up)`.
+pub fn silu_mul_bwd(gate: &[f32], up: &[f32], g: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let mut dg = vec![0.0f32; gate.len()];
+    let mut du = vec![0.0f32; up.len()];
+    for i in 0..gate.len() {
+        let sig = 1.0 / (1.0 + (-gate[i]).exp());
+        let silu = gate[i] * sig;
+        let dsilu = sig * (1.0 + gate[i] * (1.0 - sig));
+        dg[i] = g[i] * up[i] * dsilu;
+        du[i] = g[i] * silu;
+    }
+    (dg, du)
+}
+
+// ------------------------------------------------------------------ RoPE
+
+/// cos/sin tables `[n, hd/2]`.
+pub fn rope_tables(seq: usize, head_dim: usize) -> (Vec<f32>, Vec<f32>) {
+    let half = head_dim / 2;
+    let mut cos = vec![0.0f32; seq * half];
+    let mut sin = vec![0.0f32; seq * half];
+    for p in 0..seq {
+        for j in 0..half {
+            let freq = 1.0 / ROPE_THETA.powf(j as f32 / half as f32);
+            let ang = p as f32 * freq;
+            cos[p * half + j] = ang.cos();
+            sin[p * half + j] = ang.sin();
+        }
+    }
+    (cos, sin)
+}
+
+/// Neox-style rotate-half RoPE on `[b, heads, n, hd]`; the VJP of a
+/// rotation is the rotation by `-θ` (`inverse = true`).
+#[allow(clippy::too_many_arguments)]
+pub fn apply_rope(
+    x: &[f32],
+    b: usize,
+    heads: usize,
+    n: usize,
+    hd: usize,
+    cos: &[f32],
+    sin: &[f32],
+    inverse: bool,
+) -> Vec<f32> {
+    let half = hd / 2;
+    let mut out = vec![0.0f32; x.len()];
+    for bi in 0..b {
+        for h in 0..heads {
+            for t in 0..n {
+                let base = ((bi * heads + h) * n + t) * hd;
+                for j in 0..half {
+                    let c = cos[t * half + j];
+                    let s = sin[t * half + j];
+                    let x1 = x[base + j];
+                    let x2 = x[base + half + j];
+                    if inverse {
+                        out[base + j] = x1 * c + x2 * s;
+                        out[base + half + j] = x2 * c - x1 * s;
+                    } else {
+                        out[base + j] = x1 * c - x2 * s;
+                        out[base + half + j] = x1 * s + x2 * c;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+// ----------------------------------------------------------- head layout
+
+/// `[b*n, heads*hd] -> [b, heads, n, hd]`.
+pub fn split_heads(x2d: &[f32], b: usize, n: usize, heads: usize, hd: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x2d.len()];
+    for bi in 0..b {
+        for t in 0..n {
+            for h in 0..heads {
+                let src = (bi * n + t) * heads * hd + h * hd;
+                let dst = ((bi * heads + h) * n + t) * hd;
+                out[dst..dst + hd].copy_from_slice(&x2d[src..src + hd]);
+            }
+        }
+    }
+    out
+}
+
+/// `[b, heads, n, hd] -> [b*n, heads*hd]`.
+pub fn merge_heads(x4: &[f32], b: usize, heads: usize, n: usize, hd: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x4.len()];
+    for bi in 0..b {
+        for h in 0..heads {
+            for t in 0..n {
+                let src = ((bi * heads + h) * n + t) * hd;
+                let dst = (bi * n + t) * heads * hd + h * hd;
+                out[dst..dst + hd].copy_from_slice(&x4[src..src + hd]);
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------- attention
+
+/// Causal softmax attention over GQA heads. `q: [b,H,n,hd]`,
+/// `k/v: [b,KV,n,hd]` (each query head reads kv head `h / (H/KV)`).
+/// Returns `(out [b,H,n,hd], probs [b,H,n,n])`; masked entries of probs
+/// are exactly zero.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_fwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    heads: usize,
+    kv_heads: usize,
+    n: usize,
+    hd: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let rep = heads / kv_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; b * heads * n * hd];
+    let mut probs = vec![0.0f32; b * heads * n * n];
+    for bi in 0..b {
+        for h in 0..heads {
+            let kvh = h / rep;
+            let qb = (bi * heads + h) * n * hd;
+            let kb = (bi * kv_heads + kvh) * n * hd;
+            let pb = (bi * heads + h) * n * n;
+            for i in 0..n {
+                let qi = &q[qb + i * hd..qb + (i + 1) * hd];
+                // causal: keys 0..=i
+                let mut row = vec![0.0f32; i + 1];
+                let mut mx = f32::NEG_INFINITY;
+                for (j, rj) in row.iter_mut().enumerate() {
+                    let kj = &k[kb + j * hd..kb + (j + 1) * hd];
+                    let mut s = 0.0f32;
+                    for (a, c) in qi.iter().zip(kj) {
+                        s += a * c;
+                    }
+                    *rj = s * scale;
+                    mx = mx.max(*rj);
+                }
+                let mut denom = 0.0f32;
+                for rj in row.iter_mut() {
+                    *rj = (*rj - mx).exp();
+                    denom += *rj;
+                }
+                let oi = &mut out[qb + i * hd..qb + (i + 1) * hd];
+                for (j, rj) in row.iter().enumerate() {
+                    let p = rj / denom;
+                    probs[pb + i * n + j] = p;
+                    let vj = &v[kb + j * hd..kb + (j + 1) * hd];
+                    for (o, &vv) in oi.iter_mut().zip(vj) {
+                        *o += p * vv;
+                    }
+                }
+            }
+        }
+    }
+    (out, probs)
+}
+
+/// Attention backward given saved `probs` (paper eq. 17-21):
+/// `dv = probsᵀ g_out`, `dprobs = g_out vᵀ`,
+/// `dscores = probs ⊙ (dprobs - rowsum(dprobs ⊙ probs))`,
+/// `dq = dscores k · scale`, `dk = dscoresᵀ q · scale`.
+/// KV-head grads are summed over the query-head group (the VJP of the
+/// GQA repeat). Returns `(dq [b,H,n,hd], dk [b,KV,n,hd], dv [b,KV,n,hd])`.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_bwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &[f32],
+    g_out: &[f32],
+    b: usize,
+    heads: usize,
+    kv_heads: usize,
+    n: usize,
+    hd: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let rep = heads / kv_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut dq = vec![0.0f32; b * heads * n * hd];
+    let mut dk = vec![0.0f32; b * kv_heads * n * hd];
+    let mut dv = vec![0.0f32; b * kv_heads * n * hd];
+    for bi in 0..b {
+        for h in 0..heads {
+            let kvh = h / rep;
+            let qb = (bi * heads + h) * n * hd;
+            let kb = (bi * kv_heads + kvh) * n * hd;
+            let pb = (bi * heads + h) * n * n;
+            let p = &probs[pb..pb + n * n];
+            let go = &g_out[qb..qb + n * hd];
+            let kh = &k[kb..kb + n * hd];
+            let vh = &v[kb..kb + n * hd];
+            let qh = &q[qb..qb + n * hd];
+            // dv += pᵀ @ go  (accumulated into the kv head slot)
+            let dvh = matmul_at(p, go, n, n, hd);
+            add_into(&mut dv[kb..kb + n * hd], &dvh);
+            // dprobs = go @ vᵀ
+            let dp = matmul_bt(go, vh, n, hd, n);
+            // dscores = p ⊙ (dp - rowsum(dp ⊙ p))
+            let mut ds = vec![0.0f32; n * n];
+            for i in 0..n {
+                let mut rowsum = 0.0f32;
+                for j in 0..n {
+                    rowsum += dp[i * n + j] * p[i * n + j];
+                }
+                for j in 0..n {
+                    ds[i * n + j] = p[i * n + j] * (dp[i * n + j] - rowsum);
+                }
+            }
+            // dq = ds @ k · scale
+            let dqh = matmul(&ds, kh, n, n, hd);
+            for (d, s) in dq[qb..qb + n * hd].iter_mut().zip(&dqh) {
+                *d = s * scale;
+            }
+            // dk += dsᵀ @ q · scale
+            let dkh = matmul_at(&ds, qh, n, n, hd);
+            for (d, s) in dk[kb..kb + n * hd].iter_mut().zip(&dkh) {
+                *d += s * scale;
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+// ------------------------------------------------------------------ LoRA
+
+/// Forward of a LoRA site (paper eq. 5): `y = x W + s (x A) B`.
+/// Returns `(y [m,dout], h = xA [m,r])`.
+#[allow(clippy::too_many_arguments)]
+pub fn lora_fwd(
+    x: &[f32],
+    w: &[f32],
+    a: &[f32],
+    bb: &[f32],
+    s: f32,
+    m: usize,
+    din: usize,
+    dout: usize,
+    r: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let h = matmul(x, a, m, din, r);
+    let mut y = matmul(x, w, m, din, dout);
+    let hb = matmul(&h, bb, m, r, dout);
+    for (yv, hv) in y.iter_mut().zip(&hb) {
+        *yv += s * hv;
+    }
+    (y, h)
+}
+
+/// Full LoRA-linear backward (paper eq. 10-13). If `stored_h` is given
+/// (store-h / residual modes), `dB` consumes it; otherwise `h = xA` is
+/// RECOMPUTED here — the paper's key insight (rank r ≪ d_in makes the
+/// recompute nearly free, and nothing needs to be stored).
+/// Returns `(gx [m,din], dA [din,r], dB [r,dout])`.
+#[allow(clippy::too_many_arguments)]
+pub fn lora_bwd(
+    x: &[f32],
+    g: &[f32],
+    w: &[f32],
+    a: &[f32],
+    bb: &[f32],
+    s: f32,
+    m: usize,
+    din: usize,
+    dout: usize,
+    r: usize,
+    stored_h: Option<&[f32]>,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let sg: Vec<f32> = g.iter().map(|v| s * v).collect();
+    let dh = matmul_bt(&sg, bb, m, dout, r);
+    let da = matmul_at(x, &dh, m, din, r);
+    let db = match stored_h {
+        Some(h) => matmul_at(h, &sg, m, r, dout),
+        None => {
+            let h = matmul(x, a, m, din, r); // Appendix-A recompute
+            matmul_at(&h, &sg, m, r, dout)
+        }
+    };
+    let mut gx = matmul_bt(&dh, a, m, r, din);
+    let gw = matmul_bt(g, w, m, dout, din);
+    add_into(&mut gx, &gw);
+    (gx, da, db)
+}
+
+// ------------------------------------------------------------- the block
+
+// Frozen-weight indices in the artifact ABI order (config::FROZEN).
+const LN1: usize = 0;
+const WQ: usize = 1;
+const WK: usize = 2;
+const WV: usize = 3;
+const WO: usize = 4;
+const LN2: usize = 5;
+const WG: usize = 6;
+const WU: usize = 7;
+const WD: usize = 8;
+
+/// Every intermediate a backward pass could need — the Rust mirror of
+/// `_block_core`'s cache dict.
+pub struct BlockCache {
+    pub x2d: Vec<f32>,
+    pub h1: Vec<f32>,
+    pub h2: Vec<f32>,
+    pub x2: Vec<f32>,
+    pub q_rope: Vec<f32>,
+    pub k_rope: Vec<f32>,
+    pub v_heads: Vec<f32>,
+    pub probs: Vec<f32>,
+    pub attn_flat: Vec<f32>,
+    pub gate_out: Vec<f32>,
+    pub up_out: Vec<f32>,
+    pub silu_out: Vec<f32>,
+    /// The seven `h = xA` intermediates, PROJS order.
+    pub hs: Vec<Vec<f32>>,
+    /// Block output `[m, d]`.
+    pub y: Vec<f32>,
+}
+
+/// Full block forward; `x: [m, d]`, frozen ×9 and lora ×14 in ABI order.
+pub fn block_forward(
+    dims: &ModelDims,
+    x: &[f32],
+    frozen: &[&[f32]],
+    lora: &[&[f32]],
+) -> BlockCache {
+    let (b, n, d) = (dims.batch, dims.seq, dims.d_model);
+    let (hh, kv, hd, ff, r) = (
+        dims.n_heads,
+        dims.n_kv_heads,
+        dims.head_dim,
+        dims.d_ff,
+        dims.rank,
+    );
+    let m = b * n;
+    let s = dims.scale();
+    let (qd, kvd) = (dims.q_dim(), dims.kv_dim());
+
+    let h1 = rmsnorm(x, frozen[LN1], d);
+    let (q2d, h_q) = lora_fwd(&h1, frozen[WQ], lora[0], lora[1], s, m, d, qd, r);
+    let (k2d, h_k) = lora_fwd(&h1, frozen[WK], lora[2], lora[3], s, m, d, kvd, r);
+    let (v2d, h_v) = lora_fwd(&h1, frozen[WV], lora[4], lora[5], s, m, d, kvd, r);
+
+    let (cos, sin) = rope_tables(n, hd);
+    let q4 = apply_rope(&split_heads(&q2d, b, n, hh, hd), b, hh, n, hd, &cos, &sin, false);
+    let k4 = apply_rope(&split_heads(&k2d, b, n, kv, hd), b, kv, n, hd, &cos, &sin, false);
+    let v4 = split_heads(&v2d, b, n, kv, hd);
+
+    let (attn_out, probs) = attention_fwd(&q4, &k4, &v4, b, hh, kv, n, hd);
+    let attn_flat = merge_heads(&attn_out, b, hh, n, hd);
+
+    let (o2d, h_o) = lora_fwd(&attn_flat, frozen[WO], lora[6], lora[7], s, m, qd, d, r);
+    let x2 = added(x, &o2d);
+
+    let h2 = rmsnorm(&x2, frozen[LN2], d);
+    let (gate_out, h_gate) = lora_fwd(&h2, frozen[WG], lora[8], lora[9], s, m, d, ff, r);
+    let (up_out, h_up) = lora_fwd(&h2, frozen[WU], lora[10], lora[11], s, m, d, ff, r);
+    let silu_out = silu_mul(&gate_out, &up_out);
+    let (d2d, h_down) = lora_fwd(&silu_out, frozen[WD], lora[12], lora[13], s, m, ff, d, r);
+    let y = added(&x2, &d2d);
+
+    BlockCache {
+        x2d: x.to_vec(),
+        h1,
+        h2,
+        x2,
+        q_rope: q4,
+        k_rope: k4,
+        v_heads: v4,
+        probs,
+        attn_flat,
+        gate_out,
+        up_out,
+        silu_out,
+        hs: vec![h_q, h_k, h_v, h_o, h_gate, h_up, h_down],
+        y,
+    }
+}
+
+/// Borrowed view of whichever intermediates exist (recomputed or
+/// retrieved from host-held residuals).
+pub struct BwdCtx<'a> {
+    pub x2d: &'a [f32],
+    pub h1: &'a [f32],
+    pub h2: &'a [f32],
+    pub x2: &'a [f32],
+    pub q_rope: &'a [f32],
+    pub k_rope: &'a [f32],
+    pub v_heads: &'a [f32],
+    pub probs: &'a [f32],
+    pub attn_flat: &'a [f32],
+    pub gate_out: &'a [f32],
+    pub up_out: &'a [f32],
+    pub silu_out: &'a [f32],
+}
+
+impl<'a> BwdCtx<'a> {
+    pub fn from_cache(c: &'a BlockCache) -> BwdCtx<'a> {
+        BwdCtx {
+            x2d: &c.x2d,
+            h1: &c.h1,
+            h2: &c.h2,
+            x2: &c.x2,
+            q_rope: &c.q_rope,
+            k_rope: &c.k_rope,
+            v_heads: &c.v_heads,
+            probs: &c.probs,
+            attn_flat: &c.attn_flat,
+            gate_out: &c.gate_out,
+            up_out: &c.up_out,
+            silu_out: &c.silu_out,
+        }
+    }
+}
+
+/// The paper's Appendix-A backward, shared by the mesp / storeh /
+/// residuals variants. `stored_h` (PROJS order) switches `dB` to
+/// stored-h mode (Table 5 / MeBP residuals).
+/// Returns `(g_x [m,d], 14 LoRA grads in (dA, dB) × PROJS order)`.
+pub fn block_backward(
+    dims: &ModelDims,
+    g_y: &[f32],
+    c: &BwdCtx,
+    frozen: &[&[f32]],
+    lora: &[&[f32]],
+    stored_h: Option<&[&[f32]]>,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let (b, n, d) = (dims.batch, dims.seq, dims.d_model);
+    let (hh, kv, hd, ff, r) = (
+        dims.n_heads,
+        dims.n_kv_heads,
+        dims.head_dim,
+        dims.d_ff,
+        dims.rank,
+    );
+    let m = b * n;
+    let s = dims.scale();
+    let (qd, kvd) = (dims.q_dim(), dims.kv_dim());
+    let sh = |p: usize| stored_h.map(|hs| hs[p]);
+
+    // y = x2 + down(silu_mul(gate(h2), up(h2)))
+    let (g_silu, da_down, db_down) = lora_bwd(
+        c.silu_out, g_y, frozen[WD], lora[12], lora[13], s, m, ff, d, r, sh(6),
+    );
+    let (g_gate, g_up) = silu_mul_bwd(c.gate_out, c.up_out, &g_silu);
+    let (g_h2_a, da_gate, db_gate) = lora_bwd(
+        c.h2, &g_gate, frozen[WG], lora[8], lora[9], s, m, d, ff, r, sh(4),
+    );
+    let (g_h2_b, da_up, db_up) = lora_bwd(
+        c.h2, &g_up, frozen[WU], lora[10], lora[11], s, m, d, ff, r, sh(5),
+    );
+    let mut g_x2 = g_y.to_vec();
+    add_into(
+        &mut g_x2,
+        &rmsnorm_bwd(c.x2, frozen[LN2], &added(&g_h2_a, &g_h2_b), d),
+    );
+
+    // x2 = x + o(attn_flat)
+    let (g_attn_flat, da_o, db_o) = lora_bwd(
+        c.attn_flat, &g_x2, frozen[WO], lora[6], lora[7], s, m, qd, d, r, sh(3),
+    );
+    let g_attn_out = split_heads(&g_attn_flat, b, n, hh, hd);
+
+    let (g_q4, g_k4, g_v4) = attention_bwd(
+        c.q_rope, c.k_rope, c.v_heads, c.probs, &g_attn_out, b, hh, kv, n, hd,
+    );
+
+    let (cos, sin) = rope_tables(n, hd);
+    let g_q2d = merge_heads(&apply_rope(&g_q4, b, hh, n, hd, &cos, &sin, true), b, hh, n, hd);
+    let g_k2d = merge_heads(&apply_rope(&g_k4, b, kv, n, hd, &cos, &sin, true), b, kv, n, hd);
+    let g_v2d = merge_heads(&g_v4, b, kv, n, hd);
+
+    let (g_h1_q, da_q, db_q) = lora_bwd(
+        c.h1, &g_q2d, frozen[WQ], lora[0], lora[1], s, m, d, qd, r, sh(0),
+    );
+    let (g_h1_k, da_k, db_k) = lora_bwd(
+        c.h1, &g_k2d, frozen[WK], lora[2], lora[3], s, m, d, kvd, r, sh(1),
+    );
+    let (g_h1_v, da_v, db_v) = lora_bwd(
+        c.h1, &g_v2d, frozen[WV], lora[4], lora[5], s, m, d, kvd, r, sh(2),
+    );
+
+    let mut g_h1 = added(&g_h1_q, &g_h1_k);
+    add_into(&mut g_h1, &g_h1_v);
+    let mut g_x = g_x2;
+    add_into(&mut g_x, &rmsnorm_bwd(c.x2d, frozen[LN1], &g_h1, d));
+
+    let grads = vec![
+        da_q, db_q, da_k, db_k, da_v, db_v, da_o, db_o, da_gate, db_gate,
+        da_up, db_up, da_down, db_down,
+    ];
+    (g_x, grads)
+}
+
+// ------------------------------------------------------------- loss head
+
+/// Tied-lm-head logits: `hn = rmsnorm(h)`, `logits = hn @ embᵀ`.
+fn lm_logits(h2d: &[f32], norm_w: &[f32], emb: &[f32], m: usize, d: usize, v: usize) -> Vec<f32> {
+    let hn = rmsnorm(h2d, norm_w, d);
+    matmul_bt(&hn, emb, m, d, v)
+}
+
+/// Mean causal-LM cross-entropy (targets pre-shifted by the data
+/// pipeline). Accumulated in f64 for SPSA-grade precision.
+pub fn lm_loss(
+    h2d: &[f32],
+    norm_w: &[f32],
+    emb: &[f32],
+    targets: &[i32],
+    m: usize,
+    d: usize,
+    v: usize,
+) -> f64 {
+    let logits = lm_logits(h2d, norm_w, emb, m, d, v);
+    let mut loss = 0.0f64;
+    for i in 0..m {
+        let row = &logits[i * v..(i + 1) * v];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f64;
+        for &l in row {
+            denom += ((l - mx) as f64).exp();
+        }
+        let logz = mx as f64 + denom.ln();
+        loss += logz - row[targets[i] as usize] as f64;
+    }
+    loss / m as f64
+}
+
+/// Loss + manual backward to `g_h` (softmax-CE grad, then the lm-head and
+/// final-RMSNorm VJPs — no autodiff anywhere).
+pub fn lm_loss_grad(
+    h2d: &[f32],
+    norm_w: &[f32],
+    emb: &[f32],
+    targets: &[i32],
+    m: usize,
+    d: usize,
+    v: usize,
+) -> (f64, Vec<f32>) {
+    let logits = lm_logits(h2d, norm_w, emb, m, d, v);
+    let mut loss = 0.0f64;
+    let mut g_logits = vec![0.0f32; m * v];
+    for i in 0..m {
+        let row = &logits[i * v..(i + 1) * v];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f64;
+        for &l in row {
+            denom += ((l - mx) as f64).exp();
+        }
+        let logz = mx as f64 + denom.ln();
+        let t = targets[i] as usize;
+        loss += logz - row[t] as f64;
+        let grow = &mut g_logits[i * v..(i + 1) * v];
+        for (j, gv) in grow.iter_mut().enumerate() {
+            let p = (((row[j] - mx) as f64).exp() / denom) as f32;
+            let onehot = if j == t { 1.0 } else { 0.0 };
+            *gv = (p - onehot) / m as f32;
+        }
+    }
+    let g_hn = matmul(&g_logits, emb, m, v, d);
+    let g_h = rmsnorm_bwd(h2d, norm_w, &g_hn, d);
+    (loss / m as f64, g_h)
+}
+
+/// Token embedding lookup: `tokens: [m] i32`, `emb: [V, d]` → `[m, d]`.
+pub fn embed_fwd(tokens: &[i32], emb: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; tokens.len() * d];
+    for (i, &t) in tokens.iter().enumerate() {
+        let t = t as usize;
+        out[i * d..(i + 1) * d].copy_from_slice(&emb[t * d..(t + 1) * d]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randv(rng: &mut Rng, n: usize, std: f32) -> Vec<f32> {
+        rng.normal_vec(n, std)
+    }
+
+    #[test]
+    fn matmul_identity() {
+        // A @ I == A, and transposed variants agree with matmul
+        let mut rng = Rng::new(1);
+        let a = randv(&mut rng, 3 * 4, 1.0);
+        let mut eye = vec![0.0f32; 16];
+        for i in 0..4 {
+            eye[i * 4 + i] = 1.0;
+        }
+        assert_eq!(matmul(&a, &eye, 3, 4, 4), a);
+        let b = randv(&mut rng, 4 * 5, 1.0);
+        let c = matmul(&a, &b, 3, 4, 5);
+        // (aᵀ)ᵀ b via matmul_at on a manually transposed a
+        let mut at = vec![0.0f32; 12];
+        for i in 0..3 {
+            for j in 0..4 {
+                at[j * 3 + i] = a[i * 4 + j];
+            }
+        }
+        let c2 = matmul_at(&at, &b, 4, 3, 5);
+        for (x, y) in c.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-5);
+        }
+        // a @ bᵀ via matmul_bt on manually transposed b
+        let mut bt = vec![0.0f32; 20];
+        for i in 0..4 {
+            for j in 0..5 {
+                bt[j * 4 + i] = b[i * 5 + j];
+            }
+        }
+        let c3 = matmul_bt(&a, &bt, 3, 4, 5);
+        for (x, y) in c.iter().zip(&c3) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rmsnorm_bwd_matches_finite_difference() {
+        let mut rng = Rng::new(2);
+        let (m, d) = (3, 8);
+        let x = randv(&mut rng, m * d, 1.0);
+        let w = randv(&mut rng, d, 0.5);
+        let g = randv(&mut rng, m * d, 1.0);
+        let analytic = rmsnorm_bwd(&x, &w, &g, d);
+        let eps = 1e-2f32;
+        for idx in [0, 5, m * d - 1] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let lp: f64 = rmsnorm(&xp, &w, d).iter().zip(&g)
+                .map(|(y, gg)| (*y as f64) * (*gg as f64)).sum();
+            let lm: f64 = rmsnorm(&xm, &w, d).iter().zip(&g)
+                .map(|(y, gg)| (*y as f64) * (*gg as f64)).sum();
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (fd - analytic[idx]).abs() < 2e-2 * analytic[idx].abs().max(1.0),
+                "idx {idx}: fd {fd} vs analytic {}",
+                analytic[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn silu_mul_bwd_matches_finite_difference() {
+        let mut rng = Rng::new(3);
+        let n = 16;
+        let gate = randv(&mut rng, n, 1.0);
+        let up = randv(&mut rng, n, 1.0);
+        let g = randv(&mut rng, n, 1.0);
+        let (dg, du) = silu_mul_bwd(&gate, &up, &g);
+        let eps = 1e-2f32;
+        for idx in [0, 7, 15] {
+            let mut gp = gate.clone();
+            gp[idx] += eps;
+            let mut gm = gate.clone();
+            gm[idx] -= eps;
+            let f = |gv: &[f32]| -> f64 {
+                silu_mul(gv, &up).iter().zip(&g)
+                    .map(|(y, gg)| (*y as f64) * (*gg as f64)).sum()
+            };
+            let fd = ((f(&gp) - f(&gm)) / (2.0 * eps as f64)) as f32;
+            assert!((fd - dg[idx]).abs() < 2e-2 * dg[idx].abs().max(1.0));
+            // up is linear: exact
+            let expect = g[idx] * gate[idx] / (1.0 + (-gate[idx]).exp());
+            assert!((du[idx] - expect).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rope_inverse_is_inverse() {
+        let mut rng = Rng::new(4);
+        let (b, h, n, hd) = (1, 2, 8, 8);
+        let x = randv(&mut rng, b * h * n * hd, 1.0);
+        let (cos, sin) = rope_tables(n, hd);
+        let fwd = apply_rope(&x, b, h, n, hd, &cos, &sin, false);
+        let back = apply_rope(&fwd, b, h, n, hd, &cos, &sin, true);
+        for (a, c) in x.iter().zip(&back) {
+            assert!((a - c).abs() < 1e-5, "{a} vs {c}");
+        }
+    }
+
+    #[test]
+    fn split_merge_heads_roundtrip() {
+        let mut rng = Rng::new(5);
+        let (b, n, h, hd) = (2, 4, 3, 5);
+        let x = randv(&mut rng, b * n * h * hd, 1.0);
+        let back = merge_heads(&split_heads(&x, b, n, h, hd), b, h, n, hd);
+        assert_eq!(x, back);
+    }
+
+    #[test]
+    fn attention_probs_are_causal_rows() {
+        let mut rng = Rng::new(6);
+        let (b, h, kv, n, hd) = (1, 4, 2, 6, 4);
+        let q = randv(&mut rng, b * h * n * hd, 1.0);
+        let k = randv(&mut rng, b * kv * n * hd, 1.0);
+        let v = randv(&mut rng, b * kv * n * hd, 1.0);
+        let (_, probs) = attention_fwd(&q, &k, &v, b, h, kv, n, hd);
+        for hh in 0..h {
+            for i in 0..n {
+                let row = &probs[(hh * n + i) * n..(hh * n + i + 1) * n];
+                let sum: f32 = row.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5, "row sums to {sum}");
+                for (j, p) in row.iter().enumerate() {
+                    if j > i {
+                        assert_eq!(*p, 0.0, "future position leaked");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attention_bwd_matches_finite_difference() {
+        let mut rng = Rng::new(7);
+        let (b, h, kv, n, hd) = (1, 2, 1, 4, 4);
+        let q = randv(&mut rng, b * h * n * hd, 0.5);
+        let k = randv(&mut rng, b * kv * n * hd, 0.5);
+        let v = randv(&mut rng, b * kv * n * hd, 0.5);
+        let g = randv(&mut rng, b * h * n * hd, 1.0);
+        let (_, probs) = attention_fwd(&q, &k, &v, b, h, kv, n, hd);
+        let (dq, dk, dv) = attention_bwd(&q, &k, &v, &probs, &g, b, h, kv, n, hd);
+        let loss = |q: &[f32], k: &[f32], v: &[f32]| -> f64 {
+            let (o, _) = attention_fwd(q, k, v, b, h, kv, n, hd);
+            o.iter().zip(&g).map(|(y, gg)| (*y as f64) * (*gg as f64)).sum()
+        };
+        let eps = 1e-2f32;
+        let check = |name: &str, fd: f32, an: f32| {
+            assert!(
+                (fd - an).abs() < 3e-2 * an.abs().max(0.5),
+                "{name}: fd {fd} vs analytic {an}"
+            );
+        };
+        for idx in [0, 9] {
+            let mut qp = q.clone();
+            qp[idx] += eps;
+            let mut qm = q.clone();
+            qm[idx] -= eps;
+            check("dq",
+                  ((loss(&qp, &k, &v) - loss(&qm, &k, &v)) / (2.0 * eps as f64)) as f32,
+                  dq[idx]);
+            let mut kp = k.clone();
+            kp[idx] += eps;
+            let mut km = k.clone();
+            km[idx] -= eps;
+            check("dk",
+                  ((loss(&q, &kp, &v) - loss(&q, &km, &v)) / (2.0 * eps as f64)) as f32,
+                  dk[idx]);
+            let mut vp = v.clone();
+            vp[idx] += eps;
+            let mut vm = v.clone();
+            vm[idx] -= eps;
+            check("dv",
+                  ((loss(&q, &k, &vp) - loss(&q, &k, &vm)) / (2.0 * eps as f64)) as f32,
+                  dv[idx]);
+        }
+    }
+
+    #[test]
+    fn lm_loss_grad_matches_finite_difference() {
+        let mut rng = Rng::new(8);
+        let (m, d, v) = (4, 8, 16);
+        let h = randv(&mut rng, m * d, 0.5);
+        let w = vec![1.0f32; d];
+        let emb = randv(&mut rng, v * d, 0.2);
+        let targets: Vec<i32> = (0..m).map(|i| (i * 3 % v) as i32).collect();
+        let (loss, g_h) = lm_loss_grad(&h, &w, &emb, &targets, m, d, v);
+        let loss2 = lm_loss(&h, &w, &emb, &targets, m, d, v);
+        assert!((loss - loss2).abs() < 1e-9, "fwd and grad paths disagree");
+        let eps = 1e-2f32;
+        for idx in [0, 17, m * d - 1] {
+            let mut hp = h.clone();
+            hp[idx] += eps;
+            let mut hm = h.clone();
+            hm[idx] -= eps;
+            let fd = ((lm_loss(&hp, &w, &emb, &targets, m, d, v)
+                - lm_loss(&hm, &w, &emb, &targets, m, d, v))
+                / (2.0 * eps as f64)) as f32;
+            assert!(
+                (fd - g_h[idx]).abs() < 2e-2 * g_h[idx].abs().max(0.1),
+                "idx {idx}: fd {fd} vs analytic {}",
+                g_h[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn lora_bwd_stored_equals_recomputed() {
+        let mut rng = Rng::new(9);
+        let (m, din, dout, r) = (6, 8, 10, 4);
+        let x = randv(&mut rng, m * din, 0.5);
+        let g = randv(&mut rng, m * dout, 0.5);
+        let w = randv(&mut rng, din * dout, 0.1);
+        let a = randv(&mut rng, din * r, 0.3);
+        let bb = randv(&mut rng, r * dout, 0.3);
+        let h = matmul(&x, &a, m, din, r);
+        let (gx1, da1, db1) = lora_bwd(&x, &g, &w, &a, &bb, 2.0, m, din, dout, r, None);
+        let (gx2, da2, db2) =
+            lora_bwd(&x, &g, &w, &a, &bb, 2.0, m, din, dout, r, Some(&h));
+        assert_eq!(gx1, gx2);
+        assert_eq!(da1, da2);
+        assert_eq!(db1, db2, "stored h must equal recomputed h exactly");
+    }
+}

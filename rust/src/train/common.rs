@@ -7,35 +7,35 @@ use std::time::Instant;
 
 use crate::config::{OptimizerKind, PROJS};
 use crate::data::Batch;
-use crate::memory::MemoryTracker;
+use crate::memory::{Guard, MemoryTracker};
 use crate::model::ModelState;
-use crate::runtime::Runtime;
+use crate::runtime::{Arg, Backend, DeviceBuffer};
 use crate::tensor::HostTensor;
 
 use super::{CheckpointStore, Optimizer, StepStats};
 
-use crate::memory::Guard;
-use crate::runtime::client::Arg;
-
-/// Everything an engine needs: runtime, model, optimizer, tracker.
+/// Everything an engine needs: backend, model, optimizer, tracker.
 ///
-/// Frozen weights and the embedding are uploaded ONCE to persistent
-/// device buffers at construction and their host copies freed — the
-/// paper-equivalent of keeping base weights resident while only LoRA
-/// params move (perf §L3: this removed the dominant per-call memcpy at
-/// 100M scale). LoRA params stay host-side (the optimizer updates them
-/// after every block) and ride along each call as transient uploads.
+/// Engines are backend-agnostic: `rt` is a [`Backend`] trait object, so
+/// the same schedule runs on the in-process reference backend and on the
+/// PJRT artifact runtime. Frozen weights and the embedding are uploaded
+/// ONCE to persistent backend buffers at construction and their host
+/// copies freed — the paper-equivalent of keeping base weights resident
+/// while only LoRA params move (perf §L3: this removed the dominant
+/// per-call memcpy at 100M scale). LoRA params stay host-side (the
+/// optimizer updates them after every block) and ride along each call as
+/// transient uploads.
 pub struct EngineCtx {
-    pub rt: Arc<Runtime>,
+    pub rt: Arc<dyn Backend>,
     pub model: ModelState,
     pub opt: Optimizer,
     pub tracker: MemoryTracker,
     pub step: usize,
     /// Checkpoint-store disk-spill budget in bytes (0 = never spill).
     pub spill_limit: u64,
-    dev_frozen: Vec<Vec<xla::PjRtBuffer>>,
-    dev_emb: xla::PjRtBuffer,
-    dev_fnorm: xla::PjRtBuffer,
+    dev_frozen: Vec<Vec<DeviceBuffer>>,
+    dev_emb: DeviceBuffer,
+    dev_fnorm: DeviceBuffer,
     _dev_guard: Guard,
 }
 
@@ -43,13 +43,13 @@ impl EngineCtx {
     /// Standard construction: seeded model + optimizer sized to the LoRA
     /// tensor groups (layer-major, ABI order), then weight upload.
     pub fn new(
-        rt: Arc<Runtime>,
+        rt: Arc<dyn Backend>,
         seed: u64,
         opt_kind: OptimizerKind,
         lr: f32,
         spill_limit: u64,
     ) -> Self {
-        let tracker = rt.tracker.clone();
+        let tracker = rt.tracker().clone();
         let mut model = ModelState::init(rt.dims(), seed, &tracker);
         let group_sizes: Vec<usize> = model
             .lora
@@ -65,13 +65,13 @@ impl EngineCtx {
         for block in &mut model.blocks {
             let mut bufs = Vec::with_capacity(block.tensors.len());
             for t in block.tensors.drain(..) {
-                dev_bytes += t.bytes();
-                bufs.push(rt.upload(&t).expect("weight upload"));
+                dev_bytes += t.value.bytes();
+                bufs.push(rt.upload(&t.value).expect("weight upload"));
             }
             dev_frozen.push(bufs);
         }
         let dev_emb = rt.upload(&model.embedding.value).expect("emb upload");
-        dev_bytes += model.embedding.bytes();
+        dev_bytes += model.embedding.value.bytes();
         // free the host embedding data (keep shape for introspection)
         model.embedding.value.data = crate::tensor::Data::F32(Vec::new());
         model.embedding.value.shape = vec![0];
@@ -85,7 +85,7 @@ impl EngineCtx {
 
     /// A block's frozen (device) + LoRA (host) tensors in artifact ABI
     /// order, ready to append after the leading args.
-    pub fn block_args_mixed<'a>(&'a self, layer: usize) -> Vec<Arg<'a>> {
+    pub fn block_args_mixed(&self, layer: usize) -> Vec<Arg<'_>> {
         let mut v: Vec<Arg> = Vec::with_capacity(23);
         for b in &self.dev_frozen[layer] {
             v.push(Arg::Device(b));
@@ -98,7 +98,7 @@ impl EngineCtx {
 
     /// Token embedding lookup.
     pub fn embed(&self, tokens: &HostTensor) -> anyhow::Result<HostTensor> {
-        let out = self.rt.execute_mixed(
+        let out = self.rt.execute(
             "embed_fwd", &[Arg::Host(tokens), Arg::Device(&self.dev_emb)])?;
         Ok(out.into_iter().next().unwrap())
     }
@@ -109,7 +109,7 @@ impl EngineCtx {
     {
         let mut args: Vec<Arg> = vec![Arg::Host(x)];
         args.extend(self.block_args_mixed(layer));
-        let out = self.rt.execute_mixed("block_fwd", &args)?;
+        let out = self.rt.execute("block_fwd", &args)?;
         Ok(out.into_iter().next().unwrap())
     }
 
@@ -117,7 +117,7 @@ impl EngineCtx {
     pub fn loss_grad(&self, h: &HostTensor, targets: &HostTensor)
         -> anyhow::Result<(f64, HostTensor)>
     {
-        let out = self.rt.execute_mixed(
+        let out = self.rt.execute(
             "lm_loss_grad",
             &[Arg::Host(h), Arg::Device(&self.dev_fnorm),
               Arg::Device(&self.dev_emb), Arg::Host(targets)],
@@ -131,7 +131,7 @@ impl EngineCtx {
     pub fn loss_only(&self, h: &HostTensor, targets: &HostTensor)
         -> anyhow::Result<f64>
     {
-        let out = self.rt.execute_mixed(
+        let out = self.rt.execute(
             "lm_loss_fwd",
             &[Arg::Host(h), Arg::Device(&self.dev_fnorm),
               Arg::Device(&self.dev_emb), Arg::Host(targets)],

@@ -23,8 +23,8 @@ pub struct MebpEngine {
 impl MebpEngine {
     pub fn new(ctx: EngineCtx) -> anyhow::Result<Self> {
         anyhow::ensure!(
-            ctx.rt.manifest.has_artifact("block_fwd_residuals"),
-            "config '{}' was compiled without the MeBP residual artifacts",
+            ctx.rt.has_artifact("block_fwd_residuals"),
+            "config '{}' lacks the MeBP residual artifacts on this backend",
             ctx.rt.dims().name
         );
         ctx.rt.warmup(&["embed_fwd", "block_fwd", "block_fwd_residuals",
@@ -43,7 +43,7 @@ impl MebpEngine {
         F: FnMut(&mut EngineCtx, usize, Vec<HostTensor>)
             -> anyhow::Result<HostTensor>,
     {
-        use crate::runtime::client::Arg;
+        use crate::runtime::Arg;
         for l in (0..ctx.rt.dims().n_layers).rev() {
             let x = store.take(l)?;
             // Phase 1: autodiff-style recompute-forward. The residual set
@@ -51,7 +51,7 @@ impl MebpEngine {
             // "implicitly retained" tensors (paper §3.3).
             let mut args: Vec<Arg> = vec![Arg::Host(&x)];
             args.extend(ctx.block_args_mixed(l));
-            let mut fwd = ctx.rt.execute_mixed("block_fwd_residuals", &args)?;
+            let mut fwd = ctx.rt.execute("block_fwd_residuals", &args)?;
             drop(args);
             let residuals: Vec<HostTensor> = fwd.drain(1..).collect();
             drop(fwd); // the recomputed y is dead (we already have g)
@@ -62,7 +62,7 @@ impl MebpEngine {
             let mut args: Vec<Arg> = vec![Arg::Host(&g)];
             args.extend(residuals.iter().map(Arg::Host));
             args.extend(ctx.block_args_mixed(l));
-            let outs = ctx.rt.execute_mixed("block_bwd_residuals", &args)?;
+            let outs = ctx.rt.execute("block_bwd_residuals", &args)?;
             drop(args);
             drop(residuals);
             drop(res_guard);

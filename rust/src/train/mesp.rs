@@ -1,10 +1,10 @@
 //! MeSP — the paper's contribution (§4).
 //!
 //! Forward: per-block calls storing ONLY block-input checkpoints.
-//! Backward: reverse block order; each block is ONE fused artifact call
+//! Backward: reverse block order; each block is ONE fused backend call
 //! (`block_bwd_mesp`) that re-executes the forward internally with the
-//! manually derived Appendix-A VJPs — the LoRA intermediate h = xA exists
-//! only inside a Pallas VMEM tile — and returns (g_x, dA×7, dB×7). LoRA
+//! manually derived Appendix-A VJPs — the LoRA intermediate h = xA never
+//! crosses the call boundary — and returns (g_x, dA×7, dB×7). LoRA
 //! params are updated immediately and every buffer is dropped before the
 //! next block, so peak memory is checkpoints + ONE block's working set.
 
@@ -40,10 +40,10 @@ impl MespEngine {
     {
         for l in (0..ctx.rt.dims().n_layers).rev() {
             let x = store.take(l)?; // checkpoint consumed, freed after call
-            let mut args = vec![crate::runtime::client::Arg::Host(&x),
-                                crate::runtime::client::Arg::Host(&g)];
+            let mut args = vec![crate::runtime::Arg::Host(&x),
+                                crate::runtime::Arg::Host(&g)];
             args.extend(ctx.block_args_mixed(l));
-            let outs = ctx.rt.execute_mixed("block_bwd_mesp", &args)?;
+            let outs = ctx.rt.execute("block_bwd_mesp", &args)?;
             drop(args);
             g = on_block(ctx, l, outs)?;
             // x and the previous g drop here — explicit lifecycle end

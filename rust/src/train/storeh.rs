@@ -24,8 +24,8 @@ pub struct StoreHEngine {
 impl StoreHEngine {
     pub fn new(ctx: EngineCtx) -> anyhow::Result<Self> {
         anyhow::ensure!(
-            ctx.rt.manifest.has_artifact("block_fwd_saveh")
-                && ctx.rt.manifest.has_artifact("block_bwd_storeh"),
+            ctx.rt.has_artifact("block_fwd_saveh")
+                && ctx.rt.has_artifact("block_bwd_storeh"),
             "config '{}' lacks the store-h ablation artifacts",
             ctx.rt.dims().name
         );
@@ -42,13 +42,13 @@ impl StoreHEngine {
 
     /// Forward that stores checkpoints AND h×7 per block.
     fn forward(&mut self, batch: &Batch) -> anyhow::Result<HostTensor> {
-        use crate::runtime::client::Arg;
+        use crate::runtime::Arg;
         let ctx = &self.ctx;
         let mut x = ctx.embed(&batch.tokens)?;
         for l in 0..ctx.rt.dims().n_layers {
             let mut args: Vec<Arg> = vec![Arg::Host(&x)];
             args.extend(ctx.block_args_mixed(l));
-            let mut outs = ctx.rt.execute_mixed("block_fwd_saveh", &args)?;
+            let mut outs = ctx.rt.execute("block_fwd_saveh", &args)?;
             drop(args);
             let hs: Vec<HostTensor> = outs.drain(1..).collect();
             let h_bytes: u64 = hs.iter().map(|t| t.bytes()).sum();
@@ -72,7 +72,7 @@ impl StoreHEngine {
         F: FnMut(&mut EngineCtx, usize, Vec<HostTensor>)
             -> anyhow::Result<HostTensor>,
     {
-        use crate::runtime::client::Arg;
+        use crate::runtime::Arg;
         for l in (0..ctx.rt.dims().n_layers).rev() {
             let x = store.take(l)?;
             let (hs, h_guard) = saved_h[l]
@@ -81,7 +81,7 @@ impl StoreHEngine {
             let mut args: Vec<Arg> = vec![Arg::Host(&x), Arg::Host(&g)];
             args.extend(hs.iter().map(Arg::Host));
             args.extend(ctx.block_args_mixed(l));
-            let outs = ctx.rt.execute_mixed("block_bwd_storeh", &args)?;
+            let outs = ctx.rt.execute("block_bwd_storeh", &args)?;
             drop(args);
             drop(hs);
             drop(h_guard); // h released only now — the Table-5 cost

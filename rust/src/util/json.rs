@@ -91,6 +91,7 @@ impl Json {
     }
 
     /// Compact single-line serialization.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);

@@ -1,9 +1,11 @@
 //! THE reproduction-critical integration test: the paper's central claim
 //! that MeSP computes gradients *mathematically identical* to framework
-//! autodiff (MeBP), across the whole runtime stack — Rust-generated
-//! weights → AOT HLO artifacts → PJRT execution → gradient readback.
+//! autodiff (MeBP), across the whole stack — Rust-generated weights →
+//! backend execution → gradient readback.
 //!
-//! Requires `make artifacts` (toy + toy_flash configs).
+//! Runs on the default (reference) backend from a clean checkout; the
+//! same assertions exercise the PJRT artifact runtime when built with
+//! `--features pjrt` and TrainConfig selects it.
 
 use mesp::config::{Method, TrainConfig};
 use mesp::coordinator::TrainSession;
@@ -55,8 +57,9 @@ fn storeh_equals_mesp() {
 
 #[test]
 fn flash_all_pallas_config_matches() {
-    // toy_flash compiles the same dims with flash attention + all Pallas
-    // kernels on the artifact path; same seeds → same model → same grads.
+    // toy_flash selects the flash-attention/all-Pallas artifact set on the
+    // pjrt backend (same math on the reference backend); same seeds →
+    // same model → same grads.
     let plain = grads_for("toy", Method::Mesp, 3);
     let flash = grads_for("toy_flash", Method::Mesp, 3);
     assert_layers_close(&plain, &flash, 5e-4, "flash vs probs");

@@ -1,35 +1,28 @@
 //! Quantized-base-weights path (paper §4.5): the Rust int4 packer must be
-//! bit-compatible with the Python scheme compiled into the q4 artifact,
-//! and the in-graph dequant forward must match the f32 forward through
-//! host-dequantized weights exactly.
+//! bit-compatible with the scheme the backends dequantize, and the
+//! in-backend dequant forward must match the f32 forward through
+//! host-dequantized weights.
 
-use std::path::Path;
 use std::sync::Arc;
 
-use mesp::config::{FROZEN, PROJS};
+use mesp::config::{presets, FROZEN};
 use mesp::memory::MemoryTracker;
 use mesp::model::{quant, ModelState};
-use mesp::runtime::client::Arg;
-use mesp::runtime::Runtime;
+use mesp::runtime::reference::QUANT_MATS;
+use mesp::runtime::{Arg, Backend, ReferenceBackend};
 use mesp::tensor::HostTensor;
 use mesp::util::Rng;
-
-const QUANT_MATS: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
 
 #[test]
 fn q4_artifact_matches_host_dequant() {
     let tracker = MemoryTracker::new();
-    let rt = Arc::new(
-        Runtime::load(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-                          .as_path(),
-                      "toy", tracker.clone())
-        .expect("runtime"),
-    );
-    if !rt.manifest.has_artifact("block_fwd_q4") {
-        eprintln!("skipping: artifacts predate q4 (run make artifacts)");
+    let dims = presets::compiled("toy").unwrap();
+    let rt: Arc<dyn Backend> =
+        Arc::new(ReferenceBackend::new(dims.clone(), tracker.clone()));
+    if !rt.has_artifact("block_fwd_q4") {
+        eprintln!("skipping: backend has no q4 artifact");
         return;
     }
-    let dims = rt.dims().clone();
     let model = ModelState::init(&dims, 3, &tracker);
     let mut rng = Rng::new(7);
     let x = HostTensor::randn(&[dims.batch, dims.seq, dims.d_model], 0.5,
@@ -68,7 +61,7 @@ fn q4_artifact_matches_host_dequant() {
     for t in &lora {
         ref_args.push(Arg::Host(t));
     }
-    let y_ref = rt.execute_mixed("block_fwd", &ref_args).unwrap()
+    let y_ref = rt.execute("block_fwd", &ref_args).unwrap()
         .into_iter().next().unwrap();
 
     // q4 artifact: ln1, ln2 then (packed, scales) pairs then lora
@@ -81,13 +74,12 @@ fn q4_artifact_matches_host_dequant() {
     for t in &lora {
         q_args.push(Arg::Host(t));
     }
-    let y_q4 = rt.execute_mixed("block_fwd_q4", &q_args).unwrap()
+    let y_q4 = rt.execute("block_fwd_q4", &q_args).unwrap()
         .into_iter().next().unwrap();
 
     assert_eq!(y_ref.shape, y_q4.shape);
     for (a, b) in y_ref.as_f32().iter().zip(y_q4.as_f32()) {
         assert!((a - b).abs() < 1e-4,
-                "in-graph dequant diverges from host dequant: {a} vs {b}");
+                "in-backend dequant diverges from host dequant: {a} vs {b}");
     }
-    let _ = PROJS; // abi sanity import
 }

@@ -1,0 +1,154 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides exactly the surface the workspace uses: [`Error`], [`Result`],
+//! and the `anyhow!` / `bail!` / `ensure!` macros, plus `?`-conversion from
+//! any `std::error::Error`. Swap the path dependency for the real crate in
+//! a connected build; nothing in the calling code changes.
+
+use std::fmt;
+
+/// A string-backed error value with an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Prepend context, mirroring `anyhow::Context` semantics.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+}
+
+impl Error {
+    /// First cause NOT already rendered in `msg`: `From<E>` copies the
+    /// converted error's message into `msg`, so the printable chain
+    /// starts at that error's own source.
+    fn chain_start(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source
+            .as_deref()
+            .and_then(|s| (s as &dyn std::error::Error).source())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        // `{:#}` renders the chain inline like anyhow does.
+        if f.alternate() {
+            let mut src = self.chain_start();
+            while let Some(s) = src {
+                write!(f, ": {s}")?;
+                src = s.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut src = self.chain_start();
+        while let Some(s) = src {
+            write!(f, "\n\nCaused by:\n    {s}")?;
+            src = s.source();
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`, so this
+// blanket conversion (the `?` operator on any std error) stays coherent —
+// the same trick the real anyhow uses.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an [`Error`] built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(format!(
+                "condition failed: {}", stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn io_error_converts_and_chains() {
+        let e = fails_io().unwrap_err();
+        assert!(!e.to_string().is_empty());
+        assert!(e.source.is_some());
+    }
+
+    #[test]
+    fn macros_format() {
+        let name = "x";
+        let e = anyhow!("missing {name} in {}", "manifest");
+        assert_eq!(e.to_string(), "missing x in manifest");
+        let f = || -> Result<()> { bail!("nope {}", 3) };
+        assert_eq!(f().unwrap_err().to_string(), "nope 3");
+        let g = |v: usize| -> Result<()> {
+            ensure!(v > 2, "v too small: {v}");
+            Ok(())
+        };
+        assert!(g(3).is_ok());
+        assert_eq!(g(1).unwrap_err().to_string(), "v too small: 1");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+}

@@ -1,0 +1,151 @@
+//! API-surface **stub** of the `xla` PJRT crate.
+//!
+//! The offline build environment cannot fetch (or link) the real XLA/PJRT
+//! toolchain, but the `pjrt` cargo feature still has to type-check so the
+//! feature-gated runtime stays honest. This crate declares exactly the
+//! types and signatures `mesp::runtime::client` consumes; every operation
+//! returns an error at runtime. To actually execute HLO artifacts, replace
+//! the `xla` path dependency in `rust/Cargo.toml` with the real crate —
+//! no code changes are needed on the mesp side.
+
+/// Error returned by every stubbed operation.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: the vendored `xla` crate is an offline stub; link the \
+             real xla/PJRT crate to use the pjrt backend"
+        ))
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the mesp runtime exchanges with PJRT.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F64,
+    S32,
+    U8,
+}
+
+#[derive(Debug)]
+pub struct PjRtClient;
+
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+#[derive(Debug)]
+pub struct Literal;
+
+#[derive(Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable("buffer_from_host_buffer"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable("buffer_from_host_literal"))
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable("Literal::reshape"))
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(Error::unavailable("Literal::create_from_shape_and_untyped_data"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(Error::unavailable("Literal::array_shape"))
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Err(Error::unavailable("Literal::ty"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::decompose_tuple"))
+    }
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
