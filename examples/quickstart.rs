@@ -29,8 +29,8 @@ fn main() -> anyhow::Result<()> {
     println!("peak tracked memory: {} MB", fmt_mb(summary.peak_bytes));
     println!("step time: {:.1} ms (p50)", summary.p50_step_secs * 1000.0);
 
-    println!("\nwhere the memory lives right now (params only — all");
-    println!("intermediates were freed block-by-block during backward):");
+    println!("\nwhere the memory lives right now (params + prefetched");
+    println!("batches — all intermediates were freed block-by-block):");
     for (tag, bytes) in sess.tracker.breakdown() {
         println!("  {tag:<20} {:>10} bytes", bytes);
     }

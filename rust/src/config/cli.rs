@@ -95,6 +95,50 @@ impl Args {
         }
         Ok(())
     }
+
+    /// Validate the whole command line against the per-subcommand flag
+    /// allowlists: unknown subcommands and typo'd flags (`--budegt-mb`)
+    /// fail loudly with the USAGE text instead of being ignored.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let Some(known) = known_flags(&self.command) else {
+            anyhow::bail!("unknown command '{}'\n\n{USAGE}", self.command);
+        };
+        self.expect_known(known)
+            .map_err(|e| anyhow::anyhow!("{e}\n\n{USAGE}"))
+    }
+}
+
+// Per-subcommand flag allowlists — the single source of truth for
+// `Args::validate` (and the reference the USAGE text must stay in sync
+// with).
+pub const TRAIN_FLAGS: &[&str] = &[
+    "config", "backend", "method", "steps", "lr", "seed", "optimizer",
+    "mezo-eps", "log-every", "spill-limit", "metrics", "artifacts",
+];
+pub const FLEET_FLAGS: &[&str] = &[
+    "config", "backend", "methods", "steps", "lr", "seed", "optimizer",
+    "budget-mb", "jobs", "workers", "job-file", "artifacts",
+];
+pub const SIMULATE_FLAGS: &[&str] = &["model", "seq", "rank", "breakdown"];
+pub const GRADCHECK_FLAGS: &[&str] =
+    &["config", "backend", "seeds", "tol", "artifacts"];
+pub const MEZO_QUALITY_FLAGS: &[&str] = &["config"];
+pub const REPRODUCE_FLAGS: &[&str] = &["table", "fig", "all", "steps", "out"];
+pub const INSPECT_FLAGS: &[&str] = &["config", "backend", "artifacts"];
+
+/// The flag allowlist of a subcommand; `None` for unknown subcommands.
+pub fn known_flags(command: &str) -> Option<&'static [&'static str]> {
+    match command {
+        "train" => Some(TRAIN_FLAGS),
+        "fleet" => Some(FLEET_FLAGS),
+        "simulate" => Some(SIMULATE_FLAGS),
+        "gradcheck" => Some(GRADCHECK_FLAGS),
+        "mezo-quality" => Some(MEZO_QUALITY_FLAGS),
+        "reproduce" => Some(REPRODUCE_FLAGS),
+        "inspect" => Some(INSPECT_FLAGS),
+        "help" | "" => Some(&[]),
+        _ => None,
+    }
 }
 
 pub const USAGE: &str = "\
@@ -106,15 +150,21 @@ COMMANDS
   train       Run a training session.
               --config toy|small|e2e100m  --method mesp|mebp|mezo|storeh
               --backend reference|pjrt  --steps N  --lr F  --seed N
-              --optimizer sgd|momentum|adam  --log-every N
+              --optimizer sgd|momentum|adam  --mezo-eps F  --log-every N
               --metrics PATH.jsonl  --spill-limit BYTES  --artifacts DIR
+  fleet       Run many sessions concurrently under a device memory budget
+              (admission control via the analytical peak-memory model).
+              --budget-mb N  --jobs N  --workers N  --config toy|small
+              --methods mesp,mebp|all  --steps N  --lr F  --seed N
+              --optimizer sgd|momentum|adam  --job-file PATH.jsonl
+              --backend reference|pjrt  --artifacts DIR
   simulate    Evaluate the analytical memory model at Qwen2.5 dims.
               --model 0.5b|1.5b|3b  --seq N  --rank N  [--breakdown]
   gradcheck   Assert MeSP ≡ MeBP ≡ store-h gradients on a runnable config.
               --config toy  --backend reference|pjrt  --seeds N  --tol F
   mezo-quality  Gradient-quality analysis (Table 3). --config small
-  reproduce   Regenerate paper tables. --table 1..11 | --all  [--steps N]
-              [--out FILE]
+  reproduce   Regenerate paper tables. --table 1..11 | --fig 2 | --all
+              [--steps N]  [--out FILE]
   inspect     List a config's artifact specs. --config toy
               --backend reference|pjrt  [--artifacts DIR]
   help        This text.
@@ -174,5 +224,43 @@ mod tests {
     #[test]
     fn flag_before_command_rejected() {
         assert!(Args::parse(vec!["--x".to_string()]).is_err());
+    }
+
+    #[test]
+    fn validate_catches_typos_with_usage() {
+        let a = parse("fleet --budegt-mb 64");
+        let err = a.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown flag --budegt-mb"), "{err}");
+        assert!(err.contains("USAGE"), "error must include usage: {err}");
+        assert!(parse("fleet --budget-mb 64").validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_unknown_subcommand() {
+        let err = parse("frobnicate").validate().unwrap_err().to_string();
+        assert!(err.contains("unknown command"), "{err}");
+        assert!(err.contains("USAGE"), "{err}");
+    }
+
+    #[test]
+    fn every_subcommand_has_an_allowlist() {
+        for cmd in ["train", "fleet", "simulate", "gradcheck",
+                    "mezo-quality", "reproduce", "inspect", "help", ""] {
+            assert!(known_flags(cmd).is_some(), "missing allowlist: {cmd}");
+        }
+        assert!(known_flags("nope").is_none());
+    }
+
+    #[test]
+    fn usage_documents_every_subcommand_flag() {
+        // keep USAGE and the allowlists from drifting apart
+        for flags in [TRAIN_FLAGS, FLEET_FLAGS, SIMULATE_FLAGS,
+                      GRADCHECK_FLAGS, MEZO_QUALITY_FLAGS, REPRODUCE_FLAGS,
+                      INSPECT_FLAGS] {
+            for f in flags {
+                assert!(USAGE.contains(&format!("--{f}")),
+                        "USAGE missing --{f}");
+            }
+        }
     }
 }

@@ -29,6 +29,10 @@ pub enum Method {
 }
 
 impl Method {
+    /// All four methods, canonical order.
+    pub const ALL: [Method; 4] =
+        [Method::Mesp, Method::Mebp, Method::Mezo, Method::StoreH];
+
     pub fn parse(s: &str) -> anyhow::Result<Method> {
         match s.to_ascii_lowercase().as_str() {
             "mesp" => Ok(Method::Mesp),
@@ -46,6 +50,25 @@ impl Method {
             Method::Mezo => "MeZO",
             Method::StoreH => "Store-h",
         }
+    }
+
+    /// Parse a comma-separated method list; `all` expands to every
+    /// method. Used by the `mesp fleet` `--methods` flag.
+    pub fn parse_list(s: &str) -> anyhow::Result<Vec<Method>> {
+        let mut out = Vec::new();
+        for part in s.split(',') {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            if p.eq_ignore_ascii_case("all") {
+                out.extend(Method::ALL);
+            } else {
+                out.push(Method::parse(p)?);
+            }
+        }
+        anyhow::ensure!(!out.is_empty(), "empty method list '{s}'");
+        Ok(out)
     }
 }
 
@@ -289,6 +312,17 @@ mod tests {
             assert_eq!(Method::parse(s).unwrap(), m);
         }
         assert!(Method::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn method_list_parsing() {
+        assert_eq!(Method::parse_list("mesp,mebp").unwrap(),
+                   vec![Method::Mesp, Method::Mebp]);
+        assert_eq!(Method::parse_list("all").unwrap().len(), 4);
+        assert_eq!(Method::parse_list(" mezo , storeh ").unwrap(),
+                   vec![Method::Mezo, Method::StoreH]);
+        assert!(Method::parse_list("mesp,frobnicate").is_err());
+        assert!(Method::parse_list(",").is_err());
     }
 
     #[test]

@@ -6,10 +6,17 @@ use std::sync::Arc;
 
 use crate::config::{presets, BackendKind, Method, TrainConfig};
 use crate::data::PrefetchLoader;
+use crate::fleet::{FleetOptions, Job, JobSpec, Scheduler};
 use crate::memory::MemoryTracker;
 use crate::metrics::{MetricsLogger, RunSummary};
 use crate::runtime::{Backend, ReferenceBackend};
 use crate::train::{build_engine, common::EngineCtx, Engine};
+use crate::util::rng::{derive, stream};
+
+/// Depth of the background batch-prefetch queue every session spawns.
+/// Shared with `fleet::admission`'s cost model so admission accounts for
+/// the batches a session can hold.
+pub const PREFETCH_DEPTH: usize = 4;
 
 /// Instantiate the compute backend a config asks for.
 ///
@@ -54,14 +61,30 @@ impl TrainSession {
     /// Build a session: instantiate the backend, init model, spawn the
     /// data pipeline.
     pub fn new(cfg: TrainConfig) -> anyhow::Result<TrainSession> {
-        let tracker = MemoryTracker::new();
+        Self::with_tracker(cfg, MemoryTracker::new())
+    }
+
+    /// Build a session on a caller-supplied tracker — the fleet scheduler
+    /// passes a child of its aggregate tracker here, so every tensor the
+    /// session holds also rolls up into the fleet-wide live total.
+    ///
+    /// Model init and the data loader draw from independent sub-seeds
+    /// derived from `cfg.seed` (`util::rng::derive`), so sessions with
+    /// different seeds differ in BOTH weights and data, while two
+    /// sessions sharing a seed remain bit-identical (the gradcheck and
+    /// Fig-2 equivalence runs rely on that).
+    pub fn with_tracker(
+        cfg: TrainConfig,
+        tracker: MemoryTracker,
+    ) -> anyhow::Result<TrainSession> {
         let rt = make_backend(&cfg, tracker.clone())?;
         let dims = rt.dims().clone();
-        let ctx = EngineCtx::new(rt, cfg.seed, cfg.optimizer, cfg.lr,
-                                 cfg.spill_limit);
+        let ctx = EngineCtx::new(rt, derive(cfg.seed, stream::MODEL),
+                                 cfg.optimizer, cfg.lr, cfg.spill_limit);
         let engine = build_engine(cfg.method, ctx, cfg.mezo_eps)?;
         let loader = PrefetchLoader::spawn(
-            dims.vocab, dims.batch, dims.seq, cfg.seed ^ 0xbeef, 4,
+            dims.vocab, dims.batch, dims.seq,
+            derive(cfg.seed, stream::LOADER), PREFETCH_DEPTH,
             tracker.clone(),
         );
         let metrics = MetricsLogger::new(
@@ -89,19 +112,38 @@ impl TrainSession {
 
 /// Run the same (config, steps, seed) under several methods — the
 /// comparison grids behind Tables 1/5 and Figure 2. Returns
-/// (method, summary, losses) triples.
+/// (method, summary, losses) triples in the order `methods` was given.
+///
+/// The grid goes through the fleet scheduler (single worker, unlimited
+/// budget): runs stay serial — step-time ratios remain comparable — but
+/// every method grid exercises the same queue/admission/report path the
+/// `mesp fleet` serving command uses. All jobs share `base.seed`
+/// verbatim: the comparisons REQUIRE identical weights and data streams
+/// across methods.
 pub fn sweep_methods(
     base: &TrainConfig,
     methods: &[Method],
     steps: usize,
 ) -> anyhow::Result<Vec<(Method, RunSummary, Vec<f64>)>> {
-    let mut out = Vec::new();
-    for &m in methods {
-        let mut cfg = base.clone();
-        cfg.method = m;
-        let mut sess = TrainSession::new(cfg)?;
-        let summary = sess.run(steps)?;
-        out.push((m, summary, sess.losses()));
+    let jobs: Vec<Job> = methods
+        .iter()
+        .enumerate()
+        .map(|(id, &m)| {
+            let mut spec = JobSpec::from_base(base);
+            spec.method = m;
+            spec.steps = steps;
+            Job { id, spec }
+        })
+        .collect();
+    let opts = FleetOptions { budget_bytes: u64::MAX, workers: 1 };
+    let report = Scheduler::run(&opts, base, jobs)?;
+    let mut out = Vec::with_capacity(report.outcomes.len());
+    for o in report.outcomes {
+        let method = o.job.spec.method;
+        let r = o.result.map_err(|e| {
+            anyhow::anyhow!("{} sweep job failed: {e}", method.name())
+        })?;
+        out.push((method, r.summary, r.losses));
     }
     Ok(out)
 }

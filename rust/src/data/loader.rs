@@ -88,10 +88,14 @@ impl BatchSource {
 
 /// Background prefetching loader: a producer thread keeps up to `depth`
 /// batches ready; `next()` blocks only when the queue is empty.
+///
+/// Batches are tracked under "data:batch" from the moment the producer
+/// creates them: the guard travels through the channel with its batch,
+/// so queued batches (and the one the blocked producer holds) count as
+/// live bytes — the inventory `fleet::admission` charges per session.
 pub struct PrefetchLoader {
-    rx: mpsc::Receiver<Batch>,
+    rx: mpsc::Receiver<(Batch, crate::memory::Guard)>,
     _handle: std::thread::JoinHandle<()>,
-    tracker: MemoryTracker,
 }
 
 impl PrefetchLoader {
@@ -110,18 +114,22 @@ impl PrefetchLoader {
                 let mut src = BatchSource::new(vocab, batch, seq, seed);
                 // blocks when the channel is full (backpressure); exits
                 // when the receiver hangs up.
-                while tx.send(src.next_batch()).is_ok() {}
+                loop {
+                    let b = src.next_batch();
+                    let g = tracker.track("data:batch", b.bytes());
+                    if tx.send((b, g)).is_err() {
+                        break;
+                    }
+                }
             })
             .expect("spawn prefetch thread");
-        PrefetchLoader { rx, _handle: handle, tracker }
+        PrefetchLoader { rx, _handle: handle }
     }
 
-    /// Receive the next batch; its bytes are tracked under "data:batch"
-    /// for the caller to hold.
+    /// Receive the next batch with its "data:batch" guard; the bytes
+    /// stay live until the caller drops the guard.
     pub fn next(&self) -> (Batch, crate::memory::Guard) {
-        let b = self.rx.recv().expect("prefetch thread alive");
-        let g = self.tracker.track("data:batch", b.bytes());
-        (b, g)
+        self.rx.recv().expect("prefetch thread alive")
     }
 }
 

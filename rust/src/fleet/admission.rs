@@ -1,0 +1,238 @@
+//! Admission control: keep the sum of predicted per-session peak memory
+//! under the device budget.
+//!
+//! Each job is costed BEFORE it starts with the analytical peak-memory
+//! model (`memory::model`) at tracked widths, plus the reference
+//! backend's always-resident weight copies and the prefetch queue — i.e.
+//! the worst tracked moment one `TrainSession` of that spec can reach.
+//! Workers block in [`Admission::admit`] until the budget has room
+//! (backpressure); the permit is RAII, so a finished (or crashed) session
+//! always returns its reservation. Because the per-job cost is an upper
+//! bound on the session's tracked peak, `sum(admitted costs) <= budget`
+//! implies the fleet-wide aggregate tracked peak stays under the budget.
+
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex};
+
+use crate::config::{presets, Method};
+use crate::coordinator::PREFETCH_DEPTH;
+use crate::memory::{model as memmodel, Widths};
+use crate::util::stats::fmt_mb;
+
+use super::job::JobSpec;
+
+/// Predicted peak tracked bytes for one session running `spec`:
+/// the analytical per-method activation/gradient peak (tracked widths)
+/// + the resident f32 weight uploads (the reference backend keeps the
+///   full frozen model on-device; the analytical model only charges
+///   per-block dequant buffers)
+/// + the prefetch queue's batch buffers.
+pub fn job_cost_bytes(spec: &JobSpec) -> anyhow::Result<u64> {
+    let dims = presets::compiled(&spec.config)?;
+    let activations =
+        memmodel::peak(spec.method, &dims, spec.optimizer, Widths::tracked())
+            .total();
+    let weights = dims.frozen_params_total() as u64 * 4;
+    let batch_bytes = 2 * (dims.batch * dims.seq * 4) as u64; // tokens+targets i32
+    let queue = (PREFETCH_DEPTH as u64 + 2) * batch_bytes;
+    Ok(activations + weights + queue)
+}
+
+#[derive(Debug, Default)]
+struct AdmState {
+    /// Sum of admitted job costs currently outstanding.
+    committed: u64,
+    /// Number of admitted jobs currently outstanding.
+    active: usize,
+    active_by_method: BTreeMap<&'static str, usize>,
+    peak_concurrent: usize,
+    peak_committed: u64,
+    peak_by_method: BTreeMap<&'static str, usize>,
+    admitted_total: usize,
+}
+
+/// Snapshot of the admission high-water marks for the fleet report.
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionStats {
+    /// Most jobs ever admitted at once.
+    pub peak_concurrent: usize,
+    /// Highest sum of admitted costs (predicted occupancy high-water).
+    pub peak_committed: u64,
+    /// Most concurrently-admitted jobs per method name.
+    pub peak_by_method: BTreeMap<String, usize>,
+    /// Total jobs admitted over the fleet's lifetime.
+    pub admitted_total: usize,
+}
+
+/// The budget gate. Shared by all workers of one fleet run.
+#[derive(Debug)]
+pub struct Admission {
+    budget: u64,
+    state: Mutex<AdmState>,
+    cv: Condvar,
+}
+
+impl Admission {
+    pub fn new(budget: u64) -> Admission {
+        Admission {
+            budget,
+            state: Mutex::new(AdmState::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Reserve `cost` bytes for a job of `method`, blocking while the
+    /// budget is full. Errors immediately if the job could never fit.
+    pub fn admit(&self, method: Method, cost: u64) -> anyhow::Result<Permit<'_>> {
+        anyhow::ensure!(
+            cost <= self.budget,
+            "job cost {} MB exceeds the fleet budget {} MB — it can never \
+             be admitted",
+            fmt_mb(cost),
+            fmt_mb(self.budget)
+        );
+        let name = method.name();
+        let mut st = self.state.lock().unwrap();
+        while cost > self.budget - st.committed {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.committed += cost;
+        st.active += 1;
+        st.admitted_total += 1;
+        st.peak_committed = st.peak_committed.max(st.committed);
+        st.peak_concurrent = st.peak_concurrent.max(st.active);
+        let per = st.active_by_method.entry(name).or_insert(0);
+        *per += 1;
+        let per = *per;
+        let peak = st.peak_by_method.entry(name).or_insert(0);
+        *peak = (*peak).max(per);
+        Ok(Permit { adm: self, method: name, cost })
+    }
+
+    pub fn stats(&self) -> AdmissionStats {
+        let st = self.state.lock().unwrap();
+        AdmissionStats {
+            peak_concurrent: st.peak_concurrent,
+            peak_committed: st.peak_committed,
+            peak_by_method: st
+                .peak_by_method
+                .iter()
+                .map(|(k, v)| (k.to_string(), *v))
+                .collect(),
+            admitted_total: st.admitted_total,
+        }
+    }
+
+    fn release(&self, method: &'static str, cost: u64) {
+        {
+            let mut st = self.state.lock().unwrap();
+            st.committed = st.committed.saturating_sub(cost);
+            st.active = st.active.saturating_sub(1);
+            if let Some(n) = st.active_by_method.get_mut(method) {
+                *n = n.saturating_sub(1);
+            }
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// RAII budget reservation: returns its bytes on drop and wakes waiters.
+#[derive(Debug)]
+pub struct Permit<'a> {
+    adm: &'a Admission,
+    method: &'static str,
+    cost: u64,
+}
+
+impl Permit<'_> {
+    pub fn cost(&self) -> u64 {
+        self.cost
+    }
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.adm.release(self.method, self.cost);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::fleet::job::JobSpec;
+
+    fn spec(method: Method) -> JobSpec {
+        let mut s = JobSpec::from_base(&TrainConfig::default());
+        s.method = method;
+        s
+    }
+
+    #[test]
+    fn mesp_costs_less_than_mebp() {
+        // The fleet's raison d'être: the same budget fits more MeSP jobs.
+        let mesp = job_cost_bytes(&spec(Method::Mesp)).unwrap();
+        let mebp = job_cost_bytes(&spec(Method::Mebp)).unwrap();
+        assert!(mesp < mebp, "MeSP {mesp} !< MeBP {mebp}");
+    }
+
+    #[test]
+    fn cost_errors_on_unknown_config() {
+        let mut s = spec(Method::Mesp);
+        s.config = "nonexistent".into();
+        assert!(job_cost_bytes(&s).is_err());
+    }
+
+    #[test]
+    fn admit_and_release_cycle() {
+        let adm = Admission::new(1000);
+        let p1 = adm.admit(Method::Mesp, 400).unwrap();
+        let p2 = adm.admit(Method::Mesp, 400).unwrap();
+        assert_eq!(adm.stats().peak_concurrent, 2);
+        assert_eq!(adm.stats().peak_committed, 800);
+        drop(p1);
+        drop(p2);
+        let p3 = adm.admit(Method::Mebp, 1000).unwrap();
+        assert_eq!(adm.stats().peak_concurrent, 2, "peaks are sticky");
+        assert_eq!(adm.stats().admitted_total, 3);
+        drop(p3);
+    }
+
+    #[test]
+    fn oversized_job_rejected_immediately() {
+        let adm = Admission::new(100);
+        assert!(adm.admit(Method::Mesp, 101).is_err());
+    }
+
+    #[test]
+    fn admit_blocks_until_budget_frees() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let adm = Arc::new(Admission::new(100));
+        let p = adm.admit(Method::Mesp, 80).unwrap();
+        let admitted = Arc::new(AtomicBool::new(false));
+        let (adm2, flag) = (Arc::clone(&adm), Arc::clone(&admitted));
+        let h = std::thread::spawn(move || {
+            let _p = adm2.admit(Method::Mebp, 80).unwrap();
+            flag.store(true, Ordering::SeqCst);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(!admitted.load(Ordering::SeqCst), "must wait for the budget");
+        drop(p);
+        h.join().unwrap();
+        assert!(admitted.load(Ordering::SeqCst));
+        assert_eq!(adm.stats().peak_concurrent, 1, "never overlapped");
+    }
+
+    #[test]
+    fn unlimited_budget_never_blocks() {
+        let adm = Admission::new(u64::MAX);
+        let _a = adm.admit(Method::Mesp, u64::MAX / 4).unwrap();
+        let _b = adm.admit(Method::Mesp, u64::MAX / 4).unwrap();
+        assert_eq!(adm.stats().peak_concurrent, 2);
+    }
+}

@@ -1,0 +1,292 @@
+//! Fleet job descriptions: what to train (config + method + steps + seed)
+//! without any of the per-run wiring. Jobs come from a JSONL job file
+//! (one object per line) or from a generated grid; either way each job
+//! gets its own derived seed stream so jobs sharing a base seed do NOT
+//! see identical data.
+
+use std::path::Path;
+
+use crate::config::{Method, OptimizerKind, TrainConfig};
+use crate::util::rng::{derive, stream};
+use crate::util::Json;
+
+/// The allowed keys of one JSONL job object — anything else is a typo
+/// and fails loudly (same discipline as the CLI flag allowlists).
+/// `from_json`'s match must accept exactly this set (asserted by the
+/// `job_keys_list_matches_parser` test).
+pub const JOB_KEYS: &[&str] =
+    &["config", "method", "steps", "seed", "lr", "optimizer"];
+
+/// A JSON number that must be a non-negative integer (seeds, step
+/// counts): floats with fractional parts, negatives, and values beyond
+/// f64's exact-integer range are rejected instead of silently truncated.
+fn as_exact_u64(v: &Json, key: &str) -> anyhow::Result<u64> {
+    let n = v
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("'{key}' must be a number"))?;
+    anyhow::ensure!(
+        n >= 0.0 && n.fract() == 0.0 && n <= (1u64 << 53) as f64,
+        "'{key}' must be a non-negative integer <= 2^53, got {n}"
+    );
+    Ok(n as u64)
+}
+
+/// What one fine-tuning job trains. Everything not listed here (backend,
+/// artifacts dir, logging…) comes from the fleet's base [`TrainConfig`].
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub config: String,
+    pub method: Method,
+    pub steps: usize,
+    pub seed: u64,
+    pub lr: f32,
+    pub optimizer: OptimizerKind,
+}
+
+impl JobSpec {
+    /// A spec inheriting every field from the fleet's base config.
+    pub fn from_base(base: &TrainConfig) -> JobSpec {
+        JobSpec {
+            config: base.config.clone(),
+            method: base.method,
+            steps: base.steps,
+            seed: base.seed,
+            lr: base.lr,
+            optimizer: base.optimizer,
+        }
+    }
+
+    /// Parse one JSONL job object, with `base` supplying defaults for
+    /// absent keys. Unknown keys are rejected.
+    pub fn from_json(j: &Json, base: &TrainConfig) -> anyhow::Result<JobSpec> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("job line must be a JSON object"))?;
+        let mut spec = JobSpec::from_base(base);
+        for (k, v) in obj {
+            match k.as_str() {
+                "config" => {
+                    spec.config = v
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("'config' must be a string"))?
+                        .to_string();
+                }
+                "method" => {
+                    spec.method = Method::parse(
+                        v.as_str()
+                            .ok_or_else(|| anyhow::anyhow!("'method' must be a string"))?,
+                    )?;
+                }
+                "steps" => {
+                    spec.steps = as_exact_u64(v, "steps")? as usize;
+                }
+                "seed" => {
+                    spec.seed = as_exact_u64(v, "seed")?;
+                }
+                "lr" => {
+                    let lr = v
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("'lr' must be a number"))?;
+                    anyhow::ensure!(
+                        lr.is_finite() && lr > 0.0,
+                        "'lr' must be a positive float, got {lr}"
+                    );
+                    spec.lr = lr as f32;
+                }
+                "optimizer" => {
+                    spec.optimizer = OptimizerKind::parse(
+                        v.as_str()
+                            .ok_or_else(|| anyhow::anyhow!("'optimizer' must be a string"))?,
+                    )?;
+                }
+                other => anyhow::bail!(
+                    "unknown job key '{other}' (known: {})",
+                    JOB_KEYS.join(", ")
+                ),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// The full training config this job runs under: base wiring
+    /// (backend, artifacts, logging) + this spec's overrides.
+    pub fn to_train_config(&self, base: &TrainConfig) -> TrainConfig {
+        TrainConfig {
+            config: self.config.clone(),
+            method: self.method,
+            steps: self.steps,
+            seed: self.seed,
+            lr: self.lr,
+            optimizer: self.optimizer,
+            ..base.clone()
+        }
+    }
+}
+
+/// One schedulable unit: a spec plus its stable queue id (report order).
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: usize,
+    pub spec: JobSpec,
+}
+
+/// Load jobs from a JSONL file: one JSON object per line, blank lines
+/// ignored. Each job inherits defaults from `base`; a job that does not
+/// set `seed` explicitly gets a derived per-job seed stream.
+pub fn load_jobs(path: &Path, base: &TrainConfig) -> anyhow::Result<Vec<Job>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read job file {}: {e}", path.display()))?;
+    let job_seed = derive(base.seed, stream::JOB);
+    let mut jobs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("job file line {}: {e}", lineno + 1))?;
+        let mut spec = JobSpec::from_json(&j, base)
+            .map_err(|e| anyhow::anyhow!("job file line {}: {e}", lineno + 1))?;
+        if j.get("seed").is_none() {
+            spec.seed = derive(job_seed, jobs.len() as u64);
+        }
+        jobs.push(Job { id: jobs.len(), spec });
+    }
+    anyhow::ensure!(!jobs.is_empty(), "job file {} has no jobs", path.display());
+    Ok(jobs)
+}
+
+/// Generate a grid of `count` jobs on the base config, cycling through
+/// `methods`. Every job gets its own seed derived from the base seed and
+/// the job index, so the fleet trains on `count` distinct data streams.
+pub fn grid(base: &TrainConfig, methods: &[Method], count: usize) -> Vec<Job> {
+    if methods.is_empty() {
+        return Vec::new();
+    }
+    let job_seed = derive(base.seed, stream::JOB);
+    (0..count)
+        .map(|i| {
+            let mut spec = JobSpec::from_base(base);
+            spec.method = methods[i % methods.len()];
+            spec.seed = derive(job_seed, i as u64);
+            Job { id: i, spec }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> TrainConfig {
+        TrainConfig { steps: 7, seed: 42, ..Default::default() }
+    }
+
+    #[test]
+    fn grid_cycles_methods_and_derives_seeds() {
+        let jobs = grid(&base(), &[Method::Mesp, Method::Mebp], 4);
+        assert_eq!(jobs.len(), 4);
+        assert_eq!(jobs[0].spec.method, Method::Mesp);
+        assert_eq!(jobs[1].spec.method, Method::Mebp);
+        assert_eq!(jobs[2].spec.method, Method::Mesp);
+        let seeds: Vec<u64> = jobs.iter().map(|j| j.spec.seed).collect();
+        for (i, a) in seeds.iter().enumerate() {
+            assert_ne!(*a, 42, "job seeds must differ from the base seed");
+            for b in &seeds[i + 1..] {
+                assert_ne!(a, b, "job seeds must be pairwise distinct");
+            }
+        }
+        assert_eq!(jobs[3].spec.steps, 7, "grid inherits base steps");
+    }
+
+    #[test]
+    fn json_overrides_and_defaults() {
+        let j = Json::parse(
+            r#"{"method": "mebp", "steps": 3, "seed": 9, "lr": 0.01}"#,
+        )
+        .unwrap();
+        let spec = JobSpec::from_json(&j, &base()).unwrap();
+        assert_eq!(spec.method, Method::Mebp);
+        assert_eq!(spec.steps, 3);
+        assert_eq!(spec.seed, 9);
+        assert!((spec.lr - 0.01).abs() < 1e-9);
+        assert_eq!(spec.config, "toy", "inherited from base");
+    }
+
+    #[test]
+    fn json_unknown_key_rejected() {
+        let j = Json::parse(r#"{"mthod": "mebp"}"#).unwrap();
+        let err = JobSpec::from_json(&j, &base()).unwrap_err().to_string();
+        assert!(err.contains("unknown job key"), "{err}");
+    }
+
+    #[test]
+    fn json_invalid_numbers_fail_loudly() {
+        for bad in [
+            r#"{"seed": -3}"#,
+            r#"{"seed": 1.7}"#,
+            r#"{"steps": -1}"#,
+            r#"{"steps": 2.5}"#,
+            r#"{"lr": -0.01}"#,
+            r#"{"lr": 0}"#,
+            r#"{"seed": 1e17}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(
+                JobSpec::from_json(&j, &base()).is_err(),
+                "must reject {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn job_keys_list_matches_parser() {
+        // JOB_KEYS is the advertised allowlist; the parser must accept
+        // exactly that set (a valid value per key), nothing more.
+        for (key, val) in [
+            ("config", "\"toy\""),
+            ("method", "\"mesp\""),
+            ("steps", "3"),
+            ("seed", "7"),
+            ("lr", "0.01"),
+            ("optimizer", "\"adam\""),
+        ] {
+            assert!(JOB_KEYS.contains(&key), "test table missing {key}");
+            let j = Json::parse(&format!("{{\"{key}\": {val}}}")).unwrap();
+            assert!(
+                JobSpec::from_json(&j, &base()).is_ok(),
+                "advertised key '{key}' rejected"
+            );
+        }
+        assert_eq!(JOB_KEYS.len(), 6, "update the table when adding keys");
+    }
+
+    #[test]
+    fn jsonl_file_roundtrip() {
+        let dir = std::env::temp_dir().join("mesp-test-fleet-jobs");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("jobs.jsonl");
+        std::fs::write(
+            &path,
+            "{\"method\": \"mesp\", \"steps\": 2}\n\n{\"method\": \"mezo\", \"seed\": 5}\n",
+        )
+        .unwrap();
+        let jobs = load_jobs(&path, &base()).unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].spec.method, Method::Mesp);
+        assert_eq!(jobs[0].spec.steps, 2);
+        assert_ne!(jobs[0].spec.seed, 42, "unset seed gets a derived stream");
+        assert_eq!(jobs[1].spec.seed, 5, "explicit seed wins");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn jsonl_bad_line_reports_lineno() {
+        let dir = std::env::temp_dir().join("mesp-test-fleet-badjobs");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("jobs.jsonl");
+        std::fs::write(&path, "{\"method\": \"mesp\"}\nnot json\n").unwrap();
+        let err = load_jobs(&path, &base()).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

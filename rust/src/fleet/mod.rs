@@ -1,0 +1,27 @@
+//! Fleet scheduling: concurrent multi-session fine-tuning under a shared
+//! device memory budget.
+//!
+//! Mobile devices give ALL workloads a combined 6–12 GB; MeSP's peak-
+//! memory reduction matters exactly because it lets fine-tuning coexist
+//! with everything else. This subsystem turns that argument into a
+//! serving path: a job queue ([`job`]), an admission gate that costs each
+//! job with the analytical peak-memory model before it starts
+//! ([`admission`]), and a worker-pool scheduler that runs admitted jobs
+//! as real concurrent [`crate::coordinator::TrainSession`]s, each on a
+//! child of one fleet-wide aggregate [`crate::memory::MemoryTracker`]
+//! ([`scheduler`]).
+//!
+//! The visible consequence of the paper's claim: under the same budget,
+//! the gate admits roughly twice as many concurrent MeSP sessions as
+//! MeBP sessions (`cargo run --release -- fleet --config toy
+//! --budget-mb 64 --jobs 8`, or `examples/fleet_demo.rs`).
+
+pub mod admission;
+pub mod job;
+pub mod scheduler;
+
+pub use admission::{job_cost_bytes, Admission, AdmissionStats, Permit};
+pub use job::{grid, load_jobs, Job, JobSpec};
+pub use scheduler::{
+    FleetOptions, FleetReport, JobOutcome, JobResult, MethodStats, Scheduler,
+};

@@ -1,0 +1,307 @@
+//! The fleet scheduler: a worker pool draining a job queue behind the
+//! admission gate.
+//!
+//! Each worker pops a job, costs it, blocks until the budget admits it,
+//! then runs a full [`TrainSession`] on a per-job child of the fleet-wide
+//! aggregate [`MemoryTracker`]. The session's tracked bytes therefore
+//! roll up into one aggregate whose peak is the fleet's true concurrent
+//! high-water mark — the number the report compares against the budget.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::config::TrainConfig;
+use crate::coordinator::TrainSession;
+use crate::memory::MemoryTracker;
+use crate::metrics::{RunSummary, TableBuilder};
+use crate::util::stats::fmt_mb;
+
+use super::admission::{job_cost_bytes, Admission};
+use super::job::Job;
+
+/// Fleet-wide knobs (the job list and base `TrainConfig` ride separately).
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// Shared device budget in bytes: the sum of predicted peak memory of
+    /// all concurrently-admitted jobs stays under this.
+    pub budget_bytes: u64,
+    /// Worker threads draining the queue (clamped to the job count).
+    pub workers: usize,
+}
+
+/// What one finished job produced.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub summary: RunSummary,
+    pub losses: Vec<f64>,
+    /// The job's own tracked peak (child tracker, isolated).
+    pub session_peak: u64,
+}
+
+/// Outcome of one job, success or failure.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub job: Job,
+    /// Predicted peak bytes the admission gate reserved.
+    pub cost_bytes: u64,
+    /// Seconds spent queued behind the budget.
+    pub wait_secs: f64,
+    /// Seconds from admission to completion.
+    pub run_secs: f64,
+    pub worker: usize,
+    pub result: Result<JobResult, String>,
+}
+
+/// Per-method occupancy summary for the report.
+#[derive(Debug, Clone, Default)]
+pub struct MethodStats {
+    pub jobs: usize,
+    /// Largest single-job predicted cost for the method.
+    pub cost_bytes: u64,
+    /// Most jobs of this method admitted at once.
+    pub peak_concurrent: usize,
+    pub total_steps: usize,
+}
+
+/// Everything a fleet run produced.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub budget_bytes: u64,
+    pub workers: usize,
+    /// Outcomes in job-id order.
+    pub outcomes: Vec<JobOutcome>,
+    pub wall_secs: f64,
+    /// Fleet-wide aggregate tracked peak (sum of live bytes across all
+    /// concurrent sessions at the worst moment).
+    pub aggregate_peak: u64,
+    /// High-water mark of the admission gate's committed (predicted) bytes.
+    pub peak_committed: u64,
+    /// Most jobs admitted at once, across methods.
+    pub peak_concurrent: usize,
+    pub per_method: BTreeMap<String, MethodStats>,
+}
+
+impl FleetReport {
+    pub fn completed(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.result.is_ok()).count()
+    }
+
+    pub fn failed(&self) -> usize {
+        self.outcomes.len() - self.completed()
+    }
+
+    pub fn jobs_per_sec(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.completed() as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Render the fleet report: headline occupancy numbers, the
+    /// per-method concurrency table (the MeSP-vs-MeBP demo), and per-job
+    /// rows.
+    pub fn render(&self) -> String {
+        let mut out = String::from("## fleet report\n\n");
+        out.push_str(&format!(
+            "jobs: {} completed, {} failed | wall {:.2}s | {:.2} jobs/s | \
+             {} workers\n",
+            self.completed(),
+            self.failed(),
+            self.wall_secs,
+            self.jobs_per_sec(),
+            self.workers
+        ));
+        out.push_str(&format!(
+            "budget {} MB | predicted occupancy peak {} MB | aggregate \
+             tracked peak {} MB | peak concurrent jobs {}\n\n",
+            fmt_mb(self.budget_bytes),
+            fmt_mb(self.peak_committed),
+            fmt_mb(self.aggregate_peak),
+            self.peak_concurrent
+        ));
+
+        let mut t = TableBuilder::new(&[
+            "Method", "Jobs", "Cost MB/job", "Max concurrent", "Steps",
+        ]);
+        for (name, m) in &self.per_method {
+            t.row(vec![
+                name.clone(),
+                m.jobs.to_string(),
+                fmt_mb(m.cost_bytes),
+                m.peak_concurrent.to_string(),
+                m.total_steps.to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+
+        let mut t = TableBuilder::new(&[
+            "Job", "Method", "Config", "Steps", "Wait s", "Run s",
+            "Final loss", "Peak MB", "Status",
+        ]);
+        for o in &self.outcomes {
+            let (loss, peak, status) = match &o.result {
+                Ok(r) => (
+                    format!("{:.4}", r.summary.final_loss),
+                    fmt_mb(r.session_peak),
+                    if r.summary.healthy() { "ok" } else { "DIVERGED" }
+                        .to_string(),
+                ),
+                Err(e) => ("-".into(), "-".into(), format!("FAILED: {e}")),
+            };
+            t.row(vec![
+                o.job.id.to_string(),
+                o.job.spec.method.name().into(),
+                o.job.spec.config.clone(),
+                o.job.spec.steps.to_string(),
+                format!("{:.3}", o.wait_secs),
+                format!("{:.3}", o.run_secs),
+                loss,
+                peak,
+                status,
+            ]);
+        }
+        out.push_str(&t.render());
+        out
+    }
+}
+
+/// The scheduler entry point (stateless; all state lives per-run).
+pub struct Scheduler;
+
+impl Scheduler {
+    /// Run `jobs` on a worker pool under `opts.budget_bytes`. Per-job
+    /// failures are captured in the report (the fleet keeps going);
+    /// errors constructing the fleet itself are returned.
+    pub fn run(
+        opts: &FleetOptions,
+        base: &TrainConfig,
+        jobs: Vec<Job>,
+    ) -> anyhow::Result<FleetReport> {
+        anyhow::ensure!(!jobs.is_empty(), "fleet has no jobs");
+        anyhow::ensure!(opts.budget_bytes > 0, "fleet budget must be positive");
+        let workers = opts.workers.clamp(1, jobs.len());
+        let n_jobs = jobs.len();
+
+        let admission = Admission::new(opts.budget_bytes);
+        let aggregate = MemoryTracker::new();
+        let queue: Mutex<VecDeque<Job>> = Mutex::new(jobs.into());
+        let results: Mutex<Vec<JobOutcome>> = Mutex::new(Vec::with_capacity(n_jobs));
+
+        let start = Instant::now();
+        std::thread::scope(|s| {
+            for w in 0..workers {
+                let (queue, results) = (&queue, &results);
+                let (admission, aggregate) = (&admission, &aggregate);
+                s.spawn(move || loop {
+                    let job = queue.lock().unwrap().pop_front();
+                    let Some(job) = job else { break };
+                    let outcome = run_job(w, job, admission, aggregate, base);
+                    results.lock().unwrap().push(outcome);
+                });
+            }
+        });
+        let wall_secs = start.elapsed().as_secs_f64();
+
+        let mut outcomes = results.into_inner().unwrap();
+        outcomes.sort_by_key(|o| o.job.id);
+
+        let mut per_method: BTreeMap<String, MethodStats> = BTreeMap::new();
+        for o in &outcomes {
+            let m = per_method
+                .entry(o.job.spec.method.name().to_string())
+                .or_default();
+            m.jobs += 1;
+            m.cost_bytes = m.cost_bytes.max(o.cost_bytes);
+            if let Ok(r) = &o.result {
+                m.total_steps += r.summary.steps;
+            }
+        }
+        let adm_stats = admission.stats();
+        for (name, peak) in &adm_stats.peak_by_method {
+            if let Some(m) = per_method.get_mut(name) {
+                m.peak_concurrent = *peak;
+            }
+        }
+
+        Ok(FleetReport {
+            budget_bytes: opts.budget_bytes,
+            workers,
+            outcomes,
+            wall_secs,
+            aggregate_peak: aggregate.peak(),
+            peak_committed: adm_stats.peak_committed,
+            peak_concurrent: adm_stats.peak_concurrent,
+            per_method,
+        })
+    }
+}
+
+/// Cost → admit (blocking) → run one session on a child tracker. The
+/// session is dropped (all its tracked bytes released) BEFORE the permit
+/// returns the reservation, so the budget always covers live sessions.
+fn run_job(
+    worker: usize,
+    job: Job,
+    admission: &Admission,
+    aggregate: &MemoryTracker,
+    base: &TrainConfig,
+) -> JobOutcome {
+    let cost_bytes = match job_cost_bytes(&job.spec) {
+        Ok(c) => c,
+        Err(e) => {
+            return JobOutcome {
+                job,
+                cost_bytes: 0,
+                wait_secs: 0.0,
+                run_secs: 0.0,
+                worker,
+                result: Err(format!("costing failed: {e:#}")),
+            }
+        }
+    };
+
+    let queued = Instant::now();
+    let permit = match admission.admit(job.spec.method, cost_bytes) {
+        Ok(p) => p,
+        Err(e) => {
+            return JobOutcome {
+                job,
+                cost_bytes,
+                wait_secs: queued.elapsed().as_secs_f64(),
+                run_secs: 0.0,
+                worker,
+                result: Err(format!("{e:#}")),
+            }
+        }
+    };
+    let wait_secs = queued.elapsed().as_secs_f64();
+
+    let started = Instant::now();
+    let result = (|| -> anyhow::Result<JobResult> {
+        let cfg = job.spec.to_train_config(base);
+        let steps = cfg.steps;
+        let mut sess = TrainSession::with_tracker(cfg, aggregate.child())?;
+        let summary = sess.run(steps)?;
+        let losses = sess.losses();
+        // max per-step tracked peak (the engines reset the peak at step
+        // boundaries, so the raw tracker only remembers the last step)
+        let session_peak = summary.peak_bytes;
+        Ok(JobResult { summary, losses, session_peak })
+        // `sess` drops here: every tracked byte of the job is released
+        // from the aggregate before the permit below frees the budget.
+    })();
+    let run_secs = started.elapsed().as_secs_f64();
+    drop(permit);
+
+    JobOutcome {
+        job,
+        cost_bytes,
+        wait_secs,
+        run_secs,
+        worker,
+        result: result.map_err(|e| format!("{e:#}")),
+    }
+}

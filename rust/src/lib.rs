@@ -9,7 +9,9 @@
 //!   (the paper's contribution), plus the MeBP / MeZO / store-h baselines,
 //!   a byte-accurate memory tracker, an analytical Qwen-scale memory
 //!   model, a data pipeline, metrics, and reproduction drivers for every
-//!   table and figure in the paper.
+//!   table and figure in the paper. The [`fleet`] subsystem schedules
+//!   many concurrent sessions under a shared device memory budget, using
+//!   the analytical model for admission control.
 //! * **Compute backends** ([`runtime::Backend`]) — the engines talk to a
 //!   pluggable backend trait. The default [`runtime::ReferenceBackend`]
 //!   implements the whole artifact surface (including the Appendix-A
@@ -28,6 +30,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fleet;
 pub mod memory;
 pub mod metrics;
 pub mod model;

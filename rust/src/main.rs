@@ -11,6 +11,7 @@ use std::path::Path;
 use mesp::config::cli::{Args, USAGE};
 use mesp::config::{presets, BackendKind, Method, OptimizerKind, TrainConfig};
 use mesp::coordinator::TrainSession;
+use mesp::fleet::{self, FleetOptions, Scheduler};
 use mesp::memory::model as memmodel;
 use mesp::metrics::grad_quality;
 use mesp::reproduce;
@@ -26,8 +27,12 @@ fn main() {
 
 fn run(argv: Vec<String>) -> anyhow::Result<()> {
     let args = Args::parse(argv)?;
+    // Per-subcommand flag allowlists (config::cli::known_flags): typo'd
+    // flags and unknown subcommands fail here with the USAGE text.
+    args.validate()?;
     match args.command.as_str() {
         "train" => cmd_train(&args),
+        "fleet" => cmd_fleet(&args),
         "simulate" => cmd_simulate(&args),
         "gradcheck" => cmd_gradcheck(&args),
         "mezo-quality" => cmd_mezo_quality(&args),
@@ -37,7 +42,13 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
             println!("{USAGE}");
             Ok(())
         }
-        other => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
+        // validate() already rejected commands without an allowlist, so
+        // reaching this arm means cli::known_flags knows a command this
+        // match does not dispatch.
+        other => anyhow::bail!(
+            "command '{other}' has an allowlist but no handler — add a \
+             match arm in main::run"
+        ),
     }
 }
 
@@ -59,10 +70,6 @@ fn train_config(args: &Args) -> anyhow::Result<TrainConfig> {
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    args.expect_known(&[
-        "config", "backend", "method", "steps", "lr", "seed", "optimizer",
-        "mezo-eps", "log-every", "spill-limit", "metrics", "artifacts",
-    ])?;
     let cfg = train_config(args)?;
     let steps = cfg.steps;
     let method = cfg.method;
@@ -82,8 +89,56 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+    let base = TrainConfig {
+        config: args.str("config", "toy"),
+        backend: BackendKind::parse(&args.str("backend", "reference"))?,
+        steps: args.usize("steps", 5)?,
+        lr: args.f32("lr", 1e-4)?,
+        seed: args.u64("seed", 42)?,
+        optimizer: OptimizerKind::parse(&args.str("optimizer", "sgd"))?,
+        log_every: usize::MAX, // per-step logs off; the report has it all
+        artifacts_dir: args.str("artifacts", "artifacts"),
+        ..Default::default()
+    };
+    let budget_mb = args.u64("budget-mb", 1024)?;
+    anyhow::ensure!(budget_mb > 0, "--budget-mb must be positive");
+    let budget_bytes = budget_mb
+        .checked_mul(1 << 20)
+        .ok_or_else(|| anyhow::anyhow!("--budget-mb {budget_mb} overflows"))?;
+    let opts = FleetOptions {
+        budget_bytes,
+        workers: args.usize("workers", 4)?.max(1),
+    };
+    let jobs = match args.opt_str("job-file") {
+        Some(path) => {
+            anyhow::ensure!(
+                args.opt_str("methods").is_none() && args.opt_str("jobs").is_none(),
+                "--job-file conflicts with --methods/--jobs (the job file \
+                 defines the jobs)"
+            );
+            fleet::load_jobs(Path::new(&path), &base)?
+        }
+        None => {
+            let methods = Method::parse_list(&args.str("methods", "mesp,mebp"))?;
+            fleet::grid(&base, &methods, args.usize("jobs", 8)?.max(1))
+        }
+    };
+    println!(
+        "fleet: {} jobs on config {} | budget {budget_mb} MB | {} workers",
+        jobs.len(), base.config, opts.workers
+    );
+    let report = Scheduler::run(&opts, &base, jobs)?;
+    print!("{}", report.render());
+    anyhow::ensure!(
+        report.failed() == 0,
+        "{} fleet job(s) failed (see report)",
+        report.failed()
+    );
+    Ok(())
+}
+
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    args.expect_known(&["model", "seq", "rank", "breakdown"])?;
     let model = args.str("model", "0.5b");
     let seq = args.usize("seq", 256)?;
     let rank = args.usize("rank", 8)?;
@@ -103,7 +158,6 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_gradcheck(args: &Args) -> anyhow::Result<()> {
-    args.expect_known(&["config", "backend", "seeds", "tol", "artifacts"])?;
     let config = args.str("config", "toy");
     let seeds = args.usize("seeds", 3)?;
     let tol = args.f32("tol", 2e-4)? as f64;
@@ -148,13 +202,11 @@ fn cmd_gradcheck(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_mezo_quality(args: &Args) -> anyhow::Result<()> {
-    args.expect_known(&["config"])?;
     print!("{}", reproduce::table3(&args.str("config", "small"))?);
     Ok(())
 }
 
 fn cmd_reproduce(args: &Args) -> anyhow::Result<()> {
-    args.expect_known(&["table", "fig", "all", "steps", "out"])?;
     let steps = args.usize("steps", 5)?;
     let mut output = String::new();
     if args.bool("all") {
@@ -184,7 +236,6 @@ fn cmd_reproduce(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
-    args.expect_known(&["config", "backend", "artifacts"])?;
     let backend = BackendKind::parse(&args.str("backend", "reference"))?;
     let config = args.str("config", "toy");
     let (dims, artifacts): (_, Vec<mesp::runtime::ArtifactSpec>) = match backend {

@@ -33,9 +33,15 @@ struct Inner {
 
 /// Shared tracker handle. Cheap to clone; thread-safe (the data-pipeline
 /// thread registers batch buffers concurrently with the trainer).
+///
+/// Trackers can be chained: [`MemoryTracker::child`] creates a tracker
+/// whose every alloc/free is mirrored into its parent, so a fleet-wide
+/// aggregate tracker sees the SUM of live bytes across per-session child
+/// trackers while each session's own peak/breakdown stays isolated.
 #[derive(Debug, Clone, Default)]
 pub struct MemoryTracker {
     inner: Arc<Mutex<Inner>>,
+    parent: Option<Arc<MemoryTracker>>,
 }
 
 impl MemoryTracker {
@@ -50,9 +56,26 @@ impl MemoryTracker {
         t
     }
 
+    /// A fresh tracker that mirrors every alloc/free into `self` (and
+    /// transitively into `self`'s own parents). The child's live/peak/
+    /// breakdown describe only its own allocations; the parent's live is
+    /// the sum over all children, and the parent's peak is the true
+    /// aggregate high-water mark across concurrent children.
+    pub fn child(&self) -> MemoryTracker {
+        MemoryTracker {
+            inner: Arc::default(),
+            parent: Some(Arc::new(self.clone())),
+        }
+    }
+
     /// Register `bytes` under `tag`; bytes stay live until the returned
     /// guard drops.
     pub fn track(&self, tag: &str, bytes: u64) -> Guard {
+        self.apply_alloc(tag, bytes);
+        Guard { tracker: self.clone(), tag: tag.to_string(), bytes }
+    }
+
+    fn apply_alloc(&self, tag: &str, bytes: u64) {
         {
             let mut g = self.inner.lock().unwrap();
             g.live += bytes;
@@ -64,20 +87,27 @@ impl MemoryTracker {
                 tl.push(ev);
             }
         }
-        Guard { tracker: self.clone(), tag: tag.to_string(), bytes }
+        if let Some(p) = &self.parent {
+            p.apply_alloc(tag, bytes);
+        }
     }
 
     fn release(&self, tag: &str, bytes: u64) {
-        let mut g = self.inner.lock().unwrap();
-        debug_assert!(g.live >= bytes, "release {bytes} > live {}", g.live);
-        g.live = g.live.saturating_sub(bytes);
-        g.seq += 1;
-        if let Some(t) = g.tags.get_mut(tag) {
-            *t = t.saturating_sub(bytes);
+        {
+            let mut g = self.inner.lock().unwrap();
+            debug_assert!(g.live >= bytes, "release {bytes} > live {}", g.live);
+            g.live = g.live.saturating_sub(bytes);
+            g.seq += 1;
+            if let Some(t) = g.tags.get_mut(tag) {
+                *t = t.saturating_sub(bytes);
+            }
+            let ev = Event { seq: g.seq, delta: -(bytes as i64), live: g.live };
+            if let Some(tl) = g.timeline.as_mut() {
+                tl.push(ev);
+            }
         }
-        let ev = Event { seq: g.seq, delta: -(bytes as i64), live: g.live };
-        if let Some(tl) = g.timeline.as_mut() {
-            tl.push(ev);
+        if let Some(p) = &self.parent {
+            p.release(tag, bytes);
         }
     }
 
@@ -211,6 +241,36 @@ mod tests {
         assert_eq!(tl[0].delta, 5);
         assert_eq!(tl[1].delta, -5);
         assert_eq!(tl[1].live, 0);
+    }
+
+    #[test]
+    fn child_mirrors_into_parent() {
+        let parent = MemoryTracker::new();
+        let a = parent.child();
+        let b = parent.child();
+        let _ga = a.track("x", 100);
+        {
+            let _gb = b.track("y", 50);
+            assert_eq!(parent.live(), 150, "parent sums children");
+            assert_eq!(a.live(), 100, "children stay isolated");
+            assert_eq!(b.live(), 50);
+        }
+        assert_eq!(parent.live(), 100);
+        assert_eq!(parent.peak(), 150, "parent peak spans both children");
+        assert_eq!(a.peak(), 100, "child peak is its own");
+        drop(_ga);
+        assert_eq!(parent.live(), 0);
+    }
+
+    #[test]
+    fn grandchild_cascades_to_root() {
+        let root = MemoryTracker::new();
+        let mid = root.child();
+        let leaf = mid.child();
+        let _g = leaf.track("z", 7);
+        assert_eq!(leaf.live(), 7);
+        assert_eq!(mid.live(), 7);
+        assert_eq!(root.live(), 7);
     }
 
     #[test]

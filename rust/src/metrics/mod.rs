@@ -90,6 +90,14 @@ pub struct RunSummary {
 }
 
 impl RunSummary {
+    /// A run is healthy if it recorded steps and its losses stayed
+    /// finite — the fleet report flags divergent jobs with this.
+    pub fn healthy(&self) -> bool {
+        self.steps > 0
+            && self.final_loss.is_finite()
+            && self.mean_loss_last_10.is_finite()
+    }
+
     pub fn print(&self, method: &str) {
         println!(
             "{method}: {} steps, final loss {:.4} (last-10 mean {:.4}), \
@@ -120,6 +128,14 @@ mod tests {
         assert_eq!(s.steps, 5);
         assert!((s.final_loss - 2.5).abs() < 1e-9);
         assert_eq!(s.peak_bytes, 5000);
+        assert!(s.healthy());
+    }
+
+    #[test]
+    fn divergent_run_is_unhealthy() {
+        let mut m = MetricsLogger::new(None, 100).unwrap();
+        m.record("MeZO", &stat(1, f64::NAN)).unwrap();
+        assert!(!m.summary().healthy());
     }
 
     #[test]

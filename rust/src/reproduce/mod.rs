@@ -2,6 +2,11 @@
 //! §6). Memory tables evaluate the analytical model at the paper's Qwen2.5
 //! dims; behavioural tables (3, 5-timing, Fig 2) run the real engines on
 //! compiled configs. Every driver prints paper-vs-ours side by side.
+//!
+//! Method grids run through `coordinator::sweep_methods`, which since the
+//! fleet subsystem landed routes them over `fleet::Scheduler` (one
+//! worker, unlimited budget): serial and deterministic, but on the same
+//! queue/admission path the `mesp fleet` serving command exercises.
 
 pub mod paper_data;
 

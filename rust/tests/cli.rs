@@ -37,6 +37,35 @@ fn unknown_flag_is_rejected() {
     let (ok, text) = mesp(&["train", "--confg", "toy"]);
     assert!(!ok, "typo flags must fail loudly");
     assert!(text.contains("unknown flag"));
+    assert!(text.contains("USAGE"), "typo error must print usage:\n{text}");
+}
+
+#[test]
+fn fleet_typo_flag_is_rejected_with_usage() {
+    let (ok, text) = mesp(&["fleet", "--budegt-mb", "64"]);
+    assert!(!ok);
+    assert!(text.contains("unknown flag --budegt-mb"), "{text}");
+    assert!(text.contains("USAGE"));
+}
+
+#[test]
+fn fleet_runs_a_toy_grid_and_reports() {
+    let (ok, text) = mesp(&[
+        "fleet", "--config", "toy", "--budget-mb", "64", "--jobs", "4",
+        "--steps", "2", "--workers", "2",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("fleet report"), "{text}");
+    assert!(text.contains("MeSP"), "{text}");
+    assert!(text.contains("MeBP"), "{text}");
+    assert!(text.contains("aggregate"), "{text}");
+}
+
+#[test]
+fn fleet_rejects_bad_method_list() {
+    let (ok, text) = mesp(&["fleet", "--methods", "mesp,frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown method"), "{text}");
 }
 
 #[test]

@@ -1,0 +1,194 @@
+//! Fleet scheduler integration: the paper's budget argument made
+//! operational. With a budget sized to admit exactly one MeBP toy job,
+//! MeBP jobs serialize while ≥2 MeSP jobs run concurrently; every job
+//! completes with finite losses; and the fleet-wide aggregate tracked
+//! peak never exceeds the budget.
+
+use mesp::config::{Method, TrainConfig};
+use mesp::fleet::{grid, job_cost_bytes, FleetOptions, JobSpec, Scheduler};
+
+fn base(steps: usize) -> TrainConfig {
+    TrainConfig {
+        config: "toy".into(),
+        steps,
+        log_every: usize::MAX,
+        ..Default::default()
+    }
+}
+
+fn cost(base: &TrainConfig, method: Method) -> u64 {
+    let mut spec = JobSpec::from_base(base);
+    spec.method = method;
+    job_cost_bytes(&spec).unwrap()
+}
+
+#[test]
+fn one_mebp_budget_serializes_mebp_but_overlaps_mesp() {
+    let base = base(40);
+    let mebp_cost = cost(&base, Method::Mebp);
+    let mesp_cost = cost(&base, Method::Mesp);
+    assert!(mesp_cost < mebp_cost, "MeSP must cost less than MeBP");
+
+    // "Sized to admit exactly one MeBP job": one fits, two do not.
+    let budget = 2 * mebp_cost - 1;
+    assert!(
+        budget >= 2 * mesp_cost,
+        "premise: ≥2 MeSP jobs ({mesp_cost} B each) must fit where one \
+         MeBP ({mebp_cost} B) does"
+    );
+    let opts = FleetOptions { budget_bytes: budget, workers: 4 };
+
+    // All-MeBP fleet: admission must serialize the jobs.
+    let report = Scheduler::run(&opts, &base, grid(&base, &[Method::Mebp], 4))
+        .unwrap();
+    assert_eq!(report.failed(), 0, "{}", report.render());
+    assert_eq!(
+        report.peak_concurrent, 1,
+        "a one-MeBP budget must run MeBP one at a time\n{}",
+        report.render()
+    );
+    assert!(
+        report.aggregate_peak <= budget,
+        "aggregate tracked peak {} exceeds budget {}",
+        report.aggregate_peak,
+        budget
+    );
+    assert!(report.peak_committed <= budget);
+    for o in &report.outcomes {
+        let r = o.result.as_ref().unwrap();
+        assert!(r.summary.healthy(), "job {} diverged", o.job.id);
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        assert_eq!(r.summary.steps, 40);
+    }
+
+    // All-MeSP fleet under the SAME budget: jobs overlap.
+    let report = Scheduler::run(&opts, &base, grid(&base, &[Method::Mesp], 6))
+        .unwrap();
+    assert_eq!(report.failed(), 0, "{}", report.render());
+    assert!(
+        report.peak_concurrent >= 2,
+        "≥2 MeSP jobs should have been admitted concurrently, got {}\n{}",
+        report.peak_concurrent,
+        report.render()
+    );
+    assert!(
+        report.aggregate_peak <= budget,
+        "aggregate tracked peak {} exceeds budget {}",
+        report.aggregate_peak,
+        budget
+    );
+    assert!(report.peak_committed <= budget);
+    for o in &report.outcomes {
+        let r = o.result.as_ref().unwrap();
+        assert!(r.summary.healthy(), "job {} diverged", o.job.id);
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+    }
+}
+
+#[test]
+fn predicted_cost_bounds_measured_session_peak() {
+    // The admission invariant hangs on this: a session's tracked peak
+    // must stay under its predicted cost for every method.
+    let base = base(3);
+    for method in Method::ALL {
+        let mut cfg = base.clone();
+        cfg.method = method;
+        let predicted = cost(&base, method);
+        let mut sess = mesp::coordinator::TrainSession::new(cfg).unwrap();
+        let summary = sess.run(3).unwrap();
+        // max per-step peak; construction transients are below it
+        let measured = summary.peak_bytes.max(sess.tracker.peak());
+        assert!(
+            measured <= predicted,
+            "{}: measured peak {measured} B exceeds predicted cost \
+             {predicted} B — admission would overcommit",
+            method.name()
+        );
+    }
+}
+
+#[test]
+fn outcomes_are_in_job_id_order_with_distinct_seeds() {
+    let base = base(2);
+    let jobs = grid(&base, &[Method::Mesp, Method::Mebp], 5);
+    let opts = FleetOptions { budget_bytes: u64::MAX, workers: 3 };
+    let report = Scheduler::run(&opts, &base, jobs).unwrap();
+    assert_eq!(report.failed(), 0, "{}", report.render());
+    let ids: Vec<usize> = report.outcomes.iter().map(|o| o.job.id).collect();
+    assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    let mut seeds: Vec<u64> =
+        report.outcomes.iter().map(|o| o.job.spec.seed).collect();
+    seeds.sort_unstable();
+    seeds.dedup();
+    assert_eq!(seeds.len(), 5, "every job trains on its own seed stream");
+    // two jobs of the same method with different seeds see different data
+    let losses_0 = &report.outcomes[0].result.as_ref().unwrap().losses;
+    let losses_2 = &report.outcomes[2].result.as_ref().unwrap().losses;
+    assert_ne!(losses_0, losses_2, "distinct seeds ⇒ distinct trajectories");
+}
+
+#[test]
+fn oversized_job_fails_without_sinking_the_fleet() {
+    let base = base(2);
+    let mesp_cost = cost(&base, Method::Mesp);
+    // Budget fits a MeSP job but not a MeBP job.
+    let budget = (mesp_cost + cost(&base, Method::Mebp)) / 2;
+    let opts = FleetOptions { budget_bytes: budget, workers: 2 };
+    let jobs = grid(&base, &[Method::Mesp, Method::Mebp], 4);
+    let report = Scheduler::run(&opts, &base, jobs).unwrap();
+    assert_eq!(report.completed(), 2, "{}", report.render());
+    assert_eq!(report.failed(), 2);
+    for o in &report.outcomes {
+        match o.job.spec.method {
+            Method::Mesp => assert!(o.result.is_ok()),
+            _ => {
+                let err = o.result.as_ref().unwrap_err();
+                assert!(err.contains("exceeds the fleet budget"), "{err}");
+            }
+        }
+    }
+}
+
+/// Wait until a tracker's live bytes stop changing (the session's
+/// prefetch producer tracks queued batches asynchronously until the
+/// bounded channel fills and it blocks).
+fn settle(t: &mesp::memory::MemoryTracker) -> u64 {
+    let mut prev = t.live();
+    for _ in 0..200 {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let cur = t.live();
+        if cur == prev {
+            return cur;
+        }
+        prev = cur;
+    }
+    prev
+}
+
+#[test]
+fn fleet_aggregate_tracker_equals_sum_of_sessions() {
+    // Two live sessions on children of one aggregate: the aggregate's
+    // live bytes equal the sum of the sessions' live bytes.
+    let aggregate = mesp::memory::MemoryTracker::new();
+    let mk = |method: Method| {
+        let cfg = TrainConfig {
+            config: "toy".into(),
+            method,
+            log_every: usize::MAX,
+            ..Default::default()
+        };
+        mesp::coordinator::TrainSession::with_tracker(cfg, aggregate.child())
+            .unwrap()
+    };
+    let mut a = mk(Method::Mesp);
+    let mut b = mk(Method::Mebp);
+    a.run(1).unwrap();
+    b.run(1).unwrap();
+    let (live_a, live_b) = (settle(&a.tracker), settle(&b.tracker));
+    assert_eq!(aggregate.live(), live_a + live_b);
+    assert!(aggregate.peak() >= a.tracker.peak().max(b.tracker.peak()));
+    drop(a);
+    assert_eq!(aggregate.live(), live_b);
+    drop(b);
+    assert_eq!(aggregate.live(), 0, "all session bytes returned");
+}

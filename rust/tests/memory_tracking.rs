@@ -6,7 +6,7 @@
 use mesp::config::{Method, TrainConfig};
 use mesp::coordinator::TrainSession;
 use mesp::memory::model as memmodel;
-use mesp::memory::Widths;
+use mesp::memory::{MemoryTracker, Widths};
 
 fn measured_peak(config: &str, method: Method) -> (u64, u64) {
     let cfg = TrainConfig {
@@ -94,6 +94,117 @@ fn analytical_model_consistent_with_tracker_ordering() {
     let ratio = model_gap / real_gap;
     assert!((0.2..5.0).contains(&ratio),
             "model gap {model_gap} vs real gap {real_gap} (ratio {ratio:.2})");
+}
+
+#[test]
+fn concurrent_tag_breakdown_is_exact() {
+    // 8 threads × 200 rounds of tagged alloc/free; the final breakdown
+    // must account every surviving guard exactly, per tag.
+    let t = MemoryTracker::new();
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            let t = t.clone();
+            std::thread::spawn(move || {
+                let tag = if i % 2 == 0 { "even" } else { "odd" };
+                let mut kept = Vec::new();
+                for r in 0..200u64 {
+                    let g = t.track(tag, 10);
+                    if r % 4 == 0 {
+                        kept.push(g); // 50 survive per thread
+                    }
+                }
+                kept
+            })
+        })
+        .collect();
+    let kept: Vec<_> =
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    assert_eq!(kept.len(), 8 * 50);
+    assert_eq!(t.live(), 8 * 50 * 10);
+    let bd = t.breakdown();
+    assert_eq!(
+        bd,
+        vec![("even".to_string(), 2000), ("odd".to_string(), 2000)]
+    );
+    drop(kept);
+    assert_eq!(t.live(), 0);
+    assert!(t.breakdown().is_empty(), "all tags drained to zero");
+}
+
+#[test]
+fn concurrent_timeline_is_ordered_and_consistent() {
+    // Events from racing threads must have strictly increasing sequence
+    // numbers, and replaying the deltas must reproduce every recorded
+    // live value (the mutex serializes alloc/free atomically).
+    let t = MemoryTracker::with_timeline();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let t = t.clone();
+            std::thread::spawn(move || {
+                for _ in 0..100 {
+                    let _g = t.track("x", 3);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let tl = t.timeline();
+    assert_eq!(tl.len(), 4 * 100 * 2, "one alloc + one free per track");
+    let mut live = 0i64;
+    for (i, ev) in tl.iter().enumerate() {
+        if i > 0 {
+            assert!(ev.seq > tl[i - 1].seq, "seq must strictly increase");
+        }
+        live += ev.delta;
+        assert_eq!(live as u64, ev.live, "event {i}: replay mismatch");
+    }
+    assert_eq!(live, 0);
+}
+
+#[test]
+fn session_trackers_isolated_while_aggregate_sums() {
+    // The fleet invariant, exercised raw: per-session child trackers
+    // stay isolated from each other, while the aggregate parent's live
+    // bytes equal the sum of live bytes across all children at every
+    // quiescent point.
+    let aggregate = MemoryTracker::new();
+    let children: Vec<MemoryTracker> =
+        (0..4).map(|_| aggregate.child()).collect();
+    let handles: Vec<_> = children
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                let mut kept = Vec::new();
+                for r in 0..100u64 {
+                    let g = c.track("sess", (i as u64 + 1) * 8);
+                    if r % 2 == 0 {
+                        kept.push(g);
+                    }
+                }
+                kept
+            })
+        })
+        .collect();
+    let guards: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (i, c) in children.iter().enumerate() {
+        assert_eq!(
+            c.live(),
+            50 * (i as u64 + 1) * 8,
+            "child {i} sees only its own bytes"
+        );
+    }
+    let sum: u64 = children.iter().map(|c| c.live()).sum();
+    assert_eq!(aggregate.live(), sum, "aggregate == Σ children");
+    assert!(aggregate.peak() >= sum);
+    drop(guards);
+    assert_eq!(aggregate.live(), 0);
+    for c in &children {
+        assert_eq!(c.live(), 0);
+    }
 }
 
 #[test]
