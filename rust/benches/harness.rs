@@ -1,8 +1,14 @@
 //! Minimal benchmark harness (criterion is unavailable offline): warmup +
 //! timed iterations with mean/p50/p95 reporting, matching the output
-//! conventions the EXPERIMENTS.md perf section records.
+//! conventions the EXPERIMENTS.md perf section records — plus the
+//! machine-readable `BENCH_kernels.json` emitter that records the perf
+//! trajectory PR-over-PR at the repo root.
+#![allow(dead_code)] // shared by several bench binaries; not all use every helper
 
+use std::collections::BTreeMap;
 use std::time::Instant;
+
+use mesp::util::Json;
 
 pub struct BenchResult {
     pub name: String,
@@ -49,4 +55,34 @@ pub fn ratio(label: &str, base: &BenchResult, cand: &BenchResult) {
         "{label}: {:.2}x vs {} ({:.3} ms vs {:.3} ms)",
         cand.mean_ms / base.mean_ms, base.name, cand.mean_ms, base.mean_ms
     );
+}
+
+/// Path of the machine-readable bench record at the repo root.
+pub fn bench_json_path() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json").to_string()
+}
+
+/// Merge `entries` into the `section` object of `BENCH_kernels.json`,
+/// creating the file if absent and preserving every other section — so
+/// the kernel microbench and the step-time bench each own a section and
+/// the perf trajectory accumulates run-over-run.
+pub fn write_bench_json(section: &str, entries: Vec<(String, Json)>) {
+    let path = bench_json_path();
+    let mut root = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .unwrap_or(Json::Obj(BTreeMap::new()));
+    if !matches!(root, Json::Obj(_)) {
+        root = Json::Obj(BTreeMap::new());
+    }
+    if let Json::Obj(m) = &mut root {
+        m.insert(
+            section.to_string(),
+            Json::Obj(entries.into_iter().collect()),
+        );
+    }
+    match std::fs::write(&path, root.to_string()) {
+        Ok(()) => println!("(recorded section '{section}' in {path})"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
 }

@@ -1,0 +1,136 @@
+//! Bench: the kernel engine's GEMM variants (naive oracle vs tiled vs
+//! parallel) over the exact GEMM shapes a preset's training step issues —
+//! the seven LoRA projection GEMMs plus the tied-lm-head GEMMs.
+//!
+//! Emits a machine-readable section into `BENCH_kernels.json` at the repo
+//! root so the perf trajectory is recorded PR-over-PR, and supports
+//! `--check` (used by the CI bench-smoke job) which exits nonzero if the
+//! tiled kernel fails to beat the naive oracle on the selected preset.
+//!
+//! Usage: cargo bench --bench kernels -- [--preset toy|small] [--check]
+
+#[path = "harness.rs"]
+mod harness;
+
+use mesp::config::{presets, KernelKind, ModelDims, PROJS};
+use mesp::memory::MemoryTracker;
+use mesp::runtime::{KernelOptions, Kernels};
+use mesp::util::{Json, Rng};
+
+/// One GEMM shape of the step: out = [m, n] with depth k.
+struct Shape {
+    m: usize,
+    k: usize,
+    n: usize,
+}
+
+/// The projection + loss-head GEMM inventory of one preset.
+fn shapes(d: &ModelDims) -> Vec<Shape> {
+    let m = d.m();
+    let mut v: Vec<Shape> = PROJS
+        .iter()
+        .map(|p| {
+            let (din, dout) = d.proj_dims(p);
+            Shape { m, k: din, n: dout }
+        })
+        .collect();
+    // tied lm head: logits [m, vocab] and its backward [m, d_model]
+    v.push(Shape { m, k: d.d_model, n: d.vocab });
+    v.push(Shape { m, k: d.vocab, n: d.d_model });
+    v
+}
+
+/// Run the full GEMM set once on `ks` (matmul + both transposed forms on
+/// the first shape, so every packing path is exercised).
+fn run_set(ks: &Kernels, shapes: &[Shape], data: &[(Vec<f32>, Vec<f32>)]) {
+    for (s, (a, b)) in shapes.iter().zip(data) {
+        std::hint::black_box(&ks.matmul(a, b, s.m, s.k, s.n)[..]);
+    }
+    let (s, (a, b)) = (&shapes[0], &data[0]);
+    // a reinterpreted as [k, m] for aᵀ@b; b reinterpreted as [n, k] for a@bᵀ
+    std::hint::black_box(&ks.matmul_at(a, b, s.k, s.m, s.n)[..]);
+    std::hint::black_box(&ks.matmul_bt(a, b, s.m, s.k, s.n)[..]);
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut preset = "toy".to_string();
+    let mut check = false;
+    let mut it = argv.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--preset" => {
+                preset = it.next().cloned().unwrap_or_else(|| "toy".into());
+            }
+            "--check" => check = true,
+            "--bench" => {} // appended by `cargo bench`
+            other => eprintln!("ignoring unknown arg '{other}'"),
+        }
+    }
+    let dims = presets::compiled(&preset).expect("preset");
+    let shapes = shapes(&dims);
+    let mut rng = Rng::new(7);
+    let data: Vec<(Vec<f32>, Vec<f32>)> = shapes
+        .iter()
+        .map(|s| (rng.normal_vec(s.m * s.k, 0.5), rng.normal_vec(s.k * s.n, 0.5)))
+        .collect();
+    let madds: usize = shapes.iter().map(|s| s.m * s.k * s.n).sum::<usize>()
+        + 2 * shapes[0].m * shapes[0].k * shapes[0].n;
+
+    println!(
+        "== kernel microbench: preset {preset}, {} GEMMs, {:.1} MFLOP/set ==",
+        shapes.len() + 2,
+        2.0 * madds as f64 / 1e6
+    );
+    let iters = if preset == "toy" { 60 } else { 30 };
+    let mut results = Vec::new();
+    for kind in KernelKind::ALL {
+        let ks = Kernels::new(
+            KernelOptions { kind, threads: 0 },
+            MemoryTracker::new(),
+        );
+        let label = format!("{preset}/gemm-set/{}", kind.name());
+        let r = harness::bench(&label, 3, iters, || run_set(&ks, &shapes, &data));
+        results.push((kind, r));
+    }
+    let naive = &results[0].1;
+    let tiled = &results[1].1;
+    let parallel = &results[2].1;
+    harness::ratio("tiled    vs naive", naive, tiled);
+    harness::ratio("parallel vs naive", naive, parallel);
+    let speedup_tiled = naive.mean_ms / tiled.mean_ms;
+    let speedup_parallel = naive.mean_ms / parallel.mean_ms;
+    println!(
+        "speedup over naive: tiled {speedup_tiled:.2}x, parallel \
+         {speedup_parallel:.2}x ({} threads)",
+        mesp::runtime::kernels::auto_threads()
+    );
+
+    harness::write_bench_json(
+        &format!("kernels_microbench_{preset}"),
+        vec![
+            ("naive_ms".to_string(), Json::num(naive.mean_ms)),
+            ("tiled_ms".to_string(), Json::num(tiled.mean_ms)),
+            ("parallel_ms".to_string(), Json::num(parallel.mean_ms)),
+            ("speedup_tiled".to_string(), Json::num(speedup_tiled)),
+            ("speedup_parallel".to_string(), Json::num(speedup_parallel)),
+            (
+                "threads".to_string(),
+                Json::num(mesp::runtime::kernels::auto_threads() as u32),
+            ),
+            ("gflop_per_set".to_string(), Json::num(2.0 * madds as f64 / 1e9)),
+        ],
+    );
+
+    if check {
+        // CI gate: the production kernel must not regress below the oracle.
+        if speedup_tiled < 1.0 {
+            eprintln!(
+                "CHECK FAILED: tiled ({:.3} ms) slower than naive ({:.3} ms)",
+                tiled.mean_ms, naive.mean_ms
+            );
+            std::process::exit(1);
+        }
+        println!("check passed: tiled beats naive ({speedup_tiled:.2}x)");
+    }
+}

@@ -2,19 +2,26 @@
 //! on the compiled `small` config (and `toy` for fast regressions).
 //! The paper's claim to reproduce: MeSP costs ~1.2-1.4x MeBP per step
 //! (its 27-31% overhead) while MeZO's two forwards are cheaper per step.
+//!
+//! Also benches the kernel engine end to end: the same MeSP step under
+//! `--kernel naive|tiled|parallel`, recording the speedups (acceptance
+//! bar: ≥4x for parallel over naive on `small`) into the
+//! `BENCH_kernels.json` record at the repo root.
 
 #[path = "harness.rs"]
 mod harness;
 
-use mesp::config::{Method, TrainConfig};
+use mesp::config::{KernelKind, Method, TrainConfig};
 use mesp::coordinator::TrainSession;
+use mesp::util::Json;
 
-fn step_bench(config: &str, method: Method, iters: usize)
+fn step_bench(config: &str, method: Method, kernel: KernelKind, iters: usize)
     -> harness::BenchResult
 {
     let cfg = TrainConfig {
         config: config.into(),
         method,
+        kernel,
         log_every: usize::MAX,
         ..Default::default()
     };
@@ -22,7 +29,7 @@ fn step_bench(config: &str, method: Method, iters: usize)
     // pre-fetch a batch and reuse it so data time is excluded
     let (batch, _g) = sess.loader.next();
     harness::bench(
-        &format!("{config}/step/{}", method.name()),
+        &format!("{config}/step/{}/{}", method.name(), kernel.name()),
         2,
         iters,
         || {
@@ -34,11 +41,41 @@ fn step_bench(config: &str, method: Method, iters: usize)
 fn main() {
     println!("== Table 1 (time column): step latency per method ==");
     for config in ["toy", "small"] {
-        let mebp = step_bench(config, Method::Mebp, 20);
-        let mezo = step_bench(config, Method::Mezo, 20);
-        let mesp = step_bench(config, Method::Mesp, 20);
+        let kernel = KernelKind::Parallel; // production default
+        let mebp = step_bench(config, Method::Mebp, kernel, 20);
+        let mezo = step_bench(config, Method::Mezo, kernel, 20);
+        let mesp = step_bench(config, Method::Mesp, kernel, 20);
         harness::ratio("MeSP overhead", &mebp, &mesp);
         harness::ratio("MeZO ratio  ", &mebp, &mezo);
         println!("paper @0.5B: MeSP 1.26x, MeZO 0.75x of MeBP\n");
+    }
+
+    println!("== kernel engine: MeSP step under each GEMM kernel ==");
+    for config in ["toy", "small"] {
+        let iters = if config == "toy" { 20 } else { 10 };
+        let naive = step_bench(config, Method::Mesp, KernelKind::Naive, iters);
+        let tiled = step_bench(config, Method::Mesp, KernelKind::Tiled, iters);
+        let parallel =
+            step_bench(config, Method::Mesp, KernelKind::Parallel, iters);
+        let s_tiled = naive.mean_ms / tiled.mean_ms;
+        let s_parallel = naive.mean_ms / parallel.mean_ms;
+        println!(
+            "{config}: step speedup over naive — tiled {s_tiled:.2}x, \
+             parallel {s_parallel:.2}x\n"
+        );
+        harness::write_bench_json(
+            &format!("table1_step_time_{config}"),
+            vec![
+                ("naive_ms".to_string(), Json::num(naive.mean_ms)),
+                ("tiled_ms".to_string(), Json::num(tiled.mean_ms)),
+                ("parallel_ms".to_string(), Json::num(parallel.mean_ms)),
+                ("speedup_tiled".to_string(), Json::num(s_tiled)),
+                ("speedup_parallel".to_string(), Json::num(s_parallel)),
+                (
+                    "threads".to_string(),
+                    Json::num(mesp::runtime::kernels::auto_threads() as u32),
+                ),
+            ],
+        );
     }
 }

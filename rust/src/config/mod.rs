@@ -100,6 +100,43 @@ impl BackendKind {
     }
 }
 
+/// GEMM kernel variant of the reference backend's kernel engine
+/// (`runtime::kernels`). `Naive` is the original scalar triple loop kept
+/// as the correctness oracle; `Tiled` is the cache-blocked register-tiled
+/// kernel; `Parallel` adds row-panel fan-out over scoped threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelKind {
+    /// Scalar oracle (keeps the data-dependent zero-skip fast path).
+    Naive,
+    /// Cache-blocked + register-tiled, single thread, branch-free.
+    Tiled,
+    /// Tiled kernel fanned out over row panels (`std::thread::scope`).
+    #[default]
+    Parallel,
+}
+
+impl KernelKind {
+    pub const ALL: [KernelKind; 3] =
+        [KernelKind::Naive, KernelKind::Tiled, KernelKind::Parallel];
+
+    pub fn parse(s: &str) -> anyhow::Result<KernelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "naive" => Ok(KernelKind::Naive),
+            "tiled" => Ok(KernelKind::Tiled),
+            "parallel" => Ok(KernelKind::Parallel),
+            _ => anyhow::bail!("unknown kernel '{s}' (naive|tiled|parallel)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Naive => "naive",
+            KernelKind::Tiled => "tiled",
+            KernelKind::Parallel => "parallel",
+        }
+    }
+}
+
 /// Model + runtime shape parameters. Mirrors python ModelConfig.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelDims {
@@ -249,6 +286,11 @@ pub struct TrainConfig {
     /// Where metrics JSONL goes (None = stdout summary only).
     pub metrics_path: Option<String>,
     pub artifacts_dir: String,
+    /// GEMM kernel variant for the reference backend's kernel engine.
+    pub kernel: KernelKind,
+    /// Kernel threads for the `parallel` kernel (0 = auto: all cores for
+    /// a lone session; the fleet scheduler divides cores by workers).
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -266,6 +308,8 @@ impl Default for TrainConfig {
             spill_limit: 0,
             metrics_path: None,
             artifacts_dir: "artifacts".into(),
+            kernel: KernelKind::default(),
+            threads: 0,
         }
     }
 }
@@ -329,6 +373,16 @@ mod tests {
     fn optimizer_state_slots() {
         assert_eq!(OptimizerKind::parse("sgd").unwrap().state_slots(), 0);
         assert_eq!(OptimizerKind::parse("adam").unwrap().state_slots(), 2);
+    }
+
+    #[test]
+    fn kernel_parse_roundtrip() {
+        for k in KernelKind::ALL {
+            assert_eq!(KernelKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(KernelKind::parse("blocked").is_err());
+        assert_eq!(TrainConfig::default().kernel, KernelKind::Parallel);
+        assert_eq!(TrainConfig::default().threads, 0, "0 = auto");
     }
 
     #[test]

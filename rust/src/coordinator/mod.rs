@@ -9,7 +9,7 @@ use crate::data::PrefetchLoader;
 use crate::fleet::{FleetOptions, Job, JobSpec, Scheduler};
 use crate::memory::MemoryTracker;
 use crate::metrics::{MetricsLogger, RunSummary};
-use crate::runtime::{Backend, ReferenceBackend};
+use crate::runtime::{Backend, KernelOptions, ReferenceBackend};
 use crate::train::{build_engine, common::EngineCtx, Engine};
 use crate::util::rng::{derive, stream};
 
@@ -32,7 +32,8 @@ pub fn make_backend(
     match cfg.backend {
         BackendKind::Reference => {
             let dims = presets::compiled(&cfg.config)?;
-            Ok(Arc::new(ReferenceBackend::new(dims, tracker)))
+            let opts = KernelOptions { kind: cfg.kernel, threads: cfg.threads };
+            Ok(Arc::new(ReferenceBackend::with_kernels(dims, tracker, opts)))
         }
         #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => Ok(Arc::new(crate::runtime::Runtime::load(

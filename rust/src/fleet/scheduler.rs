@@ -168,6 +168,15 @@ impl FleetReport {
     }
 }
 
+/// Kernel threads each concurrently-running session may use so that
+/// `workers` sessions together never oversubscribe `cores` (each worker
+/// always gets at least one). The scheduler applies this to every job
+/// whose config leaves `threads` on auto (0); an explicit `--threads`
+/// wins.
+pub fn kernel_thread_budget(cores: usize, workers: usize) -> usize {
+    (cores / workers.max(1)).max(1)
+}
+
 /// The scheduler entry point (stateless; all state lives per-run).
 pub struct Scheduler;
 
@@ -198,7 +207,8 @@ impl Scheduler {
                 s.spawn(move || loop {
                     let job = queue.lock().unwrap().pop_front();
                     let Some(job) = job else { break };
-                    let outcome = run_job(w, job, admission, aggregate, base);
+                    let outcome =
+                        run_job(w, workers, job, admission, aggregate, base);
                     results.lock().unwrap().push(outcome);
                 });
             }
@@ -244,6 +254,7 @@ impl Scheduler {
 /// returns the reservation, so the budget always covers live sessions.
 fn run_job(
     worker: usize,
+    workers: usize,
     job: Job,
     admission: &Admission,
     aggregate: &MemoryTracker,
@@ -281,7 +292,13 @@ fn run_job(
 
     let started = Instant::now();
     let result = (|| -> anyhow::Result<JobResult> {
-        let cfg = job.spec.to_train_config(base);
+        let mut cfg = job.spec.to_train_config(base);
+        if cfg.threads == 0 {
+            // Budget kernel threads against the worker pool so `workers`
+            // concurrent sessions don't oversubscribe the machine.
+            cfg.threads =
+                kernel_thread_budget(crate::runtime::kernels::auto_threads(), workers);
+        }
         let steps = cfg.steps;
         let mut sess = TrainSession::with_tracker(cfg, aggregate.child())?;
         let summary = sess.run(steps)?;
@@ -303,5 +320,24 @@ fn run_job(
         run_secs,
         worker,
         result: result.map_err(|e| format!("{e:#}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_budget_divides_cores_without_oversubscribing() {
+        assert_eq!(kernel_thread_budget(8, 4), 2);
+        assert_eq!(kernel_thread_budget(8, 3), 2);
+        assert_eq!(kernel_thread_budget(2, 4), 1, "never below one thread");
+        assert_eq!(kernel_thread_budget(16, 1), 16);
+        assert_eq!(kernel_thread_budget(4, 0), 4, "0 workers treated as 1");
+        for (cores, workers) in [(2, 2), (4, 3), (16, 5), (64, 9)] {
+            let per = kernel_thread_budget(cores, workers);
+            assert!(per * workers <= cores.max(workers),
+                    "{workers}x{per} threads oversubscribe {cores} cores");
+        }
     }
 }

@@ -9,7 +9,7 @@
 use std::path::Path;
 
 use mesp::config::cli::{Args, USAGE};
-use mesp::config::{presets, BackendKind, Method, OptimizerKind, TrainConfig};
+use mesp::config::{presets, BackendKind, KernelKind, Method, OptimizerKind, TrainConfig};
 use mesp::coordinator::TrainSession;
 use mesp::fleet::{self, FleetOptions, Scheduler};
 use mesp::memory::model as memmodel;
@@ -66,6 +66,8 @@ fn train_config(args: &Args) -> anyhow::Result<TrainConfig> {
         spill_limit: args.u64("spill-limit", 0)?,
         metrics_path: args.opt_str("metrics"),
         artifacts_dir: args.str("artifacts", "artifacts"),
+        kernel: KernelKind::parse(&args.str("kernel", "parallel"))?,
+        threads: args.usize("threads", 0)?,
     })
 }
 
@@ -74,18 +76,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let steps = cfg.steps;
     let method = cfg.method;
     println!(
-        "training config={} backend={} method={} steps={} lr={} optimizer={:?}",
+        "training config={} backend={} method={} steps={} lr={} \
+         optimizer={:?} kernel={} threads={}",
         cfg.config, cfg.backend.name(), method.name(), steps, cfg.lr,
-        cfg.optimizer
+        cfg.optimizer, cfg.kernel.name(),
+        if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() }
     );
     let mut sess = TrainSession::new(cfg)?;
     let summary = sess.run(steps)?;
     summary.print(method.name());
-    println!("\nper-artifact execution time:");
-    for (name, s) in sess.engine.ctx().rt.exec_stats() {
-        println!("  {name:<22} {:>7} calls  {:>9.3}s total", s.calls,
-                 s.total_secs);
-    }
+    println!("\nper-artifact execution stats:");
+    print!("{}", mesp::metrics::exec_stats_table(&sess.engine.ctx().rt.exec_stats()));
     Ok(())
 }
 
@@ -99,6 +100,9 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         optimizer: OptimizerKind::parse(&args.str("optimizer", "sgd"))?,
         log_every: usize::MAX, // per-step logs off; the report has it all
         artifacts_dir: args.str("artifacts", "artifacts"),
+        kernel: KernelKind::parse(&args.str("kernel", "parallel"))?,
+        // 0 = auto: the scheduler divides cores by its worker count
+        threads: args.usize("threads", 0)?,
         ..Default::default()
     };
     let budget_mb = args.u64("budget-mb", 1024)?;
@@ -169,6 +173,8 @@ fn cmd_gradcheck(args: &Args) -> anyhow::Result<()> {
             seed: 1000 + seed,
             log_every: usize::MAX,
             artifacts_dir: args.str("artifacts", "artifacts"),
+            kernel: KernelKind::parse(&args.str("kernel", "parallel"))?,
+            threads: args.usize("threads", 0)?,
             ..Default::default()
         };
         let mut grads = Vec::new();
@@ -260,8 +266,12 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
         dims.lora_params_total() / 1000
     );
     for a in &artifacts {
-        println!("  {:<22} {:>2} args -> {:>2} outputs  ({})",
-                 a.name, a.args.len(), a.outputs,
+        // Analytical nominal FLOPs per call — inspect never executes, so
+        // this is the same inventory the kernel engine instruments live.
+        let gflop =
+            mesp::runtime::kernels::flops::artifact(&dims, &a.name) as f64 / 1e9;
+        println!("  {:<22} {:>2} args -> {:>2} outputs  {:>8.3} GFLOP/call  ({})",
+                 a.name, a.args.len(), a.outputs, gflop,
                  a.file.file_name().unwrap_or_default().to_string_lossy());
     }
     Ok(())

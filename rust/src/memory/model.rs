@@ -32,6 +32,13 @@ pub struct Widths {
     pub lora: u64,
     /// MeZO perturbation state.
     pub z: u64,
+    /// Reference-backend kernel scratch (arena checkouts: the recompute
+    /// cache and GEMM working buffers materialized inside one artifact
+    /// call). 0 at paper widths: the paper's fused on-device kernels do
+    /// not materialize this cache — its transient story is already the
+    /// minimal/working sets above — so the regenerated tables stay
+    /// faithful to the paper's measurements.
+    pub scratch: u64,
     /// Fixed runtime overhead (allocator, executables, caches).
     pub runtime_const: u64,
 }
@@ -40,14 +47,16 @@ impl Widths {
     /// The paper's setup: bf16 activations/params, f32 grads/optimizer,
     /// ~24 MB of framework floor (MLX allocator + compiled functions).
     pub fn paper() -> Widths {
-        Widths { act: 2, logits: 2, grad: 4, lora: 2, z: 4,
+        Widths { act: 2, logits: 2, grad: 4, lora: 2, z: 4, scratch: 0,
                  runtime_const: 24 << 20 }
     }
 
     /// What the Rust engines hold: all host tensors are f32; no fixed
-    /// floor (the tracker only counts tensors, not the allocator).
+    /// floor (the tracker only counts tensors, not the allocator); kernel
+    /// scratch at f32 width, since the tracker now sees the arena.
     pub fn tracked() -> Widths {
-        Widths { act: 4, logits: 4, grad: 4, lora: 4, z: 4, runtime_const: 0 }
+        Widths { act: 4, logits: 4, grad: 4, lora: 4, z: 4, scratch: 4,
+                 runtime_const: 0 }
     }
 }
 
@@ -62,6 +71,11 @@ pub struct Breakdown {
     pub grad_buffers: u64,
     pub perturbation: u64,
     pub stored_h: u64,
+    /// Reference-backend kernel scratch: the arena's worst-case checkout
+    /// (recompute cache + backward working buffers + GEMM packing panels)
+    /// during the deepest artifact call. Tracked under the `scratch` tag
+    /// at run time; 0 at paper widths.
+    pub scratch: u64,
     /// On-the-fly dequantization buffers for the int4 base weights: the
     /// paper's setup (§4.5) keeps base weights 4-bit and dequantizes
     /// during compute. Exact-gradient methods re-materialize a FULL
@@ -84,6 +98,7 @@ impl Breakdown {
             + self.grad_buffers
             + self.perturbation
             + self.stored_h
+            + self.scratch
             + self.dequant_buffers
             + self.runtime
     }
@@ -98,6 +113,7 @@ impl Breakdown {
             ("grad_buffers", self.grad_buffers),
             ("perturbation", self.perturbation),
             ("stored_h", self.stored_h),
+            ("scratch", self.scratch),
             ("dequant_buffers", self.dequant_buffers),
             ("runtime", self.runtime),
         ]
@@ -170,6 +186,82 @@ fn inference_set(d: &ModelDims) -> u64 {
         + m * d.d_model as u64                  // block output
 }
 
+// ------------------------------------------- reference-backend scratch
+//
+// The reference backend materializes every intermediate of a block call
+// in its TensorArena (tracked as `scratch`), so the tracked-widths
+// prediction must bound the arena's worst concurrent checkout. These
+// inventories deliberately over-bound by ~2× — they must stay upper
+// bounds for admission across all runnable configs — and are identical
+// in structure for every exact-gradient method (MeBP's residual-forward
+// call materializes the same cache the MeSP fused call does).
+
+/// The full `BlockCache` one forward materializes: the residual set plus
+/// the block output `y`.
+fn reference_cache(d: &ModelDims) -> u64 {
+    residual_set(d) + d.m() as u64 * d.d_model as u64
+}
+
+/// Transients that coexist with the cache during the forward half
+/// (pre-split q/k/v, LoRA delta buffer, residual adds).
+fn reference_fwd_extra(d: &ModelDims) -> u64 {
+    let m = d.m() as u64;
+    2 * m * (d.q_dim() + 2 * d.kv_dim()) as u64 + m * d.d_ff as u64
+        + 2 * m * d.d_model as u64
+}
+
+/// Transients that coexist with the cache during the backward half
+/// (SwiGLU grads, scaled-g buffers, attention grads + rope/merge
+/// temporaries, gx/gw pairs, softmax-VJP tiles, LoRA-rank buffers).
+fn reference_bwd_extra(d: &ModelDims) -> u64 {
+    let m = d.m() as u64;
+    let probs = (d.batch * d.n_heads * d.seq * d.seq) as u64;
+    4 * m * d.d_ff as u64
+        + 3 * m * (d.q_dim() + 2 * d.kv_dim()) as u64
+        + 8 * m * d.d_model as u64
+        + 2 * probs
+        + 16 * m * d.rank as u64
+}
+
+/// Loss-head scratch: logits (+ their gradient on the grad path) plus
+/// the normed-hidden / grad-hidden temporaries.
+fn reference_loss_scratch(d: &ModelDims, grad: bool) -> u64 {
+    let m = d.m() as u64;
+    let logits = m * d.vocab as u64;
+    if grad {
+        2 * logits + 3 * m * d.d_model as u64
+    } else {
+        logits + 2 * m * d.d_model as u64
+    }
+}
+
+/// GEMM packing panels: each thread of the parallel kernel checks out at
+/// most one A panel + one B slab (`tiled::PACK_BOUND_ELEMS`); bound by
+/// the machine's core count since admission runs before the fleet
+/// scheduler fixes the per-job thread budget.
+fn reference_packing(_d: &ModelDims) -> u64 {
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1) as u64;
+    threads * crate::runtime::kernels::tiled::PACK_BOUND_ELEMS as u64
+}
+
+/// Worst-case arena checkout for one session of `method` — block calls
+/// and loss calls never overlap, so the max over phases bounds the peak.
+fn reference_scratch(method: Method, d: &ModelDims) -> u64 {
+    let block = match method {
+        // fused backward: full cache + backward working set in one call
+        Method::Mesp | Method::StoreH | Method::Mebp => {
+            reference_cache(d)
+                + reference_fwd_extra(d).max(reference_bwd_extra(d))
+        }
+        // inference forwards only, but each still materializes the cache
+        Method::Mezo => reference_cache(d) + reference_fwd_extra(d),
+    };
+    let loss = reference_loss_scratch(d, method != Method::Mezo);
+    block.max(loss) + reference_packing(d)
+}
+
 /// Allocator bucket granularity: the paper's measured store-h overhead
 /// (Table 5: ~30 MB for 252 tensors of 4 KB) implies the runtime rounds
 /// small live buffers up to ~128 KB buckets; we model stored h the same
@@ -196,6 +288,7 @@ pub fn peak(method: Method, d: &ModelDims, opt: OptimizerKind, w: Widths) -> Bre
     let mut b = Breakdown {
         lora_params: lora * w.lora,
         optimizer_state: lora * opt.state_slots() as u64 * 4,
+        scratch: reference_scratch(method, d) * w.scratch,
         runtime: w.runtime_const,
         ..Default::default()
     };
@@ -342,6 +435,24 @@ mod tests {
         let w = Widths::tracked();
         assert_eq!((w.act, w.logits, w.grad, w.lora), (4, 4, 4, 4));
         assert_eq!(w.runtime_const, 0);
+        assert_eq!(w.scratch, 4, "tracked widths must charge kernel scratch");
+    }
+
+    #[test]
+    fn scratch_tracked_but_not_in_paper_tables() {
+        use crate::config::presets::compiled;
+        let d = compiled("toy").unwrap();
+        for m in Method::ALL {
+            let tracked = peak(m, &d, OptimizerKind::Sgd, Widths::tracked());
+            assert!(tracked.scratch > 0, "{}: tracked scratch missing", m.name());
+            let paper = peak(m, &d, OptimizerKind::Sgd, Widths::paper());
+            assert_eq!(paper.scratch, 0, "paper tables must not change");
+        }
+        // the fused-backward scratch (cache + bwd working set) exceeds the
+        // forward-only scratch at equal dims
+        let mesp = peak(Method::Mesp, &d, OptimizerKind::Sgd, Widths::tracked());
+        let mezo = peak(Method::Mezo, &d, OptimizerKind::Sgd, Widths::tracked());
+        assert!(mesp.scratch >= mezo.scratch);
     }
 
     #[test]

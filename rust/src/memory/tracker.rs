@@ -27,6 +27,10 @@ struct Inner {
     seq: u64,
     /// Per-tag live bytes, for breakdown reports.
     tags: std::collections::BTreeMap<String, u64>,
+    /// Per-tag high-water marks. Unlike `peak`, never reset: transient
+    /// tags (e.g. `scratch`) are usually back to zero live bytes by the
+    /// time anyone looks, so their footprint is only visible here.
+    tag_peaks: std::collections::BTreeMap<String, u64>,
     /// Optional event timeline (enabled for memory-profile runs).
     timeline: Option<Vec<Event>>,
 }
@@ -81,7 +85,11 @@ impl MemoryTracker {
             g.live += bytes;
             g.peak = g.peak.max(g.live);
             g.seq += 1;
-            *g.tags.entry(tag.to_string()).or_insert(0) += bytes;
+            let t = g.tags.entry(tag.to_string()).or_insert(0);
+            *t += bytes;
+            let t = *t;
+            let tp = g.tag_peaks.entry(tag.to_string()).or_insert(0);
+            *tp = (*tp).max(t);
             let ev = Event { seq: g.seq, delta: bytes as i64, live: g.live };
             if let Some(tl) = g.timeline.as_mut() {
                 tl.push(ev);
@@ -136,6 +144,18 @@ impl MemoryTracker {
             .filter(|(_, v)| **v > 0)
             .map(|(k, v)| (k.clone(), *v))
             .collect()
+    }
+
+    /// High-water mark of live bytes ever reached under `tag` (0 if the
+    /// tag was never tracked). Not affected by [`Self::reset_peak`].
+    pub fn tag_peak(&self, tag: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .tag_peaks
+            .get(tag)
+            .copied()
+            .unwrap_or(0)
     }
 
     pub fn timeline(&self) -> Vec<Event> {
@@ -228,6 +248,19 @@ mod tests {
         let _c = t.track("grads", 7);
         let bd = t.breakdown();
         assert_eq!(bd, vec![("ckpt".into(), 120), ("grads".into(), 7)]);
+    }
+
+    #[test]
+    fn tag_peaks_survive_release_and_reset() {
+        let t = MemoryTracker::new();
+        {
+            let _a = t.track("scratch", 64);
+            let _b = t.track("scratch", 36);
+        }
+        t.reset_peak();
+        assert_eq!(t.tag_peak("scratch"), 100, "peak spans both guards");
+        assert_eq!(t.live(), 0);
+        assert_eq!(t.tag_peak("never"), 0);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::train::StepStats;
 use crate::util::{stats, Json};
 
 pub use gradqual::{grad_quality, GradQuality};
-pub use tables::TableBuilder;
+pub use tables::{exec_stats_table, TableBuilder};
 
 /// Step-metrics sink: JSONL file and/or periodic console lines.
 pub struct MetricsLogger {

@@ -1,6 +1,10 @@
 //! Markdown table rendering for the reproduce drivers — every paper table
 //! is emitted in the same row/column layout the paper uses, with a
-//! "paper" column next to our measured/modelled values where applicable.
+//! "paper" column next to our measured/modelled values where applicable —
+//! plus the per-artifact execution-stats table (calls, time, FLOPs,
+//! achieved GFLOP/s) `mesp train` and `mesp inspect` print.
+
+use crate::runtime::ExecStats;
 
 /// Simple aligned markdown table builder.
 #[derive(Debug, Default)]
@@ -64,6 +68,31 @@ pub fn pct(v: f64) -> String {
     format!("{}%", v.round() as i64)
 }
 
+/// Render per-artifact execution stats (slowest first, the order
+/// `Backend::exec_stats` returns): call count, total seconds, mean
+/// ms/call, total GFLOP and achieved GFLOP/s.
+pub fn exec_stats_table(stats: &[(String, ExecStats)]) -> String {
+    let mut t = TableBuilder::new(&[
+        "Artifact", "Calls", "Total s", "ms/call", "GFLOP", "GFLOP/s",
+    ]);
+    for (name, s) in stats {
+        let ms_per_call = if s.calls > 0 {
+            s.total_secs * 1e3 / s.calls as f64
+        } else {
+            0.0
+        };
+        t.row(vec![
+            name.clone(),
+            s.calls.to_string(),
+            format!("{:.3}", s.total_secs),
+            format!("{ms_per_call:.3}"),
+            format!("{:.3}", s.flops as f64 / 1e9),
+            format!("{:.2}", s.gflops_per_sec()),
+        ]);
+    }
+    t.render()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +121,18 @@ mod tests {
     fn pct_rounds() {
         assert_eq!(pct(61.7), "62%");
         assert_eq!(pct(-4.2), "-4%");
+    }
+
+    #[test]
+    fn exec_stats_table_has_gflops_column() {
+        let stats = vec![(
+            "block_bwd_mesp".to_string(),
+            ExecStats { calls: 4, total_secs: 2.0, flops: 8_000_000_000 },
+        )];
+        let s = exec_stats_table(&stats);
+        assert!(s.contains("GFLOP/s"), "{s}");
+        assert!(s.contains("block_bwd_mesp"), "{s}");
+        assert!(s.contains("4.00"), "8 GFLOP / 2 s = 4 GFLOP/s\n{s}");
+        assert!(s.contains("500.000"), "ms/call\n{s}");
     }
 }

@@ -20,6 +20,22 @@ use crate::tensor::HostTensor;
 pub struct ExecStats {
     pub calls: u64,
     pub total_secs: f64,
+    /// Nominal FLOPs across all calls: the reference backend counts live
+    /// (GEMMs at `2·m·k·n` plus attention products); the PJRT runtime
+    /// cannot see inside compiled executables and records the matching
+    /// analytical inventory (`kernels::flops::artifact`) instead.
+    pub flops: u64,
+}
+
+impl ExecStats {
+    /// Achieved throughput in GFLOP/s (0.0 when nothing was counted).
+    pub fn gflops_per_sec(&self) -> f64 {
+        if self.total_secs > 0.0 {
+            self.flops as f64 / self.total_secs / 1e9
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Shared per-artifact stats bookkeeping both backends use.
@@ -33,12 +49,13 @@ impl StatsRecorder {
         StatsRecorder::default()
     }
 
-    /// Record one call of `name` taking `secs`.
-    pub fn record(&self, name: &str, secs: f64) {
+    /// Record one call of `name` taking `secs` and executing `flops`.
+    pub fn record(&self, name: &str, secs: f64, flops: u64) {
         let mut stats = self.inner.lock().unwrap();
         let e = stats.entry(name.to_string()).or_default();
         e.calls += 1;
         e.total_secs += secs;
+        e.flops += flops;
     }
 
     /// Snapshot, slowest artifact first.

@@ -221,7 +221,14 @@ impl Backend for Runtime {
                         "{name}: manifest promises {} outputs, got {}",
                         spec.outputs, outputs.len());
 
-        self.stats.record(name, start.elapsed().as_secs_f64());
+        // The PJRT runtime cannot see inside compiled executables, so it
+        // reports the same analytical FLOP inventory the kernel engine
+        // instruments in-process.
+        self.stats.record(
+            name,
+            start.elapsed().as_secs_f64(),
+            crate::runtime::kernels::flops::artifact(&self.manifest.dims, name),
+        );
         Ok(outputs)
     }
 

@@ -1,0 +1,114 @@
+//! Analytical per-artifact FLOP inventory — the exact mirror of what the
+//! instrumented kernel engine counts at run time: every GEMM at its
+//! nominal `2·m·k·n`, attention at its explicitly-credited products.
+//! Elementwise work (norms, SiLU, RoPE, softmax normalization) is
+//! uncounted on both sides, so `tests` can pin measured == analytical.
+//!
+//! Used by `mesp inspect` (which never executes artifacts) and by the
+//! GFLOP/s column sanity tests; `exec_stats` itself reports the measured
+//! counter.
+
+use crate::config::ModelDims;
+
+fn gemm(m: usize, k: usize, n: usize) -> u64 {
+    2 * (m as u64) * (k as u64) * (n as u64)
+}
+
+/// `y = xW + s(xA)B` on one LoRA site.
+fn lora_fwd(m: usize, din: usize, dout: usize, r: usize) -> u64 {
+    gemm(m, din, r) + gemm(m, din, dout) + gemm(m, r, dout)
+}
+
+/// Appendix-A LoRA backward; `stored_h` skips the `h = xA` recompute.
+fn lora_bwd(m: usize, din: usize, dout: usize, r: usize, stored_h: bool) -> u64 {
+    let recompute = if stored_h { 0 } else { gemm(m, din, r) };
+    gemm(m, dout, r)        // dh = s·g @ Bᵀ
+        + gemm(m, din, r)   // dA = xᵀ @ dh
+        + recompute
+        + gemm(m, r, dout)  // dB = hᵀ @ s·g
+        + gemm(m, r, din)   // gx = dh @ Aᵀ
+        + gemm(m, dout, din) // + g @ Wᵀ
+}
+
+fn attention_fwd(d: &ModelDims) -> u64 {
+    let (b, h, n, hd) = (d.batch, d.n_heads, d.seq, d.head_dim);
+    // QK and PV each do Σ_i (i+1)·hd multiply-adds per (batch, head).
+    (b * h) as u64 * 2 * (n * (n + 1)) as u64 * hd as u64
+}
+
+fn attention_bwd(d: &ModelDims) -> u64 {
+    let (b, h, n, hd) = (d.batch, d.n_heads, d.seq, d.head_dim);
+    // per head: dv, dprobs, dq, dk GEMMs + the 3n² softmax-VJP pass
+    (b * h) as u64 * (4 * gemm(n, n, hd) + 3 * (n * n) as u64)
+}
+
+/// Sum over the seven LoRA sites of `f(m, din, dout, r)`.
+fn over_sites(d: &ModelDims, f: impl Fn(usize, usize, usize, usize) -> u64) -> u64 {
+    let m = d.m();
+    crate::config::PROJS
+        .iter()
+        .map(|p| {
+            let (din, dout) = d.proj_dims(p);
+            f(m, din, dout, d.rank)
+        })
+        .sum()
+}
+
+fn block_forward(d: &ModelDims) -> u64 {
+    over_sites(d, lora_fwd) + attention_fwd(d)
+}
+
+fn block_backward(d: &ModelDims, stored_h: bool) -> u64 {
+    over_sites(d, |m, din, dout, r| lora_bwd(m, din, dout, r, stored_h))
+        + attention_bwd(d)
+}
+
+fn lm_logits(d: &ModelDims) -> u64 {
+    gemm(d.m(), d.d_model, d.vocab)
+}
+
+/// Nominal FLOPs of one call of artifact `name` at dims `d` (0 for pure
+/// data movement like `embed_fwd`, and for unknown names).
+pub fn artifact(d: &ModelDims, name: &str) -> u64 {
+    match name {
+        "block_fwd" | "block_fwd_saveh" | "block_fwd_residuals"
+        | "block_fwd_q4" => block_forward(d),
+        // MeSP's fused call recomputes the forward in-call; store-h only
+        // skips the seven h = xA recomputes; the residual path does no
+        // forward at all.
+        "block_bwd_mesp" => block_forward(d) + block_backward(d, false),
+        "block_bwd_storeh" => block_forward(d) + block_backward(d, true),
+        "block_bwd_residuals" => block_backward(d, true),
+        "lm_loss_fwd" => lm_logits(d),
+        "lm_loss_grad" => lm_logits(d) + gemm(d.m(), d.vocab, d.d_model),
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn backward_costs_more_than_forward() {
+        let d = presets::compiled("small").unwrap();
+        let fwd = artifact(&d, "block_fwd");
+        assert!(fwd > 0);
+        assert!(artifact(&d, "block_bwd_mesp") > fwd);
+        // storing h skips work relative to the fused recompute
+        assert!(artifact(&d, "block_bwd_storeh") < artifact(&d, "block_bwd_mesp"));
+        // the residual path does no forward at all
+        assert!(artifact(&d, "block_bwd_residuals") < artifact(&d, "block_bwd_storeh"));
+        assert_eq!(artifact(&d, "embed_fwd"), 0);
+        assert_eq!(artifact(&d, "unknown"), 0);
+    }
+
+    #[test]
+    fn scales_with_dims() {
+        let toy = presets::compiled("toy").unwrap();
+        let small = presets::compiled("small").unwrap();
+        assert!(artifact(&small, "block_fwd") > artifact(&toy, "block_fwd"));
+        assert!(artifact(&small, "lm_loss_grad") == 2 * artifact(&small, "lm_loss_fwd"));
+    }
+}

@@ -1,0 +1,284 @@
+//! The kernel engine: GEMM dispatch + scratch arena + FLOP accounting for
+//! the pure-Rust reference backend.
+//!
+//! All heavy math in [`super::refmath`] goes through a [`Kernels`] handle,
+//! which dispatches every GEMM to one of three variants
+//! ([`crate::config::KernelKind`]):
+//!
+//! * [`naive`] — the original scalar triple loops, kept verbatim as the
+//!   correctness **oracle**. This is the only variant allowed to keep the
+//!   data-dependent `if av == 0.0 { continue; }` fast path (it makes step
+//!   timing input-dependent, which a production kernel must not be).
+//! * [`tiled`] — cache-blocked, register-tiled (MR×NR micro-kernel with
+//!   packed operand panels, the classic BLIS structure), branch-free.
+//! * [`parallel`] — the tiled kernel fanned out over contiguous row
+//!   panels with `std::thread::scope`. Each output row is produced end to
+//!   end by exactly one thread with the same k-blocking as `tiled`, so
+//!   results are **bitwise identical** to `tiled` at any thread count.
+//!
+//! Thread budget: a lone session resolves `threads = 0` to all cores; the
+//! fleet scheduler divides cores by its worker count before building the
+//! backend so concurrent sessions never oversubscribe the machine.
+//!
+//! Scratch discipline: GEMM outputs and packing panels are checked out of
+//! the engine's [`TensorArena`], so they are reused across calls and
+//! tracked under the `scratch` tag (see `memory::model::scratch` for the
+//! matching analytical term).
+//!
+//! FLOP accounting: each GEMM adds its nominal `2·m·k·n` to a shared
+//! counter (the naive oracle's zero-skip still counts full work);
+//! `refmath`'s attention loops add their products explicitly. The
+//! reference backend snapshots the counter around each artifact call to
+//! report per-artifact FLOPs and achieved GFLOP/s in `exec_stats`.
+
+pub mod flops;
+pub mod naive;
+pub mod parallel;
+pub mod tiled;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub use crate::config::KernelKind;
+use crate::memory::MemoryTracker;
+use crate::tensor::{ScratchBuf, TensorArena};
+
+/// How the kernel engine is configured (CLI: `--kernel`, `--threads`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KernelOptions {
+    pub kind: KernelKind,
+    /// Worker threads for the `parallel` kernel; 0 = all cores.
+    pub threads: usize,
+}
+
+/// The number of threads `threads = 0` resolves to.
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Operand view of the left GEMM input.
+#[derive(Debug, Clone, Copy)]
+pub enum AView<'a> {
+    /// `[m, k]` row-major: `A(i, l) = data[i*k + l]`.
+    Rows(&'a [f32]),
+    /// Stored transposed `[k, ld]` with `ld` the FULL row count:
+    /// `A(i, l) = data[l*ld + i]` (the parallel kernel offsets `i`, so
+    /// the stride must stay the whole matrix's).
+    Cols { data: &'a [f32], ld: usize },
+}
+
+/// Operand view of the right GEMM input.
+#[derive(Debug, Clone, Copy)]
+pub enum BView<'a> {
+    /// `[k, n]` row-major: `B(l, j) = data[l*n + j]`.
+    Rows(&'a [f32]),
+    /// Stored transposed `[n, k]`: `B(l, j) = data[j*k + l]`.
+    Cols(&'a [f32]),
+}
+
+/// GEMMs below this many multiply-adds stay single-threaded even under
+/// the `parallel` kernel: thread spawn/join costs more than it saves.
+/// Shape-dependent only — never data-dependent. 2^18 madds ≈ 130 µs of
+/// tiled single-thread work — a few scoped-thread spawns still pay off.
+pub const PARALLEL_MIN_MADDS: usize = 1 << 18;
+
+/// The kernel engine handle: dispatch + arena + FLOP counter. One per
+/// backend instance; shared by every artifact call of a session.
+#[derive(Debug)]
+pub struct Kernels {
+    kind: KernelKind,
+    threads: usize,
+    arena: TensorArena,
+    flops: AtomicU64,
+}
+
+impl Kernels {
+    pub fn new(opts: KernelOptions, tracker: MemoryTracker) -> Kernels {
+        let threads = match opts.threads {
+            0 => auto_threads(),
+            t => t,
+        };
+        Kernels {
+            kind: opts.kind,
+            // Clamped to the core count: oversubscribing never helps a
+            // compute-bound GEMM, and `memory::model`'s packing-scratch
+            // term charges one panel set per core — an unclamped
+            // `--threads 64` could otherwise exceed the admission bound.
+            threads: threads.clamp(1, auto_threads()),
+            arena: TensorArena::new(tracker),
+            flops: AtomicU64::new(0),
+        }
+    }
+
+    /// Single-threaded naive engine on a throwaway tracker (unit tests).
+    pub fn for_tests() -> Kernels {
+        Kernels::new(
+            KernelOptions { kind: KernelKind::Naive, threads: 1 },
+            MemoryTracker::new(),
+        )
+    }
+
+    pub fn kind(&self) -> KernelKind {
+        self.kind
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn arena(&self) -> &TensorArena {
+        &self.arena
+    }
+
+    /// Cumulative nominal FLOPs since construction.
+    pub fn flops(&self) -> u64 {
+        self.flops.load(Ordering::Relaxed)
+    }
+
+    /// Credit explicitly-counted work (attention loops).
+    pub fn add_flops(&self, n: u64) {
+        self.flops.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// `a[m,k] @ b[k,n] -> [m,n]`.
+    pub fn matmul(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> ScratchBuf {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        let mut out = self.arena.take(m * n);
+        self.add_flops(2 * (m * k * n) as u64);
+        match self.kind {
+            KernelKind::Naive => naive::matmul(a, b, m, k, n, &mut out),
+            _ => self.gemm(AView::Rows(a), BView::Rows(b), m, k, n, &mut out),
+        }
+        out
+    }
+
+    /// `aᵀ @ b` with `a[k,m]`, `b[k,n] -> [m,n]`.
+    pub fn matmul_at(&self, a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> ScratchBuf {
+        debug_assert_eq!(a.len(), k * m);
+        debug_assert_eq!(b.len(), k * n);
+        let mut out = self.arena.take(m * n);
+        self.add_flops(2 * (m * k * n) as u64);
+        match self.kind {
+            KernelKind::Naive => naive::matmul_at(a, b, k, m, n, &mut out),
+            _ => self.gemm(
+                AView::Cols { data: a, ld: m }, BView::Rows(b), m, k, n, &mut out,
+            ),
+        }
+        out
+    }
+
+    /// `a @ bᵀ` with `a[m,k]`, `b[n,k] -> [m,n]`.
+    pub fn matmul_bt(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> ScratchBuf {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        let mut out = self.arena.take(m * n);
+        self.add_flops(2 * (m * k * n) as u64);
+        match self.kind {
+            KernelKind::Naive => naive::matmul_bt(a, b, m, k, n, &mut out),
+            _ => self.gemm(AView::Rows(a), BView::Cols(b), m, k, n, &mut out),
+        }
+        out
+    }
+
+    fn gemm(&self, a: AView, b: BView, m: usize, k: usize, n: usize, out: &mut [f32]) {
+        let fan_out = self.kind == KernelKind::Parallel
+            && self.threads > 1
+            && m * k * n >= PARALLEL_MIN_MADDS
+            && m >= 2 * tiled::MR;
+        if fan_out {
+            parallel::gemm(&self.arena, self.threads, a, b, m, k, n, out);
+        } else {
+            tiled::gemm(&self.arena, a, b, 0, m, k, n, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mats(m: usize, k: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (rng.normal_vec(m * k, 1.0), rng.normal_vec(k * n, 1.0))
+    }
+
+    fn engine(kind: KernelKind, threads: usize) -> Kernels {
+        Kernels::new(KernelOptions { kind, threads }, MemoryTracker::new())
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], k: usize) {
+        assert_eq!(a.len(), b.len());
+        let tol = 1e-5 * (k as f32).sqrt().max(1.0);
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= tol * x.abs().max(1.0),
+                "elem {i}: {x} vs {y} (k={k})"
+            );
+        }
+    }
+
+    #[test]
+    fn tiled_matches_naive_on_awkward_shapes() {
+        let nv = engine(KernelKind::Naive, 1);
+        let td = engine(KernelKind::Tiled, 1);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (4, 8, 8), (17, 33, 9),
+                          (64, 64, 64), (13, 300, 21), (70, 1, 70)] {
+            let (a, b) = mats(m, k, n, (m * 1000 + k * 10 + n) as u64);
+            assert_close(&nv.matmul(&a, &b, m, k, n), &td.matmul(&a, &b, m, k, n), k);
+        }
+    }
+
+    #[test]
+    fn transposed_variants_match_naive() {
+        let nv = engine(KernelKind::Naive, 1);
+        let td = engine(KernelKind::Tiled, 1);
+        let (m, k, n) = (19, 37, 23);
+        let mut rng = Rng::new(3);
+        let a_t = rng.normal_vec(k * m, 1.0); // a stored [k,m]
+        let b = rng.normal_vec(k * n, 1.0);
+        assert_close(&nv.matmul_at(&a_t, &b, k, m, n),
+                     &td.matmul_at(&a_t, &b, k, m, n), k);
+        let a = rng.normal_vec(m * k, 1.0);
+        let b_t = rng.normal_vec(n * k, 1.0); // b stored [n,k]
+        assert_close(&nv.matmul_bt(&a, &b_t, m, k, n),
+                     &td.matmul_bt(&a, &b_t, m, k, n), k);
+    }
+
+    #[test]
+    fn parallel_is_bitwise_identical_to_tiled() {
+        let td = engine(KernelKind::Tiled, 1);
+        // force fan-out with a shape over the threshold
+        let (m, k, n) = (128, 96, 128);
+        assert!(m * k * n >= PARALLEL_MIN_MADDS);
+        let (a, b) = mats(m, k, n, 11);
+        let want = td.matmul(&a, &b, m, k, n);
+        for threads in [1, 2, 3, 5] {
+            let pl = engine(KernelKind::Parallel, threads);
+            let got = pl.matmul(&a, &b, m, k, n);
+            assert_eq!(&want[..], &got[..], "threads={threads} must not change bits");
+        }
+    }
+
+    #[test]
+    fn flop_counter_is_nominal() {
+        let ks = engine(KernelKind::Tiled, 1);
+        let (a, b) = mats(4, 6, 8, 1);
+        let _ = ks.matmul(&a, &b, 4, 6, 8);
+        assert_eq!(ks.flops(), 2 * 4 * 6 * 8);
+        ks.add_flops(10);
+        assert_eq!(ks.flops(), 2 * 4 * 6 * 8 + 10);
+    }
+
+    #[test]
+    fn gemm_outputs_come_from_the_arena() {
+        let ks = engine(KernelKind::Tiled, 1);
+        let (a, b) = mats(8, 8, 8, 2);
+        {
+            let _o = ks.matmul(&a, &b, 8, 8, 8);
+        }
+        // second call reuses the first call's output buffer
+        let _o2 = ks.matmul(&a, &b, 8, 8, 8);
+        assert!(ks.arena().stats().hits >= 1);
+    }
+}

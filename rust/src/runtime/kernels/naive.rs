@@ -1,0 +1,62 @@
+//! The scalar oracle kernels — the original `refmath` triple loops, moved
+//! here verbatim. Every other variant is validated against these.
+//!
+//! The `if av == 0.0 { continue; }` fast path is deliberately KEPT here
+//! and only here: it is correct (skipping a zero row contribution) and it
+//! speeds the oracle up on sparse inputs (freshly-initialized LoRA B
+//! matrices are all-zero), but it makes latency *data-dependent*, which
+//! disqualifies it from the tiled/parallel production kernels — a step
+//! time that changes with the weight values would poison every
+//! before/after perf comparison.
+
+/// `a[m,k] @ b[k,n]` accumulated into zeroed `out[m,n]`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[l * n..(l + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `aᵀ @ b` with `a[k,m]`, `b[k,n]` into zeroed `out[m,n]`.
+pub fn matmul_at(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), m * n);
+    for l in 0..k {
+        let arow = &a[l * m..(l + 1) * m];
+        let brow = &b[l * n..(l + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `a @ bᵀ` with `a[m,k]`, `b[n,k]` into zeroed `out[m,n]`.
+pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}

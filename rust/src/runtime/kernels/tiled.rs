@@ -1,0 +1,210 @@
+//! Cache-blocked, register-tiled GEMM (single thread) — the BLIS-style
+//! three-loop blocking around a branch-free MR×NR micro-kernel.
+//!
+//! Structure: the `n` dimension is split into NC-column slabs, `k` into
+//! KC-deep panels, `m` into MC-row panels. For each (slab, panel) pair
+//! the operands are packed into contiguous zero-padded buffers from the
+//! [`TensorArena`] — packing also absorbs the transposed layouts, so one
+//! micro-kernel serves `a@b`, `aᵀ@b` and `a@bᵀ` alike. The micro-kernel
+//! holds an MR×NR accumulator block in registers across the whole KC
+//! depth, so C is loaded/stored once per k-panel instead of once per k
+//! step (the main win over the naive triple loop).
+//!
+//! Determinism: every output element accumulates its k-terms in strictly
+//! ascending order (KC panels outer, k ascending inside), independent of
+//! the row panel it lands in — which is what makes [`super::parallel`]
+//! bitwise identical to this kernel at any thread count.
+//!
+//! No data-dependent branches: unlike the naive oracle, zero inputs take
+//! exactly the same time as dense ones.
+
+use crate::tensor::TensorArena;
+
+use super::{AView, BView};
+
+/// Micro-kernel rows (register block height). 6×8 accumulators fit the
+/// baseline x86-64 SSE2 register file (12 vector registers of state plus
+/// two B loads and an A broadcast) without spilling.
+pub const MR: usize = 6;
+/// Micro-kernel columns (register block width; kept a small multiple of
+/// the f32 SIMD lane count so the inner loop auto-vectorizes).
+pub const NR: usize = 8;
+/// k-depth of one packed panel.
+pub const KC: usize = 256;
+/// Rows of one packed A panel.
+pub const MC: usize = 64;
+/// Columns of one packed B slab.
+pub const NC: usize = 128;
+
+/// Upper bound on one `gemm` invocation's packing checkout in f32
+/// elements (apack ≤ (MC rounded up to MR)·KC, bpack ≤ KC·NC) —
+/// `memory::model`'s scratch term charges this per kernel thread.
+pub const PACK_BOUND_ELEMS: usize = (MC + MR) * KC + KC * NC;
+
+/// `out[m,n] += A[row0..row0+m, :k] @ B[:k, :n]` with `out` zero on
+/// entry. `row0` offsets the A rows only (the parallel kernel hands each
+/// thread a row window over the same full operands).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm(
+    arena: &TensorArena,
+    a: AView,
+    b: BView,
+    row0: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let mc_pad = MC.min(m).next_multiple_of(MR);
+    let nc_pad = NC.min(n).next_multiple_of(NR);
+    let kc_max = KC.min(k);
+    let mut apack = arena.take(mc_pad * kc_max);
+    let mut bpack = arena.take(kc_max * nc_pad);
+
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            pack_b(&b, k, n, pc, kc, jc, nc, &mut bpack);
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                pack_a(&a, k, row0 + ic, mc, pc, kc, &mut apack);
+                macro_kernel(&apack, &bpack, mc, nc, kc, out, ic, jc, n);
+                ic += MC;
+            }
+            pc += KC;
+        }
+        jc += NC;
+    }
+}
+
+/// Pack `A[grow0..grow0+mc, pc..pc+kc]` as MR-row slivers, each laid out
+/// `[kc][MR]`, zero-padding the ragged row block.
+fn pack_a(a: &AView, k: usize, grow0: usize, mc: usize, pc: usize, kc: usize, apack: &mut [f32]) {
+    let mbs = mc.div_ceil(MR);
+    for ib in 0..mbs {
+        let sliver = &mut apack[ib * kc * MR..(ib + 1) * kc * MR];
+        let rows = MR.min(mc - ib * MR);
+        match *a {
+            AView::Rows(data) => {
+                for r in 0..MR {
+                    if r < rows {
+                        let src = &data[(grow0 + ib * MR + r) * k + pc..][..kc];
+                        for (l, &v) in src.iter().enumerate() {
+                            sliver[l * MR + r] = v;
+                        }
+                    } else {
+                        for l in 0..kc {
+                            sliver[l * MR + r] = 0.0;
+                        }
+                    }
+                }
+            }
+            AView::Cols { data, ld } => {
+                for l in 0..kc {
+                    let src = &data[(pc + l) * ld + grow0 + ib * MR..];
+                    let dst = &mut sliver[l * MR..l * MR + MR];
+                    for (r, d) in dst.iter_mut().enumerate() {
+                        *d = if r < rows { src[r] } else { 0.0 };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack `B[pc..pc+kc, jc..jc+nc]` as NR-column slivers, each laid out
+/// `[kc][NR]`, zero-padding the ragged column block.
+#[allow(clippy::too_many_arguments)]
+fn pack_b(
+    b: &BView,
+    k: usize,
+    n: usize,
+    pc: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+    bpack: &mut [f32],
+) {
+    let nbs = nc.div_ceil(NR);
+    for jb in 0..nbs {
+        let sliver = &mut bpack[jb * kc * NR..(jb + 1) * kc * NR];
+        let cols = NR.min(nc - jb * NR);
+        match *b {
+            BView::Rows(data) => {
+                for l in 0..kc {
+                    let src = &data[(pc + l) * n + jc + jb * NR..];
+                    let dst = &mut sliver[l * NR..l * NR + NR];
+                    for (c, d) in dst.iter_mut().enumerate() {
+                        *d = if c < cols { src[c] } else { 0.0 };
+                    }
+                }
+            }
+            BView::Cols(data) => {
+                for c in 0..NR {
+                    if c < cols {
+                        let src = &data[(jc + jb * NR + c) * k + pc..][..kc];
+                        for (l, &v) in src.iter().enumerate() {
+                            sliver[l * NR + c] = v;
+                        }
+                    } else {
+                        for l in 0..kc {
+                            sliver[l * NR + c] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `out[ic.., jc..] += Apack @ Bpack` over all micro-tiles of one
+/// (MC × NC × KC) block.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    apack: &[f32],
+    bpack: &[f32],
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    out: &mut [f32],
+    ic: usize,
+    jc: usize,
+    n: usize,
+) {
+    let mbs = mc.div_ceil(MR);
+    let nbs = nc.div_ceil(NR);
+    for ib in 0..mbs {
+        let ap = &apack[ib * kc * MR..(ib + 1) * kc * MR];
+        let rows = MR.min(mc - ib * MR);
+        for jb in 0..nbs {
+            let bp = &bpack[jb * kc * NR..(jb + 1) * kc * NR];
+            let cols = NR.min(nc - jb * NR);
+            let mut acc = [[0.0f32; NR]; MR];
+            for l in 0..kc {
+                let av: &[f32; MR] = ap[l * MR..l * MR + MR].try_into().unwrap();
+                let bv: &[f32; NR] = bp[l * NR..l * NR + NR].try_into().unwrap();
+                for r in 0..MR {
+                    let ar = av[r];
+                    for (c, acc_rc) in acc[r].iter_mut().enumerate() {
+                        *acc_rc += ar * bv[c];
+                    }
+                }
+            }
+            for r in 0..rows {
+                let orow =
+                    &mut out[(ic + ib * MR + r) * n + jc + jb * NR..][..cols];
+                for (o, v) in orow.iter_mut().zip(&acc[r][..cols]) {
+                    *o += v;
+                }
+            }
+        }
+    }
+}

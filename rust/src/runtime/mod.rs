@@ -28,8 +28,11 @@
 //!
 //! * [`ReferenceBackend`] (default) — pure Rust, in-process
 //!   ([`refmath`] holds the block/loss math with the paper's Appendix-A
-//!   manual VJPs, recomputing `h = xA` in the backward). Builds and runs
-//!   from a clean checkout with no XLA toolchain or Python artifacts.
+//!   manual VJPs, recomputing `h = xA` in the backward; [`kernels`] is
+//!   the GEMM engine underneath it — naive oracle / tiled / parallel
+//!   variants, an arena for tracked scratch, and FLOP accounting).
+//!   Builds and runs from a clean checkout with no XLA toolchain or
+//!   Python artifacts.
 //! * [`client::Runtime`] (cargo feature `pjrt`) — the PJRT client over
 //!   AOT-compiled HLO artifacts described by `manifest.json`
 //!   ([`manifest`] is the ABI contract written by
@@ -38,6 +41,7 @@
 pub mod backend;
 #[cfg(feature = "pjrt")]
 pub mod client;
+pub mod kernels;
 pub mod manifest;
 pub mod reference;
 pub mod refmath;
@@ -45,5 +49,6 @@ pub mod refmath;
 pub use backend::{Arg, Backend, DeviceBuffer, ExecStats};
 #[cfg(feature = "pjrt")]
 pub use client::Runtime;
+pub use kernels::{KernelOptions, Kernels};
 pub use manifest::{ArgSpec, ArtifactSpec, Manifest};
 pub use reference::ReferenceBackend;

@@ -18,9 +18,10 @@ use crate::config::{ModelDims, FROZEN, PROJS};
 use crate::memory::MemoryTracker;
 use crate::model::quant;
 use crate::runtime::backend::{Arg, Backend, DeviceBuffer, ExecStats, StatsRecorder};
+use crate::runtime::kernels::{Kernels, KernelOptions};
 use crate::runtime::manifest::{ArgSpec, ArtifactSpec};
 use crate::runtime::refmath as rm;
-use crate::tensor::{DType, HostTensor};
+use crate::tensor::{DType, HostTensor, ScratchBuf};
 
 /// Residual-set tensor names emitted by `block_fwd_residuals` (after y) —
 /// must match `python/compile/model.py::RESIDUALS`.
@@ -38,12 +39,30 @@ pub struct ReferenceBackend {
     specs: Vec<ArtifactSpec>,
     tracker: MemoryTracker,
     stats: StatsRecorder,
+    kernels: Kernels,
 }
 
 impl ReferenceBackend {
+    /// Backend with the default kernel engine (`parallel`, auto threads).
     pub fn new(dims: ModelDims, tracker: MemoryTracker) -> ReferenceBackend {
+        Self::with_kernels(dims, tracker, KernelOptions::default())
+    }
+
+    /// Backend with an explicit kernel selection (`--kernel`/`--threads`;
+    /// the fleet scheduler passes its per-worker thread budget here).
+    pub fn with_kernels(
+        dims: ModelDims,
+        tracker: MemoryTracker,
+        opts: KernelOptions,
+    ) -> ReferenceBackend {
         let specs = build_specs(&dims);
-        ReferenceBackend { dims, specs, tracker, stats: StatsRecorder::new() }
+        let kernels = Kernels::new(opts, tracker.clone());
+        ReferenceBackend { dims, specs, tracker, stats: StatsRecorder::new(), kernels }
+    }
+
+    /// The kernel engine (kind, thread budget, arena stats, FLOP counter).
+    pub fn kernels(&self) -> &Kernels {
+        &self.kernels
     }
 
     /// The synthesized artifact specs (what `mesp inspect` lists).
@@ -64,18 +83,21 @@ impl ReferenceBackend {
 
     fn dispatch(&self, name: &str, t: &[&HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
         let d = &self.dims;
+        let ks = &self.kernels;
         let (b, n, dm) = (d.batch, d.seq, d.d_model);
         let m = b * n;
         let r = d.rank;
         let bnd = [b, n, dm];
         let slices = |ts: &[&HostTensor]| -> Vec<&[f32]> { ts.iter().map(|t| t.as_f32()).collect() };
-        let grad_tensors = |g_x: Vec<f32>, grads: Vec<Vec<f32>>| -> Vec<HostTensor> {
+        // Backward outputs escape the arena: detach each scratch buffer
+        // into a HostTensor (the caller re-tracks the bytes as its own).
+        let grad_tensors = |g_x: ScratchBuf, grads: Vec<ScratchBuf>| -> Vec<HostTensor> {
             let mut out = Vec::with_capacity(1 + grads.len());
-            out.push(HostTensor::f32(&bnd, g_x));
+            out.push(HostTensor::f32(&bnd, g_x.into_vec()));
             for (i, gv) in grads.into_iter().enumerate() {
                 let (din, dout) = d.proj_dims(PROJS[i / 2]);
                 let shape = if i % 2 == 0 { vec![din, r] } else { vec![r, dout] };
-                out.push(HostTensor::f32(&shape, gv));
+                out.push(HostTensor::f32(&shape, gv.into_vec()));
             }
             out
         };
@@ -86,24 +108,33 @@ impl ReferenceBackend {
                 vec![HostTensor::f32(&bnd, out)]
             }
             "block_fwd" => {
-                let c = rm::block_forward(d, t[0].as_f32(), &slices(&t[1..10]), &slices(&t[10..24]));
-                vec![HostTensor::f32(&bnd, c.y)]
+                let y = rm::block_forward_inference(
+                    ks, d, t[0].as_f32(), &slices(&t[1..10]), &slices(&t[10..24]),
+                );
+                vec![HostTensor::f32(&bnd, y.into_vec())]
             }
             "block_fwd_saveh" => {
-                let c = rm::block_forward(d, t[0].as_f32(), &slices(&t[1..10]), &slices(&t[10..24]));
-                let mut out = vec![HostTensor::f32(&bnd, c.y)];
+                let c = rm::block_forward(
+                    ks, d, t[0].as_f32(), &slices(&t[1..10]), &slices(&t[10..24]),
+                );
+                let mut out = vec![HostTensor::f32(&bnd, c.y.into_vec())];
                 for h in c.hs {
-                    out.push(HostTensor::f32(&[m, r], h));
+                    out.push(HostTensor::f32(&[m, r], h.into_vec()));
                 }
                 out
             }
             "block_fwd_residuals" => {
-                let c = rm::block_forward(d, t[0].as_f32(), &slices(&t[1..10]), &slices(&t[10..24]));
-                let mut out = vec![HostTensor::f32(&bnd, c.y)];
-                for (rname, shape) in residual_shapes(d) {
-                    let data = residual_of(&c, rname).to_vec();
-                    out.push(HostTensor::f32(&shape, data));
-                }
+                let c = rm::block_forward(
+                    ks, d, t[0].as_f32(), &slices(&t[1..10]), &slices(&t[10..24]),
+                );
+                let residuals: Vec<HostTensor> = residual_shapes(d)
+                    .into_iter()
+                    .map(|(rname, shape)| {
+                        HostTensor::f32(&shape, residual_of(&c, rname).to_vec())
+                    })
+                    .collect();
+                let mut out = vec![HostTensor::f32(&bnd, c.y.into_vec())];
+                out.extend(residuals);
                 out
             }
             "block_bwd_mesp" => {
@@ -111,9 +142,10 @@ impl ReferenceBackend {
                 // intermediate set (h = xA included) inside this one call.
                 let frozen = slices(&t[2..11]);
                 let lora = slices(&t[11..25]);
-                let c = rm::block_forward(d, t[0].as_f32(), &frozen, &lora);
+                let c = rm::block_forward(ks, d, t[0].as_f32(), &frozen, &lora);
+                let src = rm::BwdSource::Owned(Box::new(c));
                 let (g_x, grads) = rm::block_backward(
-                    d, t[1].as_f32(), &rm::BwdCtx::from_cache(&c), &frozen, &lora, None,
+                    ks, d, t[1].as_f32(), src, &frozen, &lora, None,
                 );
                 grad_tensors(g_x, grads)
             }
@@ -121,10 +153,11 @@ impl ReferenceBackend {
                 // Table-5 ablation: identical math, dB consumes stored h.
                 let frozen = slices(&t[9..18]);
                 let lora = slices(&t[18..32]);
-                let c = rm::block_forward(d, t[0].as_f32(), &frozen, &lora);
+                let c = rm::block_forward(ks, d, t[0].as_f32(), &frozen, &lora);
                 let hs = slices(&t[2..9]);
+                let src = rm::BwdSource::Owned(Box::new(c));
                 let (g_x, grads) = rm::block_backward(
-                    d, t[1].as_f32(), &rm::BwdCtx::from_cache(&c), &frozen, &lora, Some(&hs),
+                    ks, d, t[1].as_f32(), src, &frozen, &lora, Some(&hs),
                 );
                 grad_tensors(g_x, grads)
             }
@@ -149,26 +182,27 @@ impl ReferenceBackend {
                     silu_out: res[11].as_f32(),
                 };
                 let hs: Vec<&[f32]> = res[12..19].iter().map(|t| t.as_f32()).collect();
+                let src = rm::BwdSource::Borrowed(ctx);
                 let (g_x, grads) = rm::block_backward(
-                    d, t[0].as_f32(), &ctx, &frozen, &lora, Some(&hs),
+                    ks, d, t[0].as_f32(), src, &frozen, &lora, Some(&hs),
                 );
                 grad_tensors(g_x, grads)
             }
             "lm_loss_fwd" => {
                 let loss = rm::lm_loss(
-                    t[0].as_f32(), t[1].as_f32(), t[2].as_f32(), t[3].as_i32(),
+                    ks, t[0].as_f32(), t[1].as_f32(), t[2].as_f32(), t[3].as_i32(),
                     m, dm, d.vocab,
                 );
                 vec![HostTensor::f32(&[1], vec![loss as f32])]
             }
             "lm_loss_grad" => {
                 let (loss, g_h) = rm::lm_loss_grad(
-                    t[0].as_f32(), t[1].as_f32(), t[2].as_f32(), t[3].as_i32(),
+                    ks, t[0].as_f32(), t[1].as_f32(), t[2].as_f32(), t[3].as_i32(),
                     m, dm, d.vocab,
                 );
                 vec![
                     HostTensor::f32(&[1], vec![loss as f32]),
-                    HostTensor::f32(&bnd, g_h),
+                    HostTensor::f32(&bnd, g_h.into_vec()),
                 ]
             }
             "block_fwd_q4" => {
@@ -195,8 +229,8 @@ impl ReferenceBackend {
                     deq[5].as_slice(), // wu
                     deq[6].as_slice(), // wd
                 ];
-                let c = rm::block_forward(d, t[0].as_f32(), &frozen, &lora);
-                vec![HostTensor::f32(&bnd, c.y)]
+                let y = rm::block_forward_inference(ks, d, t[0].as_f32(), &frozen, &lora);
+                vec![HostTensor::f32(&bnd, y.into_vec())]
             }
             other => anyhow::bail!("reference backend: unknown artifact '{other}'"),
         })
@@ -263,6 +297,9 @@ impl Backend for ReferenceBackend {
         // same accounting discipline as the PJRT runtime.
         let _io_guard = self.tracker.track(&format!("exec:{name}"), in_bytes);
 
+        // Calls of one session are serial (the engine drives them), so the
+        // kernel-engine FLOP counter delta brackets exactly this call.
+        let flops0 = self.kernels.flops();
         let start = Instant::now();
         let outputs = self.dispatch(name, &tensors)?;
         anyhow::ensure!(
@@ -271,7 +308,11 @@ impl Backend for ReferenceBackend {
             spec.outputs,
             outputs.len()
         );
-        self.stats.record(name, start.elapsed().as_secs_f64());
+        self.stats.record(
+            name,
+            start.elapsed().as_secs_f64(),
+            self.kernels.flops() - flops0,
+        );
         Ok(outputs)
     }
 
@@ -283,25 +324,25 @@ impl Backend for ReferenceBackend {
 /// Access the cache field matching a residual name.
 fn residual_of<'a>(c: &'a rm::BlockCache, name: &str) -> &'a [f32] {
     match name {
-        "x" => &c.x2d,
-        "h1" => &c.h1,
-        "h2" => &c.h2,
-        "x2" => &c.x2,
-        "q_rope" => &c.q_rope,
-        "k_rope" => &c.k_rope,
-        "v_heads" => &c.v_heads,
-        "probs" => &c.probs,
-        "attn_flat" => &c.attn_flat,
-        "gate_out" => &c.gate_out,
-        "up_out" => &c.up_out,
-        "silu_out" => &c.silu_out,
-        "h_q" => &c.hs[0],
-        "h_k" => &c.hs[1],
-        "h_v" => &c.hs[2],
-        "h_o" => &c.hs[3],
-        "h_gate" => &c.hs[4],
-        "h_up" => &c.hs[5],
-        "h_down" => &c.hs[6],
+        "x" => &c.x2d[..],
+        "h1" => &c.h1[..],
+        "h2" => &c.h2[..],
+        "x2" => &c.x2[..],
+        "q_rope" => &c.q_rope[..],
+        "k_rope" => &c.k_rope[..],
+        "v_heads" => &c.v_heads[..],
+        "probs" => &c.probs[..],
+        "attn_flat" => &c.attn_flat[..],
+        "gate_out" => &c.gate_out[..],
+        "up_out" => &c.up_out[..],
+        "silu_out" => &c.silu_out[..],
+        "h_q" => &c.hs[0][..],
+        "h_k" => &c.hs[1][..],
+        "h_v" => &c.hs[2][..],
+        "h_o" => &c.hs[3][..],
+        "h_gate" => &c.hs[4][..],
+        "h_up" => &c.hs[5][..],
+        "h_down" => &c.hs[6][..],
         other => panic!("unknown residual {other}"),
     }
 }

@@ -10,10 +10,20 @@
 //! so the MeSP / store-h / residual backward variants produce bitwise
 //! identical gradients for identical inputs.
 //!
+//! All GEMMs route through the [`Kernels`] engine (`--kernel
+//! naive|tiled|parallel`), and every intermediate is checked out of its
+//! [`crate::tensor::TensorArena`] — reused across calls and tracked under
+//! the `scratch` tag. Gradients stay bitwise identical across the three
+//! backward variants *within* one kernel kind; across kinds they agree to
+//! float tolerance (tiling changes the k-summation bracketing).
+//!
 //! Layout conventions: 2-D tensors are row-major `[rows, cols]` slices;
 //! per-head tensors are flattened `[batch, heads, seq, head_dim]`.
 
 use crate::config::ModelDims;
+use crate::tensor::ScratchBuf;
+
+use super::kernels::Kernels;
 
 /// RMSNorm epsilon (matches ModelConfig.eps).
 pub const EPS: f32 = 1e-6;
@@ -22,67 +32,6 @@ pub const ROPE_THETA: f32 = 10000.0;
 
 // ------------------------------------------------------------- primitives
 
-/// `a[m,k] @ b[k,n] -> [m,n]`.
-pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (l, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[l * n..(l + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
-    out
-}
-
-/// `aᵀ @ b` with `a[k,m]`, `b[k,n] -> [m,n]`.
-pub fn matmul_at(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), k * m);
-    debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
-    for l in 0..k {
-        let arow = &a[l * m..(l + 1) * m];
-        let brow = &b[l * n..(l + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
-    out
-}
-
-/// `a @ bᵀ` with `a[m,k]`, `b[n,k] -> [m,n]`.
-pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                acc += av * bv;
-            }
-            out[i * n + j] = acc;
-        }
-    }
-    out
-}
-
 fn add_into(dst: &mut [f32], src: &[f32]) {
     debug_assert_eq!(dst.len(), src.len());
     for (d, s) in dst.iter_mut().zip(src) {
@@ -90,16 +39,21 @@ fn add_into(dst: &mut [f32], src: &[f32]) {
     }
 }
 
-fn added(a: &[f32], b: &[f32]) -> Vec<f32> {
-    a.iter().zip(b).map(|(x, y)| x + y).collect()
+fn added(ks: &Kernels, a: &[f32], b: &[f32]) -> ScratchBuf {
+    debug_assert_eq!(a.len(), b.len());
+    let mut out = ks.arena().take(a.len());
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o = x + y;
+    }
+    out
 }
 
 // --------------------------------------------------------------- RMSNorm
 
 /// `x_hat = x / rms(x) * w`, rms over the last axis; `x: [rows, d]`.
-pub fn rmsnorm(x: &[f32], w: &[f32], d: usize) -> Vec<f32> {
+pub fn rmsnorm(ks: &Kernels, x: &[f32], w: &[f32], d: usize) -> ScratchBuf {
     let rows = x.len() / d;
-    let mut out = vec![0.0f32; x.len()];
+    let mut out = ks.arena().take(x.len());
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let ms = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
@@ -114,9 +68,9 @@ pub fn rmsnorm(x: &[f32], w: &[f32], d: usize) -> Vec<f32> {
 /// dL/dx of RMSNorm with frozen weight `w` (paper eq. 22 + weight):
 /// with `u = x / rms(x)` and `gw = g ⊙ w`:
 /// `dx = (gw - u · mean(gw ⊙ u)) / rms`.
-pub fn rmsnorm_bwd(x: &[f32], w: &[f32], g: &[f32], d: usize) -> Vec<f32> {
+pub fn rmsnorm_bwd(ks: &Kernels, x: &[f32], w: &[f32], g: &[f32], d: usize) -> ScratchBuf {
     let rows = x.len() / d;
-    let mut out = vec![0.0f32; x.len()];
+    let mut out = ks.arena().take(x.len());
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let gr = &g[r * d..(r + 1) * d];
@@ -137,20 +91,24 @@ pub fn rmsnorm_bwd(x: &[f32], w: &[f32], g: &[f32], d: usize) -> Vec<f32> {
 // -------------------------------------------------------------- SiLU-mul
 
 /// SwiGLU elementwise core: `silu(gate) ⊙ up`.
-pub fn silu_mul(gate: &[f32], up: &[f32]) -> Vec<f32> {
-    gate.iter()
-        .zip(up)
-        .map(|(&g, &u)| {
-            let sig = 1.0 / (1.0 + (-g).exp());
-            g * sig * u
-        })
-        .collect()
+pub fn silu_mul(ks: &Kernels, gate: &[f32], up: &[f32]) -> ScratchBuf {
+    let mut out = ks.arena().take(gate.len());
+    for ((o, &g), &u) in out.iter_mut().zip(gate).zip(up) {
+        let sig = 1.0 / (1.0 + (-g).exp());
+        *o = g * sig * u;
+    }
+    out
 }
 
 /// Backward of `silu(gate)·up`; returns `(d_gate, d_up)`.
-pub fn silu_mul_bwd(gate: &[f32], up: &[f32], g: &[f32]) -> (Vec<f32>, Vec<f32>) {
-    let mut dg = vec![0.0f32; gate.len()];
-    let mut du = vec![0.0f32; up.len()];
+pub fn silu_mul_bwd(
+    ks: &Kernels,
+    gate: &[f32],
+    up: &[f32],
+    g: &[f32],
+) -> (ScratchBuf, ScratchBuf) {
+    let mut dg = ks.arena().take(gate.len());
+    let mut du = ks.arena().take(up.len());
     for i in 0..gate.len() {
         let sig = 1.0 / (1.0 + (-gate[i]).exp());
         let silu = gate[i] * sig;
@@ -163,7 +121,7 @@ pub fn silu_mul_bwd(gate: &[f32], up: &[f32], g: &[f32]) -> (Vec<f32>, Vec<f32>)
 
 // ------------------------------------------------------------------ RoPE
 
-/// cos/sin tables `[n, hd/2]`.
+/// cos/sin tables `[n, hd/2]` (small; plain Vecs, not arena scratch).
 pub fn rope_tables(seq: usize, head_dim: usize) -> (Vec<f32>, Vec<f32>) {
     let half = head_dim / 2;
     let mut cos = vec![0.0f32; seq * half];
@@ -183,6 +141,7 @@ pub fn rope_tables(seq: usize, head_dim: usize) -> (Vec<f32>, Vec<f32>) {
 /// rotation is the rotation by `-θ` (`inverse = true`).
 #[allow(clippy::too_many_arguments)]
 pub fn apply_rope(
+    ks: &Kernels,
     x: &[f32],
     b: usize,
     heads: usize,
@@ -191,9 +150,9 @@ pub fn apply_rope(
     cos: &[f32],
     sin: &[f32],
     inverse: bool,
-) -> Vec<f32> {
+) -> ScratchBuf {
     let half = hd / 2;
-    let mut out = vec![0.0f32; x.len()];
+    let mut out = ks.arena().take(x.len());
     for bi in 0..b {
         for h in 0..heads {
             for t in 0..n {
@@ -220,8 +179,15 @@ pub fn apply_rope(
 // ----------------------------------------------------------- head layout
 
 /// `[b*n, heads*hd] -> [b, heads, n, hd]`.
-pub fn split_heads(x2d: &[f32], b: usize, n: usize, heads: usize, hd: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; x2d.len()];
+pub fn split_heads(
+    ks: &Kernels,
+    x2d: &[f32],
+    b: usize,
+    n: usize,
+    heads: usize,
+    hd: usize,
+) -> ScratchBuf {
+    let mut out = ks.arena().take(x2d.len());
     for bi in 0..b {
         for t in 0..n {
             for h in 0..heads {
@@ -235,8 +201,15 @@ pub fn split_heads(x2d: &[f32], b: usize, n: usize, heads: usize, hd: usize) -> 
 }
 
 /// `[b, heads, n, hd] -> [b*n, heads*hd]`.
-pub fn merge_heads(x4: &[f32], b: usize, heads: usize, n: usize, hd: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; x4.len()];
+pub fn merge_heads(
+    ks: &Kernels,
+    x4: &[f32],
+    b: usize,
+    heads: usize,
+    n: usize,
+    hd: usize,
+) -> ScratchBuf {
+    let mut out = ks.arena().take(x4.len());
     for bi in 0..b {
         for h in 0..heads {
             for t in 0..n {
@@ -257,6 +230,7 @@ pub fn merge_heads(x4: &[f32], b: usize, heads: usize, n: usize, hd: usize) -> V
 /// are exactly zero.
 #[allow(clippy::too_many_arguments)]
 pub fn attention_fwd(
+    ks: &Kernels,
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -265,11 +239,14 @@ pub fn attention_fwd(
     kv_heads: usize,
     n: usize,
     hd: usize,
-) -> (Vec<f32>, Vec<f32>) {
+) -> (ScratchBuf, ScratchBuf) {
     let rep = heads / kv_heads;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut out = vec![0.0f32; b * heads * n * hd];
-    let mut probs = vec![0.0f32; b * heads * n * n];
+    let mut out = ks.arena().take(b * heads * n * hd);
+    let mut probs = ks.arena().take(b * heads * n * n);
+    // QK and PV both do Σ_i (i+1)·hd multiply-adds per (batch, head).
+    ks.add_flops((b * heads) as u64 * 2 * (n * (n + 1)) as u64 * hd as u64);
+    let mut row = ks.arena().take(n); // score row, reused across queries
     for bi in 0..b {
         for h in 0..heads {
             let kvh = h / rep;
@@ -279,7 +256,7 @@ pub fn attention_fwd(
             for i in 0..n {
                 let qi = &q[qb + i * hd..qb + (i + 1) * hd];
                 // causal: keys 0..=i
-                let mut row = vec![0.0f32; i + 1];
+                let row = &mut row[..i + 1];
                 let mut mx = f32::NEG_INFINITY;
                 for (j, rj) in row.iter_mut().enumerate() {
                     let kj = &k[kb + j * hd..kb + (j + 1) * hd];
@@ -318,6 +295,7 @@ pub fn attention_fwd(
 /// GQA repeat). Returns `(dq [b,H,n,hd], dk [b,KV,n,hd], dv [b,KV,n,hd])`.
 #[allow(clippy::too_many_arguments)]
 pub fn attention_bwd(
+    ks: &Kernels,
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -328,12 +306,15 @@ pub fn attention_bwd(
     kv_heads: usize,
     n: usize,
     hd: usize,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+) -> (ScratchBuf, ScratchBuf, ScratchBuf) {
     let rep = heads / kv_heads;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut dq = vec![0.0f32; b * heads * n * hd];
-    let mut dk = vec![0.0f32; b * kv_heads * n * hd];
-    let mut dv = vec![0.0f32; b * kv_heads * n * hd];
+    let mut dq = ks.arena().take(b * heads * n * hd);
+    let mut dk = ks.arena().take(b * kv_heads * n * hd);
+    let mut dv = ks.arena().take(b * kv_heads * n * hd);
+    // the softmax-VJP elementwise pass (GEMMs count themselves)
+    ks.add_flops((b * heads * 3 * n * n) as u64);
+    let mut ds = ks.arena().take(n * n);
     for bi in 0..b {
         for h in 0..heads {
             let kvh = h / rep;
@@ -346,12 +327,11 @@ pub fn attention_bwd(
             let vh = &v[kb..kb + n * hd];
             let qh = &q[qb..qb + n * hd];
             // dv += pᵀ @ go  (accumulated into the kv head slot)
-            let dvh = matmul_at(p, go, n, n, hd);
+            let dvh = ks.matmul_at(p, go, n, n, hd);
             add_into(&mut dv[kb..kb + n * hd], &dvh);
             // dprobs = go @ vᵀ
-            let dp = matmul_bt(go, vh, n, hd, n);
+            let dp = ks.matmul_bt(go, vh, n, hd, n);
             // dscores = p ⊙ (dp - rowsum(dp ⊙ p))
-            let mut ds = vec![0.0f32; n * n];
             for i in 0..n {
                 let mut rowsum = 0.0f32;
                 for j in 0..n {
@@ -362,13 +342,13 @@ pub fn attention_bwd(
                 }
             }
             // dq = ds @ k · scale
-            let dqh = matmul(&ds, kh, n, n, hd);
-            for (d, s) in dq[qb..qb + n * hd].iter_mut().zip(&dqh) {
+            let dqh = ks.matmul(&ds, kh, n, n, hd);
+            for (d, s) in dq[qb..qb + n * hd].iter_mut().zip(&dqh[..]) {
                 *d = s * scale;
             }
             // dk += dsᵀ @ q · scale
-            let dkh = matmul_at(&ds, qh, n, n, hd);
-            for (d, s) in dk[kb..kb + n * hd].iter_mut().zip(&dkh) {
+            let dkh = ks.matmul_at(&ds, qh, n, n, hd);
+            for (d, s) in dk[kb..kb + n * hd].iter_mut().zip(&dkh[..]) {
                 *d += s * scale;
             }
         }
@@ -382,6 +362,7 @@ pub fn attention_bwd(
 /// Returns `(y [m,dout], h = xA [m,r])`.
 #[allow(clippy::too_many_arguments)]
 pub fn lora_fwd(
+    ks: &Kernels,
     x: &[f32],
     w: &[f32],
     a: &[f32],
@@ -391,11 +372,11 @@ pub fn lora_fwd(
     din: usize,
     dout: usize,
     r: usize,
-) -> (Vec<f32>, Vec<f32>) {
-    let h = matmul(x, a, m, din, r);
-    let mut y = matmul(x, w, m, din, dout);
-    let hb = matmul(&h, bb, m, r, dout);
-    for (yv, hv) in y.iter_mut().zip(&hb) {
+) -> (ScratchBuf, ScratchBuf) {
+    let h = ks.matmul(x, a, m, din, r);
+    let mut y = ks.matmul(x, w, m, din, dout);
+    let hb = ks.matmul(&h, bb, m, r, dout);
+    for (yv, hv) in y.iter_mut().zip(&hb[..]) {
         *yv += s * hv;
     }
     (y, h)
@@ -408,6 +389,7 @@ pub fn lora_fwd(
 /// Returns `(gx [m,din], dA [din,r], dB [r,dout])`.
 #[allow(clippy::too_many_arguments)]
 pub fn lora_bwd(
+    ks: &Kernels,
     x: &[f32],
     g: &[f32],
     w: &[f32],
@@ -419,19 +401,22 @@ pub fn lora_bwd(
     dout: usize,
     r: usize,
     stored_h: Option<&[f32]>,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let sg: Vec<f32> = g.iter().map(|v| s * v).collect();
-    let dh = matmul_bt(&sg, bb, m, dout, r);
-    let da = matmul_at(x, &dh, m, din, r);
+) -> (ScratchBuf, ScratchBuf, ScratchBuf) {
+    let mut sg = ks.arena().take(g.len());
+    for (o, v) in sg.iter_mut().zip(g) {
+        *o = s * v;
+    }
+    let dh = ks.matmul_bt(&sg, bb, m, dout, r);
+    let da = ks.matmul_at(x, &dh, m, din, r);
     let db = match stored_h {
-        Some(h) => matmul_at(h, &sg, m, r, dout),
+        Some(h) => ks.matmul_at(h, &sg, m, r, dout),
         None => {
-            let h = matmul(x, a, m, din, r); // Appendix-A recompute
-            matmul_at(&h, &sg, m, r, dout)
+            let h = ks.matmul(x, a, m, din, r); // Appendix-A recompute
+            ks.matmul_at(&h, &sg, m, r, dout)
         }
     };
-    let mut gx = matmul_bt(&dh, a, m, r, din);
-    let gw = matmul_bt(g, w, m, dout, din);
+    let mut gx = ks.matmul_bt(&dh, a, m, r, din);
+    let gw = ks.matmul_bt(g, w, m, dout, din);
     add_into(&mut gx, &gw);
     (gx, da, db)
 }
@@ -450,28 +435,31 @@ const WU: usize = 7;
 const WD: usize = 8;
 
 /// Every intermediate a backward pass could need — the Rust mirror of
-/// `_block_core`'s cache dict.
+/// `_block_core`'s cache dict. All fields are arena scratch: alive only
+/// while the artifact call that produced them runs (unless detached into
+/// outputs via [`ScratchBuf::into_vec`]).
 pub struct BlockCache {
-    pub x2d: Vec<f32>,
-    pub h1: Vec<f32>,
-    pub h2: Vec<f32>,
-    pub x2: Vec<f32>,
-    pub q_rope: Vec<f32>,
-    pub k_rope: Vec<f32>,
-    pub v_heads: Vec<f32>,
-    pub probs: Vec<f32>,
-    pub attn_flat: Vec<f32>,
-    pub gate_out: Vec<f32>,
-    pub up_out: Vec<f32>,
-    pub silu_out: Vec<f32>,
+    pub x2d: ScratchBuf,
+    pub h1: ScratchBuf,
+    pub h2: ScratchBuf,
+    pub x2: ScratchBuf,
+    pub q_rope: ScratchBuf,
+    pub k_rope: ScratchBuf,
+    pub v_heads: ScratchBuf,
+    pub probs: ScratchBuf,
+    pub attn_flat: ScratchBuf,
+    pub gate_out: ScratchBuf,
+    pub up_out: ScratchBuf,
+    pub silu_out: ScratchBuf,
     /// The seven `h = xA` intermediates, PROJS order.
-    pub hs: Vec<Vec<f32>>,
+    pub hs: Vec<ScratchBuf>,
     /// Block output `[m, d]`.
-    pub y: Vec<f32>,
+    pub y: ScratchBuf,
 }
 
 /// Full block forward; `x: [m, d]`, frozen ×9 and lora ×14 in ABI order.
 pub fn block_forward(
+    ks: &Kernels,
     dims: &ModelDims,
     x: &[f32],
     frozen: &[&[f32]],
@@ -489,31 +477,39 @@ pub fn block_forward(
     let s = dims.scale();
     let (qd, kvd) = (dims.q_dim(), dims.kv_dim());
 
-    let h1 = rmsnorm(x, frozen[LN1], d);
-    let (q2d, h_q) = lora_fwd(&h1, frozen[WQ], lora[0], lora[1], s, m, d, qd, r);
-    let (k2d, h_k) = lora_fwd(&h1, frozen[WK], lora[2], lora[3], s, m, d, kvd, r);
-    let (v2d, h_v) = lora_fwd(&h1, frozen[WV], lora[4], lora[5], s, m, d, kvd, r);
+    let h1 = rmsnorm(ks, x, frozen[LN1], d);
+    let (q2d, h_q) = lora_fwd(ks, &h1, frozen[WQ], lora[0], lora[1], s, m, d, qd, r);
+    let (k2d, h_k) = lora_fwd(ks, &h1, frozen[WK], lora[2], lora[3], s, m, d, kvd, r);
+    let (v2d, h_v) = lora_fwd(ks, &h1, frozen[WV], lora[4], lora[5], s, m, d, kvd, r);
 
     let (cos, sin) = rope_tables(n, hd);
-    let q4 = apply_rope(&split_heads(&q2d, b, n, hh, hd), b, hh, n, hd, &cos, &sin, false);
-    let k4 = apply_rope(&split_heads(&k2d, b, n, kv, hd), b, kv, n, hd, &cos, &sin, false);
-    let v4 = split_heads(&v2d, b, n, kv, hd);
+    let q4 = apply_rope(
+        ks, &split_heads(ks, &q2d, b, n, hh, hd), b, hh, n, hd, &cos, &sin, false,
+    );
+    let k4 = apply_rope(
+        ks, &split_heads(ks, &k2d, b, n, kv, hd), b, kv, n, hd, &cos, &sin, false,
+    );
+    let v4 = split_heads(ks, &v2d, b, n, kv, hd);
+    drop((q2d, k2d, v2d));
 
-    let (attn_out, probs) = attention_fwd(&q4, &k4, &v4, b, hh, kv, n, hd);
-    let attn_flat = merge_heads(&attn_out, b, hh, n, hd);
+    let (attn_out, probs) = attention_fwd(ks, &q4, &k4, &v4, b, hh, kv, n, hd);
+    let attn_flat = merge_heads(ks, &attn_out, b, hh, n, hd);
+    drop(attn_out);
 
-    let (o2d, h_o) = lora_fwd(&attn_flat, frozen[WO], lora[6], lora[7], s, m, qd, d, r);
-    let x2 = added(x, &o2d);
+    let (o2d, h_o) = lora_fwd(ks, &attn_flat, frozen[WO], lora[6], lora[7], s, m, qd, d, r);
+    let x2 = added(ks, x, &o2d);
+    drop(o2d);
 
-    let h2 = rmsnorm(&x2, frozen[LN2], d);
-    let (gate_out, h_gate) = lora_fwd(&h2, frozen[WG], lora[8], lora[9], s, m, d, ff, r);
-    let (up_out, h_up) = lora_fwd(&h2, frozen[WU], lora[10], lora[11], s, m, d, ff, r);
-    let silu_out = silu_mul(&gate_out, &up_out);
-    let (d2d, h_down) = lora_fwd(&silu_out, frozen[WD], lora[12], lora[13], s, m, ff, d, r);
-    let y = added(&x2, &d2d);
+    let h2 = rmsnorm(ks, &x2, frozen[LN2], d);
+    let (gate_out, h_gate) = lora_fwd(ks, &h2, frozen[WG], lora[8], lora[9], s, m, d, ff, r);
+    let (up_out, h_up) = lora_fwd(ks, &h2, frozen[WU], lora[10], lora[11], s, m, d, ff, r);
+    let silu_out = silu_mul(ks, &gate_out, &up_out);
+    let (d2d, h_down) = lora_fwd(ks, &silu_out, frozen[WD], lora[12], lora[13], s, m, ff, d, r);
+    let y = added(ks, &x2, &d2d);
+    drop(d2d);
 
     BlockCache {
-        x2d: x.to_vec(),
+        x2d: ks.arena().take_from(x),
         h1,
         h2,
         x2,
@@ -528,6 +524,70 @@ pub fn block_forward(
         hs: vec![h_q, h_k, h_v, h_o, h_gate, h_up, h_down],
         y,
     }
+}
+
+/// Forward pass for inference-only callers (`block_fwd`, `block_fwd_q4`:
+/// the checkpoint sweep and both MeZO forwards): identical math and
+/// operation order to [`block_forward`] — the y it returns is bitwise
+/// the same — but every intermediate is dropped back to the arena the
+/// moment the dataflow is done with it, so the tracked scratch peak is
+/// the inference working set, not the full cache.
+pub fn block_forward_inference(
+    ks: &Kernels,
+    dims: &ModelDims,
+    x: &[f32],
+    frozen: &[&[f32]],
+    lora: &[&[f32]],
+) -> ScratchBuf {
+    let (b, n, d) = (dims.batch, dims.seq, dims.d_model);
+    let (hh, kv, hd, ff, r) = (
+        dims.n_heads,
+        dims.n_kv_heads,
+        dims.head_dim,
+        dims.d_ff,
+        dims.rank,
+    );
+    let m = b * n;
+    let s = dims.scale();
+    let (qd, kvd) = (dims.q_dim(), dims.kv_dim());
+
+    let h1 = rmsnorm(ks, x, frozen[LN1], d);
+    let (q2d, h_q) = lora_fwd(ks, &h1, frozen[WQ], lora[0], lora[1], s, m, d, qd, r);
+    let (k2d, h_k) = lora_fwd(ks, &h1, frozen[WK], lora[2], lora[3], s, m, d, kvd, r);
+    let (v2d, h_v) = lora_fwd(ks, &h1, frozen[WV], lora[4], lora[5], s, m, d, kvd, r);
+    drop((h1, h_q, h_k, h_v));
+
+    let (cos, sin) = rope_tables(n, hd);
+    let q4 = apply_rope(
+        ks, &split_heads(ks, &q2d, b, n, hh, hd), b, hh, n, hd, &cos, &sin, false,
+    );
+    let k4 = apply_rope(
+        ks, &split_heads(ks, &k2d, b, n, kv, hd), b, kv, n, hd, &cos, &sin, false,
+    );
+    let v4 = split_heads(ks, &v2d, b, n, kv, hd);
+    drop((q2d, k2d, v2d));
+
+    let (attn_out, probs) = attention_fwd(ks, &q4, &k4, &v4, b, hh, kv, n, hd);
+    drop((q4, k4, v4, probs));
+    let attn_flat = merge_heads(ks, &attn_out, b, hh, n, hd);
+    drop(attn_out);
+
+    let (o2d, h_o) = lora_fwd(ks, &attn_flat, frozen[WO], lora[6], lora[7], s, m, qd, d, r);
+    drop((attn_flat, h_o));
+    let x2 = added(ks, x, &o2d);
+    drop(o2d);
+
+    let h2 = rmsnorm(ks, &x2, frozen[LN2], d);
+    let (gate_out, h_gate) = lora_fwd(ks, &h2, frozen[WG], lora[8], lora[9], s, m, d, ff, r);
+    let (up_out, h_up) = lora_fwd(ks, &h2, frozen[WU], lora[10], lora[11], s, m, d, ff, r);
+    drop((h2, h_gate, h_up));
+    let silu_out = silu_mul(ks, &gate_out, &up_out);
+    drop((gate_out, up_out));
+    let (d2d, h_down) = lora_fwd(ks, &silu_out, frozen[WD], lora[12], lora[13], s, m, ff, d, r);
+    drop((silu_out, h_down));
+    let y = added(ks, &x2, &d2d);
+    drop((x2, d2d));
+    y
 }
 
 /// Borrowed view of whichever intermediates exist (recomputed or
@@ -547,21 +607,52 @@ pub struct BwdCtx<'a> {
     pub silu_out: &'a [f32],
 }
 
-impl<'a> BwdCtx<'a> {
-    pub fn from_cache(c: &'a BlockCache) -> BwdCtx<'a> {
-        BwdCtx {
-            x2d: &c.x2d,
-            h1: &c.h1,
-            h2: &c.h2,
-            x2: &c.x2,
-            q_rope: &c.q_rope,
-            k_rope: &c.k_rope,
-            v_heads: &c.v_heads,
-            probs: &c.probs,
-            attn_flat: &c.attn_flat,
-            gate_out: &c.gate_out,
-            up_out: &c.up_out,
-            silu_out: &c.silu_out,
+/// What the backward reads its intermediates from.
+///
+/// * `Owned` — the fused-recompute path (MeSP / store-h): the backward
+///   OWNS the just-recomputed [`BlockCache`] and releases every tensor
+///   back to the arena the moment its VJP consumed it — the paper's
+///   "explicitly deallocate all intermediates" discipline. This is what
+///   keeps the fused path's tracked scratch peak near the minimal set
+///   instead of the full residual set.
+/// * `Borrowed` — the MeBP residual path: intermediates are host-held
+///   tensors owned by the caller; release is a no-op.
+pub enum BwdSource<'a> {
+    Owned(Box<BlockCache>),
+    Borrowed(BwdCtx<'a>),
+}
+
+macro_rules! bwd_field {
+    ($name:ident) => {
+        fn $name(&self) -> &[f32] {
+            match self {
+                BwdSource::Owned(c) => &c.$name[..],
+                BwdSource::Borrowed(b) => b.$name,
+            }
+        }
+    };
+}
+
+impl BwdSource<'_> {
+    bwd_field!(x2d);
+    bwd_field!(h1);
+    bwd_field!(h2);
+    bwd_field!(x2);
+    bwd_field!(q_rope);
+    bwd_field!(k_rope);
+    bwd_field!(v_heads);
+    bwd_field!(probs);
+    bwd_field!(attn_flat);
+    bwd_field!(gate_out);
+    bwd_field!(up_out);
+    bwd_field!(silu_out);
+
+    /// Free one owned cache tensor now (no-op for borrowed residuals).
+    /// The selector must be a plain field projection, e.g.
+    /// `src.release(|c| &mut c.silu_out)`.
+    fn release(&mut self, field: fn(&mut BlockCache) -> &mut ScratchBuf) {
+        if let BwdSource::Owned(c) = self {
+            field(c).release();
         }
     }
 }
@@ -571,13 +662,14 @@ impl<'a> BwdCtx<'a> {
 /// stored-h mode (Table 5 / MeBP residuals).
 /// Returns `(g_x [m,d], 14 LoRA grads in (dA, dB) × PROJS order)`.
 pub fn block_backward(
+    ks: &Kernels,
     dims: &ModelDims,
     g_y: &[f32],
-    c: &BwdCtx,
+    mut src: BwdSource,
     frozen: &[&[f32]],
     lora: &[&[f32]],
     stored_h: Option<&[&[f32]]>,
-) -> (Vec<f32>, Vec<Vec<f32>>) {
+) -> (ScratchBuf, Vec<ScratchBuf>) {
     let (b, n, d) = (dims.batch, dims.seq, dims.d_model);
     let (hh, kv, hd, ff, r) = (
         dims.n_heads,
@@ -591,52 +683,84 @@ pub fn block_backward(
     let (qd, kvd) = (dims.q_dim(), dims.kv_dim());
     let sh = |p: usize| stored_h.map(|hs| hs[p]);
 
+    // The backward never reads y, and reads h = xA only via `stored_h`:
+    // an owned cache can shed both up front.
+    if let BwdSource::Owned(c) = &mut src {
+        c.y.release();
+        for h in &mut c.hs {
+            h.release();
+        }
+    }
+
     // y = x2 + down(silu_mul(gate(h2), up(h2)))
     let (g_silu, da_down, db_down) = lora_bwd(
-        c.silu_out, g_y, frozen[WD], lora[12], lora[13], s, m, ff, d, r, sh(6),
+        ks, src.silu_out(), g_y, frozen[WD], lora[12], lora[13], s, m, ff, d, r, sh(6),
     );
-    let (g_gate, g_up) = silu_mul_bwd(c.gate_out, c.up_out, &g_silu);
+    src.release(|c| &mut c.silu_out);
+    let (g_gate, g_up) = silu_mul_bwd(ks, src.gate_out(), src.up_out(), &g_silu);
+    drop(g_silu);
+    src.release(|c| &mut c.gate_out);
+    src.release(|c| &mut c.up_out);
     let (g_h2_a, da_gate, db_gate) = lora_bwd(
-        c.h2, &g_gate, frozen[WG], lora[8], lora[9], s, m, d, ff, r, sh(4),
+        ks, src.h2(), &g_gate, frozen[WG], lora[8], lora[9], s, m, d, ff, r, sh(4),
     );
     let (g_h2_b, da_up, db_up) = lora_bwd(
-        c.h2, &g_up, frozen[WU], lora[10], lora[11], s, m, d, ff, r, sh(5),
+        ks, src.h2(), &g_up, frozen[WU], lora[10], lora[11], s, m, d, ff, r, sh(5),
     );
-    let mut g_x2 = g_y.to_vec();
+    drop((g_gate, g_up));
+    src.release(|c| &mut c.h2);
+    let mut g_x2 = ks.arena().take_from(g_y);
     add_into(
         &mut g_x2,
-        &rmsnorm_bwd(c.x2, frozen[LN2], &added(&g_h2_a, &g_h2_b), d),
+        &rmsnorm_bwd(ks, src.x2(), frozen[LN2], &added(ks, &g_h2_a, &g_h2_b), d),
     );
+    drop((g_h2_a, g_h2_b));
+    src.release(|c| &mut c.x2);
 
     // x2 = x + o(attn_flat)
     let (g_attn_flat, da_o, db_o) = lora_bwd(
-        c.attn_flat, &g_x2, frozen[WO], lora[6], lora[7], s, m, qd, d, r, sh(3),
+        ks, src.attn_flat(), &g_x2, frozen[WO], lora[6], lora[7], s, m, qd, d, r, sh(3),
     );
-    let g_attn_out = split_heads(&g_attn_flat, b, n, hh, hd);
+    src.release(|c| &mut c.attn_flat);
+    let g_attn_out = split_heads(ks, &g_attn_flat, b, n, hh, hd);
+    drop(g_attn_flat);
 
     let (g_q4, g_k4, g_v4) = attention_bwd(
-        c.q_rope, c.k_rope, c.v_heads, c.probs, &g_attn_out, b, hh, kv, n, hd,
+        ks, src.q_rope(), src.k_rope(), src.v_heads(), src.probs(), &g_attn_out, b, hh, kv, n, hd,
     );
+    drop(g_attn_out);
+    src.release(|c| &mut c.q_rope);
+    src.release(|c| &mut c.k_rope);
+    src.release(|c| &mut c.v_heads);
+    src.release(|c| &mut c.probs);
 
     let (cos, sin) = rope_tables(n, hd);
-    let g_q2d = merge_heads(&apply_rope(&g_q4, b, hh, n, hd, &cos, &sin, true), b, hh, n, hd);
-    let g_k2d = merge_heads(&apply_rope(&g_k4, b, kv, n, hd, &cos, &sin, true), b, kv, n, hd);
-    let g_v2d = merge_heads(&g_v4, b, kv, n, hd);
+    let g_q2d = merge_heads(
+        ks, &apply_rope(ks, &g_q4, b, hh, n, hd, &cos, &sin, true), b, hh, n, hd,
+    );
+    let g_k2d = merge_heads(
+        ks, &apply_rope(ks, &g_k4, b, kv, n, hd, &cos, &sin, true), b, kv, n, hd,
+    );
+    let g_v2d = merge_heads(ks, &g_v4, b, kv, n, hd);
+    drop((g_q4, g_k4, g_v4));
 
     let (g_h1_q, da_q, db_q) = lora_bwd(
-        c.h1, &g_q2d, frozen[WQ], lora[0], lora[1], s, m, d, qd, r, sh(0),
+        ks, src.h1(), &g_q2d, frozen[WQ], lora[0], lora[1], s, m, d, qd, r, sh(0),
     );
     let (g_h1_k, da_k, db_k) = lora_bwd(
-        c.h1, &g_k2d, frozen[WK], lora[2], lora[3], s, m, d, kvd, r, sh(1),
+        ks, src.h1(), &g_k2d, frozen[WK], lora[2], lora[3], s, m, d, kvd, r, sh(1),
     );
     let (g_h1_v, da_v, db_v) = lora_bwd(
-        c.h1, &g_v2d, frozen[WV], lora[4], lora[5], s, m, d, kvd, r, sh(2),
+        ks, src.h1(), &g_v2d, frozen[WV], lora[4], lora[5], s, m, d, kvd, r, sh(2),
     );
+    drop((g_q2d, g_k2d, g_v2d));
+    src.release(|c| &mut c.h1);
 
-    let mut g_h1 = added(&g_h1_q, &g_h1_k);
+    let mut g_h1 = added(ks, &g_h1_q, &g_h1_k);
     add_into(&mut g_h1, &g_h1_v);
+    drop((g_h1_q, g_h1_k, g_h1_v));
     let mut g_x = g_x2;
-    add_into(&mut g_x, &rmsnorm_bwd(c.x2d, frozen[LN1], &g_h1, d));
+    add_into(&mut g_x, &rmsnorm_bwd(ks, src.x2d(), frozen[LN1], &g_h1, d));
 
     let grads = vec![
         da_q, db_q, da_k, db_k, da_v, db_v, da_o, db_o, da_gate, db_gate,
@@ -648,14 +772,24 @@ pub fn block_backward(
 // ------------------------------------------------------------- loss head
 
 /// Tied-lm-head logits: `hn = rmsnorm(h)`, `logits = hn @ embᵀ`.
-fn lm_logits(h2d: &[f32], norm_w: &[f32], emb: &[f32], m: usize, d: usize, v: usize) -> Vec<f32> {
-    let hn = rmsnorm(h2d, norm_w, d);
-    matmul_bt(&hn, emb, m, d, v)
+fn lm_logits(
+    ks: &Kernels,
+    h2d: &[f32],
+    norm_w: &[f32],
+    emb: &[f32],
+    m: usize,
+    d: usize,
+    v: usize,
+) -> ScratchBuf {
+    let hn = rmsnorm(ks, h2d, norm_w, d);
+    ks.matmul_bt(&hn, emb, m, d, v)
 }
 
 /// Mean causal-LM cross-entropy (targets pre-shifted by the data
 /// pipeline). Accumulated in f64 for SPSA-grade precision.
+#[allow(clippy::too_many_arguments)]
 pub fn lm_loss(
+    ks: &Kernels,
     h2d: &[f32],
     norm_w: &[f32],
     emb: &[f32],
@@ -664,7 +798,7 @@ pub fn lm_loss(
     d: usize,
     v: usize,
 ) -> f64 {
-    let logits = lm_logits(h2d, norm_w, emb, m, d, v);
+    let logits = lm_logits(ks, h2d, norm_w, emb, m, d, v);
     let mut loss = 0.0f64;
     for i in 0..m {
         let row = &logits[i * v..(i + 1) * v];
@@ -681,7 +815,9 @@ pub fn lm_loss(
 
 /// Loss + manual backward to `g_h` (softmax-CE grad, then the lm-head and
 /// final-RMSNorm VJPs — no autodiff anywhere).
+#[allow(clippy::too_many_arguments)]
 pub fn lm_loss_grad(
+    ks: &Kernels,
     h2d: &[f32],
     norm_w: &[f32],
     emb: &[f32],
@@ -689,10 +825,10 @@ pub fn lm_loss_grad(
     m: usize,
     d: usize,
     v: usize,
-) -> (f64, Vec<f32>) {
-    let logits = lm_logits(h2d, norm_w, emb, m, d, v);
+) -> (f64, ScratchBuf) {
+    let logits = lm_logits(ks, h2d, norm_w, emb, m, d, v);
     let mut loss = 0.0f64;
-    let mut g_logits = vec![0.0f32; m * v];
+    let mut g_logits = ks.arena().take(m * v);
     for i in 0..m {
         let row = &logits[i * v..(i + 1) * v];
         let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -710,12 +846,14 @@ pub fn lm_loss_grad(
             *gv = (p - onehot) / m as f32;
         }
     }
-    let g_hn = matmul(&g_logits, emb, m, v, d);
-    let g_h = rmsnorm_bwd(h2d, norm_w, &g_hn, d);
+    drop(logits);
+    let g_hn = ks.matmul(&g_logits, emb, m, v, d);
+    let g_h = rmsnorm_bwd(ks, h2d, norm_w, &g_hn, d);
     (loss / m as f64, g_h)
 }
 
 /// Token embedding lookup: `tokens: [m] i32`, `emb: [V, d]` → `[m, d]`.
+/// Plain `Vec` — the result is an artifact output, not scratch.
 pub fn embed_fwd(tokens: &[i32], emb: &[f32], d: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; tokens.len() * d];
     for (i, &t) in tokens.iter().enumerate() {
@@ -734,18 +872,23 @@ mod tests {
         rng.normal_vec(n, std)
     }
 
+    fn ks() -> Kernels {
+        Kernels::for_tests()
+    }
+
     #[test]
     fn matmul_identity() {
         // A @ I == A, and transposed variants agree with matmul
+        let ks = ks();
         let mut rng = Rng::new(1);
         let a = randv(&mut rng, 3 * 4, 1.0);
         let mut eye = vec![0.0f32; 16];
         for i in 0..4 {
             eye[i * 4 + i] = 1.0;
         }
-        assert_eq!(matmul(&a, &eye, 3, 4, 4), a);
+        assert_eq!(&ks.matmul(&a, &eye, 3, 4, 4)[..], &a[..]);
         let b = randv(&mut rng, 4 * 5, 1.0);
-        let c = matmul(&a, &b, 3, 4, 5);
+        let c = ks.matmul(&a, &b, 3, 4, 5);
         // (aᵀ)ᵀ b via matmul_at on a manually transposed a
         let mut at = vec![0.0f32; 12];
         for i in 0..3 {
@@ -753,8 +896,8 @@ mod tests {
                 at[j * 3 + i] = a[i * 4 + j];
             }
         }
-        let c2 = matmul_at(&at, &b, 4, 3, 5);
-        for (x, y) in c.iter().zip(&c2) {
+        let c2 = ks.matmul_at(&at, &b, 4, 3, 5);
+        for (x, y) in c.iter().zip(&c2[..]) {
             assert!((x - y).abs() < 1e-5);
         }
         // a @ bᵀ via matmul_bt on manually transposed b
@@ -764,29 +907,30 @@ mod tests {
                 bt[j * 4 + i] = b[i * 5 + j];
             }
         }
-        let c3 = matmul_bt(&a, &bt, 3, 4, 5);
-        for (x, y) in c.iter().zip(&c3) {
+        let c3 = ks.matmul_bt(&a, &bt, 3, 4, 5);
+        for (x, y) in c.iter().zip(&c3[..]) {
             assert!((x - y).abs() < 1e-5);
         }
     }
 
     #[test]
     fn rmsnorm_bwd_matches_finite_difference() {
+        let ks = ks();
         let mut rng = Rng::new(2);
         let (m, d) = (3, 8);
         let x = randv(&mut rng, m * d, 1.0);
         let w = randv(&mut rng, d, 0.5);
         let g = randv(&mut rng, m * d, 1.0);
-        let analytic = rmsnorm_bwd(&x, &w, &g, d);
+        let analytic = rmsnorm_bwd(&ks, &x, &w, &g, d);
         let eps = 1e-2f32;
         for idx in [0, 5, m * d - 1] {
             let mut xp = x.clone();
             xp[idx] += eps;
             let mut xm = x.clone();
             xm[idx] -= eps;
-            let lp: f64 = rmsnorm(&xp, &w, d).iter().zip(&g)
+            let lp: f64 = rmsnorm(&ks, &xp, &w, d).iter().zip(&g)
                 .map(|(y, gg)| (*y as f64) * (*gg as f64)).sum();
-            let lm: f64 = rmsnorm(&xm, &w, d).iter().zip(&g)
+            let lm: f64 = rmsnorm(&ks, &xm, &w, d).iter().zip(&g)
                 .map(|(y, gg)| (*y as f64) * (*gg as f64)).sum();
             let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
             assert!(
@@ -799,12 +943,13 @@ mod tests {
 
     #[test]
     fn silu_mul_bwd_matches_finite_difference() {
+        let ks = ks();
         let mut rng = Rng::new(3);
         let n = 16;
         let gate = randv(&mut rng, n, 1.0);
         let up = randv(&mut rng, n, 1.0);
         let g = randv(&mut rng, n, 1.0);
-        let (dg, du) = silu_mul_bwd(&gate, &up, &g);
+        let (dg, du) = silu_mul_bwd(&ks, &gate, &up, &g);
         let eps = 1e-2f32;
         for idx in [0, 7, 15] {
             let mut gp = gate.clone();
@@ -812,7 +957,7 @@ mod tests {
             let mut gm = gate.clone();
             gm[idx] -= eps;
             let f = |gv: &[f32]| -> f64 {
-                silu_mul(gv, &up).iter().zip(&g)
+                silu_mul(&ks, gv, &up).iter().zip(&g)
                     .map(|(y, gg)| (*y as f64) * (*gg as f64)).sum()
             };
             let fd = ((f(&gp) - f(&gm)) / (2.0 * eps as f64)) as f32;
@@ -825,34 +970,37 @@ mod tests {
 
     #[test]
     fn rope_inverse_is_inverse() {
+        let ks = ks();
         let mut rng = Rng::new(4);
         let (b, h, n, hd) = (1, 2, 8, 8);
         let x = randv(&mut rng, b * h * n * hd, 1.0);
         let (cos, sin) = rope_tables(n, hd);
-        let fwd = apply_rope(&x, b, h, n, hd, &cos, &sin, false);
-        let back = apply_rope(&fwd, b, h, n, hd, &cos, &sin, true);
-        for (a, c) in x.iter().zip(&back) {
+        let fwd = apply_rope(&ks, &x, b, h, n, hd, &cos, &sin, false);
+        let back = apply_rope(&ks, &fwd, b, h, n, hd, &cos, &sin, true);
+        for (a, c) in x.iter().zip(&back[..]) {
             assert!((a - c).abs() < 1e-5, "{a} vs {c}");
         }
     }
 
     #[test]
     fn split_merge_heads_roundtrip() {
+        let ks = ks();
         let mut rng = Rng::new(5);
         let (b, n, h, hd) = (2, 4, 3, 5);
         let x = randv(&mut rng, b * n * h * hd, 1.0);
-        let back = merge_heads(&split_heads(&x, b, n, h, hd), b, h, n, hd);
-        assert_eq!(x, back);
+        let back = merge_heads(&ks, &split_heads(&ks, &x, b, n, h, hd), b, h, n, hd);
+        assert_eq!(&x[..], &back[..]);
     }
 
     #[test]
     fn attention_probs_are_causal_rows() {
+        let ks = ks();
         let mut rng = Rng::new(6);
         let (b, h, kv, n, hd) = (1, 4, 2, 6, 4);
         let q = randv(&mut rng, b * h * n * hd, 1.0);
         let k = randv(&mut rng, b * kv * n * hd, 1.0);
         let v = randv(&mut rng, b * kv * n * hd, 1.0);
-        let (_, probs) = attention_fwd(&q, &k, &v, b, h, kv, n, hd);
+        let (_, probs) = attention_fwd(&ks, &q, &k, &v, b, h, kv, n, hd);
         for hh in 0..h {
             for i in 0..n {
                 let row = &probs[(hh * n + i) * n..(hh * n + i + 1) * n];
@@ -869,16 +1017,17 @@ mod tests {
 
     #[test]
     fn attention_bwd_matches_finite_difference() {
+        let ks = ks();
         let mut rng = Rng::new(7);
         let (b, h, kv, n, hd) = (1, 2, 1, 4, 4);
         let q = randv(&mut rng, b * h * n * hd, 0.5);
         let k = randv(&mut rng, b * kv * n * hd, 0.5);
         let v = randv(&mut rng, b * kv * n * hd, 0.5);
         let g = randv(&mut rng, b * h * n * hd, 1.0);
-        let (_, probs) = attention_fwd(&q, &k, &v, b, h, kv, n, hd);
-        let (dq, dk, dv) = attention_bwd(&q, &k, &v, &probs, &g, b, h, kv, n, hd);
+        let (_, probs) = attention_fwd(&ks, &q, &k, &v, b, h, kv, n, hd);
+        let (dq, dk, dv) = attention_bwd(&ks, &q, &k, &v, &probs, &g, b, h, kv, n, hd);
         let loss = |q: &[f32], k: &[f32], v: &[f32]| -> f64 {
-            let (o, _) = attention_fwd(q, k, v, b, h, kv, n, hd);
+            let (o, _) = attention_fwd(&ks, q, k, v, b, h, kv, n, hd);
             o.iter().zip(&g).map(|(y, gg)| (*y as f64) * (*gg as f64)).sum()
         };
         let eps = 1e-2f32;
@@ -915,14 +1064,15 @@ mod tests {
 
     #[test]
     fn lm_loss_grad_matches_finite_difference() {
+        let ks = ks();
         let mut rng = Rng::new(8);
         let (m, d, v) = (4, 8, 16);
         let h = randv(&mut rng, m * d, 0.5);
         let w = vec![1.0f32; d];
         let emb = randv(&mut rng, v * d, 0.2);
         let targets: Vec<i32> = (0..m).map(|i| (i * 3 % v) as i32).collect();
-        let (loss, g_h) = lm_loss_grad(&h, &w, &emb, &targets, m, d, v);
-        let loss2 = lm_loss(&h, &w, &emb, &targets, m, d, v);
+        let (loss, g_h) = lm_loss_grad(&ks, &h, &w, &emb, &targets, m, d, v);
+        let loss2 = lm_loss(&ks, &h, &w, &emb, &targets, m, d, v);
         assert!((loss - loss2).abs() < 1e-9, "fwd and grad paths disagree");
         let eps = 1e-2f32;
         for idx in [0, 17, m * d - 1] {
@@ -930,8 +1080,8 @@ mod tests {
             hp[idx] += eps;
             let mut hm = h.clone();
             hm[idx] -= eps;
-            let fd = ((lm_loss(&hp, &w, &emb, &targets, m, d, v)
-                - lm_loss(&hm, &w, &emb, &targets, m, d, v))
+            let fd = ((lm_loss(&ks, &hp, &w, &emb, &targets, m, d, v)
+                - lm_loss(&ks, &hm, &w, &emb, &targets, m, d, v))
                 / (2.0 * eps as f64)) as f32;
             assert!(
                 (fd - g_h[idx]).abs() < 2e-2 * g_h[idx].abs().max(0.1),
@@ -943,6 +1093,7 @@ mod tests {
 
     #[test]
     fn lora_bwd_stored_equals_recomputed() {
+        let ks = ks();
         let mut rng = Rng::new(9);
         let (m, din, dout, r) = (6, 8, 10, 4);
         let x = randv(&mut rng, m * din, 0.5);
@@ -950,12 +1101,56 @@ mod tests {
         let w = randv(&mut rng, din * dout, 0.1);
         let a = randv(&mut rng, din * r, 0.3);
         let bb = randv(&mut rng, r * dout, 0.3);
-        let h = matmul(&x, &a, m, din, r);
-        let (gx1, da1, db1) = lora_bwd(&x, &g, &w, &a, &bb, 2.0, m, din, dout, r, None);
+        let h = ks.matmul(&x, &a, m, din, r);
+        let (gx1, da1, db1) =
+            lora_bwd(&ks, &x, &g, &w, &a, &bb, 2.0, m, din, dout, r, None);
         let (gx2, da2, db2) =
-            lora_bwd(&x, &g, &w, &a, &bb, 2.0, m, din, dout, r, Some(&h));
-        assert_eq!(gx1, gx2);
-        assert_eq!(da1, da2);
-        assert_eq!(db1, db2, "stored h must equal recomputed h exactly");
+            lora_bwd(&ks, &x, &g, &w, &a, &bb, 2.0, m, din, dout, r, Some(&h));
+        assert_eq!(&gx1[..], &gx2[..]);
+        assert_eq!(&da1[..], &da2[..]);
+        assert_eq!(&db1[..], &db2[..], "stored h must equal recomputed h exactly");
+    }
+
+    #[test]
+    fn block_scratch_returns_to_the_arena() {
+        // A forward's entire cache is arena scratch: dropping it releases
+        // every tracked byte and parks the capacity for the next call.
+        let tracker = crate::memory::MemoryTracker::new();
+        let ks = Kernels::new(
+            super::super::kernels::KernelOptions {
+                kind: crate::config::KernelKind::Tiled,
+                threads: 1,
+            },
+            tracker.clone(),
+        );
+        let d = crate::config::presets::compiled("toy").unwrap();
+        let mut rng = Rng::new(10);
+        let frozen_v: Vec<Vec<f32>> = crate::config::FROZEN
+            .iter()
+            .map(|w| randv(&mut rng, d.frozen_shape(w).iter().product(), 0.05))
+            .collect();
+        let lora_v: Vec<Vec<f32>> = crate::config::PROJS
+            .iter()
+            .flat_map(|p| {
+                let (din, dout) = d.proj_dims(p);
+                [randv(&mut rng, din * d.rank, 0.1),
+                 randv(&mut rng, d.rank * dout, 0.1)]
+            })
+            .collect();
+        let frozen: Vec<&[f32]> = frozen_v.iter().map(|v| v.as_slice()).collect();
+        let lora: Vec<&[f32]> = lora_v.iter().map(|v| v.as_slice()).collect();
+        let x = randv(&mut rng, d.m() * d.d_model, 0.5);
+        {
+            let c = block_forward(&ks, &d, &x, &frozen, &lora);
+            assert!(tracker.live() > 0, "cache bytes are tracked as scratch");
+            assert!(c.y.iter().all(|v| v.is_finite()));
+        }
+        assert_eq!(tracker.live(), 0, "dropping the cache frees all scratch");
+        assert!(tracker.tag_peak("scratch") > 0);
+        let before = ks.arena().stats().misses;
+        let c2 = block_forward(&ks, &d, &x, &frozen, &lora);
+        drop(c2);
+        let after = ks.arena().stats();
+        assert_eq!(after.misses, before, "second forward allocates nothing new");
     }
 }

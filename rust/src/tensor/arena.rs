@@ -1,0 +1,255 @@
+//! Reusable scratch-buffer arena for the kernel engine.
+//!
+//! Every intermediate the reference backend materializes inside one
+//! artifact call — recompute caches, GEMM outputs, packing panels,
+//! attention temporaries — is checked out of a [`TensorArena`] instead of
+//! being a fresh `Vec` allocation. This buys two things at once:
+//!
+//! 1. **Reuse** — returned buffers keep their capacity and are handed out
+//!    again on the next checkout, so steady-state training stops hitting
+//!    the allocator on the hot path.
+//! 2. **Accounting** — checked-out bytes are registered with the
+//!    session's [`MemoryTracker`] under the `scratch` tag for exactly as
+//!    long as they are live, so tracked step peaks (and the fleet's
+//!    admission budget, via `memory::model`'s scratch term) include the
+//!    working memory that dominates a real on-device backward pass.
+//!
+//! Buffers that must outlive the call (artifact outputs) escape the pool
+//! via [`ScratchBuf::into_vec`]; everything else returns its capacity on
+//! drop. The arena is `Sync`: the parallel GEMM kernel checks packing
+//! panels out from worker threads.
+
+use std::sync::{Arc, Mutex};
+
+use crate::memory::{Guard, MemoryTracker};
+
+/// Cumulative arena statistics (observability, not accounting).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ArenaStats {
+    /// Checkouts served by reusing a pooled buffer.
+    pub hits: u64,
+    /// Checkouts that had to allocate fresh capacity.
+    pub misses: u64,
+    /// Bytes currently parked in the pool (idle capacity).
+    pub pooled_bytes: u64,
+}
+
+#[derive(Debug, Default)]
+struct Pool {
+    /// Idle buffers, unordered; `take` picks the best capacity fit.
+    free: Vec<Vec<f32>>,
+    stats: ArenaStats,
+}
+
+/// Shared scratch pool. Cheap to clone (one `Arc`).
+#[derive(Debug, Clone)]
+pub struct TensorArena {
+    pool: Arc<Mutex<Pool>>,
+    tracker: MemoryTracker,
+}
+
+impl TensorArena {
+    /// An arena whose checkouts are charged to `tracker` under `scratch`.
+    pub fn new(tracker: MemoryTracker) -> TensorArena {
+        TensorArena { pool: Arc::new(Mutex::new(Pool::default())), tracker }
+    }
+
+    /// Check out a zeroed `len`-element f32 buffer.
+    pub fn take(&self, len: usize) -> ScratchBuf {
+        let mut data = {
+            let mut p = self.pool.lock().unwrap();
+            // Best-fit: smallest pooled capacity that holds `len`, so one
+            // huge buffer is not burned on a tiny checkout.
+            let mut best: Option<(usize, usize)> = None; // (index, capacity)
+            for (i, v) in p.free.iter().enumerate() {
+                if v.capacity() >= len
+                    && best.map(|(_, c)| v.capacity() < c).unwrap_or(true)
+                {
+                    best = Some((i, v.capacity()));
+                }
+            }
+            match best {
+                Some((i, _)) => {
+                    let v = p.free.swap_remove(i);
+                    p.stats.hits += 1;
+                    p.stats.pooled_bytes -= (v.capacity() * 4) as u64;
+                    v
+                }
+                None => {
+                    p.stats.misses += 1;
+                    Vec::new()
+                }
+            }
+        };
+        data.clear();
+        data.resize(len, 0.0);
+        let guard = self.tracker.track("scratch", (len * 4) as u64);
+        ScratchBuf { data, arena: Some(self.clone()), _guard: Some(guard) }
+    }
+
+    /// Check out a buffer initialized from a slice.
+    pub fn take_from(&self, src: &[f32]) -> ScratchBuf {
+        let mut b = self.take(src.len());
+        b.copy_from_slice(src);
+        b
+    }
+
+    fn give_back(&self, data: Vec<f32>) {
+        if data.capacity() == 0 {
+            return;
+        }
+        let mut p = self.pool.lock().unwrap();
+        p.stats.pooled_bytes += (data.capacity() * 4) as u64;
+        p.free.push(data);
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        self.pool.lock().unwrap().stats
+    }
+}
+
+/// A checked-out scratch buffer: derefs to `[f32]`, returns its capacity
+/// to the pool (and its tracked bytes to the tracker) on drop.
+#[derive(Debug)]
+pub struct ScratchBuf {
+    data: Vec<f32>,
+    arena: Option<TensorArena>,
+    _guard: Option<Guard>,
+}
+
+impl ScratchBuf {
+    /// Detach the underlying `Vec` for a buffer that escapes the call
+    /// (artifact outputs). The scratch bytes are released — the caller
+    /// re-tracks them under its own tag — and the capacity permanently
+    /// leaves the pool.
+    pub fn into_vec(mut self) -> Vec<f32> {
+        self.arena = None; // skip give_back in Drop
+        let _ = self._guard.take(); // release tracked bytes now
+        std::mem::take(&mut self.data)
+    }
+
+    /// Return the buffer to the pool NOW, before the owner goes out of
+    /// scope; the buffer becomes empty. The fused backward uses this to
+    /// free each cached tensor the moment its VJP consumed it — the
+    /// paper's "explicitly deallocate all intermediates" discipline, made
+    /// visible to the memory tracker.
+    pub fn release(&mut self) {
+        if let Some(arena) = self.arena.take() {
+            arena.give_back(std::mem::take(&mut self.data));
+        }
+        let _ = self._guard.take();
+    }
+}
+
+impl Drop for ScratchBuf {
+    fn drop(&mut self) {
+        if let Some(arena) = self.arena.take() {
+            arena.give_back(std::mem::take(&mut self.data));
+        }
+    }
+}
+
+impl std::ops::Deref for ScratchBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl std::ops::DerefMut for ScratchBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_tracks_scratch_bytes() {
+        let t = MemoryTracker::new();
+        let arena = TensorArena::new(t.clone());
+        {
+            let b = arena.take(100);
+            assert_eq!(b.len(), 100);
+            assert!(b.iter().all(|v| *v == 0.0));
+            assert_eq!(t.live(), 400);
+            assert_eq!(t.breakdown(), vec![("scratch".into(), 400)]);
+        }
+        assert_eq!(t.live(), 0, "drop releases the tracked bytes");
+    }
+
+    #[test]
+    fn pool_reuses_capacity() {
+        let arena = TensorArena::new(MemoryTracker::new());
+        {
+            let _a = arena.take(1000);
+        }
+        assert_eq!(arena.stats().pooled_bytes, 4000);
+        {
+            let mut b = arena.take(500); // fits in the pooled 1000-cap buf
+            b[0] = 1.0;
+        }
+        let s = arena.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 1);
+        {
+            let c = arena.take(700);
+            assert!(c.iter().all(|v| *v == 0.0), "reused buffers are zeroed");
+        }
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_buffer() {
+        let arena = TensorArena::new(MemoryTracker::new());
+        {
+            let _big = arena.take(10_000);
+            let _small = arena.take(128);
+        }
+        let b = arena.take(64);
+        assert!(b.data.capacity() < 10_000, "small checkout must not burn the big buffer");
+    }
+
+    #[test]
+    fn release_frees_early_and_pools_capacity() {
+        let t = MemoryTracker::new();
+        let arena = TensorArena::new(t.clone());
+        let mut b = arena.take(64);
+        b.release();
+        assert_eq!(t.live(), 0, "release frees the tracked bytes");
+        assert!(b.is_empty(), "released buffer is empty");
+        assert_eq!(arena.stats().pooled_bytes, 256);
+        b.release(); // idempotent
+        drop(b); // and dropping afterwards double-frees nothing
+        assert_eq!(arena.stats().pooled_bytes, 256);
+    }
+
+    #[test]
+    fn into_vec_escapes_the_pool() {
+        let t = MemoryTracker::new();
+        let arena = TensorArena::new(t.clone());
+        let v = arena.take(10).into_vec();
+        assert_eq!(v.len(), 10);
+        assert_eq!(t.live(), 0, "escaped buffers release their scratch tag");
+        assert_eq!(arena.stats().pooled_bytes, 0, "capacity left the pool");
+    }
+
+    #[test]
+    fn concurrent_checkouts_are_safe() {
+        let arena = TensorArena::new(MemoryTracker::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let arena = arena.clone();
+                s.spawn(move || {
+                    for i in 0..200 {
+                        let b = arena.take(64 + i);
+                        assert_eq!(b.len(), 64 + i);
+                    }
+                });
+            }
+        });
+        let s = arena.stats();
+        assert_eq!(s.hits + s.misses, 800);
+    }
+}

@@ -4,6 +4,10 @@
 //! this type only needs shape bookkeeping plus the small host-side ops the
 //! optimizer / MeZO / metrics require.
 
+pub mod arena;
+
+pub use arena::{ArenaStats, ScratchBuf, TensorArena};
+
 use crate::util::Rng;
 
 /// Element type of a tensor. Mirrors the `dtype` strings in manifest.json.

@@ -87,8 +87,10 @@ fn one_mebp_budget_serializes_mebp_but_overlaps_mesp() {
 
 #[test]
 fn predicted_cost_bounds_measured_session_peak() {
-    // The admission invariant hangs on this: a session's tracked peak
-    // must stay under its predicted cost for every method.
+    // The admission invariant hangs on this: a session's tracked peak —
+    // which now includes the kernel engine's arena scratch (recompute
+    // caches, GEMM packing panels) under the `scratch` tag — must stay
+    // under its predicted cost for every method.
     let base = base(3);
     for method in Method::ALL {
         let mut cfg = base.clone();
@@ -102,6 +104,11 @@ fn predicted_cost_bounds_measured_session_peak() {
             measured <= predicted,
             "{}: measured peak {measured} B exceeds predicted cost \
              {predicted} B — admission would overcommit",
+            method.name()
+        );
+        assert!(
+            sess.tracker.tag_peak("scratch") > 0,
+            "{}: tracked peak must include a nonzero scratch tag",
             method.name()
         );
     }

@@ -1,0 +1,241 @@
+//! Kernel-engine integration (ISSUE 3):
+//!
+//! 1. Property-style shape sweep — tiled and parallel GEMM must match the
+//!    naive oracle within tight tolerance on odd / non-tile-multiple
+//!    shapes, and parallel must be BITWISE identical to tiled at any
+//!    thread count.
+//! 2. Gradient parity per kernel variant: MeSP ↔ MeBP ↔ store-h stay
+//!    bitwise identical *within* each variant (the paper's §4 claim must
+//!    survive the kernel swap).
+//! 3. Scratch accounting: a training step's tracked peak includes a
+//!    nonzero `scratch` tag, and the analytical model's scratch term (at
+//!    tracked widths) bounds the measured arena high-water mark.
+//! 4. FLOP accounting: the measured per-artifact counter equals the
+//!    analytical inventory `mesp inspect` reports.
+
+use mesp::config::{presets, KernelKind, Method, OptimizerKind, TrainConfig};
+use mesp::coordinator::TrainSession;
+use mesp::memory::model as memmodel;
+use mesp::memory::{MemoryTracker, Widths};
+use mesp::model::ModelState;
+use mesp::runtime::{Arg, Backend, KernelOptions, Kernels, ReferenceBackend};
+use mesp::tensor::HostTensor;
+use mesp::util::Rng;
+
+fn engine(kind: KernelKind, threads: usize) -> Kernels {
+    Kernels::new(KernelOptions { kind, threads }, MemoryTracker::new())
+}
+
+#[test]
+fn shape_sweep_tiled_and_parallel_match_naive() {
+    // 60 random shapes, biased to odd and non-tile-multiple dims.
+    let naive = engine(KernelKind::Naive, 1);
+    let tiled = engine(KernelKind::Tiled, 1);
+    let parallel = engine(KernelKind::Parallel, 3);
+    let mut rng = Rng::new(42);
+    for case in 0..60u64 {
+        let m = 1 + rng.below(77);
+        let k = 1 + rng.below(300);
+        let n = 1 + rng.below(77);
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let tol = 1e-5f32 * (k as f32).sqrt().max(1.0);
+        let close = |x: &[f32], y: &[f32], what: &str| {
+            for (i, (p, q)) in x.iter().zip(y).enumerate() {
+                assert!(
+                    (p - q).abs() <= tol * p.abs().max(1.0),
+                    "case {case} {what} ({m}x{k}x{n}) elem {i}: {p} vs {q}"
+                );
+            }
+        };
+        // a @ b
+        let want = naive.matmul(&a, &b, m, k, n);
+        let got_t = tiled.matmul(&a, &b, m, k, n);
+        close(&want, &got_t, "matmul/tiled");
+        let got_p = parallel.matmul(&a, &b, m, k, n);
+        assert_eq!(&got_t[..], &got_p[..], "case {case}: parallel != tiled bitwise");
+        // aᵀ @ b  (a reinterpreted as [k=m, m=k] is wrong; use real dims)
+        let at = rng.normal_vec(k * m, 1.0);
+        close(
+            &naive.matmul_at(&at, &b, k, m, n),
+            &tiled.matmul_at(&at, &b, k, m, n),
+            "matmul_at/tiled",
+        );
+        // a @ bᵀ
+        let bt = rng.normal_vec(n * k, 1.0);
+        close(
+            &naive.matmul_bt(&a, &bt, m, k, n),
+            &tiled.matmul_bt(&a, &bt, m, k, n),
+            "matmul_bt/tiled",
+        );
+        let p_at = parallel.matmul_at(&at, &b, k, m, n);
+        let t_at = tiled.matmul_at(&at, &b, k, m, n);
+        assert_eq!(&t_at[..], &p_at[..], "case {case}: at parallel != tiled");
+    }
+}
+
+#[test]
+fn zeros_do_not_change_tiled_results() {
+    // The naive oracle's zero-skip is a correctness no-op; tiled/parallel
+    // must agree on inputs riddled with exact zeros (fresh LoRA B state).
+    let naive = engine(KernelKind::Naive, 1);
+    let tiled = engine(KernelKind::Tiled, 1);
+    let (m, k, n) = (9, 33, 14);
+    let mut rng = Rng::new(5);
+    let mut a = rng.normal_vec(m * k, 1.0);
+    for (i, v) in a.iter_mut().enumerate() {
+        if i % 3 == 0 {
+            *v = 0.0;
+        }
+    }
+    let b = vec![0.0f32; k * n]; // fully zero right operand
+    assert_eq!(&naive.matmul(&a, &b, m, k, n)[..], &vec![0.0f32; m * n][..]);
+    assert_eq!(&tiled.matmul(&a, &b, m, k, n)[..], &vec![0.0f32; m * n][..]);
+    let b2 = rng.normal_vec(k * n, 1.0);
+    let want = naive.matmul(&a, &b2, m, k, n);
+    let got = tiled.matmul(&a, &b2, m, k, n);
+    for (p, q) in want.iter().zip(&got[..]) {
+        assert!((p - q).abs() <= 1e-4 * p.abs().max(1.0));
+    }
+}
+
+fn grads_for(method: Method, kernel: KernelKind, seed: u64) -> Vec<Vec<f32>> {
+    let cfg = TrainConfig {
+        config: "toy".into(),
+        method,
+        kernel,
+        seed,
+        log_every: usize::MAX,
+        ..Default::default()
+    };
+    let mut sess = TrainSession::new(cfg).expect("session");
+    let (batch, _g) = sess.loader.next();
+    sess.engine.gradients(&batch).expect("gradients")
+}
+
+#[test]
+fn mesp_mebp_storeh_bitwise_identical_within_each_kernel() {
+    for kernel in KernelKind::ALL {
+        let mesp = grads_for(Method::Mesp, kernel, 3);
+        let mebp = grads_for(Method::Mebp, kernel, 3);
+        let storeh = grads_for(Method::StoreH, kernel, 3);
+        for (l, ((a, b), c)) in mesp.iter().zip(&mebp).zip(&storeh).enumerate() {
+            assert_eq!(
+                a, b,
+                "kernel {} layer {l}: MeSP != MeBP bitwise",
+                kernel.name()
+            );
+            assert_eq!(
+                a, c,
+                "kernel {} layer {l}: MeSP != store-h bitwise",
+                kernel.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_session_gradients_match_tiled_bitwise() {
+    // Thread-count independence end to end, not just per GEMM.
+    let tiled = grads_for(Method::Mesp, KernelKind::Tiled, 11);
+    let parallel = grads_for(Method::Mesp, KernelKind::Parallel, 11);
+    assert_eq!(tiled, parallel, "parallel must not change a single bit");
+}
+
+#[test]
+fn step_tracks_scratch_and_model_bounds_it() {
+    for method in [Method::Mesp, Method::Mebp, Method::Mezo] {
+        let cfg = TrainConfig {
+            config: "toy".into(),
+            method,
+            log_every: usize::MAX,
+            ..Default::default()
+        };
+        let mut sess = TrainSession::new(cfg).unwrap();
+        sess.run(2).unwrap();
+        let measured = sess.tracker.tag_peak("scratch");
+        assert!(
+            measured > 0,
+            "{}: tracked peak must include a nonzero scratch tag",
+            method.name()
+        );
+        let dims = presets::compiled("toy").unwrap();
+        let predicted = memmodel::peak(
+            method, &dims, OptimizerKind::Sgd, Widths::tracked(),
+        )
+        .scratch;
+        assert!(
+            measured <= predicted,
+            "{}: measured scratch {measured} B exceeds the model's scratch \
+             term {predicted} B",
+            method.name()
+        );
+    }
+}
+
+#[test]
+fn measured_flops_equal_analytical_inventory() {
+    let dims = presets::compiled("toy").unwrap();
+    let tracker = MemoryTracker::new();
+    let be = ReferenceBackend::new(dims.clone(), tracker.clone());
+    let model = ModelState::init(&dims, 17, &tracker);
+    let mut rng = Rng::new(23);
+    let x = HostTensor::randn(&[dims.batch, dims.seq, dims.d_model], 0.5, &mut rng);
+    let frozen: Vec<HostTensor> =
+        model.blocks[0].tensors.iter().map(|t| t.value.clone()).collect();
+    let lora: Vec<HostTensor> = model.lora[0]
+        .tensors
+        .iter()
+        .map(|t| HostTensor::randn(&t.shape, 0.1, &mut rng))
+        .collect();
+    let mut args: Vec<Arg> = vec![Arg::Host(&x)];
+    for t in &frozen {
+        args.push(Arg::Host(t));
+    }
+    for t in &lora {
+        args.push(Arg::Host(t));
+    }
+    be.execute("block_fwd", &args).unwrap();
+    let g = HostTensor::randn(&[dims.batch, dims.seq, dims.d_model], 0.5, &mut rng);
+    let mut bwd_args: Vec<Arg> = vec![Arg::Host(&x), Arg::Host(&g)];
+    for t in &frozen {
+        bwd_args.push(Arg::Host(t));
+    }
+    for t in &lora {
+        bwd_args.push(Arg::Host(t));
+    }
+    be.execute("block_bwd_mesp", &bwd_args).unwrap();
+
+    for name in ["block_fwd", "block_bwd_mesp"] {
+        let stats = be
+            .exec_stats()
+            .into_iter()
+            .find(|(n, _)| n == name)
+            .unwrap()
+            .1;
+        let analytic = mesp::runtime::kernels::flops::artifact(&dims, name);
+        assert_eq!(
+            stats.flops, analytic,
+            "{name}: measured flops diverged from the analytical inventory"
+        );
+        assert!(stats.flops > 0);
+        assert!(stats.gflops_per_sec() > 0.0);
+    }
+}
+
+#[test]
+fn session_exec_stats_report_flops() {
+    let cfg = TrainConfig {
+        config: "toy".into(),
+        log_every: usize::MAX,
+        ..Default::default()
+    };
+    let mut sess = TrainSession::new(cfg).unwrap();
+    sess.run(1).unwrap();
+    let stats = sess.engine.ctx().rt.exec_stats();
+    assert!(!stats.is_empty());
+    let bwd = stats.iter().find(|(n, _)| n == "block_bwd_mesp").unwrap();
+    assert!(bwd.1.flops > 0, "backward must report FLOPs");
+    let table = mesp::metrics::exec_stats_table(&stats);
+    assert!(table.contains("GFLOP/s"), "{table}");
+}
