@@ -137,8 +137,11 @@ def artifact_specs(cfg: ModelConfig):
                 "wg": ("gate",), "wu": ("up",), "wd": ("down",),
             }[name]
             din, dout = cfg.proj_dims(fz_shape[0])
+            # packed nibbles travel as uint8 ("u8" in the manifest) — the
+            # same dtype quant.quantize emits and the Rust reference
+            # backend's block_fwd_q4 spec declares.
             qargs.append((f"q_{name}", jax.ShapeDtypeStruct(
-                (din // 2, dout), jnp.int32)))
+                (din // 2, dout), jnp.uint8)))
             qargs.append((f"s_{name}", _f32((din // quant_mod.GROUP, dout))))
 
         def fwd_q4(*args):

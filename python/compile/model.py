@@ -494,16 +494,15 @@ def block_fwd_q4(cfg: ModelConfig, x, ln1, ln2, qpairs, lora):
     """Forward with int4 base weights. qpairs: flat
     [packed_wq, scales_wq, packed_wk, …] in QUANT_MATS order.
 
-    Packed nibbles travel as int32 (values 0..255): the runtime's xla
-    crate (0.1.6) mis-sizes U8 host buffers, so the ABI uses i32 and the
-    graph casts back to uint8 before dequantizing. Byte accounting for the
-    paper's tables still uses true int4 sizes (memory::model)."""
+    Packed nibbles travel as uint8 ("u8" in the manifest), matching
+    quant.quantize's output and the Rust reference backend's q4 specs.
+    (The historical i32 detour for the xla crate's U8 host-buffer bug is
+    gone: the Rust client routes Data::U8 through the literal path.)"""
     from . import quant
 
     deq = {}
     for i, name in enumerate(QUANT_MATS):
         packed, scales = qpairs[2 * i], qpairs[2 * i + 1]
-        packed = packed.astype(jnp.uint8)
         deq[name] = quant.dequantize(packed, scales)
     frozen = [ln1, deq["wq"], deq["wk"], deq["wv"], deq["wo"], ln2,
               deq["wg"], deq["wu"], deq["wd"]]

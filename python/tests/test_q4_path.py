@@ -83,5 +83,6 @@ def test_q4_artifact_in_manifest():
     assert names[0] == "x" and "q_wq" in names and "s_wd" in names
     qi = [a for a in spec["args"] if a["name"].startswith("q_")]
     assert len(qi) == len(M.QUANT_MATS)
-    # packed nibbles travel as i32 (xla-crate U8 buffer bug; see model.py)
-    assert all(a["dtype"] == "i32" for a in qi)
+    # packed nibbles travel as u8 — same dtype quant.quantize emits and
+    # the Rust reference backend's block_fwd_q4 spec declares
+    assert all(a["dtype"] == "u8" for a in qi)

@@ -1,11 +1,15 @@
 //! Bench: the kernel engine's GEMM variants (naive oracle vs tiled vs
 //! parallel) over the exact GEMM shapes a preset's training step issues —
-//! the seven LoRA projection GEMMs plus the tied-lm-head GEMMs.
+//! the seven LoRA projection GEMMs plus the tied-lm-head GEMMs — and the
+//! q4 fused-dequant variants over the same frozen-projection shapes
+//! (naive-q4 host-dequantizes per call; tiled/parallel-q4 dequantize
+//! panels inside packing).
 //!
-//! Emits a machine-readable section into `BENCH_kernels.json` at the repo
+//! Emits machine-readable sections into `BENCH_kernels.json` at the repo
 //! root so the perf trajectory is recorded PR-over-PR, and supports
 //! `--check` (used by the CI bench-smoke job) which exits nonzero if the
-//! tiled kernel fails to beat the naive oracle on the selected preset.
+//! tiled kernel fails to beat the naive oracle — f32 AND q4 — on the
+//! selected preset.
 //!
 //! Usage: cargo bench --bench kernels -- [--preset toy|small] [--check]
 
@@ -14,6 +18,8 @@ mod harness;
 
 use mesp::config::{presets, KernelKind, ModelDims, PROJS};
 use mesp::memory::MemoryTracker;
+use mesp::model::quant;
+use mesp::runtime::kernels::Q4View;
 use mesp::runtime::{KernelOptions, Kernels};
 use mesp::util::{Json, Rng};
 
@@ -38,6 +44,15 @@ fn shapes(d: &ModelDims) -> Vec<Shape> {
     v.push(Shape { m, k: d.d_model, n: d.vocab });
     v.push(Shape { m, k: d.vocab, n: d.d_model });
     v
+}
+
+/// The result for one kernel kind, looked up by kind (NOT by position,
+/// so reordering `KernelKind::ALL` can never mislabel a column).
+fn by_kind<'a>(
+    results: &'a [(KernelKind, harness::BenchResult)],
+    kind: KernelKind,
+) -> &'a harness::BenchResult {
+    &results.iter().find(|(k, _)| *k == kind).unwrap().1
 }
 
 /// Run the full GEMM set once on `ks` (matmul + both transposed forms on
@@ -93,9 +108,9 @@ fn main() {
         let r = harness::bench(&label, 3, iters, || run_set(&ks, &shapes, &data));
         results.push((kind, r));
     }
-    let naive = &results[0].1;
-    let tiled = &results[1].1;
-    let parallel = &results[2].1;
+    let naive = by_kind(&results, KernelKind::Naive);
+    let tiled = by_kind(&results, KernelKind::Tiled);
+    let parallel = by_kind(&results, KernelKind::Parallel);
     harness::ratio("tiled    vs naive", naive, tiled);
     harness::ratio("parallel vs naive", naive, parallel);
     let speedup_tiled = naive.mean_ms / tiled.mean_ms;
@@ -122,8 +137,81 @@ fn main() {
         ],
     );
 
+    // ---- q4 fused-dequant GEMMs over the frozen-projection shapes ----
+    // (the lm-head GEMMs stay f32 in training, so only the 7 projections)
+    let q4_shapes = &shapes[..PROJS.len()];
+    let q4_data: Vec<(Vec<f32>, Vec<u8>, Vec<f32>)> = q4_shapes
+        .iter()
+        .map(|s| {
+            let x = rng.normal_vec(s.m * s.k, 0.5);
+            let w = rng.normal_vec(s.k * s.n, 0.02);
+            let (packed, scales) = quant::quantize(&w, s.k, s.n);
+            (x, packed, scales)
+        })
+        .collect();
+    let q4_madds: usize = q4_shapes.iter().map(|s| s.m * s.k * s.n).sum::<usize>() * 2;
+    println!(
+        "\n== q4 kernel microbench: preset {preset}, {} fused-dequant GEMMs \
+         (fwd + bwd form), {:.1} MFLOP/set ==",
+        2 * q4_shapes.len(),
+        2.0 * q4_madds as f64 / 1e6
+    );
+    let mut q4_results = Vec::new();
+    // g operands for the backward form, one per shape: [m, n]
+    let q4_g: Vec<Vec<f32>> = {
+        let mut r2 = Rng::new(17);
+        q4_shapes.iter().map(|s| r2.normal_vec(s.m * s.n, 0.5)).collect()
+    };
+    for kind in KernelKind::ALL {
+        let ks = Kernels::new(
+            KernelOptions { kind, threads: 0 },
+            MemoryTracker::new(),
+        );
+        let label = format!("{preset}/q4-gemm-set/{}", kind.name());
+        let r = harness::bench(&label, 3, iters, || {
+            for ((s, (x, packed, scales)), g) in
+                q4_shapes.iter().zip(&q4_data).zip(&q4_g)
+            {
+                let w = Q4View::new(packed, scales, s.k, s.n);
+                std::hint::black_box(&ks.matmul_q4(x, w, s.m)[..]);
+                std::hint::black_box(&ks.matmul_bt_q4(g, w, s.m)[..]);
+            }
+        });
+        q4_results.push((kind, r));
+    }
+    let naive_q4 = by_kind(&q4_results, KernelKind::Naive);
+    let tiled_q4 = by_kind(&q4_results, KernelKind::Tiled);
+    let parallel_q4 = by_kind(&q4_results, KernelKind::Parallel);
+    harness::ratio("tiled-q4    vs naive-q4", naive_q4, tiled_q4);
+    harness::ratio("parallel-q4 vs naive-q4", naive_q4, parallel_q4);
+    let speedup_tiled_q4 = naive_q4.mean_ms / tiled_q4.mean_ms;
+    let speedup_parallel_q4 = naive_q4.mean_ms / parallel_q4.mean_ms;
+    println!(
+        "q4 speedup over naive-q4 (host dequant): tiled {speedup_tiled_q4:.2}x, \
+         parallel {speedup_parallel_q4:.2}x"
+    );
+
+    harness::write_bench_json(
+        &format!("kernels_microbench_q4_{preset}"),
+        vec![
+            ("naive_q4_ms".to_string(), Json::num(naive_q4.mean_ms)),
+            ("tiled_q4_ms".to_string(), Json::num(tiled_q4.mean_ms)),
+            ("parallel_q4_ms".to_string(), Json::num(parallel_q4.mean_ms)),
+            ("speedup_tiled_q4".to_string(), Json::num(speedup_tiled_q4)),
+            (
+                "speedup_parallel_q4".to_string(),
+                Json::num(speedup_parallel_q4),
+            ),
+            (
+                "gflop_per_set".to_string(),
+                Json::num(2.0 * q4_madds as f64 / 1e9),
+            ),
+        ],
+    );
+
     if check {
-        // CI gate: the production kernel must not regress below the oracle.
+        // CI gate: the production kernels must not regress below their
+        // oracles — fused panel dequant must beat full host dequant too.
         if speedup_tiled < 1.0 {
             eprintln!(
                 "CHECK FAILED: tiled ({:.3} ms) slower than naive ({:.3} ms)",
@@ -131,6 +219,17 @@ fn main() {
             );
             std::process::exit(1);
         }
-        println!("check passed: tiled beats naive ({speedup_tiled:.2}x)");
+        if speedup_tiled_q4 < 1.0 {
+            eprintln!(
+                "CHECK FAILED: tiled-q4 ({:.3} ms) slower than naive-q4 \
+                 ({:.3} ms)",
+                tiled_q4.mean_ms, naive_q4.mean_ms
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "check passed: tiled beats naive ({speedup_tiled:.2}x f32, \
+             {speedup_tiled_q4:.2}x q4)"
+        );
     }
 }

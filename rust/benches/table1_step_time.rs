@@ -11,17 +11,28 @@
 #[path = "harness.rs"]
 mod harness;
 
-use mesp::config::{KernelKind, Method, TrainConfig};
+use mesp::config::{KernelKind, Method, QuantMode, TrainConfig};
 use mesp::coordinator::TrainSession;
 use mesp::util::Json;
 
 fn step_bench(config: &str, method: Method, kernel: KernelKind, iters: usize)
     -> harness::BenchResult
 {
+    step_bench_q(config, method, kernel, QuantMode::F32, iters)
+}
+
+fn step_bench_q(
+    config: &str,
+    method: Method,
+    kernel: KernelKind,
+    quant: QuantMode,
+    iters: usize,
+) -> harness::BenchResult {
     let cfg = TrainConfig {
         config: config.into(),
         method,
         kernel,
+        quant,
         log_every: usize::MAX,
         ..Default::default()
     };
@@ -29,7 +40,8 @@ fn step_bench(config: &str, method: Method, kernel: KernelKind, iters: usize)
     // pre-fetch a batch and reuse it so data time is excluded
     let (batch, _g) = sess.loader.next();
     harness::bench(
-        &format!("{config}/step/{}/{}", method.name(), kernel.name()),
+        &format!("{config}/step/{}/{}/{}", method.name(), kernel.name(),
+                 quant.name()),
         2,
         iters,
         || {
@@ -74,6 +86,34 @@ fn main() {
                 (
                     "threads".to_string(),
                     Json::num(mesp::runtime::kernels::auto_threads() as u32),
+                ),
+            ],
+        );
+    }
+
+    println!("== q4 path: MeSP step, f32 vs int4-resident base weights ==");
+    for config in ["toy", "small"] {
+        let iters = if config == "toy" { 20 } else { 10 };
+        let f32_step = step_bench_q(
+            config, Method::Mesp, KernelKind::Parallel, QuantMode::F32, iters,
+        );
+        let q4_step = step_bench_q(
+            config, Method::Mesp, KernelKind::Parallel, QuantMode::Q4, iters,
+        );
+        harness::ratio("q4 step vs f32", &f32_step, &q4_step);
+        println!(
+            "{config}: q4/f32 step-time ratio {:.2} (fused panel dequant \
+             overhead)\n",
+            q4_step.mean_ms / f32_step.mean_ms
+        );
+        harness::write_bench_json(
+            &format!("table1_step_time_q4_{config}"),
+            vec![
+                ("f32_ms".to_string(), Json::num(f32_step.mean_ms)),
+                ("q4_ms".to_string(), Json::num(q4_step.mean_ms)),
+                (
+                    "q4_over_f32".to_string(),
+                    Json::num(q4_step.mean_ms / f32_step.mean_ms),
                 ),
             ],
         );

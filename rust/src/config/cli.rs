@@ -114,16 +114,18 @@ impl Args {
 pub const TRAIN_FLAGS: &[&str] = &[
     "config", "backend", "method", "steps", "lr", "seed", "optimizer",
     "mezo-eps", "log-every", "spill-limit", "metrics", "artifacts",
-    "kernel", "threads",
+    "kernel", "threads", "quant",
 ];
 pub const FLEET_FLAGS: &[&str] = &[
     "config", "backend", "methods", "steps", "lr", "seed", "optimizer",
     "budget-mb", "jobs", "workers", "job-file", "artifacts",
-    "kernel", "threads",
+    "kernel", "threads", "quant",
 ];
 pub const SIMULATE_FLAGS: &[&str] = &["model", "seq", "rank", "breakdown"];
-pub const GRADCHECK_FLAGS: &[&str] =
-    &["config", "backend", "seeds", "tol", "artifacts", "kernel", "threads"];
+pub const GRADCHECK_FLAGS: &[&str] = &[
+    "config", "backend", "seeds", "tol", "artifacts", "kernel", "threads",
+    "quant",
+];
 pub const MEZO_QUALITY_FLAGS: &[&str] = &["config"];
 pub const REPRODUCE_FLAGS: &[&str] = &["table", "fig", "all", "steps", "out"];
 pub const INSPECT_FLAGS: &[&str] = &["config", "backend", "artifacts"];
@@ -155,19 +157,21 @@ COMMANDS
               --optimizer sgd|momentum|adam  --mezo-eps F  --log-every N
               --metrics PATH.jsonl  --spill-limit BYTES  --artifacts DIR
               --kernel naive|tiled|parallel  --threads N (0 = all cores)
+              --quant f32|q4 (q4: frozen base weights stay int4-packed
+              for the whole session, dequantized inside the kernels)
   fleet       Run many sessions concurrently under a device memory budget
               (admission control via the analytical peak-memory model).
               --budget-mb N  --jobs N  --workers N  --config toy|small
               --methods mesp,mebp|all  --steps N  --lr F  --seed N
               --optimizer sgd|momentum|adam  --job-file PATH.jsonl
-              --backend reference|pjrt  --artifacts DIR
+              --backend reference|pjrt  --artifacts DIR  --quant f32|q4
               --kernel naive|tiled|parallel  --threads N (0 = auto:
               cores/workers, so jobs never oversubscribe the machine)
   simulate    Evaluate the analytical memory model at Qwen2.5 dims.
               --model 0.5b|1.5b|3b  --seq N  --rank N  [--breakdown]
   gradcheck   Assert MeSP ≡ MeBP ≡ store-h gradients on a runnable config.
               --config toy  --backend reference|pjrt  --seeds N  --tol F
-              --kernel naive|tiled|parallel  --threads N
+              --kernel naive|tiled|parallel  --threads N  --quant f32|q4
   mezo-quality  Gradient-quality analysis (Table 3). --config small
   reproduce   Regenerate paper tables. --table 1..11 | --fig 2 | --all
               [--steps N]  [--out FILE]

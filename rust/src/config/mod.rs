@@ -15,6 +15,10 @@ pub const PROJS: [&str; 7] = ["q", "k", "v", "o", "gate", "up", "down"];
 pub const FROZEN: [&str; 9] =
     ["ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd"];
 
+/// The seven frozen matrices the q4 path keeps int4-packed, in the q4
+/// artifact ABI order (FROZEN minus the two RMSNorm gain vectors).
+pub const QUANT_MATS: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
+
 /// Training method — the paper's three systems plus the Table-5 ablation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Method {
@@ -96,6 +100,40 @@ impl BackendKind {
         match self {
             BackendKind::Reference => "reference",
             BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Precision of the frozen base weights a training session keeps
+/// resident (paper §4.5). `F32` uploads the full-precision matrices;
+/// `Q4` packs the seven projection matrices int4 (two weights per byte +
+/// per-group scales via `model::quant`) and keeps them packed for the
+/// whole session — every frozen-weight GEMM, forward and backward,
+/// dequantizes panels on the fly inside the kernel. Norm gains, the
+/// embedding and all LoRA adapters stay f32 in both modes, so gradients
+/// w.r.t. A/B remain exact for the quantized forward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QuantMode {
+    #[default]
+    F32,
+    Q4,
+}
+
+impl QuantMode {
+    pub const ALL: [QuantMode; 2] = [QuantMode::F32, QuantMode::Q4];
+
+    pub fn parse(s: &str) -> anyhow::Result<QuantMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "none" => Ok(QuantMode::F32),
+            "q4" | "int4" => Ok(QuantMode::Q4),
+            _ => anyhow::bail!("unknown quant mode '{s}' (f32|q4)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantMode::F32 => "f32",
+            QuantMode::Q4 => "q4",
         }
     }
 }
@@ -291,6 +329,8 @@ pub struct TrainConfig {
     /// Kernel threads for the `parallel` kernel (0 = auto: all cores for
     /// a lone session; the fleet scheduler divides cores by workers).
     pub threads: usize,
+    /// Resident precision of the frozen base weights (`--quant f32|q4`).
+    pub quant: QuantMode,
 }
 
 impl Default for TrainConfig {
@@ -310,6 +350,7 @@ impl Default for TrainConfig {
             artifacts_dir: "artifacts".into(),
             kernel: KernelKind::default(),
             threads: 0,
+            quant: QuantMode::default(),
         }
     }
 }
@@ -383,6 +424,16 @@ mod tests {
         assert!(KernelKind::parse("blocked").is_err());
         assert_eq!(TrainConfig::default().kernel, KernelKind::Parallel);
         assert_eq!(TrainConfig::default().threads, 0, "0 = auto");
+    }
+
+    #[test]
+    fn quant_parse_roundtrip() {
+        for q in QuantMode::ALL {
+            assert_eq!(QuantMode::parse(q.name()).unwrap(), q);
+        }
+        assert_eq!(QuantMode::parse("int4").unwrap(), QuantMode::Q4);
+        assert!(QuantMode::parse("q8").is_err());
+        assert_eq!(TrainConfig::default().quant, QuantMode::F32);
     }
 
     #[test]

@@ -81,7 +81,8 @@ impl TrainSession {
         let rt = make_backend(&cfg, tracker.clone())?;
         let dims = rt.dims().clone();
         let ctx = EngineCtx::new(rt, derive(cfg.seed, stream::MODEL),
-                                 cfg.optimizer, cfg.lr, cfg.spill_limit);
+                                 cfg.optimizer, cfg.lr, cfg.spill_limit,
+                                 cfg.quant)?;
         let engine = build_engine(cfg.method, ctx, cfg.mezo_eps)?;
         let loader = PrefetchLoader::spawn(
             dims.vocab, dims.batch, dims.seq,

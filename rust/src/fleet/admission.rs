@@ -22,17 +22,20 @@ use crate::util::stats::fmt_mb;
 use super::job::JobSpec;
 
 /// Predicted peak tracked bytes for one session running `spec`:
-/// the analytical per-method activation/gradient peak (tracked widths)
-/// + the resident f32 weight uploads (the reference backend keeps the
-///   full frozen model on-device; the analytical model only charges
-///   per-block dequant buffers)
+/// the analytical per-method activation/gradient peak (tracked widths,
+///   quant-aware: q4 adds the naive-oracle dequant-buffer scratch)
+/// + the resident weight uploads at the job's quant mode (the reference
+///   backend keeps the frozen model on-device; under q4 the projections
+///   stay int4-packed, which is the term that lets one budget overlap
+///   more quantized jobs)
 /// + the prefetch queue's batch buffers.
 pub fn job_cost_bytes(spec: &JobSpec) -> anyhow::Result<u64> {
     let dims = presets::compiled(&spec.config)?;
-    let activations =
-        memmodel::peak(spec.method, &dims, spec.optimizer, Widths::tracked())
-            .total();
-    let weights = dims.frozen_params_total() as u64 * 4;
+    let activations = memmodel::peak_q(
+        spec.method, &dims, spec.optimizer, Widths::tracked(), spec.quant,
+    )
+    .total();
+    let weights = memmodel::resident_weight_bytes(&dims, spec.quant);
     let batch_bytes = 2 * (dims.batch * dims.seq * 4) as u64; // tokens+targets i32
     let queue = (PREFETCH_DEPTH as u64 + 2) * batch_bytes;
     Ok(activations + weights + queue)
@@ -178,6 +181,20 @@ mod tests {
         let mesp = job_cost_bytes(&spec(Method::Mesp)).unwrap();
         let mebp = job_cost_bytes(&spec(Method::Mebp)).unwrap();
         assert!(mesp < mebp, "MeSP {mesp} !< MeBP {mebp}");
+    }
+
+    #[test]
+    fn q4_jobs_cost_less_than_f32_twins() {
+        // The packed resident-weight term shrinks the charge, even after
+        // the q4 oracle-dequant scratch term is added.
+        for method in Method::ALL {
+            let f32_spec = spec(method);
+            let mut q4_spec = spec(method);
+            q4_spec.quant = crate::config::QuantMode::Q4;
+            let f = job_cost_bytes(&f32_spec).unwrap();
+            let q = job_cost_bytes(&q4_spec).unwrap();
+            assert!(q < f, "{}: q4 cost {q} !< f32 cost {f}", method.name());
+        }
     }
 
     #[test]

@@ -6,7 +6,7 @@
 
 use std::path::Path;
 
-use crate::config::{Method, OptimizerKind, TrainConfig};
+use crate::config::{Method, OptimizerKind, QuantMode, TrainConfig};
 use crate::util::rng::{derive, stream};
 use crate::util::Json;
 
@@ -15,7 +15,7 @@ use crate::util::Json;
 /// `from_json`'s match must accept exactly this set (asserted by the
 /// `job_keys_list_matches_parser` test).
 pub const JOB_KEYS: &[&str] =
-    &["config", "method", "steps", "seed", "lr", "optimizer"];
+    &["config", "method", "steps", "seed", "lr", "optimizer", "quant"];
 
 /// A JSON number that must be a non-negative integer (seeds, step
 /// counts): floats with fractional parts, negatives, and values beyond
@@ -41,6 +41,10 @@ pub struct JobSpec {
     pub seed: u64,
     pub lr: f32,
     pub optimizer: OptimizerKind,
+    /// Resident precision of the job's frozen base weights — admission
+    /// charges the packed footprint under `q4`, so the same budget
+    /// overlaps more quantized jobs.
+    pub quant: QuantMode,
 }
 
 impl JobSpec {
@@ -53,6 +57,7 @@ impl JobSpec {
             seed: base.seed,
             lr: base.lr,
             optimizer: base.optimizer,
+            quant: base.quant,
         }
     }
 
@@ -99,6 +104,12 @@ impl JobSpec {
                             .ok_or_else(|| anyhow::anyhow!("'optimizer' must be a string"))?,
                     )?;
                 }
+                "quant" => {
+                    spec.quant = QuantMode::parse(
+                        v.as_str()
+                            .ok_or_else(|| anyhow::anyhow!("'quant' must be a string"))?,
+                    )?;
+                }
                 other => anyhow::bail!(
                     "unknown job key '{other}' (known: {})",
                     JOB_KEYS.join(", ")
@@ -118,6 +129,7 @@ impl JobSpec {
             seed: self.seed,
             lr: self.lr,
             optimizer: self.optimizer,
+            quant: self.quant,
             ..base.clone()
         }
     }
@@ -249,6 +261,7 @@ mod tests {
             ("seed", "7"),
             ("lr", "0.01"),
             ("optimizer", "\"adam\""),
+            ("quant", "\"q4\""),
         ] {
             assert!(JOB_KEYS.contains(&key), "test table missing {key}");
             let j = Json::parse(&format!("{{\"{key}\": {val}}}")).unwrap();
@@ -257,7 +270,19 @@ mod tests {
                 "advertised key '{key}' rejected"
             );
         }
-        assert_eq!(JOB_KEYS.len(), 6, "update the table when adding keys");
+        assert_eq!(JOB_KEYS.len(), 7, "update the table when adding keys");
+    }
+
+    #[test]
+    fn quant_key_parses_and_inherits() {
+        let j = Json::parse(r#"{"quant": "q4"}"#).unwrap();
+        let spec = JobSpec::from_json(&j, &base()).unwrap();
+        assert_eq!(spec.quant, QuantMode::Q4);
+        let j = Json::parse(r#"{"method": "mebp"}"#).unwrap();
+        assert_eq!(JobSpec::from_json(&j, &base()).unwrap().quant,
+                   QuantMode::F32, "inherits the base quant mode");
+        let j = Json::parse(r#"{"quant": "q8"}"#).unwrap();
+        assert!(JobSpec::from_json(&j, &base()).is_err());
     }
 
     #[test]

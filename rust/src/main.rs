@@ -9,7 +9,9 @@
 use std::path::Path;
 
 use mesp::config::cli::{Args, USAGE};
-use mesp::config::{presets, BackendKind, KernelKind, Method, OptimizerKind, TrainConfig};
+use mesp::config::{
+    presets, BackendKind, KernelKind, Method, OptimizerKind, QuantMode, TrainConfig,
+};
 use mesp::coordinator::TrainSession;
 use mesp::fleet::{self, FleetOptions, Scheduler};
 use mesp::memory::model as memmodel;
@@ -68,6 +70,7 @@ fn train_config(args: &Args) -> anyhow::Result<TrainConfig> {
         artifacts_dir: args.str("artifacts", "artifacts"),
         kernel: KernelKind::parse(&args.str("kernel", "parallel"))?,
         threads: args.usize("threads", 0)?,
+        quant: QuantMode::parse(&args.str("quant", "f32"))?,
     })
 }
 
@@ -75,16 +78,26 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = train_config(args)?;
     let steps = cfg.steps;
     let method = cfg.method;
+    let quant = cfg.quant;
     println!(
         "training config={} backend={} method={} steps={} lr={} \
-         optimizer={:?} kernel={} threads={}",
+         optimizer={:?} kernel={} threads={} quant={}",
         cfg.config, cfg.backend.name(), method.name(), steps, cfg.lr,
         cfg.optimizer, cfg.kernel.name(),
-        if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() }
+        if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() },
+        quant.name()
     );
     let mut sess = TrainSession::new(cfg)?;
     let summary = sess.run(steps)?;
     summary.print(method.name());
+    // The deployment number the q4 path exists for: how many bytes of
+    // base weights stay resident for the whole session.
+    let resident = sess.tracker.tag_bytes("weights:device");
+    println!(
+        "resident base weights ({}): {} MB",
+        quant.name(),
+        fmt_mb(resident)
+    );
     println!("\nper-artifact execution stats:");
     print!("{}", mesp::metrics::exec_stats_table(&sess.engine.ctx().rt.exec_stats()));
     Ok(())
@@ -103,6 +116,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         kernel: KernelKind::parse(&args.str("kernel", "parallel"))?,
         // 0 = auto: the scheduler divides cores by its worker count
         threads: args.usize("threads", 0)?,
+        quant: QuantMode::parse(&args.str("quant", "f32"))?,
         ..Default::default()
     };
     let budget_mb = args.u64("budget-mb", 1024)?;
@@ -129,8 +143,9 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         }
     };
     println!(
-        "fleet: {} jobs on config {} | budget {budget_mb} MB | {} workers",
-        jobs.len(), base.config, opts.workers
+        "fleet: {} jobs on config {} | budget {budget_mb} MB | {} workers \
+         | quant {}",
+        jobs.len(), base.config, opts.workers, base.quant.name()
     );
     let report = Scheduler::run(&opts, &base, jobs)?;
     print!("{}", report.render());
@@ -175,6 +190,7 @@ fn cmd_gradcheck(args: &Args) -> anyhow::Result<()> {
             artifacts_dir: args.str("artifacts", "artifacts"),
             kernel: KernelKind::parse(&args.str("kernel", "parallel"))?,
             threads: args.usize("threads", 0)?,
+            quant: QuantMode::parse(&args.str("quant", "f32"))?,
             ..Default::default()
         };
         let mut grads = Vec::new();
@@ -268,11 +284,20 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
     for a in &artifacts {
         // Analytical nominal FLOPs per call — inspect never executes, so
         // this is the same inventory the kernel engine instruments live.
+        // The weight-bytes column is the byte half of the FLOP/byte
+        // story: `_q4` artifacts stream ~1/7 of the frozen bytes their
+        // f32 twins do at identical FLOPs.
         let gflop =
             mesp::runtime::kernels::flops::artifact(&dims, &a.name) as f64 / 1e9;
-        println!("  {:<22} {:>2} args -> {:>2} outputs  {:>8.3} GFLOP/call  ({})",
-                 a.name, a.args.len(), a.outputs, gflop,
-                 a.file.file_name().unwrap_or_default().to_string_lossy());
+        let wmb = mesp::runtime::kernels::flops::artifact_weight_bytes(&dims, &a.name)
+            as f64
+            / (1024.0 * 1024.0);
+        println!(
+            "  {:<26} {:>2} args -> {:>2} outputs  {:>8.3} GFLOP/call  \
+             {:>7.2} W-MB/call  ({})",
+            a.name, a.args.len(), a.outputs, gflop, wmb,
+            a.file.file_name().unwrap_or_default().to_string_lossy()
+        );
     }
     Ok(())
 }

@@ -5,5 +5,8 @@
 pub mod model;
 pub mod tracker;
 
-pub use model::{peak, peak_bytes, reduction_vs_mebp, Breakdown, Widths};
+pub use model::{
+    peak, peak_bytes, peak_q, reduction_vs_mebp, resident_weight_bytes,
+    Breakdown, Widths,
+};
 pub use tracker::{Guard, MemoryTracker, Tracked};

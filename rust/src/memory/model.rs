@@ -16,7 +16,8 @@
 //!   MeZO:               second perturbed forward (z + perturbation state
 //!                       live alongside inference activations).
 
-use crate::config::{Method, ModelDims, OptimizerKind, PROJS};
+use crate::config::{Method, ModelDims, OptimizerKind, QuantMode, PROJS};
+use crate::model::quant;
 
 /// Byte widths per tensor class. The two instantiations are
 /// `Widths::paper()` and `Widths::tracked()`.
@@ -268,8 +269,41 @@ fn reference_scratch(method: Method, d: &ModelDims) -> u64 {
 /// way so the Table-5 delta is comparable.
 const ALLOC_BUCKET: u64 = 128 << 10;
 
-/// Peak-memory breakdown for `method` at dims `d`.
+/// Always-resident base-weight bytes of one reference-backend session:
+/// embedding + final norm + every block's frozen weights, at the given
+/// resident precision. Under [`QuantMode::Q4`] the seven projection
+/// matrices stay int4-packed (`quant::quantized_bytes`: nibbles + group
+/// scales ≈ 0.56 B/param) while norm gains and the tied embedding stay
+/// f32 — this is the per-method resident term `fleet::admission` charges,
+/// and what lets one budget admit substantially more q4 jobs.
+pub fn resident_weight_bytes(d: &ModelDims, quant_mode: QuantMode) -> u64 {
+    let emb = (d.vocab * d.d_model + d.d_model) as u64 * 4;
+    let per_block: u64 = match quant_mode {
+        QuantMode::F32 => d.frozen_params_per_block() as u64 * 4,
+        QuantMode::Q4 => quant::packed_block_bytes(d),
+    };
+    emb + per_block * d.n_layers as u64
+}
+
+/// Peak-memory breakdown for `method` at dims `d` (f32-resident weights;
+/// see [`peak_q`] for the quant-aware variant).
 pub fn peak(method: Method, d: &ModelDims, opt: OptimizerKind, w: Widths) -> Breakdown {
+    peak_q(method, d, opt, w, QuantMode::F32)
+}
+
+/// Quant-aware peak breakdown. The activation inventory is identical in
+/// both modes (LoRA math and intermediates are f32 either way); q4 adds
+/// one scratch term: the naive-oracle kernel host-dequantizes a FULL
+/// projection matrix into arena scratch per GEMM, so the bound must
+/// cover the largest frozen matrix (the fused tiled/parallel kernels
+/// need only their packing panels, which are already charged).
+pub fn peak_q(
+    method: Method,
+    d: &ModelDims,
+    opt: OptimizerKind,
+    w: Widths,
+    quant_mode: QuantMode,
+) -> Breakdown {
     let m = d.m() as u64;
     let lora = d.lora_params_total() as u64;
     let logits = m * d.vocab as u64;
@@ -292,6 +326,11 @@ pub fn peak(method: Method, d: &ModelDims, opt: OptimizerKind, w: Widths) -> Bre
         runtime: w.runtime_const,
         ..Default::default()
     };
+    if quant_mode == QuantMode::Q4 {
+        // The naive-q4 oracle's full-matrix host-dequant buffer (one
+        // projection at a time, arena `scratch` tag). 0 at paper widths.
+        b.scratch += largest_proj * w.scratch;
+    }
 
     match method {
         Method::Mesp | Method::StoreH => {
@@ -453,6 +492,45 @@ mod tests {
         let mesp = peak(Method::Mesp, &d, OptimizerKind::Sgd, Widths::tracked());
         let mezo = peak(Method::Mezo, &d, OptimizerKind::Sgd, Widths::tracked());
         assert!(mesp.scratch >= mezo.scratch);
+    }
+
+    #[test]
+    fn q4_residents_well_under_half_of_f32() {
+        use crate::config::presets::compiled;
+        for name in ["toy", "small", "e2e100m"] {
+            let d = compiled(name).unwrap();
+            let f = resident_weight_bytes(&d, QuantMode::F32);
+            let q = resident_weight_bytes(&d, QuantMode::Q4);
+            assert!(q < f / 2, "{name}: q4 residents {q} !< f32 {f} / 2");
+            // packed blocks alone are ~0.56 B/param; the f32 embedding
+            // keeps the total above the naive 1/8 ratio
+            assert!(q > f / 10, "{name}: q4 residents {q} implausibly small");
+        }
+        // q4 applies to the Qwen sim presets too (group-divisible dims)
+        let d = presets::qwen25_05b(256, 8);
+        assert!(resident_weight_bytes(&d, QuantMode::Q4)
+            < resident_weight_bytes(&d, QuantMode::F32) / 2);
+    }
+
+    #[test]
+    fn q4_scratch_adds_the_oracle_dequant_buffer() {
+        use crate::config::presets::compiled;
+        let d = compiled("toy").unwrap();
+        let f32_peak =
+            peak_q(Method::Mesp, &d, OptimizerKind::Sgd, Widths::tracked(),
+                   QuantMode::F32);
+        let q4_peak =
+            peak_q(Method::Mesp, &d, OptimizerKind::Sgd, Widths::tracked(),
+                   QuantMode::Q4);
+        assert!(q4_peak.scratch > f32_peak.scratch);
+        // paper-width tables must not move under q4 (scratch width 0)
+        let paper_f32 =
+            peak_q(Method::Mesp, &d, OptimizerKind::Sgd, Widths::paper(),
+                   QuantMode::F32);
+        let paper_q4 =
+            peak_q(Method::Mesp, &d, OptimizerKind::Sgd, Widths::paper(),
+                   QuantMode::Q4);
+        assert_eq!(paper_f32.total(), paper_q4.total());
     }
 
     #[test]

@@ -146,6 +146,17 @@ impl MemoryTracker {
             .collect()
     }
 
+    /// Live bytes currently tracked under `tag` (0 for unknown tags).
+    pub fn tag_bytes(&self, tag: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .tags
+            .get(tag)
+            .copied()
+            .unwrap_or(0)
+    }
+
     /// High-water mark of live bytes ever reached under `tag` (0 if the
     /// tag was never tracked). Not affected by [`Self::reset_peak`].
     pub fn tag_peak(&self, tag: &str) -> u64 {
@@ -212,6 +223,21 @@ impl<T> std::ops::Deref for Tracked<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tag_bytes_tracks_per_tag_live() {
+        let t = MemoryTracker::new();
+        let a = t.track("w", 100);
+        let b = t.track("w", 20);
+        let _c = t.track("x", 7);
+        assert_eq!(t.tag_bytes("w"), 120);
+        assert_eq!(t.tag_bytes("x"), 7);
+        assert_eq!(t.tag_bytes("nope"), 0);
+        drop(b);
+        assert_eq!(t.tag_bytes("w"), 100);
+        drop(a);
+        assert_eq!(t.tag_bytes("w"), 0);
+    }
 
     #[test]
     fn live_and_peak() {

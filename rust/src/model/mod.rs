@@ -10,12 +10,14 @@
 
 pub mod quant;
 
-use crate::config::{ModelDims, FROZEN, PROJS};
+use crate::config::{ModelDims, QuantMode, FROZEN, PROJS, QUANT_MATS};
 use crate::memory::{MemoryTracker, Tracked};
 use crate::tensor::HostTensor;
 use crate::util::Rng;
 
-/// One block's frozen weights, in artifact ABI order (FROZEN).
+/// One block's frozen weights in artifact ABI order: FROZEN ×9 under
+/// f32, or `[ln1, ln2, (packed u8, scales f32) × QUANT_MATS]` under q4
+/// — exactly the frozen argument run of the matching artifact family.
 #[derive(Debug)]
 pub struct BlockWeights {
     pub tensors: Vec<Tracked<HostTensor>>,
@@ -70,6 +72,26 @@ impl ModelState {
     /// LoRA: A ~ N(0, 1/sqrt(d_in)), B = 0 (standard LoRA init — the
     /// adapted model starts exactly at the base model).
     pub fn init(dims: &ModelDims, seed: u64, tracker: &MemoryTracker) -> Self {
+        Self::init_with_quant(dims, seed, tracker, QuantMode::F32)
+    }
+
+    /// [`Self::init`] with a resident precision for the frozen base
+    /// weights. Under [`QuantMode::Q4`] each block's f32 matrices exist
+    /// only transiently inside this loop — one block at a time, untracked
+    /// generation scratch (the tracker's scope is tensors HELD across
+    /// calls; the analytical model's per-block dequant term already
+    /// over-bounds a one-f32-block transient for the exact-gradient
+    /// methods) — and what the model holds, and the tracker charges, is
+    /// the int4-packed tensors, so a q4 session never has a
+    /// full-precision copy of the frozen model live at once. The weight
+    /// RNG stream is identical in both modes: a q4 session quantizes
+    /// exactly the weights its f32 twin trains on.
+    pub fn init_with_quant(
+        dims: &ModelDims,
+        seed: u64,
+        tracker: &MemoryTracker,
+        quant_mode: QuantMode,
+    ) -> Self {
         let base = Rng::new(seed);
         let mut rng = base.fork(0xe58);
         let emb = HostTensor::randn(&[dims.vocab, dims.d_model], 0.02, &mut rng);
@@ -82,18 +104,53 @@ impl ModelState {
         let mut lora = Vec::with_capacity(dims.n_layers);
         for l in 0..dims.n_layers {
             let mut brng = base.fork(1000 + l as u64);
-            let mut tensors = Vec::with_capacity(FROZEN.len());
-            for name in FROZEN {
-                let shape = dims.frozen_shape(name);
-                let t = match name {
-                    "ln1" | "ln2" => HostTensor::f32(
-                        &shape, vec![1.0; shape.iter().product()]),
-                    "wo" | "wd" => HostTensor::randn(
-                        &shape, 0.02 * resid_scale, &mut brng),
-                    _ => HostTensor::randn(&shape, 0.02, &mut brng),
-                };
+            let f32_tensors: Vec<HostTensor> = FROZEN
+                .iter()
+                .map(|name| {
+                    let shape = dims.frozen_shape(name);
+                    match *name {
+                        "ln1" | "ln2" => HostTensor::f32(
+                            &shape, vec![1.0; shape.iter().product()]),
+                        "wo" | "wd" => HostTensor::randn(
+                            &shape, 0.02 * resid_scale, &mut brng),
+                        _ => HostTensor::randn(&shape, 0.02, &mut brng),
+                    }
+                })
+                .collect();
+            let mut tensors = Vec::new();
+            let hold = |t: HostTensor, tensors: &mut Vec<Tracked<HostTensor>>| {
                 let guard = tracker.track("weights:blocks", t.bytes());
                 tensors.push(Tracked::new(t, guard));
+            };
+            match quant_mode {
+                QuantMode::F32 => {
+                    for t in f32_tensors {
+                        hold(t, &mut tensors);
+                    }
+                }
+                QuantMode::Q4 => {
+                    let idx = |name: &str| {
+                        FROZEN.iter().position(|w| *w == name).unwrap()
+                    };
+                    for ln in ["ln1", "ln2"] {
+                        hold(f32_tensors[idx(ln)].clone(), &mut tensors);
+                    }
+                    for mat in QUANT_MATS {
+                        let t = &f32_tensors[idx(mat)];
+                        let (din, dout) = (t.shape[0], t.shape[1]);
+                        let (packed, scales) =
+                            quant::quantize(t.as_f32(), din, dout);
+                        hold(HostTensor::u8(&[din / 2, dout], packed),
+                             &mut tensors);
+                        hold(
+                            HostTensor::f32(
+                                &[din / quant::GROUP, dout], scales),
+                            &mut tensors,
+                        );
+                    }
+                    // f32_tensors drop here: the full-precision block was
+                    // generation scratch, never resident state.
+                }
             }
             blocks.push(BlockWeights { tensors });
 
@@ -208,6 +265,39 @@ mod tests {
         // first lora pair is a_q [d, r], b_q [r, qd]
         assert_eq!(args[9].shape, vec![d.d_model, d.rank]);
         assert_eq!(args[10].shape, vec![d.rank, d.q_dim()]);
+    }
+
+    #[test]
+    fn q4_init_holds_packed_blocks_only() {
+        let t = MemoryTracker::new();
+        let d = toy_dims();
+        let m = ModelState::init_with_quant(&d, 7, &t, crate::config::QuantMode::Q4);
+        // q4 ABI order: ln1, ln2, then (packed, scales) × 7
+        let b = &m.blocks[0].tensors;
+        assert_eq!(b.len(), 2 + 2 * QUANT_MATS.len());
+        assert_eq!(b[0].value.shape, vec![d.d_model]); // ln1
+        assert_eq!(b[2].value.dtype(), crate::tensor::DType::U8); // packed_wq
+        assert_eq!(b[2].value.shape, vec![d.d_model / 2, d.q_dim()]);
+        assert_eq!(b[3].value.shape,
+                   vec![d.d_model / quant::GROUP, d.q_dim()]); // scales_wq
+        // packed residents are a fraction of the f32 block bytes
+        let t2 = MemoryTracker::new();
+        let f = ModelState::init(&d, 7, &t2);
+        let q4_bytes: u64 = b.iter().map(|t| t.value.bytes()).sum();
+        let f32_bytes: u64 =
+            f.blocks[0].tensors.iter().map(|t| t.value.bytes()).sum();
+        assert!(q4_bytes * 2 < f32_bytes, "{q4_bytes} !< {f32_bytes} / 2");
+        // same seed ⇒ same underlying weights: the packed wq dequantizes
+        // to within half a quantization step of the f32 wq
+        let packed = b[2].value.as_u8();
+        let scales = b[3].value.as_f32();
+        let deq = quant::dequantize(packed, scales, d.d_model, d.q_dim());
+        let wq = f.blocks[0].tensors[1].value.as_f32();
+        for (c, (a, b)) in deq.iter().zip(wq).enumerate() {
+            let s = scales[(c / d.q_dim() / quant::GROUP) * d.q_dim()
+                + c % d.q_dim()];
+            assert!((a - b).abs() <= s / 2.0 + 1e-7, "elem {c}: {a} vs {b}");
+        }
     }
 
     #[test]

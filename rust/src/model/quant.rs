@@ -18,7 +18,13 @@ pub fn quantize(w: &[f32], din: usize, dout: usize) -> (Vec<u8>, Vec<f32>) {
             for r in 0..GROUP {
                 mx = mx.max(w[(g * GROUP + r) * dout + c].abs());
             }
-            scales[g * dout + c] = mx / 7.0;
+            // Degenerate groups must stay safe: an all-zero group gets an
+            // exact 0.0 scale (its values quantize to 0 without touching
+            // the division below), and a non-finite max (inf/NaN input)
+            // is clamped to 0.0 as well — otherwise the scale itself
+            // would be inf/NaN and dequantization would emit NaN.
+            let s = mx / 7.0;
+            scales[g * dout + c] = if s.is_finite() { s } else { 0.0 };
         }
     }
     let mut q = vec![0i8; din * dout];
@@ -41,11 +47,25 @@ pub fn quantize(w: &[f32], din: usize, dout: usize) -> (Vec<u8>, Vec<f32>) {
     (packed, scales)
 }
 
-/// Dequantize back to f32 (host-side reference; the q4 artifacts do this
-/// inside the HLO graph).
+/// Dequantize back to f32 (host-side reference; the fused q4 kernels in
+/// `runtime::kernels` produce bitwise-identical values panel by panel).
 pub fn dequantize(packed: &[u8], scales: &[f32], din: usize, dout: usize) -> Vec<f32> {
-    assert_eq!(packed.len(), din / 2 * dout);
     let mut out = vec![0f32; din * dout];
+    dequantize_into(packed, scales, din, dout, &mut out);
+    out
+}
+
+/// Dequantize into a caller-owned buffer (the naive-q4 oracle kernel
+/// materializes into arena scratch instead of a fresh `Vec`).
+pub fn dequantize_into(
+    packed: &[u8],
+    scales: &[f32],
+    din: usize,
+    dout: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(packed.len(), din / 2 * dout);
+    assert_eq!(out.len(), din * dout);
     for r2 in 0..din / 2 {
         for c in 0..dout {
             let b = packed[r2 * dout + c];
@@ -58,11 +78,13 @@ pub fn dequantize(packed: &[u8], scales: &[f32], din: usize, dout: usize) -> Vec
             out[(2 * r2 + 1) * dout + c] = hi as f32 * scales[g2 * dout + c];
         }
     }
-    out
 }
 
+/// Two's-complement sign extension of one int4 nibble. Shared with the
+/// fused dequant kernels so host and in-kernel dequantization cannot
+/// drift (their parity is asserted bitwise).
 #[inline]
-fn sign_extend(nibble: u8) -> i8 {
+pub fn sign_extend(nibble: u8) -> i8 {
     if nibble > 7 {
         nibble as i8 - 16
     } else {
@@ -74,6 +96,55 @@ fn sign_extend(nibble: u8) -> i8 {
 /// memory-model input.
 pub fn quantized_bytes(din: usize, dout: usize) -> u64 {
     (din as u64 / 2) * dout as u64 + (din as u64 / GROUP as u64) * dout as u64 * 4
+}
+
+/// Resident bytes of ONE q4 block in the packed layout: two f32 norm
+/// gains plus a (packed, scales) pair per `QUANT_MATS` matrix. Single
+/// source of truth for the admission charge
+/// (`memory::model::resident_weight_bytes`) and the FLOP/byte inventory
+/// (`kernels::flops::artifact_weight_bytes`) — a packing-scheme change
+/// lands in both automatically.
+pub fn packed_block_bytes(d: &crate::config::ModelDims) -> u64 {
+    let norms = 2 * d.d_model as u64 * 4;
+    norms
+        + crate::config::QUANT_MATS
+            .iter()
+            .map(|w| {
+                let s = d.frozen_shape(w);
+                quantized_bytes(s[0], s[1])
+            })
+            .sum::<u64>()
+}
+
+/// Host-dequantize one block's q4-ABI tensor list
+/// (`[ln1, ln2, (packed u8, scales f32) × QUANT_MATS]`) back to the
+/// nine-tensor f32 FROZEN layout — the oracle form the parity and
+/// gradcheck tests compare the fused kernels against. Single source of
+/// truth for the q4 block tensor order on the host side.
+pub fn dequantize_block(
+    dims: &crate::config::ModelDims,
+    q4_tensors: &[crate::tensor::HostTensor],
+) -> Vec<crate::tensor::HostTensor> {
+    use crate::config::{FROZEN, QUANT_MATS};
+    assert_eq!(q4_tensors.len(), 2 + 2 * QUANT_MATS.len());
+    FROZEN
+        .iter()
+        .map(|name| match *name {
+            "ln1" => q4_tensors[0].clone(),
+            "ln2" => q4_tensors[1].clone(),
+            mat => {
+                let i = QUANT_MATS.iter().position(|w| *w == mat).unwrap();
+                let shape = dims.frozen_shape(mat);
+                let w = dequantize(
+                    q4_tensors[2 + 2 * i].as_u8(),
+                    q4_tensors[2 + 2 * i + 1].as_f32(),
+                    shape[0],
+                    shape[1],
+                );
+                crate::tensor::HostTensor::f32(&shape, w)
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -68,11 +68,15 @@ fn lm_logits(d: &ModelDims) -> u64 {
 }
 
 /// Nominal FLOPs of one call of artifact `name` at dims `d` (0 for pure
-/// data movement like `embed_fwd`, and for unknown names).
+/// data movement like `embed_fwd`, and for unknown names). The `_q4`
+/// variants count the same GEMM work as their f32 counterparts: the
+/// in-panel dequant multiply is elementwise O(k·n) bookkeeping that the
+/// instrumented kernel engine does not count either, so measured ==
+/// analytical holds on both paths.
 pub fn artifact(d: &ModelDims, name: &str) -> u64 {
+    let name = name.strip_suffix("_q4").unwrap_or(name);
     match name {
-        "block_fwd" | "block_fwd_saveh" | "block_fwd_residuals"
-        | "block_fwd_q4" => block_forward(d),
+        "block_fwd" | "block_fwd_saveh" | "block_fwd_residuals" => block_forward(d),
         // MeSP's fused call recomputes the forward in-call; store-h only
         // skips the seven h = xA recomputes; the residual path does no
         // forward at all.
@@ -81,6 +85,30 @@ pub fn artifact(d: &ModelDims, name: &str) -> u64 {
         "block_bwd_residuals" => block_backward(d, true),
         "lm_loss_fwd" => lm_logits(d),
         "lm_loss_grad" => lm_logits(d) + gemm(d.m(), d.vocab, d.d_model),
+        _ => 0,
+    }
+}
+
+/// Frozen-weight bytes one block call streams through the GEMMs — the
+/// "byte" half of the FLOP/byte inventory. f32 calls read every frozen
+/// matrix at 4 B/param; `_q4` calls read the packed nibbles + group
+/// scales instead (norm gains stay f32 on both paths). Arithmetic
+/// intensity of the frozen GEMMs therefore rises ~7× under q4, which is
+/// what makes the fused-dequant kernels pay off on memory-bound shapes.
+pub fn artifact_weight_bytes(d: &ModelDims, name: &str) -> u64 {
+    let q4 = name.ends_with("_q4");
+    let base = name.strip_suffix("_q4").unwrap_or(name);
+    let per_block: u64 = if q4 {
+        crate::model::quant::packed_block_bytes(d)
+    } else {
+        d.frozen_params_per_block() as u64 * 4
+    };
+    match base {
+        "block_fwd" | "block_fwd_saveh" | "block_fwd_residuals"
+        | "block_bwd_mesp" | "block_bwd_storeh" | "block_bwd_residuals" => per_block,
+        "lm_loss_fwd" | "lm_loss_grad" => {
+            (d.vocab * d.d_model + d.d_model) as u64 * 4
+        }
         _ => 0,
     }
 }
@@ -102,6 +130,27 @@ mod tests {
         assert!(artifact(&d, "block_bwd_residuals") < artifact(&d, "block_bwd_storeh"));
         assert_eq!(artifact(&d, "embed_fwd"), 0);
         assert_eq!(artifact(&d, "unknown"), 0);
+    }
+
+    #[test]
+    fn q4_variants_count_the_same_flops() {
+        let d = presets::compiled("toy").unwrap();
+        for base in ["block_fwd", "block_fwd_saveh", "block_fwd_residuals",
+                     "block_bwd_mesp", "block_bwd_storeh",
+                     "block_bwd_residuals"] {
+            let q4 = format!("{base}_q4");
+            assert_eq!(artifact(&d, base), artifact(&d, &q4), "{base}");
+            assert!(artifact(&d, &q4) > 0);
+        }
+    }
+
+    #[test]
+    fn q4_weight_bytes_shrink_frozen_traffic() {
+        let d = presets::compiled("toy").unwrap();
+        let f32b = artifact_weight_bytes(&d, "block_bwd_mesp");
+        let q4b = artifact_weight_bytes(&d, "block_bwd_mesp_q4");
+        assert!(q4b > 0 && q4b < f32b / 2, "q4 {q4b} !< f32 {f32b} / 2");
+        assert_eq!(artifact_weight_bytes(&d, "embed_fwd"), 0);
     }
 
     #[test]

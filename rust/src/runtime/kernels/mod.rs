@@ -20,6 +20,14 @@
 //! fleet scheduler divides cores by its worker count before building the
 //! backend so concurrent sessions never oversubscribe the machine.
 //!
+//! q4 path: frozen weights may arrive int4-packed ([`Q4View`] via
+//! [`FrozenW`]). The tiled/parallel kernels dequantize packed panels on
+//! the fly inside `pack_b` — the full f32 matrix never exists — while
+//! the naive oracle host-dequantizes into arena scratch first. Panel
+//! dequant evaluates exactly `model::quant::dequantize`'s expression, so
+//! fused and host dequantization agree bitwise and the tiled ≡ parallel
+//! bitwise guarantee carries over to q4 unchanged.
+//!
 //! Scratch discipline: GEMM outputs and packing panels are checked out of
 //! the engine's [`TensorArena`], so they are reused across calls and
 //! tracked under the `scratch` tag (see `memory::model::scratch` for the
@@ -40,6 +48,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 pub use crate::config::KernelKind;
 use crate::memory::MemoryTracker;
+use crate::model::quant;
 use crate::tensor::{ScratchBuf, TensorArena};
 
 /// How the kernel engine is configured (CLI: `--kernel`, `--threads`).
@@ -73,6 +82,68 @@ pub enum BView<'a> {
     Rows(&'a [f32]),
     /// Stored transposed `[n, k]`: `B(l, j) = data[j*k + l]`.
     Cols(&'a [f32]),
+    /// int4-packed `[k, n]` (`k = din`): `B(l, j) = W(l, j)` dequantized
+    /// on the fly inside the packing step — the full f32 matrix is never
+    /// materialized.
+    Q4(Q4View<'a>),
+    /// Transposed use of an int4-packed `[n, k]` matrix:
+    /// `B(l, j) = W(j, l)`, dequantized on the fly while packing.
+    Q4T(Q4View<'a>),
+}
+
+/// Borrowed view of one int4-quantized matrix `[din, dout]` in the
+/// `model::quant` layout: two din-rows packed per byte (even row in the
+/// low nibble) and per-(64-row group, column) f32 scales.
+#[derive(Debug, Clone, Copy)]
+pub struct Q4View<'a> {
+    pub packed: &'a [u8],
+    pub scales: &'a [f32],
+    pub din: usize,
+    pub dout: usize,
+}
+
+impl<'a> Q4View<'a> {
+    pub fn new(packed: &'a [u8], scales: &'a [f32], din: usize, dout: usize) -> Q4View<'a> {
+        debug_assert_eq!(packed.len(), din / 2 * dout);
+        debug_assert_eq!(scales.len(), din / quant::GROUP * dout);
+        Q4View { packed, scales, din, dout }
+    }
+
+    /// Dequantize element `(r, c)` — the exact expression
+    /// `quant::dequantize` evaluates, so fused and host dequantization
+    /// are bitwise identical.
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        let b = self.packed[(r / 2) * self.dout + c];
+        let nib = if r % 2 == 0 { b & 0x0f } else { (b >> 4) & 0x0f };
+        quant::sign_extend(nib) as f32
+            * self.scales[(r / quant::GROUP) * self.dout + c]
+    }
+
+    /// Logical bytes this matrix occupies packed (tracker/model input).
+    pub fn bytes(&self) -> u64 {
+        quant::quantized_bytes(self.din, self.dout)
+    }
+}
+
+/// A frozen weight as the block math consumes it: either a plain f32
+/// slice or an int4-packed matrix that stays packed for the whole
+/// session (paper §4.5). LoRA adapters and the norm weights are always
+/// f32 — only the seven projection GEMMs ever see the `Q4` arm.
+#[derive(Debug, Clone, Copy)]
+pub enum FrozenW<'a> {
+    F32(&'a [f32]),
+    Q4(Q4View<'a>),
+}
+
+impl<'a> FrozenW<'a> {
+    /// The f32 slice of a weight that is never quantized (RMSNorm gains).
+    pub fn f32(&self) -> &'a [f32] {
+        match *self {
+            FrozenW::F32(w) => w,
+            FrozenW::Q4(_) => panic!("norm weights are never int4-packed"),
+        }
+    }
 }
 
 /// GEMMs below this many multiply-adds stay single-threaded even under
@@ -180,6 +251,73 @@ impl Kernels {
         out
     }
 
+    /// `a[m,k] @ W` with `W [k, n]` a frozen weight (f32 or int4-packed).
+    pub fn matmul_w(&self, a: &[f32], w: FrozenW, m: usize, k: usize, n: usize) -> ScratchBuf {
+        match w {
+            FrozenW::F32(w) => self.matmul(a, w, m, k, n),
+            FrozenW::Q4(q) => {
+                debug_assert_eq!((q.din, q.dout), (k, n));
+                self.matmul_q4(a, q, m)
+            }
+        }
+    }
+
+    /// `a[m,k] @ Wᵀ` with `W [n, k]` a frozen weight (f32 or int4-packed).
+    pub fn matmul_wt(&self, a: &[f32], w: FrozenW, m: usize, k: usize, n: usize) -> ScratchBuf {
+        match w {
+            FrozenW::F32(w) => self.matmul_bt(a, w, m, k, n),
+            FrozenW::Q4(q) => {
+                debug_assert_eq!((q.din, q.dout), (n, k));
+                self.matmul_bt_q4(a, q, m)
+            }
+        }
+    }
+
+    /// `a[m, din] @ dequant(W)` with `W` int4-packed `[din, dout]`. The
+    /// tiled/parallel kernels dequantize int4 panels on the fly inside
+    /// the packing step (no full f32 materialization); the naive oracle
+    /// host-dequantizes the whole matrix into arena scratch first — its
+    /// reference semantics, and the bound behind the memory model's
+    /// dequant-buffer term.
+    pub fn matmul_q4(&self, a: &[f32], w: Q4View, m: usize) -> ScratchBuf {
+        let (k, n) = (w.din, w.dout);
+        debug_assert_eq!(a.len(), m * k);
+        let mut out = self.arena.take(m * n);
+        self.add_flops(2 * (m * k * n) as u64);
+        match self.kind {
+            KernelKind::Naive => {
+                let deq = self.dequant_full(w);
+                naive::matmul(a, &deq, m, k, n, &mut out);
+            }
+            _ => self.gemm(AView::Rows(a), BView::Q4(w), m, k, n, &mut out),
+        }
+        out
+    }
+
+    /// `a[m, dout] @ dequant(W)ᵀ` with `W` int4-packed `[din, dout]` —
+    /// the frozen-weight VJP (`g @ Wᵀ`) over packed weights.
+    pub fn matmul_bt_q4(&self, a: &[f32], w: Q4View, m: usize) -> ScratchBuf {
+        let (k, n) = (w.dout, w.din);
+        debug_assert_eq!(a.len(), m * k);
+        let mut out = self.arena.take(m * n);
+        self.add_flops(2 * (m * k * n) as u64);
+        match self.kind {
+            KernelKind::Naive => {
+                let deq = self.dequant_full(w);
+                naive::matmul_bt(a, &deq, m, k, n, &mut out);
+            }
+            _ => self.gemm(AView::Rows(a), BView::Q4T(w), m, k, n, &mut out),
+        }
+        out
+    }
+
+    /// Full host dequantization into arena scratch (naive oracle only).
+    fn dequant_full(&self, w: Q4View) -> ScratchBuf {
+        let mut out = self.arena.take(w.din * w.dout);
+        quant::dequantize_into(w.packed, w.scales, w.din, w.dout, &mut out);
+        out
+    }
+
     fn gemm(&self, a: AView, b: BView, m: usize, k: usize, n: usize, out: &mut [f32]) {
         let fan_out = self.kind == KernelKind::Parallel
             && self.threads > 1
@@ -258,6 +396,79 @@ mod tests {
             let got = pl.matmul(&a, &b, m, k, n);
             assert_eq!(&want[..], &got[..], "threads={threads} must not change bits");
         }
+    }
+
+    #[test]
+    fn q4_fused_equals_host_dequant_bitwise() {
+        // Panel dequant inside pack_b must reproduce quant::dequantize
+        // exactly, so q4 GEMMs equal f32 GEMMs over the dequantized
+        // matrix BITWISE — per kernel kind, both operand forms.
+        let (m, k, n) = (9, 128, 24);
+        let mut rng = Rng::new(21);
+        let w = rng.normal_vec(k * n, 0.05);
+        let (packed, scales) = quant::quantize(&w, k, n);
+        let deq = quant::dequantize(&packed, &scales, k, n);
+        let view = Q4View::new(&packed, &scales, k, n);
+        let a = rng.normal_vec(m * k, 1.0);
+        let g = rng.normal_vec(m * n, 1.0);
+        for kind in [KernelKind::Naive, KernelKind::Tiled] {
+            let ks = engine(kind, 1);
+            assert_eq!(
+                &ks.matmul_q4(&a, view, m)[..],
+                &ks.matmul(&a, &deq, m, k, n)[..],
+                "{}: x @ W", kind.name()
+            );
+            assert_eq!(
+                &ks.matmul_bt_q4(&g, view, m)[..],
+                &ks.matmul_bt(&g, &deq, m, n, k)[..],
+                "{}: g @ Wᵀ", kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn q4_parallel_is_bitwise_identical_to_tiled() {
+        // Big enough to clear PARALLEL_MIN_MADDS so fan-out is real.
+        let (m, k, n) = (128, 128, 128);
+        assert!(m * k * n >= PARALLEL_MIN_MADDS);
+        let mut rng = Rng::new(22);
+        let w = rng.normal_vec(k * n, 0.05);
+        let (packed, scales) = quant::quantize(&w, k, n);
+        let view = Q4View::new(&packed, &scales, k, n);
+        let a = rng.normal_vec(m * k, 1.0);
+        let td = engine(KernelKind::Tiled, 1);
+        let want = td.matmul_q4(&a, view, m);
+        for threads in [2, 3, 5] {
+            let pl = engine(KernelKind::Parallel, threads);
+            assert_eq!(&want[..], &pl.matmul_q4(&a, view, m)[..],
+                       "threads={threads}");
+            assert_eq!(&td.matmul_bt_q4(&a, view, m)[..],
+                       &pl.matmul_bt_q4(&a, view, m)[..],
+                       "bt threads={threads}");
+        }
+    }
+
+    #[test]
+    fn frozen_dispatch_routes_both_arms() {
+        let (m, k, n) = (4, 64, 8);
+        let mut rng = Rng::new(23);
+        let w = rng.normal_vec(k * n, 0.05);
+        let (packed, scales) = quant::quantize(&w, k, n);
+        let deq = quant::dequantize(&packed, &scales, k, n);
+        let a = rng.normal_vec(m * k, 1.0);
+        let ks = engine(KernelKind::Tiled, 1);
+        let f = ks.matmul_w(&a, FrozenW::F32(&deq), m, k, n);
+        let q = ks.matmul_w(&a, FrozenW::Q4(Q4View::new(&packed, &scales, k, n)), m, k, n);
+        assert_eq!(&f[..], &q[..]);
+        assert_eq!(FrozenW::F32(&deq[..]).f32().len(), k * n);
+    }
+
+    #[test]
+    #[should_panic(expected = "never int4-packed")]
+    fn frozen_f32_accessor_rejects_q4() {
+        let packed = vec![0u8; 64 / 2];
+        let scales = vec![0.0f32; 1];
+        let _ = FrozenW::Q4(Q4View::new(&packed, &scales, 64, 1)).f32();
     }
 
     #[test]

@@ -161,6 +161,36 @@ fn pack_b(
                     }
                 }
             }
+            // int4 operands dequantize here, inside packing: each panel
+            // element goes nibble → sign-extend → ×scale straight into
+            // the packed sliver, so no f32 copy of W ever exists beyond
+            // the panel (and the dequantized values are bitwise the ones
+            // `quant::dequantize` would produce — packing order does not
+            // change them, which keeps tiled-q4 ≡ parallel-q4 bitwise).
+            BView::Q4(q) => {
+                for l in 0..kc {
+                    let r = pc + l;
+                    let dst = &mut sliver[l * NR..l * NR + NR];
+                    for (c, d) in dst.iter_mut().enumerate() {
+                        *d = if c < cols { q.at(r, jc + jb * NR + c) } else { 0.0 };
+                    }
+                }
+            }
+            BView::Q4T(q) => {
+                // B = Wᵀ: column j of B is row j of the packed matrix.
+                for c in 0..NR {
+                    if c < cols {
+                        let wr = jc + jb * NR + c;
+                        for l in 0..kc {
+                            sliver[l * NR + c] = q.at(wr, pc + l);
+                        }
+                    } else {
+                        for l in 0..kc {
+                            sliver[l * NR + c] = 0.0;
+                        }
+                    }
+                }
+            }
         }
     }
 }

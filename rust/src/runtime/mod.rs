@@ -7,9 +7,11 @@
 //! whatever executes the math. A backend serves the paper's artifact
 //! surface **by name** — `embed_fwd`, `block_fwd`, `block_fwd_saveh`,
 //! `block_fwd_residuals`, `block_bwd_mesp`, `block_bwd_storeh`,
-//! `block_bwd_residuals`, `lm_loss_fwd`, `lm_loss_grad`, `block_fwd_q4` —
-//! with positional arguments in manifest ABI order (leading activations,
-//! then the 9 frozen block weights, then the 14 LoRA tensors). Every
+//! `block_bwd_residuals`, `lm_loss_fwd`, `lm_loss_grad`, plus the `_q4`
+//! twin of every block artifact (int4-packed frozen weights) — with
+//! positional arguments in manifest ABI order (leading activations, then
+//! the frozen block weights — 9 f32 tensors, or ln1/ln2 + 7 packed/scale
+//! pairs on the `_q4` ABI — then the 14 LoRA tensors). Every
 //! implementation must:
 //!
 //! 1. validate host-arg count/shape/dtype against the artifact spec
@@ -49,6 +51,6 @@ pub mod refmath;
 pub use backend::{Arg, Backend, DeviceBuffer, ExecStats};
 #[cfg(feature = "pjrt")]
 pub use client::Runtime;
-pub use kernels::{KernelOptions, Kernels};
+pub use kernels::{FrozenW, KernelOptions, Kernels, Q4View};
 pub use manifest::{ArgSpec, ArtifactSpec, Manifest};
 pub use reference::ReferenceBackend;

@@ -1,8 +1,10 @@
 //! The pure-Rust reference backend: implements the full artifact surface
 //! in-process — `embed_fwd`, the three block-forward variants, the three
 //! block-backward variants (MeSP fused recompute, store-h, MeBP
-//! residuals), both loss heads, and the int4 `block_fwd_q4` path — with
-//! no XLA toolchain, no Python artifacts and no files on disk.
+//! residuals), both loss heads, and the int4 `_q4` twin of every block
+//! artifact (forwards AND backwards over packed base weights, paper
+//! §4.5) — with no XLA toolchain, no Python artifacts and no files on
+//! disk.
 //!
 //! Arguments are validated against programmatically generated
 //! [`ArtifactSpec`]s that mirror what `python/compile/aot.py` writes into
@@ -18,7 +20,7 @@ use crate::config::{ModelDims, FROZEN, PROJS};
 use crate::memory::MemoryTracker;
 use crate::model::quant;
 use crate::runtime::backend::{Arg, Backend, DeviceBuffer, ExecStats, StatsRecorder};
-use crate::runtime::kernels::{Kernels, KernelOptions};
+use crate::runtime::kernels::{FrozenW, Kernels, KernelOptions, Q4View};
 use crate::runtime::manifest::{ArgSpec, ArtifactSpec};
 use crate::runtime::refmath as rm;
 use crate::tensor::{DType, HostTensor, ScratchBuf};
@@ -31,8 +33,10 @@ pub const RESIDUALS: [&str; 19] = [
     "h_q", "h_k", "h_v", "h_o", "h_gate", "h_up", "h_down",
 ];
 
-/// The seven quantized projection matrices of the q4 path, ABI order.
-pub const QUANT_MATS: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
+/// The seven quantized projection matrices of the q4 path, ABI order
+/// (canonical definition in `config`; re-exported here for the callers
+/// that grew up next to the q4 artifacts).
+pub use crate::config::QUANT_MATS;
 
 pub struct ReferenceBackend {
     dims: ModelDims,
@@ -89,6 +93,21 @@ impl ReferenceBackend {
         let r = d.rank;
         let bnd = [b, n, dm];
         let slices = |ts: &[&HostTensor]| -> Vec<&[f32]> { ts.iter().map(|t| t.as_f32()).collect() };
+        // The `_q4` artifact variants share the f32 block arms: strip the
+        // suffix and swap the frozen-weight views. f32 ABI: 9 frozen
+        // tensors in FROZEN order. q4 ABI: ln1, ln2, then (packed u8,
+        // scales f32) per QUANT_MATS — the projections stay int4-packed
+        // all the way into the GEMM packing step.
+        let (base, q4) = match name.strip_suffix("_q4") {
+            Some(stripped) => (stripped, true),
+            None => (name, false),
+        };
+        let nf = if q4 { 2 + 2 * QUANT_MATS.len() } else { FROZEN.len() };
+        // Frozen views + LoRA slices for a block artifact whose leading
+        // args end at offset `off` (ABI order after the leads).
+        let frozen_at = |off: usize| frozen_views(d, t, off, q4, nf);
+        let lora_at =
+            |off: usize| -> Vec<&[f32]> { slices(&t[off + nf..off + nf + 2 * PROJS.len()]) };
         // Backward outputs escape the arena: detach each scratch buffer
         // into a HostTensor (the caller re-tracks the bytes as its own).
         let grad_tensors = |g_x: ScratchBuf, grads: Vec<ScratchBuf>| -> Vec<HostTensor> {
@@ -102,20 +121,20 @@ impl ReferenceBackend {
             out
         };
 
-        Ok(match name {
+        Ok(match base {
             "embed_fwd" => {
                 let out = rm::embed_fwd(t[0].as_i32(), t[1].as_f32(), dm);
                 vec![HostTensor::f32(&bnd, out)]
             }
             "block_fwd" => {
                 let y = rm::block_forward_inference(
-                    ks, d, t[0].as_f32(), &slices(&t[1..10]), &slices(&t[10..24]),
+                    ks, d, t[0].as_f32(), &frozen_at(1), &lora_at(1),
                 );
                 vec![HostTensor::f32(&bnd, y.into_vec())]
             }
             "block_fwd_saveh" => {
                 let c = rm::block_forward(
-                    ks, d, t[0].as_f32(), &slices(&t[1..10]), &slices(&t[10..24]),
+                    ks, d, t[0].as_f32(), &frozen_at(1), &lora_at(1),
                 );
                 let mut out = vec![HostTensor::f32(&bnd, c.y.into_vec())];
                 for h in c.hs {
@@ -125,7 +144,7 @@ impl ReferenceBackend {
             }
             "block_fwd_residuals" => {
                 let c = rm::block_forward(
-                    ks, d, t[0].as_f32(), &slices(&t[1..10]), &slices(&t[10..24]),
+                    ks, d, t[0].as_f32(), &frozen_at(1), &lora_at(1),
                 );
                 let residuals: Vec<HostTensor> = residual_shapes(d)
                     .into_iter()
@@ -140,8 +159,8 @@ impl ReferenceBackend {
             "block_bwd_mesp" => {
                 // THE paper's contribution path: recompute the minimal
                 // intermediate set (h = xA included) inside this one call.
-                let frozen = slices(&t[2..11]);
-                let lora = slices(&t[11..25]);
+                let frozen = frozen_at(2);
+                let lora = lora_at(2);
                 let c = rm::block_forward(ks, d, t[0].as_f32(), &frozen, &lora);
                 let src = rm::BwdSource::Owned(Box::new(c));
                 let (g_x, grads) = rm::block_backward(
@@ -151,8 +170,8 @@ impl ReferenceBackend {
             }
             "block_bwd_storeh" => {
                 // Table-5 ablation: identical math, dB consumes stored h.
-                let frozen = slices(&t[9..18]);
-                let lora = slices(&t[18..32]);
+                let frozen = frozen_at(9);
+                let lora = lora_at(9);
                 let c = rm::block_forward(ks, d, t[0].as_f32(), &frozen, &lora);
                 let hs = slices(&t[2..9]);
                 let src = rm::BwdSource::Owned(Box::new(c));
@@ -165,8 +184,8 @@ impl ReferenceBackend {
                 // MeBP backward half: every intermediate comes from the
                 // host-held residual set — no recompute in this call.
                 let res = &t[1..20];
-                let frozen = slices(&t[20..29]);
-                let lora = slices(&t[29..43]);
+                let frozen = frozen_at(20);
+                let lora = lora_at(20);
                 let ctx = rm::BwdCtx {
                     x2d: res[0].as_f32(),
                     h1: res[1].as_f32(),
@@ -205,36 +224,55 @@ impl ReferenceBackend {
                     HostTensor::f32(&bnd, g_h.into_vec()),
                 ]
             }
-            "block_fwd_q4" => {
-                // int4 base weights: dequantize in-backend (the host never
-                // holds f32 base weights on this path), then the same fwd.
-                let lora = slices(&t[17..31]);
-                let mut deq: Vec<Vec<f32>> = Vec::with_capacity(QUANT_MATS.len());
-                for (i, mat) in QUANT_MATS.iter().copied().enumerate() {
-                    let shape = d.frozen_shape(mat);
-                    let (din, dout) = (shape[0], shape[1]);
-                    let packed_i32 = t[3 + 2 * i].as_i32();
-                    let packed: Vec<u8> = packed_i32.iter().map(|v| *v as u8).collect();
-                    let scales = t[3 + 2 * i + 1].as_f32();
-                    deq.push(quant::dequantize(&packed, scales, din, dout));
-                }
-                let frozen: Vec<&[f32]> = vec![
-                    t[1].as_f32(), // ln1
-                    deq[0].as_slice(), // wq
-                    deq[1].as_slice(), // wk
-                    deq[2].as_slice(), // wv
-                    deq[3].as_slice(), // wo
-                    t[2].as_f32(), // ln2
-                    deq[4].as_slice(), // wg
-                    deq[5].as_slice(), // wu
-                    deq[6].as_slice(), // wd
-                ];
-                let y = rm::block_forward_inference(ks, d, t[0].as_f32(), &frozen, &lora);
-                vec![HostTensor::f32(&bnd, y.into_vec())]
-            }
             other => anyhow::bail!("reference backend: unknown artifact '{other}'"),
         })
     }
+}
+
+/// The frozen-weight views of one block call: the `nf` tensors starting
+/// at arg offset `off`, as f32 slices (f32 ABI) or packed views (q4
+/// ABI).
+fn frozen_views<'a>(
+    d: &ModelDims,
+    t: &[&'a HostTensor],
+    off: usize,
+    q4: bool,
+    nf: usize,
+) -> Vec<FrozenW<'a>> {
+    if q4 {
+        q4_frozen(d, t[off].as_f32(), t[off + 1].as_f32(), &t[off + 2..off + nf])
+    } else {
+        t[off..off + nf]
+            .iter()
+            .map(|ht| FrozenW::F32(ht.as_f32()))
+            .collect()
+    }
+}
+
+/// Frozen views of one q4 block call: norm gains f32, the seven
+/// projections as packed [`Q4View`]s (FROZEN order). The f32 matrices
+/// are never materialized here — dequantization happens panel-by-panel
+/// inside the GEMM kernels (the naive oracle being the one exception).
+fn q4_frozen<'a>(
+    d: &ModelDims,
+    ln1: &'a [f32],
+    ln2: &'a [f32],
+    qts: &[&'a HostTensor],
+) -> Vec<FrozenW<'a>> {
+    debug_assert_eq!(qts.len(), 2 * QUANT_MATS.len());
+    let q = |i: usize| -> FrozenW<'a> {
+        let shape = d.frozen_shape(QUANT_MATS[i]);
+        FrozenW::Q4(Q4View::new(
+            qts[2 * i].as_u8(),
+            qts[2 * i + 1].as_f32(),
+            shape[0],
+            shape[1],
+        ))
+    };
+    vec![
+        FrozenW::F32(ln1), q(0), q(1), q(2), q(3),
+        FrozenW::F32(ln2), q(4), q(5), q(6),
+    ]
 }
 
 impl Backend for ReferenceBackend {
@@ -465,24 +503,73 @@ fn build_specs(d: &ModelDims) -> Vec<ArtifactSpec> {
         spec("lm_loss_fwd", loss_args(), 1),
         spec("lm_loss_grad", loss_args(), 2),
     ];
-    // q4 needs every quantized d_in divisible by the packing group.
+    // q4 needs every quantized d_in divisible by the packing group. When
+    // that holds, the WHOLE block surface gets a `_q4` twin: same leads,
+    // but the frozen args are ln1/ln2 plus (packed u8, scales f32) pairs
+    // per QUANT_MATS — so a training session can keep base weights
+    // int4-resident through forward AND all three backward variants.
     let q4_ok = QUANT_MATS
         .iter()
         .all(|&w| d.frozen_shape(w)[0] % quant::GROUP == 0);
     if q4_ok {
-        let mut args = vec![
-            f("x", bnd.clone()),
-            f("ln1", vec![d.d_model]),
-            f("ln2", vec![d.d_model]),
-        ];
-        for w in QUANT_MATS {
-            let shape = d.frozen_shape(w);
-            let (din, dout) = (shape[0], shape[1]);
-            args.push(i(&format!("packed_{w}"), vec![din / 2, dout]));
-            args.push(f(&format!("scales_{w}"), vec![din / quant::GROUP, dout]));
-        }
-        args.extend(lora_args());
-        specs.push(spec("block_fwd_q4", args, 1));
+        let u = |name: &str, shape: Vec<usize>| ArgSpec {
+            name: name.to_string(),
+            shape,
+            dtype: DType::U8,
+        };
+        let q4_block_args = |leads: Vec<ArgSpec>| -> Vec<ArgSpec> {
+            let mut v = leads;
+            v.push(f("ln1", vec![d.d_model]));
+            v.push(f("ln2", vec![d.d_model]));
+            for w in QUANT_MATS {
+                let shape = d.frozen_shape(w);
+                let (din, dout) = (shape[0], shape[1]);
+                v.push(u(&format!("packed_{w}"), vec![din / 2, dout]));
+                v.push(f(&format!("scales_{w}"), vec![din / quant::GROUP, dout]));
+            }
+            v.extend(lora_args());
+            v
+        };
+        specs.push(spec(
+            "block_fwd_q4",
+            q4_block_args(vec![f("x", bnd.clone())]),
+            1,
+        ));
+        specs.push(spec(
+            "block_fwd_saveh_q4",
+            q4_block_args(vec![f("x", bnd.clone())]),
+            1 + PROJS.len(),
+        ));
+        specs.push(spec(
+            "block_fwd_residuals_q4",
+            q4_block_args(vec![f("x", bnd.clone())]),
+            1 + RESIDUALS.len(),
+        ));
+        specs.push(spec(
+            "block_bwd_mesp_q4",
+            q4_block_args(vec![f("x", bnd.clone()), f("g_y", bnd.clone())]),
+            1 + 2 * PROJS.len(),
+        ));
+        specs.push(spec(
+            "block_bwd_storeh_q4",
+            q4_block_args({
+                let mut v = vec![f("x", bnd.clone()), f("g_y", bnd.clone())];
+                v.extend(h_args());
+                v
+            }),
+            1 + 2 * PROJS.len(),
+        ));
+        specs.push(spec(
+            "block_bwd_residuals_q4",
+            q4_block_args({
+                let mut v = vec![f("g_y", bnd.clone())];
+                for (name, shape) in residual_shapes(d) {
+                    v.push(f(name, shape));
+                }
+                v
+            }),
+            1 + 2 * PROJS.len(),
+        ));
     }
     specs
 }
@@ -510,6 +597,30 @@ mod tests {
         assert!(!be.has_artifact("nope"));
         let res = be.spec("block_bwd_residuals").unwrap();
         assert_eq!(res.args.len(), 1 + 19 + 9 + 14);
+    }
+
+    #[test]
+    fn q4_specs_cover_the_whole_block_surface() {
+        let be = backend();
+        for base in ["block_fwd", "block_fwd_saveh", "block_fwd_residuals",
+                     "block_bwd_mesp", "block_bwd_storeh",
+                     "block_bwd_residuals"] {
+            let q4 = format!("{base}_q4");
+            let fs = be.spec(base).unwrap();
+            let qs = be.spec(&q4).unwrap();
+            assert_eq!(fs.outputs, qs.outputs, "{base}: output arity drifted");
+            // q4 swaps 9 frozen tensors for ln1+ln2+7 (packed, scales)
+            assert_eq!(qs.args.len(), fs.args.len() - 9 + 16, "{base}");
+        }
+        let q4 = be.spec("block_bwd_mesp_q4").unwrap();
+        assert_eq!(q4.args[0].name, "x");
+        assert_eq!(q4.args[2].name, "ln1");
+        assert_eq!(q4.args[4].name, "packed_wq");
+        assert_eq!(q4.args[4].dtype, DType::U8);
+        let d = be.dims();
+        assert_eq!(q4.args[4].shape, vec![d.d_model / 2, d.q_dim()]);
+        assert_eq!(q4.args[5].name, "scales_wq");
+        assert_eq!(q4.args[5].shape, vec![d.d_model / quant::GROUP, d.q_dim()]);
     }
 
     #[test]

@@ -23,7 +23,7 @@
 use crate::config::ModelDims;
 use crate::tensor::ScratchBuf;
 
-use super::kernels::Kernels;
+use super::kernels::{FrozenW, Kernels};
 
 /// RMSNorm epsilon (matches ModelConfig.eps).
 pub const EPS: f32 = 1e-6;
@@ -358,13 +358,15 @@ pub fn attention_bwd(
 
 // ------------------------------------------------------------------ LoRA
 
-/// Forward of a LoRA site (paper eq. 5): `y = x W + s (x A) B`.
+/// Forward of a LoRA site (paper eq. 5): `y = x W + s (x A) B`. The
+/// frozen `W` may be int4-packed (paper §4.5) — A/B stay f32 either way,
+/// so `h = xA` and the LoRA delta are identical across quant modes.
 /// Returns `(y [m,dout], h = xA [m,r])`.
 #[allow(clippy::too_many_arguments)]
 pub fn lora_fwd(
     ks: &Kernels,
     x: &[f32],
-    w: &[f32],
+    w: FrozenW,
     a: &[f32],
     bb: &[f32],
     s: f32,
@@ -374,7 +376,7 @@ pub fn lora_fwd(
     r: usize,
 ) -> (ScratchBuf, ScratchBuf) {
     let h = ks.matmul(x, a, m, din, r);
-    let mut y = ks.matmul(x, w, m, din, dout);
+    let mut y = ks.matmul_w(x, w, m, din, dout);
     let hb = ks.matmul(&h, bb, m, r, dout);
     for (yv, hv) in y.iter_mut().zip(&hb[..]) {
         *yv += s * hv;
@@ -392,7 +394,7 @@ pub fn lora_bwd(
     ks: &Kernels,
     x: &[f32],
     g: &[f32],
-    w: &[f32],
+    w: FrozenW,
     a: &[f32],
     bb: &[f32],
     s: f32,
@@ -416,7 +418,7 @@ pub fn lora_bwd(
         }
     };
     let mut gx = ks.matmul_bt(&dh, a, m, r, din);
-    let gw = ks.matmul_bt(g, w, m, dout, din);
+    let gw = ks.matmul_wt(g, w, m, dout, din);
     add_into(&mut gx, &gw);
     (gx, da, db)
 }
@@ -457,12 +459,13 @@ pub struct BlockCache {
     pub y: ScratchBuf,
 }
 
-/// Full block forward; `x: [m, d]`, frozen ×9 and lora ×14 in ABI order.
+/// Full block forward; `x: [m, d]`, frozen ×9 (f32 or int4-packed, ABI
+/// order) and lora ×14 in ABI order.
 pub fn block_forward(
     ks: &Kernels,
     dims: &ModelDims,
     x: &[f32],
-    frozen: &[&[f32]],
+    frozen: &[FrozenW],
     lora: &[&[f32]],
 ) -> BlockCache {
     let (b, n, d) = (dims.batch, dims.seq, dims.d_model);
@@ -477,7 +480,7 @@ pub fn block_forward(
     let s = dims.scale();
     let (qd, kvd) = (dims.q_dim(), dims.kv_dim());
 
-    let h1 = rmsnorm(ks, x, frozen[LN1], d);
+    let h1 = rmsnorm(ks, x, frozen[LN1].f32(), d);
     let (q2d, h_q) = lora_fwd(ks, &h1, frozen[WQ], lora[0], lora[1], s, m, d, qd, r);
     let (k2d, h_k) = lora_fwd(ks, &h1, frozen[WK], lora[2], lora[3], s, m, d, kvd, r);
     let (v2d, h_v) = lora_fwd(ks, &h1, frozen[WV], lora[4], lora[5], s, m, d, kvd, r);
@@ -500,7 +503,7 @@ pub fn block_forward(
     let x2 = added(ks, x, &o2d);
     drop(o2d);
 
-    let h2 = rmsnorm(ks, &x2, frozen[LN2], d);
+    let h2 = rmsnorm(ks, &x2, frozen[LN2].f32(), d);
     let (gate_out, h_gate) = lora_fwd(ks, &h2, frozen[WG], lora[8], lora[9], s, m, d, ff, r);
     let (up_out, h_up) = lora_fwd(ks, &h2, frozen[WU], lora[10], lora[11], s, m, d, ff, r);
     let silu_out = silu_mul(ks, &gate_out, &up_out);
@@ -536,7 +539,7 @@ pub fn block_forward_inference(
     ks: &Kernels,
     dims: &ModelDims,
     x: &[f32],
-    frozen: &[&[f32]],
+    frozen: &[FrozenW],
     lora: &[&[f32]],
 ) -> ScratchBuf {
     let (b, n, d) = (dims.batch, dims.seq, dims.d_model);
@@ -551,7 +554,7 @@ pub fn block_forward_inference(
     let s = dims.scale();
     let (qd, kvd) = (dims.q_dim(), dims.kv_dim());
 
-    let h1 = rmsnorm(ks, x, frozen[LN1], d);
+    let h1 = rmsnorm(ks, x, frozen[LN1].f32(), d);
     let (q2d, h_q) = lora_fwd(ks, &h1, frozen[WQ], lora[0], lora[1], s, m, d, qd, r);
     let (k2d, h_k) = lora_fwd(ks, &h1, frozen[WK], lora[2], lora[3], s, m, d, kvd, r);
     let (v2d, h_v) = lora_fwd(ks, &h1, frozen[WV], lora[4], lora[5], s, m, d, kvd, r);
@@ -577,7 +580,7 @@ pub fn block_forward_inference(
     let x2 = added(ks, x, &o2d);
     drop(o2d);
 
-    let h2 = rmsnorm(ks, &x2, frozen[LN2], d);
+    let h2 = rmsnorm(ks, &x2, frozen[LN2].f32(), d);
     let (gate_out, h_gate) = lora_fwd(ks, &h2, frozen[WG], lora[8], lora[9], s, m, d, ff, r);
     let (up_out, h_up) = lora_fwd(ks, &h2, frozen[WU], lora[10], lora[11], s, m, d, ff, r);
     drop((h2, h_gate, h_up));
@@ -666,7 +669,7 @@ pub fn block_backward(
     dims: &ModelDims,
     g_y: &[f32],
     mut src: BwdSource,
-    frozen: &[&[f32]],
+    frozen: &[FrozenW],
     lora: &[&[f32]],
     stored_h: Option<&[&[f32]]>,
 ) -> (ScratchBuf, Vec<ScratchBuf>) {
@@ -712,7 +715,7 @@ pub fn block_backward(
     let mut g_x2 = ks.arena().take_from(g_y);
     add_into(
         &mut g_x2,
-        &rmsnorm_bwd(ks, src.x2(), frozen[LN2], &added(ks, &g_h2_a, &g_h2_b), d),
+        &rmsnorm_bwd(ks, src.x2(), frozen[LN2].f32(), &added(ks, &g_h2_a, &g_h2_b), d),
     );
     drop((g_h2_a, g_h2_b));
     src.release(|c| &mut c.x2);
@@ -760,7 +763,7 @@ pub fn block_backward(
     add_into(&mut g_h1, &g_h1_v);
     drop((g_h1_q, g_h1_k, g_h1_v));
     let mut g_x = g_x2;
-    add_into(&mut g_x, &rmsnorm_bwd(ks, src.x2d(), frozen[LN1], &g_h1, d));
+    add_into(&mut g_x, &rmsnorm_bwd(ks, src.x2d(), frozen[LN1].f32(), &g_h1, d));
 
     let grads = vec![
         da_q, db_q, da_k, db_k, da_v, db_v, da_o, db_o, da_gate, db_gate,
@@ -1102,10 +1105,12 @@ mod tests {
         let a = randv(&mut rng, din * r, 0.3);
         let bb = randv(&mut rng, r * dout, 0.3);
         let h = ks.matmul(&x, &a, m, din, r);
-        let (gx1, da1, db1) =
-            lora_bwd(&ks, &x, &g, &w, &a, &bb, 2.0, m, din, dout, r, None);
-        let (gx2, da2, db2) =
-            lora_bwd(&ks, &x, &g, &w, &a, &bb, 2.0, m, din, dout, r, Some(&h));
+        let (gx1, da1, db1) = lora_bwd(
+            &ks, &x, &g, FrozenW::F32(&w), &a, &bb, 2.0, m, din, dout, r, None,
+        );
+        let (gx2, da2, db2) = lora_bwd(
+            &ks, &x, &g, FrozenW::F32(&w), &a, &bb, 2.0, m, din, dout, r, Some(&h),
+        );
         assert_eq!(&gx1[..], &gx2[..]);
         assert_eq!(&da1[..], &da2[..]);
         assert_eq!(&db1[..], &db2[..], "stored h must equal recomputed h exactly");
@@ -1137,7 +1142,8 @@ mod tests {
                  randv(&mut rng, d.rank * dout, 0.1)]
             })
             .collect();
-        let frozen: Vec<&[f32]> = frozen_v.iter().map(|v| v.as_slice()).collect();
+        let frozen: Vec<FrozenW> =
+            frozen_v.iter().map(|v| FrozenW::F32(v.as_slice())).collect();
         let lora: Vec<&[f32]> = lora_v.iter().map(|v| v.as_slice()).collect();
         let x = randv(&mut rng, d.m() * d.d_model, 0.5);
         {

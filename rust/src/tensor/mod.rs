@@ -119,6 +119,13 @@ impl HostTensor {
         }
     }
 
+    pub fn as_u8(&self) -> &[u8] {
+        match &self.data {
+            Data::U8(v) => v,
+            _ => panic!("expected u8 tensor"),
+        }
+    }
+
     /// First element as f64 — for scalar outputs (loss).
     pub fn scalar(&self) -> f64 {
         self.as_f32()[0] as f64

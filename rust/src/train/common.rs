@@ -5,10 +5,10 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::config::{OptimizerKind, PROJS};
+use crate::config::{OptimizerKind, QuantMode, PROJS};
 use crate::data::Batch;
 use crate::memory::{Guard, MemoryTracker};
-use crate::model::ModelState;
+use crate::model::{quant, ModelState};
 use crate::runtime::{Arg, Backend, DeviceBuffer};
 use crate::tensor::HostTensor;
 
@@ -25,6 +25,12 @@ use super::{CheckpointStore, Optimizer, StepStats};
 /// per-call memcpy at 100M scale). LoRA params stay host-side (the
 /// optimizer updates them after every block) and ride along each call as
 /// transient uploads.
+///
+/// Under `--quant q4` the seven projection matrices of every block are
+/// int4-packed at upload time and the f32 originals dropped: the session
+/// never holds full-precision base weights again (paper §4.5), the
+/// `weights:device` tag shrinks to the packed bytes, and every block
+/// call is routed to its `_q4` artifact twin.
 pub struct EngineCtx {
     pub rt: Arc<dyn Backend>,
     pub model: ModelState,
@@ -33,6 +39,10 @@ pub struct EngineCtx {
     pub step: usize,
     /// Checkpoint-store disk-spill budget in bytes (0 = never spill).
     pub spill_limit: u64,
+    quant: QuantMode,
+    /// Per block: FROZEN-order tensors (f32 mode) or
+    /// `[ln1, ln2, (packed, scales) × QUANT_MATS]` (q4 mode) — exactly
+    /// the frozen argument run of the selected artifact ABI.
     dev_frozen: Vec<Vec<DeviceBuffer>>,
     dev_emb: DeviceBuffer,
     dev_fnorm: DeviceBuffer,
@@ -41,16 +51,31 @@ pub struct EngineCtx {
 
 impl EngineCtx {
     /// Standard construction: seeded model + optimizer sized to the LoRA
-    /// tensor groups (layer-major, ABI order), then weight upload.
+    /// tensor groups (layer-major, ABI order), then weight upload
+    /// (quantizing the projections first under `QuantMode::Q4`).
     pub fn new(
         rt: Arc<dyn Backend>,
         seed: u64,
         opt_kind: OptimizerKind,
         lr: f32,
         spill_limit: u64,
-    ) -> Self {
+        quant_mode: QuantMode,
+    ) -> anyhow::Result<Self> {
+        if quant_mode == QuantMode::Q4 {
+            anyhow::ensure!(
+                rt.has_artifact("block_bwd_mesp_q4"),
+                "config '{}' has no q4 training artifacts on the {} backend: \
+                 either a quantized d_in is not divisible by {} (group size), \
+                 or this backend only ships the q4 inference forward — the \
+                 `_q4` backward twins currently exist on `reference` only",
+                rt.dims().name,
+                rt.kind(),
+                quant::GROUP
+            );
+        }
         let tracker = rt.tracker().clone();
-        let mut model = ModelState::init(rt.dims(), seed, &tracker);
+        let mut model =
+            ModelState::init_with_quant(rt.dims(), seed, &tracker, quant_mode);
         let group_sizes: Vec<usize> = model
             .lora
             .iter()
@@ -59,7 +84,10 @@ impl EngineCtx {
         let opt = Optimizer::new(opt_kind, lr, &group_sizes, &tracker);
 
         // Upload frozen state once; free the host copies (their Tracked
-        // guards drop here), accounting the device bytes instead.
+        // guards drop here), accounting the device bytes instead. The
+        // model already holds the blocks in the selected artifact ABI
+        // order — int4-packed + scales under q4 — so the upload loop is
+        // mode-agnostic and `weights:device` shrinks to the packed bytes.
         let mut dev_bytes = 0u64;
         let mut dev_frozen = Vec::with_capacity(model.blocks.len());
         for block in &mut model.blocks {
@@ -76,17 +104,41 @@ impl EngineCtx {
         model.embedding.value.data = crate::tensor::Data::F32(Vec::new());
         model.embedding.value.shape = vec![0];
         let dev_fnorm = rt.upload(&model.final_norm.value).expect("fnorm");
+        dev_bytes += model.final_norm.value.bytes();
         let _dev_guard = tracker.track("weights:device", dev_bytes);
-        EngineCtx {
-            rt, model, opt, tracker, step: 0, spill_limit,
+        Ok(EngineCtx {
+            rt, model, opt, tracker, step: 0, spill_limit, quant: quant_mode,
             dev_frozen, dev_emb, dev_fnorm, _dev_guard,
+        })
+    }
+
+    /// The session's resident base-weight precision.
+    pub fn quant(&self) -> QuantMode {
+        self.quant
+    }
+
+    /// Map a block-artifact base name onto the session's quant mode
+    /// (`block_bwd_mesp` → `block_bwd_mesp_q4` under q4). Non-block
+    /// artifacts (embed, loss heads) pass through unchanged.
+    pub fn artifact(&self, base: &str) -> String {
+        match self.quant {
+            QuantMode::Q4 if base.starts_with("block_") => format!("{base}_q4"),
+            _ => base.to_string(),
         }
+    }
+
+    /// Warm the backend up on `bases`, mapped through [`Self::artifact`].
+    pub fn warmup(&self, bases: &[&str]) -> anyhow::Result<()> {
+        let names: Vec<String> = bases.iter().map(|b| self.artifact(b)).collect();
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        self.rt.warmup(&refs)
     }
 
     /// A block's frozen (device) + LoRA (host) tensors in artifact ABI
     /// order, ready to append after the leading args.
     pub fn block_args_mixed(&self, layer: usize) -> Vec<Arg<'_>> {
-        let mut v: Vec<Arg> = Vec::with_capacity(23);
+        let mut v: Vec<Arg> =
+            Vec::with_capacity(self.dev_frozen[layer].len() + 2 * PROJS.len());
         for b in &self.dev_frozen[layer] {
             v.push(Arg::Device(b));
         }
@@ -109,7 +161,7 @@ impl EngineCtx {
     {
         let mut args: Vec<Arg> = vec![Arg::Host(x)];
         args.extend(self.block_args_mixed(layer));
-        let out = self.rt.execute("block_fwd", &args)?;
+        let out = self.rt.execute(&self.artifact("block_fwd"), &args)?;
         Ok(out.into_iter().next().unwrap())
     }
 

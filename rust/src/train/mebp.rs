@@ -23,12 +23,12 @@ pub struct MebpEngine {
 impl MebpEngine {
     pub fn new(ctx: EngineCtx) -> anyhow::Result<Self> {
         anyhow::ensure!(
-            ctx.rt.has_artifact("block_fwd_residuals"),
+            ctx.rt.has_artifact(&ctx.artifact("block_fwd_residuals")),
             "config '{}' lacks the MeBP residual artifacts on this backend",
             ctx.rt.dims().name
         );
-        ctx.rt.warmup(&["embed_fwd", "block_fwd", "block_fwd_residuals",
-                        "block_bwd_residuals", "lm_loss_grad"])?;
+        ctx.warmup(&["embed_fwd", "block_fwd", "block_fwd_residuals",
+                     "block_bwd_residuals", "lm_loss_grad"])?;
         let store = CheckpointStore::new(ctx.tracker.clone(), ctx.spill_limit);
         Ok(MebpEngine { ctx, store })
     }
@@ -44,6 +44,8 @@ impl MebpEngine {
             -> anyhow::Result<HostTensor>,
     {
         use crate::runtime::Arg;
+        let fwd_name = ctx.artifact("block_fwd_residuals");
+        let bwd_name = ctx.artifact("block_bwd_residuals");
         for l in (0..ctx.rt.dims().n_layers).rev() {
             let x = store.take(l)?;
             // Phase 1: autodiff-style recompute-forward. The residual set
@@ -51,7 +53,7 @@ impl MebpEngine {
             // "implicitly retained" tensors (paper §3.3).
             let mut args: Vec<Arg> = vec![Arg::Host(&x)];
             args.extend(ctx.block_args_mixed(l));
-            let mut fwd = ctx.rt.execute("block_fwd_residuals", &args)?;
+            let mut fwd = ctx.rt.execute(&fwd_name, &args)?;
             drop(args);
             let residuals: Vec<HostTensor> = fwd.drain(1..).collect();
             drop(fwd); // the recomputed y is dead (we already have g)
@@ -62,7 +64,7 @@ impl MebpEngine {
             let mut args: Vec<Arg> = vec![Arg::Host(&g)];
             args.extend(residuals.iter().map(Arg::Host));
             args.extend(ctx.block_args_mixed(l));
-            let outs = ctx.rt.execute("block_bwd_residuals", &args)?;
+            let outs = ctx.rt.execute(&bwd_name, &args)?;
             drop(args);
             drop(residuals);
             drop(res_guard);

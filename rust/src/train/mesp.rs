@@ -21,8 +21,8 @@ pub struct MespEngine {
 
 impl MespEngine {
     pub fn new(ctx: EngineCtx) -> anyhow::Result<Self> {
-        ctx.rt.warmup(&["embed_fwd", "block_fwd", "block_bwd_mesp",
-                        "lm_loss_grad"])?;
+        ctx.warmup(&["embed_fwd", "block_fwd", "block_bwd_mesp",
+                     "lm_loss_grad"])?;
         let store = CheckpointStore::new(ctx.tracker.clone(), ctx.spill_limit);
         Ok(MespEngine { ctx, store })
     }
@@ -38,12 +38,13 @@ impl MespEngine {
         F: FnMut(&mut EngineCtx, usize, Vec<HostTensor>)
             -> anyhow::Result<HostTensor>,
     {
+        let bwd = ctx.artifact("block_bwd_mesp");
         for l in (0..ctx.rt.dims().n_layers).rev() {
             let x = store.take(l)?; // checkpoint consumed, freed after call
             let mut args = vec![crate::runtime::Arg::Host(&x),
                                 crate::runtime::Arg::Host(&g)];
             args.extend(ctx.block_args_mixed(l));
-            let outs = ctx.rt.execute("block_bwd_mesp", &args)?;
+            let outs = ctx.rt.execute(&bwd, &args)?;
             drop(args);
             g = on_block(ctx, l, outs)?;
             // x and the previous g drop here — explicit lifecycle end

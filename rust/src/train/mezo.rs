@@ -23,7 +23,7 @@ pub struct MezoEngine {
 
 impl MezoEngine {
     pub fn new(ctx: EngineCtx) -> anyhow::Result<Self> {
-        ctx.rt.warmup(&["embed_fwd", "block_fwd", "lm_loss_fwd"])?;
+        ctx.warmup(&["embed_fwd", "block_fwd", "lm_loss_fwd"])?;
         Ok(MezoEngine { ctx, eps: 1e-3, seed: 0x5eed })
     }
 

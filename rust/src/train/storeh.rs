@@ -24,13 +24,13 @@ pub struct StoreHEngine {
 impl StoreHEngine {
     pub fn new(ctx: EngineCtx) -> anyhow::Result<Self> {
         anyhow::ensure!(
-            ctx.rt.has_artifact("block_fwd_saveh")
-                && ctx.rt.has_artifact("block_bwd_storeh"),
+            ctx.rt.has_artifact(&ctx.artifact("block_fwd_saveh"))
+                && ctx.rt.has_artifact(&ctx.artifact("block_bwd_storeh")),
             "config '{}' lacks the store-h ablation artifacts",
             ctx.rt.dims().name
         );
-        ctx.rt.warmup(&["embed_fwd", "block_fwd_saveh", "block_bwd_storeh",
-                        "lm_loss_grad"])?;
+        ctx.warmup(&["embed_fwd", "block_fwd_saveh", "block_bwd_storeh",
+                     "lm_loss_grad"])?;
         let store = CheckpointStore::new(ctx.tracker.clone(), ctx.spill_limit);
         let n = ctx.rt.dims().n_layers;
         Ok(StoreHEngine {
@@ -44,11 +44,12 @@ impl StoreHEngine {
     fn forward(&mut self, batch: &Batch) -> anyhow::Result<HostTensor> {
         use crate::runtime::Arg;
         let ctx = &self.ctx;
+        let fwd = ctx.artifact("block_fwd_saveh");
         let mut x = ctx.embed(&batch.tokens)?;
         for l in 0..ctx.rt.dims().n_layers {
             let mut args: Vec<Arg> = vec![Arg::Host(&x)];
             args.extend(ctx.block_args_mixed(l));
-            let mut outs = ctx.rt.execute("block_fwd_saveh", &args)?;
+            let mut outs = ctx.rt.execute(&fwd, &args)?;
             drop(args);
             let hs: Vec<HostTensor> = outs.drain(1..).collect();
             let h_bytes: u64 = hs.iter().map(|t| t.bytes()).sum();
@@ -73,6 +74,7 @@ impl StoreHEngine {
             -> anyhow::Result<HostTensor>,
     {
         use crate::runtime::Arg;
+        let bwd = ctx.artifact("block_bwd_storeh");
         for l in (0..ctx.rt.dims().n_layers).rev() {
             let x = store.take(l)?;
             let (hs, h_guard) = saved_h[l]
@@ -81,7 +83,7 @@ impl StoreHEngine {
             let mut args: Vec<Arg> = vec![Arg::Host(&x), Arg::Host(&g)];
             args.extend(hs.iter().map(Arg::Host));
             args.extend(ctx.block_args_mixed(l));
-            let outs = ctx.rt.execute("block_bwd_storeh", &args)?;
+            let outs = ctx.rt.execute(&bwd, &args)?;
             drop(args);
             drop(hs);
             drop(h_guard); // h released only now — the Table-5 cost

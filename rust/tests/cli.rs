@@ -106,6 +106,33 @@ fn gradcheck_command_passes() {
 }
 
 #[test]
+fn train_q4_reports_shrunken_residents() {
+    let (ok, text) = mesp(&[
+        "train", "--config", "toy", "--quant", "q4", "--steps", "2",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("quant=q4"), "{text}");
+    assert!(text.contains("resident base weights (q4)"), "{text}");
+    assert!(text.contains("block_bwd_mesp_q4"), "q4 exec stats listed: {text}");
+}
+
+#[test]
+fn gradcheck_q4_passes() {
+    let (ok, text) = mesp(&[
+        "gradcheck", "--config", "toy", "--quant", "q4", "--seeds", "1",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("gradcheck PASSED"));
+}
+
+#[test]
+fn train_rejects_bad_quant_mode() {
+    let (ok, text) = mesp(&["train", "--quant", "q8"]);
+    assert!(!ok);
+    assert!(text.contains("unknown quant mode"), "{text}");
+}
+
+#[test]
 fn inspect_lists_artifacts() {
     let (ok, text) = mesp(&["inspect", "--config", "toy"]);
     assert!(ok, "{text}");

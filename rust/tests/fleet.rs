@@ -4,8 +4,9 @@
 //! completes with finite losses; and the fleet-wide aggregate tracked
 //! peak never exceeds the budget.
 
-use mesp::config::{Method, TrainConfig};
+use mesp::config::{presets, Method, QuantMode, TrainConfig};
 use mesp::fleet::{grid, job_cost_bytes, FleetOptions, JobSpec, Scheduler};
+use mesp::memory::resident_weight_bytes;
 
 fn base(steps: usize) -> TrainConfig {
     TrainConfig {
@@ -86,31 +87,115 @@ fn one_mebp_budget_serializes_mebp_but_overlaps_mesp() {
 }
 
 #[test]
+fn f32_serializing_budget_overlaps_q4_jobs() {
+    // The concurrency headroom the q4 path buys: a budget sized to admit
+    // exactly one f32 MeSP job must overlap ≥2 q4 MeSP jobs, because
+    // admission charges the packed resident-weight footprint.
+    let base_f32 = base(30);
+    let mut base_q4 = base_f32.clone();
+    base_q4.quant = QuantMode::Q4;
+    let f32_cost = cost(&base_f32, Method::Mesp);
+    let q4_cost = cost(&base_q4, Method::Mesp);
+    assert!(q4_cost < f32_cost, "q4 job must cost less than its f32 twin");
+    let dims = presets::compiled("toy").unwrap();
+    let saved = resident_weight_bytes(&dims, QuantMode::F32)
+        - resident_weight_bytes(&dims, QuantMode::Q4);
+    // The charge delta is the resident saving minus the q4 oracle-dequant
+    // scratch term — the bulk of the saving must survive.
+    assert!(
+        f32_cost - q4_cost >= saved / 2,
+        "cost delta {} must reflect the resident-weight saving {}",
+        f32_cost - q4_cost,
+        saved
+    );
+
+    // One-f32-job budget: f32 MeSP jobs serialize...
+    let budget = 2 * f32_cost - 1;
+    let opts = FleetOptions { budget_bytes: budget, workers: 4 };
+    let report =
+        Scheduler::run(&opts, &base_f32, grid(&base_f32, &[Method::Mesp], 4))
+            .unwrap();
+    assert_eq!(report.failed(), 0, "{}", report.render());
+    assert_eq!(
+        report.peak_concurrent, 1,
+        "a one-f32-MeSP budget must serialize f32 jobs\n{}",
+        report.render()
+    );
+
+    // ...while q4 MeSP jobs overlap under the SAME budget.
+    assert!(2 * q4_cost <= budget, "premise: two q4 jobs must fit");
+    let report =
+        Scheduler::run(&opts, &base_q4, grid(&base_q4, &[Method::Mesp], 6))
+            .unwrap();
+    assert_eq!(report.failed(), 0, "{}", report.render());
+    assert!(
+        report.peak_concurrent >= 2,
+        "≥2 q4 MeSP jobs should have been admitted concurrently, got {}\n{}",
+        report.peak_concurrent,
+        report.render()
+    );
+    assert!(
+        report.aggregate_peak <= budget,
+        "aggregate tracked peak {} exceeds budget {}",
+        report.aggregate_peak,
+        budget
+    );
+    assert!(report.peak_committed <= budget);
+    for o in &report.outcomes {
+        let r = o.result.as_ref().unwrap();
+        assert!(r.summary.healthy(), "q4 job {} diverged", o.job.id);
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+    }
+}
+
+#[test]
+fn q4_resident_tag_matches_quantized_bytes() {
+    // The admission charge is honest: a live q4 session's tracked
+    // `weights:device` tag equals the analytical packed resident term.
+    let cfg = TrainConfig {
+        config: "toy".into(),
+        method: Method::Mesp,
+        quant: QuantMode::Q4,
+        log_every: usize::MAX,
+        ..Default::default()
+    };
+    let mut sess = mesp::coordinator::TrainSession::new(cfg).unwrap();
+    sess.run(1).unwrap();
+    let tag = sess.tracker.tag_bytes("weights:device");
+    let dims = presets::compiled("toy").unwrap();
+    assert_eq!(tag, resident_weight_bytes(&dims, QuantMode::Q4));
+}
+
+#[test]
 fn predicted_cost_bounds_measured_session_peak() {
     // The admission invariant hangs on this: a session's tracked peak —
     // which now includes the kernel engine's arena scratch (recompute
     // caches, GEMM packing panels) under the `scratch` tag — must stay
     // under its predicted cost for every method.
-    let base = base(3);
-    for method in Method::ALL {
-        let mut cfg = base.clone();
-        cfg.method = method;
-        let predicted = cost(&base, method);
-        let mut sess = mesp::coordinator::TrainSession::new(cfg).unwrap();
-        let summary = sess.run(3).unwrap();
-        // max per-step peak; construction transients are below it
-        let measured = summary.peak_bytes.max(sess.tracker.peak());
-        assert!(
-            measured <= predicted,
-            "{}: measured peak {measured} B exceeds predicted cost \
-             {predicted} B — admission would overcommit",
-            method.name()
-        );
-        assert!(
-            sess.tracker.tag_peak("scratch") > 0,
-            "{}: tracked peak must include a nonzero scratch tag",
-            method.name()
-        );
+    let mut base = base(3);
+    for quant in QuantMode::ALL {
+        base.quant = quant;
+        for method in Method::ALL {
+            let mut cfg = base.clone();
+            cfg.method = method;
+            let predicted = cost(&base, method);
+            let mut sess = mesp::coordinator::TrainSession::new(cfg).unwrap();
+            let summary = sess.run(3).unwrap();
+            // max per-step peak; construction transients are below it
+            let measured = summary.peak_bytes.max(sess.tracker.peak());
+            assert!(
+                measured <= predicted,
+                "{}/{}: measured peak {measured} B exceeds predicted cost \
+                 {predicted} B — admission would overcommit",
+                method.name(),
+                quant.name()
+            );
+            assert!(
+                sess.tracker.tag_peak("scratch") > 0,
+                "{}: tracked peak must include a nonzero scratch tag",
+                method.name()
+            );
+        }
     }
 }
 

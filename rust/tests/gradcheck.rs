@@ -7,9 +7,13 @@
 //! same assertions exercise the PJRT artifact runtime when built with
 //! `--features pjrt` and TrainConfig selects it.
 
-use mesp::config::{Method, TrainConfig};
+use mesp::config::{presets, KernelKind, Method, QuantMode, TrainConfig};
 use mesp::coordinator::TrainSession;
-use mesp::util::stats;
+use mesp::memory::MemoryTracker;
+use mesp::model::{quant, ModelState};
+use mesp::runtime::{Arg, Backend, KernelOptions, ReferenceBackend};
+use mesp::tensor::HostTensor;
+use mesp::util::{stats, Rng};
 
 fn base(config: &str, seed: u64) -> TrainConfig {
     TrainConfig {
@@ -88,6 +92,127 @@ fn mezo_estimate_uncorrelated_with_truth() {
         let sign = stats::sign_agreement(e, t);
         assert!(cos < 0.25, "layer {l}: |cosine| {cos:.3} too high for SPSA");
         assert!((sign - 0.5).abs() < 0.15, "layer {l}: sign agree {sign:.3}");
+    }
+}
+
+#[test]
+fn q4_gradient_parity_via_session_api() {
+    // The `mesp gradcheck --quant q4` path in miniature: exact-gradient
+    // methods agree through the quantized forward too.
+    let grads_q4 = |method: Method| -> Vec<Vec<f32>> {
+        let mut cfg = base("toy", 13);
+        cfg.method = method;
+        cfg.quant = QuantMode::Q4;
+        let mut sess = TrainSession::new(cfg).expect("session");
+        let (batch, _g) = sess.loader.next();
+        sess.engine.gradients(&batch).expect("gradients")
+    };
+    let mesp = grads_q4(Method::Mesp);
+    let mebp = grads_q4(Method::Mebp);
+    let sh = grads_q4(Method::StoreH);
+    assert_layers_close(&mesp, &mebp, 1e-6, "q4 MeSP vs MeBP");
+    assert_layers_close(&mesp, &sh, 1e-6, "q4 MeSP vs store-h");
+}
+
+/// Finite-difference gradcheck of dA/dB THROUGH the q4 forward. The
+/// probe loss is L(θ) = Σ y(θ) ⊙ G; the oracle loss is computed through
+/// host-dequantized weights (`block_fwd` on `quant::dequantize` output),
+/// which the fused path must match bitwise — so the finite differences
+/// of the oracle check the analytic grads of the packed path.
+#[test]
+fn q4_finite_difference_gradcheck_da_db() {
+    let dims = presets::compiled("toy").unwrap();
+    let tracker = MemoryTracker::new();
+    let rt = ReferenceBackend::with_kernels(
+        dims.clone(),
+        tracker.clone(),
+        KernelOptions { kind: KernelKind::Tiled, threads: 1 },
+    );
+    let model = ModelState::init_with_quant(&dims, 11, &tracker, QuantMode::Q4);
+    let qblock: Vec<HostTensor> =
+        model.blocks[0].tensors.iter().map(|t| t.value.clone()).collect();
+    // Host-dequantized twin of the packed block (the oracle's weights).
+    let deq_frozen = quant::dequantize_block(&dims, &qblock);
+    // Random nonzero LoRA state (a zero B would zero out every dA).
+    let mut rng = Rng::new(99);
+    let lora: Vec<HostTensor> = model.lora[0]
+        .tensors
+        .iter()
+        .map(|t| HostTensor::randn(&t.shape, 0.1, &mut rng))
+        .collect();
+    let x = HostTensor::randn(&[dims.batch, dims.seq, dims.d_model], 0.5, &mut rng);
+    let g = HostTensor::randn(&[dims.batch, dims.seq, dims.d_model], 1.0, &mut rng);
+
+    // Oracle loss: f32 forward through the host-dequantized weights.
+    let oracle_loss = |replace_idx: usize, replaced: &HostTensor| -> f64 {
+        let mut args: Vec<Arg> = vec![Arg::Host(&x)];
+        for t in &deq_frozen {
+            args.push(Arg::Host(t));
+        }
+        for (i, t) in lora.iter().enumerate() {
+            args.push(Arg::Host(if i == replace_idx { replaced } else { t }));
+        }
+        let y = rt.execute("block_fwd", &args).unwrap()
+            .into_iter().next().unwrap();
+        y.as_f32().iter().zip(g.as_f32())
+            .map(|(yv, gv)| (*yv as f64) * (*gv as f64)).sum()
+    };
+
+    // The packed forward IS the oracle forward, bitwise.
+    {
+        let mut q_args: Vec<Arg> = vec![Arg::Host(&x)];
+        for t in &qblock {
+            q_args.push(Arg::Host(t));
+        }
+        for t in &lora {
+            q_args.push(Arg::Host(t));
+        }
+        let y_q4 = rt.execute("block_fwd_q4", &q_args).unwrap()
+            .into_iter().next().unwrap();
+        let y_oracle_probe = oracle_loss(usize::MAX, &x); // no replacement
+        let y_q4_probe: f64 = y_q4.as_f32().iter().zip(g.as_f32())
+            .map(|(yv, gv)| (*yv as f64) * (*gv as f64)).sum();
+        assert_eq!(y_q4_probe, y_oracle_probe,
+                   "fused q4 forward diverged from the host-dequant oracle");
+    }
+
+    // Analytic dA/dB from the fused q4 MeSP backward.
+    let mut args: Vec<Arg> = vec![Arg::Host(&x), Arg::Host(&g)];
+    for t in &qblock {
+        args.push(Arg::Host(t));
+    }
+    for t in &lora {
+        args.push(Arg::Host(t));
+    }
+    let mut outs = rt.execute("block_bwd_mesp_q4", &args).unwrap();
+    outs.remove(0); // drop g_x; keep the 14 LoRA grads
+    assert_eq!(outs.len(), 14);
+
+    // Directional finite differences along each gradient: fd ≈ |dθ|.
+    for idx in [0usize, 1, 6, 13] {
+        let dtheta = &outs[idx];
+        let norm: f64 = dtheta.as_f32().iter()
+            .map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt();
+        assert!(norm > 1e-4, "q4 grad {idx} suspiciously small: {norm}");
+        let eps = 2e-2f64;
+        let perturb = |sign: f64| -> HostTensor {
+            let data: Vec<f32> = lora[idx]
+                .as_f32()
+                .iter()
+                .zip(dtheta.as_f32())
+                .map(|(p, d)| p + (sign * eps * (*d as f64) / norm) as f32)
+                .collect();
+            HostTensor::f32(&lora[idx].shape, data)
+        };
+        let lp = oracle_loss(idx, &perturb(1.0));
+        let lm = oracle_loss(idx, &perturb(-1.0));
+        let fd = (lp - lm) / (2.0 * eps);
+        let tol = 0.05 * norm + 0.02;
+        assert!(
+            (fd - norm).abs() < tol,
+            "q4 lora tensor {idx}: finite diff {fd:.6} vs analytic |g| \
+             {norm:.6} (tol {tol:.4})"
+        );
     }
 }
 

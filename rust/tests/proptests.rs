@@ -102,6 +102,72 @@ fn prop_quant_roundtrip_error_bounded() {
 }
 
 #[test]
+fn prop_quant_degenerate_rows_stay_finite() {
+    // Degenerate inputs — all-zero groups, constant rows, one huge
+    // outlier, subnormal magnitudes — must quantize to finite scales and
+    // dequantize to finite values; all-zero groups must come back as
+    // exact zeros (scale 0.0, no 0/0 anywhere).
+    forall(8, 80, |rng| {
+        let din = 64 * (1 + rng.below(3));
+        let dout = 1 + rng.below(12);
+        let mut w = vec![0.0f32; din * dout];
+        for g in 0..din / quant::GROUP {
+            match rng.below(5) {
+                0 => {} // all-zero group
+                1 => {
+                    // constant rows
+                    let v = rng.uniform() * 2.0 - 1.0;
+                    for r in 0..quant::GROUP {
+                        for c in 0..dout {
+                            w[(g * quant::GROUP + r) * dout + c] = v;
+                        }
+                    }
+                }
+                2 => {
+                    // one huge outlier in an otherwise-zero group
+                    let r = rng.below(quant::GROUP);
+                    let c = rng.below(dout);
+                    w[(g * quant::GROUP + r) * dout + c] = 1e30;
+                }
+                3 => {
+                    // subnormal magnitudes
+                    for r in 0..quant::GROUP {
+                        for c in 0..dout {
+                            w[(g * quant::GROUP + r) * dout + c] =
+                                1e-40 * (rng.uniform() * 2.0 - 1.0);
+                        }
+                    }
+                }
+                _ => {
+                    for r in 0..quant::GROUP {
+                        for c in 0..dout {
+                            w[(g * quant::GROUP + r) * dout + c] =
+                                rng.uniform() * 2.0 - 1.0;
+                        }
+                    }
+                }
+            }
+        }
+        let (packed, scales) = quant::quantize(&w, din, dout);
+        assert!(scales.iter().all(|s| s.is_finite() && *s >= 0.0));
+        let w2 = quant::dequantize(&packed, &scales, din, dout);
+        assert!(w2.iter().all(|v| v.is_finite()));
+        for r in 0..din {
+            let g = r / quant::GROUP;
+            for c in 0..dout {
+                if scales[g * dout + c] == 0.0 {
+                    assert_eq!(w2[r * dout + c], 0.0,
+                               "zero-scale group must dequantize to 0");
+                } else {
+                    let err = (w2[r * dout + c] - w[r * dout + c]).abs();
+                    assert!(err <= scales[g * dout + c] / 2.0 + 1e-6);
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_tokenizer_ids_in_range() {
     forall(4, 100, |rng| {
         let vocab = [256usize, 1024, 4096, 151_936][rng.below(4)];
