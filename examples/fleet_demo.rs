@@ -37,7 +37,11 @@ fn main() -> anyhow::Result<()> {
         fmt_mb(mesp_cost)
     );
 
-    let opts = FleetOptions { budget_bytes: budget, workers: 4 };
+    let opts = FleetOptions {
+        budget_bytes: budget,
+        workers: 4,
+        ..FleetOptions::default()
+    };
     let mut concurrency = Vec::new();
     for method in [Method::Mebp, Method::Mesp] {
         println!("--- {} fleet: 6 jobs ---", method.name());

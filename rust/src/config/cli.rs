@@ -114,12 +114,13 @@ impl Args {
 pub const TRAIN_FLAGS: &[&str] = &[
     "config", "backend", "method", "steps", "lr", "seed", "optimizer",
     "mezo-eps", "log-every", "spill-limit", "metrics", "artifacts",
-    "kernel", "threads", "quant",
+    "kernel", "threads", "quant", "save-every", "snapshot-dir", "resume",
 ];
 pub const FLEET_FLAGS: &[&str] = &[
     "config", "backend", "methods", "steps", "lr", "seed", "optimizer",
     "budget-mb", "jobs", "workers", "job-file", "artifacts",
-    "kernel", "threads", "quant",
+    "kernel", "threads", "quant", "budget-schedule", "preempt",
+    "snapshot-dir", "print-cost",
 ];
 pub const SIMULATE_FLAGS: &[&str] = &["model", "seq", "rank", "breakdown"];
 pub const GRADCHECK_FLAGS: &[&str] = &[
@@ -159,14 +160,26 @@ COMMANDS
               --kernel naive|tiled|parallel  --threads N (0 = all cores)
               --quant f32|q4 (q4: frozen base weights stay int4-packed
               for the whole session, dequantized inside the kernels)
+              --save-every N (snapshot every N steps; 0 = never)
+              --snapshot-dir DIR (where snapshots go; default snapshots/)
+              --resume PATH.snap (resume a suspended session bitwise;
+              the snapshot's config/method/seed win over these flags)
   fleet       Run many sessions concurrently under a device memory budget
               (admission control via the analytical peak-memory model).
               --budget-mb N  --jobs N  --workers N  --config toy|small
               --methods mesp,mebp|all  --steps N  --lr F  --seed N
               --optimizer sgd|momentum|adam  --job-file PATH.jsonl
+              (job lines may set "priority": 0..9 — higher wins)
               --backend reference|pjrt  --artifacts DIR  --quant f32|q4
               --kernel naive|tiled|parallel  --threads N (0 = auto:
               cores/workers, so jobs never oversubscribe the machine)
+              --preempt (arriving higher-priority jobs may park running
+              lower-priority jobs: snapshot → requeue → bitwise resume)
+              --budget-schedule step:mb,step:mb (shrink/grow the budget
+              after N fleet-wide steps; implies --preempt)
+              --snapshot-dir DIR (where preempted sessions park)
+              --print-cost (print per-method admission costs and exit —
+              CI sizes preemption budgets with this)
   simulate    Evaluate the analytical memory model at Qwen2.5 dims.
               --model 0.5b|1.5b|3b  --seq N  --rank N  [--breakdown]
   gradcheck   Assert MeSP ≡ MeBP ≡ store-h gradients on a runnable config.

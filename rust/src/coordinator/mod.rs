@@ -2,6 +2,7 @@
 //! backend → data pipeline → engine → metrics, and the sweep runner the
 //! reproduce drivers use to run method grids.
 
+use std::path::Path;
 use std::sync::Arc;
 
 use crate::config::{presets, BackendKind, Method, TrainConfig};
@@ -9,8 +10,10 @@ use crate::data::PrefetchLoader;
 use crate::fleet::{FleetOptions, Job, JobSpec, Scheduler};
 use crate::memory::MemoryTracker;
 use crate::metrics::{MetricsLogger, RunSummary};
+use crate::persist::{RngStreams, Snapshot};
 use crate::runtime::{Backend, KernelOptions, ReferenceBackend};
-use crate::train::{build_engine, common::EngineCtx, Engine};
+use crate::tensor::DType;
+use crate::train::{build_engine, common::EngineCtx, Engine, StepStats};
 use crate::util::rng::{derive, stream};
 
 /// Depth of the background batch-prefetch queue every session spawns.
@@ -56,6 +59,10 @@ pub struct TrainSession {
     pub loader: PrefetchLoader,
     pub metrics: MetricsLogger,
     pub tracker: MemoryTracker,
+    /// Batches drawn through [`Self::step_once`] since the deterministic
+    /// data stream began — the loader cursor a snapshot records and a
+    /// restore fast-forwards past (it survives suspend/resume cycles).
+    batches_consumed: u64,
 }
 
 impl TrainSession {
@@ -93,15 +100,163 @@ impl TrainSession {
             cfg.metrics_path.as_deref().map(std::path::Path::new),
             cfg.log_every,
         )?;
-        Ok(TrainSession { cfg, engine, loader, metrics, tracker })
+        Ok(TrainSession {
+            cfg,
+            engine,
+            loader,
+            metrics,
+            tracker,
+            batches_consumed: 0,
+        })
     }
 
-    /// Run `steps` optimization steps; returns the summary.
+    /// Resume a session from a snapshot file on a fresh tracker. See
+    /// [`Self::restore_with_tracker`].
+    pub fn restore(base: &TrainConfig, path: &Path) -> anyhow::Result<TrainSession> {
+        Self::restore_with_tracker(base, path, MemoryTracker::new())
+    }
+
+    /// Resume a suspended session: rebuild it from the snapshot's
+    /// identity (config/method/quant/optimizer/lr/seed) on `base`'s
+    /// wiring (backend/kernel/threads/logging), then restore every piece
+    /// of mutable state — adapters, optimizer moments, step counter,
+    /// loader cursor. The frozen base weights are regenerated from the
+    /// model stream seed and verified against the snapshot fingerprint;
+    /// a mismatch (different seed derivation, changed init, different
+    /// quant packing) refuses to resume instead of training on silently
+    /// different weights. The continued run is bitwise-identical to one
+    /// that was never suspended.
+    pub fn restore_with_tracker(
+        base: &TrainConfig,
+        path: &Path,
+        tracker: MemoryTracker,
+    ) -> anyhow::Result<TrainSession> {
+        let snap = Snapshot::load(path)?;
+        let cfg = snap.train_config(base);
+        let streams = RngStreams::derive_from(cfg.seed);
+        anyhow::ensure!(
+            streams == snap.rng,
+            "snapshot RNG stream seeds {:?} disagree with this build's \
+             derivation {streams:?} for seed {} — the derive scheme drifted; \
+             the resumed data/weight streams would diverge",
+            snap.rng,
+            cfg.seed
+        );
+        let mut sess = Self::with_tracker(cfg, tracker)?;
+        {
+            let ctx = sess.engine.ctx_mut();
+            anyhow::ensure!(
+                ctx.weights_fingerprint() == snap.weights_fingerprint,
+                "snapshot base-weight fingerprint {:#018x} does not match \
+                 the regenerated model's {:#018x} — seed, config dims, init \
+                 scheme or quant packing changed since the snapshot",
+                snap.weights_fingerprint,
+                ctx.weights_fingerprint()
+            );
+            anyhow::ensure!(
+                snap.lora.len() == ctx.model.lora.len(),
+                "snapshot has {} LoRA layers, model has {}",
+                snap.lora.len(),
+                ctx.model.lora.len()
+            );
+            for (l, layer) in snap.lora.iter().enumerate() {
+                let dst = &mut ctx.model.lora[l].tensors;
+                anyhow::ensure!(
+                    layer.len() == dst.len(),
+                    "snapshot layer {l} has {} adapter tensors, model has {}",
+                    layer.len(),
+                    dst.len()
+                );
+                for (i, t) in layer.iter().enumerate() {
+                    anyhow::ensure!(
+                        t.dtype() == DType::F32 && t.shape == dst[i].shape,
+                        "snapshot adapter {l}/{i} is {:?} {:?}, model expects \
+                         f32 {:?}",
+                        t.dtype(),
+                        t.shape,
+                        dst[i].shape
+                    );
+                    dst[i].as_f32_mut().copy_from_slice(t.as_f32());
+                }
+            }
+            ctx.opt.import_state(snap.opt_t, &snap.opt_m1, &snap.opt_m2)?;
+            ctx.step = snap.step as usize;
+        }
+        // Fast-forward the deterministic batch stream to the recorded
+        // cursor: the next batch the resumed session sees is exactly the
+        // one the uninterrupted run would have seen at this step. This
+        // replays O(steps) batch generations — a deliberate trade:
+        // batch generation is orders of magnitude cheaper than the
+        // training steps being restored, and replaying from (seed,
+        // count) keeps the snapshot format independent of the loader's
+        // internal buffering (stream buffer, tokenizer, corpus RNG).
+        for _ in 0..snap.batches_consumed {
+            let _ = sess.loader.next();
+        }
+        sess.batches_consumed = snap.batches_consumed;
+        Ok(sess)
+    }
+
+    /// Capture the session's complete mutable state (must be called at a
+    /// step boundary — the only time `TrainSession` exposes anyway).
+    pub fn snapshot(&self) -> Snapshot {
+        let ctx = self.engine.ctx();
+        let (opt_t, opt_m1, opt_m2) = ctx.opt.export_state();
+        Snapshot {
+            config: self.cfg.config.clone(),
+            method: self.cfg.method,
+            quant: self.cfg.quant,
+            optimizer: self.cfg.optimizer,
+            lr: self.cfg.lr,
+            seed: self.cfg.seed,
+            step: ctx.step as u64,
+            batches_consumed: self.batches_consumed,
+            rng: RngStreams::derive_from(self.cfg.seed),
+            weights_fingerprint: ctx.weights_fingerprint(),
+            lora: self
+                .engine
+                .ctx()
+                .model
+                .lora
+                .iter()
+                .map(|l| l.tensors.clone())
+                .collect(),
+            opt_t,
+            opt_m1,
+            opt_m2,
+        }
+    }
+
+    /// Snapshot to `path` (atomic write); returns bytes written.
+    pub fn save_snapshot(&self, path: &Path) -> anyhow::Result<u64> {
+        self.snapshot().save(path)
+    }
+
+    /// Optimization steps completed so far (continues across resume).
+    pub fn steps_done(&self) -> usize {
+        self.engine.ctx().step
+    }
+
+    /// Batches drawn from the data loader so far (the snapshot cursor).
+    pub fn batches_consumed(&self) -> u64 {
+        self.batches_consumed
+    }
+
+    /// Run ONE optimization step: draw a batch, step the engine, record
+    /// metrics. The unit the fleet scheduler interleaves with preemption
+    /// checks, and the granularity snapshots are taken at.
+    pub fn step_once(&mut self) -> anyhow::Result<StepStats> {
+        let (batch, _guard) = self.loader.next();
+        self.batches_consumed += 1;
+        let stats = self.engine.step(&batch)?;
+        self.metrics.record(self.engine.name(), &stats)?;
+        Ok(stats)
+    }
+
+    /// Run `steps` (more) optimization steps; returns the summary.
     pub fn run(&mut self, steps: usize) -> anyhow::Result<RunSummary> {
         for _ in 0..steps {
-            let (batch, _guard) = self.loader.next();
-            let stats = self.engine.step(&batch)?;
-            self.metrics.record(self.engine.name(), &stats)?;
+            self.step_once()?;
         }
         Ok(self.metrics.summary())
     }
@@ -137,7 +292,11 @@ pub fn sweep_methods(
             Job { id, spec }
         })
         .collect();
-    let opts = FleetOptions { budget_bytes: u64::MAX, workers: 1 };
+    let opts = FleetOptions {
+        budget_bytes: u64::MAX,
+        workers: 1,
+        ..FleetOptions::default()
+    };
     let report = Scheduler::run(&opts, base, jobs)?;
     let mut out = Vec::with_capacity(report.outcomes.len());
     for o in report.outcomes {

@@ -1,18 +1,36 @@
 //! Admission control: keep the sum of predicted per-session peak memory
-//! under the device budget.
+//! under the device budget — and, since the budget can now SHRINK
+//! mid-run (`--budget-schedule`) or be contended by higher-priority
+//! arrivals, decide which running job must yield.
 //!
 //! Each job is costed BEFORE it starts with the analytical peak-memory
 //! model (`memory::model`) at tracked widths, plus the reference
 //! backend's always-resident weight copies and the prefetch queue — i.e.
 //! the worst tracked moment one `TrainSession` of that spec can reach.
-//! Workers block in [`Admission::admit`] until the budget has room
+//! Workers block in [`Admission::admit_job`] until the budget has room
 //! (backpressure); the permit is RAII, so a finished (or crashed) session
 //! always returns its reservation. Because the per-job cost is an upper
 //! bound on the session's tracked peak, `sum(admitted costs) <= budget`
 //! implies the fleet-wide aggregate tracked peak stays under the budget.
+//!
+//! # Arrival order and preemption
+//!
+//! Initial admissions are granted strictly in job-id (submission) order
+//! via an arrival ticket, so "which job was already running when
+//! pressure arrived" is deterministic — priorities decide who YIELDS,
+//! not who goes first. With preemption enabled, a blocked arrival whose
+//! priority exceeds a running job's — or a budget shrink that leaves the
+//! running set over-committed — flags the lowest-priority running job
+//! (ties: the most recently admitted yields first). The flag is a
+//! cooperative request: the scheduler's step loop observes it via
+//! [`Permit::preempt_requested`], snapshots the session to disk, drops
+//! the permit (returning the reservation) and re-queues the job to
+//! resume later. Resumed admissions carry no ticket — they re-enter
+//! whenever the budget next has room.
 
 use std::collections::BTreeMap;
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::{presets, Method};
 use crate::coordinator::PREFETCH_DEPTH;
@@ -41,17 +59,105 @@ pub fn job_cost_bytes(spec: &JobSpec) -> anyhow::Result<u64> {
     Ok(activations + weights + queue)
 }
 
+/// One admitted job the gate is currently covering.
+#[derive(Debug)]
+struct RunningEntry {
+    /// Unique registration id (monotonic admission order).
+    reg: u64,
+    priority: u8,
+    cost: u64,
+    flag: Arc<AtomicBool>,
+}
+
+/// A thread blocked in the budget phase of [`Admission::admit_job`].
+/// Grants go to the highest-priority waiter first (ties: earliest), so a
+/// just-parked low-priority job cannot race the reservation away from
+/// the high-priority arrival it was parked FOR.
+#[derive(Debug)]
+struct Waiter {
+    wid: u64,
+    priority: u8,
+}
+
 #[derive(Debug, Default)]
 struct AdmState {
+    /// Current budget (mutable: `--budget-schedule` shrinks it mid-run).
+    budget: u64,
+    /// Highest budget the gate can still reach: max of the current
+    /// budget and every not-yet-applied schedule point. A job is
+    /// refused as "can never be admitted" only against THIS — a
+    /// transient shrink must park work, not kill it, when the schedule
+    /// grows the budget back later.
+    ceiling: u64,
     /// Sum of admitted job costs currently outstanding.
     committed: u64,
     /// Number of admitted jobs currently outstanding.
     active: usize,
+    /// Next initial job id to be granted (arrival-ticket gate).
+    next_ticket: usize,
+    preempt_enabled: bool,
+    running: Vec<RunningEntry>,
+    waiters: Vec<Waiter>,
+    wait_seq: u64,
+    reg_seq: u64,
+    preempts_requested: usize,
     active_by_method: BTreeMap<&'static str, usize>,
     peak_concurrent: usize,
     peak_committed: u64,
     peak_by_method: BTreeMap<&'static str, usize>,
     admitted_total: usize,
+}
+
+impl AdmState {
+    /// Sum of costs of running jobs already flagged for preemption —
+    /// budget that is committed but on its way back.
+    fn flagged(&self) -> u64 {
+        self.running
+            .iter()
+            .filter(|e| e.flag.load(Ordering::SeqCst))
+            .map(|e| e.cost)
+            .sum()
+    }
+
+    /// Flag lowest-priority running jobs (ties: most recently admitted
+    /// first) until `need` bytes fit under the budget, or no eligible
+    /// victim remains. `below` restricts victims to priorities strictly
+    /// below an arriving job's; `None` (budget shrink) may flag anyone.
+    fn flag_victims(&mut self, need: u64, below: Option<u8>) {
+        let eligible = |e: &&RunningEntry| {
+            !e.flag.load(Ordering::SeqCst)
+                && match below {
+                    Some(p) => e.priority < p,
+                    None => true,
+                }
+        };
+        // Feasibility first: if parking EVERY eligible victim still
+        // would not fit `need`, flag nobody — a pointless park/resume
+        // round trip costs snapshot I/O and admits nothing.
+        let reclaimable: u64 =
+            self.running.iter().filter(eligible).map(|e| e.cost).sum();
+        let keep_floor = self.committed - self.flagged() - reclaimable;
+        if keep_floor.saturating_add(need) > self.budget {
+            return;
+        }
+        loop {
+            // Stop once the unflagged running set plus the `need` bytes
+            // fit: (committed - flagged) + need <= budget. With need = 0
+            // (budget shrink) this flags exactly until the survivors fit.
+            let keep = self.committed - self.flagged();
+            if keep.saturating_add(need) <= self.budget {
+                return;
+            }
+            let victim = self
+                .running
+                .iter()
+                .filter(eligible)
+                .min_by_key(|e| (e.priority, u64::MAX - e.reg));
+            let Some(v) = victim else { return };
+            v.flag.store(true, Ordering::SeqCst);
+            self.preempts_requested += 1;
+        }
+    }
 }
 
 /// Snapshot of the admission high-water marks for the fleet report.
@@ -63,14 +169,15 @@ pub struct AdmissionStats {
     pub peak_committed: u64,
     /// Most concurrently-admitted jobs per method name.
     pub peak_by_method: BTreeMap<String, usize>,
-    /// Total jobs admitted over the fleet's lifetime.
+    /// Total jobs admitted over the fleet's lifetime (resumes included).
     pub admitted_total: usize,
+    /// Preemption requests issued (arrival pressure + budget shrinks).
+    pub preempts_requested: usize,
 }
 
 /// The budget gate. Shared by all workers of one fleet run.
 #[derive(Debug)]
 pub struct Admission {
-    budget: u64,
     state: Mutex<AdmState>,
     cv: Condvar,
 }
@@ -78,30 +185,117 @@ pub struct Admission {
 impl Admission {
     pub fn new(budget: u64) -> Admission {
         Admission {
-            budget,
-            state: Mutex::new(AdmState::default()),
+            state: Mutex::new(AdmState {
+                budget,
+                ceiling: budget,
+                ..AdmState::default()
+            }),
             cv: Condvar::new(),
         }
     }
 
+    /// Allow this gate to request preemption of running jobs (off by
+    /// default: a plain fleet run never parks anyone).
+    pub fn enable_preemption(&self) {
+        self.state.lock().unwrap().preempt_enabled = true;
+    }
+
     pub fn budget(&self) -> u64 {
-        self.budget
+        self.state.lock().unwrap().budget
+    }
+
+    /// Change the budget mid-run. If the new budget no longer covers
+    /// the running set and preemption is enabled, lowest-priority
+    /// running jobs are flagged until the survivors fit. The refusal
+    /// ceiling follows the new budget (static-world semantics); a
+    /// scheduler applying a budget SCHEDULE uses
+    /// [`Self::set_budget_with_ceiling`] so a transient dip parks jobs
+    /// instead of permanently refusing them.
+    pub fn set_budget(&self, new: u64) {
+        self.set_budget_with_ceiling(new, new);
+    }
+
+    /// [`Self::set_budget`] with an explicit refusal ceiling: the max
+    /// of `new` and every budget the schedule can still reach. Jobs
+    /// whose cost fits the ceiling but not the current budget WAIT
+    /// (the budget may grow back); only cost > ceiling is a permanent
+    /// "can never be admitted" refusal.
+    pub fn set_budget_with_ceiling(&self, new: u64, ceiling: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.budget = new;
+        st.ceiling = ceiling.max(new);
+        if st.preempt_enabled {
+            st.flag_victims(0, None);
+        }
+        self.cv.notify_all();
     }
 
     /// Reserve `cost` bytes for a job of `method`, blocking while the
-    /// budget is full. Errors immediately if the job could never fit.
-    pub fn admit(&self, method: Method, cost: u64) -> anyhow::Result<Permit<'_>> {
-        anyhow::ensure!(
-            cost <= self.budget,
-            "job cost {} MB exceeds the fleet budget {} MB — it can never \
-             be admitted",
-            fmt_mb(cost),
-            fmt_mb(self.budget)
-        );
+    /// budget is full. Errors if the job could never fit the CURRENT
+    /// budget. `ticket` carries the job id for initial admissions —
+    /// granted strictly in id order; resumed jobs pass `None` and
+    /// re-enter whenever there is room. A blocked arrival with
+    /// preemption enabled flags running jobs of strictly lower
+    /// `priority` to make room.
+    pub fn admit_job(
+        &self,
+        method: Method,
+        cost: u64,
+        priority: u8,
+        ticket: Option<usize>,
+    ) -> anyhow::Result<Permit<'_>> {
         let name = method.name();
         let mut st = self.state.lock().unwrap();
-        while cost > self.budget - st.committed {
+        if let Some(id) = ticket {
+            while st.next_ticket < id {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+        // Budget phase: register as a waiter; only the top waiter
+        // (highest priority, earliest arrival within a priority) may
+        // claim freed budget or request preemption.
+        st.wait_seq += 1;
+        let wid = st.wait_seq;
+        st.waiters.push(Waiter { wid, priority });
+        let granted = loop {
+            // Refuse only against the ceiling: under a budget schedule
+            // the current budget may be a transient dip the job should
+            // wait (or stay parked) through, not die on.
+            if cost > st.ceiling {
+                break false;
+            }
+            let top = st
+                .waiters
+                .iter()
+                .max_by_key(|w| (w.priority, std::cmp::Reverse(w.wid)))
+                .map(|w| w.wid);
+            if top == Some(wid) {
+                if st.committed <= st.budget && cost <= st.budget - st.committed
+                {
+                    break true;
+                }
+                if st.preempt_enabled {
+                    st.flag_victims(cost, Some(priority));
+                }
+            }
             st = self.cv.wait(st).unwrap();
+        };
+        st.waiters.retain(|w| w.wid != wid);
+        if ticket.is_some() {
+            // Grant or refuse, the arrival ticket advances — a refused
+            // job must not wedge every arrival behind it.
+            st.next_ticket += 1;
+        }
+        if !granted {
+            let ceiling = st.ceiling;
+            drop(st);
+            self.cv.notify_all();
+            anyhow::bail!(
+                "job cost {} MB exceeds the fleet budget ceiling {} MB — it \
+                 can never be admitted",
+                fmt_mb(cost),
+                fmt_mb(ceiling)
+            );
         }
         st.committed += cost;
         st.active += 1;
@@ -113,7 +307,24 @@ impl Admission {
         let per = *per;
         let peak = st.peak_by_method.entry(name).or_insert(0);
         *peak = (*peak).max(per);
-        Ok(Permit { adm: self, method: name, cost })
+        st.reg_seq += 1;
+        let reg = st.reg_seq;
+        let flag = Arc::new(AtomicBool::new(false));
+        st.running.push(RunningEntry {
+            reg,
+            priority,
+            cost,
+            flag: Arc::clone(&flag),
+        });
+        drop(st);
+        self.cv.notify_all();
+        Ok(Permit { adm: self, reg, method: name, cost, flag })
+    }
+
+    /// [`Self::admit_job`] without priority or arrival ticket — the
+    /// plain gate the non-preempting paths use.
+    pub fn admit(&self, method: Method, cost: u64) -> anyhow::Result<Permit<'_>> {
+        self.admit_job(method, cost, 0, None)
     }
 
     pub fn stats(&self) -> AdmissionStats {
@@ -127,14 +338,16 @@ impl Admission {
                 .map(|(k, v)| (k.to_string(), *v))
                 .collect(),
             admitted_total: st.admitted_total,
+            preempts_requested: st.preempts_requested,
         }
     }
 
-    fn release(&self, method: &'static str, cost: u64) {
+    fn release(&self, reg: u64, method: &'static str, cost: u64) {
         {
             let mut st = self.state.lock().unwrap();
             st.committed = st.committed.saturating_sub(cost);
             st.active = st.active.saturating_sub(1);
+            st.running.retain(|e| e.reg != reg);
             if let Some(n) = st.active_by_method.get_mut(method) {
                 *n = n.saturating_sub(1);
             }
@@ -144,22 +357,33 @@ impl Admission {
 }
 
 /// RAII budget reservation: returns its bytes on drop and wakes waiters.
+/// While held, [`Self::preempt_requested`] reports whether the gate has
+/// asked this job to park itself.
 #[derive(Debug)]
 pub struct Permit<'a> {
     adm: &'a Admission,
+    reg: u64,
     method: &'static str,
     cost: u64,
+    flag: Arc<AtomicBool>,
 }
 
 impl Permit<'_> {
     pub fn cost(&self) -> u64 {
         self.cost
     }
+
+    /// True once the gate wants this job's reservation back (arrival
+    /// pressure from a higher-priority job, or a budget shrink). The
+    /// holder should snapshot its session and drop the permit.
+    pub fn preempt_requested(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
 }
 
 impl Drop for Permit<'_> {
     fn drop(&mut self) {
-        self.adm.release(self.method, self.cost);
+        self.adm.release(self.reg, self.method, self.cost);
     }
 }
 
@@ -251,5 +475,150 @@ mod tests {
         let _a = adm.admit(Method::Mesp, u64::MAX / 4).unwrap();
         let _b = adm.admit(Method::Mesp, u64::MAX / 4).unwrap();
         assert_eq!(adm.stats().peak_concurrent, 2);
+    }
+
+    #[test]
+    fn arrival_tickets_grant_in_id_order() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        // Job 1's admit arrives FIRST but must wait for job 0's grant.
+        let adm = Arc::new(Admission::new(1000));
+        let order = Arc::new(AtomicUsize::new(0));
+        let (adm2, order2) = (Arc::clone(&adm), Arc::clone(&order));
+        let h = std::thread::spawn(move || {
+            let _p = adm2.admit_job(Method::Mesp, 10, 9, Some(1)).unwrap();
+            order2.fetch_max(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert_eq!(order.load(Ordering::SeqCst), 0, "ticket 1 must wait");
+        let _p0 = adm.admit_job(Method::Mesp, 10, 0, Some(0)).unwrap();
+        h.join().unwrap();
+        assert_eq!(order.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn blocked_higher_priority_arrival_flags_lower_priority_runner() {
+        use std::sync::Arc;
+        let adm = Arc::new(Admission::new(100));
+        adm.enable_preemption();
+        let low = adm.admit_job(Method::Mesp, 80, 1, Some(0)).unwrap();
+        assert!(!low.preempt_requested());
+        let adm2 = Arc::clone(&adm);
+        let h = std::thread::spawn(move || {
+            // blocks: 80 + 80 > 100; flags the priority-1 runner
+            let _hi = adm2.admit_job(Method::Mebp, 80, 9, Some(1)).unwrap();
+        });
+        // wait for the flag to land
+        for _ in 0..200 {
+            if low.preempt_requested() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(low.preempt_requested(), "runner must be asked to yield");
+        assert_eq!(adm.stats().preempts_requested, 1);
+        drop(low); // the park: reservation returns, the arrival admits
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn equal_or_higher_priority_runner_is_never_flagged() {
+        use std::sync::Arc;
+        let adm = Arc::new(Admission::new(100));
+        adm.enable_preemption();
+        let runner = adm.admit_job(Method::Mesp, 80, 5, Some(0)).unwrap();
+        let adm2 = Arc::clone(&adm);
+        let h = std::thread::spawn(move || {
+            let _p = adm2.admit_job(Method::Mesp, 80, 5, Some(1)).unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        assert!(
+            !runner.preempt_requested(),
+            "equal priority must not preempt"
+        );
+        drop(runner);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn budget_shrink_flags_lowest_priority_runner() {
+        let adm = Admission::new(200);
+        adm.enable_preemption();
+        let a = adm.admit_job(Method::Mesp, 90, 3, Some(0)).unwrap();
+        let b = adm.admit_job(Method::Mesp, 90, 1, Some(1)).unwrap();
+        adm.set_budget(100);
+        assert!(!a.preempt_requested(), "higher-priority runner survives");
+        assert!(b.preempt_requested(), "lowest priority parks");
+        assert_eq!(adm.budget(), 100);
+        drop(b);
+        drop(a);
+    }
+
+    #[test]
+    fn budget_shrink_without_preemption_flags_nobody() {
+        let adm = Admission::new(200);
+        let a = adm.admit_job(Method::Mesp, 90, 1, Some(0)).unwrap();
+        adm.set_budget(50);
+        assert!(!a.preempt_requested());
+        drop(a);
+    }
+
+    #[test]
+    fn transient_shrink_parks_instead_of_refusing_when_budget_grows_back() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let adm = Arc::new(Admission::new(100));
+        // Schedule semantics: budget dips to 40 now, but 100 is still
+        // reachable — an 80-cost job must WAIT, not die.
+        adm.set_budget_with_ceiling(40, 100);
+        let admitted = Arc::new(AtomicBool::new(false));
+        let (adm2, flag) = (Arc::clone(&adm), Arc::clone(&admitted));
+        let h = std::thread::spawn(move || {
+            let _p = adm2.admit(Method::Mesp, 80).unwrap();
+            flag.store(true, Ordering::SeqCst);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(!admitted.load(Ordering::SeqCst), "must wait through the dip");
+        adm.set_budget_with_ceiling(100, 100); // the promised growth lands
+        h.join().unwrap();
+        assert!(admitted.load(Ordering::SeqCst));
+
+        // Once the ceiling itself drops below the cost, refusal is
+        // permanent and immediate.
+        adm.set_budget_with_ceiling(40, 40);
+        let err = adm.admit(Method::Mesp, 80).unwrap_err().to_string();
+        assert!(err.contains("exceeds the fleet budget ceiling"), "{err}");
+    }
+
+    #[test]
+    fn infeasible_preemption_flags_nobody() {
+        // Budget 100; p9 runs 60, p1 runs 40. A p5 arrival of cost 50
+        // could only evict the p1 job (40), leaving 60+50 > 100 — so
+        // nobody should be parked for a request that cannot succeed.
+        use std::sync::Arc;
+        let adm = Arc::new(Admission::new(100));
+        adm.enable_preemption();
+        let hi = adm.admit_job(Method::Mesp, 60, 9, Some(0)).unwrap();
+        let lo = adm.admit_job(Method::Mesp, 40, 1, Some(1)).unwrap();
+        let adm2 = Arc::clone(&adm);
+        let h = std::thread::spawn(move || {
+            let _p = adm2.admit_job(Method::Mebp, 50, 5, Some(2)).unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        assert!(!lo.preempt_requested(), "pointless park must not be asked");
+        assert!(!hi.preempt_requested());
+        assert_eq!(adm.stats().preempts_requested, 0);
+        drop(hi); // now 40 + 50 fits after evicting nobody
+        h.join().unwrap();
+        drop(lo);
+    }
+
+    #[test]
+    fn refused_ticket_does_not_wedge_later_arrivals() {
+        let adm = Admission::new(100);
+        assert!(adm.admit_job(Method::Mebp, 101, 0, Some(0)).is_err());
+        // ticket 1 must still be grantable
+        let p = adm.admit_job(Method::Mesp, 50, 0, Some(1)).unwrap();
+        drop(p);
     }
 }

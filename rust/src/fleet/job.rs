@@ -14,8 +14,12 @@ use crate::util::Json;
 /// and fails loudly (same discipline as the CLI flag allowlists).
 /// `from_json`'s match must accept exactly this set (asserted by the
 /// `job_keys_list_matches_parser` test).
-pub const JOB_KEYS: &[&str] =
-    &["config", "method", "steps", "seed", "lr", "optimizer", "quant"];
+pub const JOB_KEYS: &[&str] = &[
+    "config", "method", "steps", "seed", "lr", "optimizer", "quant", "priority",
+];
+
+/// Highest admissible job priority (priorities are 0..=9; 0 = default).
+pub const MAX_PRIORITY: u64 = 9;
 
 /// A JSON number that must be a non-negative integer (seeds, step
 /// counts): floats with fractional parts, negatives, and values beyond
@@ -45,6 +49,12 @@ pub struct JobSpec {
     /// charges the packed footprint under `q4`, so the same budget
     /// overlaps more quantized jobs.
     pub quant: QuantMode,
+    /// Scheduling priority 0..=9 (higher wins). When the budget cannot
+    /// fit an arriving higher-priority job — or shrinks mid-run under a
+    /// `--budget-schedule` — the scheduler preempts the lowest-priority
+    /// RUNNING job: its session is snapshotted to disk, its budget
+    /// reservation released, and it re-enters the queue to resume later.
+    pub priority: u8,
 }
 
 impl JobSpec {
@@ -58,6 +68,7 @@ impl JobSpec {
             lr: base.lr,
             optimizer: base.optimizer,
             quant: base.quant,
+            priority: 0,
         }
     }
 
@@ -109,6 +120,14 @@ impl JobSpec {
                         v.as_str()
                             .ok_or_else(|| anyhow::anyhow!("'quant' must be a string"))?,
                     )?;
+                }
+                "priority" => {
+                    let p = as_exact_u64(v, "priority")?;
+                    anyhow::ensure!(
+                        p <= MAX_PRIORITY,
+                        "'priority' must be 0..={MAX_PRIORITY}, got {p}"
+                    );
+                    spec.priority = p as u8;
                 }
                 other => anyhow::bail!(
                     "unknown job key '{other}' (known: {})",
@@ -262,6 +281,7 @@ mod tests {
             ("lr", "0.01"),
             ("optimizer", "\"adam\""),
             ("quant", "\"q4\""),
+            ("priority", "9"),
         ] {
             assert!(JOB_KEYS.contains(&key), "test table missing {key}");
             let j = Json::parse(&format!("{{\"{key}\": {val}}}")).unwrap();
@@ -270,7 +290,21 @@ mod tests {
                 "advertised key '{key}' rejected"
             );
         }
-        assert_eq!(JOB_KEYS.len(), 7, "update the table when adding keys");
+        assert_eq!(JOB_KEYS.len(), 8, "update the table when adding keys");
+    }
+
+    #[test]
+    fn priority_key_parses_validates_and_defaults() {
+        let j = Json::parse(r#"{"priority": 9}"#).unwrap();
+        assert_eq!(JobSpec::from_json(&j, &base()).unwrap().priority, 9);
+        let j = Json::parse(r#"{"method": "mesp"}"#).unwrap();
+        assert_eq!(JobSpec::from_json(&j, &base()).unwrap().priority, 0,
+                   "priority defaults to 0");
+        for bad in [r#"{"priority": 10}"#, r#"{"priority": -1}"#,
+                    r#"{"priority": 2.5}"#, r#"{"priority": "high"}"#] {
+            let j = Json::parse(bad).unwrap();
+            assert!(JobSpec::from_json(&j, &base()).is_err(), "must reject {bad}");
+        }
     }
 
     #[test]

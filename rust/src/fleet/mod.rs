@@ -15,13 +15,21 @@
 //! the gate admits roughly twice as many concurrent MeSP sessions as
 //! MeBP sessions (`cargo run --release -- fleet --config toy
 //! --budget-mb 64 --jobs 8`, or `examples/fleet_demo.rs`).
+//!
+//! Since jobs carry a `priority` and sessions are snapshot-resumable
+//! ([`crate::persist`]), the scheduler also handles a SHRINKING budget:
+//! `--budget-schedule` (or an arriving higher-priority job) preempts the
+//! lowest-priority running job to disk and resumes it — bitwise — when
+//! the budget has room again. The fleet is a long-lived service, not a
+//! batch runner: a squeeze parks work instead of killing it.
 
 pub mod admission;
 pub mod job;
 pub mod scheduler;
 
 pub use admission::{job_cost_bytes, Admission, AdmissionStats, Permit};
-pub use job::{grid, load_jobs, Job, JobSpec};
+pub use job::{grid, load_jobs, Job, JobSpec, MAX_PRIORITY};
 pub use scheduler::{
-    FleetOptions, FleetReport, JobOutcome, JobResult, MethodStats, Scheduler,
+    parse_budget_schedule, BudgetChange, FleetOptions, FleetReport, JobOutcome,
+    JobResult, MethodStats, Scheduler,
 };

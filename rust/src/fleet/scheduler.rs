@@ -1,24 +1,89 @@
 //! The fleet scheduler: a worker pool draining a job queue behind the
-//! admission gate.
+//! admission gate — with preempt-to-disk, so a budget squeeze parks work
+//! instead of killing it.
 //!
 //! Each worker pops a job, costs it, blocks until the budget admits it,
 //! then runs a full [`TrainSession`] on a per-job child of the fleet-wide
 //! aggregate [`MemoryTracker`]. The session's tracked bytes therefore
 //! roll up into one aggregate whose peak is the fleet's true concurrent
 //! high-water mark — the number the report compares against the budget.
+//!
+//! # Preemption
+//!
+//! Sessions run step by step and poll their permit between steps. When
+//! the admission gate asks a job to yield — an arriving higher-priority
+//! job cannot fit, or a [`BudgetChange`] from `--budget-schedule` shrank
+//! the budget below the running set — the session is snapshotted to the
+//! fleet snapshot dir ([`crate::persist`], bitwise-resumable), dropped
+//! (releasing every tracked byte), its permit returned, and the job
+//! re-enters the queue to resume later from exactly where it stopped.
+//! While parked, the snapshot's on-disk bytes are tracked under the
+//! `snapshot` tag on the fleet aggregate, so a memory profile shows
+//! where the displaced state went.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::Mutex;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
 use crate::config::TrainConfig;
 use crate::coordinator::TrainSession;
-use crate::memory::MemoryTracker;
+use crate::memory::{Guard, MemoryTracker};
 use crate::metrics::{RunSummary, TableBuilder};
 use crate::util::stats::fmt_mb;
 
 use super::admission::{job_cost_bytes, Admission};
 use super::job::Job;
+
+/// One point of a `--budget-schedule`: once the fleet has completed
+/// `at_step` optimization steps in total (across all jobs), the budget
+/// becomes `budget_bytes`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BudgetChange {
+    pub at_step: u64,
+    pub budget_bytes: u64,
+}
+
+/// Parse the `--budget-schedule step:mb,step:mb` syntax: a comma-
+/// separated list of `fleet-step:budget-MB` points, strictly ascending
+/// in step. Example: `--budget-schedule 20:48,50:24` shrinks the budget
+/// to 48 MB after 20 fleet-wide steps and to 24 MB after 50.
+pub fn parse_budget_schedule(s: &str) -> anyhow::Result<Vec<BudgetChange>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        let (step, mb) = p.split_once(':').ok_or_else(|| {
+            anyhow::anyhow!(
+                "budget-schedule entry '{p}' is not step:mb (e.g. 20:48)"
+            )
+        })?;
+        let at_step: u64 = step.trim().parse().map_err(|_| {
+            anyhow::anyhow!("budget-schedule step '{step}' is not an integer")
+        })?;
+        let mb: u64 = mb.trim().parse().map_err(|_| {
+            anyhow::anyhow!("budget-schedule budget '{mb}' is not an integer (MB)")
+        })?;
+        anyhow::ensure!(mb > 0, "budget-schedule budget must be positive MB");
+        let budget_bytes = mb
+            .checked_mul(1 << 20)
+            .ok_or_else(|| anyhow::anyhow!("budget-schedule {mb} MB overflows"))?;
+        out.push(BudgetChange { at_step, budget_bytes });
+    }
+    anyhow::ensure!(!out.is_empty(), "empty budget schedule '{s}'");
+    for w in out.windows(2) {
+        anyhow::ensure!(
+            w[0].at_step < w[1].at_step,
+            "budget-schedule steps must be strictly ascending ({} then {})",
+            w[0].at_step,
+            w[1].at_step
+        );
+    }
+    Ok(out)
+}
 
 /// Fleet-wide knobs (the job list and base `TrainConfig` ride separately).
 #[derive(Debug, Clone)]
@@ -28,9 +93,33 @@ pub struct FleetOptions {
     pub budget_bytes: u64,
     /// Worker threads draining the queue (clamped to the job count).
     pub workers: usize,
+    /// Allow arriving higher-priority jobs to preempt running
+    /// lower-priority jobs (snapshot → requeue → resume). Implied by a
+    /// non-empty `budget_schedule`.
+    pub preempt: bool,
+    /// Where preempted sessions park their snapshots (default: a
+    /// per-process temp directory).
+    pub snapshot_dir: Option<PathBuf>,
+    /// Mid-run budget changes, keyed by total fleet steps completed.
+    pub budget_schedule: Vec<BudgetChange>,
 }
 
-/// What one finished job produced.
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions {
+            budget_bytes: u64::MAX,
+            workers: 1,
+            preempt: false,
+            snapshot_dir: None,
+            budget_schedule: Vec::new(),
+        }
+    }
+}
+
+/// What one finished job produced. For a job that was preempted along
+/// the way, `summary`/`losses` cover the FINAL run segment (from its
+/// last resume to completion) — the trajectory as a whole is still
+/// bitwise-identical to an uninterrupted run of the same spec.
 #[derive(Debug, Clone)]
 pub struct JobResult {
     pub summary: RunSummary,
@@ -45,11 +134,16 @@ pub struct JobOutcome {
     pub job: Job,
     /// Predicted peak bytes the admission gate reserved.
     pub cost_bytes: u64,
-    /// Seconds spent queued behind the budget.
+    /// Seconds spent queued behind the budget (summed over re-admissions).
     pub wait_secs: f64,
-    /// Seconds from admission to completion.
+    /// Seconds from admission to completion (summed over run segments).
     pub run_secs: f64,
+    /// Worker that ran the job's final segment.
     pub worker: usize,
+    /// Times this job was preempted (snapshotted + requeued).
+    pub preempts: u32,
+    /// Times this job successfully resumed from a snapshot.
+    pub resumes: u32,
     pub result: Result<JobResult, String>,
 }
 
@@ -67,7 +161,10 @@ pub struct MethodStats {
 /// Everything a fleet run produced.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
+    /// Initial budget (the schedule may have changed it since).
     pub budget_bytes: u64,
+    /// Budget in force when the fleet finished.
+    pub final_budget_bytes: u64,
     pub workers: usize,
     /// Outcomes in job-id order.
     pub outcomes: Vec<JobOutcome>,
@@ -79,6 +176,12 @@ pub struct FleetReport {
     pub peak_committed: u64,
     /// Most jobs admitted at once, across methods.
     pub peak_concurrent: usize,
+    /// Total preemptions (sessions parked to disk).
+    pub preempts: usize,
+    /// Total successful resumes from parked snapshots.
+    pub resumes: usize,
+    /// High-water mark of parked snapshot bytes (`snapshot` tag).
+    pub snapshot_peak_bytes: u64,
     pub per_method: BTreeMap<String, MethodStats>,
 }
 
@@ -100,8 +203,8 @@ impl FleetReport {
     }
 
     /// Render the fleet report: headline occupancy numbers, the
-    /// per-method concurrency table (the MeSP-vs-MeBP demo), and per-job
-    /// rows.
+    /// preemption tally, the per-method concurrency table (the
+    /// MeSP-vs-MeBP demo), and per-job rows.
     pub fn render(&self) -> String {
         let mut out = String::from("## fleet report\n\n");
         out.push_str(&format!(
@@ -115,11 +218,19 @@ impl FleetReport {
         ));
         out.push_str(&format!(
             "budget {} MB | predicted occupancy peak {} MB | aggregate \
-             tracked peak {} MB | peak concurrent jobs {}\n\n",
+             tracked peak {} MB | peak concurrent jobs {}\n",
             fmt_mb(self.budget_bytes),
             fmt_mb(self.peak_committed),
             fmt_mb(self.aggregate_peak),
             self.peak_concurrent
+        ));
+        out.push_str(&format!(
+            "preempts {} | resumes {} | parked snapshot peak {} MB | \
+             final budget {} MB\n\n",
+            self.preempts,
+            self.resumes,
+            fmt_mb(self.snapshot_peak_bytes),
+            fmt_mb(self.final_budget_bytes)
         ));
 
         let mut t = TableBuilder::new(&[
@@ -138,8 +249,8 @@ impl FleetReport {
         out.push('\n');
 
         let mut t = TableBuilder::new(&[
-            "Job", "Method", "Config", "Steps", "Wait s", "Run s",
-            "Final loss", "Peak MB", "Status",
+            "Job", "Pri", "Method", "Config", "Steps", "Pre", "Wait s",
+            "Run s", "Final loss", "Peak MB", "Status",
         ]);
         for o in &self.outcomes {
             let (loss, peak, status) = match &o.result {
@@ -153,9 +264,11 @@ impl FleetReport {
             };
             t.row(vec![
                 o.job.id.to_string(),
+                o.job.spec.priority.to_string(),
                 o.job.spec.method.name().into(),
                 o.job.spec.config.clone(),
                 o.job.spec.steps.to_string(),
+                o.preempts.to_string(),
                 format!("{:.3}", o.wait_secs),
                 format!("{:.3}", o.run_secs),
                 loss,
@@ -177,6 +290,85 @@ pub fn kernel_thread_budget(cores: usize, workers: usize) -> usize {
     (cores / workers.max(1)).max(1)
 }
 
+/// A session parked on disk between preemption and resume.
+struct Parked {
+    path: PathBuf,
+    /// Holds the snapshot's byte count under the aggregate `snapshot`
+    /// tag while the job is parked; dropped on resume.
+    _snapshot_guard: Guard,
+}
+
+/// One unit in the scheduler queue: a job plus its suspend/resume
+/// baggage (accumulated across preemption cycles).
+struct QueueEntry {
+    job: Job,
+    parked: Option<Parked>,
+    preempts: u32,
+    resumes: u32,
+    wait_secs: f64,
+    run_secs: f64,
+}
+
+impl QueueEntry {
+    fn fresh(job: Job) -> QueueEntry {
+        QueueEntry {
+            job,
+            parked: None,
+            preempts: 0,
+            resumes: 0,
+            wait_secs: 0.0,
+            run_secs: 0.0,
+        }
+    }
+}
+
+struct QueueState {
+    entries: VecDeque<QueueEntry>,
+    done: usize,
+    total: usize,
+}
+
+/// Fleet-wide step counter driving the budget schedule.
+struct Progress {
+    steps: AtomicU64,
+    schedule: Vec<BudgetChange>,
+    next: Mutex<usize>,
+}
+
+impl Progress {
+    /// Record one completed optimization step; apply every schedule
+    /// point the new total has crossed. Each application also lowers
+    /// the refusal ceiling to the max of the new budget and every
+    /// still-pending point, so a transient dip parks jobs (they wait
+    /// for the growth the schedule promises) while a permanent shrink
+    /// below a job's cost eventually refuses it honestly.
+    fn bump(&self, admission: &Admission) {
+        let total = self.steps.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.schedule.is_empty() {
+            return;
+        }
+        let mut next = self.next.lock().unwrap();
+        while *next < self.schedule.len()
+            && self.schedule[*next].at_step <= total
+        {
+            let budget = self.schedule[*next].budget_bytes;
+            let ceiling = self.schedule[*next + 1..]
+                .iter()
+                .map(|c| c.budget_bytes)
+                .max()
+                .unwrap_or(0)
+                .max(budget);
+            admission.set_budget_with_ceiling(budget, ceiling);
+            *next += 1;
+        }
+    }
+}
+
+enum RunOutcome {
+    Done(JobOutcome),
+    Parked(QueueEntry),
+}
+
 /// The scheduler entry point (stateless; all state lives per-run).
 pub struct Scheduler;
 
@@ -193,23 +385,93 @@ impl Scheduler {
         anyhow::ensure!(opts.budget_bytes > 0, "fleet budget must be positive");
         let workers = opts.workers.clamp(1, jobs.len());
         let n_jobs = jobs.len();
+        let preempt_enabled = opts.preempt || !opts.budget_schedule.is_empty();
+
+        // Arrival tickets need the queue to hold ids 0..n IN ORDER (what
+        // grid / load_jobs / sweep_methods produce): a worker blocked on
+        // ticket k must never sit in front of the unpopped job that
+        // would advance the ticket. Hand-built out-of-order job lists
+        // fall back to un-ticketed admission.
+        let ticketed = jobs.iter().enumerate().all(|(i, j)| j.id == i);
+
+        let snap_dir = opts.snapshot_dir.clone().unwrap_or_else(|| {
+            std::env::temp_dir()
+                .join(format!("mesp-fleet-{}", std::process::id()))
+        });
+        if preempt_enabled {
+            std::fs::create_dir_all(&snap_dir).map_err(|e| {
+                anyhow::anyhow!("create snapshot dir {}: {e}", snap_dir.display())
+            })?;
+        }
 
         let admission = Admission::new(opts.budget_bytes);
+        // The refusal ceiling spans the whole schedule: a job that fits
+        // any still-reachable budget waits/parks through dips instead of
+        // being refused permanently.
+        let ceiling = opts
+            .budget_schedule
+            .iter()
+            .map(|c| c.budget_bytes)
+            .max()
+            .unwrap_or(0)
+            .max(opts.budget_bytes);
+        admission.set_budget_with_ceiling(opts.budget_bytes, ceiling);
+        if preempt_enabled {
+            admission.enable_preemption();
+        }
+        let progress = Progress {
+            steps: AtomicU64::new(0),
+            schedule: opts.budget_schedule.clone(),
+            next: Mutex::new(0),
+        };
         let aggregate = MemoryTracker::new();
-        let queue: Mutex<VecDeque<Job>> = Mutex::new(jobs.into());
-        let results: Mutex<Vec<JobOutcome>> = Mutex::new(Vec::with_capacity(n_jobs));
+        let queue = Mutex::new(QueueState {
+            entries: jobs.into_iter().map(QueueEntry::fresh).collect(),
+            done: 0,
+            total: n_jobs,
+        });
+        let qcv = Condvar::new();
+        let results: Mutex<Vec<JobOutcome>> =
+            Mutex::new(Vec::with_capacity(n_jobs));
 
         let start = Instant::now();
         std::thread::scope(|s| {
             for w in 0..workers {
-                let (queue, results) = (&queue, &results);
-                let (admission, aggregate) = (&admission, &aggregate);
+                let (queue, qcv, results) = (&queue, &qcv, &results);
+                let (admission, aggregate, progress) =
+                    (&admission, &aggregate, &progress);
+                let snap_dir = &snap_dir;
                 s.spawn(move || loop {
-                    let job = queue.lock().unwrap().pop_front();
-                    let Some(job) = job else { break };
-                    let outcome =
-                        run_job(w, workers, job, admission, aggregate, base);
-                    results.lock().unwrap().push(outcome);
+                    // Pop the next queue entry; a parked entry or a fresh
+                    // job alike. Wait while the queue is empty but jobs
+                    // are still running (they may park and come back).
+                    let entry = {
+                        let mut q = queue.lock().unwrap();
+                        loop {
+                            if let Some(e) = q.entries.pop_front() {
+                                break Some(e);
+                            }
+                            if q.done >= q.total {
+                                break None;
+                            }
+                            q = qcv.wait(q).unwrap();
+                        }
+                    };
+                    let Some(entry) = entry else { break };
+                    match run_job(
+                        w, workers, entry, admission, aggregate, base,
+                        snap_dir, preempt_enabled, ticketed, progress,
+                    ) {
+                        RunOutcome::Done(outcome) => {
+                            results.lock().unwrap().push(outcome);
+                            queue.lock().unwrap().done += 1;
+                            qcv.notify_all();
+                        }
+                        RunOutcome::Parked(entry) => {
+                            queue.lock().unwrap().entries.push_back(entry);
+                            qcv.notify_all();
+                        }
+                    }
                 });
             }
         });
@@ -238,7 +500,11 @@ impl Scheduler {
 
         Ok(FleetReport {
             budget_bytes: opts.budget_bytes,
+            final_budget_bytes: admission.budget(),
             workers,
+            preempts: outcomes.iter().map(|o| o.preempts as usize).sum(),
+            resumes: outcomes.iter().map(|o| o.resumes as usize).sum(),
+            snapshot_peak_bytes: aggregate.tag_peak("snapshot"),
             outcomes,
             wall_secs,
             aggregate_peak: aggregate.peak(),
@@ -249,77 +515,152 @@ impl Scheduler {
     }
 }
 
-/// Cost → admit (blocking) → run one session on a child tracker. The
+/// Cost → admit (blocking) → run one session step-by-step on a child
+/// tracker, polling the permit for preemption between steps. A parked
+/// session is snapshotted and its entry returned for requeueing; the
 /// session is dropped (all its tracked bytes released) BEFORE the permit
 /// returns the reservation, so the budget always covers live sessions.
+#[allow(clippy::too_many_arguments)] // one call site; a worker's full wiring
 fn run_job(
     worker: usize,
     workers: usize,
-    job: Job,
+    mut entry: QueueEntry,
     admission: &Admission,
     aggregate: &MemoryTracker,
     base: &TrainConfig,
-) -> JobOutcome {
+    snap_dir: &Path,
+    preempt_enabled: bool,
+    ticketed: bool,
+    progress: &Progress,
+) -> RunOutcome {
+    let job = entry.job.clone();
+    let fail = |entry: &QueueEntry, cost_bytes: u64, msg: String| {
+        RunOutcome::Done(JobOutcome {
+            job: entry.job.clone(),
+            cost_bytes,
+            wait_secs: entry.wait_secs,
+            run_secs: entry.run_secs,
+            worker,
+            preempts: entry.preempts,
+            resumes: entry.resumes,
+            result: Err(msg),
+        })
+    };
+
     let cost_bytes = match job_cost_bytes(&job.spec) {
         Ok(c) => c,
-        Err(e) => {
-            return JobOutcome {
-                job,
-                cost_bytes: 0,
-                wait_secs: 0.0,
-                run_secs: 0.0,
-                worker,
-                result: Err(format!("costing failed: {e:#}")),
-            }
-        }
+        Err(e) => return fail(&entry, 0, format!("costing failed: {e:#}")),
     };
 
+    // Initial admissions carry their job id as an arrival ticket (granted
+    // strictly in id order — determinism for the preemption tests);
+    // resumed jobs re-enter whenever the budget next has room.
+    let ticket = (ticketed && entry.parked.is_none()).then_some(job.id);
     let queued = Instant::now();
-    let permit = match admission.admit(job.spec.method, cost_bytes) {
+    let permit = match admission.admit_job(
+        job.spec.method,
+        cost_bytes,
+        job.spec.priority,
+        ticket,
+    ) {
         Ok(p) => p,
         Err(e) => {
-            return JobOutcome {
-                job,
-                cost_bytes,
-                wait_secs: queued.elapsed().as_secs_f64(),
-                run_secs: 0.0,
-                worker,
-                result: Err(format!("{e:#}")),
-            }
+            entry.wait_secs += queued.elapsed().as_secs_f64();
+            return fail(&entry, cost_bytes, format!("{e:#}"));
         }
     };
-    let wait_secs = queued.elapsed().as_secs_f64();
+    entry.wait_secs += queued.elapsed().as_secs_f64();
 
     let started = Instant::now();
-    let result = (|| -> anyhow::Result<JobResult> {
-        let mut cfg = job.spec.to_train_config(base);
-        if cfg.threads == 0 {
-            // Budget kernel threads against the worker pool so `workers`
-            // concurrent sessions don't oversubscribe the machine.
-            cfg.threads =
-                kernel_thread_budget(crate::runtime::kernels::auto_threads(), workers);
+    let mut cfg = job.spec.to_train_config(base);
+    if cfg.threads == 0 {
+        // Budget kernel threads against the worker pool so `workers`
+        // concurrent sessions don't oversubscribe the machine.
+        cfg.threads =
+            kernel_thread_budget(crate::runtime::kernels::auto_threads(), workers);
+    }
+    let target = cfg.steps;
+
+    let built = match &entry.parked {
+        Some(p) => {
+            TrainSession::restore_with_tracker(&cfg, &p.path, aggregate.child())
         }
-        let steps = cfg.steps;
-        let mut sess = TrainSession::with_tracker(cfg, aggregate.child())?;
-        let summary = sess.run(steps)?;
+        None => TrainSession::with_tracker(cfg, aggregate.child()),
+    };
+    let mut sess = match built {
+        Ok(s) => s,
+        Err(e) => {
+            entry.run_secs += started.elapsed().as_secs_f64();
+            drop(permit);
+            return fail(&entry, cost_bytes, format!("{e:#}"));
+        }
+    };
+    if let Some(p) = entry.parked.take() {
+        entry.resumes += 1;
+        let _ = std::fs::remove_file(&p.path);
+        // p drops here: the `snapshot` tag bytes return to the aggregate.
+    }
+
+    // Step until done or asked to yield.
+    let mut park = false;
+    let result = (|| -> anyhow::Result<Option<JobResult>> {
+        while sess.steps_done() < target {
+            if preempt_enabled && permit.preempt_requested() {
+                return Ok(None);
+            }
+            sess.step_once()?;
+            progress.bump(admission);
+        }
+        let summary = sess.metrics.summary();
         let losses = sess.losses();
         // max per-step tracked peak (the engines reset the peak at step
         // boundaries, so the raw tracker only remembers the last step)
         let session_peak = summary.peak_bytes;
-        Ok(JobResult { summary, losses, session_peak })
-        // `sess` drops here: every tracked byte of the job is released
-        // from the aggregate before the permit below frees the budget.
+        Ok(Some(JobResult { summary, losses, session_peak }))
     })();
-    let run_secs = started.elapsed().as_secs_f64();
-    drop(permit);
+    entry.run_secs += started.elapsed().as_secs_f64();
 
-    JobOutcome {
-        job,
-        cost_bytes,
-        wait_secs,
-        run_secs,
-        worker,
-        result: result.map_err(|e| format!("{e:#}")),
+    let parked = match result {
+        Ok(Some(jr)) => {
+            drop(sess);
+            // `sess` dropped: every tracked byte of the job is released
+            // from the aggregate before the permit frees the budget.
+            drop(permit);
+            return RunOutcome::Done(JobOutcome {
+                job,
+                cost_bytes,
+                wait_secs: entry.wait_secs,
+                run_secs: entry.run_secs,
+                worker,
+                preempts: entry.preempts,
+                resumes: entry.resumes,
+                result: Ok(jr),
+            });
+        }
+        Ok(None) => {
+            park = true;
+            let path = snap_dir
+                .join(format!("job-{}-step-{}.snap", job.id, sess.steps_done()));
+            sess.save_snapshot(&path).map(|bytes| (path, bytes))
+        }
+        Err(e) => Err(e),
+    };
+
+    match parked {
+        Ok((path, bytes)) => {
+            drop(sess);
+            let guard = aggregate.track("snapshot", bytes);
+            drop(permit);
+            entry.preempts += 1;
+            entry.parked = Some(Parked { path, _snapshot_guard: guard });
+            RunOutcome::Parked(entry)
+        }
+        Err(e) => {
+            drop(sess);
+            drop(permit);
+            let what = if park { "snapshot failed: " } else { "" };
+            fail(&entry, cost_bytes, format!("{what}{e:#}"))
+        }
     }
 }
 
@@ -338,6 +679,23 @@ mod tests {
             let per = kernel_thread_budget(cores, workers);
             assert!(per * workers <= cores.max(workers),
                     "{workers}x{per} threads oversubscribe {cores} cores");
+        }
+    }
+
+    #[test]
+    fn budget_schedule_parses_and_validates() {
+        let s = parse_budget_schedule("20:48,50:24").unwrap();
+        assert_eq!(
+            s,
+            vec![
+                BudgetChange { at_step: 20, budget_bytes: 48 << 20 },
+                BudgetChange { at_step: 50, budget_bytes: 24 << 20 },
+            ]
+        );
+        assert_eq!(parse_budget_schedule(" 5:1 ").unwrap().len(), 1);
+        for bad in ["", "20", "20:", ":48", "x:48", "20:y", "20:0",
+                    "50:24,20:48", "20:48,20:24"] {
+            assert!(parse_budget_schedule(bad).is_err(), "must reject '{bad}'");
         }
     }
 }

@@ -76,20 +76,66 @@ fn train_config(args: &Args) -> anyhow::Result<TrainConfig> {
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = train_config(args)?;
+    let save_every = args.usize("save-every", 0)?;
+    let snap_dir = std::path::PathBuf::from(args.str("snapshot-dir", "snapshots"));
     let steps = cfg.steps;
-    let method = cfg.method;
-    let quant = cfg.quant;
+    let mut sess = match args.opt_str("resume") {
+        Some(path) => {
+            // The snapshot's identity (config/method/quant/optimizer/lr/
+            // seed) wins over the flags; backend/kernel/threads wiring
+            // stays with the caller — resume parity is bitwise on every
+            // kernel variant and thread count.
+            let sess = TrainSession::restore(&cfg, Path::new(&path))?;
+            println!(
+                "resumed {} from step {} (config={} method={} quant={} \
+                 seed={})",
+                path, sess.steps_done(), sess.cfg.config,
+                sess.cfg.method.name(), sess.cfg.quant.name(), sess.cfg.seed
+            );
+            anyhow::ensure!(
+                sess.steps_done() < steps,
+                "snapshot is already at step {} >= --steps {steps}; nothing \
+                 to resume (raise --steps)",
+                sess.steps_done()
+            );
+            sess
+        }
+        None => TrainSession::new(cfg)?,
+    };
+    let method = sess.cfg.method;
+    let quant = sess.cfg.quant;
     println!(
         "training config={} backend={} method={} steps={} lr={} \
          optimizer={:?} kernel={} threads={} quant={}",
-        cfg.config, cfg.backend.name(), method.name(), steps, cfg.lr,
-        cfg.optimizer, cfg.kernel.name(),
-        if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() },
+        sess.cfg.config, sess.cfg.backend.name(), method.name(), steps,
+        sess.cfg.lr, sess.cfg.optimizer, sess.cfg.kernel.name(),
+        if sess.cfg.threads == 0 {
+            "auto".to_string()
+        } else {
+            sess.cfg.threads.to_string()
+        },
         quant.name()
     );
-    let mut sess = TrainSession::new(cfg)?;
-    let summary = sess.run(steps)?;
+    while sess.steps_done() < steps {
+        sess.step_once()?;
+        if save_every > 0 && sess.steps_done() % save_every == 0 {
+            let path = snap_dir.join(format!("step-{}.snap", sess.steps_done()));
+            let bytes = sess.save_snapshot(&path)?;
+            println!(
+                "snapshot: {} ({} bytes, step {})",
+                path.display(), bytes, sess.steps_done()
+            );
+        }
+    }
+    let summary = sess.metrics.summary();
     summary.print(method.name());
+    // Exact-precision final loss for the CI resume tier: a suspended-
+    // at-k-then-resumed run must reproduce these BITS.
+    println!(
+        "final loss bits: 0x{:016x} ({:e})",
+        summary.final_loss.to_bits(),
+        summary.final_loss
+    );
     // The deployment number the q4 path exists for: how many bytes of
     // base weights stay resident for the whole session.
     let resident = sess.tracker.tag_bytes("weights:device");
@@ -124,9 +170,16 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let budget_bytes = budget_mb
         .checked_mul(1 << 20)
         .ok_or_else(|| anyhow::anyhow!("--budget-mb {budget_mb} overflows"))?;
+    let budget_schedule = match args.opt_str("budget-schedule") {
+        Some(s) => fleet::parse_budget_schedule(&s)?,
+        None => Vec::new(),
+    };
     let opts = FleetOptions {
         budget_bytes,
         workers: args.usize("workers", 4)?.max(1),
+        preempt: args.bool("preempt"),
+        snapshot_dir: args.opt_str("snapshot-dir").map(std::path::PathBuf::from),
+        budget_schedule,
     };
     let jobs = match args.opt_str("job-file") {
         Some(path) => {
@@ -142,10 +195,32 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             fleet::grid(&base, &methods, args.usize("jobs", 8)?.max(1))
         }
     };
+    if args.bool("print-cost") {
+        // Script-friendly admission costs (CI sizes preemption budgets
+        // with this: the cost depends on the machine's core count via
+        // the kernel packing-panel term).
+        let mut seen = std::collections::BTreeSet::new();
+        for job in &jobs {
+            if seen.insert(job.spec.method.name()) {
+                let c = fleet::job_cost_bytes(&job.spec)?;
+                println!(
+                    "cost {} {c} bytes ({} MB)",
+                    job.spec.method.name(),
+                    fmt_mb(c)
+                );
+            }
+        }
+        return Ok(());
+    }
     println!(
         "fleet: {} jobs on config {} | budget {budget_mb} MB | {} workers \
-         | quant {}",
-        jobs.len(), base.config, opts.workers, base.quant.name()
+         | quant {}{}",
+        jobs.len(), base.config, opts.workers, base.quant.name(),
+        if opts.preempt || !opts.budget_schedule.is_empty() {
+            " | preemption on"
+        } else {
+            ""
+        }
     );
     let report = Scheduler::run(&opts, &base, jobs)?;
     print!("{}", report.render());

@@ -7,6 +7,6 @@ pub mod tracker;
 
 pub use model::{
     peak, peak_bytes, peak_q, reduction_vs_mebp, resident_weight_bytes,
-    Breakdown, Widths,
+    snapshot_bytes, Breakdown, Widths,
 };
 pub use tracker::{Guard, MemoryTracker, Tracked};

@@ -285,6 +285,18 @@ pub fn resident_weight_bytes(d: &ModelDims, quant_mode: QuantMode) -> u64 {
     emb + per_block * d.n_layers as u64
 }
 
+/// Analytical size of one serialized session snapshot
+/// (`crate::persist`): the LoRA adapters plus the optimizer's moment
+/// slots, all f32. The fixed header and per-tensor shape prefixes are
+/// O(100) bytes per tensor and excluded; `tests/persist.rs` asserts the
+/// real file stays within a small envelope of this number. Fleet
+/// operators size `--snapshot-dir` storage with it: a parked job holds
+/// exactly one snapshot on disk (charged to the `snapshot` tracker tag
+/// while parked).
+pub fn snapshot_bytes(d: &ModelDims, opt: OptimizerKind) -> u64 {
+    (4 * d.lora_params_total() * (1 + opt.state_slots())) as u64
+}
+
 /// Peak-memory breakdown for `method` at dims `d` (f32-resident weights;
 /// see [`peak_q`] for the quant-aware variant).
 pub fn peak(method: Method, d: &ModelDims, opt: OptimizerKind, w: Widths) -> Breakdown {

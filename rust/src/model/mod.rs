@@ -178,6 +178,28 @@ impl ModelState {
         }
     }
 
+    /// FNV-1a 64 fingerprint of every resident frozen tensor (embedding,
+    /// final norm, each block's tensors in artifact-ABI order — the
+    /// int4-packed bytes + scales under q4, so a quantized model is
+    /// fingerprinted in its packed form and never round-tripped through
+    /// f32). Frozen weights are a pure function of the model stream
+    /// seed, so session snapshots store only this hash: restore
+    /// regenerates the weights and refuses to resume on a mismatch.
+    ///
+    /// Must be computed BEFORE the engine uploads the weights and frees
+    /// the host copies ([`crate::train::common::EngineCtx`] does).
+    pub fn weights_fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        h = crate::persist::fnv1a64_tensor(h, &self.embedding.value);
+        h = crate::persist::fnv1a64_tensor(h, &self.final_norm.value);
+        for block in &self.blocks {
+            for t in &block.tensors {
+                h = crate::persist::fnv1a64_tensor(h, &t.value);
+            }
+        }
+        h
+    }
+
     /// Total trainable (LoRA) parameter count.
     pub fn lora_param_count(&self) -> usize {
         self.lora.iter().map(|l| l.param_count()).sum()
@@ -298,6 +320,25 @@ mod tests {
                 + c % d.q_dim()];
             assert!((a - b).abs() <= s / 2.0 + 1e-7, "elem {c}: {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn weights_fingerprint_is_seed_and_quant_sensitive() {
+        let t = MemoryTracker::new();
+        let d = toy_dims();
+        let a = ModelState::init(&d, 7, &t).weights_fingerprint();
+        let b = ModelState::init(&d, 7, &t).weights_fingerprint();
+        assert_eq!(a, b, "same seed ⇒ same fingerprint");
+        let c = ModelState::init(&d, 8, &t).weights_fingerprint();
+        assert_ne!(a, c, "different seed ⇒ different fingerprint");
+        let q = ModelState::init_with_quant(
+            &d, 7, &t, crate::config::QuantMode::Q4)
+            .weights_fingerprint();
+        assert_ne!(a, q, "q4 fingerprints the packed bytes, not the f32s");
+        let q2 = ModelState::init_with_quant(
+            &d, 7, &t, crate::config::QuantMode::Q4)
+            .weights_fingerprint();
+        assert_eq!(q, q2);
     }
 
     #[test]

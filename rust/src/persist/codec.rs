@@ -1,0 +1,316 @@
+//! Little-endian binary codec for snapshot payloads.
+//!
+//! Deliberately tiny and dependency-free (the offline build has no serde):
+//! a `Writer` appends fixed-width little-endian scalars, length-prefixed
+//! strings and dtype-tagged tensors to a byte vector; a `Reader` consumes
+//! the same sequence, failing loudly (never panicking) on truncation.
+//! f32 payloads travel as raw IEEE-754 bit patterns (`to_bits`), so
+//! encode → decode is the identity on every value including NaNs — the
+//! bitwise-resume guarantee starts here.
+
+use crate::tensor::{DType, Data, HostTensor};
+
+/// FNV-1a 64-bit over a byte slice. Used as the snapshot payload
+/// checksum: every step is `h = (h ^ byte) * PRIME` with an odd prime,
+/// and multiplication by an odd constant is a bijection on u64, so any
+/// single corrupted byte is guaranteed to change the final hash.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Fold one tensor (dtype tag, shape, raw element bits) into a running
+/// FNV-1a state. Shared by the snapshot writer and the model-weights
+/// fingerprint so both hash identical byte sequences.
+pub fn fnv1a64_tensor(mut h: u64, t: &HostTensor) -> u64 {
+    let mut fold = |bytes: &[u8]| {
+        for b in bytes {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    fold(&[dtype_tag(t.dtype())]);
+    fold(&(t.shape.len() as u32).to_le_bytes());
+    for d in &t.shape {
+        fold(&(*d as u64).to_le_bytes());
+    }
+    match &t.data {
+        Data::F32(v) => v.iter().for_each(|x| fold(&x.to_bits().to_le_bytes())),
+        Data::I32(v) => v.iter().for_each(|x| fold(&x.to_le_bytes())),
+        Data::U8(v) => fold(v),
+    }
+    h
+}
+
+fn dtype_tag(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::I32 => 1,
+        DType::U8 => 2,
+    }
+}
+
+fn dtype_from_tag(t: u8) -> anyhow::Result<DType> {
+    match t {
+        0 => Ok(DType::F32),
+        1 => Ok(DType::I32),
+        2 => Ok(DType::U8),
+        _ => anyhow::bail!("snapshot: unknown dtype tag {t}"),
+    }
+}
+
+/// Append-only payload builder.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// f32 as its raw bit pattern — bitwise round-trip, NaNs included.
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn f32_slice(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.f32(*x);
+        }
+    }
+
+    pub fn tensor(&mut self, t: &HostTensor) {
+        self.u8(dtype_tag(t.dtype()));
+        self.u32(t.shape.len() as u32);
+        for d in &t.shape {
+            self.u64(*d as u64);
+        }
+        match &t.data {
+            Data::F32(v) => v.iter().for_each(|x| {
+                self.buf.extend_from_slice(&x.to_bits().to_le_bytes())
+            }),
+            Data::I32(v) => v.iter().for_each(|x| {
+                self.buf.extend_from_slice(&x.to_le_bytes())
+            }),
+            Data::U8(v) => self.buf.extend_from_slice(v),
+        }
+    }
+}
+
+/// Sequential payload consumer; every accessor fails with a "truncated"
+/// error instead of panicking when the payload runs out.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed (0 after a complete decode).
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.remaining() >= n,
+            "snapshot payload truncated: need {n} more bytes at offset {}, \
+             have {}",
+            self.pos,
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn str(&mut self) -> anyhow::Result<String> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| anyhow::anyhow!("snapshot: non-UTF-8 string field"))
+    }
+
+    pub fn f32_slice(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    pub fn tensor(&mut self) -> anyhow::Result<HostTensor> {
+        let dtype = dtype_from_tag(self.u8()?)?;
+        let ndim = self.u32()? as usize;
+        anyhow::ensure!(ndim <= 8, "snapshot: implausible tensor rank {ndim}");
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(self.u64()? as usize);
+        }
+        let len: usize = shape.iter().product();
+        anyhow::ensure!(
+            len.checked_mul(dtype.size()).is_some_and(|b| b <= self.remaining()),
+            "snapshot payload truncated inside a tensor of shape {shape:?}"
+        );
+        Ok(match dtype {
+            DType::F32 => {
+                let raw = self.take(4 * len)?;
+                HostTensor::f32(
+                    &shape,
+                    raw.chunks_exact(4)
+                        .map(|c| {
+                            f32::from_bits(u32::from_le_bytes(
+                                c.try_into().unwrap(),
+                            ))
+                        })
+                        .collect(),
+                )
+            }
+            DType::I32 => {
+                let raw = self.take(4 * len)?;
+                HostTensor::i32(
+                    &shape,
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            DType::U8 => HostTensor::u8(&shape, self.take(len)?.to_vec()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xdead_beef);
+        w.u64(u64::MAX - 3);
+        w.f32(f32::NAN);
+        w.str("toy");
+        w.f32_slice(&[1.5, -0.0, f32::INFINITY]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert!(r.f32().unwrap().is_nan());
+        assert_eq!(r.str().unwrap(), "toy");
+        let v = r.f32_slice().unwrap();
+        assert_eq!(v[0], 1.5);
+        assert!(v[1].is_sign_negative() && v[1] == 0.0);
+        assert_eq!(v[2], f32::INFINITY);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn tensor_roundtrip_all_dtypes() {
+        for t in [
+            HostTensor::f32(&[2, 3], vec![0.1, -2.0, f32::MIN, 0.0, 9.0, 1e-40]),
+            HostTensor::i32(&[4], vec![-1, 0, i32::MAX, 7]),
+            HostTensor::u8(&[3, 2], vec![0, 255, 16, 32, 64, 128]),
+        ] {
+            let mut w = Writer::new();
+            w.tensor(&t);
+            let bytes = w.into_bytes();
+            let mut r = Reader::new(&bytes);
+            let back = r.tensor().unwrap();
+            assert_eq!(back.shape, t.shape);
+            match (&back.data, &t.data) {
+                (Data::F32(a), Data::F32(b)) => {
+                    assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()))
+                }
+                (Data::I32(a), Data::I32(b)) => assert_eq!(a, b),
+                (Data::U8(a), Data::U8(b)) => assert_eq!(a, b),
+                _ => panic!("dtype changed"),
+            }
+            assert_eq!(r.remaining(), 0);
+        }
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = Writer::new();
+        w.tensor(&HostTensor::f32(&[16], vec![1.0; 16]));
+        let bytes = w.into_bytes();
+        for cut in [0, 1, 5, bytes.len() - 1] {
+            let mut r = Reader::new(&bytes[..cut]);
+            let err = r.tensor().unwrap_err().to_string();
+            assert!(err.contains("truncated"), "cut {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn fnv_detects_single_byte_flips() {
+        let data: Vec<u8> = (0..200u8).collect();
+        let h0 = fnv1a64(&data);
+        for i in [0usize, 1, 99, 199] {
+            let mut d = data.clone();
+            d[i] ^= 0x40;
+            assert_ne!(fnv1a64(&d), h0, "flip at {i} undetected");
+        }
+    }
+
+    #[test]
+    fn tensor_fingerprint_matches_separate_calls() {
+        let a = HostTensor::f32(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = HostTensor::u8(&[2], vec![9, 8]);
+        let h1 = fnv1a64_tensor(fnv1a64_tensor(0xcbf29ce484222325, &a), &b);
+        let h2 = fnv1a64_tensor(fnv1a64_tensor(0xcbf29ce484222325, &a), &b);
+        assert_eq!(h1, h2);
+        let c = HostTensor::f32(&[4], vec![1.0, 2.0, 3.0, 4.5]);
+        assert_ne!(fnv1a64_tensor(0xcbf29ce484222325, &c), h1);
+    }
+}

@@ -1,0 +1,32 @@
+//! Session persistence: suspend a live fine-tuning session to a single
+//! binary snapshot file and resume it later — bitwise-identically.
+//!
+//! The paper's deployment target shares 6–12 GB with every other
+//! workload on the device, so a training job must expect to be parked by
+//! the OS (or by our own fleet scheduler when the budget shrinks) and
+//! picked back up without losing work — MeBP-style systems assume
+//! interruption as the common case, not the exception. This module is
+//! the mechanism: [`Snapshot`] captures exactly the state that cannot be
+//! regenerated from the config — LoRA adapters, optimizer moments, the
+//! step counter, the data-loader cursor and the derived RNG stream
+//! seeds — and fingerprints everything that can (the frozen base
+//! weights, which restore regenerates from the model stream seed and
+//! verifies by checksum; under q4 the fingerprint covers the int4-packed
+//! bytes, so packed residents stay packed on disk).
+//!
+//! The contract, enforced by `tests/persist.rs` and the CI resume tier:
+//! a run suspended at step k and resumed reproduces the uninterrupted
+//! run **bitwise** — same losses, same adapters — for every method,
+//! quant mode, kernel variant and thread count.
+//!
+//! See [`snapshot`] for the on-disk layout and versioning policy, and
+//! [`crate::coordinator::TrainSession::snapshot`] /
+//! [`crate::coordinator::TrainSession::restore`] for the session-level
+//! entry points the CLI (`train --save-every/--resume`) and the fleet
+//! scheduler's preempt-to-disk path are built on.
+
+pub mod codec;
+pub mod snapshot;
+
+pub use codec::{fnv1a64, fnv1a64_tensor, Reader, Writer};
+pub use snapshot::{RngStreams, Snapshot, HEADER_LEN, MAGIC, VERSION};

@@ -1,0 +1,469 @@
+//! The versioned, checksummed session-snapshot format.
+//!
+//! # On-disk layout (version 1)
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"MESPSNAP"
+//! 8       4     format version (u32 LE) — currently 1
+//! 12      8     payload length in bytes (u64 LE)
+//! 20      8     FNV-1a 64 checksum of the payload (u64 LE)
+//! 28      len   payload (see below)
+//! ```
+//!
+//! Payload, in order (all integers LE, f32 as raw IEEE-754 bits):
+//!
+//! 1. identity — config name (string), method, quant mode, optimizer
+//!    kind + hyperparameters, learning rate, base seed;
+//! 2. progress — optimizer step counter, data-loader cursor (batches
+//!    consumed since session start);
+//! 3. RNG stream states — the three `util::rng::derive` sub-seeds
+//!    (model / loader / job) the session was built from, re-derived and
+//!    cross-checked on restore;
+//! 4. base-weight fingerprint — FNV-1a 64 over every resident frozen
+//!    tensor in upload (artifact-ABI) order. Frozen weights are pure
+//!    functions of the model stream seed, so the snapshot does NOT store
+//!    them: restore regenerates and verifies them against this hash.
+//!    Under q4 the fingerprint covers the int4-packed bytes + scales —
+//!    packed residents stay packed on disk, never round-tripped through
+//!    f32;
+//! 5. LoRA adapters — every A/B tensor, layer-major, artifact-ABI order;
+//! 6. optimizer moments — Adam `t`, then first/second-moment groups
+//!    (empty for SGD, first-moment only for momentum).
+//!
+//! # Versioning policy
+//!
+//! The version is bumped whenever the payload layout changes; readers
+//! accept exactly their own version and reject everything else with an
+//! actionable error (no silent migration — a paused fine-tuning job is
+//! worth less than a silently-wrong one). Corruption is detected by the
+//! payload checksum before any field is interpreted.
+
+use std::path::Path;
+
+use crate::config::{Method, OptimizerKind, QuantMode};
+use crate::tensor::HostTensor;
+use crate::util::rng::{derive, stream};
+
+use super::codec::{fnv1a64, Reader, Writer};
+
+/// File magic — never changes across versions.
+pub const MAGIC: &[u8; 8] = b"MESPSNAP";
+/// Current (and only readable) format version.
+pub const VERSION: u32 = 1;
+/// Fixed header size: magic + version + payload length + checksum.
+pub const HEADER_LEN: usize = 8 + 4 + 8 + 8;
+
+/// The three derived sub-seeds a session draws from (see
+/// [`crate::util::rng::derive`]). Pure functions of the base seed; stored
+/// anyway so restore can prove the derivation scheme has not drifted
+/// between the build that suspended and the build that resumes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RngStreams {
+    pub model: u64,
+    pub loader: u64,
+    pub job: u64,
+}
+
+impl RngStreams {
+    pub fn derive_from(seed: u64) -> RngStreams {
+        RngStreams {
+            model: derive(seed, stream::MODEL),
+            loader: derive(seed, stream::LOADER),
+            job: derive(seed, stream::JOB),
+        }
+    }
+}
+
+/// A complete suspended training session — everything that cannot be
+/// regenerated from the config: adapters, optimizer moments, counters —
+/// plus enough identity and fingerprint data to refuse a mismatched
+/// resume loudly.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub config: String,
+    pub method: Method,
+    pub quant: QuantMode,
+    pub optimizer: OptimizerKind,
+    pub lr: f32,
+    pub seed: u64,
+    /// Optimization steps completed when the session was suspended.
+    pub step: u64,
+    /// Batches drawn from the data loader (the loader cursor: restore
+    /// fast-forwards the deterministic stream by this many batches).
+    pub batches_consumed: u64,
+    pub rng: RngStreams,
+    /// FNV-1a 64 over the resident frozen weights (see module docs).
+    pub weights_fingerprint: u64,
+    /// LoRA adapters per layer, artifact-ABI order.
+    pub lora: Vec<Vec<HostTensor>>,
+    /// Adam bias-correction step counter (0 for SGD/momentum).
+    pub opt_t: u64,
+    /// First-moment groups (momentum `v` / Adam `m`; empty for SGD).
+    pub opt_m1: Vec<Vec<f32>>,
+    /// Second-moment groups (Adam `v`; empty otherwise).
+    pub opt_m2: Vec<Vec<f32>>,
+}
+
+fn optimizer_tag(o: OptimizerKind) -> (u8, [f32; 3]) {
+    match o {
+        OptimizerKind::Sgd => (0, [0.0; 3]),
+        OptimizerKind::Momentum { beta } => (1, [beta, 0.0, 0.0]),
+        OptimizerKind::Adam { beta1, beta2, eps } => (2, [beta1, beta2, eps]),
+    }
+}
+
+fn optimizer_from_tag(tag: u8, p: [f32; 3]) -> anyhow::Result<OptimizerKind> {
+    Ok(match tag {
+        0 => OptimizerKind::Sgd,
+        1 => OptimizerKind::Momentum { beta: p[0] },
+        2 => OptimizerKind::Adam { beta1: p[0], beta2: p[1], eps: p[2] },
+        _ => anyhow::bail!("snapshot: unknown optimizer tag {tag}"),
+    })
+}
+
+impl Snapshot {
+    /// Serialize to the full file image (header + payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.str(&self.config);
+        w.str(self.method.name());
+        w.str(self.quant.name());
+        let (tag, params) = optimizer_tag(self.optimizer);
+        w.u8(tag);
+        for p in params {
+            w.f32(p);
+        }
+        w.f32(self.lr);
+        w.u64(self.seed);
+        w.u64(self.step);
+        w.u64(self.batches_consumed);
+        w.u64(self.rng.model);
+        w.u64(self.rng.loader);
+        w.u64(self.rng.job);
+        w.u64(self.weights_fingerprint);
+        w.u32(self.lora.len() as u32);
+        for layer in &self.lora {
+            w.u32(layer.len() as u32);
+            for t in layer {
+                w.tensor(t);
+            }
+        }
+        w.u64(self.opt_t);
+        w.u32(self.opt_m1.len() as u32);
+        for g in &self.opt_m1 {
+            w.f32_slice(g);
+        }
+        w.u32(self.opt_m2.len() as u32);
+        for g in &self.opt_m2 {
+            w.f32_slice(g);
+        }
+        let payload = w.into_bytes();
+
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Parse a full file image, validating magic, version, length and
+    /// checksum before interpreting a single payload field.
+    pub fn decode(bytes: &[u8]) -> anyhow::Result<Snapshot> {
+        anyhow::ensure!(
+            bytes.len() >= HEADER_LEN,
+            "snapshot file truncated: {} bytes is smaller than the \
+             {HEADER_LEN}-byte header",
+            bytes.len()
+        );
+        anyhow::ensure!(
+            &bytes[..8] == MAGIC,
+            "not a mesp snapshot (bad magic {:02x?})",
+            &bytes[..8]
+        );
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported snapshot version {version} (this build reads \
+             version {VERSION} only — re-snapshot with the matching build)"
+        );
+        let payload_len =
+            u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        let checksum = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+        anyhow::ensure!(
+            bytes.len() - HEADER_LEN == payload_len,
+            "snapshot file truncated: header promises {payload_len} payload \
+             bytes, file holds {}",
+            bytes.len() - HEADER_LEN
+        );
+        let payload = &bytes[HEADER_LEN..];
+        let actual = fnv1a64(payload);
+        anyhow::ensure!(
+            actual == checksum,
+            "snapshot checksum mismatch (stored {checksum:#018x}, computed \
+             {actual:#018x}) — the file is corrupted"
+        );
+
+        let mut r = Reader::new(payload);
+        let config = r.str()?;
+        let method = Method::parse(&r.str()?)?;
+        let quant = QuantMode::parse(&r.str()?)?;
+        let tag = r.u8()?;
+        let params = [r.f32()?, r.f32()?, r.f32()?];
+        let optimizer = optimizer_from_tag(tag, params)?;
+        let lr = r.f32()?;
+        let seed = r.u64()?;
+        let step = r.u64()?;
+        let batches_consumed = r.u64()?;
+        let rng = RngStreams {
+            model: r.u64()?,
+            loader: r.u64()?,
+            job: r.u64()?,
+        };
+        let weights_fingerprint = r.u64()?;
+        let n_layers = r.u32()? as usize;
+        anyhow::ensure!(
+            n_layers <= 4096,
+            "snapshot: implausible layer count {n_layers}"
+        );
+        let mut lora = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let n = r.u32()? as usize;
+            anyhow::ensure!(n <= 1024, "snapshot: implausible tensor count {n}");
+            let mut layer = Vec::with_capacity(n);
+            for _ in 0..n {
+                layer.push(r.tensor()?);
+            }
+            lora.push(layer);
+        }
+        let opt_t = r.u64()?;
+        let n1 = r.u32()? as usize;
+        let mut opt_m1 = Vec::with_capacity(n1.min(65_536));
+        for _ in 0..n1 {
+            opt_m1.push(r.f32_slice()?);
+        }
+        let n2 = r.u32()? as usize;
+        let mut opt_m2 = Vec::with_capacity(n2.min(65_536));
+        for _ in 0..n2 {
+            opt_m2.push(r.f32_slice()?);
+        }
+        anyhow::ensure!(
+            r.remaining() == 0,
+            "snapshot: {} trailing bytes after the payload — file and \
+             format version disagree",
+            r.remaining()
+        );
+        Ok(Snapshot {
+            config,
+            method,
+            quant,
+            optimizer,
+            lr,
+            seed,
+            step,
+            batches_consumed,
+            rng,
+            weights_fingerprint,
+            lora,
+            opt_t,
+            opt_m1,
+            opt_m2,
+        })
+    }
+
+    /// Write atomically (temp file + rename, so a crash mid-write never
+    /// leaves a half-snapshot under the final name). Returns bytes
+    /// written.
+    pub fn save(&self, path: &Path) -> anyhow::Result<u64> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let bytes = self.encode();
+        let tmp = path.with_extension("snap.tmp");
+        std::fs::write(&tmp, &bytes)
+            .map_err(|e| anyhow::anyhow!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow::anyhow!("rename to {}: {e}", path.display()))?;
+        Ok(bytes.len() as u64)
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Snapshot> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("read snapshot {}: {e}", path.display()))?;
+        Self::decode(&bytes)
+            .map_err(|e| anyhow::anyhow!("snapshot {}: {e}", path.display()))
+    }
+
+    /// The training config a resumed session runs under: the snapshot's
+    /// semantic identity (config/method/quant/optimizer/lr/seed) over the
+    /// caller's wiring (backend, kernel, threads, step target, logging) —
+    /// resume parity is bitwise on every kernel variant and thread count,
+    /// so the execution knobs are free to differ across suspend/resume.
+    pub fn train_config(
+        &self,
+        base: &crate::config::TrainConfig,
+    ) -> crate::config::TrainConfig {
+        crate::config::TrainConfig {
+            config: self.config.clone(),
+            method: self.method,
+            quant: self.quant,
+            optimizer: self.optimizer,
+            lr: self.lr,
+            seed: self.seed,
+            ..base.clone()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Snapshot {
+        Snapshot {
+            config: "toy".into(),
+            method: Method::StoreH,
+            quant: QuantMode::Q4,
+            optimizer: OptimizerKind::Adam {
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+            },
+            lr: 3e-4,
+            seed: 42,
+            step: 17,
+            batches_consumed: 17,
+            rng: RngStreams::derive_from(42),
+            weights_fingerprint: 0xfeed_f00d,
+            lora: vec![
+                vec![
+                    HostTensor::f32(&[2, 3], vec![0.5, -1.0, f32::NAN, 0.0, 2.0, -0.0]),
+                    HostTensor::u8(&[2, 2], vec![1, 2, 3, 255]),
+                ],
+                vec![HostTensor::f32(&[1], vec![9.0])],
+            ],
+            opt_t: 17,
+            opt_m1: vec![vec![0.1, 0.2], vec![]],
+            opt_m2: vec![vec![-0.5], vec![1e-30]],
+        }
+    }
+
+    fn assert_bitwise_eq(a: &Snapshot, b: &Snapshot) {
+        assert_eq!(a.config, b.config);
+        assert_eq!(a.method, b.method);
+        assert_eq!(a.quant, b.quant);
+        assert_eq!(a.optimizer, b.optimizer);
+        assert_eq!(a.lr.to_bits(), b.lr.to_bits());
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.batches_consumed, b.batches_consumed);
+        assert_eq!(a.rng, b.rng);
+        assert_eq!(a.weights_fingerprint, b.weights_fingerprint);
+        assert_eq!(a.lora.len(), b.lora.len());
+        for (la, lb) in a.lora.iter().zip(&b.lora) {
+            assert_eq!(la.len(), lb.len());
+            for (ta, tb) in la.iter().zip(lb) {
+                assert_eq!(ta.shape, tb.shape);
+                assert_eq!(ta.dtype(), tb.dtype());
+                match (&ta.data, &tb.data) {
+                    (crate::tensor::Data::F32(x), crate::tensor::Data::F32(y)) => {
+                        assert!(x
+                            .iter()
+                            .zip(y)
+                            .all(|(p, q)| p.to_bits() == q.to_bits()));
+                    }
+                    (crate::tensor::Data::U8(x), crate::tensor::Data::U8(y)) => {
+                        assert_eq!(x, y)
+                    }
+                    (crate::tensor::Data::I32(x), crate::tensor::Data::I32(y)) => {
+                        assert_eq!(x, y)
+                    }
+                    _ => panic!("dtype mismatch"),
+                }
+            }
+        }
+        assert_eq!(a.opt_t, b.opt_t);
+        for (ga, gb) in a.opt_m1.iter().zip(&b.opt_m1) {
+            assert!(ga.iter().zip(gb).all(|(p, q)| p.to_bits() == q.to_bits()));
+        }
+        for (ga, gb) in a.opt_m2.iter().zip(&b.opt_m2) {
+            assert!(ga.iter().zip(gb).all(|(p, q)| p.to_bits() == q.to_bits()));
+        }
+    }
+
+    #[test]
+    fn encode_decode_identity() {
+        let s = sample();
+        let back = Snapshot::decode(&s.encode()).unwrap();
+        assert_bitwise_eq(&s, &back);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample().encode();
+        bytes[0] = b'X';
+        let err = Snapshot::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let mut bytes = sample().encode();
+        bytes[8..12].copy_from_slice(&2u32.to_le_bytes());
+        let err = Snapshot::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("unsupported snapshot version 2"), "{err}");
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let bytes = sample().encode();
+        for cut in [0, 7, HEADER_LEN - 1, HEADER_LEN + 3, bytes.len() - 1] {
+            let err = Snapshot::decode(&bytes[..cut]).unwrap_err().to_string();
+            assert!(err.contains("truncated"), "cut {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn corruption_rejected() {
+        let mut bytes = sample().encode();
+        let mid = HEADER_LEN + (bytes.len() - HEADER_LEN) / 2;
+        bytes[mid] ^= 0x01;
+        let err = Snapshot::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("mesp-test-snapshot");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.snap");
+        let s = sample();
+        let bytes = s.save(&path).unwrap();
+        assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+        let back = Snapshot::load(&path).unwrap();
+        assert_bitwise_eq(&s, &back);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn train_config_adopts_identity_keeps_wiring() {
+        let s = sample();
+        let base = crate::config::TrainConfig {
+            kernel: crate::config::KernelKind::Naive,
+            threads: 3,
+            steps: 99,
+            ..Default::default()
+        };
+        let cfg = s.train_config(&base);
+        assert_eq!(cfg.method, Method::StoreH);
+        assert_eq!(cfg.quant, QuantMode::Q4);
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.kernel, crate::config::KernelKind::Naive);
+        assert_eq!(cfg.threads, 3);
+        assert_eq!(cfg.steps, 99, "step target stays the caller's");
+    }
+}

@@ -40,6 +40,10 @@ pub struct EngineCtx {
     /// Checkpoint-store disk-spill budget in bytes (0 = never spill).
     pub spill_limit: u64,
     quant: QuantMode,
+    /// Fingerprint of the frozen base weights, computed at init BEFORE
+    /// the host copies are freed — session snapshots store this instead
+    /// of the (regenerable) weights themselves.
+    weights_fingerprint: u64,
     /// Per block: FROZEN-order tensors (f32 mode) or
     /// `[ln1, ln2, (packed, scales) × QUANT_MATS]` (q4 mode) — exactly
     /// the frozen argument run of the selected artifact ABI.
@@ -82,6 +86,9 @@ impl EngineCtx {
             .flat_map(|l| l.tensors.iter().map(|t| t.len()))
             .collect();
         let opt = Optimizer::new(opt_kind, lr, &group_sizes, &tracker);
+        // Hash the resident frozen tensors now — the upload loop below
+        // drains the host copies, after which they are gone for good.
+        let weights_fingerprint = model.weights_fingerprint();
 
         // Upload frozen state once; free the host copies (their Tracked
         // guards drop here), accounting the device bytes instead. The
@@ -108,13 +115,19 @@ impl EngineCtx {
         let _dev_guard = tracker.track("weights:device", dev_bytes);
         Ok(EngineCtx {
             rt, model, opt, tracker, step: 0, spill_limit, quant: quant_mode,
-            dev_frozen, dev_emb, dev_fnorm, _dev_guard,
+            weights_fingerprint, dev_frozen, dev_emb, dev_fnorm, _dev_guard,
         })
     }
 
     /// The session's resident base-weight precision.
     pub fn quant(&self) -> QuantMode {
         self.quant
+    }
+
+    /// Fingerprint of the frozen base weights (see
+    /// [`crate::model::ModelState::weights_fingerprint`]).
+    pub fn weights_fingerprint(&self) -> u64 {
+        self.weights_fingerprint
     }
 
     /// Map a block-artifact base name onto the session's quant mode

@@ -95,6 +95,76 @@ impl Optimizer {
     pub fn lr(&self) -> f32 {
         self.lr
     }
+
+    /// Export the mutable state for a session snapshot:
+    /// `(t, first_moments, second_moments)` — `(0, [], [])` for SGD,
+    /// `(0, v, [])` for momentum, `(t, m, v)` for Adam. Hyperparameters
+    /// (betas, eps, lr) are NOT exported: they belong to the config the
+    /// snapshot stores separately, and restore rebuilds the optimizer
+    /// from that config before importing the moments.
+    pub fn export_state(&self) -> (u64, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        match &self.state {
+            State::Sgd => (0, Vec::new(), Vec::new()),
+            State::Momentum { v, .. } => (0, v.clone(), Vec::new()),
+            State::Adam { m, v, t, .. } => (*t, m.clone(), v.clone()),
+        }
+    }
+
+    /// Inverse of [`Self::export_state`]: overwrite the moment buffers of
+    /// an optimizer freshly built from the same config. Group counts and
+    /// lengths must match exactly — a snapshot from a different model
+    /// shape fails here instead of silently mis-scattering moments.
+    pub fn import_state(
+        &mut self,
+        t: u64,
+        m1: &[Vec<f32>],
+        m2: &[Vec<f32>],
+    ) -> anyhow::Result<()> {
+        let copy_groups = |dst: &mut Vec<Vec<f32>>,
+                           src: &[Vec<f32>],
+                           what: &str|
+         -> anyhow::Result<()> {
+            anyhow::ensure!(
+                dst.len() == src.len(),
+                "snapshot {what} has {} groups, optimizer expects {}",
+                src.len(),
+                dst.len()
+            );
+            for (i, (d, s)) in dst.iter_mut().zip(src).enumerate() {
+                anyhow::ensure!(
+                    d.len() == s.len(),
+                    "snapshot {what} group {i} has {} params, optimizer \
+                     expects {}",
+                    s.len(),
+                    d.len()
+                );
+                d.copy_from_slice(s);
+            }
+            Ok(())
+        };
+        match &mut self.state {
+            State::Sgd => {
+                anyhow::ensure!(
+                    m1.is_empty() && m2.is_empty() && t == 0,
+                    "snapshot carries optimizer moments but the session \
+                     optimizer is SGD (stateless)"
+                );
+            }
+            State::Momentum { v, .. } => {
+                anyhow::ensure!(
+                    m2.is_empty() && t == 0,
+                    "snapshot optimizer state is not momentum-shaped"
+                );
+                copy_groups(v, m1, "momentum velocity")?;
+            }
+            State::Adam { m, v, t: tt, .. } => {
+                copy_groups(m, m1, "Adam first moment")?;
+                copy_groups(v, m2, "Adam second moment")?;
+                *tt = t;
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -153,6 +223,62 @@ mod tests {
         assert_eq!(t.live(), 8 * 150);
         let _s = Optimizer::new(OptimizerKind::Sgd, 0.1, &[100], &t);
         assert_eq!(t.live(), 8 * 150, "sgd adds no state");
+    }
+
+    #[test]
+    fn export_import_roundtrip_continues_identically() {
+        // Two Adam optimizers: one runs 4 updates straight; the other
+        // runs 2, exports, imports into a FRESH optimizer, runs 2 more.
+        // Both parameter trajectories must be bitwise identical.
+        let t = tr();
+        let grads: Vec<Vec<f32>> =
+            (0..4).map(|i| vec![0.3 * (i as f32 - 1.5), -0.1]).collect();
+        let run = |o: &mut Optimizer, p: &mut Vec<f32>, gs: &[Vec<f32>]| {
+            for g in gs {
+                o.begin_step();
+                o.update(0, p, g);
+            }
+        };
+        let mut full = Optimizer::new(
+            OptimizerKind::parse("adam").unwrap(), 0.05, &[2], &t);
+        let mut p_full = vec![1.0, -1.0];
+        run(&mut full, &mut p_full, &grads);
+
+        let mut first = Optimizer::new(
+            OptimizerKind::parse("adam").unwrap(), 0.05, &[2], &t);
+        let mut p_half = vec![1.0, -1.0];
+        run(&mut first, &mut p_half, &grads[..2]);
+        let (step, m1, m2) = first.export_state();
+        assert_eq!(step, 2);
+        let mut resumed = Optimizer::new(
+            OptimizerKind::parse("adam").unwrap(), 0.05, &[2], &t);
+        resumed.import_state(step, &m1, &m2).unwrap();
+        run(&mut resumed, &mut p_half, &grads[2..]);
+
+        for (a, b) in p_full.iter().zip(&p_half) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn import_rejects_mismatched_shapes() {
+        let t = tr();
+        let mut o = Optimizer::new(
+            OptimizerKind::parse("adam").unwrap(), 0.1, &[3, 2], &t);
+        // wrong group count
+        assert!(o.import_state(1, &[vec![0.0; 3]], &[vec![0.0; 3]]).is_err());
+        // wrong group length
+        assert!(o
+            .import_state(
+                1,
+                &[vec![0.0; 3], vec![0.0; 99]],
+                &[vec![0.0; 3], vec![0.0; 2]],
+            )
+            .is_err());
+        // SGD must reject any moments at all
+        let mut s = Optimizer::new(OptimizerKind::Sgd, 0.1, &[3], &t);
+        assert!(s.import_state(0, &[vec![0.0; 3]], &[]).is_err());
+        assert!(s.import_state(0, &[], &[]).is_ok());
     }
 
     #[test]

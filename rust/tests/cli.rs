@@ -150,6 +150,102 @@ fn reproduce_memory_table_prints_paper_and_model() {
     assert!(text.contains("1024"));
 }
 
+fn extract_loss_bits(text: &str) -> &str {
+    let start = text
+        .find("final loss bits: ")
+        .expect("train must print exact final-loss bits")
+        + "final loss bits: ".len();
+    let rest = &text[start..];
+    let end = rest.find(' ').unwrap_or(rest.len());
+    &rest[..end]
+}
+
+#[test]
+fn train_suspend_resume_reproduces_final_loss_bitwise() {
+    // The CI resume tier in miniature: a 6-step run with --save-every 3
+    // and a resume from the step-3 snapshot must print IDENTICAL final
+    // loss bits.
+    let dir = std::env::temp_dir().join("mesp-test-cli-resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    let dirs = dir.to_str().unwrap();
+    let (ok, full) = mesp(&[
+        "train", "--config", "toy", "--steps", "6", "--save-every", "3",
+        "--snapshot-dir", dirs,
+    ]);
+    assert!(ok, "{full}");
+    assert!(full.contains("snapshot: "), "{full}");
+    let snap = dir.join("step-3.snap");
+    assert!(snap.exists(), "step-3 snapshot must exist");
+    let (ok, resumed) = mesp(&[
+        "train", "--config", "toy", "--steps", "6", "--resume",
+        snap.to_str().unwrap(),
+    ]);
+    assert!(ok, "{resumed}");
+    assert!(resumed.contains("resumed"), "{resumed}");
+    assert_eq!(
+        extract_loss_bits(&full),
+        extract_loss_bits(&resumed),
+        "resume must be bitwise\nfull:\n{full}\nresumed:\n{resumed}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn train_resume_from_garbage_fails_loudly() {
+    let dir = std::env::temp_dir().join("mesp-test-cli-badsnap");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("bad.snap");
+    std::fs::write(&bad, b"not a snapshot").unwrap();
+    let (ok, text) = mesp(&["train", "--resume", bad.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(text.contains("truncated") || text.contains("bad magic"), "{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fleet_budget_schedule_preempts_and_resumes() {
+    // Budget shrinks after 8 fleet-wide steps to fit only one of the two
+    // running jobs: the report must show at least one preempt + resume
+    // and still complete everything. The budgets bracket the toy MeSP
+    // job cost (machine-dependent via the packing-panel term), exactly
+    // the way the CI smoke sizes them with `fleet --print-cost`.
+    let base = mesp::config::TrainConfig::default();
+    let cost =
+        mesp::fleet::job_cost_bytes(&mesp::fleet::JobSpec::from_base(&base))
+            .unwrap();
+    let one_job_mb = cost.div_ceil(1 << 20); // ceil: fits one, not two
+    let budget_mb = 3 * one_job_mb;
+    let dir = std::env::temp_dir().join("mesp-test-cli-preempt");
+    let _ = std::fs::remove_dir_all(&dir);
+    let (ok, text) = mesp(&[
+        "fleet", "--config", "toy", "--methods", "mesp", "--jobs", "2",
+        "--steps", "25", "--workers", "2", "--budget-mb",
+        &budget_mb.to_string(), "--budget-schedule",
+        &format!("8:{one_job_mb}"), "--snapshot-dir",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("preemption on"), "{text}");
+    assert!(text.contains("fleet report"), "{text}");
+    let line = text
+        .lines()
+        .find(|l| l.starts_with("preempts "))
+        .unwrap_or_else(|| panic!("no preempts line in:\n{text}"));
+    assert!(
+        !line.starts_with("preempts 0"),
+        "budget shrink must preempt: {line}\n{text}"
+    );
+    assert!(!line.contains("resumes 0"), "parked job must resume: {line}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fleet_rejects_bad_budget_schedule() {
+    let (ok, text) = mesp(&["fleet", "--budget-schedule", "20"]);
+    assert!(!ok);
+    assert!(text.contains("step:mb"), "{text}");
+}
+
 #[test]
 fn simulate_rejects_unknown_model() {
     let (ok, text) = mesp(&["simulate", "--model", "7b"]);

@@ -5,7 +5,9 @@
 //! peak never exceeds the budget.
 
 use mesp::config::{presets, Method, QuantMode, TrainConfig};
-use mesp::fleet::{grid, job_cost_bytes, FleetOptions, JobSpec, Scheduler};
+use mesp::fleet::{
+    grid, job_cost_bytes, BudgetChange, FleetOptions, Job, JobSpec, Scheduler,
+};
 use mesp::memory::resident_weight_bytes;
 
 fn base(steps: usize) -> TrainConfig {
@@ -37,7 +39,11 @@ fn one_mebp_budget_serializes_mebp_but_overlaps_mesp() {
         "premise: ≥2 MeSP jobs ({mesp_cost} B each) must fit where one \
          MeBP ({mebp_cost} B) does"
     );
-    let opts = FleetOptions { budget_bytes: budget, workers: 4 };
+    let opts = FleetOptions {
+        budget_bytes: budget,
+        workers: 4,
+        ..FleetOptions::default()
+    };
 
     // All-MeBP fleet: admission must serialize the jobs.
     let report = Scheduler::run(&opts, &base, grid(&base, &[Method::Mebp], 4))
@@ -111,7 +117,11 @@ fn f32_serializing_budget_overlaps_q4_jobs() {
 
     // One-f32-job budget: f32 MeSP jobs serialize...
     let budget = 2 * f32_cost - 1;
-    let opts = FleetOptions { budget_bytes: budget, workers: 4 };
+    let opts = FleetOptions {
+        budget_bytes: budget,
+        workers: 4,
+        ..FleetOptions::default()
+    };
     let report =
         Scheduler::run(&opts, &base_f32, grid(&base_f32, &[Method::Mesp], 4))
             .unwrap();
@@ -203,7 +213,11 @@ fn predicted_cost_bounds_measured_session_peak() {
 fn outcomes_are_in_job_id_order_with_distinct_seeds() {
     let base = base(2);
     let jobs = grid(&base, &[Method::Mesp, Method::Mebp], 5);
-    let opts = FleetOptions { budget_bytes: u64::MAX, workers: 3 };
+    let opts = FleetOptions {
+        budget_bytes: u64::MAX,
+        workers: 3,
+        ..FleetOptions::default()
+    };
     let report = Scheduler::run(&opts, &base, jobs).unwrap();
     assert_eq!(report.failed(), 0, "{}", report.render());
     let ids: Vec<usize> = report.outcomes.iter().map(|o| o.job.id).collect();
@@ -225,7 +239,11 @@ fn oversized_job_fails_without_sinking_the_fleet() {
     let mesp_cost = cost(&base, Method::Mesp);
     // Budget fits a MeSP job but not a MeBP job.
     let budget = (mesp_cost + cost(&base, Method::Mebp)) / 2;
-    let opts = FleetOptions { budget_bytes: budget, workers: 2 };
+    let opts = FleetOptions {
+        budget_bytes: budget,
+        workers: 2,
+        ..FleetOptions::default()
+    };
     let jobs = grid(&base, &[Method::Mesp, Method::Mebp], 4);
     let report = Scheduler::run(&opts, &base, jobs).unwrap();
     assert_eq!(report.completed(), 2, "{}", report.render());
@@ -239,6 +257,138 @@ fn oversized_job_fails_without_sinking_the_fleet() {
             }
         }
     }
+}
+
+#[test]
+fn priority_9_job_preempts_priority_1_job_under_one_job_budget() {
+    // A long-running priority-1 job is admitted first (arrival order);
+    // the priority-9 job cannot fit under a one-job budget, so the gate
+    // parks the p1 job: snapshot → requeue → resume after the p9 job is
+    // done. Everything completes; nobody is killed.
+    let base = base(200);
+    let one_job = cost(&base, Method::Mesp);
+    let budget = 2 * one_job - 1;
+    let dir = std::env::temp_dir().join("mesp-test-fleet-preempt");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut low = JobSpec::from_base(&base);
+    low.priority = 1;
+    low.steps = 200;
+    let mut high = JobSpec::from_base(&base);
+    high.priority = 9;
+    high.steps = 5;
+    let jobs = vec![Job { id: 0, spec: low }, Job { id: 1, spec: high }];
+
+    let opts = FleetOptions {
+        budget_bytes: budget,
+        workers: 2,
+        preempt: true,
+        snapshot_dir: Some(dir.clone()),
+        ..FleetOptions::default()
+    };
+    let report = Scheduler::run(&opts, &base, jobs).unwrap();
+    assert_eq!(report.failed(), 0, "{}", report.render());
+    assert!(report.preempts >= 1, "p1 must be parked\n{}", report.render());
+    assert!(report.resumes >= 1, "p1 must come back\n{}", report.render());
+    assert!(
+        report.outcomes[0].preempts >= 1,
+        "the LOW-priority job is the victim\n{}",
+        report.render()
+    );
+    assert_eq!(
+        report.outcomes[1].preempts, 0,
+        "the high-priority job is never preempted\n{}",
+        report.render()
+    );
+    assert!(
+        report.snapshot_peak_bytes > 0,
+        "parked bytes must be charged to the snapshot tag"
+    );
+    // parked snapshots are consumed on resume — nothing left on disk
+    let leftovers = std::fs::read_dir(&dir)
+        .map(|d| d.count())
+        .unwrap_or(0);
+    assert_eq!(leftovers, 0, "snapshot files must be removed on resume");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn budget_schedule_shrink_parks_one_job_and_resume_stays_bitwise() {
+    // Two overlapping jobs; after 10 fleet-wide steps the budget shrinks
+    // to fit only one, so one parks and finishes later. Each job's final
+    // state must be bitwise-identical to a standalone uninterrupted run
+    // of the same spec — preemption costs time, never correctness.
+    let steps = 30;
+    let base = base(steps);
+    let one_job = cost(&base, Method::Mesp);
+    let shrunk = one_job + one_job / 2;
+    let dir = std::env::temp_dir().join("mesp-test-fleet-shrink");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let opts = FleetOptions {
+        budget_bytes: 2 * one_job,
+        workers: 2,
+        snapshot_dir: Some(dir.clone()),
+        budget_schedule: vec![BudgetChange {
+            at_step: 10,
+            budget_bytes: shrunk,
+        }],
+        ..FleetOptions::default()
+    };
+    let jobs = grid(&base, &[Method::Mesp], 2);
+    let report = Scheduler::run(&opts, &base, jobs).unwrap();
+    assert_eq!(report.failed(), 0, "{}", report.render());
+    assert!(report.preempts >= 1, "shrink must park a job\n{}", report.render());
+    assert!(report.resumes >= 1, "{}", report.render());
+    assert_eq!(report.final_budget_bytes, shrunk);
+    let dims = presets::compiled("toy").unwrap();
+    assert!(
+        report.snapshot_peak_bytes
+            >= mesp::memory::snapshot_bytes(&dims, base.optimizer),
+        "parked snapshot tag must cover at least the analytical size"
+    );
+
+    for o in &report.outcomes {
+        let r = o.result.as_ref().unwrap();
+        assert!(r.summary.healthy(), "job {} diverged", o.job.id);
+        // Standalone uninterrupted twin of the same spec.
+        let cfg = o.job.spec.to_train_config(&base);
+        let mut solo = mesp::coordinator::TrainSession::new(cfg).unwrap();
+        solo.run(steps).unwrap();
+        let solo_losses = solo.losses();
+        assert_eq!(
+            r.summary.final_loss.to_bits(),
+            solo_losses.last().unwrap().to_bits(),
+            "job {}: fleet resume diverged from the uninterrupted run\n{}",
+            o.job.id,
+            report.render()
+        );
+        // The recorded final segment is a bitwise suffix of the solo run.
+        let tail = &solo_losses[solo_losses.len() - r.losses.len()..];
+        for (a, b) in r.losses.iter().zip(tail) {
+            assert_eq!(a.to_bits(), b.to_bits(), "job {} segment", o.job.id);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn plain_fleets_never_preempt() {
+    // No --preempt, no schedule: the preemption counters stay zero even
+    // under a tight budget (jobs serialize instead).
+    let base = base(3);
+    let budget = 2 * cost(&base, Method::Mesp) - 1;
+    let opts = FleetOptions {
+        budget_bytes: budget,
+        workers: 3,
+        ..FleetOptions::default()
+    };
+    let report =
+        Scheduler::run(&opts, &base, grid(&base, &[Method::Mesp], 3)).unwrap();
+    assert_eq!(report.failed(), 0, "{}", report.render());
+    assert_eq!(report.preempts, 0);
+    assert_eq!(report.resumes, 0);
+    assert_eq!(report.snapshot_peak_bytes, 0);
 }
 
 /// Wait until a tracker's live bytes stop changing (the session's

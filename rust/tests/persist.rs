@@ -1,0 +1,377 @@
+//! Session snapshot integration: the bitwise suspend/resume guarantee.
+//!
+//! The contract under test (ISSUE 5 / CI resume tier): a run suspended
+//! at step k and resumed reproduces the uninterrupted run BITWISE —
+//! identical per-step losses and identical adapter bits — for every
+//! exact-gradient method × quant mode × kernel variant, at any thread
+//! count, and across repeated suspend/resume cycles. Corrupted,
+//! truncated and version-skewed snapshot files must be rejected with
+//! actionable errors before any state is touched.
+
+use std::path::PathBuf;
+
+use mesp::config::{
+    KernelKind, Method, OptimizerKind, QuantMode, TrainConfig,
+};
+use mesp::coordinator::TrainSession;
+use mesp::memory::snapshot_bytes;
+use mesp::persist::Snapshot;
+
+fn cfg(
+    method: Method,
+    quant: QuantMode,
+    kernel: KernelKind,
+    steps: usize,
+) -> TrainConfig {
+    TrainConfig {
+        config: "toy".into(),
+        method,
+        quant,
+        kernel,
+        steps,
+        // Adam: the snapshot must carry both moment sets + the bias-
+        // correction counter for the resumed trajectory to match.
+        optimizer: OptimizerKind::parse("adam").unwrap(),
+        seed: 7,
+        log_every: usize::MAX,
+        ..Default::default()
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mesp-test-persist-{name}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Every LoRA parameter of the session as raw f32 bits.
+fn lora_bits(sess: &TrainSession) -> Vec<u32> {
+    sess.engine
+        .ctx()
+        .model
+        .lora
+        .iter()
+        .flat_map(|l| l.tensors.iter())
+        .flat_map(|t| t.as_f32().iter().map(|x| x.to_bits()))
+        .collect()
+}
+
+fn loss_bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn resume_is_bitwise_identical_across_methods_quants_kernels() {
+    let dir = tmp("grid");
+    let total = 4;
+    let suspend_at = 2;
+    for method in [Method::Mesp, Method::Mebp, Method::StoreH] {
+        for quant in QuantMode::ALL {
+            for kernel in KernelKind::ALL {
+                let label =
+                    format!("{}/{}/{}", method.name(), quant.name(), kernel.name());
+                let base = cfg(method, quant, kernel, total);
+
+                // Uninterrupted reference run.
+                let mut full = TrainSession::new(base.clone()).unwrap();
+                full.run(total).unwrap();
+                let full_losses = full.losses();
+                let full_bits = lora_bits(&full);
+
+                // Suspend at k...
+                let mut part = TrainSession::new(base.clone()).unwrap();
+                part.run(suspend_at).unwrap();
+                let early_losses = part.losses();
+                let path = dir.join(format!(
+                    "{}-{}-{}.snap",
+                    method.name(), quant.name(), kernel.name()
+                ));
+                part.save_snapshot(&path).unwrap();
+                drop(part);
+
+                // ...resume and finish.
+                let mut resumed = TrainSession::restore(&base, &path).unwrap();
+                assert_eq!(resumed.steps_done(), suspend_at, "{label}");
+                resumed.run(total - suspend_at).unwrap();
+                let late_losses = resumed.losses();
+
+                // The stitched trajectory equals the uninterrupted one.
+                let mut stitched = early_losses.clone();
+                stitched.extend_from_slice(&late_losses);
+                assert_eq!(
+                    loss_bits(&stitched),
+                    loss_bits(&full_losses),
+                    "{label}: losses diverge after resume"
+                );
+                assert_eq!(
+                    lora_bits(&resumed),
+                    full_bits,
+                    "{label}: adapter bits diverge after resume"
+                );
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_is_bitwise_identical_across_thread_counts() {
+    // The parallel kernel is bitwise-identical at any thread count, so a
+    // session suspended under 3 kernel threads and resumed under 2 must
+    // still match an uninterrupted 1-thread run.
+    let dir = tmp("threads");
+    let mut base = cfg(Method::Mesp, QuantMode::F32, KernelKind::Parallel, 4);
+    base.threads = 1;
+    let mut full = TrainSession::new(base.clone()).unwrap();
+    full.run(4).unwrap();
+
+    let mut three = base.clone();
+    three.threads = 3;
+    let mut part = TrainSession::new(three).unwrap();
+    part.run(2).unwrap();
+    let path = dir.join("threads.snap");
+    part.save_snapshot(&path).unwrap();
+    drop(part);
+
+    let mut two = base.clone();
+    two.threads = 2;
+    let mut resumed = TrainSession::restore(&two, &path).unwrap();
+    resumed.run(2).unwrap();
+    assert_eq!(
+        resumed.losses().last().unwrap().to_bits(),
+        full.losses().last().unwrap().to_bits(),
+        "thread count must not affect the resumed trajectory"
+    );
+    assert_eq!(lora_bits(&resumed), lora_bits(&full));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mezo_resume_replays_the_same_perturbation_stream() {
+    // MeZO's z is derived from the step counter; restoring the counter
+    // restores the SPSA stream bitwise.
+    let dir = tmp("mezo");
+    let base = TrainConfig {
+        config: "toy".into(),
+        method: Method::Mezo,
+        steps: 4,
+        seed: 11,
+        log_every: usize::MAX,
+        ..Default::default()
+    };
+    let mut full = TrainSession::new(base.clone()).unwrap();
+    full.run(4).unwrap();
+
+    let mut part = TrainSession::new(base.clone()).unwrap();
+    part.run(2).unwrap();
+    let path = dir.join("mezo.snap");
+    part.save_snapshot(&path).unwrap();
+    drop(part);
+    let mut resumed = TrainSession::restore(&base, &path).unwrap();
+    resumed.run(2).unwrap();
+    assert_eq!(
+        loss_bits(&resumed.losses()),
+        loss_bits(&full.losses()[2..]),
+        "MeZO losses diverge after resume"
+    );
+    assert_eq!(lora_bits(&resumed), lora_bits(&full));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn repeated_suspend_resume_cycles_stay_bitwise() {
+    let dir = tmp("cycles");
+    let base = cfg(Method::Mesp, QuantMode::Q4, KernelKind::Tiled, 4);
+    let mut full = TrainSession::new(base.clone()).unwrap();
+    full.run(4).unwrap();
+
+    // 1 step → park → 1 step → park → 2 steps.
+    let mut sess = TrainSession::new(base.clone()).unwrap();
+    for k in 1..=2u32 {
+        sess.run(1).unwrap();
+        let path = dir.join(format!("cycle-{k}.snap"));
+        sess.save_snapshot(&path).unwrap();
+        drop(sess);
+        sess = TrainSession::restore(&base, &path).unwrap();
+        assert_eq!(sess.steps_done(), k as usize);
+        assert_eq!(sess.batches_consumed(), k as u64);
+    }
+    sess.run(2).unwrap();
+    assert_eq!(
+        sess.losses().last().unwrap().to_bits(),
+        full.losses().last().unwrap().to_bits()
+    );
+    assert_eq!(lora_bits(&sess), lora_bits(&full));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn snapshot_file_size_matches_the_analytical_model() {
+    let dir = tmp("size");
+    for (opt, name) in [
+        (OptimizerKind::Sgd, "sgd"),
+        (OptimizerKind::parse("momentum").unwrap(), "momentum"),
+        (OptimizerKind::parse("adam").unwrap(), "adam"),
+    ] {
+        let mut base = cfg(Method::Mesp, QuantMode::F32, KernelKind::Tiled, 1);
+        base.optimizer = opt;
+        let mut sess = TrainSession::new(base).unwrap();
+        sess.run(1).unwrap();
+        let path = dir.join(format!("{name}.snap"));
+        let actual = sess.save_snapshot(&path).unwrap();
+        let dims = mesp::config::presets::compiled("toy").unwrap();
+        let model = snapshot_bytes(&dims, opt);
+        assert!(
+            actual >= model,
+            "{name}: file {actual} B smaller than the payload model {model} B"
+        );
+        assert!(
+            actual <= model + 8192,
+            "{name}: file {actual} B exceeds model {model} B + 8 KB envelope \
+             — per-tensor overhead grew"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_truncated_and_version_skewed_files_are_rejected() {
+    let dir = tmp("reject");
+    let base = cfg(Method::Mesp, QuantMode::F32, KernelKind::Tiled, 2);
+    let mut sess = TrainSession::new(base.clone()).unwrap();
+    sess.run(1).unwrap();
+    let path = dir.join("good.snap");
+    sess.save_snapshot(&path).unwrap();
+    drop(sess);
+    let good = std::fs::read(&path).unwrap();
+
+    let expect_err = |name: &str, bytes: &[u8], needle: &str| {
+        let p = dir.join(name);
+        std::fs::write(&p, bytes).unwrap();
+        let err = TrainSession::restore(&base, &p)
+            .err()
+            .unwrap_or_else(|| panic!("{name} must be rejected"))
+            .to_string();
+        assert!(err.contains(needle), "{name}: '{err}' lacks '{needle}'");
+    };
+
+    // flipped payload byte → checksum
+    let mut corrupt = good.clone();
+    let mid = 28 + (good.len() - 28) / 2;
+    corrupt[mid] ^= 0x10;
+    expect_err("corrupt.snap", &corrupt, "checksum mismatch");
+
+    // truncated file → truncation
+    expect_err("short.snap", &good[..good.len() / 2], "truncated");
+    expect_err("header-only.snap", &good[..20], "truncated");
+
+    // wrong version → version error naming both versions
+    let mut vskew = good.clone();
+    vskew[8..12].copy_from_slice(&9u32.to_le_bytes());
+    expect_err("vskew.snap", &vskew, "unsupported snapshot version 9");
+
+    // not a snapshot at all (long enough to clear the header check)
+    expect_err(
+        "junk.snap",
+        b"definitely not a snapshot, just forty-odd bytes of text",
+        "bad magic",
+    );
+
+    // missing file
+    let err = TrainSession::restore(&base, &dir.join("nope.snap"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("read snapshot"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn weight_fingerprint_and_rng_stream_mismatches_refuse_to_resume() {
+    let dir = tmp("mismatch");
+    let base = cfg(Method::Mesp, QuantMode::F32, KernelKind::Tiled, 2);
+    let mut sess = TrainSession::new(base.clone()).unwrap();
+    sess.run(1).unwrap();
+    let snap = sess.snapshot();
+    drop(sess);
+
+    // Tampered base-weight fingerprint: the regenerated model no longer
+    // matches what the adapters were trained against.
+    let mut bad = snap.clone();
+    bad.weights_fingerprint ^= 1;
+    let p = dir.join("fp.snap");
+    bad.save(&p).unwrap();
+    let err = TrainSession::restore(&base, &p).unwrap_err().to_string();
+    assert!(err.contains("fingerprint"), "{err}");
+
+    // Tampered seed: the stored derive-stream seeds no longer match the
+    // derivation for the claimed seed.
+    let mut bad = snap.clone();
+    bad.seed ^= 0xff;
+    let p = dir.join("seed.snap");
+    bad.save(&p).unwrap();
+    let err = TrainSession::restore(&base, &p).unwrap_err().to_string();
+    assert!(err.contains("RNG stream"), "{err}");
+
+    // Tampered shape: adapter tensors from a different architecture.
+    let mut bad = snap.clone();
+    bad.lora.pop();
+    let p = dir.join("shape.snap");
+    bad.save(&p).unwrap();
+    let err = TrainSession::restore(&base, &p).unwrap_err().to_string();
+    assert!(err.contains("LoRA layers"), "{err}");
+
+    // The untampered snapshot still restores fine.
+    let p = dir.join("good.snap");
+    snap.save(&p).unwrap();
+    TrainSession::restore(&base, &p).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn restore_adopts_snapshot_identity_over_flag_defaults() {
+    // A store-h q4 adam snapshot resumed with a plain-default base config
+    // must come back as store-h/q4/adam — the CLI contract for
+    // `train --resume` (explicit conflicting flags lose, loudly
+    // documented in USAGE).
+    let dir = tmp("identity");
+    let base = cfg(Method::StoreH, QuantMode::Q4, KernelKind::Parallel, 2);
+    let mut sess = TrainSession::new(base).unwrap();
+    sess.run(1).unwrap();
+    let path = dir.join("id.snap");
+    sess.save_snapshot(&path).unwrap();
+    drop(sess);
+
+    let defaults = TrainConfig { log_every: usize::MAX, ..Default::default() };
+    let resumed = TrainSession::restore(&defaults, &path).unwrap();
+    assert_eq!(resumed.cfg.method, Method::StoreH);
+    assert_eq!(resumed.cfg.quant, QuantMode::Q4);
+    assert_eq!(resumed.cfg.seed, 7);
+    assert_eq!(
+        resumed.cfg.optimizer,
+        OptimizerKind::parse("adam").unwrap()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn snapshot_roundtrips_through_encode_decode_at_session_scale() {
+    // Session-produced snapshots (real adapter data, q4 config) survive
+    // encode → decode bit-for-bit.
+    let base = cfg(Method::Mesp, QuantMode::Q4, KernelKind::Tiled, 2);
+    let mut sess = TrainSession::new(base).unwrap();
+    sess.run(2).unwrap();
+    let snap = sess.snapshot();
+    let back = Snapshot::decode(&snap.encode()).unwrap();
+    assert_eq!(back.step, 2);
+    assert_eq!(back.batches_consumed, 2);
+    assert_eq!(back.weights_fingerprint, snap.weights_fingerprint);
+    for (a, b) in snap.lora.iter().flatten().zip(back.lora.iter().flatten()) {
+        assert_eq!(a.shape, b.shape);
+        assert!(a
+            .as_f32()
+            .iter()
+            .zip(b.as_f32())
+            .all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+}

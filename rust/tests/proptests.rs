@@ -3,11 +3,13 @@
 //! in-house seeded case generator (util::Rng) — hundreds of random cases
 //! per property, deterministic by seed, with the failing seed printed.
 
+use mesp::config::{Method, OptimizerKind, QuantMode};
 use mesp::data::tokenizer::for_vocab;
 use mesp::data::BatchSource;
 use mesp::memory::MemoryTracker;
 use mesp::model::quant;
-use mesp::tensor::HostTensor;
+use mesp::persist::{Reader, RngStreams, Snapshot, Writer};
+use mesp::tensor::{Data, HostTensor};
 use mesp::train::CheckpointStore;
 use mesp::util::{Json, Rng};
 
@@ -228,6 +230,175 @@ fn prop_json_roundtrip() {
         let s = v.to_string();
         let re = Json::parse(&s).expect("parse own output");
         assert_eq!(re.to_string(), s, "stable serialization");
+    });
+}
+
+/// A random f32 value mixing ordinary magnitudes with the nasty corners
+/// (NaN payloads, infinities, signed zero, subnormals) — snapshot
+/// round-trips must preserve every one of them bit-for-bit.
+fn arb_f32(rng: &mut Rng) -> f32 {
+    match rng.below(8) {
+        0 => f32::from_bits(0x7fc0_0001), // NaN with payload
+        1 => f32::INFINITY,
+        2 => f32::NEG_INFINITY,
+        3 => -0.0,
+        4 => 1e-40, // subnormal
+        _ => (rng.uniform() - 0.5) * 10f32.powi(rng.below(20) as i32 - 10),
+    }
+}
+
+/// A random tensor: f32 (adapters, scales, optimizer moments) or u8
+/// (q4-packed nibbles) with a random small shape.
+fn arb_tensor(rng: &mut Rng) -> HostTensor {
+    let ndim = 1 + rng.below(3);
+    let shape: Vec<usize> = (0..ndim).map(|_| 1 + rng.below(6)).collect();
+    let len: usize = shape.iter().product();
+    if rng.uniform() < 0.3 {
+        HostTensor::u8(&shape, (0..len).map(|_| rng.below(256) as u8).collect())
+    } else {
+        HostTensor::f32(&shape, (0..len).map(|_| arb_f32(rng)).collect())
+    }
+}
+
+fn arb_snapshot(rng: &mut Rng) -> Snapshot {
+    let methods = Method::ALL;
+    let optimizers = [
+        OptimizerKind::Sgd,
+        OptimizerKind::Momentum { beta: arb_f32(rng) },
+        OptimizerKind::Adam {
+            beta1: arb_f32(rng),
+            beta2: arb_f32(rng),
+            eps: arb_f32(rng),
+        },
+    ];
+    let seed = rng.next_u64();
+    let mut lora = Vec::new();
+    for _ in 0..rng.below(4) {
+        let mut layer = Vec::new();
+        for _ in 0..rng.below(5) {
+            layer.push(arb_tensor(rng));
+        }
+        lora.push(layer);
+    }
+    let mut groups = |rng: &mut Rng| {
+        let mut out = Vec::new();
+        for _ in 0..rng.below(4) {
+            let mut g = Vec::new();
+            for _ in 0..rng.below(20) {
+                g.push(arb_f32(rng));
+            }
+            out.push(g);
+        }
+        out
+    };
+    Snapshot {
+        config: format!("cfg-{}", rng.below(1000)),
+        method: methods[rng.below(4)],
+        quant: QuantMode::ALL[rng.below(2)],
+        optimizer: optimizers[rng.below(3)],
+        lr: arb_f32(rng),
+        seed,
+        step: rng.next_u64(),
+        batches_consumed: rng.next_u64(),
+        rng: RngStreams::derive_from(seed),
+        weights_fingerprint: rng.next_u64(),
+        lora,
+        opt_t: rng.next_u64(),
+        opt_m1: groups(rng),
+        opt_m2: groups(rng),
+    }
+}
+
+fn tensors_bitwise_eq(a: &HostTensor, b: &HostTensor) -> bool {
+    a.shape == b.shape
+        && match (&a.data, &b.data) {
+            (Data::F32(x), Data::F32(y)) => {
+                x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+            }
+            (Data::I32(x), Data::I32(y)) => x == y,
+            (Data::U8(x), Data::U8(y)) => x == y,
+            _ => false,
+        }
+}
+
+#[test]
+fn prop_snapshot_serialize_deserialize_is_identity() {
+    // Arbitrary adapter tensors (f32 AND u8/q4-packed), optimizer
+    // moments and rng/counter states survive encode → decode exactly.
+    forall(9, 80, |rng| {
+        let s = arb_snapshot(rng);
+        let d = Snapshot::decode(&s.encode()).expect("decode own encoding");
+        assert_eq!(d.config, s.config);
+        assert_eq!(d.method, s.method);
+        assert_eq!(d.quant, s.quant);
+        assert_eq!(d.seed, s.seed);
+        assert_eq!(d.step, s.step);
+        assert_eq!(d.batches_consumed, s.batches_consumed);
+        assert_eq!(d.rng, s.rng);
+        assert_eq!(d.weights_fingerprint, s.weights_fingerprint);
+        assert_eq!(d.opt_t, s.opt_t);
+        assert_eq!(d.lora.len(), s.lora.len());
+        for (la, lb) in s.lora.iter().zip(&d.lora) {
+            assert_eq!(la.len(), lb.len());
+            for (ta, tb) in la.iter().zip(lb) {
+                assert!(tensors_bitwise_eq(ta, tb));
+            }
+        }
+        for (ga, gb) in s.opt_m1.iter().zip(&d.opt_m1) {
+            assert!(ga.iter().zip(gb).all(|(p, q)| p.to_bits() == q.to_bits()));
+        }
+        for (ga, gb) in s.opt_m2.iter().zip(&d.opt_m2) {
+            assert!(ga.iter().zip(gb).all(|(p, q)| p.to_bits() == q.to_bits()));
+        }
+    });
+}
+
+#[test]
+fn prop_snapshot_any_single_bit_flip_is_rejected() {
+    // Whatever byte of the file a bit flip lands in — magic, version,
+    // length, checksum or payload — decode must fail, never return a
+    // silently different snapshot.
+    forall(10, 120, |rng| {
+        let s = arb_snapshot(rng);
+        let mut bytes = s.encode();
+        let i = rng.below(bytes.len());
+        bytes[i] ^= 1u8 << rng.below(8);
+        assert!(
+            Snapshot::decode(&bytes).is_err(),
+            "bit flip at byte {i} of {} went undetected",
+            bytes.len()
+        );
+    });
+}
+
+#[test]
+fn prop_q4_packed_weights_roundtrip_through_the_codec() {
+    // The q4 pack round-trip: quantized (packed, scales) pairs pass
+    // through tensor serialization unchanged, so a q4 snapshot's packed
+    // residents dequantize to exactly the same values after reload.
+    forall(11, 40, |rng| {
+        let din = 64 * (1 + rng.below(3));
+        let dout = 1 + rng.below(16);
+        let w = rng.normal_vec(din * dout, 0.1 + rng.uniform());
+        let (packed, scales) = quant::quantize(&w, din, dout);
+        let pt = HostTensor::u8(&[din / 2, dout], packed.clone());
+        let st = HostTensor::f32(&[din / quant::GROUP, dout], scales.clone());
+        let mut wtr = Writer::new();
+        wtr.tensor(&pt);
+        wtr.tensor(&st);
+        let bytes = wtr.into_bytes();
+        let mut r = Reader::new(&bytes);
+        let pt2 = r.tensor().unwrap();
+        let st2 = r.tensor().unwrap();
+        assert!(tensors_bitwise_eq(&pt, &pt2));
+        assert!(tensors_bitwise_eq(&st, &st2));
+        let deq_a = quant::dequantize(&packed, &scales, din, dout);
+        let deq_b =
+            quant::dequantize(pt2.as_u8(), st2.as_f32(), din, dout);
+        assert!(deq_a
+            .iter()
+            .zip(&deq_b)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
     });
 }
 
