@@ -26,14 +26,14 @@ fn main() -> anyhow::Result<()> {
         let mut cfg_e = base.clone();
         cfg_e.method = Method::Mesp;
         cfg_e.seed = 42 + b as u64;
-        let mut exact_s = TrainSession::new(cfg_e)?;
+        let mut exact_s = TrainSession::builder(cfg_e).build()?;
         let (batch, _g) = exact_s.loader.next();
         let exact = exact_s.engine.gradients(&batch)?;
 
         let mut cfg_z = base.clone();
         cfg_z.method = Method::Mezo;
         cfg_z.seed = 42 + b as u64;
-        let mut mezo_s = TrainSession::new(cfg_z)?;
+        let mut mezo_s = TrainSession::builder(cfg_z).build()?;
         let est = mezo_s.engine.gradients(&batch)?;
 
         let rows = grad_quality(&est, &exact);

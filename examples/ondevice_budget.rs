@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
             log_every: usize::MAX,
             ..Default::default()
         };
-        let mut sess = TrainSession::new(cfg)?;
+        let mut sess = TrainSession::builder(cfg).build()?;
         let summary = sess.run(5)?;
         println!(
             "{label:<10} ckpt-budget {:>10}  peak {:>7} MB  {:.1} ms/step  \

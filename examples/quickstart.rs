@@ -2,8 +2,11 @@
 //!
 //!     make artifacts && cargo run --release --example quickstart
 //!
-//! Demonstrates the minimal public-API path: TrainConfig → TrainSession →
-//! run → summary, plus a peek at the per-step memory the paper is about.
+//! Demonstrates the minimal public-API path: TrainConfig →
+//! TrainSession::builder → run → summary, plus a peek at the per-step
+//! memory the paper is about. The builder is the single entry point for
+//! every session variant — chain `.tracker(..)`, `.weight_cache(..)` or
+//! `.resume_from(..)` before `.build()` when you need them.
 
 use mesp::config::{Method, TrainConfig};
 use mesp::coordinator::TrainSession;
@@ -22,7 +25,7 @@ fn main() -> anyhow::Result<()> {
     let steps = cfg.steps;
 
     println!("== MeSP quickstart: toy model, {steps} steps ==\n");
-    let mut sess = TrainSession::new(cfg)?;
+    let mut sess = TrainSession::builder(cfg).build()?;
     let summary = sess.run(steps)?;
 
     println!("\nloss: {:.4} -> {:.4}", sess.losses()[0], summary.final_loss);

@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("== e2e100m: ~98M params, {} , {steps} steps ==", method.name());
     let t0 = std::time::Instant::now();
-    let mut sess = TrainSession::new(cfg)?;
+    let mut sess = TrainSession::builder(cfg).build()?;
     let summary = sess.run(steps)?;
     let losses = sess.losses();
 

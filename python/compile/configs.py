@@ -28,6 +28,15 @@ CONFIGS = {
         name="small", vocab=512, d_model=128, n_layers=4, n_heads=4,
         n_kv_heads=2, head_dim=32, d_ff=256, seq=64, batch=1, rank=8,
     ),
+    # Weight-dominated dims for the shared-base-weight fleet demo: a fat
+    # embedding over two thin blocks at seq 4, so the resident frozen
+    # base dwarfs any per-job activation cost (tests/shared_weights.rs
+    # and the CI shared-weights smoke).
+    "basebound": ModelConfig(
+        name="basebound", vocab=131072, d_model=256, n_layers=2, n_heads=4,
+        n_kv_heads=2, head_dim=64, d_ff=128, seq=4, batch=1, rank=4,
+        alpha=8.0,
+    ),
     # The end-to-end validation model: ~98M params (DESIGN.md §2).
     "e2e100m": ModelConfig(
         name="e2e100m", vocab=16384, d_model=768, n_layers=12, n_heads=12,

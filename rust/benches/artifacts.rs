@@ -9,10 +9,10 @@ mod harness;
 
 use std::sync::Arc;
 
-use mesp::config::TrainConfig;
+use mesp::config::{presets, QuantMode, TrainConfig};
 use mesp::coordinator::make_backend;
 use mesp::memory::MemoryTracker;
-use mesp::model::ModelState;
+use mesp::model::ModelSpec;
 use mesp::runtime::{Arg, Backend};
 use mesp::tensor::HostTensor;
 use mesp::util::Rng;
@@ -22,10 +22,12 @@ fn main() {
     for config in ["toy", "small"] {
         println!("== artifact exec latency, config {config} ==");
         let cfg = TrainConfig { config: config.into(), ..Default::default() };
+        let dims = Arc::new(presets::compiled(config).expect("dims"));
         let rt: Arc<dyn Backend> =
-            make_backend(&cfg, tracker.clone()).expect("backend");
+            make_backend(&cfg, dims.clone(), tracker.clone()).expect("backend");
         let dims = rt.dims().clone();
-        let model = ModelState::init(&dims, 1, &tracker);
+        let (frozen, adapters) =
+            ModelSpec::new(dims.clone(), 1, QuantMode::F32).build(&tracker);
         let mut rng = Rng::new(2);
         let x = HostTensor::randn(&[dims.batch, dims.seq, dims.d_model],
                                   0.5, &mut rng);
@@ -35,7 +37,10 @@ fn main() {
         let fwd_args = |lead: Vec<&HostTensor>| -> Vec<HostTensor> {
             // materialize owned clones so the closure below is simple
             let mut v: Vec<HostTensor> = lead.into_iter().cloned().collect();
-            for t in model.block_args(0) {
+            for t in frozen.block_tensors(0) {
+                v.push(t.clone());
+            }
+            for t in &adapters.lora[0].tensors {
                 v.push(t.clone());
             }
             v
@@ -72,7 +77,10 @@ fn main() {
                     let residuals: Vec<HostTensor> = outs.drain(1..).collect();
                     let mut bwd_owned: Vec<HostTensor> = vec![gy.clone()];
                     bwd_owned.extend(residuals);
-                    for t in model.block_args(0) {
+                    for t in frozen.block_tensors(0) {
+                        bwd_owned.push(t.clone());
+                    }
+                    for t in &adapters.lora[0].tensors {
                         bwd_owned.push(t.clone());
                     }
                     let bwd_args: Vec<Arg> =

@@ -36,7 +36,7 @@ fn step_bench_q(
         log_every: usize::MAX,
         ..Default::default()
     };
-    let mut sess = TrainSession::new(cfg).expect("session");
+    let mut sess = TrainSession::builder(cfg).build().expect("session");
     // pre-fetch a batch and reuse it so data time is excluded
     let (batch, _g) = sess.loader.next();
     harness::bench(

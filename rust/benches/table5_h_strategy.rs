@@ -19,7 +19,7 @@ fn main() {
             log_every: usize::MAX,
             ..Default::default()
         };
-        let mut sess = TrainSession::new(cfg).expect("session");
+        let mut sess = TrainSession::builder(cfg).build().expect("session");
         let (batch, _g) = sess.loader.next();
         results.push(harness::bench(
             &format!("small/step/{}", method.name()),

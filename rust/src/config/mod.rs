@@ -112,7 +112,7 @@ impl BackendKind {
 /// dequantizes panels on the fly inside the kernel. Norm gains, the
 /// embedding and all LoRA adapters stay f32 in both modes, so gradients
 /// w.r.t. A/B remain exact for the quantized forward.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum QuantMode {
     #[default]
     F32,
@@ -331,6 +331,22 @@ pub struct TrainConfig {
     pub threads: usize,
     /// Resident precision of the frozen base weights (`--quant f32|q4`).
     pub quant: QuantMode,
+    /// Explicit seed for the frozen base weights. `None` derives it from
+    /// `seed` (the historical behaviour); fleet grids pin it to the
+    /// base's derived model seed so same-base jobs share one cached
+    /// `FrozenModel` while their data/job seed streams stay distinct.
+    pub model_seed: Option<u64>,
+}
+
+impl TrainConfig {
+    /// The seed the frozen base weights are generated from: the explicit
+    /// `model_seed` when pinned, else derived from `seed` on the MODEL
+    /// stream. Everything that builds or caches frozen weights keys off
+    /// this resolved value.
+    pub fn model_seed(&self) -> u64 {
+        self.model_seed
+            .unwrap_or_else(|| crate::util::rng::derive(self.seed, crate::util::rng::stream::MODEL))
+    }
 }
 
 impl Default for TrainConfig {
@@ -351,6 +367,7 @@ impl Default for TrainConfig {
             kernel: KernelKind::default(),
             threads: 0,
             quant: QuantMode::default(),
+            model_seed: None,
         }
     }
 }
@@ -434,6 +451,16 @@ mod tests {
         assert_eq!(QuantMode::parse("int4").unwrap(), QuantMode::Q4);
         assert!(QuantMode::parse("q8").is_err());
         assert_eq!(TrainConfig::default().quant, QuantMode::F32);
+    }
+
+    #[test]
+    fn model_seed_resolves_pinned_or_derived() {
+        let mut c = TrainConfig::default();
+        let derived =
+            crate::util::rng::derive(c.seed, crate::util::rng::stream::MODEL);
+        assert_eq!(c.model_seed(), derived);
+        c.model_seed = Some(7);
+        assert_eq!(c.model_seed(), 7);
     }
 
     #[test]

@@ -118,6 +118,32 @@ fn small() -> ModelDims {
     }
 }
 
+/// Weight-dominated dims for the shared-base-weight fleet demo: a fat
+/// f32 embedding (vocab 131072 × d 256 ≈ 128 MB) over two thin blocks
+/// at seq 4, so the resident frozen base dwarfs the per-job activation
+/// cost by well over 8× even on many-core machines (the per-job cost
+/// includes a per-available-core GEMM packing term). A budget sized for
+/// TWO private-weight jobs then overlaps ten-plus jobs that share one
+/// cached base — the `tests/shared_weights.rs` scenario and the CI
+/// shared-weights smoke. All quantized d_ins (256, 128) divide the q4
+/// group size, so the preset runs in both precisions.
+fn basebound() -> ModelDims {
+    ModelDims {
+        name: "basebound".into(),
+        vocab: 131072,
+        d_model: 256,
+        n_layers: 2,
+        n_heads: 4,
+        n_kv_heads: 2,
+        head_dim: 64,
+        d_ff: 128,
+        seq: 4,
+        batch: 1,
+        rank: 4,
+        alpha: 8.0,
+    }
+}
+
 /// The end-to-end validation model: ~98M params (DESIGN.md §2).
 fn e2e100m() -> ModelDims {
     ModelDims {
@@ -144,9 +170,10 @@ pub fn compiled(name: &str) -> anyhow::Result<ModelDims> {
         "toy" => Ok(toy("toy")),
         "toy_flash" => Ok(toy("toy_flash")),
         "small" => Ok(small()),
+        "basebound" => Ok(basebound()),
         "e2e100m" => Ok(e2e100m()),
         _ => anyhow::bail!(
-            "unknown config '{name}' (toy|toy_flash|small|e2e100m)"
+            "unknown config '{name}' (toy|toy_flash|small|basebound|e2e100m)"
         ),
     }
 }
@@ -192,5 +219,21 @@ mod tests {
         assert!((80_000_000..120_000_000).contains(&p), "{p}");
         assert!(compiled("toy_flash").is_ok());
         assert!(compiled("huge").is_err());
+    }
+
+    #[test]
+    fn basebound_is_weight_dominated_and_q4able() {
+        use crate::config::QuantMode;
+        use crate::memory::model::resident_weight_bytes;
+        let d = compiled("basebound").unwrap();
+        assert_eq!((d.d_model, d.n_layers, d.seq), (256, 2, 4));
+        assert_eq!(d.n_heads * d.head_dim, d.d_model);
+        // the frozen base must dwarf a job's activation cost: ~128 MB of
+        // embedding alone
+        let w = resident_weight_bytes(&d, QuantMode::F32);
+        assert!(w > 120 << 20, "resident base only {w} bytes");
+        // q4-eligible: every quantized d_in divides the group size
+        assert_eq!(d.d_model % crate::model::quant::GROUP, 0);
+        assert_eq!(d.d_ff % crate::model::quant::GROUP, 0);
     }
 }

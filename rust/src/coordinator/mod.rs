@@ -1,15 +1,22 @@
 //! Training session coordinator — the L3 top level that wires config →
 //! backend → data pipeline → engine → metrics, and the sweep runner the
 //! reproduce drivers use to run method grids.
+//!
+//! Sessions are built through [`TrainSession::builder`]: one entry point
+//! covering fresh starts, snapshot resume, caller-supplied trackers and
+//! shared [`WeightCache`]s, replacing the old `new` / `with_tracker` /
+//! `restore` / `restore_with_tracker` constructor quartet (kept as thin
+//! deprecated shims for one release).
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use crate::config::{presets, BackendKind, Method, TrainConfig};
+use crate::config::{presets, BackendKind, Method, ModelDims, TrainConfig};
 use crate::data::PrefetchLoader;
 use crate::fleet::{FleetOptions, Job, JobSpec, Scheduler};
 use crate::memory::MemoryTracker;
 use crate::metrics::{MetricsLogger, RunSummary};
+use crate::model::{ModelSpec, WeightCache};
 use crate::persist::{RngStreams, Snapshot};
 use crate::runtime::{Backend, KernelOptions, ReferenceBackend};
 use crate::tensor::DType;
@@ -23,73 +30,182 @@ pub const PREFETCH_DEPTH: usize = 4;
 
 /// Instantiate the compute backend a config asks for.
 ///
-/// * [`BackendKind::Reference`] — in-process pure-Rust backend, dims from
-///   `presets::compiled`; no files, no toolchain.
-/// * [`BackendKind::Pjrt`] — the PJRT artifact runtime, dims from
-///   `artifacts/<config>/manifest.json` (requires the `pjrt` cargo
-///   feature and `make artifacts`).
+/// * [`BackendKind::Reference`] — in-process pure-Rust backend. `dims` is
+///   the interned `Arc<ModelDims>` from the session's [`WeightCache`]
+///   (the cache owns the geometry and hands out borrows; sessions no
+///   longer clone a private `ModelDims` each).
+/// * [`BackendKind::Pjrt`] — the PJRT artifact runtime; `dims` is ignored
+///   because `artifacts/<config>/manifest.json` is authoritative there
+///   (requires the `pjrt` cargo feature and `make artifacts`).
 pub fn make_backend(
     cfg: &TrainConfig,
+    dims: Arc<ModelDims>,
     tracker: MemoryTracker,
 ) -> anyhow::Result<Arc<dyn Backend>> {
     match cfg.backend {
         BackendKind::Reference => {
-            let dims = presets::compiled(&cfg.config)?;
             let opts = KernelOptions { kind: cfg.kernel, threads: cfg.threads };
             Ok(Arc::new(ReferenceBackend::with_kernels(dims, tracker, opts)))
         }
         #[cfg(feature = "pjrt")]
-        BackendKind::Pjrt => Ok(Arc::new(crate::runtime::Runtime::load(
-            std::path::Path::new(&cfg.artifacts_dir),
-            &cfg.config,
-            tracker,
-        )?)),
+        BackendKind::Pjrt => {
+            let _ = dims;
+            Ok(Arc::new(crate::runtime::Runtime::load(
+                std::path::Path::new(&cfg.artifacts_dir),
+                &cfg.config,
+                tracker,
+            )?))
+        }
         #[cfg(not(feature = "pjrt"))]
-        BackendKind::Pjrt => anyhow::bail!(
-            "this build has no PJRT support; rebuild with `--features pjrt` \
-             (and run `make artifacts`) or use --backend reference"
-        ),
+        BackendKind::Pjrt => {
+            let _ = dims;
+            anyhow::bail!(
+                "this build has no PJRT support; rebuild with `--features pjrt` \
+                 (and run `make artifacts`) or use --backend reference"
+            )
+        }
     }
 }
 
-/// A live training session: one runnable config + one method.
-pub struct TrainSession {
-    pub cfg: TrainConfig,
-    pub engine: Box<dyn Engine>,
-    pub loader: PrefetchLoader,
-    pub metrics: MetricsLogger,
-    pub tracker: MemoryTracker,
-    /// Batches drawn through [`Self::step_once`] since the deterministic
-    /// data stream began — the loader cursor a snapshot records and a
-    /// restore fast-forwards past (it survives suspend/resume cycles).
-    batches_consumed: u64,
+/// Staged construction of a [`TrainSession`] — the single session entry
+/// point. Obtain one via [`TrainSession::builder`], chain the optional
+/// knobs, then [`SessionBuilder::build`]:
+///
+/// ```ignore
+/// let sess = TrainSession::builder(cfg)
+///     .tracker(aggregate.child())        // roll memory into a parent
+///     .weight_cache(cache.clone())       // share frozen base weights
+///     .resume_from(&snapshot_path)       // continue a suspended run
+///     .build()?;
+/// ```
+///
+/// Defaults: a fresh private [`MemoryTracker`], a private single-session
+/// [`WeightCache`] on that tracker (so frozen weights land under
+/// `weights:shared` exactly as in the fleet case, just unshared), and a
+/// fresh start at step 0.
+pub struct SessionBuilder {
+    cfg: TrainConfig,
+    tracker: Option<MemoryTracker>,
+    cache: Option<WeightCache>,
+    resume_from: Option<PathBuf>,
 }
 
-impl TrainSession {
-    /// Build a session: instantiate the backend, init model, spawn the
-    /// data pipeline.
-    pub fn new(cfg: TrainConfig) -> anyhow::Result<TrainSession> {
-        Self::with_tracker(cfg, MemoryTracker::new())
-    }
-
-    /// Build a session on a caller-supplied tracker — the fleet scheduler
-    /// passes a child of its aggregate tracker here, so every tensor the
-    /// session holds also rolls up into the fleet-wide live total.
+impl SessionBuilder {
+    /// Account the session's memory on a caller-supplied tracker — the
+    /// fleet scheduler passes a child of its aggregate tracker here, so
+    /// every tensor the session holds also rolls up into the fleet-wide
+    /// live total.
     ///
     /// Model init and the data loader draw from independent sub-seeds
     /// derived from `cfg.seed` (`util::rng::derive`), so sessions with
     /// different seeds differ in BOTH weights and data, while two
     /// sessions sharing a seed remain bit-identical (the gradcheck and
-    /// Fig-2 equivalence runs rely on that).
-    pub fn with_tracker(
+    /// Fig-2 equivalence runs rely on that). Pinning `cfg.model_seed`
+    /// decouples the two: jobs can share base weights while still
+    /// drawing distinct data streams.
+    pub fn tracker(mut self, tracker: MemoryTracker) -> Self {
+        self.tracker = Some(tracker);
+        self
+    }
+
+    /// Intern the frozen base weights in `cache` instead of a private
+    /// one: sessions whose `(config dims, model seed, quant)` agree
+    /// share ONE `Arc<FrozenModel>`, charged once on the cache's tracker
+    /// under `weights:shared`. Without this, the session builds (or
+    /// re-uses, if the spec is somehow already live) weights through a
+    /// private cache on its own tracker.
+    pub fn weight_cache(mut self, cache: WeightCache) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Resume from a snapshot file instead of starting fresh: the
+    /// snapshot's identity (config/method/quant/optimizer/lr/seed)
+    /// overrides the base config's, the base keeps supplying wiring
+    /// (backend/kernel/threads/logging), and every piece of mutable
+    /// state — adapters, optimizer moments, step counter, loader
+    /// cursor — is restored. The frozen base weights are re-attached
+    /// through the weight cache (regenerated only when no live session
+    /// already holds them) and verified against the snapshot
+    /// fingerprint; a mismatch (different seed derivation, changed init,
+    /// different quant packing) refuses to resume instead of training on
+    /// silently different weights. The continued run is
+    /// bitwise-identical to one that was never suspended.
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.resume_from = Some(path.into());
+        self
+    }
+
+    /// Build the session: resolve dims, intern the frozen base in the
+    /// weight cache, instantiate the backend, derive this session's
+    /// adapters, spawn the data pipeline — and, when resuming, restore
+    /// mutable state from the snapshot.
+    pub fn build(self) -> anyhow::Result<TrainSession> {
+        let tracker = self.tracker.unwrap_or_else(MemoryTracker::new);
+        let cache = self
+            .cache
+            .unwrap_or_else(|| WeightCache::new(tracker.clone()));
+        match self.resume_from {
+            None => Self::fresh(self.cfg, tracker, &cache),
+            Some(path) => Self::resume(&self.cfg, &path, tracker, &cache),
+        }
+    }
+
+    fn fresh(
         cfg: TrainConfig,
         tracker: MemoryTracker,
+        cache: &WeightCache,
     ) -> anyhow::Result<TrainSession> {
-        let rt = make_backend(&cfg, tracker.clone())?;
-        let dims = rt.dims().clone();
-        let ctx = EngineCtx::new(rt, derive(cfg.seed, stream::MODEL),
-                                 cfg.optimizer, cfg.lr, cfg.spill_limit,
-                                 cfg.quant)?;
+        // Resolve geometry and attach the (possibly shared) frozen base.
+        // Reference configs come from the compiled preset table and the
+        // backend borrows the cache's interned dims Arc; PJRT reads dims
+        // from the artifact manifest, so there the backend exists first
+        // and the cache interns under the manifest's geometry.
+        let (rt, frozen): (Arc<dyn Backend>, _) = match cfg.backend {
+            BackendKind::Reference => {
+                let spec = ModelSpec::new(
+                    presets::compiled(&cfg.config)?,
+                    cfg.model_seed(),
+                    cfg.quant,
+                );
+                let frozen = cache.get_or_build(&spec);
+                let rt =
+                    make_backend(&cfg, frozen.dims.clone(), tracker.clone())?;
+                (rt, frozen)
+            }
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => {
+                let rt: Arc<dyn Backend> =
+                    Arc::new(crate::runtime::Runtime::load(
+                        std::path::Path::new(&cfg.artifacts_dir),
+                        &cfg.config,
+                        tracker.clone(),
+                    )?);
+                let spec = ModelSpec::new(
+                    rt.dims().clone(),
+                    cfg.model_seed(),
+                    cfg.quant,
+                );
+                let frozen = cache.get_or_build(&spec);
+                (rt, frozen)
+            }
+            #[cfg(not(feature = "pjrt"))]
+            BackendKind::Pjrt => anyhow::bail!(
+                "this build has no PJRT support; rebuild with `--features \
+                 pjrt` (and run `make artifacts`) or use --backend reference"
+            ),
+        };
+        // Adapters are derivable from the frozen identity alone (an
+        // independent RNG fork), so N sessions sharing one FrozenModel
+        // still start from identical LoRA state — each copy private, on
+        // the session's own tracker.
+        let adapters =
+            ModelSpec::new(frozen.dims.clone(), frozen.seed, frozen.quant)
+                .build_adapters(&tracker);
+        let dims = frozen.dims.clone();
+        let ctx = EngineCtx::new(
+            rt, frozen, adapters, cfg.optimizer, cfg.lr, cfg.spill_limit,
+        )?;
         let engine = build_engine(cfg.method, ctx, cfg.mezo_eps)?;
         let loader = PrefetchLoader::spawn(
             dims.vocab, dims.batch, dims.seq,
@@ -110,26 +226,11 @@ impl TrainSession {
         })
     }
 
-    /// Resume a session from a snapshot file on a fresh tracker. See
-    /// [`Self::restore_with_tracker`].
-    pub fn restore(base: &TrainConfig, path: &Path) -> anyhow::Result<TrainSession> {
-        Self::restore_with_tracker(base, path, MemoryTracker::new())
-    }
-
-    /// Resume a suspended session: rebuild it from the snapshot's
-    /// identity (config/method/quant/optimizer/lr/seed) on `base`'s
-    /// wiring (backend/kernel/threads/logging), then restore every piece
-    /// of mutable state — adapters, optimizer moments, step counter,
-    /// loader cursor. The frozen base weights are regenerated from the
-    /// model stream seed and verified against the snapshot fingerprint;
-    /// a mismatch (different seed derivation, changed init, different
-    /// quant packing) refuses to resume instead of training on silently
-    /// different weights. The continued run is bitwise-identical to one
-    /// that was never suspended.
-    pub fn restore_with_tracker(
+    fn resume(
         base: &TrainConfig,
         path: &Path,
         tracker: MemoryTracker,
+        cache: &WeightCache,
     ) -> anyhow::Result<TrainSession> {
         let snap = Snapshot::load(path)?;
         let cfg = snap.train_config(base);
@@ -142,7 +243,7 @@ impl TrainSession {
             snap.rng,
             cfg.seed
         );
-        let mut sess = Self::with_tracker(cfg, tracker)?;
+        let mut sess = Self::fresh(cfg, tracker, cache)?;
         {
             let ctx = sess.engine.ctx_mut();
             anyhow::ensure!(
@@ -154,13 +255,13 @@ impl TrainSession {
                 ctx.weights_fingerprint()
             );
             anyhow::ensure!(
-                snap.lora.len() == ctx.model.lora.len(),
+                snap.lora.len() == ctx.adapters.lora.len(),
                 "snapshot has {} LoRA layers, model has {}",
                 snap.lora.len(),
-                ctx.model.lora.len()
+                ctx.adapters.lora.len()
             );
             for (l, layer) in snap.lora.iter().enumerate() {
-                let dst = &mut ctx.model.lora[l].tensors;
+                let dst = &mut ctx.adapters.lora[l].tensors;
                 anyhow::ensure!(
                     layer.len() == dst.len(),
                     "snapshot layer {l} has {} adapter tensors, model has {}",
@@ -196,6 +297,72 @@ impl TrainSession {
         sess.batches_consumed = snap.batches_consumed;
         Ok(sess)
     }
+}
+
+/// A live training session: one runnable config + one method.
+pub struct TrainSession {
+    pub cfg: TrainConfig,
+    pub engine: Box<dyn Engine>,
+    pub loader: PrefetchLoader,
+    pub metrics: MetricsLogger,
+    pub tracker: MemoryTracker,
+    /// Batches drawn through [`Self::step_once`] since the deterministic
+    /// data stream began — the loader cursor a snapshot records and a
+    /// restore fast-forwards past (it survives suspend/resume cycles).
+    batches_consumed: u64,
+}
+
+impl TrainSession {
+    /// Start building a session for `cfg`. See [`SessionBuilder`].
+    pub fn builder(cfg: TrainConfig) -> SessionBuilder {
+        SessionBuilder {
+            cfg,
+            tracker: None,
+            cache: None,
+            resume_from: None,
+        }
+    }
+
+    /// Build a session with all defaults.
+    #[deprecated(note = "use TrainSession::builder(cfg).build()")]
+    pub fn new(cfg: TrainConfig) -> anyhow::Result<TrainSession> {
+        Self::builder(cfg).build()
+    }
+
+    /// Build a session on a caller-supplied tracker.
+    #[deprecated(
+        note = "use TrainSession::builder(cfg).tracker(tracker).build()"
+    )]
+    pub fn with_tracker(
+        cfg: TrainConfig,
+        tracker: MemoryTracker,
+    ) -> anyhow::Result<TrainSession> {
+        Self::builder(cfg).tracker(tracker).build()
+    }
+
+    /// Resume a session from a snapshot file on a fresh tracker.
+    #[deprecated(
+        note = "use TrainSession::builder(base).resume_from(path).build()"
+    )]
+    pub fn restore(base: &TrainConfig, path: &Path) -> anyhow::Result<TrainSession> {
+        Self::builder(base.clone()).resume_from(path).build()
+    }
+
+    /// Resume a session from a snapshot on a caller-supplied tracker.
+    #[deprecated(
+        note = "use TrainSession::builder(base).tracker(tracker)\
+                .resume_from(path).build()"
+    )]
+    pub fn restore_with_tracker(
+        base: &TrainConfig,
+        path: &Path,
+        tracker: MemoryTracker,
+    ) -> anyhow::Result<TrainSession> {
+        Self::builder(base.clone())
+            .tracker(tracker)
+            .resume_from(path)
+            .build()
+    }
 
     /// Capture the session's complete mutable state (must be called at a
     /// step boundary — the only time `TrainSession` exposes anyway).
@@ -213,10 +380,8 @@ impl TrainSession {
             batches_consumed: self.batches_consumed,
             rng: RngStreams::derive_from(self.cfg.seed),
             weights_fingerprint: ctx.weights_fingerprint(),
-            lora: self
-                .engine
-                .ctx()
-                .model
+            lora: ctx
+                .adapters
                 .lora
                 .iter()
                 .map(|l| l.tensors.clone())
@@ -276,7 +441,8 @@ impl TrainSession {
 /// every method grid exercises the same queue/admission/report path the
 /// `mesp fleet` serving command uses. All jobs share `base.seed`
 /// verbatim: the comparisons REQUIRE identical weights and data streams
-/// across methods.
+/// across methods — and they now also share ONE cached copy of the
+/// frozen base weights through the scheduler's [`WeightCache`].
 pub fn sweep_methods(
     base: &TrainConfig,
     methods: &[Method],

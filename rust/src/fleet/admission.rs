@@ -28,35 +28,85 @@
 //! resume later. Resumed admissions carry no ticket — they re-enter
 //! whenever the budget next has room.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::{presets, Method};
 use crate::coordinator::PREFETCH_DEPTH;
 use crate::memory::{model as memmodel, Widths};
+use crate::util::rng::{derive, stream};
 use crate::util::stats::fmt_mb;
 
 use super::job::JobSpec;
 
-/// Predicted peak tracked bytes for one session running `spec`:
+/// Predicted peak tracked bytes for one session running `spec`,
+/// EXCLUDING the frozen base weights:
 /// the analytical per-method activation/gradient peak (tracked widths,
 ///   quant-aware: q4 adds the naive-oracle dequant-buffer scratch)
-/// + the resident weight uploads at the job's quant mode (the reference
-///   backend keeps the frozen model on-device; under q4 the projections
-///   stay int4-packed, which is the term that lets one budget overlap
-///   more quantized jobs)
 /// + the prefetch queue's batch buffers.
+///
+/// The frozen base is costed separately by [`job_weight_class`]: since
+/// PR 6 the weights are interned in a fleet-wide
+/// [`crate::model::WeightCache`], so the gate charges them ONCE per
+/// distinct `(config, model seed, quant)` class — the first admit of a
+/// class reserves them, the last release returns them — instead of once
+/// per job.
 pub fn job_cost_bytes(spec: &JobSpec) -> anyhow::Result<u64> {
     let dims = presets::compiled(&spec.config)?;
     let activations = memmodel::peak_q(
         spec.method, &dims, spec.optimizer, Widths::tracked(), spec.quant,
     )
     .total();
-    let weights = memmodel::resident_weight_bytes(&dims, spec.quant);
     let batch_bytes = 2 * (dims.batch * dims.seq * 4) as u64; // tokens+targets i32
     let queue = (PREFETCH_DEPTH as u64 + 2) * batch_bytes;
-    Ok(activations + weights + queue)
+    Ok(activations + queue)
+}
+
+/// The shared-weight cost of a job: which frozen base it attaches to
+/// (`key`) and what that base costs resident (`bytes`). Jobs whose keys
+/// agree share one `FrozenModel` through the fleet's weight cache, so
+/// the admission gate charges `bytes` only while at least one holder of
+/// the key is admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WeightClass {
+    /// Identity of the frozen base: hash of (config name, resolved
+    /// model seed, quant mode) — the same identity the weight cache
+    /// interns on.
+    pub key: u64,
+    /// Resident bytes of one copy of that base at the job's quant mode.
+    pub bytes: u64,
+}
+
+/// Compute the [`WeightClass`] of `spec`. The model seed resolves like
+/// [`crate::config::TrainConfig::model_seed`]: an explicit pin wins,
+/// otherwise it derives from the job's own seed (private weights).
+pub fn job_weight_class(spec: &JobSpec) -> anyhow::Result<WeightClass> {
+    let dims = presets::compiled(&spec.config)?;
+    let model_seed = spec
+        .model_seed
+        .unwrap_or_else(|| derive(spec.seed, stream::MODEL));
+    let mut key: u64 = 0xcbf29ce484222325;
+    let mut eat = |bytes: &[u8]| {
+        for b in bytes {
+            key ^= *b as u64;
+            key = key.wrapping_mul(0x100000001b3);
+        }
+    };
+    eat(spec.config.as_bytes());
+    eat(&model_seed.to_le_bytes());
+    eat(spec.quant.name().as_bytes());
+    Ok(WeightClass {
+        key,
+        bytes: memmodel::resident_weight_bytes(&dims, spec.quant),
+    })
+}
+
+/// Refcount of one weight class the gate currently covers.
+#[derive(Debug)]
+struct WeightEntry {
+    holders: usize,
+    bytes: u64,
 }
 
 /// One admitted job the gate is currently covering.
@@ -106,9 +156,28 @@ struct AdmState {
     peak_committed: u64,
     peak_by_method: BTreeMap<&'static str, usize>,
     admitted_total: usize,
+    /// Weight classes currently held by at least one admitted job,
+    /// keyed by [`WeightClass::key`]. Their bytes are part of
+    /// `committed` exactly while an entry exists.
+    weights: HashMap<u64, WeightEntry>,
+    /// Admissions that attached to an already-charged weight class
+    /// (paid 0 weight bytes).
+    weight_shared_admissions: usize,
+    /// High-water of weight bytes simultaneously committed.
+    peak_weight_bytes: u64,
 }
 
 impl AdmState {
+    /// Weight bytes a job of class `w` would newly commit: zero when
+    /// some admitted job already holds the class (shared attach), the
+    /// full resident bytes when it would be the first holder.
+    fn weight_need(&self, w: &Option<WeightClass>) -> u64 {
+        match w {
+            Some(c) if !self.weights.contains_key(&c.key) => c.bytes,
+            _ => 0,
+        }
+    }
+
     /// Sum of costs of running jobs already flagged for preemption —
     /// budget that is committed but on its way back.
     fn flagged(&self) -> u64 {
@@ -173,6 +242,12 @@ pub struct AdmissionStats {
     pub admitted_total: usize,
     /// Preemption requests issued (arrival pressure + budget shrinks).
     pub preempts_requested: usize,
+    /// Admissions that attached to an already-charged weight class —
+    /// jobs whose frozen base was already resident, charged 0 weight
+    /// bytes by the gate.
+    pub weight_shared_admissions: usize,
+    /// High-water mark of shared-weight bytes committed at once.
+    pub peak_weight_bytes: u64,
 }
 
 /// The budget gate. Shared by all workers of one fleet run.
@@ -231,20 +306,31 @@ impl Admission {
     }
 
     /// Reserve `cost` bytes for a job of `method`, blocking while the
-    /// budget is full. Errors if the job could never fit the CURRENT
+    /// budget is full. Errors if the job could never fit ANY reachable
     /// budget. `ticket` carries the job id for initial admissions —
     /// granted strictly in id order; resumed jobs pass `None` and
     /// re-enter whenever there is room. A blocked arrival with
     /// preemption enabled flags running jobs of strictly lower
     /// `priority` to make room.
-    pub fn admit_job(
+    ///
+    /// `weights` is the job's shared-weight class: its bytes are charged
+    /// only when no admitted job already holds the class (the weight
+    /// cache keeps one resident copy per class), and returned when the
+    /// LAST holder releases. `None` means the job's weights are inside
+    /// `cost` (legacy accounting) or it has none.
+    pub fn admit_job_shared(
         &self,
         method: Method,
         cost: u64,
         priority: u8,
         ticket: Option<usize>,
+        weights: Option<WeightClass>,
     ) -> anyhow::Result<Permit<'_>> {
         let name = method.name();
+        // A job alone on an empty gate pays cost + its full weight
+        // class; only that exceeding the ceiling is a permanent refusal
+        // (sharing can only lower the real charge).
+        let solo = cost + weights.map_or(0, |w| w.bytes);
         let mut st = self.state.lock().unwrap();
         if let Some(id) = ticket {
             while st.next_ticket < id {
@@ -261,7 +347,7 @@ impl Admission {
             // Refuse only against the ceiling: under a budget schedule
             // the current budget may be a transient dip the job should
             // wait (or stay parked) through, not die on.
-            if cost > st.ceiling {
+            if solo > st.ceiling {
                 break false;
             }
             let top = st
@@ -270,12 +356,16 @@ impl Admission {
                 .max_by_key(|w| (w.priority, std::cmp::Reverse(w.wid)))
                 .map(|w| w.wid);
             if top == Some(wid) {
-                if st.committed <= st.budget && cost <= st.budget - st.committed
+                // The weight term depends on who is admitted RIGHT NOW:
+                // re-evaluate per wakeup (a holder may have arrived or
+                // left while we slept).
+                let need = cost + st.weight_need(&weights);
+                if st.committed <= st.budget && need <= st.budget - st.committed
                 {
                     break true;
                 }
                 if st.preempt_enabled {
-                    st.flag_victims(cost, Some(priority));
+                    st.flag_victims(need, Some(priority));
                 }
             }
             st = self.cv.wait(st).unwrap();
@@ -293,15 +383,28 @@ impl Admission {
             anyhow::bail!(
                 "job cost {} MB exceeds the fleet budget ceiling {} MB — it \
                  can never be admitted",
-                fmt_mb(cost),
+                fmt_mb(solo),
                 fmt_mb(ceiling)
             );
         }
-        st.committed += cost;
+        let wneed = st.weight_need(&weights);
+        if let Some(w) = &weights {
+            let e = st
+                .weights
+                .entry(w.key)
+                .or_insert(WeightEntry { holders: 0, bytes: w.bytes });
+            e.holders += 1;
+            if wneed == 0 {
+                st.weight_shared_admissions += 1;
+            }
+        }
+        st.committed += cost + wneed;
         st.active += 1;
         st.admitted_total += 1;
         st.peak_committed = st.peak_committed.max(st.committed);
         st.peak_concurrent = st.peak_concurrent.max(st.active);
+        let wtotal: u64 = st.weights.values().map(|e| e.bytes).sum();
+        st.peak_weight_bytes = st.peak_weight_bytes.max(wtotal);
         let per = st.active_by_method.entry(name).or_insert(0);
         *per += 1;
         let per = *per;
@@ -318,7 +421,19 @@ impl Admission {
         });
         drop(st);
         self.cv.notify_all();
-        Ok(Permit { adm: self, reg, method: name, cost, flag })
+        Ok(Permit { adm: self, reg, method: name, cost, weights, flag })
+    }
+
+    /// [`Self::admit_job_shared`] without a weight class — jobs whose
+    /// weights are folded into `cost` (or that have none).
+    pub fn admit_job(
+        &self,
+        method: Method,
+        cost: u64,
+        priority: u8,
+        ticket: Option<usize>,
+    ) -> anyhow::Result<Permit<'_>> {
+        self.admit_job_shared(method, cost, priority, ticket, None)
     }
 
     /// [`Self::admit_job`] without priority or arrival ticket — the
@@ -339,13 +454,32 @@ impl Admission {
                 .collect(),
             admitted_total: st.admitted_total,
             preempts_requested: st.preempts_requested,
+            weight_shared_admissions: st.weight_shared_admissions,
+            peak_weight_bytes: st.peak_weight_bytes,
         }
     }
 
-    fn release(&self, reg: u64, method: &'static str, cost: u64) {
+    fn release(
+        &self,
+        reg: u64,
+        method: &'static str,
+        cost: u64,
+        weights: Option<WeightClass>,
+    ) {
         {
             let mut st = self.state.lock().unwrap();
             st.committed = st.committed.saturating_sub(cost);
+            if let Some(w) = weights {
+                if let Some(e) = st.weights.get_mut(&w.key) {
+                    e.holders -= 1;
+                    if e.holders == 0 {
+                        // Last holder out: the cache entry dies with it,
+                        // so the resident bytes come back too.
+                        st.committed = st.committed.saturating_sub(e.bytes);
+                        st.weights.remove(&w.key);
+                    }
+                }
+            }
             st.active = st.active.saturating_sub(1);
             st.running.retain(|e| e.reg != reg);
             if let Some(n) = st.active_by_method.get_mut(method) {
@@ -365,6 +499,7 @@ pub struct Permit<'a> {
     reg: u64,
     method: &'static str,
     cost: u64,
+    weights: Option<WeightClass>,
     flag: Arc<AtomicBool>,
 }
 
@@ -383,7 +518,8 @@ impl Permit<'_> {
 
 impl Drop for Permit<'_> {
     fn drop(&mut self) {
-        self.adm.release(self.reg, self.method, self.cost);
+        self.adm
+            .release(self.reg, self.method, self.cost, self.weights);
     }
 }
 
@@ -408,17 +544,127 @@ mod tests {
     }
 
     #[test]
-    fn q4_jobs_cost_less_than_f32_twins() {
-        // The packed resident-weight term shrinks the charge, even after
-        // the q4 oracle-dequant scratch term is added.
+    fn q4_jobs_cost_less_than_f32_twins_all_in() {
+        // The packed resident-weight term shrinks the FULL per-class
+        // footprint (cost + weight class), even after the q4
+        // oracle-dequant scratch term inflates the activation cost.
         for method in Method::ALL {
             let f32_spec = spec(method);
             let mut q4_spec = spec(method);
             q4_spec.quant = crate::config::QuantMode::Q4;
-            let f = job_cost_bytes(&f32_spec).unwrap();
-            let q = job_cost_bytes(&q4_spec).unwrap();
-            assert!(q < f, "{}: q4 cost {q} !< f32 cost {f}", method.name());
+            let f = job_cost_bytes(&f32_spec).unwrap()
+                + job_weight_class(&f32_spec).unwrap().bytes;
+            let q = job_cost_bytes(&q4_spec).unwrap()
+                + job_weight_class(&q4_spec).unwrap().bytes;
+            assert!(q < f, "{}: q4 total {q} !< f32 total {f}", method.name());
         }
+    }
+
+    #[test]
+    fn weight_class_keys_track_base_identity() {
+        let a = job_weight_class(&spec(Method::Mesp)).unwrap();
+        // Method does not change the frozen base.
+        let b = job_weight_class(&spec(Method::Mebp)).unwrap();
+        assert_eq!(a, b, "same base, same class");
+        // Pinning model_seed to the same stream two different data
+        // seeds would derive privately → still one class.
+        let mut p1 = spec(Method::Mesp);
+        let mut p2 = spec(Method::Mesp);
+        p1.seed = 1;
+        p2.seed = 2;
+        p1.model_seed = Some(7);
+        p2.model_seed = Some(7);
+        assert_eq!(
+            job_weight_class(&p1).unwrap().key,
+            job_weight_class(&p2).unwrap().key,
+            "pinned model seed shares the class across data seeds"
+        );
+        p2.model_seed = None; // derives from seed 2 → private weights
+        assert_ne!(
+            job_weight_class(&p1).unwrap().key,
+            job_weight_class(&p2).unwrap().key
+        );
+        let mut q4 = spec(Method::Mesp);
+        q4.quant = crate::config::QuantMode::Q4;
+        let q = job_weight_class(&q4).unwrap();
+        assert_ne!(a.key, q.key, "quant packing is part of the identity");
+        assert!(q.bytes < a.bytes, "q4 class is cheaper resident");
+    }
+
+    #[test]
+    fn shared_weight_class_charged_once_overlaps_many() {
+        // Budget sized for exactly TWO private-weight jobs (cost 100 +
+        // weights 1000 each). Jobs sharing one weight class pay the
+        // 1000 once, so 12 of them fit the same budget.
+        let w = WeightClass { key: 42, bytes: 1000 };
+        let adm = Admission::new(2 * (100 + 1000));
+        let mut permits = Vec::new();
+        for _ in 0..12 {
+            permits.push(
+                adm.admit_job_shared(Method::Mesp, 100, 0, None, Some(w))
+                    .unwrap(),
+            );
+        }
+        let st = adm.stats();
+        assert_eq!(st.peak_concurrent, 12);
+        assert_eq!(st.peak_committed, 1000 + 12 * 100);
+        assert_eq!(st.weight_shared_admissions, 11, "first pays, 11 attach");
+        assert_eq!(st.peak_weight_bytes, 1000, "one resident copy");
+        // A 13th shared job would still fit (2200 - 2200 = 0 < 100? no:
+        // committed 2200 == budget) — the gate is full, so a private-
+        // class job of the same shape must NOT be admittable now.
+        drop(permits);
+        // Two distinct classes: each pays its own weights — only two fit.
+        let a = adm
+            .admit_job_shared(Method::Mesp, 100, 0, None,
+                              Some(WeightClass { key: 1, bytes: 1000 }))
+            .unwrap();
+        let b = adm
+            .admit_job_shared(Method::Mesp, 100, 0, None,
+                              Some(WeightClass { key: 2, bytes: 1000 }))
+            .unwrap();
+        assert_eq!(adm.stats().peak_weight_bytes, 2000);
+        drop(a);
+        drop(b);
+    }
+
+    #[test]
+    fn last_holder_release_returns_weight_bytes() {
+        let w = WeightClass { key: 7, bytes: 500 };
+        let adm = Admission::new(1000);
+        let p1 = adm
+            .admit_job_shared(Method::Mesp, 100, 0, None, Some(w))
+            .unwrap();
+        let p2 = adm
+            .admit_job_shared(Method::Mesp, 100, 0, None, Some(w))
+            .unwrap();
+        // 500 + 100 + 100 committed; a 350-cost job fits only if the
+        // weight bytes are NOT double-charged.
+        let p3 = adm.admit(Method::Mebp, 300).unwrap();
+        drop(p3);
+        drop(p1); // first holder leaves: bytes stay (p2 still holds)
+        let p4 = adm.admit(Method::Mebp, 400).unwrap();
+        drop(p4);
+        drop(p2); // LAST holder leaves: the 500 come back
+        let p5 = adm.admit(Method::Mebp, 1000).unwrap();
+        drop(p5);
+    }
+
+    #[test]
+    fn oversized_weight_class_rejected_against_solo_footprint() {
+        let adm = Admission::new(100);
+        let w = WeightClass { key: 1, bytes: 60 };
+        // 50 + 60 > 100: can never fit even though cost alone would.
+        let err = adm
+            .admit_job_shared(Method::Mesp, 50, 0, None, Some(w))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("exceeds the fleet budget ceiling"), "{err}");
+        // 40 + 60 fits exactly.
+        let p = adm
+            .admit_job_shared(Method::Mesp, 40, 0, None, Some(w))
+            .unwrap();
+        drop(p);
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::util::Json;
 /// `job_keys_list_matches_parser` test).
 pub const JOB_KEYS: &[&str] = &[
     "config", "method", "steps", "seed", "lr", "optimizer", "quant", "priority",
+    "model_seed",
 ];
 
 /// Highest admissible job priority (priorities are 0..=9; 0 = default).
@@ -49,6 +50,13 @@ pub struct JobSpec {
     /// charges the packed footprint under `q4`, so the same budget
     /// overlaps more quantized jobs.
     pub quant: QuantMode,
+    /// Pinned seed of the frozen base weights. `None` derives the model
+    /// stream from the job's own `seed` (private weights); `Some` pins
+    /// it, so jobs sharing the pin (and config + quant) attach to ONE
+    /// cached `FrozenModel` and admission charges its bytes once across
+    /// all of them. [`grid`] pins every generated job to the base
+    /// config's model stream for exactly this reason.
+    pub model_seed: Option<u64>,
     /// Scheduling priority 0..=9 (higher wins). When the budget cannot
     /// fit an arriving higher-priority job — or shrinks mid-run under a
     /// `--budget-schedule` — the scheduler preempts the lowest-priority
@@ -68,6 +76,7 @@ impl JobSpec {
             lr: base.lr,
             optimizer: base.optimizer,
             quant: base.quant,
+            model_seed: base.model_seed,
             priority: 0,
         }
     }
@@ -121,6 +130,9 @@ impl JobSpec {
                             .ok_or_else(|| anyhow::anyhow!("'quant' must be a string"))?,
                     )?;
                 }
+                "model_seed" => {
+                    spec.model_seed = Some(as_exact_u64(v, "model_seed")?);
+                }
                 "priority" => {
                     let p = as_exact_u64(v, "priority")?;
                     anyhow::ensure!(
@@ -149,6 +161,7 @@ impl JobSpec {
             lr: self.lr,
             optimizer: self.optimizer,
             quant: self.quant,
+            model_seed: self.model_seed,
             ..base.clone()
         }
     }
@@ -188,17 +201,22 @@ pub fn load_jobs(path: &Path, base: &TrainConfig) -> anyhow::Result<Vec<Job>> {
 
 /// Generate a grid of `count` jobs on the base config, cycling through
 /// `methods`. Every job gets its own seed derived from the base seed and
-/// the job index, so the fleet trains on `count` distinct data streams.
+/// the job index, so the fleet trains on `count` distinct data streams —
+/// but all of them pin `model_seed` to the base config's model stream,
+/// so the whole grid fine-tunes ONE shared frozen base (one cached copy,
+/// charged once by admission) on distinct data.
 pub fn grid(base: &TrainConfig, methods: &[Method], count: usize) -> Vec<Job> {
     if methods.is_empty() {
         return Vec::new();
     }
     let job_seed = derive(base.seed, stream::JOB);
+    let model_seed = base.model_seed();
     (0..count)
         .map(|i| {
             let mut spec = JobSpec::from_base(base);
             spec.method = methods[i % methods.len()];
             spec.seed = derive(job_seed, i as u64);
+            spec.model_seed = Some(model_seed);
             Job { id: i, spec }
         })
         .collect()
@@ -227,6 +245,13 @@ mod tests {
             }
         }
         assert_eq!(jobs[3].spec.steps, 7, "grid inherits base steps");
+        for j in &jobs {
+            assert_eq!(
+                j.spec.model_seed,
+                Some(base().model_seed()),
+                "grid jobs pin the base model stream (shared frozen weights)"
+            );
+        }
     }
 
     #[test]
@@ -282,6 +307,7 @@ mod tests {
             ("optimizer", "\"adam\""),
             ("quant", "\"q4\""),
             ("priority", "9"),
+            ("model_seed", "7"),
         ] {
             assert!(JOB_KEYS.contains(&key), "test table missing {key}");
             let j = Json::parse(&format!("{{\"{key}\": {val}}}")).unwrap();
@@ -290,7 +316,21 @@ mod tests {
                 "advertised key '{key}' rejected"
             );
         }
-        assert_eq!(JOB_KEYS.len(), 8, "update the table when adding keys");
+        assert_eq!(JOB_KEYS.len(), 9, "update the table when adding keys");
+    }
+
+    #[test]
+    fn model_seed_key_parses_and_defaults_to_base() {
+        let j = Json::parse(r#"{"model_seed": 7}"#).unwrap();
+        assert_eq!(JobSpec::from_json(&j, &base()).unwrap().model_seed, Some(7));
+        let j = Json::parse(r#"{"seed": 5}"#).unwrap();
+        assert_eq!(
+            JobSpec::from_json(&j, &base()).unwrap().model_seed,
+            None,
+            "inherits the base's unpinned model seed"
+        );
+        let j = Json::parse(r#"{"model_seed": -1}"#).unwrap();
+        assert!(JobSpec::from_json(&j, &base()).is_err());
     }
 
     #[test]

@@ -22,12 +22,21 @@
 //! lowest-priority running job to disk and resumes it — bitwise — when
 //! the budget has room again. The fleet is a long-lived service, not a
 //! batch runner: a squeeze parks work instead of killing it.
+//!
+//! Same-base jobs additionally share ONE resident copy of their frozen
+//! base weights through a fleet-wide [`crate::model::WeightCache`]:
+//! admission charges each weight class ([`admission::WeightClass`]) once
+//! across all its holders, so a budget sized for two private-weight jobs
+//! overlaps many shared-weight ones.
 
 pub mod admission;
 pub mod job;
 pub mod scheduler;
 
-pub use admission::{job_cost_bytes, Admission, AdmissionStats, Permit};
+pub use admission::{
+    job_cost_bytes, job_weight_class, Admission, AdmissionStats, Permit,
+    WeightClass,
+};
 pub use job::{grid, load_jobs, Job, JobSpec, MAX_PRIORITY};
 pub use scheduler::{
     parse_budget_schedule, BudgetChange, FleetOptions, FleetReport, JobOutcome,

@@ -31,9 +31,10 @@ use crate::config::TrainConfig;
 use crate::coordinator::TrainSession;
 use crate::memory::{Guard, MemoryTracker};
 use crate::metrics::{RunSummary, TableBuilder};
+use crate::model::WeightCache;
 use crate::util::stats::fmt_mb;
 
-use super::admission::{job_cost_bytes, Admission};
+use super::admission::{job_cost_bytes, job_weight_class, Admission};
 use super::job::Job;
 
 /// One point of a `--budget-schedule`: once the fleet has completed
@@ -182,6 +183,13 @@ pub struct FleetReport {
     pub resumes: usize,
     /// High-water mark of parked snapshot bytes (`snapshot` tag).
     pub snapshot_peak_bytes: u64,
+    /// High-water mark of shared frozen-weight bytes resident at once
+    /// (`weights:shared` tag on the fleet weight cache).
+    pub shared_weight_peak_bytes: u64,
+    /// Admissions that attached to an already-resident weight class —
+    /// jobs that paid ZERO weight bytes because another admitted job
+    /// already held their frozen base.
+    pub weight_shared_admissions: usize,
     pub per_method: BTreeMap<String, MethodStats>,
 }
 
@@ -226,11 +234,16 @@ impl FleetReport {
         ));
         out.push_str(&format!(
             "preempts {} | resumes {} | parked snapshot peak {} MB | \
-             final budget {} MB\n\n",
+             final budget {} MB\n",
             self.preempts,
             self.resumes,
             fmt_mb(self.snapshot_peak_bytes),
             fmt_mb(self.final_budget_bytes)
+        ));
+        out.push_str(&format!(
+            "shared weights peak {} MB | {} shared-weight attaches\n\n",
+            fmt_mb(self.shared_weight_peak_bytes),
+            self.weight_shared_admissions
         ));
 
         let mut t = TableBuilder::new(&[
@@ -425,6 +438,11 @@ impl Scheduler {
             next: Mutex::new(0),
         };
         let aggregate = MemoryTracker::new();
+        // One weight cache per fleet run: every session of this run
+        // interns its frozen base here, so same-base jobs share one
+        // copy — charged once, on a child of the aggregate, under
+        // `weights:shared`.
+        let weight_cache = WeightCache::new(aggregate.child());
         let queue = Mutex::new(QueueState {
             entries: jobs.into_iter().map(QueueEntry::fresh).collect(),
             done: 0,
@@ -440,7 +458,7 @@ impl Scheduler {
                 let (queue, qcv, results) = (&queue, &qcv, &results);
                 let (admission, aggregate, progress) =
                     (&admission, &aggregate, &progress);
-                let snap_dir = &snap_dir;
+                let (snap_dir, weight_cache) = (&snap_dir, &weight_cache);
                 s.spawn(move || loop {
                     // Pop the next queue entry; a parked entry or a fresh
                     // job alike. Wait while the queue is empty but jobs
@@ -459,8 +477,8 @@ impl Scheduler {
                     };
                     let Some(entry) = entry else { break };
                     match run_job(
-                        w, workers, entry, admission, aggregate, base,
-                        snap_dir, preempt_enabled, ticketed, progress,
+                        w, workers, entry, admission, aggregate, weight_cache,
+                        base, snap_dir, preempt_enabled, ticketed, progress,
                     ) {
                         RunOutcome::Done(outcome) => {
                             results.lock().unwrap().push(outcome);
@@ -505,6 +523,10 @@ impl Scheduler {
             preempts: outcomes.iter().map(|o| o.preempts as usize).sum(),
             resumes: outcomes.iter().map(|o| o.resumes as usize).sum(),
             snapshot_peak_bytes: aggregate.tag_peak("snapshot"),
+            shared_weight_peak_bytes: weight_cache
+                .tracker()
+                .tag_peak("weights:shared"),
+            weight_shared_admissions: adm_stats.weight_shared_admissions,
             outcomes,
             wall_secs,
             aggregate_peak: aggregate.peak(),
@@ -527,6 +549,7 @@ fn run_job(
     mut entry: QueueEntry,
     admission: &Admission,
     aggregate: &MemoryTracker,
+    weight_cache: &WeightCache,
     base: &TrainConfig,
     snap_dir: &Path,
     preempt_enabled: bool,
@@ -551,17 +574,27 @@ fn run_job(
         Ok(c) => c,
         Err(e) => return fail(&entry, 0, format!("costing failed: {e:#}")),
     };
+    // The frozen base is charged per CLASS, not per job: the first
+    // admitted holder of (config, model seed, quant) reserves the
+    // resident bytes, later same-class jobs attach for free, the last
+    // release returns them — mirroring the weight cache's one shared
+    // `FrozenModel` per class.
+    let wclass = match job_weight_class(&job.spec) {
+        Ok(w) => w,
+        Err(e) => return fail(&entry, 0, format!("costing failed: {e:#}")),
+    };
 
     // Initial admissions carry their job id as an arrival ticket (granted
     // strictly in id order — determinism for the preemption tests);
     // resumed jobs re-enter whenever the budget next has room.
     let ticket = (ticketed && entry.parked.is_none()).then_some(job.id);
     let queued = Instant::now();
-    let permit = match admission.admit_job(
+    let permit = match admission.admit_job_shared(
         job.spec.method,
         cost_bytes,
         job.spec.priority,
         ticket,
+        Some(wclass),
     ) {
         Ok(p) => p,
         Err(e) => {
@@ -581,13 +614,13 @@ fn run_job(
     }
     let target = cfg.steps;
 
-    let built = match &entry.parked {
-        Some(p) => {
-            TrainSession::restore_with_tracker(&cfg, &p.path, aggregate.child())
-        }
-        None => TrainSession::with_tracker(cfg, aggregate.child()),
-    };
-    let mut sess = match built {
+    let mut builder = TrainSession::builder(cfg)
+        .tracker(aggregate.child())
+        .weight_cache(weight_cache.clone());
+    if let Some(p) = &entry.parked {
+        builder = builder.resume_from(&p.path);
+    }
+    let mut sess = match builder.build() {
         Ok(s) => s,
         Err(e) => {
             entry.run_secs += started.elapsed().as_secs_f64();

@@ -85,7 +85,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             // seed) wins over the flags; backend/kernel/threads wiring
             // stays with the caller — resume parity is bitwise on every
             // kernel variant and thread count.
-            let sess = TrainSession::restore(&cfg, Path::new(&path))?;
+            let sess = TrainSession::builder(cfg)
+                .resume_from(Path::new(&path))
+                .build()?;
             println!(
                 "resumed {} from step {} (config={} method={} quant={} \
                  seed={})",
@@ -100,7 +102,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             );
             sess
         }
-        None => TrainSession::new(cfg)?,
+        None => TrainSession::builder(cfg).build()?,
     };
     let method = sess.cfg.method;
     let quant = sess.cfg.quant;
@@ -137,8 +139,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         summary.final_loss
     );
     // The deployment number the q4 path exists for: how many bytes of
-    // base weights stay resident for the whole session.
-    let resident = sess.tracker.tag_bytes("weights:device");
+    // base weights stay resident for the whole session. The host copy
+    // lives in the process-wide cache ("weights:shared", charged once no
+    // matter how many sessions attach); upload backends additionally
+    // keep a per-session device copy ("weights:device").
+    let resident = sess.tracker.tag_bytes("weights:shared")
+        + sess.tracker.tag_bytes("weights:device");
     println!(
         "resident base weights ({}): {} MB",
         quant.name(),
@@ -196,10 +202,12 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         }
     };
     if args.bool("print-cost") {
-        // Script-friendly admission costs (CI sizes preemption budgets
-        // with this: the cost depends on the machine's core count via
-        // the kernel packing-panel term).
+        // Script-friendly admission costs (CI sizes preemption and
+        // shared-weight budgets with this: the per-job cost depends on
+        // the machine's core count via the kernel packing-panel term,
+        // and the weight class is charged once per distinct base).
         let mut seen = std::collections::BTreeSet::new();
+        let mut classes = std::collections::BTreeSet::new();
         for job in &jobs {
             if seen.insert(job.spec.method.name()) {
                 let c = fleet::job_cost_bytes(&job.spec)?;
@@ -207,6 +215,15 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
                     "cost {} {c} bytes ({} MB)",
                     job.spec.method.name(),
                     fmt_mb(c)
+                );
+            }
+            let w = fleet::job_weight_class(&job.spec)?;
+            if classes.insert(w.key) {
+                println!(
+                    "weights {:016x} {} bytes ({} MB, charged once per base)",
+                    w.key,
+                    w.bytes,
+                    fmt_mb(w.bytes)
                 );
             }
         }
@@ -272,7 +289,7 @@ fn cmd_gradcheck(args: &Args) -> anyhow::Result<()> {
         for method in [Method::Mesp, Method::Mebp, Method::StoreH] {
             let mut cfg = base.clone();
             cfg.method = method;
-            let mut sess = TrainSession::new(cfg)?;
+            let mut sess = TrainSession::builder(cfg).build()?;
             let (batch, _g) = sess.loader.next();
             grads.push((method, sess.engine.gradients(&batch)?));
         }

@@ -274,8 +274,10 @@ const ALLOC_BUCKET: u64 = 128 << 10;
 /// resident precision. Under [`QuantMode::Q4`] the seven projection
 /// matrices stay int4-packed (`quant::quantized_bytes`: nibbles + group
 /// scales ≈ 0.56 B/param) while norm gains and the tied embedding stay
-/// f32 — this is the per-method resident term `fleet::admission` charges,
-/// and what lets one budget admit substantially more q4 jobs.
+/// f32 — this is the resident term `fleet::admission` charges ONCE per
+/// distinct weight class (`(config, model seed, quant)`): jobs sharing a
+/// base attach to one cached `FrozenModel`, so only the first holder
+/// pays this, and q4 packing still shrinks what that one copy costs.
 pub fn resident_weight_bytes(d: &ModelDims, quant_mode: QuantMode) -> u64 {
     let emb = (d.vocab * d.d_model + d.d_model) as u64 * 4;
     let per_block: u64 = match quant_mode {

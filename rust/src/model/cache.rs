@@ -1,0 +1,205 @@
+//! Process-wide interning of frozen base weights.
+//!
+//! The paper's economics: adapter state is tiny next to the frozen base
+//! model, so fleet density should scale with adapter size, not model
+//! size. A [`WeightCache`] makes that real — it interns
+//! [`FrozenModel`]s behind `Weak` references, keyed by the full identity
+//! of the weights: every [`crate::config::ModelDims`] field, the
+//! resolved model seed, and the [`QuantMode`]. Two sessions whose specs
+//! agree on all three share ONE `Arc<FrozenModel>`; the resident bytes
+//! are charged exactly once, under the `weights:shared` tag of the
+//! cache's tracker, when the first holder builds the model, and released
+//! when the last holder drops its `Arc` (the cache itself holds only
+//! `Weak`s and never pins weights alive).
+//!
+//! `fleet::admission` mirrors this accounting at admission time: the
+//! first job admitted under a weight key is charged the resident bytes,
+//! later same-key jobs are charged zero for weights, and the last
+//! release returns the bytes to the budget — see
+//! [`crate::fleet::job_weight_class`].
+//!
+//! Snapshot restore goes through the same path: a resumed session
+//! re-attaches to the cached `FrozenModel` for its spec (or regenerates
+//! it on a cold cache) and verifies the snapshot's stored
+//! `weights_fingerprint` against [`FrozenModel::fingerprint`] before
+//! touching any adapter state.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+
+use crate::config::QuantMode;
+use crate::memory::MemoryTracker;
+
+use super::{FrozenModel, ModelSpec};
+
+/// The interning key: the complete weight identity. All dims fields
+/// participate (the cache hands out its interned `Arc<ModelDims>`, so
+/// two specs must not collide unless every field agrees), plus the
+/// resolved model seed and the resident precision.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CacheKey {
+    name: String,
+    vocab: usize,
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+    d_ff: usize,
+    seq: usize,
+    batch: usize,
+    rank: usize,
+    alpha_bits: u32,
+    seed: u64,
+    quant: QuantMode,
+}
+
+impl CacheKey {
+    fn of(spec: &ModelSpec) -> CacheKey {
+        let d = &*spec.dims;
+        CacheKey {
+            name: d.name.clone(),
+            vocab: d.vocab,
+            d_model: d.d_model,
+            n_layers: d.n_layers,
+            n_heads: d.n_heads,
+            n_kv_heads: d.n_kv_heads,
+            head_dim: d.head_dim,
+            d_ff: d.d_ff,
+            seq: d.seq,
+            batch: d.batch,
+            rank: d.rank,
+            alpha_bits: d.alpha.to_bits(),
+            seed: spec.seed,
+            quant: spec.quant,
+        }
+    }
+}
+
+/// Clonable handle to a frozen-weight intern table. See the module docs.
+#[derive(Clone)]
+pub struct WeightCache {
+    map: Arc<Mutex<HashMap<CacheKey, Weak<FrozenModel>>>>,
+    tracker: MemoryTracker,
+}
+
+impl WeightCache {
+    /// A fresh cache whose builds charge `tracker` (under
+    /// `weights:shared`). The fleet scheduler passes a child of its
+    /// aggregate tracker so shared weights count against the budget
+    /// without being attributed to any single session.
+    pub fn new(tracker: MemoryTracker) -> WeightCache {
+        WeightCache { map: Arc::default(), tracker }
+    }
+
+    /// The process-wide cache (own tracker). Standalone sessions default
+    /// to a private per-session cache so weights stay attributed to the
+    /// session's tracker; use this when several independently-built
+    /// sessions in one process should share bases.
+    pub fn global() -> &'static WeightCache {
+        static GLOBAL: OnceLock<WeightCache> = OnceLock::new();
+        GLOBAL.get_or_init(|| WeightCache::new(MemoryTracker::new()))
+    }
+
+    /// Return the interned `FrozenModel` for `spec`, building (and
+    /// charging) it on first use. Builds happen under the table lock:
+    /// concurrent same-key callers block until the first finishes and
+    /// then share its result, so the bytes are never charged twice even
+    /// transiently.
+    pub fn get_or_build(&self, spec: &ModelSpec) -> Arc<FrozenModel> {
+        let key = CacheKey::of(spec);
+        let mut map = self.map.lock().unwrap();
+        if let Some(m) = map.get(&key).and_then(Weak::upgrade) {
+            return m;
+        }
+        let built = spec.build_frozen(&self.tracker);
+        map.insert(key, Arc::downgrade(&built));
+        built
+    }
+
+    /// Number of entries whose `FrozenModel` is still alive. Prunes dead
+    /// `Weak`s as a side effect.
+    pub fn live_entries(&self) -> usize {
+        let mut map = self.map.lock().unwrap();
+        map.retain(|_, w| w.strong_count() > 0);
+        map.len()
+    }
+
+    /// The tracker shared-weight builds are charged against.
+    pub fn tracker(&self) -> &MemoryTracker {
+        &self.tracker
+    }
+}
+
+impl std::fmt::Debug for WeightCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WeightCache")
+            .field("live_entries", &self.live_entries())
+            .finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDims;
+
+    fn toy_dims() -> ModelDims {
+        ModelDims {
+            name: "toy".into(), vocab: 256, d_model: 64, n_layers: 2,
+            n_heads: 4, n_kv_heads: 2, head_dim: 16, d_ff: 128, seq: 32,
+            batch: 1, rank: 4, alpha: 8.0,
+        }
+    }
+
+    #[test]
+    fn same_spec_shares_one_model_charged_once() {
+        let t = MemoryTracker::new();
+        let cache = WeightCache::new(t.clone());
+        let spec = ModelSpec::new(toy_dims(), 7, QuantMode::F32);
+        let a = cache.get_or_build(&spec);
+        let single = t.tag_bytes("weights:shared");
+        assert!(single > 0);
+        let b = cache.get_or_build(&spec.clone());
+        assert!(Arc::ptr_eq(&a, &b), "same key must intern to one model");
+        assert_eq!(t.tag_bytes("weights:shared"), single,
+                   "second holder charges nothing");
+        assert_eq!(cache.live_entries(), 1);
+    }
+
+    #[test]
+    fn distinct_seed_or_quant_gets_own_entry() {
+        let t = MemoryTracker::new();
+        let cache = WeightCache::new(t.clone());
+        let a = cache.get_or_build(&ModelSpec::new(toy_dims(), 7, QuantMode::F32));
+        let b = cache.get_or_build(&ModelSpec::new(toy_dims(), 8, QuantMode::F32));
+        let c = cache.get_or_build(&ModelSpec::new(toy_dims(), 7, QuantMode::Q4));
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        assert_eq!(cache.live_entries(), 3);
+        assert_eq!(
+            t.tag_bytes("weights:shared"),
+            a.resident_bytes() + b.resident_bytes() + c.resident_bytes()
+        );
+    }
+
+    #[test]
+    fn last_drop_releases_bytes_and_entry() {
+        let t = MemoryTracker::new();
+        let cache = WeightCache::new(t.clone());
+        let spec = ModelSpec::new(toy_dims(), 7, QuantMode::F32);
+        let a = cache.get_or_build(&spec);
+        let b = cache.get_or_build(&spec);
+        drop(a);
+        assert!(t.tag_bytes("weights:shared") > 0, "b still holds the model");
+        drop(b);
+        assert_eq!(t.tag_bytes("weights:shared"), 0,
+                   "last drop releases the tag");
+        assert_eq!(cache.live_entries(), 0, "dead weak entries pruned");
+        // rebuilding after eviction regenerates identical weights
+        let c = cache.get_or_build(&spec);
+        assert!(c.resident_bytes() > 0);
+        assert_eq!(cache.live_entries(), 1);
+    }
+}

@@ -7,21 +7,26 @@
 //! scratch in the end-to-end example (DESIGN.md §2: random weights replace
 //! the unavailable Qwen checkpoints; memory behaviour is value-independent
 //! and convergence claims are relative between methods).
+//!
+//! The model is split along the paper's fault line: [`FrozenModel`] is the
+//! immutable base (embedding, final norm, per-block frozen tensors — f32
+//! or int4-packed), shareable across any number of sessions behind an
+//! `Arc` and internable in a [`cache::WeightCache`]; [`AdapterState`] is
+//! the tiny per-session trainable half (LoRA A/B). Both halves are pure
+//! functions of independent forks of the model seed, so either can be
+//! built without the other — [`ModelSpec`] is the single entry point.
 
+pub mod cache;
 pub mod quant;
 
+pub use cache::WeightCache;
+
+use std::sync::Arc;
+
 use crate::config::{ModelDims, QuantMode, FROZEN, PROJS, QUANT_MATS};
-use crate::memory::{MemoryTracker, Tracked};
+use crate::memory::{Guard, MemoryTracker};
 use crate::tensor::HostTensor;
 use crate::util::Rng;
-
-/// One block's frozen weights in artifact ABI order: FROZEN ×9 under
-/// f32, or `[ln1, ln2, (packed u8, scales f32) × QUANT_MATS]` under q4
-/// — exactly the frozen argument run of the matching artifact family.
-#[derive(Debug)]
-pub struct BlockWeights {
-    pub tensors: Vec<Tracked<HostTensor>>,
-}
 
 /// One block's LoRA adapters: [a_q, b_q, a_k, b_k, …] in PROJS order —
 /// exactly the artifact argument order.
@@ -57,51 +62,134 @@ impl LoraBlock {
     }
 }
 
-/// Full model state.
-pub struct ModelState {
-    pub dims: ModelDims,
-    pub embedding: Tracked<HostTensor>,
-    pub final_norm: Tracked<HostTensor>,
-    pub blocks: Vec<BlockWeights>,
+/// The immutable frozen half of a model: embedding, final norm and every
+/// block's frozen tensors (FROZEN ×9 under f32, or
+/// `[ln1, ln2, (packed u8, scales f32) × QUANT_MATS]` under q4 — exactly
+/// the frozen argument run of the matching artifact family).
+///
+/// A `FrozenModel` is never mutated after construction and is shared
+/// across sessions as `Arc<FrozenModel>`: N same-base jobs hold ONE copy
+/// of the base weights, and the resident bytes are charged exactly once —
+/// under the `weights:shared` tag of whichever tracker built it — for the
+/// lifetime of the last `Arc`.
+pub struct FrozenModel {
+    /// Owned, shared dims: sessions and backends borrow these instead of
+    /// cloning a `ModelDims` per session.
+    pub dims: Arc<ModelDims>,
+    /// The resolved model seed the weights were generated from.
+    pub seed: u64,
+    /// Resident precision of the block matrices.
+    pub quant: QuantMode,
+    pub embedding: HostTensor,
+    pub final_norm: HostTensor,
+    /// Per-layer frozen tensors in artifact ABI order.
+    pub blocks: Vec<Vec<HostTensor>>,
+    fingerprint: u64,
+    _guard: Guard,
+}
+
+impl FrozenModel {
+    /// FNV-1a 64 fingerprint of every resident frozen tensor (embedding,
+    /// final norm, each block's tensors in artifact-ABI order — the
+    /// int4-packed bytes + scales under q4, so a quantized model is
+    /// fingerprinted in its packed form and never round-tripped through
+    /// f32). Frozen weights are a pure function of the model stream
+    /// seed, so session snapshots store only this hash: restore
+    /// re-attaches to (or regenerates) the weights and refuses to resume
+    /// on a mismatch.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// One block's frozen tensors in artifact ABI order.
+    pub fn block_tensors(&self, layer: usize) -> &[HostTensor] {
+        &self.blocks[layer]
+    }
+
+    /// Total resident bytes (embedding + final norm + all blocks) — the
+    /// quantity the `weights:shared` guard holds, equal to
+    /// `memory::model::resident_weight_bytes(dims, quant)`.
+    pub fn resident_bytes(&self) -> u64 {
+        self._guard.bytes()
+    }
+}
+
+impl std::fmt::Debug for FrozenModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FrozenModel")
+            .field("dims", &self.dims.name)
+            .field("seed", &self.seed)
+            .field("quant", &self.quant)
+            .field("fingerprint", &format_args!("{:#018x}", self.fingerprint))
+            .finish_non_exhaustive()
+    }
+}
+
+/// The per-session trainable half: LoRA adapter blocks.
+#[derive(Debug)]
+pub struct AdapterState {
     pub lora: Vec<LoraBlock>,
 }
 
-impl ModelState {
-    /// Seeded initialization. Frozen weights: N(0, 0.02) with 1/sqrt(2L)
-    /// residual scaling on output projections (wo, wd); norms at 1.0.
-    /// LoRA: A ~ N(0, 1/sqrt(d_in)), B = 0 (standard LoRA init — the
-    /// adapted model starts exactly at the base model).
-    pub fn init(dims: &ModelDims, seed: u64, tracker: &MemoryTracker) -> Self {
-        Self::init_with_quant(dims, seed, tracker, QuantMode::F32)
+impl AdapterState {
+    /// Total trainable (LoRA) parameter count.
+    pub fn lora_param_count(&self) -> usize {
+        self.lora.iter().map(|l| l.param_count()).sum()
+    }
+}
+
+/// Everything that determines a model's weights: dims, the resolved model
+/// seed, and the resident precision. The single construction entry point
+/// for both model halves — and the identity a [`cache::WeightCache`]
+/// interns frozen weights under.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub dims: Arc<ModelDims>,
+    pub seed: u64,
+    pub quant: QuantMode,
+}
+
+impl ModelSpec {
+    pub fn new(
+        dims: impl Into<Arc<ModelDims>>,
+        seed: u64,
+        quant: QuantMode,
+    ) -> ModelSpec {
+        ModelSpec { dims: dims.into(), seed, quant }
     }
 
-    /// [`Self::init`] with a resident precision for the frozen base
-    /// weights. Under [`QuantMode::Q4`] each block's f32 matrices exist
+    /// Build both halves: the (freshly generated, privately owned) frozen
+    /// base and this session's adapters. Fleet paths intern the frozen
+    /// half through [`cache::WeightCache::get_or_build`] instead.
+    pub fn build(
+        &self,
+        tracker: &MemoryTracker,
+    ) -> (Arc<FrozenModel>, AdapterState) {
+        (self.build_frozen(tracker), self.build_adapters(tracker))
+    }
+
+    /// Generate the frozen half. Frozen weights: N(0, 0.02) with
+    /// 1/sqrt(2L) residual scaling on output projections (wo, wd); norms
+    /// at 1.0. Under [`QuantMode::Q4`] each block's f32 matrices exist
     /// only transiently inside this loop — one block at a time, untracked
     /// generation scratch (the tracker's scope is tensors HELD across
     /// calls; the analytical model's per-block dequant term already
     /// over-bounds a one-f32-block transient for the exact-gradient
-    /// methods) — and what the model holds, and the tracker charges, is
-    /// the int4-packed tensors, so a q4 session never has a
-    /// full-precision copy of the frozen model live at once. The weight
-    /// RNG stream is identical in both modes: a q4 session quantizes
-    /// exactly the weights its f32 twin trains on.
-    pub fn init_with_quant(
-        dims: &ModelDims,
-        seed: u64,
-        tracker: &MemoryTracker,
-        quant_mode: QuantMode,
-    ) -> Self {
-        let base = Rng::new(seed);
+    /// methods) — and what the model holds, and the tracker charges once
+    /// under `weights:shared`, is the int4-packed tensors. The weight RNG
+    /// stream is identical in both modes: a q4 model quantizes exactly
+    /// the weights its f32 twin trains on.
+    pub fn build_frozen(&self, tracker: &MemoryTracker) -> Arc<FrozenModel> {
+        let dims = &*self.dims;
+        let base = Rng::new(self.seed);
         let mut rng = base.fork(0xe58);
-        let emb = HostTensor::randn(&[dims.vocab, dims.d_model], 0.02, &mut rng);
-        let emb_guard = tracker.track("weights:embedding", emb.bytes());
-        let fnorm = HostTensor::f32(&[dims.d_model], vec![1.0; dims.d_model]);
-        let fnorm_guard = tracker.track("weights:final_norm", fnorm.bytes());
+        let embedding =
+            HostTensor::randn(&[dims.vocab, dims.d_model], 0.02, &mut rng);
+        let final_norm =
+            HostTensor::f32(&[dims.d_model], vec![1.0; dims.d_model]);
 
         let resid_scale = 1.0 / ((2 * dims.n_layers) as f32).sqrt();
         let mut blocks = Vec::with_capacity(dims.n_layers);
-        let mut lora = Vec::with_capacity(dims.n_layers);
         for l in 0..dims.n_layers {
             let mut brng = base.fork(1000 + l as u64);
             let f32_tensors: Vec<HostTensor> = FROZEN
@@ -117,43 +205,66 @@ impl ModelState {
                     }
                 })
                 .collect();
-            let mut tensors = Vec::new();
-            let hold = |t: HostTensor, tensors: &mut Vec<Tracked<HostTensor>>| {
-                let guard = tracker.track("weights:blocks", t.bytes());
-                tensors.push(Tracked::new(t, guard));
-            };
-            match quant_mode {
-                QuantMode::F32 => {
-                    for t in f32_tensors {
-                        hold(t, &mut tensors);
-                    }
-                }
+            let tensors = match self.quant {
+                QuantMode::F32 => f32_tensors,
                 QuantMode::Q4 => {
                     let idx = |name: &str| {
                         FROZEN.iter().position(|w| *w == name).unwrap()
                     };
+                    let mut packed_tensors = Vec::new();
                     for ln in ["ln1", "ln2"] {
-                        hold(f32_tensors[idx(ln)].clone(), &mut tensors);
+                        packed_tensors.push(f32_tensors[idx(ln)].clone());
                     }
                     for mat in QUANT_MATS {
                         let t = &f32_tensors[idx(mat)];
                         let (din, dout) = (t.shape[0], t.shape[1]);
                         let (packed, scales) =
                             quant::quantize(t.as_f32(), din, dout);
-                        hold(HostTensor::u8(&[din / 2, dout], packed),
-                             &mut tensors);
-                        hold(
-                            HostTensor::f32(
-                                &[din / quant::GROUP, dout], scales),
-                            &mut tensors,
-                        );
+                        packed_tensors
+                            .push(HostTensor::u8(&[din / 2, dout], packed));
+                        packed_tensors.push(HostTensor::f32(
+                            &[din / quant::GROUP, dout], scales));
                     }
                     // f32_tensors drop here: the full-precision block was
                     // generation scratch, never resident state.
+                    packed_tensors
                 }
-            }
-            blocks.push(BlockWeights { tensors });
+            };
+            blocks.push(tensors);
+        }
 
+        let mut fingerprint: u64 = 0xcbf29ce484222325;
+        fingerprint = crate::persist::fnv1a64_tensor(fingerprint, &embedding);
+        fingerprint = crate::persist::fnv1a64_tensor(fingerprint, &final_norm);
+        let mut bytes = embedding.bytes() + final_norm.bytes();
+        for block in &blocks {
+            for t in block {
+                fingerprint = crate::persist::fnv1a64_tensor(fingerprint, t);
+                bytes += t.bytes();
+            }
+        }
+        let guard = tracker.track("weights:shared", bytes);
+        Arc::new(FrozenModel {
+            dims: self.dims.clone(),
+            seed: self.seed,
+            quant: self.quant,
+            embedding,
+            final_norm,
+            blocks,
+            fingerprint,
+            _guard: guard,
+        })
+    }
+
+    /// Generate this session's adapters. LoRA: A ~ N(0, 1/sqrt(d_in)),
+    /// B = 0 (standard LoRA init — the adapted model starts exactly at
+    /// the base model). Uses its own RNG forks of the model seed, so
+    /// adapters are derivable without generating the frozen half.
+    pub fn build_adapters(&self, tracker: &MemoryTracker) -> AdapterState {
+        let dims = &*self.dims;
+        let base = Rng::new(self.seed);
+        let mut lora = Vec::with_capacity(dims.n_layers);
+        for l in 0..dims.n_layers {
             let mut lrng = base.fork(2000 + l as u64);
             let mut lt = Vec::with_capacity(2 * PROJS.len());
             let mut bytes = 0;
@@ -169,53 +280,7 @@ impl ModelState {
             let guard = tracker.track("params:lora", bytes);
             lora.push(LoraBlock { tensors: lt, _guard: guard });
         }
-        ModelState {
-            dims: dims.clone(),
-            embedding: Tracked::new(emb, emb_guard),
-            final_norm: Tracked::new(fnorm, fnorm_guard),
-            blocks,
-            lora,
-        }
-    }
-
-    /// FNV-1a 64 fingerprint of every resident frozen tensor (embedding,
-    /// final norm, each block's tensors in artifact-ABI order — the
-    /// int4-packed bytes + scales under q4, so a quantized model is
-    /// fingerprinted in its packed form and never round-tripped through
-    /// f32). Frozen weights are a pure function of the model stream
-    /// seed, so session snapshots store only this hash: restore
-    /// regenerates the weights and refuses to resume on a mismatch.
-    ///
-    /// Must be computed BEFORE the engine uploads the weights and frees
-    /// the host copies ([`crate::train::common::EngineCtx`] does).
-    pub fn weights_fingerprint(&self) -> u64 {
-        let mut h: u64 = 0xcbf29ce484222325;
-        h = crate::persist::fnv1a64_tensor(h, &self.embedding.value);
-        h = crate::persist::fnv1a64_tensor(h, &self.final_norm.value);
-        for block in &self.blocks {
-            for t in &block.tensors {
-                h = crate::persist::fnv1a64_tensor(h, &t.value);
-            }
-        }
-        h
-    }
-
-    /// Total trainable (LoRA) parameter count.
-    pub fn lora_param_count(&self) -> usize {
-        self.lora.iter().map(|l| l.param_count()).sum()
-    }
-
-    /// Borrow a block's frozen + LoRA tensors in artifact argument order
-    /// (frozen ×9 then lora ×14) — appended after the leading args.
-    pub fn block_args<'a>(&'a self, layer: usize) -> Vec<&'a HostTensor> {
-        let mut v: Vec<&HostTensor> = Vec::with_capacity(23);
-        for t in &self.blocks[layer].tensors {
-            v.push(&t.value);
-        }
-        for t in &self.lora[layer].tensors {
-            v.push(t);
-        }
-        v
+        AdapterState { lora }
     }
 }
 
@@ -232,22 +297,40 @@ mod tests {
         }
     }
 
+    fn spec(seed: u64, quant: QuantMode) -> ModelSpec {
+        ModelSpec::new(toy_dims(), seed, quant)
+    }
+
     #[test]
-    fn init_deterministic() {
+    fn build_deterministic() {
         let t = MemoryTracker::new();
-        let a = ModelState::init(&toy_dims(), 7, &t);
-        let b = ModelState::init(&toy_dims(), 7, &t);
-        assert_eq!(a.embedding.as_f32()[..8], b.embedding.as_f32()[..8]);
-        assert_eq!(a.lora[0].tensors[0].as_f32(), b.lora[0].tensors[0].as_f32());
-        let c = ModelState::init(&toy_dims(), 8, &t);
-        assert_ne!(a.embedding.as_f32()[0], c.embedding.as_f32()[0]);
+        let (fa, aa) = spec(7, QuantMode::F32).build(&t);
+        let (fb, ab) = spec(7, QuantMode::F32).build(&t);
+        assert_eq!(fa.embedding.as_f32()[..8], fb.embedding.as_f32()[..8]);
+        assert_eq!(aa.lora[0].tensors[0].as_f32(),
+                   ab.lora[0].tensors[0].as_f32());
+        let (fc, _) = spec(8, QuantMode::F32).build(&t);
+        assert_ne!(fa.embedding.as_f32()[0], fc.embedding.as_f32()[0]);
+    }
+
+    #[test]
+    fn adapters_derivable_without_frozen() {
+        // The halves fork independent RNG streams: adapters built alone
+        // are bitwise the adapters built alongside the frozen half.
+        let t = MemoryTracker::new();
+        let s = spec(3, QuantMode::F32);
+        let (_frozen, together) = s.build(&t);
+        let alone = s.build_adapters(&t);
+        for (a, b) in together.lora.iter().zip(&alone.lora) {
+            assert_eq!(a.flatten(), b.flatten());
+        }
     }
 
     #[test]
     fn lora_b_starts_zero() {
         let t = MemoryTracker::new();
-        let m = ModelState::init(&toy_dims(), 1, &t);
-        for l in &m.lora {
+        let a = spec(1, QuantMode::F32).build_adapters(&t);
+        for l in &a.lora {
             for (i, tt) in l.tensors.iter().enumerate() {
                 if i % 2 == 1 {
                     assert!(tt.as_f32().iter().all(|v| *v == 0.0), "B not zero");
@@ -260,61 +343,62 @@ mod tests {
     fn param_count_matches_dims() {
         let t = MemoryTracker::new();
         let d = toy_dims();
-        let m = ModelState::init(&d, 1, &t);
-        assert_eq!(m.lora_param_count(), d.lora_params_total());
+        let a = ModelSpec::new(d.clone(), 1, QuantMode::F32).build_adapters(&t);
+        assert_eq!(a.lora_param_count(), d.lora_params_total());
     }
 
     #[test]
     fn flatten_unflatten_roundtrip() {
         let t = MemoryTracker::new();
-        let mut m = ModelState::init(&toy_dims(), 3, &t);
-        let flat = m.lora[0].flatten();
+        let mut a = spec(3, QuantMode::F32).build_adapters(&t);
+        let flat = a.lora[0].flatten();
         let mut modified = flat.clone();
         modified[0] += 1.5;
-        m.lora[0].unflatten(&modified);
-        assert_eq!(m.lora[0].flatten(), modified);
+        a.lora[0].unflatten(&modified);
+        assert_eq!(a.lora[0].flatten(), modified);
     }
 
     #[test]
-    fn block_args_order() {
+    fn block_tensor_order() {
         let t = MemoryTracker::new();
         let d = toy_dims();
-        let m = ModelState::init(&d, 1, &t);
-        let args = m.block_args(0);
-        assert_eq!(args.len(), 9 + 14);
+        let (frozen, adapters) =
+            ModelSpec::new(d.clone(), 1, QuantMode::F32).build(&t);
+        assert_eq!(frozen.block_tensors(0).len(), 9);
         // first frozen is ln1 [d]
-        assert_eq!(args[0].shape, vec![d.d_model]);
+        assert_eq!(frozen.block_tensors(0)[0].shape, vec![d.d_model]);
         // first lora pair is a_q [d, r], b_q [r, qd]
-        assert_eq!(args[9].shape, vec![d.d_model, d.rank]);
-        assert_eq!(args[10].shape, vec![d.rank, d.q_dim()]);
+        assert_eq!(adapters.lora[0].tensors[0].shape,
+                   vec![d.d_model, d.rank]);
+        assert_eq!(adapters.lora[0].tensors[1].shape,
+                   vec![d.rank, d.q_dim()]);
     }
 
     #[test]
-    fn q4_init_holds_packed_blocks_only() {
+    fn q4_build_holds_packed_blocks_only() {
         let t = MemoryTracker::new();
         let d = toy_dims();
-        let m = ModelState::init_with_quant(&d, 7, &t, crate::config::QuantMode::Q4);
+        let m = spec(7, QuantMode::Q4).build_frozen(&t);
         // q4 ABI order: ln1, ln2, then (packed, scales) × 7
-        let b = &m.blocks[0].tensors;
+        let b = m.block_tensors(0);
         assert_eq!(b.len(), 2 + 2 * QUANT_MATS.len());
-        assert_eq!(b[0].value.shape, vec![d.d_model]); // ln1
-        assert_eq!(b[2].value.dtype(), crate::tensor::DType::U8); // packed_wq
-        assert_eq!(b[2].value.shape, vec![d.d_model / 2, d.q_dim()]);
-        assert_eq!(b[3].value.shape,
+        assert_eq!(b[0].shape, vec![d.d_model]); // ln1
+        assert_eq!(b[2].dtype(), crate::tensor::DType::U8); // packed_wq
+        assert_eq!(b[2].shape, vec![d.d_model / 2, d.q_dim()]);
+        assert_eq!(b[3].shape,
                    vec![d.d_model / quant::GROUP, d.q_dim()]); // scales_wq
         // packed residents are a fraction of the f32 block bytes
-        let t2 = MemoryTracker::new();
-        let f = ModelState::init(&d, 7, &t2);
-        let q4_bytes: u64 = b.iter().map(|t| t.value.bytes()).sum();
+        let f = spec(7, QuantMode::F32).build_frozen(&t);
+        let q4_bytes: u64 = b.iter().map(|t| t.bytes()).sum();
         let f32_bytes: u64 =
-            f.blocks[0].tensors.iter().map(|t| t.value.bytes()).sum();
+            f.block_tensors(0).iter().map(|t| t.bytes()).sum();
         assert!(q4_bytes * 2 < f32_bytes, "{q4_bytes} !< {f32_bytes} / 2");
         // same seed ⇒ same underlying weights: the packed wq dequantizes
         // to within half a quantization step of the f32 wq
-        let packed = b[2].value.as_u8();
-        let scales = b[3].value.as_f32();
+        let packed = b[2].as_u8();
+        let scales = b[3].as_f32();
         let deq = quant::dequantize(packed, scales, d.d_model, d.q_dim());
-        let wq = f.blocks[0].tensors[1].value.as_f32();
+        let wq = f.block_tensors(0)[1].as_f32();
         for (c, (a, b)) in deq.iter().zip(wq).enumerate() {
             let s = scales[(c / d.q_dim() / quant::GROUP) * d.q_dim()
                 + c % d.q_dim()];
@@ -323,31 +407,30 @@ mod tests {
     }
 
     #[test]
-    fn weights_fingerprint_is_seed_and_quant_sensitive() {
+    fn fingerprint_is_seed_and_quant_sensitive() {
         let t = MemoryTracker::new();
-        let d = toy_dims();
-        let a = ModelState::init(&d, 7, &t).weights_fingerprint();
-        let b = ModelState::init(&d, 7, &t).weights_fingerprint();
+        let a = spec(7, QuantMode::F32).build_frozen(&t).fingerprint();
+        let b = spec(7, QuantMode::F32).build_frozen(&t).fingerprint();
         assert_eq!(a, b, "same seed ⇒ same fingerprint");
-        let c = ModelState::init(&d, 8, &t).weights_fingerprint();
+        let c = spec(8, QuantMode::F32).build_frozen(&t).fingerprint();
         assert_ne!(a, c, "different seed ⇒ different fingerprint");
-        let q = ModelState::init_with_quant(
-            &d, 7, &t, crate::config::QuantMode::Q4)
-            .weights_fingerprint();
+        let q = spec(7, QuantMode::Q4).build_frozen(&t).fingerprint();
         assert_ne!(a, q, "q4 fingerprints the packed bytes, not the f32s");
-        let q2 = ModelState::init_with_quant(
-            &d, 7, &t, crate::config::QuantMode::Q4)
-            .weights_fingerprint();
+        let q2 = spec(7, QuantMode::Q4).build_frozen(&t).fingerprint();
         assert_eq!(q, q2);
     }
 
     #[test]
-    fn tracker_accounts_weights() {
+    fn tracker_charges_shared_weights_once_per_model() {
         let t = MemoryTracker::new();
-        let d = presets::qwen25_05b(8, 8); // tiny seq; weights dominate
-        // don't actually allocate 0.5B params here — use toy and check > 0
-        let m = ModelState::init(&toy_dims(), 1, &t);
-        assert!(t.live() > 0);
+        let d = presets::qwen25_05b(8, 8); // sim-only; never allocated here
+        let m = spec(1, QuantMode::F32).build_frozen(&t);
+        assert_eq!(t.tag_bytes("weights:shared"), m.resident_bytes());
+        assert_eq!(
+            m.resident_bytes(),
+            crate::memory::resident_weight_bytes(&m.dims, QuantMode::F32),
+            "guard bytes must equal the analytical resident term"
+        );
         drop(m);
         assert_eq!(t.live(), 0, "all weight bytes released");
         let _ = d;

@@ -21,9 +21,12 @@
 //!
 //! See [`snapshot`] for the on-disk layout and versioning policy, and
 //! [`crate::coordinator::TrainSession::snapshot`] /
-//! [`crate::coordinator::TrainSession::restore`] for the session-level
-//! entry points the CLI (`train --save-every/--resume`) and the fleet
-//! scheduler's preempt-to-disk path are built on.
+//! [`crate::coordinator::SessionBuilder::resume_from`] for the
+//! session-level entry points the CLI (`train --save-every/--resume`)
+//! and the fleet scheduler's preempt-to-disk path are built on. A
+//! resumed session re-attaches to its frozen base by fingerprint — if a
+//! cached [`crate::model::WeightCache`] entry for the same base is live,
+//! restore shares it instead of regenerating.
 
 pub mod codec;
 pub mod snapshot;

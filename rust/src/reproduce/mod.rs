@@ -121,13 +121,13 @@ pub fn table3(config: &str) -> anyhow::Result<String> {
     // exact gradients from MeSP (== MeBP, see gradcheck test)
     let mut cfg_e = base.clone();
     cfg_e.method = Method::Mesp;
-    let mut exact_s = TrainSession::new(cfg_e)?;
+    let mut exact_s = TrainSession::builder(cfg_e).build()?;
     let (batch, _g) = exact_s.loader.next();
     let exact = exact_s.engine.gradients(&batch)?;
 
     let mut cfg_z = base.clone();
     cfg_z.method = Method::Mezo;
-    let mut mezo_s = TrainSession::new(cfg_z)?;
+    let mut mezo_s = TrainSession::builder(cfg_z).build()?;
     let estimate = mezo_s.engine.gradients(&batch)?;
 
     let rows = grad_quality(&estimate, &exact);

@@ -83,12 +83,20 @@ pub enum DeviceBuffer {
     Pjrt(xla::PjRtBuffer),
 }
 
-/// An argument to [`Backend::execute`]: either a host tensor uploaded for
-/// the duration of the call, or a persistent buffer from
-/// [`Backend::upload`].
+/// An argument to [`Backend::execute`]: a host tensor uploaded for the
+/// duration of the call, a persistent buffer from [`Backend::upload`],
+/// or a borrow of process-resident shared weights.
 pub enum Arg<'a> {
     Host(&'a HostTensor),
     Device(&'a DeviceBuffer),
+    /// A host tensor that is already resident for the session's lifetime
+    /// (e.g. a [`crate::model::FrozenModel`] tensor shared across
+    /// sessions). Validated like `Host`, but its bytes are NOT charged to
+    /// the per-call `exec:<name>` tag: they are accounted once, at the
+    /// owner (`weights:shared`), not per call per session. Only
+    /// meaningful on backends where [`Backend::shares_host_memory`] is
+    /// true; upload-based backends never see this variant.
+    Resident(&'a HostTensor),
 }
 
 /// A compute backend serving the artifact surface.
@@ -106,6 +114,9 @@ pub enum Arg<'a> {
 /// 3. **Memory accounting** — transient host-arg bytes of every call are
 ///    registered with the shared [`MemoryTracker`] under `exec:<name>` for
 ///    the duration of the call, so step peaks include call overhead.
+///    [`Arg::Resident`] borrows are exempt: they reference weights whose
+///    bytes are already accounted at their owner (`weights:shared`), so
+///    charging them per call would double-count shared state.
 /// 4. **Statelessness** — backends hold no model state between calls
 ///    beyond buffers explicitly created via `upload`; all training state
 ///    lives in the engines.
@@ -128,6 +139,15 @@ pub trait Backend: Send + Sync {
 
     /// Upload a host tensor to a persistent backend-resident buffer.
     fn upload(&self, t: &HostTensor) -> anyhow::Result<DeviceBuffer>;
+
+    /// Whether this backend computes directly on host memory, so
+    /// session-lifetime host tensors (shared frozen weights) can be
+    /// passed as [`Arg::Resident`] borrows instead of uploaded. Backends
+    /// with a real device transfer (PJRT) return false and receive
+    /// per-session `upload`s.
+    fn shares_host_memory(&self) -> bool {
+        false
+    }
 
     /// Execute artifact `name` with positional `args`; returns the output
     /// tuple as host tensors in artifact output order.

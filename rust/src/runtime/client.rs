@@ -186,6 +186,11 @@ impl Backend for Runtime {
                     order.push(transients.len() - 1);
                 }
                 Arg::Device(_) => order.push(usize::MAX),
+                // This backend reports `shares_host_memory() == false`, so
+                // callers upload shared weights instead of borrowing them.
+                Arg::Resident(_) => anyhow::bail!(
+                    "{name}: Arg::Resident passed to an upload backend"
+                ),
             }
         }
         let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
@@ -196,6 +201,7 @@ impl Backend for Runtime {
                 Arg::Device(DeviceBuffer::Resident(_)) => anyhow::bail!(
                     "{name}: reference-backend buffer passed to the PJRT runtime"
                 ),
+                Arg::Resident(_) => unreachable!("rejected above"),
             }
         }
         let exes = self.exes.lock().unwrap();

@@ -22,7 +22,10 @@
 //!    `tests/gradcheck.rs`);
 //! 3. register transient host-arg bytes of every call with the shared
 //!    [`crate::memory::MemoryTracker`] under `exec:<name>` for the
-//!    duration of the call, so step peaks include call overhead;
+//!    duration of the call, so step peaks include call overhead —
+//!    excepting [`backend::Arg::Resident`] borrows of shared frozen
+//!    weights, whose bytes are charged once at their owner
+//!    (`weights:shared`) rather than per call per session;
 //! 4. hold no training state between calls beyond buffers explicitly
 //!    created via [`Backend::upload`].
 //!

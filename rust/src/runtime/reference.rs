@@ -14,6 +14,7 @@
 //! Appendix-A VJPs and therefore return bitwise identical gradients.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::{ModelDims, FROZEN, PROJS};
@@ -39,7 +40,11 @@ pub const RESIDUALS: [&str; 19] = [
 pub use crate::config::QUANT_MATS;
 
 pub struct ReferenceBackend {
-    dims: ModelDims,
+    /// Shared, not cloned: sessions built from a cached
+    /// [`crate::model::FrozenModel`] hand the cache's interned
+    /// `Arc<ModelDims>` straight through, so N same-base sessions hold
+    /// one dims allocation.
+    dims: Arc<ModelDims>,
     specs: Vec<ArtifactSpec>,
     tracker: MemoryTracker,
     stats: StatsRecorder,
@@ -48,17 +53,21 @@ pub struct ReferenceBackend {
 
 impl ReferenceBackend {
     /// Backend with the default kernel engine (`parallel`, auto threads).
-    pub fn new(dims: ModelDims, tracker: MemoryTracker) -> ReferenceBackend {
+    pub fn new(
+        dims: impl Into<Arc<ModelDims>>,
+        tracker: MemoryTracker,
+    ) -> ReferenceBackend {
         Self::with_kernels(dims, tracker, KernelOptions::default())
     }
 
     /// Backend with an explicit kernel selection (`--kernel`/`--threads`;
     /// the fleet scheduler passes its per-worker thread budget here).
     pub fn with_kernels(
-        dims: ModelDims,
+        dims: impl Into<Arc<ModelDims>>,
         tracker: MemoryTracker,
         opts: KernelOptions,
     ) -> ReferenceBackend {
+        let dims = dims.into();
         let specs = build_specs(&dims);
         let kernels = Kernels::new(opts, tracker.clone());
         ReferenceBackend { dims, specs, tracker, stats: StatsRecorder::new(), kernels }
@@ -302,6 +311,10 @@ impl Backend for ReferenceBackend {
         Ok(DeviceBuffer::Resident(t.clone()))
     }
 
+    fn shares_host_memory(&self) -> bool {
+        true // shared frozen weights ride along as `Arg::Resident` borrows
+    }
+
     fn execute(&self, name: &str, args: &[Arg]) -> anyhow::Result<Vec<HostTensor>> {
         let spec = self.spec(name)?;
         anyhow::ensure!(
@@ -318,6 +331,10 @@ impl Backend for ReferenceBackend {
                     in_bytes += t.bytes();
                     *t
                 }
+                // Session-lifetime shared weights: validated like a host
+                // arg, but accounted once at the owner (`weights:shared`),
+                // never per call (contract point 3).
+                Arg::Resident(t) => *t,
                 Arg::Device(DeviceBuffer::Resident(t)) => t,
                 #[cfg(feature = "pjrt")]
                 Arg::Device(DeviceBuffer::Pjrt(_)) => anyhow::bail!(

@@ -8,64 +8,71 @@ use std::time::Instant;
 use crate::config::{OptimizerKind, QuantMode, PROJS};
 use crate::data::Batch;
 use crate::memory::{Guard, MemoryTracker};
-use crate::model::{quant, ModelState};
+use crate::model::{quant, AdapterState, FrozenModel};
 use crate::runtime::{Arg, Backend, DeviceBuffer};
 use crate::tensor::HostTensor;
 
 use super::{CheckpointStore, Optimizer, StepStats};
 
-/// Everything an engine needs: backend, model, optimizer, tracker.
+/// Everything an engine needs: backend, model halves, optimizer, tracker.
 ///
 /// Engines are backend-agnostic: `rt` is a [`Backend`] trait object, so
 /// the same schedule runs on the in-process reference backend and on the
-/// PJRT artifact runtime. Frozen weights and the embedding are uploaded
-/// ONCE to persistent backend buffers at construction and their host
-/// copies freed — the paper-equivalent of keeping base weights resident
-/// while only LoRA params move (perf §L3: this removed the dominant
-/// per-call memcpy at 100M scale). LoRA params stay host-side (the
-/// optimizer updates them after every block) and ride along each call as
-/// transient uploads.
+/// PJRT artifact runtime. The frozen base is an `Arc<FrozenModel>` —
+/// possibly shared with other sessions through a
+/// [`crate::model::WeightCache`] — and the session owns only its
+/// [`AdapterState`] (LoRA params stay host-side; the optimizer updates
+/// them after every block).
 ///
-/// Under `--quant q4` the seven projection matrices of every block are
-/// int4-packed at upload time and the f32 originals dropped: the session
-/// never holds full-precision base weights again (paper §4.5), the
-/// `weights:device` tag shrinks to the packed bytes, and every block
-/// call is routed to its `_q4` artifact twin.
+/// How frozen weights reach the backend depends on
+/// [`Backend::shares_host_memory`]: backends that compute on host memory
+/// (the reference backend) receive zero-copy [`Arg::Resident`] borrows of
+/// the shared tensors — N same-base sessions hold ONE copy of the base
+/// weights, charged once under `weights:shared` by whoever built the
+/// `FrozenModel`. Upload backends (PJRT) get a per-session device copy at
+/// construction, charged under `weights:device` (the host copy stays with
+/// the shared `FrozenModel` — it is immutable and may serve other
+/// sessions).
+///
+/// Under `--quant q4` the frozen blocks are int4-packed
+/// (`[ln1, ln2, (packed, scales) × QUANT_MATS]`) and every block call is
+/// routed to its `_q4` artifact twin.
 pub struct EngineCtx {
     pub rt: Arc<dyn Backend>,
-    pub model: ModelState,
+    /// The immutable, possibly shared frozen half.
+    pub frozen: Arc<FrozenModel>,
+    /// This session's private trainable half.
+    pub adapters: AdapterState,
     pub opt: Optimizer,
     pub tracker: MemoryTracker,
     pub step: usize,
     /// Checkpoint-store disk-spill budget in bytes (0 = never spill).
     pub spill_limit: u64,
     quant: QuantMode,
-    /// Fingerprint of the frozen base weights, computed at init BEFORE
-    /// the host copies are freed — session snapshots store this instead
-    /// of the (regenerable) weights themselves.
-    weights_fingerprint: u64,
-    /// Per block: FROZEN-order tensors (f32 mode) or
-    /// `[ln1, ln2, (packed, scales) × QUANT_MATS]` (q4 mode) — exactly
-    /// the frozen argument run of the selected artifact ABI.
+    /// Upload-backend path only (`shares_host_memory() == false`):
+    /// per-session device copies of the frozen state, in artifact ABI
+    /// order. Empty/None on shared-memory backends.
     dev_frozen: Vec<Vec<DeviceBuffer>>,
-    dev_emb: DeviceBuffer,
-    dev_fnorm: DeviceBuffer,
-    _dev_guard: Guard,
+    dev_emb: Option<DeviceBuffer>,
+    dev_fnorm: Option<DeviceBuffer>,
+    _dev_guard: Option<Guard>,
 }
 
 impl EngineCtx {
-    /// Standard construction: seeded model + optimizer sized to the LoRA
-    /// tensor groups (layer-major, ABI order), then weight upload
-    /// (quantizing the projections first under `QuantMode::Q4`).
+    /// Wire a session around an existing frozen base (fresh or from a
+    /// [`crate::model::WeightCache`]) and this session's adapters. The
+    /// optimizer is sized to the LoRA tensor groups (layer-major, ABI
+    /// order).
     pub fn new(
         rt: Arc<dyn Backend>,
-        seed: u64,
+        frozen: Arc<FrozenModel>,
+        adapters: AdapterState,
         opt_kind: OptimizerKind,
         lr: f32,
         spill_limit: u64,
-        quant_mode: QuantMode,
     ) -> anyhow::Result<Self> {
-        if quant_mode == QuantMode::Q4 {
+        let quant = frozen.quant;
+        if quant == QuantMode::Q4 {
             anyhow::ensure!(
                 rt.has_artifact("block_bwd_mesp_q4"),
                 "config '{}' has no q4 training artifacts on the {} backend: \
@@ -78,44 +85,40 @@ impl EngineCtx {
             );
         }
         let tracker = rt.tracker().clone();
-        let mut model =
-            ModelState::init_with_quant(rt.dims(), seed, &tracker, quant_mode);
-        let group_sizes: Vec<usize> = model
+        let group_sizes: Vec<usize> = adapters
             .lora
             .iter()
             .flat_map(|l| l.tensors.iter().map(|t| t.len()))
             .collect();
         let opt = Optimizer::new(opt_kind, lr, &group_sizes, &tracker);
-        // Hash the resident frozen tensors now — the upload loop below
-        // drains the host copies, after which they are gone for good.
-        let weights_fingerprint = model.weights_fingerprint();
 
-        // Upload frozen state once; free the host copies (their Tracked
-        // guards drop here), accounting the device bytes instead. The
-        // model already holds the blocks in the selected artifact ABI
-        // order — int4-packed + scales under q4 — so the upload loop is
-        // mode-agnostic and `weights:device` shrinks to the packed bytes.
-        let mut dev_bytes = 0u64;
-        let mut dev_frozen = Vec::with_capacity(model.blocks.len());
-        for block in &mut model.blocks {
-            let mut bufs = Vec::with_capacity(block.tensors.len());
-            for t in block.tensors.drain(..) {
-                dev_bytes += t.value.bytes();
-                bufs.push(rt.upload(&t.value).expect("weight upload"));
-            }
-            dev_frozen.push(bufs);
-        }
-        let dev_emb = rt.upload(&model.embedding.value).expect("emb upload");
-        dev_bytes += model.embedding.value.bytes();
-        // free the host embedding data (keep shape for introspection)
-        model.embedding.value.data = crate::tensor::Data::F32(Vec::new());
-        model.embedding.value.shape = vec![0];
-        let dev_fnorm = rt.upload(&model.final_norm.value).expect("fnorm");
-        dev_bytes += model.final_norm.value.bytes();
-        let _dev_guard = tracker.track("weights:device", dev_bytes);
+        // Shared-memory backends borrow the frozen tensors per call
+        // (`Arg::Resident`) — no copies, no extra accounting. Upload
+        // backends get a per-session device copy, charged here.
+        let (dev_frozen, dev_emb, dev_fnorm, _dev_guard) =
+            if rt.shares_host_memory() {
+                (Vec::new(), None, None, None)
+            } else {
+                let mut dev_bytes = 0u64;
+                let mut dev_frozen = Vec::with_capacity(frozen.blocks.len());
+                for block in &frozen.blocks {
+                    let mut bufs = Vec::with_capacity(block.len());
+                    for t in block {
+                        dev_bytes += t.bytes();
+                        bufs.push(rt.upload(t).expect("weight upload"));
+                    }
+                    dev_frozen.push(bufs);
+                }
+                let dev_emb = rt.upload(&frozen.embedding).expect("emb upload");
+                dev_bytes += frozen.embedding.bytes();
+                let dev_fnorm = rt.upload(&frozen.final_norm).expect("fnorm");
+                dev_bytes += frozen.final_norm.bytes();
+                let guard = tracker.track("weights:device", dev_bytes);
+                (dev_frozen, Some(dev_emb), Some(dev_fnorm), Some(guard))
+            };
         Ok(EngineCtx {
-            rt, model, opt, tracker, step: 0, spill_limit, quant: quant_mode,
-            weights_fingerprint, dev_frozen, dev_emb, dev_fnorm, _dev_guard,
+            rt, frozen, adapters, opt, tracker, step: 0, spill_limit, quant,
+            dev_frozen, dev_emb, dev_fnorm, _dev_guard,
         })
     }
 
@@ -125,9 +128,9 @@ impl EngineCtx {
     }
 
     /// Fingerprint of the frozen base weights (see
-    /// [`crate::model::ModelState::weights_fingerprint`]).
+    /// [`crate::model::FrozenModel::fingerprint`]).
     pub fn weights_fingerprint(&self) -> u64 {
-        self.weights_fingerprint
+        self.frozen.fingerprint()
     }
 
     /// Map a block-artifact base name onto the session's quant mode
@@ -147,24 +150,48 @@ impl EngineCtx {
         self.rt.warmup(&refs)
     }
 
-    /// A block's frozen (device) + LoRA (host) tensors in artifact ABI
-    /// order, ready to append after the leading args.
+    /// A block's frozen (shared-resident or device) + LoRA (host) tensors
+    /// in artifact ABI order, ready to append after the leading args.
     pub fn block_args_mixed(&self, layer: usize) -> Vec<Arg<'_>> {
+        let frozen = &self.frozen.blocks[layer];
         let mut v: Vec<Arg> =
-            Vec::with_capacity(self.dev_frozen[layer].len() + 2 * PROJS.len());
-        for b in &self.dev_frozen[layer] {
-            v.push(Arg::Device(b));
+            Vec::with_capacity(frozen.len() + 2 * PROJS.len());
+        if self.dev_frozen.is_empty() {
+            for t in frozen {
+                v.push(Arg::Resident(t));
+            }
+        } else {
+            for b in &self.dev_frozen[layer] {
+                v.push(Arg::Device(b));
+            }
         }
-        for t in &self.model.lora[layer].tensors {
+        for t in &self.adapters.lora[layer].tensors {
             v.push(Arg::Host(t));
         }
         v
     }
 
+    /// The embedding table as a call argument (shared borrow or uploaded
+    /// buffer).
+    fn emb_arg(&self) -> Arg<'_> {
+        match &self.dev_emb {
+            Some(b) => Arg::Device(b),
+            None => Arg::Resident(&self.frozen.embedding),
+        }
+    }
+
+    fn fnorm_arg(&self) -> Arg<'_> {
+        match &self.dev_fnorm {
+            Some(b) => Arg::Device(b),
+            None => Arg::Resident(&self.frozen.final_norm),
+        }
+    }
+
     /// Token embedding lookup.
     pub fn embed(&self, tokens: &HostTensor) -> anyhow::Result<HostTensor> {
-        let out = self.rt.execute(
-            "embed_fwd", &[Arg::Host(tokens), Arg::Device(&self.dev_emb)])?;
+        let out = self
+            .rt
+            .execute("embed_fwd", &[Arg::Host(tokens), self.emb_arg()])?;
         Ok(out.into_iter().next().unwrap())
     }
 
@@ -184,8 +211,8 @@ impl EngineCtx {
     {
         let out = self.rt.execute(
             "lm_loss_grad",
-            &[Arg::Host(h), Arg::Device(&self.dev_fnorm),
-              Arg::Device(&self.dev_emb), Arg::Host(targets)],
+            &[Arg::Host(h), self.fnorm_arg(), self.emb_arg(),
+              Arg::Host(targets)],
         )?;
         let mut it = out.into_iter();
         let loss = it.next().unwrap().scalar();
@@ -198,8 +225,8 @@ impl EngineCtx {
     {
         let out = self.rt.execute(
             "lm_loss_fwd",
-            &[Arg::Host(h), Arg::Device(&self.dev_fnorm),
-              Arg::Device(&self.dev_emb), Arg::Host(targets)],
+            &[Arg::Host(h), self.fnorm_arg(), self.emb_arg(),
+              Arg::Host(targets)],
         )?;
         Ok(out[0].scalar())
     }
@@ -223,7 +250,7 @@ impl EngineCtx {
             let grad = outs.pop().unwrap();
             let idx = i - 1; // 0..14 over lora tensors of this block
             let group = layer * 2 * PROJS.len() + idx;
-            let params = self.model.lora[layer].tensors[idx].as_f32_mut();
+            let params = self.adapters.lora[layer].tensors[idx].as_f32_mut();
             self.opt.update(group, params, grad.as_f32());
             // grad dropped here — "discarded immediately after being used"
         }

@@ -49,7 +49,7 @@ impl MezoEngine {
         let z: Vec<Vec<f32>> = (0..self.ctx.rt.dims().n_layers)
             .map(|l| {
                 let mut r = base.fork(l as u64);
-                r.normal_vec(self.ctx.model.lora[l].param_count(), 1.0)
+                r.normal_vec(self.ctx.adapters.lora[l].param_count(), 1.0)
             })
             .collect();
         let bytes: u64 = z.iter().map(|v| 4 * v.len() as u64).sum();
@@ -61,11 +61,11 @@ impl MezoEngine {
 
     fn perturb(ctx: &mut EngineCtx, z: &[Vec<f32>], scale: f32) {
         for (l, zl) in z.iter().enumerate() {
-            let mut flat = ctx.model.lora[l].flatten();
+            let mut flat = ctx.adapters.lora[l].flatten();
             for (p, zi) in flat.iter_mut().zip(zl) {
                 *p += scale * zi;
             }
-            ctx.model.lora[l].unflatten(&flat);
+            ctx.adapters.lora[l].unflatten(&flat);
         }
     }
 
@@ -100,11 +100,11 @@ impl Engine for MezoEngine {
         // θ ← θ − lr·c·z (plain SGD on the SPSA estimate, as in MeZO)
         let lr = self.ctx.opt.lr();
         for (l, zl) in z.iter().enumerate() {
-            let mut flat = self.ctx.model.lora[l].flatten();
+            let mut flat = self.ctx.adapters.lora[l].flatten();
             for (p, zi) in flat.iter_mut().zip(zl) {
                 *p -= lr * c * zi;
             }
-            self.ctx.model.lora[l].unflatten(&flat);
+            self.ctx.adapters.lora[l].unflatten(&flat);
         }
         drop(z_guard);
         self.ctx.step += 1;

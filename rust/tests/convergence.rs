@@ -42,7 +42,7 @@ fn training_reduces_loss() {
     let mut cfg = base();
     cfg.method = Method::Mesp;
     cfg.lr = 1e-2;
-    let mut sess = TrainSession::new(cfg).unwrap();
+    let mut sess = TrainSession::builder(cfg).build().unwrap();
     sess.run(40).unwrap();
     let losses = sess.losses();
     let first5 = stats::mean(&losses[..5]);
@@ -86,9 +86,9 @@ fn adam_converges_faster_than_sgd_on_toy() {
     let mut adam_cfg = base();
     adam_cfg.lr = 5e-3;
     adam_cfg.optimizer = mesp::config::OptimizerKind::parse("adam").unwrap();
-    let mut s1 = TrainSession::new(sgd_cfg).unwrap();
+    let mut s1 = TrainSession::builder(sgd_cfg).build().unwrap();
     s1.run(30).unwrap();
-    let mut s2 = TrainSession::new(adam_cfg).unwrap();
+    let mut s2 = TrainSession::builder(adam_cfg).build().unwrap();
     s2.run(30).unwrap();
     let sgd_last = stats::mean(&s1.losses()[25..]);
     let adam_last = stats::mean(&s2.losses()[25..]);

@@ -6,7 +6,8 @@
 
 use mesp::config::{presets, Method, QuantMode, TrainConfig};
 use mesp::fleet::{
-    grid, job_cost_bytes, BudgetChange, FleetOptions, Job, JobSpec, Scheduler,
+    grid, job_cost_bytes, job_weight_class, BudgetChange, FleetOptions, Job,
+    JobSpec, Scheduler,
 };
 use mesp::memory::resident_weight_bytes;
 
@@ -19,10 +20,17 @@ fn base(steps: usize) -> TrainConfig {
     }
 }
 
+/// Per-job activation/scratch cost — weight bytes are a separate,
+/// once-per-base charge ([`job_weight_class`]).
 fn cost(base: &TrainConfig, method: Method) -> u64 {
     let mut spec = JobSpec::from_base(base);
     spec.method = method;
     job_cost_bytes(&spec).unwrap()
+}
+
+/// Resident bytes of the base-weight class every grid job shares.
+fn wbytes(base: &TrainConfig) -> u64 {
+    job_weight_class(&JobSpec::from_base(base)).unwrap().bytes
 }
 
 #[test]
@@ -32,10 +40,13 @@ fn one_mebp_budget_serializes_mebp_but_overlaps_mesp() {
     let mesp_cost = cost(&base, Method::Mesp);
     assert!(mesp_cost < mebp_cost, "MeSP must cost less than MeBP");
 
-    // "Sized to admit exactly one MeBP job": one fits, two do not.
-    let budget = 2 * mebp_cost - 1;
+    // "Sized to admit exactly one MeBP job": the shared base plus one
+    // MeBP activation cost fits, a second MeBP job does not (grid jobs
+    // share one weight class, so the base is charged once).
+    let w = wbytes(&base);
+    let budget = 2 * mebp_cost + w - 1;
     assert!(
-        budget >= 2 * mesp_cost,
+        budget >= 2 * mesp_cost + w,
         "premise: ≥2 MeSP jobs ({mesp_cost} B each) must fit where one \
          MeBP ({mebp_cost} B) does"
     );
@@ -96,35 +107,44 @@ fn one_mebp_budget_serializes_mebp_but_overlaps_mesp() {
 fn f32_serializing_budget_overlaps_q4_jobs() {
     // The concurrency headroom the q4 path buys: a budget sized to admit
     // exactly one f32 MeSP job must overlap ≥2 q4 MeSP jobs, because
-    // admission charges the packed resident-weight footprint.
+    // admission charges the packed resident-weight footprint. Jobs get
+    // PRIVATE bases (distinct model seeds) so the weight class is paid
+    // per job, isolating the quantization effect from weight sharing.
+    let private = |base: &TrainConfig, n: usize| {
+        let mut jobs = grid(base, &[Method::Mesp], n);
+        for j in &mut jobs {
+            j.spec.model_seed = Some(0x5eed_0000 + j.id as u64);
+        }
+        jobs
+    };
     let base_f32 = base(30);
     let mut base_q4 = base_f32.clone();
     base_q4.quant = QuantMode::Q4;
-    let f32_cost = cost(&base_f32, Method::Mesp);
-    let q4_cost = cost(&base_q4, Method::Mesp);
-    assert!(q4_cost < f32_cost, "q4 job must cost less than its f32 twin");
+    // Full per-job footprint: activation cost + this job's private base.
+    let f32_full = cost(&base_f32, Method::Mesp) + wbytes(&base_f32);
+    let q4_full = cost(&base_q4, Method::Mesp) + wbytes(&base_q4);
+    assert!(q4_full < f32_full, "q4 job must cost less than its f32 twin");
     let dims = presets::compiled("toy").unwrap();
     let saved = resident_weight_bytes(&dims, QuantMode::F32)
         - resident_weight_bytes(&dims, QuantMode::Q4);
     // The charge delta is the resident saving minus the q4 oracle-dequant
     // scratch term — the bulk of the saving must survive.
     assert!(
-        f32_cost - q4_cost >= saved / 2,
+        f32_full - q4_full >= saved / 2,
         "cost delta {} must reflect the resident-weight saving {}",
-        f32_cost - q4_cost,
+        f32_full - q4_full,
         saved
     );
 
     // One-f32-job budget: f32 MeSP jobs serialize...
-    let budget = 2 * f32_cost - 1;
+    let budget = 2 * f32_full - 1;
     let opts = FleetOptions {
         budget_bytes: budget,
         workers: 4,
         ..FleetOptions::default()
     };
     let report =
-        Scheduler::run(&opts, &base_f32, grid(&base_f32, &[Method::Mesp], 4))
-            .unwrap();
+        Scheduler::run(&opts, &base_f32, private(&base_f32, 4)).unwrap();
     assert_eq!(report.failed(), 0, "{}", report.render());
     assert_eq!(
         report.peak_concurrent, 1,
@@ -133,10 +153,9 @@ fn f32_serializing_budget_overlaps_q4_jobs() {
     );
 
     // ...while q4 MeSP jobs overlap under the SAME budget.
-    assert!(2 * q4_cost <= budget, "premise: two q4 jobs must fit");
+    assert!(2 * q4_full <= budget, "premise: two q4 jobs must fit");
     let report =
-        Scheduler::run(&opts, &base_q4, grid(&base_q4, &[Method::Mesp], 6))
-            .unwrap();
+        Scheduler::run(&opts, &base_q4, private(&base_q4, 6)).unwrap();
     assert_eq!(report.failed(), 0, "{}", report.render());
     assert!(
         report.peak_concurrent >= 2,
@@ -161,7 +180,8 @@ fn f32_serializing_budget_overlaps_q4_jobs() {
 #[test]
 fn q4_resident_tag_matches_quantized_bytes() {
     // The admission charge is honest: a live q4 session's tracked
-    // `weights:device` tag equals the analytical packed resident term.
+    // `weights:shared` tag (the cached host copy) equals the analytical
+    // packed resident term.
     let cfg = TrainConfig {
         config: "toy".into(),
         method: Method::Mesp,
@@ -169,9 +189,11 @@ fn q4_resident_tag_matches_quantized_bytes() {
         log_every: usize::MAX,
         ..Default::default()
     };
-    let mut sess = mesp::coordinator::TrainSession::new(cfg).unwrap();
+    let mut sess = mesp::coordinator::TrainSession::builder(cfg)
+        .build()
+        .unwrap();
     sess.run(1).unwrap();
-    let tag = sess.tracker.tag_bytes("weights:device");
+    let tag = sess.tracker.tag_bytes("weights:shared");
     let dims = presets::compiled("toy").unwrap();
     assert_eq!(tag, resident_weight_bytes(&dims, QuantMode::Q4));
 }
@@ -188,8 +210,12 @@ fn predicted_cost_bounds_measured_session_peak() {
         for method in Method::ALL {
             let mut cfg = base.clone();
             cfg.method = method;
-            let predicted = cost(&base, method);
-            let mut sess = mesp::coordinator::TrainSession::new(cfg).unwrap();
+            // A standalone session's tracker also holds the cached base
+            // weights, so the bound is cost + weight class.
+            let predicted = cost(&base, method) + wbytes(&base);
+            let mut sess = mesp::coordinator::TrainSession::builder(cfg)
+                .build()
+                .unwrap();
             let summary = sess.run(3).unwrap();
             // max per-step peak; construction transients are below it
             let measured = summary.peak_bytes.max(sess.tracker.peak());
@@ -237,8 +263,8 @@ fn outcomes_are_in_job_id_order_with_distinct_seeds() {
 fn oversized_job_fails_without_sinking_the_fleet() {
     let base = base(2);
     let mesp_cost = cost(&base, Method::Mesp);
-    // Budget fits a MeSP job but not a MeBP job.
-    let budget = (mesp_cost + cost(&base, Method::Mebp)) / 2;
+    // Budget fits the shared base plus a MeSP job but not a MeBP job.
+    let budget = (mesp_cost + cost(&base, Method::Mebp)) / 2 + wbytes(&base);
     let opts = FleetOptions {
         budget_bytes: budget,
         workers: 2,
@@ -267,7 +293,8 @@ fn priority_9_job_preempts_priority_1_job_under_one_job_budget() {
     // done. Everything completes; nobody is killed.
     let base = base(200);
     let one_job = cost(&base, Method::Mesp);
-    let budget = 2 * one_job - 1;
+    // Shared base + one job's cost fits; a second job's cost does not.
+    let budget = one_job + one_job / 2 + wbytes(&base);
     let dir = std::env::temp_dir().join("mesp-test-fleet-preempt");
     let _ = std::fs::remove_dir_all(&dir);
 
@@ -321,12 +348,14 @@ fn budget_schedule_shrink_parks_one_job_and_resume_stays_bitwise() {
     let steps = 30;
     let base = base(steps);
     let one_job = cost(&base, Method::Mesp);
-    let shrunk = one_job + one_job / 2;
+    // Both jobs share one base: start with room for base + two jobs,
+    // shrink to base + one and a half.
+    let shrunk = one_job + one_job / 2 + wbytes(&base);
     let dir = std::env::temp_dir().join("mesp-test-fleet-shrink");
     let _ = std::fs::remove_dir_all(&dir);
 
     let opts = FleetOptions {
-        budget_bytes: 2 * one_job,
+        budget_bytes: 2 * one_job + wbytes(&base),
         workers: 2,
         snapshot_dir: Some(dir.clone()),
         budget_schedule: vec![BudgetChange {
@@ -353,7 +382,8 @@ fn budget_schedule_shrink_parks_one_job_and_resume_stays_bitwise() {
         assert!(r.summary.healthy(), "job {} diverged", o.job.id);
         // Standalone uninterrupted twin of the same spec.
         let cfg = o.job.spec.to_train_config(&base);
-        let mut solo = mesp::coordinator::TrainSession::new(cfg).unwrap();
+        let mut solo =
+            mesp::coordinator::TrainSession::builder(cfg).build().unwrap();
         solo.run(steps).unwrap();
         let solo_losses = solo.losses();
         assert_eq!(
@@ -377,7 +407,9 @@ fn plain_fleets_never_preempt() {
     // No --preempt, no schedule: the preemption counters stay zero even
     // under a tight budget (jobs serialize instead).
     let base = base(3);
-    let budget = 2 * cost(&base, Method::Mesp) - 1;
+    let one_job = cost(&base, Method::Mesp);
+    // Shared base + one job fits; a second job's cost does not.
+    let budget = one_job + one_job / 2 + wbytes(&base);
     let opts = FleetOptions {
         budget_bytes: budget,
         workers: 3,
@@ -419,7 +451,9 @@ fn fleet_aggregate_tracker_equals_sum_of_sessions() {
             log_every: usize::MAX,
             ..Default::default()
         };
-        mesp::coordinator::TrainSession::with_tracker(cfg, aggregate.child())
+        mesp::coordinator::TrainSession::builder(cfg)
+            .tracker(aggregate.child())
+            .build()
             .unwrap()
     };
     let mut a = mk(Method::Mesp);

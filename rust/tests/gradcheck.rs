@@ -10,7 +10,7 @@
 use mesp::config::{presets, KernelKind, Method, QuantMode, TrainConfig};
 use mesp::coordinator::TrainSession;
 use mesp::memory::MemoryTracker;
-use mesp::model::{quant, ModelState};
+use mesp::model::{quant, ModelSpec};
 use mesp::runtime::{Arg, Backend, KernelOptions, ReferenceBackend};
 use mesp::tensor::HostTensor;
 use mesp::util::{stats, Rng};
@@ -27,7 +27,7 @@ fn base(config: &str, seed: u64) -> TrainConfig {
 fn grads_for(config: &str, method: Method, seed: u64) -> Vec<Vec<f32>> {
     let mut cfg = base(config, seed);
     cfg.method = method;
-    let mut sess = TrainSession::new(cfg).expect("session");
+    let mut sess = TrainSession::builder(cfg).build().expect("session");
     let (batch, _g) = sess.loader.next();
     sess.engine.gradients(&batch).expect("gradients")
 }
@@ -103,7 +103,7 @@ fn q4_gradient_parity_via_session_api() {
         let mut cfg = base("toy", 13);
         cfg.method = method;
         cfg.quant = QuantMode::Q4;
-        let mut sess = TrainSession::new(cfg).expect("session");
+        let mut sess = TrainSession::builder(cfg).build().expect("session");
         let (batch, _g) = sess.loader.next();
         sess.engine.gradients(&batch).expect("gradients")
     };
@@ -128,14 +128,14 @@ fn q4_finite_difference_gradcheck_da_db() {
         tracker.clone(),
         KernelOptions { kind: KernelKind::Tiled, threads: 1 },
     );
-    let model = ModelState::init_with_quant(&dims, 11, &tracker, QuantMode::Q4);
-    let qblock: Vec<HostTensor> =
-        model.blocks[0].tensors.iter().map(|t| t.value.clone()).collect();
+    let (model, adapters) =
+        ModelSpec::new(dims.clone(), 11, QuantMode::Q4).build(&tracker);
+    let qblock: Vec<HostTensor> = model.block_tensors(0).to_vec();
     // Host-dequantized twin of the packed block (the oracle's weights).
     let deq_frozen = quant::dequantize_block(&dims, &qblock);
     // Random nonzero LoRA state (a zero B would zero out every dA).
     let mut rng = Rng::new(99);
-    let lora: Vec<HostTensor> = model.lora[0]
+    let lora: Vec<HostTensor> = adapters.lora[0]
         .tensors
         .iter()
         .map(|t| HostTensor::randn(&t.shape, 0.1, &mut rng))
@@ -224,9 +224,9 @@ fn training_step_changes_params_deterministically() {
         let mut cfg = base("toy", seed);
         cfg.method = Method::Mesp;
         cfg.lr = 1e-2;
-        let mut sess = TrainSession::new(cfg).unwrap();
+        let mut sess = TrainSession::builder(cfg).build().unwrap();
         sess.run(1).unwrap();
-        sess.engine.ctx().model.lora[0].flatten()
+        sess.engine.ctx().adapters.lora[0].flatten()
     };
     let a = run(5);
     let b = run(5);

@@ -13,11 +13,13 @@
 //! 4. FLOP accounting: the measured per-artifact counter equals the
 //!    analytical inventory `mesp inspect` reports.
 
-use mesp::config::{presets, KernelKind, Method, OptimizerKind, TrainConfig};
+use mesp::config::{
+    presets, KernelKind, Method, OptimizerKind, QuantMode, TrainConfig,
+};
 use mesp::coordinator::TrainSession;
 use mesp::memory::model as memmodel;
 use mesp::memory::{MemoryTracker, Widths};
-use mesp::model::ModelState;
+use mesp::model::ModelSpec;
 use mesp::runtime::{Arg, Backend, KernelOptions, Kernels, ReferenceBackend};
 use mesp::tensor::HostTensor;
 use mesp::util::Rng;
@@ -108,7 +110,7 @@ fn grads_for(method: Method, kernel: KernelKind, seed: u64) -> Vec<Vec<f32>> {
         log_every: usize::MAX,
         ..Default::default()
     };
-    let mut sess = TrainSession::new(cfg).expect("session");
+    let mut sess = TrainSession::builder(cfg).build().expect("session");
     let (batch, _g) = sess.loader.next();
     sess.engine.gradients(&batch).expect("gradients")
 }
@@ -151,7 +153,7 @@ fn step_tracks_scratch_and_model_bounds_it() {
             log_every: usize::MAX,
             ..Default::default()
         };
-        let mut sess = TrainSession::new(cfg).unwrap();
+        let mut sess = TrainSession::builder(cfg).build().unwrap();
         sess.run(2).unwrap();
         let measured = sess.tracker.tag_peak("scratch");
         assert!(
@@ -178,12 +180,12 @@ fn measured_flops_equal_analytical_inventory() {
     let dims = presets::compiled("toy").unwrap();
     let tracker = MemoryTracker::new();
     let be = ReferenceBackend::new(dims.clone(), tracker.clone());
-    let model = ModelState::init(&dims, 17, &tracker);
+    let (model, adapters) =
+        ModelSpec::new(dims.clone(), 17, QuantMode::F32).build(&tracker);
     let mut rng = Rng::new(23);
     let x = HostTensor::randn(&[dims.batch, dims.seq, dims.d_model], 0.5, &mut rng);
-    let frozen: Vec<HostTensor> =
-        model.blocks[0].tensors.iter().map(|t| t.value.clone()).collect();
-    let lora: Vec<HostTensor> = model.lora[0]
+    let frozen: Vec<HostTensor> = model.block_tensors(0).to_vec();
+    let lora: Vec<HostTensor> = adapters.lora[0]
         .tensors
         .iter()
         .map(|t| HostTensor::randn(&t.shape, 0.1, &mut rng))
@@ -230,7 +232,7 @@ fn session_exec_stats_report_flops() {
         log_every: usize::MAX,
         ..Default::default()
     };
-    let mut sess = TrainSession::new(cfg).unwrap();
+    let mut sess = TrainSession::builder(cfg).build().unwrap();
     sess.run(1).unwrap();
     let stats = sess.engine.ctx().rt.exec_stats();
     assert!(!stats.is_empty());

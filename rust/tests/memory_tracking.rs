@@ -15,7 +15,7 @@ fn measured_peak(config: &str, method: Method) -> (u64, u64) {
         log_every: usize::MAX,
         ..Default::default()
     };
-    let mut sess = TrainSession::new(cfg).unwrap();
+    let mut sess = TrainSession::builder(cfg).build().unwrap();
     // warm step compiles executables; measure the second step
     sess.run(2).unwrap();
     let s = &sess.metrics.history[1];
@@ -59,7 +59,7 @@ fn live_after_step_is_params_only() {
         log_every: usize::MAX,
         ..Default::default()
     };
-    let mut sess = TrainSession::new(cfg).unwrap();
+    let mut sess = TrainSession::builder(cfg).build().unwrap();
     let baseline = sess.tracker.live(); // weights + params (+ queued batches)
     sess.run(3).unwrap();
     let after = sess.metrics.history[2].live_after;
@@ -76,7 +76,7 @@ fn analytical_model_consistent_with_tracker_ordering() {
     // predicts the same ordering the tracker measures.
     let cfg = TrainConfig { config: "toy".into(), log_every: usize::MAX,
                             ..Default::default() };
-    let sess = TrainSession::new(cfg).unwrap();
+    let sess = TrainSession::builder(cfg).build().unwrap();
     let dims = sess.engine.ctx().rt.dims().clone();
     let w = Widths::tracked();
     let opt = mesp::config::OptimizerKind::Sgd;
@@ -216,7 +216,7 @@ fn mezo_holds_no_checkpoints() {
         log_every: usize::MAX,
         ..Default::default()
     };
-    let mut sess = TrainSession::new(cfg).unwrap();
+    let mut sess = TrainSession::builder(cfg).build().unwrap();
     sess.run(1).unwrap();
     for (tag, bytes) in sess.tracker.breakdown() {
         assert!(

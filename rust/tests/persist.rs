@@ -48,7 +48,7 @@ fn tmp(name: &str) -> PathBuf {
 fn lora_bits(sess: &TrainSession) -> Vec<u32> {
     sess.engine
         .ctx()
-        .model
+        .adapters
         .lora
         .iter()
         .flat_map(|l| l.tensors.iter())
@@ -73,13 +73,13 @@ fn resume_is_bitwise_identical_across_methods_quants_kernels() {
                 let base = cfg(method, quant, kernel, total);
 
                 // Uninterrupted reference run.
-                let mut full = TrainSession::new(base.clone()).unwrap();
+                let mut full = TrainSession::builder(base.clone()).build().unwrap();
                 full.run(total).unwrap();
                 let full_losses = full.losses();
                 let full_bits = lora_bits(&full);
 
                 // Suspend at k...
-                let mut part = TrainSession::new(base.clone()).unwrap();
+                let mut part = TrainSession::builder(base.clone()).build().unwrap();
                 part.run(suspend_at).unwrap();
                 let early_losses = part.losses();
                 let path = dir.join(format!(
@@ -90,7 +90,7 @@ fn resume_is_bitwise_identical_across_methods_quants_kernels() {
                 drop(part);
 
                 // ...resume and finish.
-                let mut resumed = TrainSession::restore(&base, &path).unwrap();
+                let mut resumed = TrainSession::builder(base.clone()).resume_from(&path).build().unwrap();
                 assert_eq!(resumed.steps_done(), suspend_at, "{label}");
                 resumed.run(total - suspend_at).unwrap();
                 let late_losses = resumed.losses();
@@ -122,12 +122,12 @@ fn resume_is_bitwise_identical_across_thread_counts() {
     let dir = tmp("threads");
     let mut base = cfg(Method::Mesp, QuantMode::F32, KernelKind::Parallel, 4);
     base.threads = 1;
-    let mut full = TrainSession::new(base.clone()).unwrap();
+    let mut full = TrainSession::builder(base.clone()).build().unwrap();
     full.run(4).unwrap();
 
     let mut three = base.clone();
     three.threads = 3;
-    let mut part = TrainSession::new(three).unwrap();
+    let mut part = TrainSession::builder(three).build().unwrap();
     part.run(2).unwrap();
     let path = dir.join("threads.snap");
     part.save_snapshot(&path).unwrap();
@@ -135,7 +135,8 @@ fn resume_is_bitwise_identical_across_thread_counts() {
 
     let mut two = base.clone();
     two.threads = 2;
-    let mut resumed = TrainSession::restore(&two, &path).unwrap();
+    let mut resumed =
+        TrainSession::builder(two).resume_from(&path).build().unwrap();
     resumed.run(2).unwrap();
     assert_eq!(
         resumed.losses().last().unwrap().to_bits(),
@@ -159,15 +160,15 @@ fn mezo_resume_replays_the_same_perturbation_stream() {
         log_every: usize::MAX,
         ..Default::default()
     };
-    let mut full = TrainSession::new(base.clone()).unwrap();
+    let mut full = TrainSession::builder(base.clone()).build().unwrap();
     full.run(4).unwrap();
 
-    let mut part = TrainSession::new(base.clone()).unwrap();
+    let mut part = TrainSession::builder(base.clone()).build().unwrap();
     part.run(2).unwrap();
     let path = dir.join("mezo.snap");
     part.save_snapshot(&path).unwrap();
     drop(part);
-    let mut resumed = TrainSession::restore(&base, &path).unwrap();
+    let mut resumed = TrainSession::builder(base.clone()).resume_from(&path).build().unwrap();
     resumed.run(2).unwrap();
     assert_eq!(
         loss_bits(&resumed.losses()),
@@ -182,17 +183,17 @@ fn mezo_resume_replays_the_same_perturbation_stream() {
 fn repeated_suspend_resume_cycles_stay_bitwise() {
     let dir = tmp("cycles");
     let base = cfg(Method::Mesp, QuantMode::Q4, KernelKind::Tiled, 4);
-    let mut full = TrainSession::new(base.clone()).unwrap();
+    let mut full = TrainSession::builder(base.clone()).build().unwrap();
     full.run(4).unwrap();
 
     // 1 step → park → 1 step → park → 2 steps.
-    let mut sess = TrainSession::new(base.clone()).unwrap();
+    let mut sess = TrainSession::builder(base.clone()).build().unwrap();
     for k in 1..=2u32 {
         sess.run(1).unwrap();
         let path = dir.join(format!("cycle-{k}.snap"));
         sess.save_snapshot(&path).unwrap();
         drop(sess);
-        sess = TrainSession::restore(&base, &path).unwrap();
+        sess = TrainSession::builder(base.clone()).resume_from(&path).build().unwrap();
         assert_eq!(sess.steps_done(), k as usize);
         assert_eq!(sess.batches_consumed(), k as u64);
     }
@@ -215,7 +216,7 @@ fn snapshot_file_size_matches_the_analytical_model() {
     ] {
         let mut base = cfg(Method::Mesp, QuantMode::F32, KernelKind::Tiled, 1);
         base.optimizer = opt;
-        let mut sess = TrainSession::new(base).unwrap();
+        let mut sess = TrainSession::builder(base).build().unwrap();
         sess.run(1).unwrap();
         let path = dir.join(format!("{name}.snap"));
         let actual = sess.save_snapshot(&path).unwrap();
@@ -238,7 +239,7 @@ fn snapshot_file_size_matches_the_analytical_model() {
 fn corrupted_truncated_and_version_skewed_files_are_rejected() {
     let dir = tmp("reject");
     let base = cfg(Method::Mesp, QuantMode::F32, KernelKind::Tiled, 2);
-    let mut sess = TrainSession::new(base.clone()).unwrap();
+    let mut sess = TrainSession::builder(base.clone()).build().unwrap();
     sess.run(1).unwrap();
     let path = dir.join("good.snap");
     sess.save_snapshot(&path).unwrap();
@@ -248,7 +249,9 @@ fn corrupted_truncated_and_version_skewed_files_are_rejected() {
     let expect_err = |name: &str, bytes: &[u8], needle: &str| {
         let p = dir.join(name);
         std::fs::write(&p, bytes).unwrap();
-        let err = TrainSession::restore(&base, &p)
+        let err = TrainSession::builder(base.clone())
+            .resume_from(&p)
+            .build()
             .err()
             .unwrap_or_else(|| panic!("{name} must be rejected"))
             .to_string();
@@ -278,7 +281,9 @@ fn corrupted_truncated_and_version_skewed_files_are_rejected() {
     );
 
     // missing file
-    let err = TrainSession::restore(&base, &dir.join("nope.snap"))
+    let err = TrainSession::builder(base.clone())
+        .resume_from(dir.join("nope.snap"))
+        .build()
         .unwrap_err()
         .to_string();
     assert!(err.contains("read snapshot"), "{err}");
@@ -290,7 +295,7 @@ fn corrupted_truncated_and_version_skewed_files_are_rejected() {
 fn weight_fingerprint_and_rng_stream_mismatches_refuse_to_resume() {
     let dir = tmp("mismatch");
     let base = cfg(Method::Mesp, QuantMode::F32, KernelKind::Tiled, 2);
-    let mut sess = TrainSession::new(base.clone()).unwrap();
+    let mut sess = TrainSession::builder(base.clone()).build().unwrap();
     sess.run(1).unwrap();
     let snap = sess.snapshot();
     drop(sess);
@@ -301,7 +306,11 @@ fn weight_fingerprint_and_rng_stream_mismatches_refuse_to_resume() {
     bad.weights_fingerprint ^= 1;
     let p = dir.join("fp.snap");
     bad.save(&p).unwrap();
-    let err = TrainSession::restore(&base, &p).unwrap_err().to_string();
+    let err = TrainSession::builder(base.clone())
+        .resume_from(&p)
+        .build()
+        .unwrap_err()
+        .to_string();
     assert!(err.contains("fingerprint"), "{err}");
 
     // Tampered seed: the stored derive-stream seeds no longer match the
@@ -310,7 +319,11 @@ fn weight_fingerprint_and_rng_stream_mismatches_refuse_to_resume() {
     bad.seed ^= 0xff;
     let p = dir.join("seed.snap");
     bad.save(&p).unwrap();
-    let err = TrainSession::restore(&base, &p).unwrap_err().to_string();
+    let err = TrainSession::builder(base.clone())
+        .resume_from(&p)
+        .build()
+        .unwrap_err()
+        .to_string();
     assert!(err.contains("RNG stream"), "{err}");
 
     // Tampered shape: adapter tensors from a different architecture.
@@ -318,13 +331,17 @@ fn weight_fingerprint_and_rng_stream_mismatches_refuse_to_resume() {
     bad.lora.pop();
     let p = dir.join("shape.snap");
     bad.save(&p).unwrap();
-    let err = TrainSession::restore(&base, &p).unwrap_err().to_string();
+    let err = TrainSession::builder(base.clone())
+        .resume_from(&p)
+        .build()
+        .unwrap_err()
+        .to_string();
     assert!(err.contains("LoRA layers"), "{err}");
 
     // The untampered snapshot still restores fine.
     let p = dir.join("good.snap");
     snap.save(&p).unwrap();
-    TrainSession::restore(&base, &p).unwrap();
+    TrainSession::builder(base).resume_from(&p).build().unwrap();
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -336,14 +353,17 @@ fn restore_adopts_snapshot_identity_over_flag_defaults() {
     // documented in USAGE).
     let dir = tmp("identity");
     let base = cfg(Method::StoreH, QuantMode::Q4, KernelKind::Parallel, 2);
-    let mut sess = TrainSession::new(base).unwrap();
+    let mut sess = TrainSession::builder(base).build().unwrap();
     sess.run(1).unwrap();
     let path = dir.join("id.snap");
     sess.save_snapshot(&path).unwrap();
     drop(sess);
 
     let defaults = TrainConfig { log_every: usize::MAX, ..Default::default() };
-    let resumed = TrainSession::restore(&defaults, &path).unwrap();
+    let resumed = TrainSession::builder(defaults)
+        .resume_from(&path)
+        .build()
+        .unwrap();
     assert_eq!(resumed.cfg.method, Method::StoreH);
     assert_eq!(resumed.cfg.quant, QuantMode::Q4);
     assert_eq!(resumed.cfg.seed, 7);
@@ -359,7 +379,7 @@ fn snapshot_roundtrips_through_encode_decode_at_session_scale() {
     // Session-produced snapshots (real adapter data, q4 config) survive
     // encode → decode bit-for-bit.
     let base = cfg(Method::Mesp, QuantMode::Q4, KernelKind::Tiled, 2);
-    let mut sess = TrainSession::new(base).unwrap();
+    let mut sess = TrainSession::builder(base).build().unwrap();
     sess.run(2).unwrap();
     let snap = sess.snapshot();
     let back = Snapshot::decode(&snap.encode()).unwrap();

@@ -17,7 +17,7 @@ use std::sync::Arc;
 use mesp::config::{presets, KernelKind, Method, QuantMode, TrainConfig};
 use mesp::coordinator::TrainSession;
 use mesp::memory::{resident_weight_bytes, MemoryTracker};
-use mesp::model::{quant, ModelState};
+use mesp::model::{quant, ModelSpec};
 use mesp::runtime::{Arg, Backend, KernelOptions, ReferenceBackend};
 use mesp::tensor::HostTensor;
 use mesp::util::Rng;
@@ -37,7 +37,7 @@ fn q4_cfg(config: &str, method: Method, kernel: KernelKind, threads: usize,
 }
 
 fn grads(cfg: TrainConfig) -> Vec<Vec<f32>> {
-    let mut sess = TrainSession::new(cfg).expect("session");
+    let mut sess = TrainSession::builder(cfg).build().expect("session");
     let (batch, _g) = sess.loader.next();
     sess.engine.gradients(&batch).expect("gradients")
 }
@@ -54,11 +54,12 @@ fn q4_fused_dequant_matches_host_dequant_bitwise() {
         ));
         // Same seed for both models: the q4 one holds the packed form of
         // exactly the weights the f32 one holds.
-        let qm = ModelState::init_with_quant(&dims, 3, &tracker, QuantMode::Q4);
+        let (qm, adapters) =
+            ModelSpec::new(dims.clone(), 3, QuantMode::Q4).build(&tracker);
         let mut rng = Rng::new(7);
         let x = HostTensor::randn(&[dims.batch, dims.seq, dims.d_model], 0.5,
                                   &mut rng);
-        let lora: Vec<HostTensor> = qm.lora[0]
+        let lora: Vec<HostTensor> = adapters.lora[0]
             .tensors
             .iter()
             .map(|t| HostTensor::randn(&t.shape, 0.1, &mut rng))
@@ -66,8 +67,8 @@ fn q4_fused_dequant_matches_host_dequant_bitwise() {
 
         // q4 forward: x, then the block's [ln1, ln2, (packed, scales)×7].
         let mut q_args: Vec<Arg> = vec![Arg::Host(&x)];
-        for t in &qm.blocks[0].tensors {
-            q_args.push(Arg::Host(&t.value));
+        for t in qm.block_tensors(0) {
+            q_args.push(Arg::Host(t));
         }
         for t in &lora {
             q_args.push(Arg::Host(t));
@@ -76,9 +77,7 @@ fn q4_fused_dequant_matches_host_dequant_bitwise() {
             .into_iter().next().unwrap();
 
         // Oracle: the plain f32 forward through host-dequantized weights.
-        let qblock: Vec<HostTensor> =
-            qm.blocks[0].tensors.iter().map(|t| t.value.clone()).collect();
-        let deq_frozen = quant::dequantize_block(&dims, &qblock);
+        let deq_frozen = quant::dequantize_block(&dims, qm.block_tensors(0));
         let mut f_args: Vec<Arg> = vec![Arg::Host(&x)];
         for t in &deq_frozen {
             f_args.push(Arg::Host(t));
@@ -148,7 +147,7 @@ fn q4_quantization_actually_changes_the_forward() {
 
 #[test]
 fn q4_resident_weights_under_40_percent_of_f32() {
-    let device_bytes = |quant: QuantMode| -> u64 {
+    let resident = |quant: QuantMode| -> u64 {
         let cfg = TrainConfig {
             config: "toy".into(),
             method: Method::Mesp,
@@ -156,12 +155,12 @@ fn q4_resident_weights_under_40_percent_of_f32() {
             log_every: usize::MAX,
             ..Default::default()
         };
-        let mut sess = TrainSession::new(cfg).unwrap();
+        let mut sess = TrainSession::builder(cfg).build().unwrap();
         sess.run(1).unwrap();
-        sess.tracker.tag_bytes("weights:device")
+        sess.tracker.tag_bytes("weights:shared")
     };
-    let f32_resident = device_bytes(QuantMode::F32);
-    let q4_resident = device_bytes(QuantMode::Q4);
+    let f32_resident = resident(QuantMode::F32);
+    let q4_resident = resident(QuantMode::Q4);
     assert!(
         q4_resident * 10 < f32_resident * 4,
         "q4 residents {q4_resident} B are not < 40% of f32 {f32_resident} B"

@@ -10,10 +10,10 @@
 
 use std::sync::Arc;
 
-use mesp::config::{presets, Method, TrainConfig};
+use mesp::config::{presets, Method, QuantMode, TrainConfig};
 use mesp::coordinator::TrainSession;
 use mesp::memory::MemoryTracker;
-use mesp::model::ModelState;
+use mesp::model::ModelSpec;
 use mesp::runtime::{Arg, Backend, ReferenceBackend};
 use mesp::tensor::HostTensor;
 use mesp::util::{stats, Rng};
@@ -26,7 +26,7 @@ fn grads_for(method: Method, seed: u64) -> Vec<Vec<f32>> {
         log_every: usize::MAX,
         ..Default::default()
     };
-    let mut sess = TrainSession::new(cfg).expect("session");
+    let mut sess = TrainSession::builder(cfg).build().expect("session");
     let (batch, _g) = sess.loader.next();
     sess.engine.gradients(&batch).expect("gradients")
 }
@@ -73,13 +73,13 @@ impl Probe {
         let dims = presets::compiled("toy").unwrap();
         let rt: Arc<dyn Backend> =
             Arc::new(ReferenceBackend::new(dims.clone(), tracker.clone()));
-        let model = ModelState::init(&dims, 11, &tracker);
-        let frozen: Vec<HostTensor> =
-            model.blocks[0].tensors.iter().map(|t| t.value.clone()).collect();
+        let (model, adapters) =
+            ModelSpec::new(dims.clone(), 11, QuantMode::F32).build(&tracker);
+        let frozen: Vec<HostTensor> = model.block_tensors(0).to_vec();
         // LoRA B matrices init to zero, which would zero out the dA
         // gradients; give every adapter tensor random values instead.
         let mut rng = Rng::new(99);
-        let lora: Vec<HostTensor> = model.lora[0]
+        let lora: Vec<HostTensor> = adapters.lora[0]
             .tensors
             .iter()
             .map(|t| HostTensor::randn(&t.shape, 0.1, &mut rng))

@@ -1,0 +1,267 @@
+//! Shared base-weight cache integration: the PR-6 economics end to end.
+//! A fleet whose budget is sized for TWO private-weight jobs overlaps
+//! ten-plus jobs that share one cached frozen base; the cache evicts a
+//! base when its last holder drops and rebuilds it bit-identically on
+//! demand; and a snapshot restore re-attaches to the live cached base —
+//! charged zero extra bytes — while staying bitwise-equal to an
+//! uninterrupted run, in both f32 and q4 resident precision.
+
+use std::sync::Arc;
+
+use mesp::config::{Method, QuantMode, TrainConfig};
+use mesp::coordinator::TrainSession;
+use mesp::fleet::{grid, job_cost_bytes, job_weight_class, FleetOptions, JobSpec, Scheduler};
+use mesp::memory::MemoryTracker;
+use mesp::model::WeightCache;
+
+/// The weight-dominated demo config: ~128 MB frozen base over a per-job
+/// activation cost of a few MB (see `presets::basebound`).
+fn basebound(steps: usize) -> TrainConfig {
+    TrainConfig {
+        config: "basebound".into(),
+        method: Method::Mesp,
+        steps,
+        log_every: usize::MAX,
+        ..Default::default()
+    }
+}
+
+fn toy(quant: QuantMode) -> TrainConfig {
+    TrainConfig {
+        config: "toy".into(),
+        method: Method::Mesp,
+        quant,
+        log_every: usize::MAX,
+        ..Default::default()
+    }
+}
+
+fn lora_bits(sess: &TrainSession) -> Vec<u32> {
+    sess.engine
+        .ctx()
+        .adapters
+        .lora
+        .iter()
+        .flat_map(|l| l.tensors.iter())
+        .flat_map(|t| t.as_f32().iter().map(|x| x.to_bits()))
+        .collect()
+}
+
+#[test]
+fn two_private_job_budget_overlaps_ten_shared_jobs() {
+    // The headline scenario: all grid jobs pin the base model stream, so
+    // they form ONE weight class — the budget pays the ~128 MB base once
+    // and each extra job costs only its activations.
+    let base = basebound(4);
+    let spec = JobSpec::from_base(&base);
+    let cost = job_cost_bytes(&spec).unwrap();
+    let w = job_weight_class(&spec).unwrap().bytes;
+    let n = 12;
+    let budget = 2 * (cost + w);
+    // The acceptance floor: at least TEN shared jobs must fit the budget
+    // that two private-weight jobs would exhaust. (All 12 fit on typical
+    // machines; the per-core packing term can shave the tail on very wide
+    // ones, which the ≥10 assertions below absorb.)
+    assert!(
+        10 * cost + w <= budget,
+        "premise: 10 shared jobs ({cost} B each + one {w} B base) must fit \
+         a two-private-job budget {budget} B — basebound is meant to be \
+         weight-dominated"
+    );
+
+    let jobs = grid(&base, &[Method::Mesp], n);
+    let opts = FleetOptions {
+        budget_bytes: budget,
+        workers: n,
+        ..FleetOptions::default()
+    };
+    let report = Scheduler::run(&opts, &base, jobs).unwrap();
+    assert_eq!(report.failed(), 0, "{}", report.render());
+    assert!(
+        report.peak_concurrent >= 10,
+        "a two-private-job budget must overlap ≥10 shared-base jobs, got \
+         {}\n{}",
+        report.peak_concurrent,
+        report.render()
+    );
+    assert!(
+        report.aggregate_peak <= budget,
+        "aggregate tracked peak {} exceeds budget {}",
+        report.aggregate_peak,
+        budget
+    );
+    assert_eq!(
+        report.weight_shared_admissions,
+        n - 1,
+        "first admission pays the base, the other {} attach free\n{}",
+        n - 1,
+        report.render()
+    );
+    assert_eq!(
+        report.shared_weight_peak_bytes,
+        w,
+        "exactly one resident copy of the shared base\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn same_budget_admits_only_two_private_weight_jobs() {
+    // Contrast run: identical budget, but each job pins its OWN model
+    // seed — three distinct weight classes, each paying the full base.
+    let base = basebound(2);
+    let spec = JobSpec::from_base(&base);
+    let cost = job_cost_bytes(&spec).unwrap();
+    let w = job_weight_class(&spec).unwrap().bytes;
+    let budget = 2 * (cost + w);
+
+    let mut jobs = grid(&base, &[Method::Mesp], 3);
+    for j in &mut jobs {
+        j.spec.model_seed = Some(0xba5e_0000 + j.id as u64);
+    }
+    let opts = FleetOptions {
+        budget_bytes: budget,
+        workers: 3,
+        ..FleetOptions::default()
+    };
+    let report = Scheduler::run(&opts, &base, jobs).unwrap();
+    assert_eq!(report.failed(), 0, "{}", report.render());
+    assert_eq!(
+        report.peak_concurrent,
+        2,
+        "private-weight jobs must pay the base each — only two fit\n{}",
+        report.render()
+    );
+    assert_eq!(report.weight_shared_admissions, 0, "nothing to attach to");
+    assert!(
+        report.shared_weight_peak_bytes >= 2 * w,
+        "two private bases resident at the peak\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn cache_evicts_on_last_drop_and_rebuilds() {
+    let tracker = MemoryTracker::new();
+    let cache = WeightCache::new(tracker.clone());
+    let cfg = toy(QuantMode::F32);
+
+    let s1 = TrainSession::builder(cfg.clone())
+        .weight_cache(cache.clone())
+        .build()
+        .unwrap();
+    let charged = tracker.tag_bytes("weights:shared");
+    assert!(charged > 0, "building the base must charge the cache tracker");
+    assert_eq!(cache.live_entries(), 1);
+
+    // Second same-base session: shares the Arc, charges nothing.
+    let s2 = TrainSession::builder(cfg.clone())
+        .weight_cache(cache.clone())
+        .build()
+        .unwrap();
+    assert!(
+        Arc::ptr_eq(&s1.engine.ctx().frozen, &s2.engine.ctx().frozen),
+        "same spec must intern to one FrozenModel"
+    );
+    assert_eq!(tracker.tag_bytes("weights:shared"), charged);
+    assert_eq!(cache.live_entries(), 1);
+    let fp = s1.engine.ctx().frozen.fingerprint();
+
+    // Last holder drops: the entry dies and the bytes come back.
+    drop(s1);
+    assert_eq!(cache.live_entries(), 1, "s2 still holds the base");
+    drop(s2);
+    assert_eq!(cache.live_entries(), 0, "dead entries are pruned");
+    assert_eq!(tracker.tag_bytes("weights:shared"), 0);
+
+    // Rebuild after eviction: same charge, bit-identical weights.
+    let s3 = TrainSession::builder(cfg)
+        .weight_cache(cache.clone())
+        .build()
+        .unwrap();
+    assert_eq!(tracker.tag_bytes("weights:shared"), charged);
+    assert_eq!(cache.live_entries(), 1);
+    assert_eq!(
+        s3.engine.ctx().frozen.fingerprint(),
+        fp,
+        "regenerated base must be bit-identical"
+    );
+}
+
+fn resume_attaches_to_cache_and_stays_bitwise(quant: QuantMode) {
+    let total = 12;
+    let cut = 5;
+    let cfg = toy(quant);
+
+    // Uninterrupted twin.
+    let mut solo = TrainSession::builder(cfg.clone()).build().unwrap();
+    solo.run(total).unwrap();
+    let solo_losses = solo.losses();
+    let solo_bits = lora_bits(&solo);
+    drop(solo);
+
+    // Interrupted run, suspended at `cut` on a shared cache.
+    let dir = std::env::temp_dir().join("mesp-test-shared-weights");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("resume-{}.snap", quant.name()));
+    let tracker = MemoryTracker::new();
+    let cache = WeightCache::new(tracker.clone());
+    let mut first = TrainSession::builder(cfg.clone())
+        .weight_cache(cache.clone())
+        .build()
+        .unwrap();
+    first.run(cut).unwrap();
+    first.save_snapshot(&path).unwrap();
+    let charged = tracker.tag_bytes("weights:shared");
+
+    // Restore while the suspended session still holds the base: the
+    // resumed session must ATTACH to the live cached FrozenModel —
+    // pointer-equal, zero extra weight bytes — not regenerate it.
+    let mut resumed = TrainSession::builder(cfg.clone())
+        .weight_cache(cache.clone())
+        .resume_from(&path)
+        .build()
+        .unwrap();
+    assert!(
+        Arc::ptr_eq(&first.engine.ctx().frozen, &resumed.engine.ctx().frozen),
+        "restore must re-attach to the cached base"
+    );
+    assert_eq!(
+        tracker.tag_bytes("weights:shared"),
+        charged,
+        "re-attaching must not charge a second copy"
+    );
+    assert_eq!(cache.live_entries(), 1);
+    drop(first);
+
+    // The continued run is bitwise-identical to the uninterrupted one.
+    resumed.run(total - cut).unwrap();
+    let tail = resumed.losses();
+    assert_eq!(tail.len(), total - cut);
+    for (i, (a, b)) in tail.iter().zip(&solo_losses[cut..]).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{}: step {} diverged after cache re-attach: {a} vs {b}",
+            quant.name(),
+            cut + i
+        );
+    }
+    assert_eq!(
+        lora_bits(&resumed),
+        solo_bits,
+        "{}: final adapters must match the uninterrupted run bitwise",
+        quant.name()
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn snapshot_resume_attaches_to_cache_bitwise_f32() {
+    resume_attaches_to_cache_and_stays_bitwise(QuantMode::F32);
+}
+
+#[test]
+fn snapshot_resume_attaches_to_cache_bitwise_q4() {
+    resume_attaches_to_cache_and_stays_bitwise(QuantMode::Q4);
+}
