@@ -13,6 +13,7 @@ use mesp::config::{presets, QuantMode, TrainConfig};
 use mesp::coordinator::make_backend;
 use mesp::memory::MemoryTracker;
 use mesp::model::ModelSpec;
+use mesp::obs::TraceSink;
 use mesp::runtime::{Arg, Backend};
 use mesp::tensor::HostTensor;
 use mesp::util::Rng;
@@ -23,8 +24,10 @@ fn main() {
         println!("== artifact exec latency, config {config} ==");
         let cfg = TrainConfig { config: config.into(), ..Default::default() };
         let dims = Arc::new(presets::compiled(config).expect("dims"));
-        let rt: Arc<dyn Backend> =
-            make_backend(&cfg, dims.clone(), tracker.clone()).expect("backend");
+        let rt: Arc<dyn Backend> = make_backend(
+            &cfg, dims.clone(), tracker.clone(), TraceSink::disabled(),
+        )
+        .expect("backend");
         let dims = rt.dims().clone();
         let (frozen, adapters) =
             ModelSpec::new(dims.clone(), 1, QuantMode::F32).build(&tracker);

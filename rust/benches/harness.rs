@@ -62,6 +62,23 @@ pub fn bench_json_path() -> String {
     concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json").to_string()
 }
 
+/// Parse the committed `BENCH_kernels.json` (empty object when absent or
+/// malformed). Call BEFORE `write_bench_json` merges the current run in:
+/// `--check` gates against the committed baseline, not the numbers the
+/// run just measured.
+pub fn read_bench_json() -> Json {
+    std::fs::read_to_string(bench_json_path())
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .filter(|j| matches!(j, Json::Obj(_)))
+        .unwrap_or(Json::Obj(BTreeMap::new()))
+}
+
+/// Committed baseline number `section.key`, if the record has one.
+pub fn baseline_f64(root: &Json, section: &str, key: &str) -> Option<f64> {
+    root.get(section)?.get(key)?.as_f64()
+}
+
 /// Merge `entries` into the `section` object of `BENCH_kernels.json`,
 /// creating the file if absent and preserving every other section — so
 /// the kernel microbench and the step-time bench each own a section and

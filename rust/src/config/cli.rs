@@ -115,12 +115,13 @@ pub const TRAIN_FLAGS: &[&str] = &[
     "config", "backend", "method", "steps", "lr", "seed", "optimizer",
     "mezo-eps", "log-every", "spill-limit", "metrics", "artifacts",
     "kernel", "threads", "quant", "save-every", "snapshot-dir", "resume",
+    "trace", "metrics-out",
 ];
 pub const FLEET_FLAGS: &[&str] = &[
     "config", "backend", "methods", "steps", "lr", "seed", "optimizer",
     "budget-mb", "jobs", "workers", "job-file", "artifacts",
     "kernel", "threads", "quant", "budget-schedule", "preempt",
-    "snapshot-dir", "print-cost",
+    "snapshot-dir", "print-cost", "trace", "metrics-out",
 ];
 pub const SIMULATE_FLAGS: &[&str] = &["model", "seq", "rank", "breakdown"];
 pub const GRADCHECK_FLAGS: &[&str] = &[
@@ -130,6 +131,10 @@ pub const GRADCHECK_FLAGS: &[&str] = &[
 pub const MEZO_QUALITY_FLAGS: &[&str] = &["config"];
 pub const REPRODUCE_FLAGS: &[&str] = &["table", "fig", "all", "steps", "out"];
 pub const INSPECT_FLAGS: &[&str] = &["config", "backend", "artifacts"];
+pub const REPORT_FLAGS: &[&str] = &[
+    "config", "methods", "steps", "kernel", "threads", "quant", "seed",
+    "optimizer", "artifacts",
+];
 
 /// The flag allowlist of a subcommand; `None` for unknown subcommands.
 pub fn known_flags(command: &str) -> Option<&'static [&'static str]> {
@@ -141,6 +146,7 @@ pub fn known_flags(command: &str) -> Option<&'static [&'static str]> {
         "mezo-quality" => Some(MEZO_QUALITY_FLAGS),
         "reproduce" => Some(REPRODUCE_FLAGS),
         "inspect" => Some(INSPECT_FLAGS),
+        "report" => Some(REPORT_FLAGS),
         "help" | "" => Some(&[]),
         _ => None,
     }
@@ -164,6 +170,11 @@ COMMANDS
               --snapshot-dir DIR (where snapshots go; default snapshots/)
               --resume PATH.snap (resume a suspended session bitwise;
               the snapshot's config/method/seed win over these flags)
+              --trace PATH.json (write a Chrome trace-event file: step/
+              fwd/bwd/opt spans, per-GEMM kernel events — open in
+              Perfetto; observe-only, losses stay bitwise identical)
+              --metrics-out PATH.jsonl (write the metrics-registry
+              snapshot: counters/gauges/histograms, one JSON per line)
   fleet       Run many sessions concurrently under a device memory budget
               (admission control via the analytical peak-memory model).
               --budget-mb N  --jobs N  --workers N  --config toy|small
@@ -180,6 +191,10 @@ COMMANDS
               --snapshot-dir DIR (where preempted sessions park)
               --print-cost (print per-method admission costs and exit —
               CI sizes preemption budgets with this)
+              --trace PATH.json (fleet-wide Chrome trace: job lifecycle
+              admit/park/resume instants + per-session spans, one file)
+              --metrics-out PATH.jsonl (fleet metrics-registry snapshot:
+              admission waits, preempt churn, step latencies)
   simulate    Evaluate the analytical memory model at Qwen2.5 dims.
               --model 0.5b|1.5b|3b  --seq N  --rank N  [--breakdown]
   gradcheck   Assert MeSP ≡ MeBP ≡ store-h gradients on a runnable config.
@@ -190,6 +205,11 @@ COMMANDS
               [--steps N]  [--out FILE]
   inspect     List a config's artifact specs. --config toy
               --backend reference|pjrt  [--artifacts DIR]
+  report      Per-step memory profile from the tracker timeline, checked
+              against the analytical peak-memory envelope per method.
+              --config toy  --methods mesp,mebp,storeh  --steps N
+              --kernel naive|tiled|parallel  --threads N  --quant f32|q4
+              --seed N  --optimizer sgd|momentum|adam  --artifacts DIR
   help        This text.
 
 The default backend is `reference`: a pure-Rust in-process implementation
@@ -268,7 +288,8 @@ mod tests {
     #[test]
     fn every_subcommand_has_an_allowlist() {
         for cmd in ["train", "fleet", "simulate", "gradcheck",
-                    "mezo-quality", "reproduce", "inspect", "help", ""] {
+                    "mezo-quality", "reproduce", "inspect", "report",
+                    "help", ""] {
             assert!(known_flags(cmd).is_some(), "missing allowlist: {cmd}");
         }
         assert!(known_flags("nope").is_none());
@@ -279,7 +300,7 @@ mod tests {
         // keep USAGE and the allowlists from drifting apart
         for flags in [TRAIN_FLAGS, FLEET_FLAGS, SIMULATE_FLAGS,
                       GRADCHECK_FLAGS, MEZO_QUALITY_FLAGS, REPRODUCE_FLAGS,
-                      INSPECT_FLAGS] {
+                      INSPECT_FLAGS, REPORT_FLAGS] {
             for f in flags {
                 assert!(USAGE.contains(&format!("--{f}")),
                         "USAGE missing --{f}");

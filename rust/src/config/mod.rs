@@ -336,6 +336,13 @@ pub struct TrainConfig {
     /// base's derived model seed so same-base jobs share one cached
     /// `FrozenModel` while their data/job seed streams stay distinct.
     pub model_seed: Option<u64>,
+    /// Write a Chrome trace-event file here at end of run (`--trace`).
+    /// Also enables span recording for the session (observe-only).
+    pub trace_path: Option<String>,
+    /// Write the metrics-registry JSONL snapshot here at end of run
+    /// (`--metrics-out`). Distinct from `metrics_path`, the per-step
+    /// training-loss JSONL stream.
+    pub metrics_out: Option<String>,
 }
 
 impl TrainConfig {
@@ -368,6 +375,8 @@ impl Default for TrainConfig {
             threads: 0,
             quant: QuantMode::default(),
             model_seed: None,
+            trace_path: None,
+            metrics_out: None,
         }
     }
 }

@@ -3,10 +3,10 @@
 //! reproduce drivers use to run method grids.
 //!
 //! Sessions are built through [`TrainSession::builder`]: one entry point
-//! covering fresh starts, snapshot resume, caller-supplied trackers and
-//! shared [`WeightCache`]s, replacing the old `new` / `with_tracker` /
-//! `restore` / `restore_with_tracker` constructor quartet (kept as thin
-//! deprecated shims for one release).
+//! covering fresh starts, snapshot resume, caller-supplied trackers,
+//! shared [`WeightCache`]s, and telemetry (trace sinks + metrics
+//! registries). The old `new` / `with_tracker` / `restore` /
+//! `restore_with_tracker` constructor quartet is gone.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -17,6 +17,7 @@ use crate::fleet::{FleetOptions, Job, JobSpec, Scheduler};
 use crate::memory::MemoryTracker;
 use crate::metrics::{MetricsLogger, RunSummary};
 use crate::model::{ModelSpec, WeightCache};
+use crate::obs::{self, MetricsRegistry, TraceSink};
 use crate::persist::{RngStreams, Snapshot};
 use crate::runtime::{Backend, KernelOptions, ReferenceBackend};
 use crate::tensor::DType;
@@ -41,11 +42,14 @@ pub fn make_backend(
     cfg: &TrainConfig,
     dims: Arc<ModelDims>,
     tracker: MemoryTracker,
+    trace: TraceSink,
 ) -> anyhow::Result<Arc<dyn Backend>> {
     match cfg.backend {
         BackendKind::Reference => {
             let opts = KernelOptions { kind: cfg.kernel, threads: cfg.threads };
-            Ok(Arc::new(ReferenceBackend::with_kernels(dims, tracker, opts)))
+            Ok(Arc::new(ReferenceBackend::with_telemetry(
+                dims, tracker, opts, trace,
+            )))
         }
         #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => {
@@ -88,6 +92,8 @@ pub struct SessionBuilder {
     tracker: Option<MemoryTracker>,
     cache: Option<WeightCache>,
     resume_from: Option<PathBuf>,
+    trace: Option<TraceSink>,
+    registry: Option<MetricsRegistry>,
 }
 
 impl SessionBuilder {
@@ -136,6 +142,23 @@ impl SessionBuilder {
         self
     }
 
+    /// Record structured trace events into `trace` — the fleet scheduler
+    /// passes a job-scoped handle of its shared sink here. Overrides the
+    /// sink that `cfg.trace_path` would otherwise auto-create. Telemetry
+    /// is observe-only: traced runs stay bitwise identical to untraced.
+    pub fn trace(mut self, trace: TraceSink) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
+    /// Record step/memory/artifact metrics into a caller-supplied
+    /// [`MetricsRegistry`] (the fleet shares one across jobs). Defaults
+    /// to a fresh private registry.
+    pub fn registry(mut self, registry: MetricsRegistry) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
     /// Build the session: resolve dims, intern the frozen base in the
     /// weight cache, instantiate the backend, derive this session's
     /// adapters, spawn the data pipeline — and, when resuming, restore
@@ -145,9 +168,21 @@ impl SessionBuilder {
         let cache = self
             .cache
             .unwrap_or_else(|| WeightCache::new(tracker.clone()));
+        // An explicit sink wins; otherwise `--trace <path>` in the config
+        // auto-creates a recording sink that `export_telemetry` writes out.
+        let trace = self.trace.unwrap_or_else(|| {
+            if self.cfg.trace_path.is_some() {
+                TraceSink::enabled()
+            } else {
+                TraceSink::disabled()
+            }
+        });
+        let registry = self.registry.unwrap_or_default();
         match self.resume_from {
-            None => Self::fresh(self.cfg, tracker, &cache),
-            Some(path) => Self::resume(&self.cfg, &path, tracker, &cache),
+            None => Self::fresh(self.cfg, tracker, &cache, trace, registry),
+            Some(path) => {
+                Self::resume(&self.cfg, &path, tracker, &cache, trace, registry)
+            }
         }
     }
 
@@ -155,6 +190,8 @@ impl SessionBuilder {
         cfg: TrainConfig,
         tracker: MemoryTracker,
         cache: &WeightCache,
+        trace: TraceSink,
+        registry: MetricsRegistry,
     ) -> anyhow::Result<TrainSession> {
         // Resolve geometry and attach the (possibly shared) frozen base.
         // Reference configs come from the compiled preset table and the
@@ -169,8 +206,12 @@ impl SessionBuilder {
                     cfg.quant,
                 );
                 let frozen = cache.get_or_build(&spec);
-                let rt =
-                    make_backend(&cfg, frozen.dims.clone(), tracker.clone())?;
+                let rt = make_backend(
+                    &cfg,
+                    frozen.dims.clone(),
+                    tracker.clone(),
+                    trace.clone(),
+                )?;
                 (rt, frozen)
             }
             #[cfg(feature = "pjrt")]
@@ -205,6 +246,7 @@ impl SessionBuilder {
         let dims = frozen.dims.clone();
         let ctx = EngineCtx::new(
             rt, frozen, adapters, cfg.optimizer, cfg.lr, cfg.spill_limit,
+            trace.clone(),
         )?;
         let engine = build_engine(cfg.method, ctx, cfg.mezo_eps)?;
         let loader = PrefetchLoader::spawn(
@@ -222,6 +264,8 @@ impl SessionBuilder {
             loader,
             metrics,
             tracker,
+            trace,
+            registry,
             batches_consumed: 0,
         })
     }
@@ -231,6 +275,8 @@ impl SessionBuilder {
         path: &Path,
         tracker: MemoryTracker,
         cache: &WeightCache,
+        trace: TraceSink,
+        registry: MetricsRegistry,
     ) -> anyhow::Result<TrainSession> {
         let snap = Snapshot::load(path)?;
         let cfg = snap.train_config(base);
@@ -243,7 +289,7 @@ impl SessionBuilder {
             snap.rng,
             cfg.seed
         );
-        let mut sess = Self::fresh(cfg, tracker, cache)?;
+        let mut sess = Self::fresh(cfg, tracker, cache, trace, registry)?;
         {
             let ctx = sess.engine.ctx_mut();
             anyhow::ensure!(
@@ -306,6 +352,11 @@ pub struct TrainSession {
     pub loader: PrefetchLoader,
     pub metrics: MetricsLogger,
     pub tracker: MemoryTracker,
+    /// The session's trace sink (disabled unless `--trace` was given or a
+    /// caller attached one) — shared with the backend and engine spans.
+    pub trace: TraceSink,
+    /// Step/memory/artifact metrics (possibly shared fleet-wide).
+    pub registry: MetricsRegistry,
     /// Batches drawn through [`Self::step_once`] since the deterministic
     /// data stream began — the loader cursor a snapshot records and a
     /// restore fast-forwards past (it survives suspend/resume cycles).
@@ -320,48 +371,9 @@ impl TrainSession {
             tracker: None,
             cache: None,
             resume_from: None,
+            trace: None,
+            registry: None,
         }
-    }
-
-    /// Build a session with all defaults.
-    #[deprecated(note = "use TrainSession::builder(cfg).build()")]
-    pub fn new(cfg: TrainConfig) -> anyhow::Result<TrainSession> {
-        Self::builder(cfg).build()
-    }
-
-    /// Build a session on a caller-supplied tracker.
-    #[deprecated(
-        note = "use TrainSession::builder(cfg).tracker(tracker).build()"
-    )]
-    pub fn with_tracker(
-        cfg: TrainConfig,
-        tracker: MemoryTracker,
-    ) -> anyhow::Result<TrainSession> {
-        Self::builder(cfg).tracker(tracker).build()
-    }
-
-    /// Resume a session from a snapshot file on a fresh tracker.
-    #[deprecated(
-        note = "use TrainSession::builder(base).resume_from(path).build()"
-    )]
-    pub fn restore(base: &TrainConfig, path: &Path) -> anyhow::Result<TrainSession> {
-        Self::builder(base.clone()).resume_from(path).build()
-    }
-
-    /// Resume a session from a snapshot on a caller-supplied tracker.
-    #[deprecated(
-        note = "use TrainSession::builder(base).tracker(tracker)\
-                .resume_from(path).build()"
-    )]
-    pub fn restore_with_tracker(
-        base: &TrainConfig,
-        path: &Path,
-        tracker: MemoryTracker,
-    ) -> anyhow::Result<TrainSession> {
-        Self::builder(base.clone())
-            .tracker(tracker)
-            .resume_from(path)
-            .build()
     }
 
     /// Capture the session's complete mutable state (must be called at a
@@ -414,8 +426,39 @@ impl TrainSession {
         let (batch, _guard) = self.loader.next();
         self.batches_consumed += 1;
         let stats = self.engine.step(&batch)?;
+        self.registry.counter_add("step/count", 1);
+        self.registry.observe("step/secs", stats.secs);
+        self.registry.gauge_set("step/loss", stats.loss);
+        self.registry.gauge_set("step/peak_bytes", stats.peak_bytes as f64);
         self.metrics.record(self.engine.name(), &stats)?;
         Ok(stats)
+    }
+
+    /// Fold end-of-run observability state into the registry (per-artifact
+    /// exec stats, live/peak memory by tag) and write the exports the
+    /// config asks for: the Chrome trace to `cfg.trace_path`, the metrics
+    /// JSONL snapshot to `cfg.metrics_out`. Cheap no-op when neither flag
+    /// was given and the registry is private.
+    pub fn export_telemetry(&self) -> anyhow::Result<()> {
+        let ctx = self.engine.ctx();
+        obs::views::exec_stats_into(&self.registry, &ctx.rt.exec_stats());
+        for (tag, bytes) in self.tracker.breakdown() {
+            self.registry
+                .gauge_set(&format!("memory/live/{tag}"), bytes as f64);
+        }
+        for (tag, bytes) in self.tracker.tag_peaks() {
+            self.registry
+                .gauge_set(&format!("memory/peak/{tag}"), bytes as f64);
+        }
+        self.registry
+            .gauge_set("memory/peak_bytes", self.tracker.peak() as f64);
+        if let Some(p) = &self.cfg.trace_path {
+            self.trace.export_chrome(Path::new(p))?;
+        }
+        if let Some(p) = &self.cfg.metrics_out {
+            self.registry.export_jsonl(Path::new(p))?;
+        }
+        Ok(())
     }
 
     /// Run `steps` (more) optimization steps; returns the summary.

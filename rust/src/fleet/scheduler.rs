@@ -32,6 +32,8 @@ use crate::coordinator::TrainSession;
 use crate::memory::{Guard, MemoryTracker};
 use crate::metrics::{RunSummary, TableBuilder};
 use crate::model::WeightCache;
+use crate::obs::{MetricsRegistry, TraceSink};
+use crate::util::json::Json;
 use crate::util::stats::fmt_mb;
 
 use super::admission::{job_cost_bytes, job_weight_class, Admission};
@@ -103,6 +105,13 @@ pub struct FleetOptions {
     pub snapshot_dir: Option<PathBuf>,
     /// Mid-run budget changes, keyed by total fleet steps completed.
     pub budget_schedule: Vec<BudgetChange>,
+    /// Write a fleet-wide Chrome trace here (`--trace`): one shared sink,
+    /// every event tagged with its job id. `None` disables tracing.
+    pub trace_path: Option<PathBuf>,
+    /// Write the fleet-wide metrics-registry JSONL snapshot here
+    /// (`--metrics-out`). `None` skips the export (the registry still
+    /// rides along in the report).
+    pub metrics_out: Option<PathBuf>,
 }
 
 impl Default for FleetOptions {
@@ -113,6 +122,8 @@ impl Default for FleetOptions {
             preempt: false,
             snapshot_dir: None,
             budget_schedule: Vec::new(),
+            trace_path: None,
+            metrics_out: None,
         }
     }
 }
@@ -191,6 +202,10 @@ pub struct FleetReport {
     /// already held their frozen base.
     pub weight_shared_admissions: usize,
     pub per_method: BTreeMap<String, MethodStats>,
+    /// The fleet-wide metrics registry every job recorded into: step
+    /// counts/latencies per job plus the `fleet/*` lifecycle counters the
+    /// headline numbers above are views of.
+    pub registry: MetricsRegistry,
 }
 
 impl FleetReport {
@@ -443,6 +458,16 @@ impl Scheduler {
         // copy — charged once, on a child of the aggregate, under
         // `weights:shared`.
         let weight_cache = WeightCache::new(aggregate.child());
+        // One shared trace sink + metrics registry for the whole fleet:
+        // jobs record through job-scoped handles so a single Perfetto
+        // timeline shows every worker, and the lifecycle counters below
+        // aggregate across jobs.
+        let trace = if opts.trace_path.is_some() {
+            TraceSink::enabled()
+        } else {
+            TraceSink::disabled()
+        };
+        let registry = MetricsRegistry::new();
         let queue = Mutex::new(QueueState {
             entries: jobs.into_iter().map(QueueEntry::fresh).collect(),
             done: 0,
@@ -459,6 +484,7 @@ impl Scheduler {
                 let (admission, aggregate, progress) =
                     (&admission, &aggregate, &progress);
                 let (snap_dir, weight_cache) = (&snap_dir, &weight_cache);
+                let (trace, registry) = (&trace, &registry);
                 s.spawn(move || loop {
                     // Pop the next queue entry; a parked entry or a fresh
                     // job alike. Wait while the queue is empty but jobs
@@ -479,6 +505,7 @@ impl Scheduler {
                     match run_job(
                         w, workers, entry, admission, aggregate, weight_cache,
                         base, snap_dir, preempt_enabled, ticketed, progress,
+                        trace, registry,
                     ) {
                         RunOutcome::Done(outcome) => {
                             results.lock().unwrap().push(outcome);
@@ -516,12 +543,35 @@ impl Scheduler {
             }
         }
 
+        // Fold the fleet-wide occupancy numbers into the registry so the
+        // JSONL export is self-contained, then write the exports the
+        // options ask for. The report's preempt/resume tallies are READ
+        // from the registry — the counters run_job bumped are the single
+        // source of truth (they match the per-outcome sums by
+        // construction).
+        registry.gauge_set("fleet/aggregate_peak_bytes", aggregate.peak() as f64);
+        registry
+            .gauge_set("fleet/peak_committed_bytes", adm_stats.peak_committed as f64);
+        registry
+            .gauge_set("fleet/peak_concurrent_jobs", adm_stats.peak_concurrent as f64);
+        registry.gauge_set(
+            "fleet/snapshot_peak_bytes",
+            aggregate.tag_peak("snapshot") as f64,
+        );
+        registry.gauge_set("fleet/wall_secs", wall_secs);
+        if let Some(p) = &opts.trace_path {
+            trace.export_chrome(p)?;
+        }
+        if let Some(p) = &opts.metrics_out {
+            registry.export_jsonl(p)?;
+        }
+
         Ok(FleetReport {
             budget_bytes: opts.budget_bytes,
             final_budget_bytes: admission.budget(),
             workers,
-            preempts: outcomes.iter().map(|o| o.preempts as usize).sum(),
-            resumes: outcomes.iter().map(|o| o.resumes as usize).sum(),
+            preempts: registry.counter("fleet/preempts") as usize,
+            resumes: registry.counter("fleet/resumes") as usize,
             snapshot_peak_bytes: aggregate.tag_peak("snapshot"),
             shared_weight_peak_bytes: weight_cache
                 .tracker()
@@ -533,6 +583,7 @@ impl Scheduler {
             peak_committed: adm_stats.peak_committed,
             peak_concurrent: adm_stats.peak_concurrent,
             per_method,
+            registry,
         })
     }
 }
@@ -555,8 +606,13 @@ fn run_job(
     preempt_enabled: bool,
     ticketed: bool,
     progress: &Progress,
+    trace: &TraceSink,
+    registry: &MetricsRegistry,
 ) -> RunOutcome {
     let job = entry.job.clone();
+    // Job-scoped handle: every event this job emits (down to per-GEMM
+    // spans inside its session) carries the job id.
+    let jtrace = trace.for_job(job.id as u64);
     let fail = |entry: &QueueEntry, cost_bytes: u64, msg: String| {
         RunOutcome::Done(JobOutcome {
             job: entry.job.clone(),
@@ -602,7 +658,14 @@ fn run_job(
             return fail(&entry, cost_bytes, format!("{e:#}"));
         }
     };
-    entry.wait_secs += queued.elapsed().as_secs_f64();
+    let waited = queued.elapsed().as_secs_f64();
+    entry.wait_secs += waited;
+    registry.observe("fleet/admission_wait_s", waited);
+    jtrace.instant(
+        "admit",
+        "fleet",
+        vec![("cost_bytes", Json::Num(cost_bytes as f64))],
+    );
 
     let started = Instant::now();
     let mut cfg = job.spec.to_train_config(base);
@@ -616,7 +679,9 @@ fn run_job(
 
     let mut builder = TrainSession::builder(cfg)
         .tracker(aggregate.child())
-        .weight_cache(weight_cache.clone());
+        .weight_cache(weight_cache.clone())
+        .trace(jtrace.clone())
+        .registry(registry.clone());
     if let Some(p) = &entry.parked {
         builder = builder.resume_from(&p.path);
     }
@@ -630,6 +695,12 @@ fn run_job(
     };
     if let Some(p) = entry.parked.take() {
         entry.resumes += 1;
+        registry.counter_add("fleet/resumes", 1);
+        jtrace.instant(
+            "resume",
+            "fleet",
+            vec![("step", Json::Num(sess.steps_done() as f64))],
+        );
         let _ = std::fs::remove_file(&p.path);
         // p drops here: the `snapshot` tag bytes return to the aggregate.
     }
@@ -655,6 +726,11 @@ fn run_job(
 
     let parked = match result {
         Ok(Some(jr)) => {
+            jtrace.instant(
+                "done",
+                "fleet",
+                vec![("steps", Json::Num(sess.steps_done() as f64))],
+            );
             drop(sess);
             // `sess` dropped: every tracked byte of the job is released
             // from the aggregate before the permit frees the budget.
@@ -681,14 +757,24 @@ fn run_job(
 
     match parked {
         Ok((path, bytes)) => {
+            jtrace.instant(
+                "park",
+                "fleet",
+                vec![
+                    ("step", Json::Num(sess.steps_done() as f64)),
+                    ("snapshot_bytes", Json::Num(bytes as f64)),
+                ],
+            );
             drop(sess);
             let guard = aggregate.track("snapshot", bytes);
             drop(permit);
             entry.preempts += 1;
+            registry.counter_add("fleet/preempts", 1);
             entry.parked = Some(Parked { path, _snapshot_guard: guard });
             RunOutcome::Parked(entry)
         }
         Err(e) => {
+            jtrace.instant("fail", "fleet", vec![]);
             drop(sess);
             drop(permit);
             let what = if park { "snapshot failed: " } else { "" };

@@ -34,6 +34,7 @@ pub mod fleet;
 pub mod memory;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod persist;
 pub mod reproduce;
 pub mod runtime;

@@ -40,6 +40,7 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "mezo-quality" => cmd_mezo_quality(&args),
         "reproduce" => cmd_reproduce(&args),
         "inspect" => cmd_inspect(&args),
+        "report" => cmd_report(&args),
         "help" | "" => {
             println!("{USAGE}");
             Ok(())
@@ -71,6 +72,9 @@ fn train_config(args: &Args) -> anyhow::Result<TrainConfig> {
         kernel: KernelKind::parse(&args.str("kernel", "parallel"))?,
         threads: args.usize("threads", 0)?,
         quant: QuantMode::parse(&args.str("quant", "f32"))?,
+        model_seed: None,
+        trace_path: args.opt_str("trace"),
+        metrics_out: args.opt_str("metrics-out"),
     })
 }
 
@@ -152,6 +156,16 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     );
     println!("\nper-artifact execution stats:");
     print!("{}", mesp::metrics::exec_stats_table(&sess.engine.ctx().rt.exec_stats()));
+    // Telemetry files, if asked for: the Chrome trace (--trace) and the
+    // metrics-registry snapshot (--metrics-out). Observe-only — written
+    // after training so they can never perturb the loss stream.
+    sess.export_telemetry()?;
+    if let Some(p) = &sess.cfg.trace_path {
+        println!("trace written: {p} (chrome://tracing or ui.perfetto.dev)");
+    }
+    if let Some(p) = &sess.cfg.metrics_out {
+        println!("metrics written: {p}");
+    }
     Ok(())
 }
 
@@ -186,6 +200,8 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         preempt: args.bool("preempt"),
         snapshot_dir: args.opt_str("snapshot-dir").map(std::path::PathBuf::from),
         budget_schedule,
+        trace_path: args.opt_str("trace").map(std::path::PathBuf::from),
+        metrics_out: args.opt_str("metrics-out").map(std::path::PathBuf::from),
     };
     let jobs = match args.opt_str("job-file") {
         Some(path) => {
@@ -241,10 +257,102 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     );
     let report = Scheduler::run(&opts, &base, jobs)?;
     print!("{}", report.render());
+    if let Some(p) = &opts.trace_path {
+        println!("trace written: {} (chrome://tracing or ui.perfetto.dev)",
+                 p.display());
+    }
+    if let Some(p) = &opts.metrics_out {
+        println!("metrics written: {}", p.display());
+    }
     anyhow::ensure!(
         report.failed() == 0,
         "{} fleet job(s) failed (see report)",
         report.failed()
+    );
+    Ok(())
+}
+
+/// `mesp report` — per-step memory profile from the tracker's event
+/// timeline, cross-checked against the analytical envelope the fleet
+/// admits jobs under. For each method: run a short session on a
+/// timeline-enabled tracker, split the event stream at the `step:N`
+/// markers the engines record, and assert every step's observed peak
+/// stays inside `job_cost_bytes + weight-class bytes` (activations +
+/// optimizer + batch queue + kernel scratch, plus the resident base this
+/// unshared session is charged for itself).
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    use mesp::fleet::JobSpec;
+    use mesp::memory::MemoryTracker;
+    use mesp::metrics::TableBuilder;
+
+    let methods = Method::parse_list(&args.str("methods", "mesp,mebp,storeh"))?;
+    let steps = args.usize("steps", 3)?;
+    anyhow::ensure!(steps > 0, "--steps must be positive");
+    let mut table = TableBuilder::new(&[
+        "Method", "Step", "Peak MB", "Live after MB", "Envelope MB",
+        "Headroom",
+    ]);
+    for &method in &methods {
+        let mut cfg = train_config(args)?;
+        cfg.method = method;
+        cfg.steps = steps;
+        cfg.log_every = usize::MAX;
+        let tracker = MemoryTracker::with_timeline();
+        let mut sess = TrainSession::builder(cfg)
+            .tracker(tracker.clone())
+            .build()?;
+        for _ in 0..steps {
+            sess.step_once()?;
+        }
+        let spec = JobSpec::from_base(&sess.cfg);
+        let envelope = fleet::job_cost_bytes(&spec)?
+            + fleet::job_weight_class(&spec)?.bytes;
+        anyhow::ensure!(
+            tracker.timeline_dropped() == 0,
+            "method {}: {} timeline events evicted — raise the ring \
+             capacity or lower --steps",
+            method.name(),
+            tracker.timeline_dropped()
+        );
+        // Events between two `step:` markers belong to the step whose
+        // marker CLOSES the segment (mark_step runs after the step body);
+        // the first segment also covers session build + warmup, whose
+        // allocations are still live during step 1.
+        let mut seen = 0u64;
+        let mut seg_peak = 0u64;
+        for ev in tracker.timeline() {
+            seg_peak = seg_peak.max(ev.live);
+            let Some(n) = ev.tag.strip_prefix("step:") else { continue };
+            let n: u64 = n.parse()?;
+            anyhow::ensure!(
+                seg_peak <= envelope,
+                "method {} step {n}: observed peak {seg_peak} bytes \
+                 exceeds the analytical envelope {envelope} bytes",
+                method.name()
+            );
+            table.row(vec![
+                method.name().to_string(),
+                n.to_string(),
+                fmt_mb(seg_peak),
+                fmt_mb(ev.live),
+                fmt_mb(envelope),
+                format!("{:.1}%",
+                        100.0 * (1.0 - seg_peak as f64 / envelope as f64)),
+            ]);
+            seen = n;
+            seg_peak = 0;
+        }
+        anyhow::ensure!(
+            seen == steps as u64,
+            "method {}: timeline holds {seen} step markers, expected {steps}",
+            method.name()
+        );
+    }
+    print!("{}", table.render());
+    println!(
+        "report OK: {} methods x {steps} steps within the analytical \
+         envelope",
+        methods.len()
     );
     Ok(())
 }

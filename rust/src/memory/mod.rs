@@ -9,4 +9,4 @@ pub use model::{
     peak, peak_bytes, peak_q, reduction_vs_mebp, resident_weight_bytes,
     snapshot_bytes, Breakdown, Widths,
 };
-pub use tracker::{Guard, MemoryTracker, Tracked};
+pub use tracker::{Event, Guard, MemoryTracker, Tracked};

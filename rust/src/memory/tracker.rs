@@ -8,16 +8,26 @@
 //! over a step is exactly the quantity the paper's argument is about:
 //! which tensors are alive at the worst moment of each strategy.
 
+use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Default ring-buffer capacity for the event timeline. At ~1k-5k events
+/// per training step on the toy preset this holds tens of steps; older
+/// events are dropped oldest-first (see [`MemoryTracker::timeline_dropped`]).
+pub const TIMELINE_CAP: usize = 1 << 18;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Event {
     /// Monotonic sequence number of the alloc/free.
     pub seq: u64,
-    /// Signed byte delta.
+    /// Signed byte delta (0 for marker events, e.g. `step:N`).
     pub delta: i64,
     /// Live bytes after applying the delta.
     pub live: u64,
+    /// Tag of the alloc/free (`step:N` for step-boundary markers).
+    pub tag: String,
+    /// True when this event set a new all-time high-water mark.
+    pub peak: bool,
 }
 
 #[derive(Debug, Default)]
@@ -31,8 +41,21 @@ struct Inner {
     /// tags (e.g. `scratch`) are usually back to zero live bytes by the
     /// time anyone looks, so their footprint is only visible here.
     tag_peaks: std::collections::BTreeMap<String, u64>,
-    /// Optional event timeline (enabled for memory-profile runs).
-    timeline: Option<Vec<Event>>,
+    /// Optional ring-buffered event timeline (enabled for profile runs).
+    timeline: Option<VecDeque<Event>>,
+    timeline_cap: usize,
+    /// Events evicted from the ring (so truncation is never silent).
+    timeline_dropped: u64,
+}
+
+fn push_event(g: &mut Inner, ev: Event) {
+    let cap = g.timeline_cap;
+    let Some(tl) = g.timeline.as_mut() else { return };
+    if tl.len() >= cap {
+        tl.pop_front();
+        g.timeline_dropped += 1;
+    }
+    tl.push_back(ev);
 }
 
 /// Shared tracker handle. Cheap to clone; thread-safe (the data-pipeline
@@ -53,10 +76,22 @@ impl MemoryTracker {
         Self::default()
     }
 
-    /// Enable event-timeline recording (off by default: it grows).
+    /// Enable event-timeline recording (off by default: it grows) with
+    /// the default ring capacity [`TIMELINE_CAP`].
     pub fn with_timeline() -> Self {
+        Self::with_timeline_cap(TIMELINE_CAP)
+    }
+
+    /// Enable event-timeline recording with an explicit ring capacity;
+    /// once full, the oldest events are evicted (counted in
+    /// [`Self::timeline_dropped`]).
+    pub fn with_timeline_cap(cap: usize) -> Self {
         let t = Self::new();
-        t.inner.lock().unwrap().timeline = Some(Vec::new());
+        {
+            let mut g = t.inner.lock().unwrap();
+            g.timeline = Some(VecDeque::new());
+            g.timeline_cap = cap.max(1);
+        }
         t
     }
 
@@ -81,8 +116,10 @@ impl MemoryTracker {
 
     fn apply_alloc(&self, tag: &str, bytes: u64) {
         {
-            let mut g = self.inner.lock().unwrap();
+            let mut guard = self.inner.lock().unwrap();
+            let g = &mut *guard;
             g.live += bytes;
+            let new_peak = g.live > g.peak;
             g.peak = g.peak.max(g.live);
             g.seq += 1;
             let t = g.tags.entry(tag.to_string()).or_insert(0);
@@ -90,9 +127,15 @@ impl MemoryTracker {
             let t = *t;
             let tp = g.tag_peaks.entry(tag.to_string()).or_insert(0);
             *tp = (*tp).max(t);
-            let ev = Event { seq: g.seq, delta: bytes as i64, live: g.live };
-            if let Some(tl) = g.timeline.as_mut() {
-                tl.push(ev);
+            if g.timeline.is_some() {
+                let ev = Event {
+                    seq: g.seq,
+                    delta: bytes as i64,
+                    live: g.live,
+                    tag: tag.to_string(),
+                    peak: new_peak,
+                };
+                push_event(g, ev);
             }
         }
         if let Some(p) = &self.parent {
@@ -102,21 +145,66 @@ impl MemoryTracker {
 
     fn release(&self, tag: &str, bytes: u64) {
         {
-            let mut g = self.inner.lock().unwrap();
-            debug_assert!(g.live >= bytes, "release {bytes} > live {}", g.live);
-            g.live = g.live.saturating_sub(bytes);
+            let mut guard = self.inner.lock().unwrap();
+            let g = &mut *guard;
+            // Hard errors, not saturation: an over-release means a guard's
+            // bytes were double-freed or mistagged, and letting it clamp
+            // to zero would silently corrupt every number downstream
+            // (breakdown, admission accounting, the timeline).
+            let tag_live = match g.tags.get_mut(tag) {
+                None => panic!(
+                    "memory tracker: release of {bytes} B under unknown tag \
+                     '{tag}' (nothing live under that tag)"
+                ),
+                Some(t) => t,
+            };
+            assert!(
+                *tag_live >= bytes,
+                "memory tracker: release of {bytes} B under tag '{tag}' \
+                 exceeds its {tag_live} live B (double free or tag mismatch)"
+            );
+            *tag_live -= bytes;
+            assert!(
+                g.live >= bytes,
+                "memory tracker: release {bytes} > total live {}",
+                g.live
+            );
+            g.live -= bytes;
             g.seq += 1;
-            if let Some(t) = g.tags.get_mut(tag) {
-                *t = t.saturating_sub(bytes);
-            }
-            let ev = Event { seq: g.seq, delta: -(bytes as i64), live: g.live };
-            if let Some(tl) = g.timeline.as_mut() {
-                tl.push(ev);
+            if g.timeline.is_some() {
+                let ev = Event {
+                    seq: g.seq,
+                    delta: -(bytes as i64),
+                    live: g.live,
+                    tag: tag.to_string(),
+                    peak: false,
+                };
+                push_event(g, ev);
             }
         }
         if let Some(p) = &self.parent {
             p.release(tag, bytes);
         }
+    }
+
+    /// Record a zero-delta marker event (e.g. a step boundary) in the
+    /// timeline. No-op unless timeline recording is enabled; never
+    /// mirrored into parents (markers are per-session).
+    pub fn mark_step(&self, step: u64) {
+        let mut guard = self.inner.lock().unwrap();
+        let g = &mut *guard;
+        if g.timeline.is_none() {
+            return;
+        }
+        g.seq += 1;
+        let ev = Event {
+            seq: g.seq,
+            delta: 0,
+            live: g.live,
+            tag: format!("step:{step}"),
+            peak: false,
+        };
+        push_event(g, ev);
     }
 
     pub fn live(&self) -> u64 {
@@ -174,8 +262,26 @@ impl MemoryTracker {
             .lock()
             .unwrap()
             .timeline
-            .clone()
+            .as_ref()
+            .map(|tl| tl.iter().cloned().collect())
             .unwrap_or_default()
+    }
+
+    /// Number of timeline events evicted from the ring buffer (0 when the
+    /// whole run fit, or when the timeline is disabled).
+    pub fn timeline_dropped(&self) -> u64 {
+        self.inner.lock().unwrap().timeline_dropped
+    }
+
+    /// All per-tag high-water marks, sorted by tag.
+    pub fn tag_peaks(&self) -> Vec<(String, u64)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .tag_peaks
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
     }
 }
 
@@ -298,8 +404,78 @@ mod tests {
         let tl = t.timeline();
         assert_eq!(tl.len(), 2);
         assert_eq!(tl[0].delta, 5);
+        assert_eq!(tl[0].tag, "x");
+        assert!(tl[0].peak, "first alloc sets the high-water mark");
         assert_eq!(tl[1].delta, -5);
         assert_eq!(tl[1].live, 0);
+        assert!(!tl[1].peak);
+        assert_eq!(t.timeline_dropped(), 0);
+    }
+
+    #[test]
+    fn timeline_marks_step_boundaries() {
+        let t = MemoryTracker::with_timeline();
+        let _a = t.track("x", 8);
+        t.mark_step(3);
+        let tl = t.timeline();
+        assert_eq!(tl.len(), 2);
+        assert_eq!(tl[1].tag, "step:3");
+        assert_eq!(tl[1].delta, 0);
+        assert_eq!(tl[1].live, 8);
+        // markers are a no-op when the timeline is off
+        let off = MemoryTracker::new();
+        off.mark_step(1);
+        assert!(off.timeline().is_empty());
+    }
+
+    #[test]
+    fn timeline_ring_drops_oldest() {
+        let t = MemoryTracker::with_timeline_cap(3);
+        for i in 1..=4u64 {
+            let _g = t.track("x", i); // each loop: one alloc + one free
+        }
+        let tl = t.timeline();
+        assert_eq!(tl.len(), 3);
+        assert_eq!(t.timeline_dropped(), 5, "8 events into a 3-ring");
+        assert_eq!(tl.last().unwrap().delta, -4, "newest survives");
+        assert!(tl[0].seq < tl[1].seq && tl[1].seq < tl[2].seq);
+    }
+
+    #[test]
+    fn tag_peaks_lists_all_tags() {
+        let t = MemoryTracker::new();
+        {
+            let _a = t.track("a", 10);
+            let _b = t.track("b", 20);
+        }
+        assert_eq!(
+            t.tag_peaks(),
+            vec![("a".to_string(), 10), ("b".to_string(), 20)]
+        );
+    }
+
+    #[test]
+    fn release_of_unknown_tag_is_an_error() {
+        let t = MemoryTracker::new();
+        let known = t.track("known", 4);
+        let err = std::panic::catch_unwind(|| t.release("never-tracked", 4));
+        assert!(err.is_err(), "unknown-tag release must not saturate");
+        // The caught panic poisoned the mutex; leak the guard so its Drop
+        // doesn't re-panic on the poisoned lock.
+        std::mem::forget(known);
+    }
+
+    #[test]
+    fn over_release_of_tag_is_an_error() {
+        let t = MemoryTracker::new();
+        // Two tags live so total `live` (12) exceeds the over-released
+        // amount — only the per-tag check can catch this.
+        let a = t.track("a", 4);
+        let b = t.track("b", 8);
+        let err = std::panic::catch_unwind(|| t.release("a", 6));
+        assert!(err.is_err(), "tag over-release must not saturate");
+        std::mem::forget(a);
+        std::mem::forget(b);
     }
 
     #[test]

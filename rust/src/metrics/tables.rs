@@ -68,29 +68,15 @@ pub fn pct(v: f64) -> String {
     format!("{}%", v.round() as i64)
 }
 
-/// Render per-artifact execution stats (slowest first, the order
-/// `Backend::exec_stats` returns): call count, total seconds, mean
-/// ms/call, total GFLOP and achieved GFLOP/s.
+/// Render per-artifact execution stats (slowest first): call count, total
+/// seconds, mean ms/call, total GFLOP and achieved GFLOP/s. A view over
+/// the metrics registry (`obs::views`): the stats are loaded under
+/// `artifact/<name>/*` and rendered from there, so this table and the
+/// `--metrics-out` JSONL export can never drift apart.
 pub fn exec_stats_table(stats: &[(String, ExecStats)]) -> String {
-    let mut t = TableBuilder::new(&[
-        "Artifact", "Calls", "Total s", "ms/call", "GFLOP", "GFLOP/s",
-    ]);
-    for (name, s) in stats {
-        let ms_per_call = if s.calls > 0 {
-            s.total_secs * 1e3 / s.calls as f64
-        } else {
-            0.0
-        };
-        t.row(vec![
-            name.clone(),
-            s.calls.to_string(),
-            format!("{:.3}", s.total_secs),
-            format!("{ms_per_call:.3}"),
-            format!("{:.3}", s.flops as f64 / 1e9),
-            format!("{:.2}", s.gflops_per_sec()),
-        ]);
-    }
-    t.render()
+    let reg = crate::obs::MetricsRegistry::new();
+    crate::obs::views::exec_stats_into(&reg, stats);
+    crate::obs::views::render_exec_stats(&reg)
 }
 
 #[cfg(test)]

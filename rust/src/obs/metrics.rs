@@ -1,0 +1,274 @@
+//! Named counters, gauges and histograms with JSONL snapshot export.
+//!
+//! The registry is the one place run-level numbers accumulate; the tables
+//! the CLI prints ([`crate::metrics::tables::exec_stats_table`],
+//! `FleetReport::render`) are *views* over it rather than ad-hoc printf
+//! aggregation. Cloning shares the underlying store, so a fleet run hands
+//! one registry to every session and gets fleet-wide step-latency
+//! histograms for free.
+//!
+//! Histogram summaries use [`crate::util::stats::percentile`]
+//! (nearest-rank), so a brute-force oracle over the raw samples must agree
+//! exactly — that equivalence is pinned by tests.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+#[derive(Debug, Default)]
+struct Store {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Vec<f64>>,
+}
+
+/// Shared, thread-safe metrics store. Cheap to clone (Arc).
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    inner: Arc<Mutex<Store>>,
+}
+
+/// Summary statistics for one histogram (nearest-rank percentiles).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSummary {
+    pub count: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn counter_add(&self, name: &str, n: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += n;
+    }
+
+    /// Current counter value (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    pub fn gauge_set(&self, name: &str, value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
+    }
+
+    /// Record one histogram sample.
+    pub fn observe(&self, name: &str, value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.histograms.entry(name.to_string()).or_default().push(value);
+    }
+
+    /// Raw samples for one histogram (test/oracle helper).
+    pub fn samples(&self, name: &str) -> Vec<f64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .histograms
+            .get(name)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<HistogramSummary> {
+        let g = self.inner.lock().unwrap();
+        let xs = g.histograms.get(name)?;
+        Some(summarize(xs))
+    }
+
+    /// All metric names, grouped `(counters, gauges, histograms)`, sorted.
+    pub fn names(&self) -> (Vec<String>, Vec<String>, Vec<String>) {
+        let g = self.inner.lock().unwrap();
+        (
+            g.counters.keys().cloned().collect(),
+            g.gauges.keys().cloned().collect(),
+            g.histograms.keys().cloned().collect(),
+        )
+    }
+
+    /// Gauges whose name starts with `prefix` (key, value), sorted by key.
+    pub fn gauges_with_prefix(&self, prefix: &str) -> Vec<(String, f64)> {
+        let g = self.inner.lock().unwrap();
+        g.gauges
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+
+    /// One JSON object per metric, sorted by kind then name. This is the
+    /// JSONL schema: `kind`, `name`, then `value` (counter/gauge) or
+    /// `count/mean/min/max/p50/p90/p99` (histogram).
+    pub fn snapshot_lines(&self) -> Vec<Json> {
+        let g = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        for (name, v) in &g.counters {
+            out.push(Json::obj(vec![
+                ("kind", Json::str("counter")),
+                ("name", Json::str(name.clone())),
+                ("value", Json::Num(*v as f64)),
+            ]));
+        }
+        for (name, v) in &g.gauges {
+            out.push(Json::obj(vec![
+                ("kind", Json::str("gauge")),
+                ("name", Json::str(name.clone())),
+                ("value", Json::Num(*v)),
+            ]));
+        }
+        for (name, xs) in &g.histograms {
+            let s = summarize(xs);
+            out.push(Json::obj(vec![
+                ("kind", Json::str("histogram")),
+                ("name", Json::str(name.clone())),
+                ("count", Json::Num(s.count as f64)),
+                ("mean", Json::Num(s.mean)),
+                ("min", Json::Num(s.min)),
+                ("max", Json::Num(s.max)),
+                ("p50", Json::Num(s.p50)),
+                ("p90", Json::Num(s.p90)),
+                ("p99", Json::Num(s.p99)),
+            ]));
+        }
+        out
+    }
+
+    /// Write the snapshot as JSON-lines to `path`.
+    pub fn export_jsonl(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut out = String::new();
+        for line in self.snapshot_lines() {
+            out.push_str(&line.to_string());
+            out.push('\n');
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+}
+
+fn summarize(xs: &[f64]) -> HistogramSummary {
+    HistogramSummary {
+        count: xs.len(),
+        mean: stats::mean(xs),
+        min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        p50: stats::percentile(xs, 50.0),
+        p90: stats::percentile(xs, 90.0),
+        p99: stats::percentile(xs, 99.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_clones_share() {
+        let reg = MetricsRegistry::new();
+        let other = reg.clone();
+        reg.counter_add("a", 2);
+        other.counter_add("a", 3);
+        assert_eq!(reg.counter("a"), 5);
+        assert_eq!(reg.counter("never"), 0);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let reg = MetricsRegistry::new();
+        reg.gauge_set("g", 1.0);
+        reg.gauge_set("g", 2.5);
+        assert_eq!(reg.gauge("g"), Some(2.5));
+        assert_eq!(reg.gauge("missing"), None);
+    }
+
+    #[test]
+    fn histogram_percentiles_match_brute_force_oracle() {
+        let reg = MetricsRegistry::new();
+        // Deterministic pseudo-random samples (LCG), deliberately unsorted.
+        let mut x = 12345u64;
+        let mut raw = Vec::new();
+        for _ in 0..257 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = (x >> 33) as f64 / 1e6;
+            raw.push(v);
+            reg.observe("h", v);
+        }
+        let s = reg.histogram("h").unwrap();
+        assert_eq!(s.count, raw.len());
+        // Brute-force oracle: sort and index by nearest rank, independent
+        // of util::stats.
+        let mut sorted = raw.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let oracle = |p: f64| {
+            let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+            sorted[rank.min(sorted.len() - 1)]
+        };
+        assert_eq!(s.p50, oracle(50.0));
+        assert_eq!(s.p90, oracle(90.0));
+        assert_eq!(s.p99, oracle(99.0));
+        assert_eq!(s.min, sorted[0]);
+        assert_eq!(s.max, *sorted.last().unwrap());
+        let mean = raw.iter().sum::<f64>() / raw.len() as f64;
+        assert!((s.mean - mean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_lines_are_valid_json_with_schema() {
+        let reg = MetricsRegistry::new();
+        reg.counter_add("steps", 4);
+        reg.gauge_set("loss", 0.5);
+        reg.observe("lat", 1.0);
+        reg.observe("lat", 3.0);
+        let lines = reg.snapshot_lines();
+        assert_eq!(lines.len(), 3);
+        for line in &lines {
+            let parsed = Json::parse(&line.to_string()).unwrap();
+            assert!(parsed.get("kind").and_then(Json::as_str).is_some());
+            assert!(parsed.get("name").and_then(Json::as_str).is_some());
+        }
+        let hist = &lines[2];
+        assert_eq!(hist.get("kind").unwrap().as_str(), Some("histogram"));
+        assert_eq!(hist.get("count").unwrap().as_f64(), Some(2.0));
+        assert_eq!(hist.get("max").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn export_jsonl_writes_one_line_per_metric() {
+        let dir = std::env::temp_dir().join("mesp-obs-test-jsonl");
+        let path = dir.join("m.jsonl");
+        let reg = MetricsRegistry::new();
+        reg.counter_add("c", 1);
+        reg.gauge_set("g", 2.0);
+        reg.export_jsonl(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in lines {
+            Json::parse(l).unwrap();
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,30 @@
+//! Observability: structured tracing, a metrics registry, and the views
+//! that render them.
+//!
+//! The paper's claims are about *where* bytes and milliseconds go; this
+//! module makes those visible without perturbing the run. Three pieces:
+//!
+//! - [`TraceSink`] — structured spans and instant events (monotonic
+//!   timestamps, thread id, optional fleet job id) emitted from engine
+//!   steps (`fwd`/`bwd`/`opt` phases), refmath artifact calls, per-GEMM
+//!   kernel dispatch, arena scratch traffic, and fleet lifecycle
+//!   (admit/park/resume/done). Exports Chrome `trace_event` JSON that
+//!   opens directly in Perfetto (`--trace <path>`).
+//! - [`MetricsRegistry`] — named counters/gauges/histograms (step
+//!   latency, achieved GFLOP/s, bytes-by-tag, admission wait, preempt
+//!   churn) with a JSONL snapshot export (`--metrics-out <path>`).
+//!   Percentiles are nearest-rank via `util::stats::percentile`.
+//! - [`views`] — the CLI tables (`exec_stats_table`,
+//!   `FleetReport::render`) re-expressed as reads over the registry.
+//!
+//! Everything is observe-only and zero-dependency. The disabled trace
+//! sink is a `None` behind one branch, and the registry is touched only
+//! at step granularity, so instrumented and uninstrumented runs produce
+//! bitwise-identical losses and adapter weights — pinned by tests.
+
+mod metrics;
+mod trace;
+pub mod views;
+
+pub use metrics::{HistogramSummary, MetricsRegistry};
+pub use trace::{Span, TraceEvent, TraceSink};

@@ -1,0 +1,347 @@
+//! Structured trace spans/events with a Chrome `trace_event` exporter.
+//!
+//! The sink is a cheap handle: cloning shares one buffer, and the *disabled*
+//! sink (the default everywhere) carries `None` so every instrumentation
+//! point costs a single branch. Spans are RAII — [`TraceSink::span`] returns
+//! a [`Span`] guard that records a Chrome `"X"` (complete) event when it
+//! drops, which makes per-thread nesting well-formed by construction.
+//! Lifecycle moments (fleet admit/park/resume, arena checkout) are recorded
+//! as `"i"` (instant) events.
+//!
+//! Timestamps are microseconds from a monotonic clock anchored at sink
+//! creation; thread ids come from a process-local sequential counter so the
+//! export is stable-looking in Perfetto (std's `ThreadId` has no stable
+//! integer accessor). Telemetry is observe-only: nothing in this module
+//! feeds back into training, so traced and untraced runs stay bitwise
+//! identical.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Process-local sequential thread ids (Chrome traces want small ints).
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+fn current_tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// One recorded event. `ph` is the Chrome trace-event phase: `'X'` for a
+/// complete span (with duration), `'i'` for an instant.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: String,
+    pub cat: &'static str,
+    pub ph: char,
+    /// Microseconds since the sink was created.
+    pub ts_us: u64,
+    /// Span duration in microseconds (0 for instants).
+    pub dur_us: u64,
+    pub tid: u64,
+    /// Fleet job id, when the event was emitted through a job-scoped handle.
+    pub job: Option<u64>,
+    pub args: Vec<(&'static str, Json)>,
+}
+
+#[derive(Debug)]
+struct SinkInner {
+    start: Instant,
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+/// Shared, thread-safe event sink. The default (disabled) sink records
+/// nothing and costs one branch per instrumentation point.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSink {
+    inner: Option<Arc<SinkInner>>,
+    job: Option<u64>,
+}
+
+impl TraceSink {
+    /// A sink that drops everything — the zero-cost default.
+    pub fn disabled() -> TraceSink {
+        TraceSink::default()
+    }
+
+    /// A recording sink; timestamps are relative to this call.
+    pub fn enabled() -> TraceSink {
+        TraceSink {
+            inner: Some(Arc::new(SinkInner {
+                start: Instant::now(),
+                events: Mutex::new(Vec::new()),
+            })),
+            job: None,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// A handle that tags every event with a fleet job id (shares the
+    /// same underlying buffer).
+    pub fn for_job(&self, job: u64) -> TraceSink {
+        TraceSink {
+            inner: self.inner.clone(),
+            job: Some(job),
+        }
+    }
+
+    /// Open a span; the returned guard records an `"X"` event on drop.
+    pub fn span(&self, name: impl Into<String>, cat: &'static str) -> Span {
+        match &self.inner {
+            None => Span { rec: None },
+            Some(inner) => Span {
+                rec: Some(SpanRec {
+                    inner: Arc::clone(inner),
+                    name: name.into(),
+                    cat,
+                    started: Instant::now(),
+                    ts_us: inner.start.elapsed().as_micros() as u64,
+                    job: self.job,
+                    args: Vec::new(),
+                }),
+            },
+        }
+    }
+
+    /// Convenience: a `"gemm"` span carrying shape + FLOP args. Kept as a
+    /// method so kernel call sites stay one line.
+    pub fn gemm(&self, name: &'static str, m: usize, k: usize, n: usize) -> Span {
+        if self.inner.is_none() {
+            return Span { rec: None };
+        }
+        let mut sp = self.span(name, "gemm");
+        sp.arg("m", Json::Num(m as f64));
+        sp.arg("k", Json::Num(k as f64));
+        sp.arg("n", Json::Num(n as f64));
+        sp.arg("flops", Json::Num(2.0 * m as f64 * k as f64 * n as f64));
+        sp
+    }
+
+    /// Record an instant (`"i"`) event.
+    pub fn instant(&self, name: impl Into<String>, cat: &'static str, args: Vec<(&'static str, Json)>) {
+        let Some(inner) = &self.inner else { return };
+        let ev = TraceEvent {
+            name: name.into(),
+            cat,
+            ph: 'i',
+            ts_us: inner.start.elapsed().as_micros() as u64,
+            dur_us: 0,
+            tid: current_tid(),
+            job: self.job,
+            args,
+        };
+        inner.events.lock().unwrap().push(ev);
+    }
+
+    /// Snapshot of all recorded events (test/inspection helper).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        match &self.inner {
+            None => Vec::new(),
+            Some(inner) => inner.events.lock().unwrap().clone(),
+        }
+    }
+
+    /// Chrome trace-event JSON (`{"traceEvents": [...]}`), loadable in
+    /// Perfetto / `chrome://tracing`.
+    pub fn to_chrome_json(&self) -> Json {
+        let events = self.events();
+        let mut arr = Vec::with_capacity(events.len());
+        for ev in &events {
+            let mut pairs = vec![
+                ("name", Json::str(ev.name.clone())),
+                ("cat", Json::str(ev.cat)),
+                ("ph", Json::str(ev.ph.to_string())),
+                ("ts", Json::Num(ev.ts_us as f64)),
+                ("pid", Json::num(1u32)),
+                ("tid", Json::Num(ev.tid as f64)),
+            ];
+            if ev.ph == 'X' {
+                pairs.push(("dur", Json::Num(ev.dur_us as f64)));
+            }
+            if ev.ph == 'i' {
+                // Thread-scoped instants render as small arrows in Perfetto.
+                pairs.push(("s", Json::str("t")));
+            }
+            let mut args = ev.args.clone();
+            if let Some(job) = ev.job {
+                args.push(("job", Json::Num(job as f64)));
+            }
+            if !args.is_empty() {
+                pairs.push(("args", Json::obj(args)));
+            }
+            arr.push(Json::obj(pairs));
+        }
+        Json::obj(vec![("traceEvents", Json::Arr(arr))])
+    }
+
+    /// Write the Chrome trace to `path`.
+    pub fn export_chrome(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_chrome_json().to_string())?;
+        Ok(())
+    }
+}
+
+struct SpanRec {
+    inner: Arc<SinkInner>,
+    name: String,
+    cat: &'static str,
+    started: Instant,
+    ts_us: u64,
+    job: Option<u64>,
+    args: Vec<(&'static str, Json)>,
+}
+
+/// RAII span guard; records a complete event on drop. The disabled-path
+/// guard is a `None` and drops for free.
+pub struct Span {
+    rec: Option<SpanRec>,
+}
+
+impl Span {
+    /// Attach an argument after the span has opened (e.g. a FLOP delta
+    /// only known once the work ran).
+    pub fn arg(&mut self, key: &'static str, val: Json) {
+        if let Some(rec) = &mut self.rec {
+            rec.args.push((key, val));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(rec) = self.rec.take() else { return };
+        let ev = TraceEvent {
+            name: rec.name,
+            cat: rec.cat,
+            ph: 'X',
+            ts_us: rec.ts_us,
+            dur_us: rec.started.elapsed().as_micros() as u64,
+            tid: current_tid(),
+            job: rec.job,
+            args: rec.args,
+        };
+        rec.inner.events.lock().unwrap().push(ev);
+    }
+}
+
+impl std::fmt::Debug for SpanRec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpanRec")
+            .field("name", &self.name)
+            .field("cat", &self.cat)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let sink = TraceSink::disabled();
+        {
+            let mut sp = sink.span("x", "test");
+            sp.arg("k", Json::num(1u32));
+        }
+        sink.instant("i", "test", vec![]);
+        assert!(!sink.is_enabled());
+        assert!(sink.events().is_empty());
+    }
+
+    #[test]
+    fn spans_nest_well_formed_per_thread() {
+        let sink = TraceSink::enabled();
+        {
+            let _outer = sink.span("outer", "test");
+            {
+                let _inner = sink.span("inner", "test");
+            }
+            let _sibling = sink.span("sibling", "test");
+        }
+        let events = sink.events();
+        assert_eq!(events.len(), 3);
+        // Inner spans close first, so they appear first in the buffer.
+        assert_eq!(events[0].name, "inner");
+        // Every pair of spans on one thread must be disjoint or nested —
+        // never partially overlapping.
+        for a in &events {
+            for b in &events {
+                if a.tid != b.tid {
+                    continue;
+                }
+                let (a0, a1) = (a.ts_us, a.ts_us + a.dur_us);
+                let (b0, b1) = (b.ts_us, b.ts_us + b.dur_us);
+                let disjoint = a1 <= b0 || b1 <= a0;
+                let nested = (a0 >= b0 && a1 <= b1) || (b0 >= a0 && b1 <= a1);
+                assert!(disjoint || nested, "partial overlap: {a:?} vs {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn threads_get_distinct_tids() {
+        let sink = TraceSink::enabled();
+        let s2 = sink.clone();
+        let h = std::thread::spawn(move || {
+            let _sp = s2.span("worker", "test");
+        });
+        h.join().unwrap();
+        let _sp = sink.span("main", "test");
+        drop(_sp);
+        let events = sink.events();
+        assert_eq!(events.len(), 2);
+        assert_ne!(events[0].tid, events[1].tid);
+    }
+
+    #[test]
+    fn chrome_export_round_trips_through_parser() {
+        let sink = TraceSink::enabled();
+        {
+            let mut sp = sink.span("gemm", "kernel");
+            sp.arg("m", Json::num(4u32));
+        }
+        sink.for_job(7).instant("admit", "fleet", vec![("bytes", Json::num(9u32))]);
+        let text = sink.to_chrome_json().to_string();
+        let parsed = Json::parse(&text).expect("valid JSON");
+        let evs = parsed.req("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        for ev in evs {
+            assert!(ev.get("name").and_then(Json::as_str).is_some());
+            assert!(ev.get("ph").and_then(Json::as_str).is_some());
+            assert!(ev.get("ts").and_then(Json::as_f64).is_some());
+            assert!(ev.get("tid").and_then(Json::as_f64).is_some());
+        }
+        let admit = &evs[1];
+        assert_eq!(admit.get("ph").unwrap().as_str(), Some("i"));
+        let job = admit.req("args").unwrap().req("job").unwrap().as_f64();
+        assert_eq!(job, Some(7.0));
+    }
+
+    #[test]
+    fn gemm_span_carries_shape_and_flops() {
+        let sink = TraceSink::enabled();
+        drop(sink.gemm("matmul", 2, 3, 4));
+        let ev = &sink.events()[0];
+        assert_eq!(ev.cat, "gemm");
+        let flops = ev
+            .args
+            .iter()
+            .find(|(k, _)| *k == "flops")
+            .and_then(|(_, v)| v.as_f64());
+        assert_eq!(flops, Some(48.0));
+    }
+}

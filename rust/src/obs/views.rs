@@ -1,0 +1,84 @@
+//! Views: rendering registry contents back into the tables the CLI prints.
+//!
+//! `exec_stats_table` / `FleetReport::render` used to aggregate ad-hoc;
+//! they now load their numbers into a [`MetricsRegistry`] and render from
+//! it, so the printed tables and the `--metrics-out` JSONL export are two
+//! views over the same store and cannot drift.
+
+use super::MetricsRegistry;
+use crate::runtime::ExecStats;
+
+/// Load per-artifact execution stats into the registry under
+/// `artifact/<name>/{calls,total_secs,flops}`.
+pub fn exec_stats_into(reg: &MetricsRegistry, stats: &[(String, ExecStats)]) {
+    for (name, s) in stats {
+        reg.counter_add(&format!("artifact/{name}/calls"), s.calls);
+        reg.gauge_set(&format!("artifact/{name}/total_secs"), s.total_secs);
+        reg.gauge_set(&format!("artifact/{name}/flops"), s.flops as f64);
+    }
+}
+
+/// Render the per-artifact table (slowest first) from registry contents.
+/// Layout matches the historical `exec_stats_table` exactly.
+pub fn render_exec_stats(reg: &MetricsRegistry) -> String {
+    let mut names: Vec<(String, f64)> = reg
+        .gauges_with_prefix("artifact/")
+        .into_iter()
+        .filter_map(|(k, v)| {
+            let name = k.strip_prefix("artifact/")?.strip_suffix("/total_secs")?;
+            Some((name.to_string(), v))
+        })
+        .collect();
+    names.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+
+    let mut t = crate::metrics::TableBuilder::new(&[
+        "Artifact", "Calls", "Total s", "ms/call", "GFLOP", "GFLOP/s",
+    ]);
+    for (name, total_secs) in names {
+        let calls = reg.counter(&format!("artifact/{name}/calls"));
+        let flops = reg
+            .gauge(&format!("artifact/{name}/flops"))
+            .unwrap_or(0.0);
+        let ms_per_call = if calls > 0 {
+            total_secs * 1e3 / calls as f64
+        } else {
+            0.0
+        };
+        let gflops_per_sec = if total_secs > 0.0 {
+            flops / 1e9 / total_secs
+        } else {
+            0.0
+        };
+        t.row(vec![
+            name,
+            calls.to_string(),
+            format!("{total_secs:.3}"),
+            format!("{ms_per_call:.3}"),
+            format!("{:.3}", flops / 1e9),
+            format!("{gflops_per_sec:.2}"),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_stats_view_orders_slowest_first() {
+        let reg = MetricsRegistry::new();
+        exec_stats_into(
+            &reg,
+            &[
+                ("fast".to_string(), ExecStats { calls: 1, total_secs: 0.1, flops: 1_000_000 }),
+                ("slow".to_string(), ExecStats { calls: 2, total_secs: 3.0, flops: 6_000_000_000 }),
+            ],
+        );
+        let s = render_exec_stats(&reg);
+        let slow_at = s.find("slow").unwrap();
+        let fast_at = s.find("fast").unwrap();
+        assert!(slow_at < fast_at, "{s}");
+        assert_eq!(reg.counter("artifact/slow/calls"), 2);
+    }
+}

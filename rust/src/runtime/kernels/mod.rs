@@ -49,6 +49,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub use crate::config::KernelKind;
 use crate::memory::MemoryTracker;
 use crate::model::quant;
+use crate::obs::TraceSink;
 use crate::tensor::{ScratchBuf, TensorArena};
 
 /// How the kernel engine is configured (CLI: `--kernel`, `--threads`).
@@ -160,6 +161,8 @@ pub struct Kernels {
     threads: usize,
     arena: TensorArena,
     flops: AtomicU64,
+    /// Per-GEMM span sink; disabled by default (one branch per call).
+    trace: TraceSink,
 }
 
 impl Kernels {
@@ -177,7 +180,17 @@ impl Kernels {
             threads: threads.clamp(1, auto_threads()),
             arena: TensorArena::new(tracker),
             flops: AtomicU64::new(0),
+            trace: TraceSink::disabled(),
         }
+    }
+
+    /// Attach a trace sink: every GEMM emits a span (shape + FLOPs) and
+    /// the arena emits checkout/return instants. Consuming builder so
+    /// `KernelOptions` stays a plain `Copy` struct.
+    pub fn with_trace(mut self, trace: TraceSink) -> Kernels {
+        self.arena = self.arena.with_trace(trace.clone());
+        self.trace = trace;
+        self
     }
 
     /// Single-threaded naive engine on a throwaway tracker (unit tests).
@@ -214,6 +227,7 @@ impl Kernels {
     pub fn matmul(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> ScratchBuf {
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(b.len(), k * n);
+        let _sp = self.trace.gemm("matmul", m, k, n);
         let mut out = self.arena.take(m * n);
         self.add_flops(2 * (m * k * n) as u64);
         match self.kind {
@@ -227,6 +241,7 @@ impl Kernels {
     pub fn matmul_at(&self, a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> ScratchBuf {
         debug_assert_eq!(a.len(), k * m);
         debug_assert_eq!(b.len(), k * n);
+        let _sp = self.trace.gemm("matmul_at", m, k, n);
         let mut out = self.arena.take(m * n);
         self.add_flops(2 * (m * k * n) as u64);
         match self.kind {
@@ -242,6 +257,7 @@ impl Kernels {
     pub fn matmul_bt(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> ScratchBuf {
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(b.len(), n * k);
+        let _sp = self.trace.gemm("matmul_bt", m, k, n);
         let mut out = self.arena.take(m * n);
         self.add_flops(2 * (m * k * n) as u64);
         match self.kind {
@@ -282,6 +298,7 @@ impl Kernels {
     pub fn matmul_q4(&self, a: &[f32], w: Q4View, m: usize) -> ScratchBuf {
         let (k, n) = (w.din, w.dout);
         debug_assert_eq!(a.len(), m * k);
+        let _sp = self.trace.gemm("matmul_q4", m, k, n);
         let mut out = self.arena.take(m * n);
         self.add_flops(2 * (m * k * n) as u64);
         match self.kind {
@@ -299,6 +316,7 @@ impl Kernels {
     pub fn matmul_bt_q4(&self, a: &[f32], w: Q4View, m: usize) -> ScratchBuf {
         let (k, n) = (w.dout, w.din);
         debug_assert_eq!(a.len(), m * k);
+        let _sp = self.trace.gemm("matmul_bt_q4", m, k, n);
         let mut out = self.arena.take(m * n);
         self.add_flops(2 * (m * k * n) as u64);
         match self.kind {
@@ -479,6 +497,31 @@ mod tests {
         assert_eq!(ks.flops(), 2 * 4 * 6 * 8);
         ks.add_flops(10);
         assert_eq!(ks.flops(), 2 * 4 * 6 * 8 + 10);
+    }
+
+    #[test]
+    fn traced_gemms_emit_shape_spans() {
+        let sink = TraceSink::enabled();
+        let ks = engine(KernelKind::Tiled, 1).with_trace(sink.clone());
+        let (a, b) = mats(4, 6, 8, 9);
+        let _o = ks.matmul(&a, &b, 4, 6, 8);
+        let evs = sink.events();
+        let gemm = evs
+            .iter()
+            .find(|e| e.cat == "gemm")
+            .expect("a gemm span must be recorded");
+        assert_eq!(gemm.name, "matmul");
+        let arg = |key: &str| {
+            gemm.args
+                .iter()
+                .find(|(k, _)| *k == key)
+                .and_then(|(_, v)| v.as_f64())
+        };
+        assert_eq!(arg("m"), Some(4.0));
+        assert_eq!(arg("k"), Some(6.0));
+        assert_eq!(arg("n"), Some(8.0));
+        assert_eq!(arg("flops"), Some(2.0 * 4.0 * 6.0 * 8.0));
+        assert!(evs.iter().any(|e| e.name == "arena:take"));
     }
 
     #[test]

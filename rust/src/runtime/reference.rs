@@ -20,11 +20,13 @@ use std::time::Instant;
 use crate::config::{ModelDims, FROZEN, PROJS};
 use crate::memory::MemoryTracker;
 use crate::model::quant;
+use crate::obs::TraceSink;
 use crate::runtime::backend::{Arg, Backend, DeviceBuffer, ExecStats, StatsRecorder};
 use crate::runtime::kernels::{FrozenW, Kernels, KernelOptions, Q4View};
 use crate::runtime::manifest::{ArgSpec, ArtifactSpec};
 use crate::runtime::refmath as rm;
 use crate::tensor::{DType, HostTensor, ScratchBuf};
+use crate::util::json::Json;
 
 /// Residual-set tensor names emitted by `block_fwd_residuals` (after y) —
 /// must match `python/compile/model.py::RESIDUALS`.
@@ -49,6 +51,8 @@ pub struct ReferenceBackend {
     tracker: MemoryTracker,
     stats: StatsRecorder,
     kernels: Kernels,
+    /// Artifact-call spans; disabled by default (one branch per call).
+    trace: TraceSink,
 }
 
 impl ReferenceBackend {
@@ -67,10 +71,30 @@ impl ReferenceBackend {
         tracker: MemoryTracker,
         opts: KernelOptions,
     ) -> ReferenceBackend {
+        Self::with_telemetry(dims, tracker, opts, TraceSink::disabled())
+    }
+
+    /// Backend with an explicit kernel selection AND a trace sink: every
+    /// artifact call becomes a span (cat `artifact`, FLOP + input-byte
+    /// args) and the sink is threaded into the kernel engine so per-GEMM
+    /// spans and arena instants nest inside it.
+    pub fn with_telemetry(
+        dims: impl Into<Arc<ModelDims>>,
+        tracker: MemoryTracker,
+        opts: KernelOptions,
+        trace: TraceSink,
+    ) -> ReferenceBackend {
         let dims = dims.into();
         let specs = build_specs(&dims);
-        let kernels = Kernels::new(opts, tracker.clone());
-        ReferenceBackend { dims, specs, tracker, stats: StatsRecorder::new(), kernels }
+        let kernels = Kernels::new(opts, tracker.clone()).with_trace(trace.clone());
+        ReferenceBackend {
+            dims,
+            specs,
+            tracker,
+            stats: StatsRecorder::new(),
+            kernels,
+            trace,
+        }
     }
 
     /// The kernel engine (kind, thread budget, arena stats, FLOP counter).
@@ -356,18 +380,19 @@ impl Backend for ReferenceBackend {
         // kernel-engine FLOP counter delta brackets exactly this call.
         let flops0 = self.kernels.flops();
         let start = Instant::now();
+        let mut sp = self.trace.span(name, "artifact");
         let outputs = self.dispatch(name, &tensors)?;
+        let flops = self.kernels.flops() - flops0;
+        sp.arg("flops", Json::Num(flops as f64));
+        sp.arg("in_bytes", Json::Num(in_bytes as f64));
+        drop(sp);
         anyhow::ensure!(
             outputs.len() == spec.outputs,
             "{name}: spec promises {} outputs, got {}",
             spec.outputs,
             outputs.len()
         );
-        self.stats.record(
-            name,
-            start.elapsed().as_secs_f64(),
-            self.kernels.flops() - flops0,
-        );
+        self.stats.record(name, start.elapsed().as_secs_f64(), flops);
         Ok(outputs)
     }
 
@@ -671,6 +696,38 @@ mod tests {
             emb.as_f32()[..d.d_model],
             "token 0 row"
         );
+    }
+
+    #[test]
+    fn traced_execute_emits_artifact_span() {
+        let sink = TraceSink::enabled();
+        let be = ReferenceBackend::with_telemetry(
+            presets::compiled("toy").unwrap(),
+            MemoryTracker::new(),
+            KernelOptions::default(),
+            sink.clone(),
+        );
+        let d = be.dims().clone();
+        let mut rng = Rng::new(7);
+        let emb = HostTensor::randn(&[d.vocab, d.d_model], 0.02, &mut rng);
+        let tokens = HostTensor::i32(&[1, d.seq], vec![0; d.seq]);
+        be.execute("embed_fwd", &[Arg::Host(&tokens), Arg::Host(&emb)])
+            .unwrap();
+        let spans: Vec<_> = sink
+            .events()
+            .into_iter()
+            .filter(|e| e.cat == "artifact")
+            .collect();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "embed_fwd");
+        let in_bytes = spans[0]
+            .args
+            .iter()
+            .find(|(k, _)| *k == "in_bytes")
+            .map(|(_, v)| v.clone())
+            .unwrap();
+        let expect = (tokens.bytes() + emb.bytes()) as f64;
+        assert_eq!(in_bytes, Json::Num(expect));
     }
 
     #[test]

@@ -22,6 +22,8 @@
 use std::sync::{Arc, Mutex};
 
 use crate::memory::{Guard, MemoryTracker};
+use crate::obs::TraceSink;
+use crate::util::json::Json;
 
 /// Cumulative arena statistics (observability, not accounting).
 #[derive(Debug, Clone, Copy, Default)]
@@ -46,17 +48,29 @@ struct Pool {
 pub struct TensorArena {
     pool: Arc<Mutex<Pool>>,
     tracker: MemoryTracker,
+    /// Checkout/return instants; disabled by default (one branch each).
+    trace: TraceSink,
 }
 
 impl TensorArena {
     /// An arena whose checkouts are charged to `tracker` under `scratch`.
     pub fn new(tracker: MemoryTracker) -> TensorArena {
-        TensorArena { pool: Arc::new(Mutex::new(Pool::default())), tracker }
+        TensorArena {
+            pool: Arc::new(Mutex::new(Pool::default())),
+            tracker,
+            trace: TraceSink::disabled(),
+        }
+    }
+
+    /// Attach a trace sink: every checkout/return emits an instant event.
+    pub fn with_trace(mut self, trace: TraceSink) -> TensorArena {
+        self.trace = trace;
+        self
     }
 
     /// Check out a zeroed `len`-element f32 buffer.
     pub fn take(&self, len: usize) -> ScratchBuf {
-        let mut data = {
+        let (mut data, hit) = {
             let mut p = self.pool.lock().unwrap();
             // Best-fit: smallest pooled capacity that holds `len`, so one
             // huge buffer is not burned on a tiny checkout.
@@ -73,16 +87,26 @@ impl TensorArena {
                     let v = p.free.swap_remove(i);
                     p.stats.hits += 1;
                     p.stats.pooled_bytes -= (v.capacity() * 4) as u64;
-                    v
+                    (v, true)
                 }
                 None => {
                     p.stats.misses += 1;
-                    Vec::new()
+                    (Vec::new(), false)
                 }
             }
         };
         data.clear();
         data.resize(len, 0.0);
+        if self.trace.is_enabled() {
+            self.trace.instant(
+                "arena:take",
+                "arena",
+                vec![
+                    ("bytes", Json::Num((len * 4) as f64)),
+                    ("hit", Json::Bool(hit)),
+                ],
+            );
+        }
         let guard = self.tracker.track("scratch", (len * 4) as u64);
         ScratchBuf { data, arena: Some(self.clone()), _guard: Some(guard) }
     }
@@ -97,6 +121,13 @@ impl TensorArena {
     fn give_back(&self, data: Vec<f32>) {
         if data.capacity() == 0 {
             return;
+        }
+        if self.trace.is_enabled() {
+            self.trace.instant(
+                "arena:return",
+                "arena",
+                vec![("bytes", Json::Num((data.capacity() * 4) as f64))],
+            );
         }
         let mut p = self.pool.lock().unwrap();
         p.stats.pooled_bytes += (data.capacity() * 4) as u64;
@@ -233,6 +264,19 @@ mod tests {
         assert_eq!(v.len(), 10);
         assert_eq!(t.live(), 0, "escaped buffers release their scratch tag");
         assert_eq!(arena.stats().pooled_bytes, 0, "capacity left the pool");
+    }
+
+    #[test]
+    fn traced_checkouts_emit_instants() {
+        let sink = TraceSink::enabled();
+        let arena =
+            TensorArena::new(MemoryTracker::new()).with_trace(sink.clone());
+        {
+            let _b = arena.take(16);
+        }
+        let names: Vec<String> =
+            sink.events().into_iter().map(|e| e.name).collect();
+        assert_eq!(names, vec!["arena:take", "arena:return"]);
     }
 
     #[test]

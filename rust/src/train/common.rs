@@ -9,8 +9,10 @@ use crate::config::{OptimizerKind, QuantMode, PROJS};
 use crate::data::Batch;
 use crate::memory::{Guard, MemoryTracker};
 use crate::model::{quant, AdapterState, FrozenModel};
+use crate::obs::TraceSink;
 use crate::runtime::{Arg, Backend, DeviceBuffer};
 use crate::tensor::HostTensor;
+use crate::util::json::Json;
 
 use super::{CheckpointStore, Optimizer, StepStats};
 
@@ -48,6 +50,9 @@ pub struct EngineCtx {
     pub step: usize,
     /// Checkpoint-store disk-spill budget in bytes (0 = never spill).
     pub spill_limit: u64,
+    /// Structured tracing (step/fwd/bwd/opt spans); disabled by default.
+    /// Observe-only — traced and untraced runs are bitwise identical.
+    pub trace: TraceSink,
     quant: QuantMode,
     /// Upload-backend path only (`shares_host_memory() == false`):
     /// per-session device copies of the frozen state, in artifact ABI
@@ -70,6 +75,7 @@ impl EngineCtx {
         opt_kind: OptimizerKind,
         lr: f32,
         spill_limit: u64,
+        trace: TraceSink,
     ) -> anyhow::Result<Self> {
         let quant = frozen.quant;
         if quant == QuantMode::Q4 {
@@ -117,8 +123,8 @@ impl EngineCtx {
                 (dev_frozen, Some(dev_emb), Some(dev_fnorm), Some(guard))
             };
         Ok(EngineCtx {
-            rt, frozen, adapters, opt, tracker, step: 0, spill_limit, quant,
-            dev_frozen, dev_emb, dev_fnorm, _dev_guard,
+            rt, frozen, adapters, opt, tracker, step: 0, spill_limit, trace,
+            quant, dev_frozen, dev_emb, dev_fnorm, _dev_guard,
         })
     }
 
@@ -242,6 +248,8 @@ impl EngineCtx {
     ) -> anyhow::Result<HostTensor> {
         anyhow::ensure!(outs.len() == 1 + 2 * PROJS.len(),
                         "expected 15 backward outputs, got {}", outs.len());
+        let mut _sp = self.trace.span("opt", "train");
+        _sp.arg("layer", Json::Num(layer as f64));
         // Gradients are transient: tracked only while the update runs.
         let g_bytes: u64 = outs[1..].iter().map(|t| t.bytes()).sum();
         let _g = self.tracker.track("grads:block", g_bytes);
@@ -264,6 +272,7 @@ impl EngineCtx {
         batch: &Batch,
         store: &mut CheckpointStore,
     ) -> anyhow::Result<HostTensor> {
+        let _sp = self.trace.span("fwd", "train");
         let mut x = self.embed(&batch.tokens)?;
         for l in 0..self.rt.dims().n_layers {
             let y = self.block_fwd(l, &x)?;
@@ -280,9 +289,15 @@ impl EngineCtx {
     {
         self.tracker.reset_peak();
         let start = Instant::now();
+        let mut sp = self.trace.span("step", "train");
+        sp.arg("step", Json::Num((self.step + 1) as f64));
         let loss = body(self)?;
+        drop(sp);
         let secs = start.elapsed().as_secs_f64();
         self.step += 1;
+        // Timeline annotation: lets `mesp report` split the memory
+        // timeline into per-step segments (no-op without a timeline).
+        self.tracker.mark_step(self.step as u64);
         Ok(StepStats {
             step: self.step,
             loss,

@@ -44,6 +44,7 @@ impl MebpEngine {
             -> anyhow::Result<HostTensor>,
     {
         use crate::runtime::Arg;
+        let _sp = ctx.trace.span("bwd", "train");
         let fwd_name = ctx.artifact("block_fwd_residuals");
         let bwd_name = ctx.artifact("block_bwd_residuals");
         for l in (0..ctx.rt.dims().n_layers).rev() {

@@ -38,6 +38,7 @@ impl MespEngine {
         F: FnMut(&mut EngineCtx, usize, Vec<HostTensor>)
             -> anyhow::Result<HostTensor>,
     {
+        let _sp = ctx.trace.span("bwd", "train");
         let bwd = ctx.artifact("block_bwd_mesp");
         for l in (0..ctx.rt.dims().n_layers).rev() {
             let x = store.take(l)?; // checkpoint consumed, freed after call

@@ -35,6 +35,7 @@ impl MezoEngine {
     /// Inference forward: no checkpoints — each block's input is dropped
     /// as soon as its output exists (MeZO's memory advantage).
     fn forward_loss(ctx: &EngineCtx, batch: &Batch) -> anyhow::Result<f64> {
+        let _sp = ctx.trace.span("fwd", "train");
         let mut x = ctx.embed(&batch.tokens)?;
         for l in 0..ctx.rt.dims().n_layers {
             x = ctx.block_fwd(l, &x)?;
@@ -95,6 +96,8 @@ impl Engine for MezoEngine {
         // state living across the two forward passes.
         self.ctx.tracker.reset_peak();
         let start = std::time::Instant::now();
+        let mut sp = self.ctx.trace.span("step", "train");
+        sp.arg("step", crate::util::json::Json::Num((self.ctx.step + 1) as f64));
         let (z, z_guard) = self.sample_z(self.ctx.step);
         let (l_plus, l_minus, c) = self.spsa(batch, &z)?;
         // θ ← θ − lr·c·z (plain SGD on the SPSA estimate, as in MeZO)
@@ -107,7 +110,9 @@ impl Engine for MezoEngine {
             self.ctx.adapters.lora[l].unflatten(&flat);
         }
         drop(z_guard);
+        drop(sp);
         self.ctx.step += 1;
+        self.ctx.tracker.mark_step(self.ctx.step as u64);
         Ok(StepStats {
             step: self.ctx.step,
             loss: 0.5 * (l_plus + l_minus),

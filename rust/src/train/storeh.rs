@@ -44,6 +44,7 @@ impl StoreHEngine {
     fn forward(&mut self, batch: &Batch) -> anyhow::Result<HostTensor> {
         use crate::runtime::Arg;
         let ctx = &self.ctx;
+        let _sp = ctx.trace.span("fwd", "train");
         let fwd = ctx.artifact("block_fwd_saveh");
         let mut x = ctx.embed(&batch.tokens)?;
         for l in 0..ctx.rt.dims().n_layers {
@@ -74,6 +75,7 @@ impl StoreHEngine {
             -> anyhow::Result<HostTensor>,
     {
         use crate::runtime::Arg;
+        let _sp = ctx.trace.span("bwd", "train");
         let bwd = ctx.artifact("block_bwd_storeh");
         for l in (0..ctx.rt.dims().n_layers).rev() {
             let x = store.take(l)?;
@@ -101,6 +103,8 @@ impl Engine for StoreHEngine {
     fn step(&mut self, batch: &Batch) -> anyhow::Result<StepStats> {
         self.ctx.tracker.reset_peak();
         let start = std::time::Instant::now();
+        let mut sp = self.ctx.trace.span("step", "train");
+        sp.arg("step", crate::util::json::Json::Num((self.ctx.step + 1) as f64));
         let h = self.forward(batch)?;
         let (loss, g) = self.ctx.loss_grad(&h, &batch.targets)?;
         drop(h);
@@ -108,7 +112,9 @@ impl Engine for StoreHEngine {
             &mut self.ctx, &mut self.store, &mut self.saved_h, g,
             |ctx, l, outs| ctx.apply_block_grads(l, outs),
         )?;
+        drop(sp);
         self.ctx.step += 1;
+        self.ctx.tracker.mark_step(self.ctx.step as u64);
         Ok(StepStats {
             step: self.ctx.step,
             loss,

@@ -1,0 +1,188 @@
+//! Telemetry integration tier: the obs subsystem must be OBSERVE-ONLY
+//! (tracing on vs off is bitwise identical in losses and adapter
+//! params), the trace of a real session must contain the span hierarchy
+//! the module promises (step ⊃ fwd/bwd/opt ⊃ artifact ⊃ gemm), the
+//! Chrome export must survive a file round-trip, and the metrics
+//! registry's deterministic slice (counters, FLOPs, losses) must be
+//! identical across kernel variants.
+
+use mesp::config::{KernelKind, Method, TrainConfig};
+use mesp::coordinator::TrainSession;
+use mesp::obs::{MetricsRegistry, TraceSink};
+use mesp::util::Json;
+
+fn base() -> TrainConfig {
+    TrainConfig {
+        config: "toy".into(),
+        method: Method::Mesp,
+        lr: 5e-3,
+        seed: 42,
+        log_every: usize::MAX,
+        ..Default::default()
+    }
+}
+
+/// Run `steps` steps and return (per-step loss bits, adapter param bits).
+fn run_bits(
+    cfg: TrainConfig,
+    trace: Option<TraceSink>,
+    steps: usize,
+) -> (Vec<u64>, Vec<u32>) {
+    let mut b = TrainSession::builder(cfg);
+    if let Some(t) = trace {
+        b = b.trace(t);
+    }
+    let mut sess = b.build().unwrap();
+    sess.run(steps).unwrap();
+    let loss_bits = sess.losses().iter().map(|l| l.to_bits()).collect();
+    let adapter_bits = sess
+        .engine
+        .ctx()
+        .adapters
+        .lora
+        .iter()
+        .flat_map(|a| a.flatten())
+        .map(f32::to_bits)
+        .collect();
+    (loss_bits, adapter_bits)
+}
+
+#[test]
+fn tracing_on_off_bitwise_identical() {
+    let sink = TraceSink::enabled();
+    let (loss_on, params_on) = run_bits(base(), Some(sink.clone()), 6);
+    let (loss_off, params_off) = run_bits(base(), None, 6);
+    assert!(!sink.events().is_empty(), "enabled sink saw no events");
+    assert_eq!(loss_on, loss_off, "telemetry perturbed the loss stream");
+    assert_eq!(params_on, params_off, "telemetry perturbed the params");
+}
+
+#[test]
+fn session_trace_contains_expected_span_hierarchy() {
+    let steps = 3;
+    let sink = TraceSink::enabled();
+    let mut sess = TrainSession::builder(base())
+        .trace(sink.clone())
+        .build()
+        .unwrap();
+    let layers = sess.engine.ctx().rt.dims().n_layers;
+    sess.run(steps).unwrap();
+    let evs = sink.events();
+    let count = |name: &str, cat: &str| {
+        evs.iter()
+            .filter(|e| e.name == name && e.cat == cat && e.ph == 'X')
+            .count()
+    };
+    assert_eq!(count("step", "train"), steps);
+    assert_eq!(count("fwd", "train"), steps);
+    assert_eq!(count("bwd", "train"), steps);
+    assert_eq!(count("opt", "train"), steps * layers, "one opt span per layer");
+    assert!(
+        evs.iter().any(|e| e.cat == "artifact"),
+        "no artifact spans recorded"
+    );
+    let gemm = evs.iter().find(|e| e.cat == "gemm").expect("no GEMM spans");
+    for key in ["m", "k", "n", "flops"] {
+        assert!(
+            gemm.args.iter().any(|(k, _)| *k == key),
+            "GEMM span lacks '{key}' arg: {:?}",
+            gemm.args
+        );
+    }
+    // Single-threaded session: every train-phase span pair on the main
+    // thread must be disjoint or properly nested.
+    let train: Vec<_> = evs.iter().filter(|e| e.cat == "train").collect();
+    for a in &train {
+        for b in &train {
+            if a.tid != b.tid {
+                continue;
+            }
+            let (a0, a1) = (a.ts_us, a.ts_us + a.dur_us);
+            let (b0, b1) = (b.ts_us, b.ts_us + b.dur_us);
+            let disjoint = a1 <= b0 || b1 <= a0;
+            let nested = (a0 >= b0 && a1 <= b1) || (b0 >= a0 && b1 <= a1);
+            assert!(
+                disjoint || nested,
+                "partially overlapping spans: {} vs {}",
+                a.name,
+                b.name
+            );
+        }
+    }
+}
+
+#[test]
+fn chrome_export_round_trips_from_real_session() {
+    let sink = TraceSink::enabled();
+    let mut sess = TrainSession::builder(base())
+        .trace(sink.clone())
+        .build()
+        .unwrap();
+    sess.run(2).unwrap();
+    let dir = std::env::temp_dir().join(format!(
+        "mesp-obs-test-{}",
+        std::process::id()
+    ));
+    let path = dir.join("trace.json");
+    sink.export_chrome(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    let parsed = Json::parse(&text).expect("exported trace must be valid JSON");
+    let evs = parsed.req("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(evs.len(), sink.events().len());
+    let steps = evs
+        .iter()
+        .filter(|e| {
+            e.get("name").and_then(Json::as_str) == Some("step")
+                && e.get("ph").and_then(Json::as_str) == Some("X")
+        })
+        .count();
+    assert_eq!(steps, 2, "exported trace lost step spans");
+}
+
+/// The deterministic slice of a registry snapshot: counters (step and
+/// artifact-call counts), total FLOPs per artifact, and the final loss
+/// gauge. Timing metrics are excluded — they legitimately differ.
+fn deterministic_lines(reg: &MetricsRegistry) -> Vec<String> {
+    reg.snapshot_lines()
+        .into_iter()
+        .filter_map(|j| {
+            let kind = j.get("kind")?.as_str()?.to_string();
+            let name = j.get("name")?.as_str()?.to_string();
+            let keep = kind == "counter"
+                || name == "step/loss"
+                || (name.starts_with("artifact/") && name.ends_with("/flops"));
+            if keep {
+                Some(j.to_string())
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn registry_deterministic_slice_identical_tiled_vs_parallel() {
+    let steps = 4;
+    let run = |kind: KernelKind| {
+        let mut cfg = base();
+        cfg.kernel = kind;
+        let mut sess = TrainSession::builder(cfg).build().unwrap();
+        sess.run(steps).unwrap();
+        // folds artifact/* and memory/* gauges into the registry
+        // (writes no files: no --trace/--metrics-out paths are set)
+        sess.export_telemetry().unwrap();
+        assert_eq!(sess.registry.counter("step/count"), steps as u64);
+        deterministic_lines(&sess.registry)
+    };
+    let tiled = run(KernelKind::Tiled);
+    let parallel = run(KernelKind::Parallel);
+    assert!(
+        tiled.iter().any(|l| l.contains("artifact/")),
+        "no artifact metrics recorded: {tiled:?}"
+    );
+    assert_eq!(
+        tiled, parallel,
+        "counters/FLOPs/losses must not depend on the kernel variant"
+    );
+}
