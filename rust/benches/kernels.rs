@@ -19,7 +19,7 @@ mod harness;
 use mesp::config::{presets, KernelKind, ModelDims, PROJS};
 use mesp::memory::MemoryTracker;
 use mesp::model::quant;
-use mesp::runtime::kernels::Q4View;
+use mesp::runtime::kernels::{simd, Q4View};
 use mesp::runtime::{KernelOptions, Kernels};
 use mesp::util::{Json, Rng};
 
@@ -224,16 +224,87 @@ fn main() {
         ],
     );
 
+    // ---- scalar vs SIMD micro-kernel, same tiled blocking ----
+    // Forced-ISA engines isolate the micro-kernel win from blocking and
+    // threading: both runs use identical tiles and k-order (so their
+    // outputs are bitwise equal — pinned by tests/simd.rs), only the
+    // inner mr×nr kernel and the q4 pack dequant change.
+    let best_isa = simd::detect();
+    let forced = |isa| {
+        Kernels::new(
+            KernelOptions { kind: KernelKind::Tiled, threads: 1 },
+            MemoryTracker::new(),
+        )
+        .with_isa(isa)
+    };
+    println!(
+        "\n== simd microbench: preset {preset}, scalar vs {} micro-kernel ==",
+        best_isa.name()
+    );
+    let bench_isa = |isa: simd::Isa| {
+        let ks = forced(isa);
+        let f32_r = harness::bench(
+            &format!("{preset}/simd/{}", isa.name()),
+            3,
+            iters,
+            || run_set(&ks, &shapes, &data),
+        );
+        let q4_r = harness::bench(
+            &format!("{preset}/simd-q4/{}", isa.name()),
+            3,
+            iters,
+            || {
+                for ((s, (x, packed, scales)), g) in
+                    q4_shapes.iter().zip(&q4_data).zip(&q4_g)
+                {
+                    let w = Q4View::new(packed, scales, s.k, s.n);
+                    std::hint::black_box(&ks.matmul_q4(x, w, s.m)[..]);
+                    std::hint::black_box(&ks.matmul_bt_q4(g, w, s.m)[..]);
+                }
+            },
+        );
+        (set_gflop / (f32_r.mean_ms / 1e3), q4_set_gflop / (q4_r.mean_ms / 1e3))
+    };
+    let (scalar_gflops, scalar_q4_gflops) = bench_isa(simd::Isa::Scalar);
+    let (simd_gflops, simd_q4_gflops) = if best_isa == simd::Isa::Scalar {
+        (scalar_gflops, scalar_q4_gflops)
+    } else {
+        bench_isa(best_isa)
+    };
+    let simd_speedup = simd_gflops / scalar_gflops;
+    let simd_q4_speedup = simd_q4_gflops / scalar_q4_gflops;
+    println!(
+        "simd ({}) over scalar, same blocking: f32 {simd_speedup:.2}x \
+         ({scalar_gflops:.2} -> {simd_gflops:.2} GFLOP/s), q4 \
+         {simd_q4_speedup:.2}x ({scalar_q4_gflops:.2} -> \
+         {simd_q4_gflops:.2} GFLOP/s)",
+        best_isa.name()
+    );
+    harness::write_bench_json(
+        &format!("kernels_simd_{preset}"),
+        vec![
+            ("isa".to_string(), Json::str(best_isa.name())),
+            ("scalar_gflops".to_string(), Json::num(scalar_gflops)),
+            ("simd_gflops".to_string(), Json::num(simd_gflops)),
+            ("simd_speedup".to_string(), Json::num(simd_speedup)),
+            ("scalar_q4_gflops".to_string(), Json::num(scalar_q4_gflops)),
+            ("simd_q4_gflops".to_string(), Json::num(simd_q4_gflops)),
+            ("simd_q4_speedup".to_string(), Json::num(simd_q4_speedup)),
+        ],
+    );
+
     if check {
         // CI gate, two tiers. Primary: REGRESSION gate against the
         // committed BENCH_kernels.json — the tiled kernel's achieved
-        // GFLOP/s must stay within TOLERANCE of the committed baseline
-        // (generous, because CI machines vary widely; catching a 2x+
-        // kernel regression is the point, not 10% noise). Fallback when
-        // the committed record has no baseline for this preset: the
-        // original oracle check, tiled must beat naive (and fused panel
-        // dequant must beat full host dequant).
-        const TOLERANCE: f64 = 0.5;
+        // GFLOP/s must stay within TOLERANCE of the committed baseline.
+        // The committed numbers are themselves conservative floors
+        // (roughly a third of a dev-box measurement), so 0.8x of them
+        // still catches a lost-SIMD-path or broken-blocking regression
+        // without flaking on slower CI machines. Fallback when the
+        // committed record has no baseline for this preset: the original
+        // oracle check, tiled must beat naive (and fused panel dequant
+        // must beat full host dequant).
+        const TOLERANCE: f64 = 0.8;
         let mut ok = true;
         let gates = [
             (
@@ -288,12 +359,33 @@ fn main() {
                 }
             }
         }
+        // The tentpole's own gate: with AVX2 available, the vectorized
+        // micro-kernel must hold at least 2x over the scalar one at the
+        // same blocking (the dev-box measurement is >6x, so this has
+        // wide margin). Other ISAs vary too much across CI hardware to
+        // gate hard; their speedups are still recorded in the JSON.
+        if best_isa == simd::Isa::Avx2 {
+            if simd_speedup < 2.0 {
+                eprintln!(
+                    "CHECK FAILED: avx2 micro-kernel only {simd_speedup:.2}x \
+                     over scalar (need >= 2.0x)"
+                );
+                ok = false;
+            } else {
+                println!(
+                    "check: avx2 micro-kernel {simd_speedup:.2}x over scalar \
+                     (>= 2.0x)"
+                );
+            }
+        }
         if !ok {
             std::process::exit(1);
         }
         println!(
             "check passed: tiled {tiled_gflops:.2} GFLOP/s f32, \
-             {tiled_q4_gflops:.2} GFLOP/s q4"
+             {tiled_q4_gflops:.2} GFLOP/s q4, simd {simd_speedup:.2}x \
+             over scalar ({})",
+            best_isa.name()
         );
     }
 }

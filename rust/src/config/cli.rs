@@ -115,13 +115,13 @@ pub const TRAIN_FLAGS: &[&str] = &[
     "config", "backend", "method", "steps", "lr", "seed", "optimizer",
     "mezo-eps", "log-every", "spill-limit", "metrics", "artifacts",
     "kernel", "threads", "quant", "save-every", "snapshot-dir", "resume",
-    "trace", "metrics-out",
+    "trace", "metrics-out", "tune",
 ];
 pub const FLEET_FLAGS: &[&str] = &[
     "config", "backend", "methods", "steps", "lr", "seed", "optimizer",
     "budget-mb", "jobs", "workers", "job-file", "artifacts",
     "kernel", "threads", "quant", "budget-schedule", "preempt",
-    "snapshot-dir", "print-cost", "trace", "metrics-out",
+    "snapshot-dir", "print-cost", "trace", "metrics-out", "tune",
 ];
 pub const SIMULATE_FLAGS: &[&str] = &["model", "seq", "rank", "breakdown"];
 pub const GRADCHECK_FLAGS: &[&str] = &[
@@ -175,6 +175,10 @@ COMMANDS
               Perfetto; observe-only, losses stay bitwise identical)
               --metrics-out PATH.jsonl (write the metrics-registry
               snapshot: counters/gauges/histograms, one JSON per line)
+              --tune (sweep GEMM tile candidates on a calibration set
+              first, persist the winner to the tuning profile —
+              $MESP_TUNE_PROFILE or ~/.cache/mesp/tune.json — and run
+              with it; later runs load the profile automatically)
   fleet       Run many sessions concurrently under a device memory budget
               (admission control via the analytical peak-memory model).
               --budget-mb N  --jobs N  --workers N  --config toy|small
@@ -195,6 +199,8 @@ COMMANDS
               admit/park/resume instants + per-session spans, one file)
               --metrics-out PATH.jsonl (fleet metrics-registry snapshot:
               admission waits, preempt churn, step latencies)
+              --tune (autotune GEMM tiles before the fleet starts; see
+              train --tune)
   simulate    Evaluate the analytical memory model at Qwen2.5 dims.
               --model 0.5b|1.5b|3b  --seq N  --rank N  [--breakdown]
   gradcheck   Assert MeSP ≡ MeBP ≡ store-h gradients on a runnable config.

@@ -78,7 +78,34 @@ fn train_config(args: &Args) -> anyhow::Result<TrainConfig> {
     })
 }
 
+/// `--tune`: sweep the GEMM tile candidates on the calibration set with
+/// the detected ISA's micro-kernel, install the winner process-wide (so
+/// every engine this run builds uses it), and persist it to the tuning
+/// profile for later runs. Tile choice is scheduling-only, so tuning
+/// never changes which loss bits a fixed profile produces — it only
+/// changes which profile this process runs with.
+fn maybe_tune(args: &Args) {
+    if !args.bool("tune") {
+        return;
+    }
+    let isa = mesp::runtime::kernels::simd::detect();
+    let (outcome, written) = mesp::runtime::kernels::tune::tune_and_install(isa);
+    let (best, best_ms) = outcome.table[0];
+    println!(
+        "tune: isa={} best tiles {} ({best_ms:.2} ms on the calibration set, \
+         {} candidates)",
+        isa.name(),
+        best.label(),
+        outcome.table.len()
+    );
+    match written {
+        Some(p) => println!("tune: profile written: {}", p.display()),
+        None => println!("tune: no writable profile path; winner used for this run only"),
+    }
+}
+
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    maybe_tune(args);
     let cfg = train_config(args)?;
     let save_every = args.usize("save-every", 0)?;
     let snap_dir = std::path::PathBuf::from(args.str("snapshot-dir", "snapshots"));
@@ -170,6 +197,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+    maybe_tune(args);
     let base = TrainConfig {
         config: args.str("config", "toy"),
         backend: BackendKind::parse(&args.str("backend", "reference"))?,

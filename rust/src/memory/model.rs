@@ -237,14 +237,15 @@ fn reference_loss_scratch(d: &ModelDims, grad: bool) -> u64 {
 }
 
 /// GEMM packing panels: each thread of the parallel kernel checks out at
-/// most one A panel + one B slab (`tiled::PACK_BOUND_ELEMS`); bound by
-/// the machine's core count since admission runs before the fleet
-/// scheduler fixes the per-job thread budget.
+/// most one A panel + one B slab (`Tiles::pack_bound_elems` of the
+/// active tile profile, in f32 elements); bound by the machine's core
+/// count since admission runs before the fleet scheduler fixes the
+/// per-job thread budget.
 fn reference_packing(_d: &ModelDims) -> u64 {
     let threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1) as u64;
-    threads * crate::runtime::kernels::tiled::PACK_BOUND_ELEMS as u64
+    threads * crate::runtime::kernels::tune::active_tiles().pack_bound_elems() as u64
 }
 
 /// Worst-case arena checkout for one session of `method` — block calls

@@ -111,9 +111,18 @@ impl TraceSink {
         }
     }
 
-    /// Convenience: a `"gemm"` span carrying shape + FLOP args. Kept as a
+    /// Convenience: a `"gemm"` span carrying shape + FLOP args plus the
+    /// micro-kernel ISA and `(mc, kc, nc)` blocking-tile tags. Kept as a
     /// method so kernel call sites stay one line.
-    pub fn gemm(&self, name: &'static str, m: usize, k: usize, n: usize) -> Span {
+    pub fn gemm(
+        &self,
+        name: &'static str,
+        m: usize,
+        k: usize,
+        n: usize,
+        isa: &'static str,
+        tiles: (usize, usize, usize),
+    ) -> Span {
         if self.inner.is_none() {
             return Span { rec: None };
         }
@@ -122,6 +131,8 @@ impl TraceSink {
         sp.arg("k", Json::Num(k as f64));
         sp.arg("n", Json::Num(n as f64));
         sp.arg("flops", Json::Num(2.0 * m as f64 * k as f64 * n as f64));
+        sp.arg("isa", Json::str(isa));
+        sp.arg("tiles", Json::str(format!("{}x{}x{}", tiles.0, tiles.1, tiles.2)));
         sp
     }
 
@@ -334,14 +345,12 @@ mod tests {
     #[test]
     fn gemm_span_carries_shape_and_flops() {
         let sink = TraceSink::enabled();
-        drop(sink.gemm("matmul", 2, 3, 4));
+        drop(sink.gemm("matmul", 2, 3, 4, "avx2", (64, 256, 128)));
         let ev = &sink.events()[0];
         assert_eq!(ev.cat, "gemm");
-        let flops = ev
-            .args
-            .iter()
-            .find(|(k, _)| *k == "flops")
-            .and_then(|(_, v)| v.as_f64());
-        assert_eq!(flops, Some(48.0));
+        let arg = |key: &str| ev.args.iter().find(|(k, _)| *k == key).map(|(_, v)| v.clone());
+        assert_eq!(arg("flops").and_then(|v| v.as_f64()), Some(48.0));
+        assert_eq!(arg("isa").as_ref().and_then(Json::as_str), Some("avx2"));
+        assert_eq!(arg("tiles").as_ref().and_then(Json::as_str), Some("64x256x128"));
     }
 }

@@ -3,6 +3,9 @@
 //! nominal `2·m·k·n`, attention at its explicitly-credited products.
 //! Elementwise work (norms, SiLU, RoPE, softmax normalization) is
 //! uncounted on both sides, so `tests` can pin measured == analytical.
+//! The counts are nominal — kernel kind, micro-kernel ISA and tile
+//! profile change achieved GFLOP/s, never the FLOPs counted, so the
+//! inventory needs no SIMD awareness.
 //!
 //! Used by `mesp inspect` (which never executes artifacts) and by the
 //! GFLOP/s column sanity tests; `exec_stats` itself reports the measured

@@ -11,6 +11,10 @@
 //!   timing input-dependent, which a production kernel must not be).
 //! * [`tiled`] — cache-blocked, register-tiled (MR×NR micro-kernel with
 //!   packed operand panels, the classic BLIS structure), branch-free.
+//!   The inner micro-kernel is dispatched at runtime to the best
+//!   supported SIMD path ([`simd`]: AVX2 / SSE2 / NEON, scalar oracle
+//!   fallback — all bitwise identical) and blocking parameters come from
+//!   the cache-derived, optionally autotuned [`tune`] profile.
 //! * [`parallel`] — the tiled kernel fanned out over contiguous row
 //!   panels with `std::thread::scope`. Each output row is produced end to
 //!   end by exactly one thread with the same k-blocking as `tiled`, so
@@ -42,7 +46,9 @@
 pub mod flops;
 pub mod naive;
 pub mod parallel;
+pub mod simd;
 pub mod tiled;
+pub mod tune;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -150,8 +156,41 @@ impl<'a> FrozenW<'a> {
 /// GEMMs below this many multiply-adds stay single-threaded even under
 /// the `parallel` kernel: thread spawn/join costs more than it saves.
 /// Shape-dependent only — never data-dependent. 2^18 madds ≈ 130 µs of
-/// tiled single-thread work — a few scoped-thread spawns still pay off.
+/// *scalar* tiled single-thread work — a few scoped-thread spawns still
+/// pay off at that size. This constant is the scalar threshold; the
+/// dispatch gate scales it by the active ISA's micro-kernel throughput
+/// via [`parallel_min_madds`].
 pub const PARALLEL_MIN_MADDS: usize = 1 << 18;
+
+/// The fan-out threshold for `isa`: spawn/join overhead is fixed wall
+/// clock, so the break-even GEMM size grows with micro-kernel speed —
+/// ~2× for the 4-wide SSE2/NEON kernels, ~4× for the 8-wide AVX2 kernel
+/// (measured speedups over scalar on the calibration set are 4–6×, but
+/// fan-out below the threshold merely wastes less, so round down).
+pub fn parallel_min_madds(isa: simd::Isa) -> usize {
+    match isa {
+        simd::Isa::Scalar => PARALLEL_MIN_MADDS,
+        simd::Isa::Sse2 | simd::Isa::Neon => PARALLEL_MIN_MADDS << 1,
+        simd::Isa::Avx2 => PARALLEL_MIN_MADDS << 2,
+    }
+}
+
+/// The shape-only fan-out gate, exposed as a pure function so the
+/// dispatch threshold is testable without a multi-core machine: `true`
+/// iff a GEMM of this shape would run on the parallel kernel.
+pub fn would_fan_out(
+    kind: KernelKind,
+    threads: usize,
+    isa: simd::Isa,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> bool {
+    kind == KernelKind::Parallel
+        && threads > 1
+        && m * k * n >= parallel_min_madds(isa)
+        && m >= 2 * isa.mr()
+}
 
 /// The kernel engine handle: dispatch + arena + FLOP counter. One per
 /// backend instance; shared by every artifact call of a session.
@@ -159,6 +198,12 @@ pub const PARALLEL_MIN_MADDS: usize = 1 << 18;
 pub struct Kernels {
     kind: KernelKind,
     threads: usize,
+    /// Micro-kernel ISA; detected best (or `MESP_KERNEL_ISA`) by
+    /// default, overridable per instance via [`Kernels::with_isa`].
+    isa: simd::Isa,
+    /// Blocking parameters; the process-wide tuned/derived tiles by
+    /// default, overridable per instance via [`Kernels::with_tiles`].
+    tiles: tune::Tiles,
     arena: TensorArena,
     flops: AtomicU64,
     /// Per-GEMM span sink; disabled by default (one branch per call).
@@ -178,18 +223,36 @@ impl Kernels {
             // term charges one panel set per core — an unclamped
             // `--threads 64` could otherwise exceed the admission bound.
             threads: threads.clamp(1, auto_threads()),
+            isa: simd::detect(),
+            tiles: tune::active_tiles(),
             arena: TensorArena::new(tracker),
             flops: AtomicU64::new(0),
             trace: TraceSink::disabled(),
         }
     }
 
-    /// Attach a trace sink: every GEMM emits a span (shape + FLOPs) and
-    /// the arena emits checkout/return instants. Consuming builder so
-    /// `KernelOptions` stays a plain `Copy` struct.
+    /// Attach a trace sink: every GEMM emits a span (shape + FLOPs +
+    /// ISA/tile tags) and the arena emits checkout/return instants.
+    /// Consuming builder so `KernelOptions` stays a plain `Copy` struct.
     pub fn with_trace(mut self, trace: TraceSink) -> Kernels {
         self.arena = self.arena.with_trace(trace.clone());
         self.trace = trace;
+        self
+    }
+
+    /// Force a micro-kernel ISA (benches compare ISAs in one process;
+    /// tests pin the scalar oracle). An ISA the CPU cannot execute falls
+    /// back to the detected best — results are bitwise identical either
+    /// way, so the fallback is safe.
+    pub fn with_isa(mut self, isa: simd::Isa) -> Kernels {
+        self.isa = if simd::cpu_supports(isa) { isa } else { simd::detect() };
+        self
+    }
+
+    /// Force blocking parameters (the tuner's sweep and hermetic tests;
+    /// normal construction uses the process-wide [`tune::active_tiles`]).
+    pub fn with_tiles(mut self, tiles: tune::Tiles) -> Kernels {
+        self.tiles = tiles;
         self
     }
 
@@ -209,6 +272,20 @@ impl Kernels {
         self.threads
     }
 
+    pub fn isa(&self) -> simd::Isa {
+        self.isa
+    }
+
+    pub fn tiles(&self) -> tune::Tiles {
+        self.tiles
+    }
+
+    /// Whether a GEMM of this shape would fan out to the parallel
+    /// kernel under this engine's configuration.
+    pub fn fans_out(&self, m: usize, k: usize, n: usize) -> bool {
+        would_fan_out(self.kind, self.threads, self.isa, m, k, n)
+    }
+
     pub fn arena(&self) -> &TensorArena {
         &self.arena
     }
@@ -223,11 +300,21 @@ impl Kernels {
         self.flops.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Open a per-GEMM trace span tagged with this engine's ISA and
+    /// blocking tiles alongside the shape/FLOP args.
+    fn gemm_span(&self, name: &'static str, m: usize, k: usize, n: usize) -> crate::obs::Span {
+        self.trace.gemm(
+            name, m, k, n,
+            self.isa.name(),
+            (self.tiles.mc(), self.tiles.kc(), self.tiles.nc()),
+        )
+    }
+
     /// `a[m,k] @ b[k,n] -> [m,n]`.
     pub fn matmul(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> ScratchBuf {
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(b.len(), k * n);
-        let _sp = self.trace.gemm("matmul", m, k, n);
+        let _sp = self.gemm_span("matmul", m, k, n);
         let mut out = self.arena.take(m * n);
         self.add_flops(2 * (m * k * n) as u64);
         match self.kind {
@@ -241,7 +328,7 @@ impl Kernels {
     pub fn matmul_at(&self, a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> ScratchBuf {
         debug_assert_eq!(a.len(), k * m);
         debug_assert_eq!(b.len(), k * n);
-        let _sp = self.trace.gemm("matmul_at", m, k, n);
+        let _sp = self.gemm_span("matmul_at", m, k, n);
         let mut out = self.arena.take(m * n);
         self.add_flops(2 * (m * k * n) as u64);
         match self.kind {
@@ -257,7 +344,7 @@ impl Kernels {
     pub fn matmul_bt(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> ScratchBuf {
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(b.len(), n * k);
-        let _sp = self.trace.gemm("matmul_bt", m, k, n);
+        let _sp = self.gemm_span("matmul_bt", m, k, n);
         let mut out = self.arena.take(m * n);
         self.add_flops(2 * (m * k * n) as u64);
         match self.kind {
@@ -298,7 +385,7 @@ impl Kernels {
     pub fn matmul_q4(&self, a: &[f32], w: Q4View, m: usize) -> ScratchBuf {
         let (k, n) = (w.din, w.dout);
         debug_assert_eq!(a.len(), m * k);
-        let _sp = self.trace.gemm("matmul_q4", m, k, n);
+        let _sp = self.gemm_span("matmul_q4", m, k, n);
         let mut out = self.arena.take(m * n);
         self.add_flops(2 * (m * k * n) as u64);
         match self.kind {
@@ -316,7 +403,7 @@ impl Kernels {
     pub fn matmul_bt_q4(&self, a: &[f32], w: Q4View, m: usize) -> ScratchBuf {
         let (k, n) = (w.dout, w.din);
         debug_assert_eq!(a.len(), m * k);
-        let _sp = self.trace.gemm("matmul_bt_q4", m, k, n);
+        let _sp = self.gemm_span("matmul_bt_q4", m, k, n);
         let mut out = self.arena.take(m * n);
         self.add_flops(2 * (m * k * n) as u64);
         match self.kind {
@@ -337,14 +424,12 @@ impl Kernels {
     }
 
     fn gemm(&self, a: AView, b: BView, m: usize, k: usize, n: usize, out: &mut [f32]) {
-        let fan_out = self.kind == KernelKind::Parallel
-            && self.threads > 1
-            && m * k * n >= PARALLEL_MIN_MADDS
-            && m >= 2 * tiled::MR;
-        if fan_out {
-            parallel::gemm(&self.arena, self.threads, a, b, m, k, n, out);
+        if self.fans_out(m, k, n) {
+            parallel::gemm(
+                &self.arena, self.threads, self.isa, self.tiles, a, b, m, k, n, out,
+            );
         } else {
-            tiled::gemm(&self.arena, a, b, 0, m, k, n, out);
+            tiled::gemm(&self.arena, self.isa, self.tiles, a, b, 0, m, k, n, out);
         }
     }
 }
@@ -521,7 +606,76 @@ mod tests {
         assert_eq!(arg("k"), Some(6.0));
         assert_eq!(arg("n"), Some(8.0));
         assert_eq!(arg("flops"), Some(2.0 * 4.0 * 6.0 * 8.0));
+        let strarg = |key: &str| {
+            gemm.args
+                .iter()
+                .find(|(k, _)| *k == key)
+                .and_then(|(_, v)| v.as_str().map(str::to_owned))
+        };
+        assert_eq!(strarg("isa").as_deref(), Some(ks.isa().name()));
+        let t = ks.tiles();
+        assert_eq!(
+            strarg("tiles"),
+            Some(format!("{}x{}x{}", t.mc(), t.kc(), t.nc()))
+        );
         assert!(evs.iter().any(|e| e.name == "arena:take"));
+    }
+
+    #[test]
+    fn fan_out_threshold_scales_with_isa() {
+        // Exactly at the ISA's threshold → fan out; one madd below → stay
+        // single-threaded. m and n are fixed so only k moves.
+        let (m, n) = (64, 64);
+        for isa in simd::Isa::ALL {
+            let min = parallel_min_madds(isa);
+            assert_eq!(min % (m * n), 0, "threshold divisible for exact k");
+            let k_at = min / (m * n);
+            assert!(would_fan_out(KernelKind::Parallel, 4, isa, m, k_at, n),
+                    "{}: at threshold", isa.name());
+            assert!(!would_fan_out(KernelKind::Parallel, 4, isa, m, k_at - 1, n),
+                    "{}: below threshold", isa.name());
+            // SIMD kernels need strictly more work than scalar to be
+            // worth the spawn cost.
+            if isa != simd::Isa::Scalar {
+                assert!(parallel_min_madds(isa) > parallel_min_madds(simd::Isa::Scalar));
+            }
+        }
+        // Never fans out single-threaded or off the parallel kind.
+        let big = 1 << 12;
+        assert!(!would_fan_out(KernelKind::Parallel, 1, simd::Isa::Scalar, big, big, big));
+        assert!(!would_fan_out(KernelKind::Tiled, 4, simd::Isa::Scalar, big, big, big));
+    }
+
+    #[test]
+    fn with_isa_rejects_unsupported_and_with_tiles_swaps_profile() {
+        // Forcing an ISA the CPU lacks must fall back to the detected
+        // one instead of dispatching into a SIGILL.
+        for isa in simd::Isa::ALL {
+            let ks = engine(KernelKind::Tiled, 1).with_isa(isa);
+            assert!(simd::cpu_supports(ks.isa()), "{}", isa.name());
+            if simd::cpu_supports(isa) {
+                assert_eq!(ks.isa(), isa);
+            } else {
+                assert_eq!(ks.isa(), simd::detect());
+            }
+        }
+        // Every supported ISA and a non-default tile profile produce the
+        // same bits as the scalar/baseline engine (unfused accumulation,
+        // same k-order — KC only regroups when k exceeds it, and both
+        // profiles keep kc ≥ this k).
+        let (m, k, n) = (13, 65, 29);
+        let (a, b) = mats(m, k, n, 31);
+        let want = engine(KernelKind::Tiled, 1)
+            .with_isa(simd::Isa::Scalar)
+            .matmul(&a, &b, m, k, n);
+        for isa in simd::supported() {
+            let ks = engine(KernelKind::Tiled, 1)
+                .with_isa(isa)
+                .with_tiles(tune::Tiles::new(40, 96, 48));
+            let t = ks.tiles();
+            assert!(t.kc() >= k);
+            assert_eq!(&want[..], &ks.matmul(&a, &b, m, k, n)[..], "{}", isa.name());
+        }
     }
 
     #[test]

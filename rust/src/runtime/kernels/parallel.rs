@@ -4,17 +4,21 @@
 //! The output is split into per-thread row panels with `chunks_mut`, so
 //! no two threads ever touch the same cache line of C; each thread runs
 //! the full [`super::tiled`] blocking over its window with the same
-//! k-order, which keeps the result bitwise identical to the
-//! single-threaded tiled kernel at any thread count. Packing buffers are
-//! checked out of the shared [`TensorArena`] per thread (and returned to
-//! the pool on exit, so a steady-state session allocates nothing).
+//! k-order, ISA and tiles, which keeps the result bitwise identical to
+//! the single-threaded tiled kernel at any thread count. Packing buffers
+//! are checked out of the shared [`TensorArena`] per thread (and
+//! returned to the pool on exit, so a steady-state session allocates
+//! nothing).
 //!
-//! Callers gate on [`super::PARALLEL_MIN_MADDS`] — a shape-only
-//! threshold — before fanning out; this module assumes the work is big
-//! enough to be worth the spawn/join cost.
+//! Callers gate on [`super::parallel_min_madds`] — a shape-only
+//! threshold scaled to the ISA's micro-kernel throughput — before
+//! fanning out; this module assumes the work is big enough to be worth
+//! the spawn/join cost.
 
 use crate::tensor::TensorArena;
 
+use super::simd::Isa;
+use super::tune::Tiles;
 use super::{tiled, AView, BView};
 
 /// `out[m,n] = A @ B` across `threads` row panels.
@@ -22,6 +26,8 @@ use super::{tiled, AView, BView};
 pub fn gemm(
     arena: &TensorArena,
     threads: usize,
+    isa: Isa,
+    tiles: Tiles,
     a: AView,
     b: BView,
     m: usize,
@@ -29,16 +35,17 @@ pub fn gemm(
     n: usize,
     out: &mut [f32],
 ) {
-    // Panels are MR-aligned so no micro-tile straddles two threads; a
-    // panel count above m/MR would leave threads idle anyway.
-    let panels = threads.clamp(1, m.div_ceil(tiled::MR));
-    let rows_per = m.div_ceil(panels).next_multiple_of(tiled::MR);
+    // Panels are mr-aligned so no micro-tile straddles two threads; a
+    // panel count above m/mr would leave threads idle anyway.
+    let mr = isa.mr();
+    let panels = threads.clamp(1, m.div_ceil(mr));
+    let rows_per = m.div_ceil(panels).next_multiple_of(mr);
     std::thread::scope(|s| {
         for (pi, chunk) in out.chunks_mut(rows_per * n).enumerate() {
             s.spawn(move || {
                 let row0 = pi * rows_per;
                 let rows = chunk.len() / n;
-                tiled::gemm(arena, a, b, row0, rows, k, n, chunk);
+                tiled::gemm(arena, isa, tiles, a, b, row0, rows, k, n, chunk);
             });
         }
     });
@@ -48,21 +55,34 @@ pub fn gemm(
 mod tests {
     use super::*;
     use crate::memory::MemoryTracker;
+    use crate::runtime::kernels::simd;
     use crate::util::Rng;
+
+    fn tiled_want(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, isa: Isa) -> Vec<f32> {
+        let arena = TensorArena::new(MemoryTracker::new());
+        let mut want = vec![0.0; m * n];
+        tiled::gemm(
+            &arena, isa, Tiles::baseline(), AView::Rows(a), BView::Rows(b), 0, m, k, n, &mut want,
+        );
+        want
+    }
 
     #[test]
     fn ragged_row_split_covers_every_row() {
-        // 10 rows across 3 threads with MR alignment: panels of 4/4/2.
+        // 10 rows across 3 threads with mr alignment: panels of 4/4/2.
         let arena = TensorArena::new(MemoryTracker::new());
         let (m, k, n) = (10, 5, 3);
         let mut rng = Rng::new(1);
         let a = rng.normal_vec(m * k, 1.0);
         let b = rng.normal_vec(k * n, 1.0);
-        let mut got = vec![0.0; m * n];
-        gemm(&arena, 3, AView::Rows(&a), BView::Rows(&b), m, k, n, &mut got);
-        let mut want = vec![0.0; m * n];
-        tiled::gemm(&arena, AView::Rows(&a), BView::Rows(&b), 0, m, k, n, &mut want);
-        assert_eq!(got, want);
+        for isa in simd::supported() {
+            let mut got = vec![0.0; m * n];
+            gemm(
+                &arena, 3, isa, Tiles::baseline(),
+                AView::Rows(&a), BView::Rows(&b), m, k, n, &mut got,
+            );
+            assert_eq!(got, tiled_want(&a, &b, m, k, n, isa), "isa={}", isa.name());
+        }
     }
 
     #[test]
@@ -72,10 +92,12 @@ mod tests {
         let mut rng = Rng::new(2);
         let a = rng.normal_vec(m * k, 1.0);
         let b = rng.normal_vec(k * n, 1.0);
+        let isa = simd::detect();
         let mut got = vec![0.0; m * n];
-        gemm(&arena, 16, AView::Rows(&a), BView::Rows(&b), m, k, n, &mut got);
-        let mut want = vec![0.0; m * n];
-        tiled::gemm(&arena, AView::Rows(&a), BView::Rows(&b), 0, m, k, n, &mut want);
-        assert_eq!(got, want);
+        gemm(
+            &arena, 16, isa, Tiles::baseline(),
+            AView::Rows(&a), BView::Rows(&b), m, k, n, &mut got,
+        );
+        assert_eq!(got, tiled_want(&a, &b, m, k, n, isa));
     }
 }

@@ -1,0 +1,584 @@
+//! Runtime-dispatched SIMD micro-kernels for the tiled GEMM.
+//!
+//! One register-tiled micro-kernel per instruction set — x86-64 AVX2
+//! (6×16) and SSE2 (6×8) in `core::arch::x86_64`, aarch64 NEON (6×8) in
+//! `core::arch::aarch64` — behind runtime feature detection, plus the
+//! portable scalar 6×8 kernel that is the bitwise **oracle pairing** for
+//! all of them. Every path accumulates with *unfused* multiply-then-add
+//! (`acc = add(acc, mul(a, b))`, two roundings) in the same ascending
+//! k-order, never an FMA contraction: that is exactly the scalar
+//! `acc += a * b` semantics, so SIMD ≡ scalar **bitwise** on every ISA —
+//! which is what lets the existing tiled ≡ parallel and MeSP ≡ MeBP
+//! parity guarantees carry over unchanged. (An AVX2+FMA machine still
+//! dispatches the AVX2 kernel; it just issues separate `vmulps`/`vaddps`
+//! so the extra rounding of the scalar oracle is preserved.)
+//!
+//! The micro-tile shape is per-ISA (`Isa::mr`/`Isa::nr`); packing lays
+//! slivers out `[kc][mr]` / `[kc][nr]` to match. Differing tile shapes
+//! cannot perturb results: padded rows/columns are discarded and each
+//! output element still sums its k-terms in ascending order.
+//!
+//! q4: [`dequant_run`] vectorizes the int4 unpack + scale multiply
+//! (nibble → `(x ^ 8) - 8` sign-extend → `cvt` → one `mul`) over a
+//! contiguous run — element-for-element the exact expression
+//! `model::quant::sign_extend(nib) as f32 * scale` evaluates, so fused
+//! SIMD dequant stays bitwise equal to `quant::dequantize`.
+//!
+//! Selection: [`detect`] picks the best CPU-supported ISA once per
+//! process; the `MESP_KERNEL_ISA` env var (`scalar|sse2|avx2|neon`)
+//! overrides it — CI's parity tier forces `scalar` and diffs train
+//! losses bitwise against the SIMD run.
+
+use std::sync::OnceLock;
+
+/// Env var that forces an ISA (`scalar|sse2|avx2|neon`); unsupported or
+/// unrecognized values fall back to the detected best with a warning.
+pub const ISA_ENV: &str = "MESP_KERNEL_ISA";
+
+/// Largest `mr` any ISA uses — pack-buffer bounds are sized for this so
+/// one arena checkout serves every dispatch.
+pub const MR_MAX: usize = 8;
+/// Largest `nr` any ISA uses (AVX2's 16-column tile).
+pub const NR_MAX: usize = 16;
+
+/// A micro-kernel instruction set. `Scalar` is always available and is
+/// the bitwise oracle the SIMD paths are tested against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Isa {
+    Scalar,
+    Sse2,
+    Avx2,
+    Neon,
+}
+
+impl Isa {
+    pub const ALL: [Isa; 4] = [Isa::Scalar, Isa::Sse2, Isa::Avx2, Isa::Neon];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse2 => "sse2",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Isa::Scalar),
+            "sse2" => Some(Isa::Sse2),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    /// Micro-tile rows. 6 everywhere: with the widest (AVX2) tile that
+    /// is 12 accumulator registers + 2 B loads + 1 A broadcast = 15 of
+    /// 16 ymm, the classic no-spill budget.
+    pub fn mr(self) -> usize {
+        6
+    }
+
+    /// Micro-tile columns (one or two vector widths).
+    pub fn nr(self) -> usize {
+        match self {
+            Isa::Avx2 => 16,
+            _ => 8,
+        }
+    }
+}
+
+/// Whether the running CPU can execute `isa`'s micro-kernel.
+pub fn cpu_supports(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        // SSE2 is part of the x86-64 baseline ABI; NEON is mandatory on
+        // aarch64 — neither needs a runtime check.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => true,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => true,
+        _ => false,
+    }
+}
+
+/// Every ISA the running CPU supports (always includes `Scalar`) — the
+/// parity tests and the scalar-vs-SIMD bench sweep this list.
+pub fn supported() -> Vec<Isa> {
+    Isa::ALL.iter().copied().filter(|i| cpu_supports(*i)).collect()
+}
+
+/// The fastest CPU-supported ISA (widest vectors win).
+pub fn best_available() -> Isa {
+    [Isa::Avx2, Isa::Neon, Isa::Sse2, Isa::Scalar]
+        .into_iter()
+        .find(|i| cpu_supports(*i))
+        .unwrap_or(Isa::Scalar)
+}
+
+/// Resolve an override string (the `MESP_KERNEL_ISA` value, if set)
+/// against CPU support; pure so tests can drive it without touching the
+/// environment.
+pub fn from_env_or_best(val: Option<&str>) -> Isa {
+    if let Some(s) = val {
+        match Isa::parse(s) {
+            Some(isa) if cpu_supports(isa) => return isa,
+            Some(isa) => eprintln!(
+                "warning: {ISA_ENV}={} is not supported on this CPU; \
+                 using {}",
+                isa.name(),
+                best_available().name()
+            ),
+            None => eprintln!(
+                "warning: {ISA_ENV}='{s}' is not one of \
+                 scalar|sse2|avx2|neon; using {}",
+                best_available().name()
+            ),
+        }
+    }
+    best_available()
+}
+
+/// The process-wide ISA choice: `MESP_KERNEL_ISA` override or the
+/// detected best, resolved once. Per-engine overrides go through
+/// `Kernels::with_isa` instead (benches compare ISAs in one process).
+pub fn detect() -> Isa {
+    static DETECTED: OnceLock<Isa> = OnceLock::new();
+    *DETECTED.get_or_init(|| from_env_or_best(std::env::var(ISA_ENV).ok().as_deref()))
+}
+
+/// `out[r*ldc + c] += Σ_l ap[l*mr + r] · bp[l*nr + c]` for the valid
+/// `rows × cols` region of one micro-tile (`mr = isa.mr()`,
+/// `nr = isa.nr()`; `ap`/`bp` are zero-padded packed slivers).
+///
+/// Unfused multiply-then-add in ascending `l` on every path, so the
+/// result is bitwise identical across ISAs. An ISA whose kernel is not
+/// compiled for this architecture falls back to scalar — safe precisely
+/// because of that equivalence (the packing layout matches `isa`, not
+/// the fallback, so the fallback reads `mr`/`nr` from `isa`).
+#[allow(clippy::too_many_arguments)]
+pub fn microkernel(
+    isa: Isa,
+    ap: &[f32],
+    bp: &[f32],
+    kc: usize,
+    out: &mut [f32],
+    ldc: usize,
+    rows: usize,
+    cols: usize,
+) {
+    debug_assert!(ap.len() >= kc * isa.mr());
+    debug_assert!(bp.len() >= kc * isa.nr());
+    debug_assert!(rows <= isa.mr() && cols <= isa.nr());
+    match isa {
+        Isa::Scalar => micro_generic::<6, 8>(ap, bp, kc, out, ldc, rows, cols),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is in the x86-64 baseline.
+        Isa::Sse2 => unsafe { x86::micro_sse2(ap, bp, kc, out, ldc, rows, cols) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 if cpu_supports(Isa::Avx2) =>
+        // SAFETY: guarded by the runtime AVX2 check on this arm.
+        unsafe { x86::micro_avx2(ap, bp, kc, out, ldc, rows, cols) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is mandatory on aarch64.
+        Isa::Neon => unsafe { neon::micro_neon(ap, bp, kc, out, ldc, rows, cols) },
+        Isa::Avx2 => micro_generic::<6, 16>(ap, bp, kc, out, ldc, rows, cols),
+        _ => micro_generic::<6, 8>(ap, bp, kc, out, ldc, rows, cols),
+    }
+}
+
+/// The portable micro-kernel, monomorphized per tile shape. `<6, 8>` is
+/// the pre-SIMD scalar kernel, byte-for-byte the same accumulation; the
+/// other instantiations back the cross-arch fallbacks.
+fn micro_generic<const MR: usize, const NR: usize>(
+    ap: &[f32],
+    bp: &[f32],
+    kc: usize,
+    out: &mut [f32],
+    ldc: usize,
+    rows: usize,
+    cols: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for l in 0..kc {
+        let av: &[f32; MR] = ap[l * MR..l * MR + MR].try_into().unwrap();
+        let bv: &[f32; NR] = bp[l * NR..l * NR + NR].try_into().unwrap();
+        for r in 0..MR {
+            let ar = av[r];
+            for (c, acc_rc) in acc[r].iter_mut().enumerate() {
+                *acc_rc += ar * bv[c];
+            }
+        }
+    }
+    for r in 0..rows {
+        let orow = &mut out[r * ldc..][..cols];
+        for (o, v) in orow.iter_mut().zip(&acc[r][..cols]) {
+            *o += v;
+        }
+    }
+}
+
+/// `dst[i] = sign_extend(nibble(bytes[i])) as f32 * scales[i]` over a
+/// contiguous run — the vectorized int4 dequant the q4 B-panel pack
+/// fuses in. `hi` selects the high nibble (odd din row). Element
+/// semantics are exactly `quant::sign_extend(nib) as f32 * scale`
+/// (int4 → f32 conversion is exact; one multiply rounding), so every
+/// path is bitwise equal to `quant::dequantize`.
+pub fn dequant_run(isa: Isa, bytes: &[u8], scales: &[f32], hi: bool, dst: &mut [f32]) {
+    debug_assert!(bytes.len() >= dst.len());
+    debug_assert!(scales.len() >= dst.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 if cpu_supports(Isa::Avx2) =>
+        // SAFETY: guarded by the runtime AVX2 check on this arm.
+        unsafe { x86::dequant_avx2(bytes, scales, hi, dst) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is mandatory on aarch64.
+        Isa::Neon => unsafe { neon::dequant_neon(bytes, scales, hi, dst) },
+        _ => dequant_scalar(bytes, scales, hi, dst),
+    }
+}
+
+fn dequant_scalar(bytes: &[u8], scales: &[f32], hi: bool, dst: &mut [f32]) {
+    for (i, d) in dst.iter_mut().enumerate() {
+        let nib = if hi { (bytes[i] >> 4) & 0x0f } else { bytes[i] & 0x0f };
+        *d = crate::model::quant::sign_extend(nib) as f32 * scales[i];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    /// SSE2 6×8: 12 xmm accumulators + 2 B loads + 1 A broadcast.
+    ///
+    /// # Safety
+    /// SSE2 only (x86-64 baseline); slice bounds checked by the caller's
+    /// debug asserts and the loads below staying inside `ap`/`bp`/`out`.
+    pub unsafe fn micro_sse2(
+        ap: &[f32],
+        bp: &[f32],
+        kc: usize,
+        out: &mut [f32],
+        ldc: usize,
+        rows: usize,
+        cols: usize,
+    ) {
+        const MR: usize = 6;
+        const NR: usize = 8;
+        let app = ap.as_ptr();
+        let bpp = bp.as_ptr();
+        let mut acc = [[_mm_setzero_ps(); 2]; MR];
+        for l in 0..kc {
+            let b0 = _mm_loadu_ps(bpp.add(l * NR));
+            let b1 = _mm_loadu_ps(bpp.add(l * NR + 4));
+            for r in 0..MR {
+                let a = _mm_set1_ps(*app.add(l * MR + r));
+                acc[r][0] = _mm_add_ps(acc[r][0], _mm_mul_ps(a, b0));
+                acc[r][1] = _mm_add_ps(acc[r][1], _mm_mul_ps(a, b1));
+            }
+        }
+        if rows == MR && cols == NR {
+            let op = out.as_mut_ptr();
+            for (r, a) in acc.iter().enumerate() {
+                let o = op.add(r * ldc);
+                _mm_storeu_ps(o, _mm_add_ps(_mm_loadu_ps(o), a[0]));
+                _mm_storeu_ps(o.add(4), _mm_add_ps(_mm_loadu_ps(o.add(4)), a[1]));
+            }
+        } else {
+            // Ragged edge: spill the full tile, scalar-add the valid
+            // region — still one final add per element, bitwise the
+            // same as the direct path.
+            let mut tmp = [0.0f32; MR * NR];
+            for (r, a) in acc.iter().enumerate() {
+                _mm_storeu_ps(tmp.as_mut_ptr().add(r * NR), a[0]);
+                _mm_storeu_ps(tmp.as_mut_ptr().add(r * NR + 4), a[1]);
+            }
+            for r in 0..rows {
+                let orow = &mut out[r * ldc..][..cols];
+                for (c, o) in orow.iter_mut().enumerate() {
+                    *o += tmp[r * NR + c];
+                }
+            }
+        }
+    }
+
+    /// AVX2 6×16: 12 ymm accumulators + 2 B loads + 1 A broadcast — 15
+    /// of 16 ymm, no spill. Separate `vmulps`/`vaddps` (never FMA) keeps
+    /// the scalar oracle's two-rounding semantics.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn micro_avx2(
+        ap: &[f32],
+        bp: &[f32],
+        kc: usize,
+        out: &mut [f32],
+        ldc: usize,
+        rows: usize,
+        cols: usize,
+    ) {
+        const MR: usize = 6;
+        const NR: usize = 16;
+        let app = ap.as_ptr();
+        let bpp = bp.as_ptr();
+        let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+        for l in 0..kc {
+            let b0 = _mm256_loadu_ps(bpp.add(l * NR));
+            let b1 = _mm256_loadu_ps(bpp.add(l * NR + 8));
+            for r in 0..MR {
+                let a = _mm256_set1_ps(*app.add(l * MR + r));
+                acc[r][0] = _mm256_add_ps(acc[r][0], _mm256_mul_ps(a, b0));
+                acc[r][1] = _mm256_add_ps(acc[r][1], _mm256_mul_ps(a, b1));
+            }
+        }
+        if rows == MR && cols == NR {
+            let op = out.as_mut_ptr();
+            for (r, a) in acc.iter().enumerate() {
+                let o = op.add(r * ldc);
+                _mm256_storeu_ps(o, _mm256_add_ps(_mm256_loadu_ps(o), a[0]));
+                _mm256_storeu_ps(o.add(8), _mm256_add_ps(_mm256_loadu_ps(o.add(8)), a[1]));
+            }
+        } else {
+            let mut tmp = [0.0f32; MR * NR];
+            for (r, a) in acc.iter().enumerate() {
+                _mm256_storeu_ps(tmp.as_mut_ptr().add(r * NR), a[0]);
+                _mm256_storeu_ps(tmp.as_mut_ptr().add(r * NR + 8), a[1]);
+            }
+            for r in 0..rows {
+                let orow = &mut out[r * ldc..][..cols];
+                for (c, o) in orow.iter_mut().enumerate() {
+                    *o += tmp[r * NR + c];
+                }
+            }
+        }
+    }
+
+    /// int4 dequant, 8 lanes at a time: byte → u32 widen, nibble
+    /// mask/shift, `(x ^ 8) - 8` sign-extend, exact `cvtdq2ps`, one
+    /// `mulps` by the scales.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2; `bytes`/`scales` must
+    /// cover `dst.len()` (caller's debug asserts).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant_avx2(bytes: &[u8], scales: &[f32], hi: bool, dst: &mut [f32]) {
+        let n = dst.len();
+        let mask = _mm256_set1_epi32(0x0f);
+        let eight = _mm256_set1_epi32(8);
+        let mut i = 0;
+        while i + 8 <= n {
+            let raw = _mm_loadl_epi64(bytes.as_ptr().add(i) as *const __m128i);
+            let mut v = _mm256_cvtepu8_epi32(raw);
+            if hi {
+                v = _mm256_srli_epi32::<4>(v);
+            }
+            v = _mm256_and_si256(v, mask);
+            v = _mm256_sub_epi32(_mm256_xor_si256(v, eight), eight);
+            let f = _mm256_cvtepi32_ps(v);
+            let s = _mm256_loadu_ps(scales.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_mul_ps(f, s));
+            i += 8;
+        }
+        while i < n {
+            let nib = if hi { (bytes[i] >> 4) & 0x0f } else { bytes[i] & 0x0f };
+            dst[i] = crate::model::quant::sign_extend(nib) as f32 * scales[i];
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    /// NEON 6×8: 12 q-register accumulators + 2 B loads + 1 A broadcast.
+    /// Explicit `vmulq`/`vaddq` (not `vmlaq`/`vfmaq`) — unfused, same
+    /// two roundings as the scalar oracle.
+    ///
+    /// # Safety
+    /// NEON only (mandatory on aarch64); bounds as per caller asserts.
+    pub unsafe fn micro_neon(
+        ap: &[f32],
+        bp: &[f32],
+        kc: usize,
+        out: &mut [f32],
+        ldc: usize,
+        rows: usize,
+        cols: usize,
+    ) {
+        const MR: usize = 6;
+        const NR: usize = 8;
+        let app = ap.as_ptr();
+        let bpp = bp.as_ptr();
+        let mut acc = [[vdupq_n_f32(0.0); 2]; MR];
+        for l in 0..kc {
+            let b0 = vld1q_f32(bpp.add(l * NR));
+            let b1 = vld1q_f32(bpp.add(l * NR + 4));
+            for r in 0..MR {
+                let a = vdupq_n_f32(*app.add(l * MR + r));
+                acc[r][0] = vaddq_f32(acc[r][0], vmulq_f32(a, b0));
+                acc[r][1] = vaddq_f32(acc[r][1], vmulq_f32(a, b1));
+            }
+        }
+        if rows == MR && cols == NR {
+            let op = out.as_mut_ptr();
+            for (r, a) in acc.iter().enumerate() {
+                let o = op.add(r * ldc);
+                vst1q_f32(o, vaddq_f32(vld1q_f32(o), a[0]));
+                vst1q_f32(o.add(4), vaddq_f32(vld1q_f32(o.add(4)), a[1]));
+            }
+        } else {
+            let mut tmp = [0.0f32; MR * NR];
+            for (r, a) in acc.iter().enumerate() {
+                vst1q_f32(tmp.as_mut_ptr().add(r * NR), a[0]);
+                vst1q_f32(tmp.as_mut_ptr().add(r * NR + 4), a[1]);
+            }
+            for r in 0..rows {
+                let orow = &mut out[r * ldc..][..cols];
+                for (c, o) in orow.iter_mut().enumerate() {
+                    *o += tmp[r * NR + c];
+                }
+            }
+        }
+    }
+
+    /// int4 dequant, 8 lanes per iteration via u8 → u16 → u32 widening.
+    ///
+    /// # Safety
+    /// NEON only; `bytes`/`scales` must cover `dst.len()`.
+    pub unsafe fn dequant_neon(bytes: &[u8], scales: &[f32], hi: bool, dst: &mut [f32]) {
+        let n = dst.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let raw = vld1_u8(bytes.as_ptr().add(i));
+            let wide = vmovl_u8(raw);
+            let halves = [vmovl_u16(vget_low_u16(wide)), vmovl_u16(vget_high_u16(wide))];
+            for (j, part) in halves.into_iter().enumerate() {
+                let mut v = part;
+                if hi {
+                    v = vshrq_n_u32::<4>(v);
+                }
+                v = vandq_u32(v, vdupq_n_u32(0x0f));
+                let sv = vsubq_s32(
+                    veorq_s32(vreinterpretq_s32_u32(v), vdupq_n_s32(8)),
+                    vdupq_n_s32(8),
+                );
+                let f = vcvtq_f32_s32(sv);
+                let s = vld1q_f32(scales.as_ptr().add(i + 4 * j));
+                vst1q_f32(dst.as_mut_ptr().add(i + 4 * j), vmulq_f32(f, s));
+            }
+            i += 8;
+        }
+        while i < n {
+            let nib = if hi { (bytes[i] >> 4) & 0x0f } else { bytes[i] & 0x0f };
+            dst[i] = crate::model::quant::sign_extend(nib) as f32 * scales[i];
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Reference accumulation over packed slivers — plain f64-free
+    /// scalar math in the exact k-order every kernel must follow.
+    #[allow(clippy::too_many_arguments)]
+    fn reference(
+        isa: Isa,
+        ap: &[f32],
+        bp: &[f32],
+        kc: usize,
+        ldc: usize,
+        rows: usize,
+        cols: usize,
+        out: &mut [f32],
+    ) {
+        let (mr, nr) = (isa.mr(), isa.nr());
+        for r in 0..rows {
+            for c in 0..cols {
+                let mut acc = 0.0f32;
+                for l in 0..kc {
+                    acc += ap[l * mr + r] * bp[l * nr + c];
+                }
+                out[r * ldc + c] += acc;
+            }
+        }
+    }
+
+    #[test]
+    fn every_supported_isa_matches_the_scalar_accumulation_bitwise() {
+        let mut rng = Rng::new(42);
+        for isa in supported() {
+            let (mr, nr) = (isa.mr(), isa.nr());
+            for kc in [1, 3, 17, 64] {
+                let ap = rng.normal_vec(kc * mr, 1.0);
+                let bp = rng.normal_vec(kc * nr, 1.0);
+                for (rows, cols) in [(mr, nr), (1, 1), (mr - 1, nr - 3), (2, nr)] {
+                    let ldc = nr + 5;
+                    let mut want = vec![0.5f32; rows.max(1) * ldc];
+                    let mut got = want.clone();
+                    reference(isa, &ap, &bp, kc, ldc, rows, cols, &mut want);
+                    microkernel(isa, &ap, &bp, kc, &mut got, ldc, rows, cols);
+                    assert_eq!(want, got, "isa={} kc={kc} {rows}x{cols}", isa.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_run_matches_scalar_expression_bitwise() {
+        let mut rng = Rng::new(43);
+        for isa in supported() {
+            for n in [1, 7, 8, 9, 31, 64] {
+                let bytes: Vec<u8> = (0..n).map(|i| (i * 37 + 11) as u8).collect();
+                let scales = rng.normal_vec(n, 0.1);
+                for hi in [false, true] {
+                    let mut want = vec![0.0f32; n];
+                    let mut got = vec![0.0f32; n];
+                    dequant_scalar(&bytes, &scales, hi, &mut want);
+                    dequant_run(isa, &bytes, &scales, hi, &mut got);
+                    assert_eq!(want, got, "isa={} n={n} hi={hi}", isa.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_scalar_matches_quant_sign_extension() {
+        // All 16 nibble values through both nibble halves.
+        let bytes: Vec<u8> = (0..=255u8).step_by(17).collect();
+        let scales = vec![0.25f32; bytes.len()];
+        let mut lo = vec![0.0f32; bytes.len()];
+        let mut hi = vec![0.0f32; bytes.len()];
+        dequant_scalar(&bytes, &scales, false, &mut lo);
+        dequant_scalar(&bytes, &scales, true, &mut hi);
+        for (i, &b) in bytes.iter().enumerate() {
+            let expect = |nib: u8| crate::model::quant::sign_extend(nib) as f32 * 0.25;
+            assert_eq!(lo[i], expect(b & 0x0f));
+            assert_eq!(hi[i], expect((b >> 4) & 0x0f));
+        }
+    }
+
+    #[test]
+    fn detection_env_override_and_ranking() {
+        assert!(cpu_supports(Isa::Scalar));
+        assert!(supported().contains(&Isa::Scalar));
+        assert_eq!(from_env_or_best(Some("scalar")), Isa::Scalar);
+        // Unrecognized values fall back to the best available.
+        assert_eq!(from_env_or_best(Some("avx999")), best_available());
+        assert_eq!(from_env_or_best(None), best_available());
+        assert!(supported().contains(&best_available()));
+        for isa in Isa::ALL {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+            assert!(isa.mr() <= MR_MAX && isa.nr() <= NR_MAX);
+        }
+        assert_eq!(Isa::parse("riscv"), None);
+    }
+}

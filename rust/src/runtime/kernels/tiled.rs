@@ -1,45 +1,46 @@
 //! Cache-blocked, register-tiled GEMM (single thread) — the BLIS-style
-//! three-loop blocking around a branch-free MR×NR micro-kernel.
+//! three-loop blocking around a branch-free mr×nr micro-kernel.
 //!
 //! Structure: the `n` dimension is split into NC-column slabs, `k` into
-//! KC-deep panels, `m` into MC-row panels. For each (slab, panel) pair
-//! the operands are packed into contiguous zero-padded buffers from the
-//! [`TensorArena`] — packing also absorbs the transposed layouts, so one
-//! micro-kernel serves `a@b`, `aᵀ@b` and `a@bᵀ` alike. The micro-kernel
-//! holds an MR×NR accumulator block in registers across the whole KC
-//! depth, so C is loaded/stored once per k-panel instead of once per k
-//! step (the main win over the naive triple loop).
+//! KC-deep panels, `m` into MC-row panels (MC/KC/NC come from the
+//! [`super::tune::Tiles`] the engine was built with — derived from the
+//! machine's cache geometry or a persisted `--tune` profile). For each
+//! (slab, panel) pair the operands are packed into contiguous
+//! zero-padded buffers from the [`TensorArena`] — packing also absorbs
+//! the transposed layouts, so one micro-kernel serves `a@b`, `aᵀ@b` and
+//! `a@bᵀ` alike. The micro-kernel ([`super::simd::microkernel`],
+//! dispatched per detected ISA with the portable scalar kernel as the
+//! bitwise oracle) holds an mr×nr accumulator block in registers across
+//! the whole KC depth, so C is loaded/stored once per k-panel instead of
+//! once per k step (the main win over the naive triple loop). The
+//! micro-tile shape is the ISA's (`Isa::mr`/`Isa::nr`) and the packed
+//! sliver layout follows it.
 //!
 //! Determinism: every output element accumulates its k-terms in strictly
 //! ascending order (KC panels outer, k ascending inside), independent of
-//! the row panel it lands in — which is what makes [`super::parallel`]
-//! bitwise identical to this kernel at any thread count.
+//! the row panel it lands in and of the ISA (all micro-kernels use
+//! unfused multiply-then-add) — which is what makes [`super::parallel`]
+//! bitwise identical to this kernel at any thread count and every SIMD
+//! path bitwise identical to scalar, *at fixed tiles*. KC is the one
+//! scheduling choice visible in the bits: each k-panel's partial sum is
+//! folded in registers before being added to C, so a different KC
+//! regroups the adds whenever `k > KC`. MC/NC/MR/NR never matter — they
+//! only partition the output. All parity guarantees are therefore stated
+//! per tile profile, which is constant within a process.
+//!
+//! q4 operands dequantize inside `pack_b` on SIMD lanes
+//! ([`super::simd::dequant_run`]), evaluating exactly
+//! `quant::dequantize`'s per-element expression.
 //!
 //! No data-dependent branches: unlike the naive oracle, zero inputs take
 //! exactly the same time as dense ones.
 
+use crate::model::quant;
 use crate::tensor::TensorArena;
 
+use super::simd::{self, Isa};
+use super::tune::{Tiles, MAX_KC};
 use super::{AView, BView};
-
-/// Micro-kernel rows (register block height). 6×8 accumulators fit the
-/// baseline x86-64 SSE2 register file (12 vector registers of state plus
-/// two B loads and an A broadcast) without spilling.
-pub const MR: usize = 6;
-/// Micro-kernel columns (register block width; kept a small multiple of
-/// the f32 SIMD lane count so the inner loop auto-vectorizes).
-pub const NR: usize = 8;
-/// k-depth of one packed panel.
-pub const KC: usize = 256;
-/// Rows of one packed A panel.
-pub const MC: usize = 64;
-/// Columns of one packed B slab.
-pub const NC: usize = 128;
-
-/// Upper bound on one `gemm` invocation's packing checkout in f32
-/// elements (apack ≤ (MC rounded up to MR)·KC, bpack ≤ KC·NC) —
-/// `memory::model`'s scratch term charges this per kernel thread.
-pub const PACK_BOUND_ELEMS: usize = (MC + MR) * KC + KC * NC;
 
 /// `out[m,n] += A[row0..row0+m, :k] @ B[:k, :n]` with `out` zero on
 /// entry. `row0` offsets the A rows only (the parallel kernel hands each
@@ -47,6 +48,8 @@ pub const PACK_BOUND_ELEMS: usize = (MC + MR) * KC + KC * NC;
 #[allow(clippy::too_many_arguments)]
 pub fn gemm(
     arena: &TensorArena,
+    isa: Isa,
+    tiles: Tiles,
     a: AView,
     b: BView,
     row0: usize,
@@ -59,58 +62,70 @@ pub fn gemm(
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    let mc_pad = MC.min(m).next_multiple_of(MR);
-    let nc_pad = NC.min(n).next_multiple_of(NR);
-    let kc_max = KC.min(k);
+    let (mr, nr) = (isa.mr(), isa.nr());
+    let (mc_max, kc_lim, nc_max) = (tiles.mc(), tiles.kc(), tiles.nc());
+    let mc_pad = mc_max.min(m).next_multiple_of(mr);
+    let nc_pad = nc_max.min(n).next_multiple_of(nr);
+    let kc_max = kc_lim.min(k);
     let mut apack = arena.take(mc_pad * kc_max);
     let mut bpack = arena.take(kc_max * nc_pad);
 
     let mut jc = 0;
     while jc < n {
-        let nc = NC.min(n - jc);
+        let nc = nc_max.min(n - jc);
         let mut pc = 0;
         while pc < k {
-            let kc = KC.min(k - pc);
-            pack_b(&b, k, n, pc, kc, jc, nc, &mut bpack);
+            let kc = kc_lim.min(k - pc);
+            pack_b(&b, isa, k, n, pc, kc, jc, nc, &mut bpack);
             let mut ic = 0;
             while ic < m {
-                let mc = MC.min(m - ic);
-                pack_a(&a, k, row0 + ic, mc, pc, kc, &mut apack);
-                macro_kernel(&apack, &bpack, mc, nc, kc, out, ic, jc, n);
-                ic += MC;
+                let mc = mc_max.min(m - ic);
+                pack_a(&a, mr, k, row0 + ic, mc, pc, kc, &mut apack);
+                macro_kernel(&apack, &bpack, isa, mc, nc, kc, out, ic, jc, n);
+                ic += mc_max;
             }
-            pc += KC;
+            pc += kc_lim;
         }
-        jc += NC;
+        jc += nc_max;
     }
 }
 
-/// Pack `A[grow0..grow0+mc, pc..pc+kc]` as MR-row slivers, each laid out
-/// `[kc][MR]`, zero-padding the ragged row block.
-fn pack_a(a: &AView, k: usize, grow0: usize, mc: usize, pc: usize, kc: usize, apack: &mut [f32]) {
-    let mbs = mc.div_ceil(MR);
+/// Pack `A[grow0..grow0+mc, pc..pc+kc]` as mr-row slivers, each laid out
+/// `[kc][mr]`, zero-padding the ragged row block.
+#[allow(clippy::too_many_arguments)]
+fn pack_a(
+    a: &AView,
+    mr: usize,
+    k: usize,
+    grow0: usize,
+    mc: usize,
+    pc: usize,
+    kc: usize,
+    apack: &mut [f32],
+) {
+    let mbs = mc.div_ceil(mr);
     for ib in 0..mbs {
-        let sliver = &mut apack[ib * kc * MR..(ib + 1) * kc * MR];
-        let rows = MR.min(mc - ib * MR);
+        let sliver = &mut apack[ib * kc * mr..(ib + 1) * kc * mr];
+        let rows = mr.min(mc - ib * mr);
         match *a {
             AView::Rows(data) => {
-                for r in 0..MR {
+                for r in 0..mr {
                     if r < rows {
-                        let src = &data[(grow0 + ib * MR + r) * k + pc..][..kc];
+                        let src = &data[(grow0 + ib * mr + r) * k + pc..][..kc];
                         for (l, &v) in src.iter().enumerate() {
-                            sliver[l * MR + r] = v;
+                            sliver[l * mr + r] = v;
                         }
                     } else {
                         for l in 0..kc {
-                            sliver[l * MR + r] = 0.0;
+                            sliver[l * mr + r] = 0.0;
                         }
                     }
                 }
             }
             AView::Cols { data, ld } => {
                 for l in 0..kc {
-                    let src = &data[(pc + l) * ld + grow0 + ib * MR..];
-                    let dst = &mut sliver[l * MR..l * MR + MR];
+                    let src = &data[(pc + l) * ld + grow0 + ib * mr..];
+                    let dst = &mut sliver[l * mr..l * mr + mr];
                     for (r, d) in dst.iter_mut().enumerate() {
                         *d = if r < rows { src[r] } else { 0.0 };
                     }
@@ -120,11 +135,12 @@ fn pack_a(a: &AView, k: usize, grow0: usize, mc: usize, pc: usize, kc: usize, ap
     }
 }
 
-/// Pack `B[pc..pc+kc, jc..jc+nc]` as NR-column slivers, each laid out
-/// `[kc][NR]`, zero-padding the ragged column block.
+/// Pack `B[pc..pc+kc, jc..jc+nc]` as nr-column slivers, each laid out
+/// `[kc][nr]`, zero-padding the ragged column block.
 #[allow(clippy::too_many_arguments)]
 fn pack_b(
     b: &BView,
+    isa: Isa,
     k: usize,
     n: usize,
     pc: usize,
@@ -133,60 +149,79 @@ fn pack_b(
     nc: usize,
     bpack: &mut [f32],
 ) {
-    let nbs = nc.div_ceil(NR);
+    let nr = isa.nr();
+    let nbs = nc.div_ceil(nr);
     for jb in 0..nbs {
-        let sliver = &mut bpack[jb * kc * NR..(jb + 1) * kc * NR];
-        let cols = NR.min(nc - jb * NR);
+        let sliver = &mut bpack[jb * kc * nr..(jb + 1) * kc * nr];
+        let cols = nr.min(nc - jb * nr);
         match *b {
             BView::Rows(data) => {
                 for l in 0..kc {
-                    let src = &data[(pc + l) * n + jc + jb * NR..];
-                    let dst = &mut sliver[l * NR..l * NR + NR];
+                    let src = &data[(pc + l) * n + jc + jb * nr..];
+                    let dst = &mut sliver[l * nr..l * nr + nr];
                     for (c, d) in dst.iter_mut().enumerate() {
                         *d = if c < cols { src[c] } else { 0.0 };
                     }
                 }
             }
             BView::Cols(data) => {
-                for c in 0..NR {
+                for c in 0..nr {
                     if c < cols {
-                        let src = &data[(jc + jb * NR + c) * k + pc..][..kc];
+                        let src = &data[(jc + jb * nr + c) * k + pc..][..kc];
                         for (l, &v) in src.iter().enumerate() {
-                            sliver[l * NR + c] = v;
+                            sliver[l * nr + c] = v;
                         }
                     } else {
                         for l in 0..kc {
-                            sliver[l * NR + c] = 0.0;
+                            sliver[l * nr + c] = 0.0;
                         }
                     }
                 }
             }
-            // int4 operands dequantize here, inside packing: each panel
-            // element goes nibble → sign-extend → ×scale straight into
-            // the packed sliver, so no f32 copy of W ever exists beyond
-            // the panel (and the dequantized values are bitwise the ones
-            // `quant::dequantize` would produce — packing order does not
-            // change them, which keeps tiled-q4 ≡ parallel-q4 bitwise).
+            // int4 operands dequantize here, inside packing, on SIMD
+            // lanes: each panel row goes nibble → sign-extend → ×scale
+            // straight into the packed sliver, so no f32 copy of W ever
+            // exists beyond the panel (and the dequantized values are
+            // bitwise the ones `quant::dequantize` would produce —
+            // packing order does not change them, which keeps tiled-q4
+            // ≡ parallel-q4 bitwise across every ISA).
             BView::Q4(q) => {
+                let col0 = jc + jb * nr;
                 for l in 0..kc {
                     let r = pc + l;
-                    let dst = &mut sliver[l * NR..l * NR + NR];
-                    for (c, d) in dst.iter_mut().enumerate() {
-                        *d = if c < cols { q.at(r, jc + jb * NR + c) } else { 0.0 };
+                    let dst = &mut sliver[l * nr..l * nr + nr];
+                    if cols == nr {
+                        // One B row is contiguous bytes across columns.
+                        let bytes = &q.packed[(r / 2) * q.dout + col0..][..nr];
+                        let scales = &q.scales[(r / quant::GROUP) * q.dout + col0..][..nr];
+                        simd::dequant_run(isa, bytes, scales, r % 2 == 1, dst);
+                    } else {
+                        for (c, d) in dst.iter_mut().enumerate() {
+                            *d = if c < cols { q.at(r, col0 + c) } else { 0.0 };
+                        }
                     }
                 }
             }
             BView::Q4T(q) => {
-                // B = Wᵀ: column j of B is row j of the packed matrix.
-                for c in 0..NR {
+                // B = Wᵀ: column j of B is row j of the packed matrix —
+                // a fixed-nibble, contiguous byte run along k. Dequant
+                // the run on SIMD lanes into a stack buffer, then
+                // scatter at stride nr into the sliver (KC ≤ MAX_KC by
+                // the Tiles invariant).
+                debug_assert!(kc <= MAX_KC);
+                let mut tmp = [0.0f32; MAX_KC];
+                for c in 0..nr {
                     if c < cols {
-                        let wr = jc + jb * NR + c;
-                        for l in 0..kc {
-                            sliver[l * NR + c] = q.at(wr, pc + l);
+                        let wr = jc + jb * nr + c;
+                        let bytes = &q.packed[(wr / 2) * q.dout + pc..][..kc];
+                        let scales = &q.scales[(wr / quant::GROUP) * q.dout + pc..][..kc];
+                        simd::dequant_run(isa, bytes, scales, wr % 2 == 1, &mut tmp[..kc]);
+                        for (l, &v) in tmp[..kc].iter().enumerate() {
+                            sliver[l * nr + c] = v;
                         }
                     } else {
                         for l in 0..kc {
-                            sliver[l * NR + c] = 0.0;
+                            sliver[l * nr + c] = 0.0;
                         }
                     }
                 }
@@ -196,11 +231,12 @@ fn pack_b(
 }
 
 /// `out[ic.., jc..] += Apack @ Bpack` over all micro-tiles of one
-/// (MC × NC × KC) block.
+/// (MC × NC × KC) block, through the ISA-dispatched micro-kernel.
 #[allow(clippy::too_many_arguments)]
 fn macro_kernel(
     apack: &[f32],
     bpack: &[f32],
+    isa: Isa,
     mc: usize,
     nc: usize,
     kc: usize,
@@ -209,32 +245,17 @@ fn macro_kernel(
     jc: usize,
     n: usize,
 ) {
-    let mbs = mc.div_ceil(MR);
-    let nbs = nc.div_ceil(NR);
+    let (mr, nr) = (isa.mr(), isa.nr());
+    let mbs = mc.div_ceil(mr);
+    let nbs = nc.div_ceil(nr);
     for ib in 0..mbs {
-        let ap = &apack[ib * kc * MR..(ib + 1) * kc * MR];
-        let rows = MR.min(mc - ib * MR);
+        let ap = &apack[ib * kc * mr..(ib + 1) * kc * mr];
+        let rows = mr.min(mc - ib * mr);
         for jb in 0..nbs {
-            let bp = &bpack[jb * kc * NR..(jb + 1) * kc * NR];
-            let cols = NR.min(nc - jb * NR);
-            let mut acc = [[0.0f32; NR]; MR];
-            for l in 0..kc {
-                let av: &[f32; MR] = ap[l * MR..l * MR + MR].try_into().unwrap();
-                let bv: &[f32; NR] = bp[l * NR..l * NR + NR].try_into().unwrap();
-                for r in 0..MR {
-                    let ar = av[r];
-                    for (c, acc_rc) in acc[r].iter_mut().enumerate() {
-                        *acc_rc += ar * bv[c];
-                    }
-                }
-            }
-            for r in 0..rows {
-                let orow =
-                    &mut out[(ic + ib * MR + r) * n + jc + jb * NR..][..cols];
-                for (o, v) in orow.iter_mut().zip(&acc[r][..cols]) {
-                    *o += v;
-                }
-            }
+            let bp = &bpack[jb * kc * nr..(jb + 1) * kc * nr];
+            let cols = nr.min(nc - jb * nr);
+            let origin = (ic + ib * mr) * n + jc + jb * nr;
+            simd::microkernel(isa, ap, bp, kc, &mut out[origin..], n, rows, cols);
         }
     }
 }

@@ -1,0 +1,400 @@
+//! Cache-aware tile autotuning for the tiled GEMM.
+//!
+//! The BLIS blocking parameters (MC row panel, KC k-depth, NC column
+//! slab) were hard-coded 64/256/128; this module derives them from the
+//! machine instead. [`CacheInfo::detect`] reads L1d/L2/cache-line
+//! geometry from sysfs (conservative defaults when unavailable),
+//! [`Tiles::derive`] sizes KC so one A sliver + one B sliver fit L1d and
+//! MC/NC so the packed panels sit in half of L2, and `--tune` sweeps a
+//! candidate grid on a calibration GEMM set, persisting the winner to a
+//! small JSON profile (`MESP_TUNE_PROFILE` or `~/.cache/mesp/tune.json`)
+//! that [`active_tiles`] loads on the next run.
+//!
+//! Tile sizes are a scheduling choice: every output element still
+//! accumulates its k-terms in ascending order whatever MC/KC/NC are, so
+//! at any fixed profile the bitwise parity guarantees (SIMD ≡ scalar,
+//! tiled ≡ parallel — see [`super::simd`] and [`super::tiled`]) hold
+//! unchanged. A different KC does regroup the panel partial sums when
+//! `k > KC`, which is why the active profile is resolved once per
+//! process and shared by every engine.
+//!
+//! Memory accounting follows the tiles: [`Tiles::pack_bound_elems`]
+//! bounds one `gemm` invocation's packing checkout, and
+//! `memory::model`'s per-thread packing-scratch term (hence fleet
+//! admission and the `mesp report` envelope) charges the *active*
+//! tiles' bound rather than a constant.
+
+use std::path::{Path, PathBuf};
+use std::sync::RwLock;
+use std::time::Instant;
+
+use crate::memory::MemoryTracker;
+use crate::tensor::TensorArena;
+use crate::util::{Json, Rng};
+
+use super::simd::{Isa, MR_MAX, NR_MAX};
+use super::{tiled, AView, BView};
+
+/// Hard cap on KC: the q4 `Wᵀ` pack dequantizes one column run into a
+/// fixed stack buffer of this many f32s, so every `Tiles` constructor
+/// clamps to it.
+pub const MAX_KC: usize = 512;
+
+/// Cache geometry the tile derivation consumes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheInfo {
+    pub l1d_bytes: usize,
+    pub l2_bytes: usize,
+    pub line_bytes: usize,
+}
+
+impl CacheInfo {
+    /// Conservative fallback (32 KiB L1d / 1 MiB L2 / 64 B lines) —
+    /// small enough to be safe on any phone-class core.
+    pub const DEFAULT: CacheInfo =
+        CacheInfo { l1d_bytes: 32 * 1024, l2_bytes: 1024 * 1024, line_bytes: 64 };
+
+    /// Detect from sysfs (Linux); [`CacheInfo::DEFAULT`] elsewhere or on
+    /// any parse failure. Cached per process.
+    pub fn detect() -> CacheInfo {
+        use std::sync::OnceLock;
+        static DETECTED: OnceLock<CacheInfo> = OnceLock::new();
+        *DETECTED.get_or_init(|| detect_sysfs().unwrap_or(CacheInfo::DEFAULT))
+    }
+}
+
+/// Parse a sysfs cache size like `48K`, `2048K`, `1M` or a plain byte
+/// count.
+fn parse_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let (num, mult) = match s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        _ => (s, 1),
+    };
+    num.parse::<usize>().ok().map(|n| n * mult)
+}
+
+fn detect_sysfs() -> Option<CacheInfo> {
+    let base = Path::new("/sys/devices/system/cpu/cpu0/cache");
+    let read = |idx: usize, f: &str| -> Option<String> {
+        std::fs::read_to_string(base.join(format!("index{idx}")).join(f))
+            .ok()
+            .map(|s| s.trim().to_string())
+    };
+    let (mut l1d, mut l2, mut line) = (None, None, None);
+    for idx in 0..8 {
+        let Some(level) = read(idx, "level") else { continue };
+        let ty = read(idx, "type").unwrap_or_default();
+        let size = read(idx, "size").and_then(|s| parse_size(&s));
+        if level == "1" && ty == "Data" {
+            l1d = l1d.or(size);
+        }
+        if level == "2" {
+            l2 = l2.or(size);
+        }
+        if line.is_none() {
+            line = read(idx, "coherency_line_size").and_then(|s| s.parse().ok());
+        }
+    }
+    Some(CacheInfo {
+        l1d_bytes: l1d?,
+        l2_bytes: l2.unwrap_or(CacheInfo::DEFAULT.l2_bytes),
+        line_bytes: line.unwrap_or(CacheInfo::DEFAULT.line_bytes),
+    })
+}
+
+/// The blocking parameters of one `tiled::gemm` invocation. Fields are
+/// private: every constructor normalizes (KC ≤ [`MAX_KC`], NC rounded up
+/// to an [`NR_MAX`] multiple) so [`Tiles::pack_bound_elems`] is a true
+/// upper bound on the packing checkout for any operand shape and ISA.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tiles {
+    mc: usize,
+    kc: usize,
+    nc: usize,
+}
+
+impl Tiles {
+    pub fn new(mc: usize, kc: usize, nc: usize) -> Tiles {
+        Tiles {
+            mc: mc.clamp(8, 256),
+            kc: kc.clamp(32, MAX_KC),
+            nc: nc.clamp(16, 1024).next_multiple_of(NR_MAX),
+        }
+    }
+
+    /// The pre-autotuning constants (MC 64, KC 256, NC 128) — kept as
+    /// the sweep's reference candidate and for tests.
+    pub fn baseline() -> Tiles {
+        Tiles::new(64, 256, 128)
+    }
+
+    /// Derive from cache geometry: KC sized so an A sliver + a B sliver
+    /// (`(MR_MAX + NR_MAX) · KC` f32s) fill L1d, MC and NC sized so the
+    /// packed `MC×KC` panel and `KC×NC` slab each sit in half of L2.
+    pub fn derive(cache: CacheInfo) -> Tiles {
+        let kc = (cache.l1d_bytes / (4 * (MR_MAX + NR_MAX)))
+            .clamp(128, MAX_KC)
+            / 32
+            * 32;
+        let panel = (cache.l2_bytes / 2) / (4 * kc);
+        let mc = panel.clamp(32, 128) / 8 * 8;
+        let nc = panel.clamp(64, 256);
+        Tiles::new(mc, kc, nc)
+    }
+
+    pub fn mc(&self) -> usize {
+        self.mc
+    }
+
+    pub fn kc(&self) -> usize {
+        self.kc
+    }
+
+    pub fn nc(&self) -> usize {
+        self.nc
+    }
+
+    /// Upper bound on one `gemm` invocation's packing checkout in f32
+    /// elements: apack ≤ (MC rounded up to any ISA's mr) · KC, bpack ≤
+    /// KC · NC (NC is already an NR_MAX multiple, so column rounding
+    /// never exceeds it). `memory::model` charges this per kernel
+    /// thread.
+    pub fn pack_bound_elems(&self) -> usize {
+        (self.mc + MR_MAX) * self.kc + self.kc * self.nc
+    }
+
+    /// `"mc×kc×nc"` label for traces, logs and the bench record.
+    pub fn label(&self) -> String {
+        format!("{}x{}x{}", self.mc, self.kc, self.nc)
+    }
+}
+
+static ACTIVE: RwLock<Option<Tiles>> = RwLock::new(None);
+
+/// The process-wide tiles every [`super::Kernels`] is built with (unless
+/// overridden per-instance via `with_tiles`): the persisted tuning
+/// profile if one loads, otherwise [`Tiles::derive`] of the detected
+/// cache geometry. Resolved once; [`install`] replaces it.
+pub fn active_tiles() -> Tiles {
+    if let Some(t) = *ACTIVE.read().unwrap() {
+        return t;
+    }
+    let t = profile_path()
+        .and_then(|p| load_profile(&p))
+        .unwrap_or_else(|| Tiles::derive(CacheInfo::detect()));
+    let mut w = ACTIVE.write().unwrap();
+    if w.is_none() {
+        *w = Some(t);
+    }
+    w.unwrap()
+}
+
+/// Replace the process-wide tiles (the `--tune` path; tests use
+/// per-instance `with_tiles` instead to stay hermetic).
+pub fn install(t: Tiles) {
+    *ACTIVE.write().unwrap() = Some(t);
+}
+
+/// Where the tuning profile lives: `$MESP_TUNE_PROFILE`, else
+/// `$HOME/.cache/mesp/tune.json`, else nowhere (persistence disabled).
+pub fn profile_path() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("MESP_TUNE_PROFILE") {
+        if !p.is_empty() {
+            return Some(PathBuf::from(p));
+        }
+    }
+    std::env::var_os("HOME")
+        .map(|h| PathBuf::from(h).join(".cache").join("mesp").join("tune.json"))
+}
+
+/// Load a persisted profile; `None` on missing/garbled/wrong-version
+/// files (the caller falls back to derivation — a stale profile must
+/// never crash a run).
+pub fn load_profile(path: &Path) -> Option<Tiles> {
+    let root = Json::parse(&std::fs::read_to_string(path).ok()?).ok()?;
+    if root.get("version")?.as_usize()? != 1 {
+        return None;
+    }
+    let field = |k: &str| root.get(k)?.as_usize();
+    Some(Tiles::new(field("mc")?, field("kc")?, field("nc")?))
+}
+
+/// Persist `tiles` (plus provenance: ISA, cache geometry, how it was
+/// chosen) as the version-1 profile at `path`, creating parent dirs.
+pub fn save_profile(path: &Path, tiles: Tiles, isa: Isa, source: &str) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let cache = CacheInfo::detect();
+    let json = Json::obj(vec![
+        ("version", Json::num(1u32)),
+        ("mc", Json::num(tiles.mc as u32)),
+        ("kc", Json::num(tiles.kc as u32)),
+        ("nc", Json::num(tiles.nc as u32)),
+        ("isa", Json::str(isa.name())),
+        ("source", Json::str(source)),
+        (
+            "cache",
+            Json::obj(vec![
+                ("l1d_bytes", Json::num(cache.l1d_bytes as u32)),
+                ("l2_bytes", Json::num(cache.l2_bytes as u32)),
+                ("line_bytes", Json::num(cache.line_bytes as u32)),
+            ]),
+        ),
+    ]);
+    std::fs::write(path, json.to_string())
+}
+
+/// One sweep's outcome: the winning tiles and the timing table.
+pub struct TuneOutcome {
+    pub tiles: Tiles,
+    /// `(candidate, calibration-set milliseconds)` — ascending by time.
+    pub table: Vec<(Tiles, f64)>,
+}
+
+/// Calibration GEMMs: deep-k and wide-n shapes big enough that the
+/// blocking actually cycles (k and n past one KC/NC panel), small enough
+/// that a full sweep stays around a second.
+const CAL_SHAPES: [(usize, usize, usize); 3] = [(96, 384, 256), (64, 768, 128), (192, 192, 320)];
+
+/// The `--tune` candidate grid around the derived point.
+fn candidates() -> Vec<Tiles> {
+    let mut v = vec![Tiles::baseline(), Tiles::derive(CacheInfo::detect())];
+    for kc in [128, 256, 384, 512] {
+        for mc in [32, 64, 128] {
+            for nc in [128, 256] {
+                v.push(Tiles::new(mc, kc, nc));
+            }
+        }
+    }
+    v.dedup_by(|a, b| a == b);
+    v
+}
+
+/// Sweep the default candidate grid on the calibration set with `isa`'s
+/// micro-kernel and return the fastest tiles.
+pub fn sweep(isa: Isa) -> TuneOutcome {
+    sweep_candidates(isa, &candidates(), 2)
+}
+
+/// Sweep an explicit candidate list (`reps` timed runs each, best-of).
+pub fn sweep_candidates(isa: Isa, cands: &[Tiles], reps: usize) -> TuneOutcome {
+    let arena = TensorArena::new(MemoryTracker::new());
+    let mut rng = Rng::new(5);
+    let data: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = CAL_SHAPES
+        .iter()
+        .map(|&(m, k, n)| {
+            (rng.normal_vec(m * k, 0.5), rng.normal_vec(k * n, 0.5), vec![0.0; m * n])
+        })
+        .collect();
+    let mut table = Vec::with_capacity(cands.len());
+    for &tiles in cands {
+        let run = |data: &mut [(Vec<f32>, Vec<f32>, Vec<f32>)]| {
+            for (&(m, k, n), (a, b, out)) in CAL_SHAPES.iter().zip(data.iter_mut()) {
+                out.fill(0.0);
+                tiled::gemm(&arena, isa, tiles, AView::Rows(a), BView::Rows(b), 0, m, k, n, out);
+            }
+        };
+        let mut data = data.clone();
+        run(&mut data); // warmup: page in the arena buffers for this size
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            run(&mut data);
+            best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        table.push((tiles, best));
+    }
+    table.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    TuneOutcome { tiles: table[0].0, table }
+}
+
+/// The full `--tune` action: sweep, install process-wide, persist.
+/// Returns the outcome plus the profile path if one was written.
+pub fn tune_and_install(isa: Isa) -> (TuneOutcome, Option<PathBuf>) {
+    let outcome = sweep(isa);
+    install(outcome.tiles);
+    let written = profile_path().and_then(|p| {
+        save_profile(&p, outcome.tiles, isa, "tune").ok().map(|()| p)
+    });
+    (outcome, written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_normalize_to_the_invariants() {
+        for t in [
+            Tiles::new(1, 9999, 1),
+            Tiles::new(500, 0, 4000),
+            Tiles::baseline(),
+            Tiles::derive(CacheInfo::DEFAULT),
+            Tiles::derive(CacheInfo { l1d_bytes: 48 * 1024, l2_bytes: 2 << 20, line_bytes: 64 }),
+            Tiles::derive(CacheInfo { l1d_bytes: 1, l2_bytes: 1, line_bytes: 1 }),
+        ] {
+            assert!(t.kc() >= 32 && t.kc() <= MAX_KC, "{t:?}");
+            assert!(t.mc() >= 8 && t.mc() <= 256, "{t:?}");
+            assert_eq!(t.nc() % NR_MAX, 0, "{t:?}");
+            assert!(t.pack_bound_elems() >= (t.mc() + MR_MAX) * t.kc());
+        }
+        // The baseline reproduces the pre-autotuning constants.
+        let b = Tiles::baseline();
+        assert_eq!((b.mc(), b.kc(), b.nc()), (64, 256, 128));
+        assert_eq!(b.label(), "64x256x128");
+    }
+
+    #[test]
+    fn derived_tiles_grow_with_cache() {
+        let small = Tiles::derive(CacheInfo::DEFAULT);
+        let big = Tiles::derive(CacheInfo {
+            l1d_bytes: 64 * 1024,
+            l2_bytes: 4 << 20,
+            line_bytes: 64,
+        });
+        assert!(big.kc() >= small.kc());
+        assert!(big.pack_bound_elems() >= small.pack_bound_elems());
+    }
+
+    #[test]
+    fn sysfs_size_strings_parse() {
+        assert_eq!(parse_size("48K"), Some(48 * 1024));
+        assert_eq!(parse_size("2048K"), Some(2048 * 1024));
+        assert_eq!(parse_size("1M"), Some(1024 * 1024));
+        assert_eq!(parse_size("65536"), Some(65536));
+        assert_eq!(parse_size("lots"), None);
+    }
+
+    #[test]
+    fn profile_round_trips_and_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("mesp-tune-test-{}", std::process::id()));
+        let path = dir.join("profile.json");
+        let tiles = Tiles::new(96, 384, 176);
+        save_profile(&path, tiles, Isa::Scalar, "test").unwrap();
+        assert_eq!(load_profile(&path), Some(tiles));
+        std::fs::write(&path, "not json at all").unwrap();
+        assert_eq!(load_profile(&path), None);
+        std::fs::write(&path, "{\"version\": 2, \"mc\": 64, \"kc\": 64, \"nc\": 64}").unwrap();
+        assert_eq!(load_profile(&path), None, "future versions must not half-load");
+        assert_eq!(load_profile(&dir.join("missing.json")), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sweep_returns_a_listed_candidate() {
+        let cands = [Tiles::baseline(), Tiles::new(32, 128, 128)];
+        let out = sweep_candidates(Isa::Scalar, &cands, 1);
+        assert!(cands.contains(&out.tiles));
+        assert_eq!(out.table.len(), 2);
+        assert!(out.table[0].1 <= out.table[1].1, "table must be ascending");
+    }
+
+    #[test]
+    fn active_tiles_returns_normalized_tiles() {
+        let t = active_tiles();
+        assert!(t.kc() <= MAX_KC && t.nc() % NR_MAX == 0);
+    }
+}

@@ -17,7 +17,10 @@
 //! Buffers that must outlive the call (artifact outputs) escape the pool
 //! via [`ScratchBuf::into_vec`]; everything else returns its capacity on
 //! drop. The arena is `Sync`: the parallel GEMM kernel checks packing
-//! panels out from worker threads.
+//! panels out from worker threads. Packing checkouts scale with the
+//! active tile profile — `runtime::kernels::tune::Tiles::pack_bound_elems`
+//! is the per-thread bound `memory::model` charges, so autotuned tiles
+//! move the measured `scratch` tag and the analytical envelope together.
 
 use std::sync::{Arc, Mutex};
 

@@ -82,7 +82,7 @@ fn session_trace_contains_expected_span_hierarchy() {
         "no artifact spans recorded"
     );
     let gemm = evs.iter().find(|e| e.cat == "gemm").expect("no GEMM spans");
-    for key in ["m", "k", "n", "flops"] {
+    for key in ["m", "k", "n", "flops", "isa", "tiles"] {
         assert!(
             gemm.args.iter().any(|(k, _)| *k == key),
             "GEMM span lacks '{key}' arg: {:?}",
