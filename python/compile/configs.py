@@ -37,6 +37,14 @@ CONFIGS = {
         n_kv_heads=2, head_dim=64, d_ff=128, seq=4, batch=1, rank=4,
         alpha=8.0,
     ),
+    # Long-context loss-head stress: a fat vocab (32768) over a thin
+    # trunk (d 128) at seq 512, so the m×vocab logits dwarf every
+    # per-block intermediate — the regime where the chunked lm head
+    # (`--loss-chunk`) pays. The CI obs-tier runs `mesp report` here.
+    "longctx": ModelConfig(
+        name="longctx", vocab=32768, d_model=128, n_layers=8, n_heads=2,
+        n_kv_heads=2, head_dim=64, d_ff=256, seq=512, batch=1, rank=8,
+    ),
     # The end-to-end validation model: ~98M params (DESIGN.md §2).
     "e2e100m": ModelConfig(
         name="e2e100m", vocab=16384, d_model=768, n_layers=12, n_heads=12,

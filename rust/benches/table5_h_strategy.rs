@@ -2,12 +2,69 @@
 //! measures recompute-h ~6% slower than store-h (3B: 4.09s vs 3.85s);
 //! the ordering (recompute ≥ store ≥ plain MeBP is NOT implied — MeBP's
 //! two-phase backward pays residual traffic) is what we verify here.
+//!
+//! Second section: the loss-head scratch peak on the `longctx` preset
+//! (vocab 32768 over d_model 128 at seq 512 — the regime where the
+//! `m×vocab` logits dwarf every block intermediate), comparing
+//! `--loss-chunk {full, 256, 64}`. Peaks are tracked with a
+//! single-threaded tiled engine so GEMM packing panels stay negligible;
+//! latency uses the parallel engine. Smoke gates: chunked < unchunked,
+//! and chunk 64 cuts the tracked loss-phase scratch ≥4× (the acceptance
+//! bar for the chunked lm head). Results land in `BENCH_kernels.json`
+//! under `table5_loss_head`.
 
 #[path = "harness.rs"]
 mod harness;
 
-use mesp::config::{Method, TrainConfig};
+use mesp::config::{presets, KernelKind, Method, TrainConfig};
 use mesp::coordinator::TrainSession;
+use mesp::memory::MemoryTracker;
+use mesp::runtime::{refmath, KernelOptions, Kernels};
+use mesp::util::{Json, Rng};
+
+/// Tracked `scratch`-tag peak and mean latency of one full
+/// loss-and-grad pass at the given chunk (0 = unchunked oracle).
+fn loss_head_run(chunk: usize) -> (u64, f64) {
+    let dims = presets::compiled("longctx").expect("longctx preset");
+    let (m, d, v) = (dims.batch * dims.seq, dims.d_model, dims.vocab);
+    let mut rng = Rng::new(0x1055);
+    let h = rng.normal_vec(m * d, 0.5);
+    let norm_w = vec![1.0f32; d];
+    let emb = rng.normal_vec(v * d, 0.02);
+    let targets: Vec<i32> = (0..m).map(|i| (i * 97 % v) as i32).collect();
+
+    let grad = |ks: &Kernels| match chunk {
+        0 => refmath::lm_loss_grad(ks, &h, &norm_w, &emb, &targets, m, d, v),
+        c => refmath::lm_loss_grad_chunked(
+            ks, &h, &norm_w, &emb, &targets, m, d, v, c,
+        ),
+    };
+
+    // Peak: tiled single-thread keeps packing panels out of the picture.
+    let tracker = MemoryTracker::new();
+    let ks = Kernels::new(
+        KernelOptions { kind: KernelKind::Tiled, threads: 1 },
+        tracker.clone(),
+    );
+    grad(&ks).expect("loss grad");
+    let peak = tracker.tag_peak("scratch");
+
+    // Latency: the production parallel engine.
+    let ks = Kernels::new(
+        KernelOptions { kind: KernelKind::Parallel, threads: 0 },
+        MemoryTracker::new(),
+    );
+    let label = if chunk == 0 { "full".into() } else { chunk.to_string() };
+    let r = harness::bench(
+        &format!("longctx/loss_head/chunk_{label}"),
+        1,
+        5,
+        || {
+            grad(&ks).expect("loss grad");
+        },
+    );
+    (peak, r.mean_ms)
+}
 
 fn main() {
     println!("== Table 5: h-strategy step latency (config small) ==");
@@ -33,4 +90,45 @@ fn main() {
     harness::ratio("store-h vs MeBP   ", &results[0], &results[1]);
     harness::ratio("recompute-h vs MeBP", &results[0], &results[2]);
     println!("paper @3B: store-h 1.20x, recompute-h 1.27x of MeBP");
+
+    println!("\n== loss-head scratch peak: longctx, chunked lm head ==");
+    let (peak_full, ms_full) = loss_head_run(0);
+    let (peak_256, ms_256) = loss_head_run(256);
+    let (peak_64, ms_64) = loss_head_run(64);
+    let mb = |b: u64| b as f64 / (1024.0 * 1024.0);
+    println!(
+        "loss-phase scratch peak: full {:.1} MB, chunk 256 {:.1} MB, \
+         chunk 64 {:.1} MB ({:.1}x reduction)",
+        mb(peak_full),
+        mb(peak_256),
+        mb(peak_64),
+        peak_full as f64 / peak_64 as f64
+    );
+    // Smoke gates: chunked must beat the oracle, and chunk 64 must cut
+    // the loss-phase scratch by the acceptance bar.
+    assert!(
+        peak_256 < peak_full && peak_64 < peak_256,
+        "chunked loss-head peak must shrink monotonically: \
+         {peak_full} / {peak_256} / {peak_64}"
+    );
+    assert!(
+        peak_64 * 4 <= peak_full,
+        "chunk 64 must cut loss scratch >=4x on longctx: \
+         {peak_64} vs {peak_full}"
+    );
+    harness::write_bench_json(
+        "table5_loss_head",
+        vec![
+            ("full_peak_mb".to_string(), Json::num(mb(peak_full))),
+            ("chunk256_peak_mb".to_string(), Json::num(mb(peak_256))),
+            ("chunk64_peak_mb".to_string(), Json::num(mb(peak_64))),
+            (
+                "chunk64_reduction".to_string(),
+                Json::num(peak_full as f64 / peak_64 as f64),
+            ),
+            ("full_ms".to_string(), Json::num(ms_full)),
+            ("chunk256_ms".to_string(), Json::num(ms_256)),
+            ("chunk64_ms".to_string(), Json::num(ms_64)),
+        ],
+    );
 }

@@ -115,13 +115,14 @@ pub const TRAIN_FLAGS: &[&str] = &[
     "config", "backend", "method", "steps", "lr", "seed", "optimizer",
     "mezo-eps", "log-every", "spill-limit", "metrics", "artifacts",
     "kernel", "threads", "quant", "save-every", "snapshot-dir", "resume",
-    "trace", "metrics-out", "tune",
+    "trace", "metrics-out", "tune", "loss-chunk", "act-compress",
 ];
 pub const FLEET_FLAGS: &[&str] = &[
     "config", "backend", "methods", "steps", "lr", "seed", "optimizer",
     "budget-mb", "jobs", "workers", "job-file", "artifacts",
     "kernel", "threads", "quant", "budget-schedule", "preempt",
     "snapshot-dir", "print-cost", "trace", "metrics-out", "tune",
+    "loss-chunk", "act-compress",
 ];
 pub const SIMULATE_FLAGS: &[&str] = &["model", "seq", "rank", "breakdown"];
 pub const GRADCHECK_FLAGS: &[&str] = &[
@@ -133,7 +134,7 @@ pub const REPRODUCE_FLAGS: &[&str] = &["table", "fig", "all", "steps", "out"];
 pub const INSPECT_FLAGS: &[&str] = &["config", "backend", "artifacts"];
 pub const REPORT_FLAGS: &[&str] = &[
     "config", "methods", "steps", "kernel", "threads", "quant", "seed",
-    "optimizer", "artifacts",
+    "optimizer", "artifacts", "loss-chunk", "act-compress",
 ];
 
 /// The flag allowlist of a subcommand; `None` for unknown subcommands.
@@ -179,6 +180,12 @@ COMMANDS
               first, persist the winner to the tuning profile —
               $MESP_TUNE_PROFILE or ~/.cache/mesp/tune.json — and run
               with it; later runs load the profile automatically)
+              --loss-chunk N (stream the lm head in tiles of N sequence
+              rows: only N×vocab logits floats live at once, losses stay
+              bitwise identical; 0 = unchunked)
+              --act-compress none|int8 (store-h's saved h = xA and
+              MeBP's residual window held as int8+outlier blobs instead
+              of f32 — lossy: gradients shift within quantization error)
   fleet       Run many sessions concurrently under a device memory budget
               (admission control via the analytical peak-memory model).
               --budget-mb N  --jobs N  --workers N  --config toy|small
@@ -201,6 +208,9 @@ COMMANDS
               admission waits, preempt churn, step latencies)
               --tune (autotune GEMM tiles before the fleet starts; see
               train --tune)
+              --loss-chunk N / --act-compress none|int8 (as in train;
+              both feed the admission cost model, so chunked /
+              compressed jobs admit more densely under one budget)
   simulate    Evaluate the analytical memory model at Qwen2.5 dims.
               --model 0.5b|1.5b|3b  --seq N  --rank N  [--breakdown]
   gradcheck   Assert MeSP ≡ MeBP ≡ store-h gradients on a runnable config.
@@ -216,6 +226,8 @@ COMMANDS
               --config toy  --methods mesp,mebp,storeh  --steps N
               --kernel naive|tiled|parallel  --threads N  --quant f32|q4
               --seed N  --optimizer sgd|momentum|adam  --artifacts DIR
+              --loss-chunk N  --act-compress none|int8 (the envelope is
+              evaluated at the same chunk/compression settings)
   help        This text.
 
 The default backend is `reference`: a pure-Rust in-process implementation

@@ -138,6 +138,39 @@ impl QuantMode {
     }
 }
 
+/// Compression of BUFFERED activations — store-h's saved `h = xA` and
+/// MeBP's between-phase residual window (`--act-compress`). Distinct
+/// from [`QuantMode`], which packs the frozen *weights*: this packs
+/// *activations* at save time (per-group int8 scales + structured
+/// outlier storage, HyC-LoRA style, `model::actquant`) and dequantizes
+/// them in the backward — a tunable memory/fidelity axis between MeSP
+/// (recompute) and store-h (cache). `None` keeps the exact-f32 cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ActCompress {
+    #[default]
+    None,
+    Int8,
+}
+
+impl ActCompress {
+    pub const ALL: [ActCompress; 2] = [ActCompress::None, ActCompress::Int8];
+
+    pub fn parse(s: &str) -> anyhow::Result<ActCompress> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "f32" | "off" => Ok(ActCompress::None),
+            "int8" | "i8" => Ok(ActCompress::Int8),
+            _ => anyhow::bail!("unknown act-compress mode '{s}' (none|int8)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ActCompress::None => "none",
+            ActCompress::Int8 => "int8",
+        }
+    }
+}
+
 /// GEMM kernel variant of the reference backend's kernel engine
 /// (`runtime::kernels`). `Naive` is the original scalar triple loop kept
 /// as the correctness oracle; `Tiled` is the cache-blocked register-tiled
@@ -343,6 +376,14 @@ pub struct TrainConfig {
     /// (`--metrics-out`). Distinct from `metrics_path`, the per-step
     /// training-loss JSONL stream.
     pub metrics_out: Option<String>,
+    /// Loss-head chunk size in sequence rows (`--loss-chunk`; 0 =
+    /// unchunked). Chunked runs are bitwise identical to unchunked ones
+    /// within a kernel kind/ISA — this knob only moves the peak.
+    pub loss_chunk: usize,
+    /// Buffered-activation compression for store-h / MeBP residuals
+    /// (`--act-compress none|int8`). Lossy when int8: losses drift from
+    /// the f32-cache oracle by the quantization error.
+    pub act_compress: ActCompress,
 }
 
 impl TrainConfig {
@@ -377,6 +418,8 @@ impl Default for TrainConfig {
             model_seed: None,
             trace_path: None,
             metrics_out: None,
+            loss_chunk: 0,
+            act_compress: ActCompress::None,
         }
     }
 }
@@ -460,6 +503,18 @@ mod tests {
         assert_eq!(QuantMode::parse("int4").unwrap(), QuantMode::Q4);
         assert!(QuantMode::parse("q8").is_err());
         assert_eq!(TrainConfig::default().quant, QuantMode::F32);
+    }
+
+    #[test]
+    fn act_compress_parse_roundtrip() {
+        for a in ActCompress::ALL {
+            assert_eq!(ActCompress::parse(a.name()).unwrap(), a);
+        }
+        assert_eq!(ActCompress::parse("i8").unwrap(), ActCompress::Int8);
+        assert!(ActCompress::parse("int4").is_err());
+        let c = TrainConfig::default();
+        assert_eq!(c.act_compress, ActCompress::None);
+        assert_eq!(c.loss_chunk, 0, "0 = unchunked");
     }
 
     #[test]

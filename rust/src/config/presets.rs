@@ -144,6 +144,30 @@ fn basebound() -> ModelDims {
     }
 }
 
+/// Long-context loss-head stress preset: a fat vocab (32768) over a thin
+/// trunk (d 128) at seq 512, so the `m×vocab` logits (≈67 MB f32) dwarf
+/// every per-block intermediate — the regime where `lm_loss_grad`'s
+/// scratch dominates the tracked peak and `--loss-chunk` pays. The
+/// obs-tier CI envelope check runs `mesp report` here: the pre-fix
+/// one-buffer `loss_head` model term under-counted this preset by ~67 MB.
+/// All quantized d_ins (128, 256) divide the q4 group size.
+fn longctx() -> ModelDims {
+    ModelDims {
+        name: "longctx".into(),
+        vocab: 32768,
+        d_model: 128,
+        n_layers: 8,
+        n_heads: 2,
+        n_kv_heads: 2,
+        head_dim: 64,
+        d_ff: 256,
+        seq: 512,
+        batch: 1,
+        rank: 8,
+        alpha: 16.0,
+    }
+}
+
 /// The end-to-end validation model: ~98M params (DESIGN.md §2).
 fn e2e100m() -> ModelDims {
     ModelDims {
@@ -171,9 +195,10 @@ pub fn compiled(name: &str) -> anyhow::Result<ModelDims> {
         "toy_flash" => Ok(toy("toy_flash")),
         "small" => Ok(small()),
         "basebound" => Ok(basebound()),
+        "longctx" => Ok(longctx()),
         "e2e100m" => Ok(e2e100m()),
         _ => anyhow::bail!(
-            "unknown config '{name}' (toy|toy_flash|small|basebound|e2e100m)"
+            "unknown config '{name}' (toy|toy_flash|small|basebound|longctx|e2e100m)"
         ),
     }
 }
@@ -235,5 +260,32 @@ mod tests {
         // q4-eligible: every quantized d_in divides the group size
         assert_eq!(d.d_model % crate::model::quant::GROUP, 0);
         assert_eq!(d.d_ff % crate::model::quant::GROUP, 0);
+    }
+
+    #[test]
+    fn longctx_is_loss_head_dominated_and_q4able() {
+        use crate::config::{Method, OptimizerKind, QuantMode};
+        use crate::memory::model::{peak_q, Widths};
+        let d = compiled("longctx").unwrap();
+        assert_eq!(d.n_heads * d.head_dim, d.d_model);
+        // the full logits must dwarf every per-block term: this is the
+        // preset where the loss head IS the peak
+        let b = peak_q(
+            Method::Mesp, &d, OptimizerKind::Sgd, Widths::tracked(), QuantMode::F32,
+        );
+        // Compare against the shape-only per-block terms (b.scratch also
+        // carries a per-CORE packing charge, which would make this
+        // assertion depend on the machine running the tests).
+        assert!(
+            b.loss_head > 4 * (b.block_intermediates + b.checkpoints),
+            "loss head {} must dominate the block terms {} + {}",
+            b.loss_head,
+            b.block_intermediates,
+            b.checkpoints
+        );
+        // q4-eligible: every quantized d_in divides the group size
+        assert_eq!(d.d_model % crate::model::quant::GROUP, 0);
+        assert_eq!(d.d_ff % crate::model::quant::GROUP, 0);
+        assert_eq!(d.q_dim() % crate::model::quant::GROUP, 0);
     }
 }

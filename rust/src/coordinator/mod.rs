@@ -47,9 +47,10 @@ pub fn make_backend(
     match cfg.backend {
         BackendKind::Reference => {
             let opts = KernelOptions { kind: cfg.kernel, threads: cfg.threads };
-            Ok(Arc::new(ReferenceBackend::with_telemetry(
-                dims, tracker, opts, trace,
-            )))
+            Ok(Arc::new(
+                ReferenceBackend::with_telemetry(dims, tracker, opts, trace)
+                    .with_loss_chunk(cfg.loss_chunk),
+            ))
         }
         #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => {
@@ -244,10 +245,11 @@ impl SessionBuilder {
             ModelSpec::new(frozen.dims.clone(), frozen.seed, frozen.quant)
                 .build_adapters(&tracker);
         let dims = frozen.dims.clone();
-        let ctx = EngineCtx::new(
+        let mut ctx = EngineCtx::new(
             rt, frozen, adapters, cfg.optimizer, cfg.lr, cfg.spill_limit,
             trace.clone(),
         )?;
+        ctx.act_compress = cfg.act_compress;
         let engine = build_engine(cfg.method, ctx, cfg.mezo_eps)?;
         let loader = PrefetchLoader::spawn(
             dims.vocab, dims.batch, dims.seq,

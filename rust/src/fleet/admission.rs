@@ -54,8 +54,16 @@ use super::job::JobSpec;
 /// per job.
 pub fn job_cost_bytes(spec: &JobSpec) -> anyhow::Result<u64> {
     let dims = presets::compiled(&spec.config)?;
-    let activations = memmodel::peak_q(
-        spec.method, &dims, spec.optimizer, Widths::tracked(), spec.quant,
+    let activations = memmodel::peak_opts(
+        spec.method,
+        &dims,
+        spec.optimizer,
+        Widths::tracked(),
+        spec.quant,
+        memmodel::MemOptions {
+            loss_chunk: spec.loss_chunk,
+            act_compress: spec.act_compress,
+        },
     )
     .total();
     let batch_bytes = 2 * (dims.batch * dims.seq * 4) as u64; // tokens+targets i32

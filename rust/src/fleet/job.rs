@@ -6,7 +6,7 @@
 
 use std::path::Path;
 
-use crate::config::{Method, OptimizerKind, QuantMode, TrainConfig};
+use crate::config::{ActCompress, Method, OptimizerKind, QuantMode, TrainConfig};
 use crate::util::rng::{derive, stream};
 use crate::util::Json;
 
@@ -16,7 +16,7 @@ use crate::util::Json;
 /// `job_keys_list_matches_parser` test).
 pub const JOB_KEYS: &[&str] = &[
     "config", "method", "steps", "seed", "lr", "optimizer", "quant", "priority",
-    "model_seed",
+    "model_seed", "loss_chunk", "act_compress",
 ];
 
 /// Highest admissible job priority (priorities are 0..=9; 0 = default).
@@ -50,6 +50,13 @@ pub struct JobSpec {
     /// charges the packed footprint under `q4`, so the same budget
     /// overlaps more quantized jobs.
     pub quant: QuantMode,
+    /// Loss-head streaming tile (rows of the sequence per chunk; 0 =
+    /// unchunked). Admission charges only the tile's logits slab, so a
+    /// chunked long-context job costs far less of the budget.
+    pub loss_chunk: usize,
+    /// Compression of buffered activations (store-h's saved h = xA);
+    /// `int8` shrinks the per-layer stored-h charge ~4×.
+    pub act_compress: ActCompress,
     /// Pinned seed of the frozen base weights. `None` derives the model
     /// stream from the job's own `seed` (private weights); `Some` pins
     /// it, so jobs sharing the pin (and config + quant) attach to ONE
@@ -76,6 +83,8 @@ impl JobSpec {
             lr: base.lr,
             optimizer: base.optimizer,
             quant: base.quant,
+            loss_chunk: base.loss_chunk,
+            act_compress: base.act_compress,
             model_seed: base.model_seed,
             priority: 0,
         }
@@ -133,6 +142,16 @@ impl JobSpec {
                 "model_seed" => {
                     spec.model_seed = Some(as_exact_u64(v, "model_seed")?);
                 }
+                "loss_chunk" => {
+                    spec.loss_chunk = as_exact_u64(v, "loss_chunk")? as usize;
+                }
+                "act_compress" => {
+                    spec.act_compress = ActCompress::parse(
+                        v.as_str().ok_or_else(|| {
+                            anyhow::anyhow!("'act_compress' must be a string")
+                        })?,
+                    )?;
+                }
                 "priority" => {
                     let p = as_exact_u64(v, "priority")?;
                     anyhow::ensure!(
@@ -161,6 +180,8 @@ impl JobSpec {
             lr: self.lr,
             optimizer: self.optimizer,
             quant: self.quant,
+            loss_chunk: self.loss_chunk,
+            act_compress: self.act_compress,
             model_seed: self.model_seed,
             ..base.clone()
         }
@@ -308,6 +329,8 @@ mod tests {
             ("quant", "\"q4\""),
             ("priority", "9"),
             ("model_seed", "7"),
+            ("loss_chunk", "64"),
+            ("act_compress", "\"int8\""),
         ] {
             assert!(JOB_KEYS.contains(&key), "test table missing {key}");
             let j = Json::parse(&format!("{{\"{key}\": {val}}}")).unwrap();
@@ -316,7 +339,7 @@ mod tests {
                 "advertised key '{key}' rejected"
             );
         }
-        assert_eq!(JOB_KEYS.len(), 9, "update the table when adding keys");
+        assert_eq!(JOB_KEYS.len(), 11, "update the table when adding keys");
     }
 
     #[test]

@@ -10,7 +10,8 @@ use std::path::Path;
 
 use mesp::config::cli::{Args, USAGE};
 use mesp::config::{
-    presets, BackendKind, KernelKind, Method, OptimizerKind, QuantMode, TrainConfig,
+    presets, ActCompress, BackendKind, KernelKind, Method, OptimizerKind,
+    QuantMode, TrainConfig,
 };
 use mesp::coordinator::TrainSession;
 use mesp::fleet::{self, FleetOptions, Scheduler};
@@ -75,6 +76,8 @@ fn train_config(args: &Args) -> anyhow::Result<TrainConfig> {
         model_seed: None,
         trace_path: args.opt_str("trace"),
         metrics_out: args.opt_str("metrics-out"),
+        loss_chunk: args.usize("loss-chunk", 0)?,
+        act_compress: ActCompress::parse(&args.str("act-compress", "none"))?,
     })
 }
 
@@ -211,6 +214,8 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         // 0 = auto: the scheduler divides cores by its worker count
         threads: args.usize("threads", 0)?,
         quant: QuantMode::parse(&args.str("quant", "f32"))?,
+        loss_chunk: args.usize("loss-chunk", 0)?,
+        act_compress: ActCompress::parse(&args.str("act-compress", "none"))?,
         ..Default::default()
     };
     let budget_mb = args.u64("budget-mb", 1024)?;

@@ -16,8 +16,19 @@
 //!   MeZO:               second perturbed forward (z + perturbation state
 //!                       live alongside inference activations).
 
-use crate::config::{Method, ModelDims, OptimizerKind, QuantMode, PROJS};
-use crate::model::quant;
+use crate::config::{ActCompress, Method, ModelDims, OptimizerKind, QuantMode, PROJS};
+use crate::model::{actquant, quant};
+
+/// Run-shape options that move the analytical peak: the loss-head chunk
+/// size (`--loss-chunk`, 0 = unchunked) and buffered-activation
+/// compression (`--act-compress`). Defaults reproduce the paper's
+/// configuration exactly, so [`peak_q`] (which forwards defaults) and the
+/// pinned paper-width tables are unchanged.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemOptions {
+    pub loss_chunk: usize,
+    pub act_compress: ActCompress,
+}
 
 /// Byte widths per tensor class. The two instantiations are
 /// `Widths::paper()` and `Widths::tracked()`.
@@ -224,18 +235,6 @@ fn reference_bwd_extra(d: &ModelDims) -> u64 {
         + 16 * m * d.rank as u64
 }
 
-/// Loss-head scratch: logits (+ their gradient on the grad path) plus
-/// the normed-hidden / grad-hidden temporaries.
-fn reference_loss_scratch(d: &ModelDims, grad: bool) -> u64 {
-    let m = d.m() as u64;
-    let logits = m * d.vocab as u64;
-    if grad {
-        2 * logits + 3 * m * d.d_model as u64
-    } else {
-        logits + 2 * m * d.d_model as u64
-    }
-}
-
 /// GEMM packing panels: each thread of the parallel kernel checks out at
 /// most one A panel + one B slab (`Tiles::pack_bound_elems` of the
 /// active tile profile, in f32 elements); bound by the machine's core
@@ -248,8 +247,11 @@ fn reference_packing(_d: &ModelDims) -> u64 {
     threads * crate::runtime::kernels::tune::active_tiles().pack_bound_elems() as u64
 }
 
-/// Worst-case arena checkout for one session of `method` — block calls
-/// and loss calls never overlap, so the max over phases bounds the peak.
+/// Worst-case arena checkout during one BLOCK call of `method`. Loss
+/// calls never overlap with block calls; their scratch is charged in
+/// full by the `loss_head` term (in-place logits at `w.logits` width +
+/// backend temporaries at `w.scratch` width), so this term is the
+/// block-phase bound plus the GEMM packing panels.
 fn reference_scratch(method: Method, d: &ModelDims) -> u64 {
     let block = match method {
         // fused backward: full cache + backward working set in one call
@@ -260,8 +262,24 @@ fn reference_scratch(method: Method, d: &ModelDims) -> u64 {
         // inference forwards only, but each still materializes the cache
         Method::Mezo => reference_cache(d) + reference_fwd_extra(d),
     };
-    let loss = reference_loss_scratch(d, method != Method::Mezo);
-    block.max(loss) + reference_packing(d)
+    block + reference_packing(d)
+}
+
+/// Reference-backend loss-GRAD temporaries beyond the in-place logits
+/// tile the `loss_head` term charges at `w.logits` width (derived from
+/// `refmath::lm_loss_grad{,_chunked}` buffer lifetimes, as an upper
+/// bound over their three phases):
+///
+/// * unchunked oracle — worst phase is `logits + g_logits` live together
+///   (the 2×-logits reality the model used to miss): one extra logits
+///   buffer; the `g_hn + g_h` tail needs `2·m·d`.
+/// * chunked — the persistent `g_hn [m,d]` plus the chunk's `hn`/`g_hn`
+///   tiles, all ≤ `2·m·d`; the `tile×vocab` logits are charged in-place.
+///
+/// `max(tile_logits, 2·m·d)` covers every phase of both shapes.
+fn reference_loss_grad_extra(d: &ModelDims, tile_logits: u64) -> u64 {
+    let m = d.m() as u64;
+    tile_logits.max(2 * m * d.d_model as u64)
 }
 
 /// Allocator bucket granularity: the paper's measured store-h overhead
@@ -306,12 +324,8 @@ pub fn peak(method: Method, d: &ModelDims, opt: OptimizerKind, w: Widths) -> Bre
     peak_q(method, d, opt, w, QuantMode::F32)
 }
 
-/// Quant-aware peak breakdown. The activation inventory is identical in
-/// both modes (LoRA math and intermediates are f32 either way); q4 adds
-/// one scratch term: the naive-oracle kernel host-dequantizes a FULL
-/// projection matrix into arena scratch per GEMM, so the bound must
-/// cover the largest frozen matrix (the fused tiled/parallel kernels
-/// need only their packing panels, which are already charged).
+/// Quant-aware peak breakdown at default [`MemOptions`] (unchunked loss,
+/// uncompressed residuals).
 pub fn peak_q(
     method: Method,
     d: &ModelDims,
@@ -319,9 +333,49 @@ pub fn peak_q(
     w: Widths,
     quant_mode: QuantMode,
 ) -> Breakdown {
+    peak_opts(method, d, opt, w, quant_mode, MemOptions::default())
+}
+
+/// The full model. Quant-awareness: the activation inventory is identical
+/// in both modes (LoRA math and intermediates are f32 either way); q4
+/// adds one scratch term: the naive-oracle kernel host-dequantizes a FULL
+/// projection matrix into arena scratch per GEMM, so the bound must
+/// cover the largest frozen matrix (the fused tiled/parallel kernels
+/// need only their packing panels, which are already charged).
+///
+/// The `loss_head` term splits by width class: the in-place logits tile
+/// (`tile × vocab`, where tile = `loss_chunk` or the full `m`) is the
+/// algorithmic cost every implementation pays and is charged at
+/// `w.logits`; the reference backend's extra loss-phase temporaries —
+/// the oracle's separate `g_logits` buffer (the 2×-logits bug this term
+/// used to omit) and the `g_hn`/`g_h` tiles — are charged at `w.scratch`
+/// (0 at paper widths, so the pinned tables are untouched).
+///
+/// `act_compress: int8` replaces store-h's per-site f32 buffers with one
+/// packed per-layer blob (i8 payload + group scales + outlier pairs —
+/// `actquant::compressed_bytes_bound`). MeBP's residual term is NOT
+/// reduced: the engine decompresses a full layer's residuals back to f32
+/// for the backward call, so compression only shrinks the held window,
+/// never MeBP's peak.
+pub fn peak_opts(
+    method: Method,
+    d: &ModelDims,
+    opt: OptimizerKind,
+    w: Widths,
+    quant_mode: QuantMode,
+    opts: MemOptions,
+) -> Breakdown {
     let m = d.m() as u64;
     let lora = d.lora_params_total() as u64;
     let logits = m * d.vocab as u64;
+    // Rows of logits live at once in the loss head: the chunk tile, or
+    // the whole sequence when unchunked (loss_chunk == 0).
+    let tile = match opts.loss_chunk {
+        0 => m,
+        c => (c as u64).min(m),
+    };
+    let tile_logits = tile * d.vocab as u64;
+    let loss_extra = reference_loss_grad_extra(d, tile_logits);
     let ckpt = (d.n_layers as u64 + 1) * m * d.d_model as u64;
     let grads_block = d.lora_params_per_block() as u64;
     let block_weights = d.frozen_params_per_block() as u64;
@@ -350,26 +404,51 @@ pub fn peak_q(
     match method {
         Method::Mesp | Method::StoreH => {
             b.checkpoints = ckpt * w.act;
-            // Manual CE: g_logits overwrites logits in place — one buffer,
-            // plus the [m] log-normalizer column.
-            b.loss_head = logits * w.logits + m * 4;
+            // Manual CE over the live logits tile: the chunked path forms
+            // g_logits in place per chunk; the unchunked oracle holds the
+            // full logits plus the [m] log-normalizer column. The
+            // reference backend's extra grad-path temporaries (the
+            // oracle's SEPARATE g_logits buffer — the 2×-logits peak the
+            // one-buffer claim here used to miss — and the g_hn/g_h
+            // tiles) are charged at scratch width.
+            b.loss_head =
+                tile_logits * w.logits + m * 4 + loss_extra * w.scratch;
             b.block_intermediates =
                 (minimal_set(d) + mesp_working_set(d)) * w.act;
             b.grad_buffers = grads_block * w.grad;
             b.dequant_buffers = block_weights * w.act;
             if method == Method::StoreH {
-                // h = xA stored for all 7 sites of all layers (Table 5),
-                // each rounded to the allocator bucket.
-                let one_h = (m * d.rank as u64 * w.act).max(ALLOC_BUCKET);
-                b.stored_h = (d.n_layers * PROJS.len()) as u64 * one_h;
+                b.stored_h = match opts.act_compress {
+                    // h = xA stored for all 7 sites of all layers
+                    // (Table 5), each rounded to the allocator bucket.
+                    ActCompress::None => {
+                        let one_h =
+                            (m * d.rank as u64 * w.act).max(ALLOC_BUCKET);
+                        (d.n_layers * PROJS.len()) as u64 * one_h
+                    }
+                    // All 7 sites packed into ONE int8 blob per layer
+                    // (payload + group scales + outlier pairs): fewer
+                    // bucket-rounded buffers AND ~4× fewer payload bytes.
+                    // Width-independent — the packed format is bytes on
+                    // the host either way.
+                    ActCompress::Int8 => {
+                        let elems = PROJS.len() as u64 * m * d.rank as u64;
+                        d.n_layers as u64
+                            * actquant::compressed_bytes_bound(elems)
+                                .max(ALLOC_BUCKET)
+                    }
+                };
             }
         }
         Method::Mebp => {
             b.checkpoints = ckpt * w.act;
             // Autodiff CE retains logits, the log-normalizer broadcast,
             // softmax probs and g_logits as separate buffers (mx.grad
-            // cannot update in place) — 4 logits-sized tensors live.
-            b.loss_head = 4 * logits * w.logits;
+            // cannot update in place) — 4 logits-sized tensors live
+            // unchunked. Under --loss-chunk the manual call shrinks to
+            // its tile but the modeled framework slack (2 logits) stays.
+            b.loss_head = (2 * logits + 2 * tile_logits) * w.logits
+                + loss_extra * w.scratch;
             b.block_intermediates =
                 (residual_set(d) + framework_slack(d)) * w.act;
             b.grad_buffers = grads_block * w.grad;
@@ -377,9 +456,12 @@ pub fn peak_q(
         }
         Method::Mezo => {
             // No checkpoints; the live set is one block's inference
-            // transients + the loss evaluation (logits + the logsumexp
-            // temporary — even a fused CE materializes both).
-            b.loss_head = 2 * logits * w.logits;
+            // transients + the loss evaluation (the live logits tile + the
+            // logsumexp temporary — even a fused CE materializes both),
+            // plus the normed-hidden tile at scratch width on the
+            // reference backend.
+            b.loss_head = 2 * tile_logits * w.logits
+                + m * d.d_model as u64 * w.scratch;
             b.block_intermediates = inference_set(d) * w.act;
             // z, the +ε parameter copy, and the gradient-scale scratch all
             // live across both forwards (the MLX implementation the paper
@@ -546,6 +628,99 @@ mod tests {
             peak_q(Method::Mesp, &d, OptimizerKind::Sgd, Widths::paper(),
                    QuantMode::Q4);
         assert_eq!(paper_f32.total(), paper_q4.total());
+    }
+
+    #[test]
+    fn loss_head_covers_the_two_buffer_grad_reality() {
+        // The headline bug: lm_loss_grad holds logits AND a separate
+        // g_logits at its peak, but the old model charged one buffer.
+        // At tracked widths the term must now cover 2× logits.
+        use crate::config::presets::compiled;
+        for name in ["toy", "longctx"] {
+            let d = compiled(name).unwrap();
+            let logits_bytes = d.m() as u64 * d.vocab as u64 * 4;
+            for m in [Method::Mesp, Method::StoreH] {
+                let b = peak_q(m, &d, OptimizerKind::Sgd, Widths::tracked(),
+                               QuantMode::F32);
+                assert!(
+                    b.loss_head >= 2 * logits_bytes,
+                    "{name}/{}: loss_head {} < 2x logits {}",
+                    m.name(), b.loss_head, 2 * logits_bytes
+                );
+            }
+            // paper widths keep the in-place single-buffer charge: the
+            // backend-extra part rides on the scratch width (0 on paper)
+            let p = peak_q(Method::Mesp, &d, OptimizerKind::Sgd,
+                           Widths::paper(), QuantMode::F32);
+            assert_eq!(p.loss_head, logits_bytes / 2 + d.m() as u64 * 4);
+        }
+    }
+
+    #[test]
+    fn loss_chunk_shrinks_the_loss_head() {
+        use crate::config::presets::compiled;
+        let d = compiled("longctx").unwrap();
+        let full = peak_opts(Method::Mesp, &d, OptimizerKind::Sgd,
+                             Widths::tracked(), QuantMode::F32,
+                             MemOptions::default());
+        let chunked = peak_opts(Method::Mesp, &d, OptimizerKind::Sgd,
+                                Widths::tracked(), QuantMode::F32,
+                                MemOptions { loss_chunk: 64,
+                                             ..Default::default() });
+        assert!(
+            chunked.loss_head * 4 <= full.loss_head,
+            "chunk 64 must cut the tracked loss head >=4x: {} vs {}",
+            chunked.loss_head, full.loss_head
+        );
+        // every method's loss head is monotone in the chunk size
+        for m in Method::ALL {
+            let at = |c: usize| {
+                peak_opts(m, &d, OptimizerKind::Sgd, Widths::tracked(),
+                          QuantMode::F32,
+                          MemOptions { loss_chunk: c, ..Default::default() })
+                .loss_head
+            };
+            assert!(at(64) <= at(256) && at(256) <= at(0), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn peak_q_is_peak_opts_at_defaults() {
+        let d = d05();
+        for m in Method::ALL {
+            assert_eq!(
+                peak_q(m, &d, OptimizerKind::Sgd, Widths::paper(),
+                       QuantMode::F32).total(),
+                peak_opts(m, &d, OptimizerKind::Sgd, Widths::paper(),
+                          QuantMode::F32, MemOptions::default()).total()
+            );
+        }
+    }
+
+    #[test]
+    fn int8_act_compress_shrinks_stored_h_only_for_storeh() {
+        use crate::config::presets::compiled;
+        let d = compiled("longctx").unwrap();
+        let opts = |ac| MemOptions { act_compress: ac, ..Default::default() };
+        let f32_sh = peak_opts(Method::StoreH, &d, OptimizerKind::Sgd,
+                               Widths::tracked(), QuantMode::F32,
+                               opts(ActCompress::None));
+        let i8_sh = peak_opts(Method::StoreH, &d, OptimizerKind::Sgd,
+                              Widths::tracked(), QuantMode::F32,
+                              opts(ActCompress::Int8));
+        assert!(
+            i8_sh.stored_h * 2 <= f32_sh.stored_h,
+            "int8 stored_h {} !<= half of f32 {}",
+            i8_sh.stored_h, f32_sh.stored_h
+        );
+        // MeSP stores no h: the option must not move its breakdown
+        let mesp_f32 = peak_opts(Method::Mesp, &d, OptimizerKind::Sgd,
+                                 Widths::tracked(), QuantMode::F32,
+                                 opts(ActCompress::None));
+        let mesp_i8 = peak_opts(Method::Mesp, &d, OptimizerKind::Sgd,
+                                Widths::tracked(), QuantMode::F32,
+                                opts(ActCompress::Int8));
+        assert_eq!(mesp_f32.total(), mesp_i8.total());
     }
 
     #[test]

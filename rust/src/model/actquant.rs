@@ -1,0 +1,185 @@
+//! int8 activation compression with structured outlier storage — the
+//! HyC-LoRA-style "compressed cache" applied to BUFFERED activations:
+//! store-h's saved `h = xA` and MeBP's between-phase residual window.
+//!
+//! Scheme: flatten the tensor set into one stream, quantize in groups of
+//! [`GROUP`] with a symmetric per-group scale, and store the few
+//! heavy-tail elements of each group EXACTLY as `(index, f32)` pairs —
+//! the scale is then computed over the remaining inliers, so one spike
+//! does not blow up the whole group's step size. Deterministic (no
+//! data-dependent allocation beyond the capped outlier list) and lossy:
+//! roundtrip error is ≤ scale/2 per inlier, 0 for outliers.
+//!
+//! Distinct from [`super::quant`] (int4 *weight* packing, done once at
+//! session build): this runs on the training hot path, once per layer
+//! per step, and must bound its own footprint —
+//! [`compressed_bytes_bound`] is the admission/memory-model charge.
+
+/// Elements per quantization group.
+pub const GROUP: usize = 64;
+/// Hard cap on exactly-stored outliers per group — bounds the compressed
+/// size independent of the data (the memory model needs a shape-only
+/// bound).
+pub const MAX_OUTLIERS_PER_GROUP: usize = 4;
+/// An element is an outlier candidate when `|v| > OUTLIER_MULT × rms` of
+/// its group (a heavy tail relative to the group's energy).
+const OUTLIER_MULT: f32 = 4.0;
+
+/// One compressed activation blob.
+#[derive(Debug, Clone)]
+pub struct Compressed {
+    /// Per-element int8 codes (outlier slots hold 0).
+    pub data: Vec<i8>,
+    /// Per-group symmetric scales (`absmax(inliers) / 127`).
+    pub scales: Vec<f32>,
+    /// Exactly-stored heavy-tail elements: (flat index, original value).
+    pub outliers: Vec<(u32, f32)>,
+    /// Uncompressed element count.
+    pub len: usize,
+}
+
+impl Compressed {
+    /// Host bytes this blob occupies (payload + scales + outlier pairs)
+    /// — what the store-h guard charges while the blob is held.
+    pub fn bytes(&self) -> u64 {
+        self.data.len() as u64
+            + self.scales.len() as u64 * 4
+            + self.outliers.len() as u64 * 8
+    }
+}
+
+/// Shape-only upper bound on [`Compressed::bytes`] for `elems` elements:
+/// 1 B/element + per-group scale + the outlier cap. The memory model and
+/// fleet admission charge this, so it must dominate any data.
+pub fn compressed_bytes_bound(elems: u64) -> u64 {
+    let groups = elems.div_ceil(GROUP as u64);
+    elems + groups * (4 + MAX_OUTLIERS_PER_GROUP as u64 * 8)
+}
+
+/// Compress a flat f32 stream (callers concatenate their tensor set).
+pub fn compress(x: &[f32]) -> Compressed {
+    let mut data = vec![0i8; x.len()];
+    let mut scales = Vec::with_capacity(x.len().div_ceil(GROUP));
+    let mut outliers = Vec::new();
+    for (g, chunk) in x.chunks(GROUP).enumerate() {
+        let base = g * GROUP;
+        let rms =
+            (chunk.iter().map(|v| v * v).sum::<f32>() / chunk.len() as f32).sqrt();
+        let threshold = OUTLIER_MULT * rms;
+        // Up to MAX_OUTLIERS_PER_GROUP largest-|v| elements above the
+        // heavy-tail threshold, stored exactly.
+        let mut idx: Vec<usize> = (0..chunk.len())
+            .filter(|&i| chunk[i].is_finite() && chunk[i].abs() > threshold)
+            .collect();
+        idx.sort_by(|&a, &b| {
+            chunk[b].abs().partial_cmp(&chunk[a].abs()).unwrap()
+        });
+        idx.truncate(MAX_OUTLIERS_PER_GROUP);
+        let is_out = |i: usize| idx.contains(&i);
+        let mut mx = 0f32;
+        for (i, &v) in chunk.iter().enumerate() {
+            if !is_out(i) {
+                mx = mx.max(v.abs());
+            }
+        }
+        // Same degenerate-group discipline as quant::quantize: all-zero
+        // or non-finite groups get an exact 0.0 scale.
+        let s = mx / 127.0;
+        let s = if s.is_finite() { s } else { 0.0 };
+        scales.push(s);
+        for (i, &v) in chunk.iter().enumerate() {
+            if is_out(i) {
+                outliers.push((base as u32 + i as u32, v));
+            } else if s != 0.0 {
+                data[base + i] = (v / s).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+    }
+    Compressed { data, scales, outliers, len: x.len() }
+}
+
+/// Dequantize into a caller-owned buffer (the backward decompresses into
+/// arena scratch or a reused host buffer).
+pub fn decompress_into(c: &Compressed, out: &mut [f32]) {
+    assert_eq!(out.len(), c.len);
+    for (i, (o, &q)) in out.iter_mut().zip(&c.data).enumerate() {
+        *o = q as f32 * c.scales[i / GROUP];
+    }
+    for &(i, v) in &c.outliers {
+        out[i as usize] = v;
+    }
+}
+
+/// Dequantize to a fresh `Vec`.
+pub fn decompress(c: &Compressed) -> Vec<f32> {
+    let mut out = vec![0f32; c.len];
+    decompress_into(c, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_error_within_half_step() {
+        let mut rng = Rng::new(1);
+        let x = rng.normal_vec(GROUP * 5 + 17, 0.3); // ragged tail group
+        let c = compress(&x);
+        let y = decompress(&c);
+        let out: std::collections::HashSet<u32> =
+            c.outliers.iter().map(|(i, _)| *i).collect();
+        for (i, (a, b)) in x.iter().zip(&y).enumerate() {
+            if out.contains(&(i as u32)) {
+                assert_eq!(a, b, "outliers are exact");
+            } else {
+                let s = c.scales[i / GROUP];
+                assert!((a - b).abs() <= s / 2.0 + 1e-7, "idx {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn outliers_stored_exactly_and_capped() {
+        let mut x = vec![0.01f32; GROUP];
+        x[3] = 100.0; // a spike 4 orders above the inliers
+        x[40] = -50.0;
+        let c = compress(&x);
+        assert!(c.outliers.iter().any(|&(i, v)| i == 3 && v == 100.0));
+        assert!(c.outliers.iter().any(|&(i, v)| i == 40 && v == -50.0));
+        assert!(c.outliers.len() <= MAX_OUTLIERS_PER_GROUP);
+        // the inlier scale is NOT poisoned by the spike: 0.01/127-ish
+        assert!(c.scales[0] < 0.001, "scale {} poisoned by outlier", c.scales[0]);
+        let y = decompress(&c);
+        assert_eq!(y[3], 100.0);
+        assert_eq!(y[40], -50.0);
+        assert!((y[7] - 0.01).abs() < 0.001);
+    }
+
+    #[test]
+    fn zeros_and_degenerate_groups_survive() {
+        let c = compress(&vec![0.0f32; GROUP * 2]);
+        assert!(decompress(&c).iter().all(|v| *v == 0.0));
+        assert!(c.outliers.is_empty());
+        // non-finite input must not poison the scale
+        let mut x = vec![f32::NAN; GROUP];
+        x[0] = 1.0;
+        let c = compress(&x);
+        assert!(c.scales[0].is_finite());
+    }
+
+    #[test]
+    fn bytes_within_shape_bound_and_under_f32() {
+        let mut rng = Rng::new(2);
+        for n in [1, GROUP, GROUP * 7 + 5, 4096] {
+            let x = rng.normal_vec(n, 1.0);
+            let c = compress(&x);
+            assert!(c.bytes() <= compressed_bytes_bound(n as u64),
+                    "n={n}: {} > bound {}", c.bytes(), compressed_bytes_bound(n as u64));
+        }
+        // the whole point: well under the 4 B/element f32 cache
+        let n = 4096u64;
+        assert!(compressed_bytes_bound(n) * 2 < n * 4);
+    }
+}

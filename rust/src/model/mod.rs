@@ -16,6 +16,7 @@
 //! functions of independent forks of the model seed, so either can be
 //! built without the other — [`ModelSpec`] is the single entry point.
 
+pub mod actquant;
 pub mod cache;
 pub mod quant;
 

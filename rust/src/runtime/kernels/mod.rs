@@ -290,6 +290,14 @@ impl Kernels {
         &self.arena
     }
 
+    /// The engine's span sink (disabled unless [`Kernels::with_trace`]
+    /// attached one). Lets refmath emit sub-artifact spans — e.g. the
+    /// per-chunk loss-head spans — through the same sink the per-GEMM
+    /// spans use.
+    pub fn trace(&self) -> &TraceSink {
+        &self.trace
+    }
+
     /// Cumulative nominal FLOPs since construction.
     pub fn flops(&self) -> u64 {
         self.flops.load(Ordering::Relaxed)

@@ -53,6 +53,11 @@ pub struct ReferenceBackend {
     kernels: Kernels,
     /// Artifact-call spans; disabled by default (one branch per call).
     trace: TraceSink,
+    /// Loss-head tile rows (`--loss-chunk`): 0 = unchunked oracle,
+    /// otherwise `lm_loss_fwd`/`lm_loss_grad` stream the sequence in
+    /// tiles of this many rows (bitwise-identical result, only
+    /// `chunk × vocab` logits floats live at once).
+    loss_chunk: usize,
 }
 
 impl ReferenceBackend {
@@ -94,7 +99,15 @@ impl ReferenceBackend {
             stats: StatsRecorder::new(),
             kernels,
             trace,
+            loss_chunk: 0,
         }
+    }
+
+    /// Route the loss head through the chunked implementation (`0`
+    /// keeps the unchunked oracle). See [`rm::lm_loss_grad_chunked`].
+    pub fn with_loss_chunk(mut self, chunk: usize) -> ReferenceBackend {
+        self.loss_chunk = chunk;
+        self
     }
 
     /// The kernel engine (kind, thread budget, arena stats, FLOP counter).
@@ -156,7 +169,7 @@ impl ReferenceBackend {
 
         Ok(match base {
             "embed_fwd" => {
-                let out = rm::embed_fwd(t[0].as_i32(), t[1].as_f32(), dm);
+                let out = rm::embed_fwd(t[0].as_i32(), t[1].as_f32(), dm)?;
                 vec![HostTensor::f32(&bnd, out)]
             }
             "block_fwd" => {
@@ -241,17 +254,29 @@ impl ReferenceBackend {
                 grad_tensors(g_x, grads)
             }
             "lm_loss_fwd" => {
-                let loss = rm::lm_loss(
-                    ks, t[0].as_f32(), t[1].as_f32(), t[2].as_f32(), t[3].as_i32(),
-                    m, dm, d.vocab,
-                );
+                let loss = match self.loss_chunk {
+                    0 => rm::lm_loss(
+                        ks, t[0].as_f32(), t[1].as_f32(), t[2].as_f32(),
+                        t[3].as_i32(), m, dm, d.vocab,
+                    )?,
+                    c => rm::lm_loss_chunked(
+                        ks, t[0].as_f32(), t[1].as_f32(), t[2].as_f32(),
+                        t[3].as_i32(), m, dm, d.vocab, c,
+                    )?,
+                };
                 vec![HostTensor::f32(&[1], vec![loss as f32])]
             }
             "lm_loss_grad" => {
-                let (loss, g_h) = rm::lm_loss_grad(
-                    ks, t[0].as_f32(), t[1].as_f32(), t[2].as_f32(), t[3].as_i32(),
-                    m, dm, d.vocab,
-                );
+                let (loss, g_h) = match self.loss_chunk {
+                    0 => rm::lm_loss_grad(
+                        ks, t[0].as_f32(), t[1].as_f32(), t[2].as_f32(),
+                        t[3].as_i32(), m, dm, d.vocab,
+                    )?,
+                    c => rm::lm_loss_grad_chunked(
+                        ks, t[0].as_f32(), t[1].as_f32(), t[2].as_f32(),
+                        t[3].as_i32(), m, dm, d.vocab, c,
+                    )?,
+                };
                 vec![
                     HostTensor::f32(&[1], vec![loss as f32]),
                     HostTensor::f32(&bnd, g_h.into_vec()),

@@ -773,6 +773,80 @@ pub fn block_backward(
 }
 
 // ------------------------------------------------------------- loss head
+//
+// Two implementations of the tied-lm-head CE loss share this section:
+//
+// * the **unchunked oracle** ([`lm_loss`], [`lm_loss_grad`]) — project
+//   the full `[m, vocab]` logits, then walk the rows. Its scratch peak is
+//   2× logits in the grad path (logits + g_logits live together); it is
+//   kept verbatim as the bitwise test oracle, the same pattern as the
+//   naive GEMM kernel vs the tiled/SIMD ones.
+// * the **chunked path** ([`lm_loss_chunked`], [`lm_loss_grad_chunked`])
+//   — stream the sequence dimension in tiles of `chunk` rows, forming
+//   the CE gradient *in place over the chunk's logits buffer* and
+//   contracting it back to `g_hn[chunk]` before the next tile projects.
+//   Only `chunk × vocab` logits floats ever live.
+//
+// **Bitwise-parity scope.** Chunked ≡ unchunked bitwise *within one
+// kernel kind/ISA* because every operation involved is row-local with an
+// accumulation order the chunking cannot perturb: RMSNorm (fwd and bwd)
+// normalizes each row independently; each GEMM output row sums its k
+// terms in an order fixed by the kernel's k-blocking, never by how many
+// rows the call carries; and the f64 loss accumulator visits rows
+// 0..m in the same order whether or not chunk boundaries intervene.
+// Across kernel kinds the usual float-tolerance caveat applies — exactly
+// as for the block math above.
+
+/// Per-row softmax-CE statistics, shared by the fwd and grad paths (and
+/// by both the oracle and the chunked loop). Validates at the artifact
+/// boundary: an out-of-range target id or a non-finite logit is a data /
+/// numerics error that must fail loudly, not index-panic (targets) or
+/// launder a poisoned forward into a plausible finite loss (`f32::max`
+/// prefers its non-NaN argument, so a max-fold silently drops NaNs).
+struct RowCe {
+    mx: f32,
+    denom: f64,
+    logz: f64,
+    /// Validated target index within the row.
+    t: usize,
+}
+
+fn ce_row(row: &[f32], target: i32, pos: usize) -> anyhow::Result<RowCe> {
+    let v = row.len();
+    anyhow::ensure!(
+        target >= 0 && (target as usize) < v,
+        "target id {target} at position {pos} is outside the vocab (0..{v})"
+    );
+    let mut mx = f32::NEG_INFINITY;
+    for (j, &l) in row.iter().enumerate() {
+        anyhow::ensure!(
+            l.is_finite(),
+            "non-finite logit {l} at row {pos}, vocab index {j}: \
+             the forward pass produced a poisoned activation"
+        );
+        // Identical to a max-fold for the finite values this admits.
+        if l > mx {
+            mx = l;
+        }
+    }
+    let mut denom = 0.0f64;
+    for &l in row {
+        denom += ((l - mx) as f64).exp();
+    }
+    Ok(RowCe { mx, denom, logz: mx as f64 + denom.ln(), t: target as usize })
+}
+
+/// Overwrite one logits row with its softmax-CE gradient,
+/// `(softmax - onehot) / m`. Each element is read before it is written,
+/// so this is genuinely in place — the property the chunked path (and
+/// `memory::model`'s `loss_head` term) relies on.
+fn ce_grad_row_inplace(row: &mut [f32], ce: &RowCe, m: usize) {
+    for (j, l) in row.iter_mut().enumerate() {
+        let p = (((*l - ce.mx) as f64).exp() / ce.denom) as f32;
+        let onehot = if j == ce.t { 1.0 } else { 0.0 };
+        *l = (p - onehot) / m as f32;
+    }
+}
 
 /// Tied-lm-head logits: `hn = rmsnorm(h)`, `logits = hn @ embᵀ`.
 fn lm_logits(
@@ -789,7 +863,8 @@ fn lm_logits(
 }
 
 /// Mean causal-LM cross-entropy (targets pre-shifted by the data
-/// pipeline). Accumulated in f64 for SPSA-grade precision.
+/// pipeline). Accumulated in f64 for SPSA-grade precision. Unchunked
+/// oracle: materializes the full `[m, vocab]` logits.
 #[allow(clippy::too_many_arguments)]
 pub fn lm_loss(
     ks: &Kernels,
@@ -800,24 +875,22 @@ pub fn lm_loss(
     m: usize,
     d: usize,
     v: usize,
-) -> f64 {
+) -> anyhow::Result<f64> {
     let logits = lm_logits(ks, h2d, norm_w, emb, m, d, v);
     let mut loss = 0.0f64;
     for i in 0..m {
         let row = &logits[i * v..(i + 1) * v];
-        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut denom = 0.0f64;
-        for &l in row {
-            denom += ((l - mx) as f64).exp();
-        }
-        let logz = mx as f64 + denom.ln();
-        loss += logz - row[targets[i] as usize] as f64;
+        let ce = ce_row(row, targets[i], i)?;
+        loss += ce.logz - row[ce.t] as f64;
     }
-    loss / m as f64
+    Ok(loss / m as f64)
 }
 
 /// Loss + manual backward to `g_h` (softmax-CE grad, then the lm-head and
-/// final-RMSNorm VJPs — no autodiff anywhere).
+/// final-RMSNorm VJPs — no autodiff anywhere). Unchunked oracle: `logits`
+/// and `g_logits` are live together, so the scratch peak is 2× logits —
+/// `memory::model` charges the second buffer under its backend-extra
+/// term. `--loss-chunk` routes to [`lm_loss_grad_chunked`] instead.
 #[allow(clippy::too_many_arguments)]
 pub fn lm_loss_grad(
     ks: &Kernels,
@@ -828,42 +901,123 @@ pub fn lm_loss_grad(
     m: usize,
     d: usize,
     v: usize,
-) -> (f64, ScratchBuf) {
+) -> anyhow::Result<(f64, ScratchBuf)> {
     let logits = lm_logits(ks, h2d, norm_w, emb, m, d, v);
     let mut loss = 0.0f64;
     let mut g_logits = ks.arena().take(m * v);
     for i in 0..m {
         let row = &logits[i * v..(i + 1) * v];
-        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut denom = 0.0f64;
-        for &l in row {
-            denom += ((l - mx) as f64).exp();
-        }
-        let logz = mx as f64 + denom.ln();
-        let t = targets[i] as usize;
-        loss += logz - row[t] as f64;
+        let ce = ce_row(row, targets[i], i)?;
+        loss += ce.logz - row[ce.t] as f64;
         let grow = &mut g_logits[i * v..(i + 1) * v];
-        for (j, gv) in grow.iter_mut().enumerate() {
-            let p = (((row[j] - mx) as f64).exp() / denom) as f32;
-            let onehot = if j == t { 1.0 } else { 0.0 };
-            *gv = (p - onehot) / m as f32;
-        }
+        grow.copy_from_slice(row);
+        ce_grad_row_inplace(grow, &ce, m);
     }
     drop(logits);
     let g_hn = ks.matmul(&g_logits, emb, m, v, d);
     let g_h = rmsnorm_bwd(ks, h2d, norm_w, &g_hn, d);
-    (loss / m as f64, g_h)
+    Ok((loss / m as f64, g_h))
+}
+
+/// Chunked forward loss: identical f64 accumulation order to [`lm_loss`]
+/// (rows 0..m in order), but only `chunk × vocab` logits live at a time.
+#[allow(clippy::too_many_arguments)]
+pub fn lm_loss_chunked(
+    ks: &Kernels,
+    h2d: &[f32],
+    norm_w: &[f32],
+    emb: &[f32],
+    targets: &[i32],
+    m: usize,
+    d: usize,
+    v: usize,
+    chunk: usize,
+) -> anyhow::Result<f64> {
+    let chunk = chunk.clamp(1, m.max(1));
+    let mut loss = 0.0f64;
+    let mut c0 = 0;
+    while c0 < m {
+        let c = chunk.min(m - c0);
+        let mut sp = ks.trace().span("loss_chunk", "loss");
+        sp.arg("start", crate::util::Json::Num(c0 as f64));
+        sp.arg("rows", crate::util::Json::Num(c as f64));
+        let hn_c = rmsnorm(ks, &h2d[c0 * d..(c0 + c) * d], norm_w, d);
+        let logits_c = ks.matmul_bt(&hn_c, emb, c, d, v);
+        drop(hn_c);
+        for i in 0..c {
+            let row = &logits_c[i * v..(i + 1) * v];
+            let ce = ce_row(row, targets[c0 + i], c0 + i)?;
+            loss += ce.logz - row[ce.t] as f64;
+        }
+        c0 += c;
+    }
+    Ok(loss / m as f64)
+}
+
+/// Chunked loss + backward to `g_h`. Per tile: project the chunk's
+/// logits, accumulate CE in f64, overwrite the chunk's logits buffer with
+/// its softmax-CE gradient **in place**, and immediately contract to
+/// `g_hn[chunk]` — the full `[m, vocab]` g_logits of the oracle never
+/// exists. The persistent state across tiles is the `[m, d]` g_hn;
+/// the final RMSNorm VJP runs once over the whole sequence, exactly as
+/// in the oracle, so the result is bitwise identical (see the module
+/// parity note above).
+#[allow(clippy::too_many_arguments)]
+pub fn lm_loss_grad_chunked(
+    ks: &Kernels,
+    h2d: &[f32],
+    norm_w: &[f32],
+    emb: &[f32],
+    targets: &[i32],
+    m: usize,
+    d: usize,
+    v: usize,
+    chunk: usize,
+) -> anyhow::Result<(f64, ScratchBuf)> {
+    let chunk = chunk.clamp(1, m.max(1));
+    let mut g_hn = ks.arena().take(m * d);
+    let mut loss = 0.0f64;
+    let mut c0 = 0;
+    while c0 < m {
+        let c = chunk.min(m - c0);
+        let mut sp = ks.trace().span("loss_chunk", "loss");
+        sp.arg("start", crate::util::Json::Num(c0 as f64));
+        sp.arg("rows", crate::util::Json::Num(c as f64));
+        let hn_c = rmsnorm(ks, &h2d[c0 * d..(c0 + c) * d], norm_w, d);
+        let mut logits_c = ks.matmul_bt(&hn_c, emb, c, d, v);
+        drop(hn_c);
+        for i in 0..c {
+            let row = &mut logits_c[i * v..(i + 1) * v];
+            let ce = ce_row(row, targets[c0 + i], c0 + i)?;
+            loss += ce.logz - row[ce.t] as f64;
+            ce_grad_row_inplace(row, &ce, m);
+        }
+        let g_hn_c = ks.matmul(&logits_c, emb, c, v, d);
+        logits_c.release();
+        g_hn[c0 * d..(c0 + c) * d].copy_from_slice(&g_hn_c);
+        c0 += c;
+    }
+    let g_h = rmsnorm_bwd(ks, h2d, norm_w, &g_hn, d);
+    drop(g_hn);
+    Ok((loss / m as f64, g_h))
 }
 
 /// Token embedding lookup: `tokens: [m] i32`, `emb: [V, d]` → `[m, d]`.
-/// Plain `Vec` — the result is an artifact output, not scratch.
-pub fn embed_fwd(tokens: &[i32], emb: &[f32], d: usize) -> Vec<f32> {
+/// Plain `Vec` — the result is an artifact output, not scratch. Token ids
+/// are validated here, at the artifact boundary, so a corrupt batch
+/// reports the offending position instead of index-panicking.
+pub fn embed_fwd(tokens: &[i32], emb: &[f32], d: usize) -> anyhow::Result<Vec<f32>> {
+    let vocab = emb.len() / d;
     let mut out = vec![0.0f32; tokens.len() * d];
     for (i, &t) in tokens.iter().enumerate() {
+        anyhow::ensure!(
+            t >= 0 && (t as usize) < vocab,
+            "token id {t} at position {i} is outside the embedding vocab (0..{vocab})"
+        );
         let t = t as usize;
         out[i * d..(i + 1) * d].copy_from_slice(&emb[t * d..(t + 1) * d]);
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -1074,8 +1228,9 @@ mod tests {
         let w = vec![1.0f32; d];
         let emb = randv(&mut rng, v * d, 0.2);
         let targets: Vec<i32> = (0..m).map(|i| (i * 3 % v) as i32).collect();
-        let (loss, g_h) = lm_loss_grad(&ks, &h, &w, &emb, &targets, m, d, v);
-        let loss2 = lm_loss(&ks, &h, &w, &emb, &targets, m, d, v);
+        let (loss, g_h) =
+            lm_loss_grad(&ks, &h, &w, &emb, &targets, m, d, v).unwrap();
+        let loss2 = lm_loss(&ks, &h, &w, &emb, &targets, m, d, v).unwrap();
         assert!((loss - loss2).abs() < 1e-9, "fwd and grad paths disagree");
         let eps = 1e-2f32;
         for idx in [0, 17, m * d - 1] {
@@ -1083,8 +1238,8 @@ mod tests {
             hp[idx] += eps;
             let mut hm = h.clone();
             hm[idx] -= eps;
-            let fd = ((lm_loss(&ks, &hp, &w, &emb, &targets, m, d, v)
-                - lm_loss(&ks, &hm, &w, &emb, &targets, m, d, v))
+            let fd = ((lm_loss(&ks, &hp, &w, &emb, &targets, m, d, v).unwrap()
+                - lm_loss(&ks, &hm, &w, &emb, &targets, m, d, v).unwrap())
                 / (2.0 * eps as f64)) as f32;
             assert!(
                 (fd - g_h[idx]).abs() < 2e-2 * g_h[idx].abs().max(0.1),
@@ -1092,6 +1247,203 @@ mod tests {
                 g_h[idx]
             );
         }
+    }
+
+    #[test]
+    fn chunked_loss_bitwise_matches_unchunked_oracle() {
+        // The tentpole's parity claim: streaming the loss head in tiles
+        // of any size — 1, ragged, exactly m, larger than m — reproduces
+        // the oracle BITWISE within one kernel kind/ISA (see the module
+        // parity note). Sweep every micro-kernel ISA; unsupported ones
+        // fall back to the detected best, which still exercises the
+        // chunked-vs-oracle comparison on that engine.
+        use super::super::kernels::{simd, KernelOptions};
+        let mut rng = Rng::new(11);
+        let (m, d, v) = (6, 8, 32);
+        let h = randv(&mut rng, m * d, 0.5);
+        let w = randv(&mut rng, d, 0.5).iter().map(|x| 1.0 + x).collect::<Vec<_>>();
+        let emb = randv(&mut rng, v * d, 0.2);
+        let targets: Vec<i32> = (0..m).map(|i| (i * 5 % v) as i32).collect();
+        for isa in simd::Isa::ALL {
+            let ks = Kernels::new(
+                KernelOptions { kind: crate::config::KernelKind::Tiled, threads: 1 },
+                crate::memory::MemoryTracker::new(),
+            )
+            .with_isa(isa);
+            let (loss_o, g_o) =
+                lm_loss_grad(&ks, &h, &w, &emb, &targets, m, d, v).unwrap();
+            for chunk in [1, 3, 4, m, m + 5] {
+                let loss_c = lm_loss_chunked(
+                    &ks, &h, &w, &emb, &targets, m, d, v, chunk,
+                ).unwrap();
+                assert_eq!(
+                    loss_o.to_bits(), loss_c.to_bits(),
+                    "fwd loss bits differ at chunk {chunk} ({})", isa.name()
+                );
+                let (loss_g, g_c) = lm_loss_grad_chunked(
+                    &ks, &h, &w, &emb, &targets, m, d, v, chunk,
+                ).unwrap();
+                assert_eq!(loss_o.to_bits(), loss_g.to_bits());
+                for (i, (a, b)) in g_o.iter().zip(&g_c[..]).enumerate() {
+                    assert_eq!(
+                        a.to_bits(), b.to_bits(),
+                        "g_h[{i}] differs at chunk {chunk} ({}): {a} vs {b}",
+                        isa.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn loss_rejects_out_of_range_targets_naming_position() {
+        let ks = ks();
+        let mut rng = Rng::new(12);
+        let (m, d, v) = (4, 8, 16);
+        let h = randv(&mut rng, m * d, 0.5);
+        let w = vec![1.0f32; d];
+        let emb = randv(&mut rng, v * d, 0.2);
+        let mut targets: Vec<i32> = vec![0; m];
+        targets[2] = 99;
+        for err in [
+            lm_loss(&ks, &h, &w, &emb, &targets, m, d, v).unwrap_err(),
+            lm_loss_grad(&ks, &h, &w, &emb, &targets, m, d, v)
+                .map(|_| ()).unwrap_err(),
+            lm_loss_chunked(&ks, &h, &w, &emb, &targets, m, d, v, 3)
+                .map(|_| ()).unwrap_err(),
+            lm_loss_grad_chunked(&ks, &h, &w, &emb, &targets, m, d, v, 3)
+                .map(|_| ()).unwrap_err(),
+        ] {
+            let msg = err.to_string();
+            assert!(
+                msg.contains("target id 99 at position 2"),
+                "error must name the id and position: {msg}"
+            );
+        }
+        targets[2] = -1;
+        let msg = lm_loss(&ks, &h, &w, &emb, &targets, m, d, v)
+            .unwrap_err().to_string();
+        assert!(msg.contains("target id -1 at position 2"), "{msg}");
+    }
+
+    #[test]
+    fn loss_rejects_non_finite_logits_naming_the_row() {
+        // A NaN logit used to be silently dropped by the max-fold
+        // (f32::max prefers its non-NaN argument) and laundered into a
+        // plausible finite loss. A poisoned embedding row makes every
+        // logits row non-finite; the error must name row 0, not succeed.
+        let ks = ks();
+        let mut rng = Rng::new(13);
+        let (m, d, v) = (4, 8, 16);
+        let h = randv(&mut rng, m * d, 0.5);
+        let w = vec![1.0f32; d];
+        let mut emb = randv(&mut rng, v * d, 0.2);
+        emb[3] = f32::INFINITY;
+        let targets: Vec<i32> = vec![0; m];
+        for err in [
+            lm_loss(&ks, &h, &w, &emb, &targets, m, d, v).unwrap_err(),
+            lm_loss_grad(&ks, &h, &w, &emb, &targets, m, d, v)
+                .map(|_| ()).unwrap_err(),
+            lm_loss_grad_chunked(&ks, &h, &w, &emb, &targets, m, d, v, 2)
+                .map(|_| ()).unwrap_err(),
+        ] {
+            let msg = err.to_string();
+            assert!(msg.contains("non-finite logit"), "{msg}");
+            assert!(msg.contains("row 0"), "must name the first bad row: {msg}");
+        }
+    }
+
+    #[test]
+    fn embed_fwd_rejects_bad_token_ids_naming_position() {
+        let emb = vec![0.5f32; 4 * 3]; // vocab 4, d 3
+        assert!(embed_fwd(&[0, 3, 1], &emb, 3).is_ok());
+        let msg = embed_fwd(&[0, 5], &emb, 3).unwrap_err().to_string();
+        assert!(msg.contains("token id 5 at position 1"), "{msg}");
+        let msg = embed_fwd(&[-2], &emb, 3).unwrap_err().to_string();
+        assert!(msg.contains("token id -2 at position 0"), "{msg}");
+    }
+
+    #[test]
+    fn loss_scratch_peak_within_model_loss_head() {
+        // Satellite regression for the mis-modeled loss-head peak: the
+        // tracked scratch during the loss phase — oracle (2× logits at
+        // its worst moment) AND chunked — must stay within the
+        // analytical loss_head term at tracked widths. Naive 1-thread
+        // kernels so no packing panels ride on the tag.
+        use super::super::kernels::KernelOptions;
+        use crate::memory::{model as memmodel, MemoryTracker, Widths};
+        let dims = crate::config::presets::compiled("toy").unwrap();
+        let (m, d, v) = (dims.m(), dims.d_model, dims.vocab);
+        let mut rng = Rng::new(14);
+        let h = randv(&mut rng, m * d, 0.5);
+        let w = vec![1.0f32; d];
+        let emb = randv(&mut rng, v * d, 0.2);
+        let targets: Vec<i32> = (0..m).map(|i| (i % v) as i32).collect();
+        let run = |chunk: usize| -> u64 {
+            let tracker = MemoryTracker::new();
+            let ks = Kernels::new(
+                KernelOptions { kind: crate::config::KernelKind::Naive, threads: 1 },
+                tracker.clone(),
+            );
+            let r = match chunk {
+                0 => lm_loss_grad(&ks, &h, &w, &emb, &targets, m, d, v),
+                c => lm_loss_grad_chunked(&ks, &h, &w, &emb, &targets, m, d, v, c),
+            };
+            r.unwrap();
+            tracker.tag_peak("scratch")
+        };
+        let budget = |chunk: usize| {
+            memmodel::peak_opts(
+                crate::config::Method::Mesp, &dims,
+                crate::config::OptimizerKind::Sgd, Widths::tracked(),
+                crate::config::QuantMode::F32,
+                memmodel::MemOptions { loss_chunk: chunk, ..Default::default() },
+            )
+            .loss_head
+        };
+        for chunk in [0, 16] {
+            let peak = run(chunk);
+            let head = budget(chunk);
+            assert!(peak > 0, "loss scratch must be tracked");
+            assert!(
+                peak <= head,
+                "chunk {chunk}: tracked loss scratch {peak} exceeds the \
+                 analytical loss_head {head}"
+            );
+        }
+    }
+
+    #[test]
+    fn chunking_cuts_loss_scratch_at_least_4x() {
+        // The acceptance shape scaled to unit-test dims: a vocab-heavy
+        // head (v ≫ d) chunked at m/8 must cut the tracked loss-phase
+        // scratch by at least 4×.
+        use super::super::kernels::KernelOptions;
+        use crate::memory::MemoryTracker;
+        let (m, d, v) = (64, 16, 2048);
+        let mut rng = Rng::new(15);
+        let h = randv(&mut rng, m * d, 0.5);
+        let w = vec![1.0f32; d];
+        let emb = randv(&mut rng, v * d, 0.2);
+        let targets: Vec<i32> = (0..m).map(|i| (i * 7 % v) as i32).collect();
+        let run = |chunk: usize| -> u64 {
+            let tracker = MemoryTracker::new();
+            let ks = Kernels::new(
+                KernelOptions { kind: crate::config::KernelKind::Naive, threads: 1 },
+                tracker.clone(),
+            );
+            match chunk {
+                0 => lm_loss_grad(&ks, &h, &w, &emb, &targets, m, d, v).unwrap(),
+                c => lm_loss_grad_chunked(&ks, &h, &w, &emb, &targets, m, d, v, c)
+                    .unwrap(),
+            };
+            tracker.tag_peak("scratch")
+        };
+        let (full, chunked) = (run(0), run(8));
+        assert!(
+            chunked * 4 <= full,
+            "chunk 8 must cut loss scratch >=4x: {chunked} vs {full}"
+        );
     }
 
     #[test]

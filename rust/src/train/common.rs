@@ -5,7 +5,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::config::{OptimizerKind, QuantMode, PROJS};
+use crate::config::{ActCompress, OptimizerKind, QuantMode, PROJS};
 use crate::data::Batch;
 use crate::memory::{Guard, MemoryTracker};
 use crate::model::{quant, AdapterState, FrozenModel};
@@ -53,6 +53,11 @@ pub struct EngineCtx {
     /// Structured tracing (step/fwd/bwd/opt spans); disabled by default.
     /// Observe-only — traced and untraced runs are bitwise identical.
     pub trace: TraceSink,
+    /// Buffered-activation compression (`--act-compress`): store-h's
+    /// saved h = xA and MeBP's between-phase residual window are held as
+    /// int8+outlier blobs instead of f32 (lossy — gradients shift within
+    /// quantization error; bitwise parity claims apply to `None` only).
+    pub act_compress: ActCompress,
     quant: QuantMode,
     /// Upload-backend path only (`shares_host_memory() == false`):
     /// per-session device copies of the frozen state, in artifact ABI
@@ -124,6 +129,7 @@ impl EngineCtx {
             };
         Ok(EngineCtx {
             rt, frozen, adapters, opt, tracker, step: 0, spill_limit, trace,
+            act_compress: ActCompress::None,
             quant, dev_frozen, dev_emb, dev_fnorm, _dev_guard,
         })
     }

@@ -9,7 +9,9 @@
 //! consumes them to produce gradients. The held residual set is exactly
 //! why the paper measures MeBP's peak so much higher than MeSP's.
 
+use crate::config::ActCompress;
 use crate::data::Batch;
+use crate::model::actquant;
 use crate::tensor::HostTensor;
 
 use super::common::EngineCtx;
@@ -56,8 +58,24 @@ impl MebpEngine {
             args.extend(ctx.block_args_mixed(l));
             let mut fwd = ctx.rt.execute(&fwd_name, &args)?;
             drop(args);
-            let residuals: Vec<HostTensor> = fwd.drain(1..).collect();
+            let mut residuals: Vec<HostTensor> = fwd.drain(1..).collect();
             drop(fwd); // the recomputed y is dead (we already have g)
+            // `--act-compress int8`: the held window between the two
+            // phases is stored compressed (lossy — each residual is
+            // re-materialized in f32 for the consuming call, so MeBP's
+            // peak is NOT reduced; the win is store-h's long-lived h
+            // buffers. Kept here so both buffered paths share one flag).
+            if ctx.act_compress == ActCompress::Int8 {
+                residuals = residuals
+                    .into_iter()
+                    .map(|t| {
+                        let shape = t.shape.clone();
+                        let blob = actquant::compress(t.as_f32());
+                        drop(t);
+                        HostTensor::f32(&shape, actquant::decompress(&blob))
+                    })
+                    .collect();
+            }
             let res_bytes: u64 = residuals.iter().map(|t| t.bytes()).sum();
             let res_guard = ctx.tracker.track("residuals:block", res_bytes);
 

@@ -7,18 +7,30 @@
 //! backward — the accumulation the paper's §5.7 measures (and rejects in
 //! favour of recomputation).
 
+use crate::config::{ActCompress, PROJS};
 use crate::data::Batch;
 use crate::memory::Guard;
+use crate::model::actquant;
 use crate::tensor::HostTensor;
 
 use super::common::EngineCtx;
 use super::{CheckpointStore, Engine, StepStats};
 
+/// One layer's buffered h = xA set: f32 tensors (the Table-5 baseline)
+/// or one int8+outlier blob covering all seven sites (`--act-compress
+/// int8`). The guard charges whatever representation is actually held —
+/// the compressed form is ~4× smaller, which is what lets the fleet
+/// overlap more store-h jobs under one budget.
+enum SavedH {
+    F32(Vec<HostTensor>, Guard),
+    Int8(actquant::Compressed, Guard),
+}
+
 pub struct StoreHEngine {
     ctx: EngineCtx,
     store: CheckpointStore,
-    /// Per-layer stored h tensors + their tracking guard.
-    saved_h: Vec<Option<(Vec<HostTensor>, Guard)>>,
+    /// Per-layer stored h set + its tracking guard.
+    saved_h: Vec<Option<SavedH>>,
 }
 
 impl StoreHEngine {
@@ -53,9 +65,27 @@ impl StoreHEngine {
             let mut outs = ctx.rt.execute(&fwd, &args)?;
             drop(args);
             let hs: Vec<HostTensor> = outs.drain(1..).collect();
-            let h_bytes: u64 = hs.iter().map(|t| t.bytes()).sum();
-            let guard = ctx.tracker.track("storeh:h", h_bytes);
-            self.saved_h[l] = Some((hs, guard));
+            self.saved_h[l] = Some(match ctx.act_compress {
+                ActCompress::None => {
+                    let h_bytes: u64 = hs.iter().map(|t| t.bytes()).sum();
+                    let guard = ctx.tracker.track("storeh:h", h_bytes);
+                    SavedH::F32(hs, guard)
+                }
+                ActCompress::Int8 => {
+                    // All seven sites flatten into one stream so short
+                    // tails share quantization groups (PROJS order —
+                    // the decompress side slices the same way).
+                    let total: usize = hs.iter().map(|t| t.len()).sum();
+                    let mut flat = Vec::with_capacity(total);
+                    for t in &hs {
+                        flat.extend_from_slice(t.as_f32());
+                    }
+                    drop(hs);
+                    let blob = actquant::compress(&flat);
+                    let guard = ctx.tracker.track("storeh:h", blob.bytes());
+                    SavedH::Int8(blob, guard)
+                }
+            });
             let y = outs.pop().unwrap();
             self.store.store(l, x)?;
             x = y;
@@ -66,7 +96,7 @@ impl StoreHEngine {
     fn backward<F>(
         ctx: &mut EngineCtx,
         store: &mut CheckpointStore,
-        saved_h: &mut [Option<(Vec<HostTensor>, Guard)>],
+        saved_h: &mut [Option<SavedH>],
         mut g: HostTensor,
         mut on_block: F,
     ) -> anyhow::Result<()>
@@ -77,11 +107,29 @@ impl StoreHEngine {
         use crate::runtime::Arg;
         let _sp = ctx.trace.span("bwd", "train");
         let bwd = ctx.artifact("block_bwd_storeh");
+        let (m, r) = (ctx.rt.dims().m(), ctx.rt.dims().rank);
         for l in (0..ctx.rt.dims().n_layers).rev() {
             let x = store.take(l)?;
-            let (hs, h_guard) = saved_h[l]
+            let (hs, h_guard) = match saved_h[l]
                 .take()
-                .ok_or_else(|| anyhow::anyhow!("h for layer {l} not saved"))?;
+                .ok_or_else(|| anyhow::anyhow!("h for layer {l} not saved"))?
+            {
+                SavedH::F32(hs, guard) => (hs, guard),
+                SavedH::Int8(blob, guard) => {
+                    // Transient f32 for the backward call only; the blob
+                    // (and its guard) die at the end of this arm.
+                    let flat = actquant::decompress(&blob);
+                    let hs = (0..PROJS.len())
+                        .map(|i| {
+                            HostTensor::f32(
+                                &[m, r],
+                                flat[i * m * r..(i + 1) * m * r].to_vec(),
+                            )
+                        })
+                        .collect();
+                    (hs, guard)
+                }
+            };
             let mut args: Vec<Arg> = vec![Arg::Host(&x), Arg::Host(&g)];
             args.extend(hs.iter().map(Arg::Host));
             args.extend(ctx.block_args_mixed(l));

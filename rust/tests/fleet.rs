@@ -4,7 +4,7 @@
 //! completes with finite losses; and the fleet-wide aggregate tracked
 //! peak never exceeds the budget.
 
-use mesp::config::{presets, Method, QuantMode, TrainConfig};
+use mesp::config::{presets, ActCompress, Method, QuantMode, TrainConfig};
 use mesp::fleet::{
     grid, job_cost_bytes, job_weight_class, BudgetChange, FleetOptions, Job,
     JobSpec, Scheduler,
@@ -175,6 +175,116 @@ fn f32_serializing_budget_overlaps_q4_jobs() {
         assert!(r.summary.healthy(), "q4 job {} diverged", o.job.id);
         assert!(r.losses.iter().all(|l| l.is_finite()));
     }
+}
+
+#[test]
+fn storeh_f32_serializing_budget_overlaps_int8_jobs() {
+    // The concurrency headroom --act-compress int8 buys for the store-h
+    // ablation: a budget sized to admit exactly ONE uncompressed store-h
+    // job must overlap ≥2 int8-compressed jobs, because admission charges
+    // the packed per-layer blob instead of 7 bucket-rounded f32 buffers
+    // per layer. Private bases isolate the effect from weight sharing.
+    let private = |base: &TrainConfig, n: usize| {
+        let mut jobs = grid(base, &[Method::StoreH], n);
+        for j in &mut jobs {
+            j.spec.model_seed = Some(0xac7_0000 + j.id as u64);
+        }
+        jobs
+    };
+    let base_f32 = base(30);
+    let mut base_i8 = base_f32.clone();
+    base_i8.act_compress = ActCompress::Int8;
+    let f32_full = cost(&base_f32, Method::StoreH) + wbytes(&base_f32);
+    let i8_full = cost(&base_i8, Method::StoreH) + wbytes(&base_i8);
+    assert!(
+        i8_full < f32_full,
+        "int8 store-h job must cost less than its f32 twin: {i8_full} vs \
+         {f32_full}"
+    );
+
+    // One-f32-job budget: uncompressed store-h jobs serialize...
+    let budget = 2 * f32_full - 1;
+    assert!(2 * i8_full <= budget, "premise: two int8 jobs must fit");
+    let opts = FleetOptions {
+        budget_bytes: budget,
+        workers: 4,
+        ..FleetOptions::default()
+    };
+    let report =
+        Scheduler::run(&opts, &base_f32, private(&base_f32, 4)).unwrap();
+    assert_eq!(report.failed(), 0, "{}", report.render());
+    assert_eq!(
+        report.peak_concurrent, 1,
+        "a one-store-h budget must serialize uncompressed jobs\n{}",
+        report.render()
+    );
+
+    // ...while int8 jobs overlap under the SAME budget.
+    let report =
+        Scheduler::run(&opts, &base_i8, private(&base_i8, 6)).unwrap();
+    assert_eq!(report.failed(), 0, "{}", report.render());
+    assert!(
+        report.peak_concurrent >= 2,
+        "≥2 int8 store-h jobs should overlap, got {}\n{}",
+        report.peak_concurrent,
+        report.render()
+    );
+    assert!(
+        report.aggregate_peak <= budget,
+        "aggregate tracked peak {} exceeds budget {}",
+        report.aggregate_peak,
+        budget
+    );
+    assert!(report.peak_committed <= budget);
+    for o in &report.outcomes {
+        let r = o.result.as_ref().unwrap();
+        assert!(r.summary.healthy(), "int8 job {} diverged", o.job.id);
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+    }
+}
+
+#[test]
+fn predicted_cost_bounds_chunked_and_compressed_sessions() {
+    // The admission bound must hold at the new run shapes too: a chunked
+    // loss head and int8-compressed stored h lower both sides of the
+    // inequality, and the lowered prediction must still cover the
+    // lowered measurement.
+    let base = base(3);
+    for (chunk, ac, method) in [
+        (8usize, ActCompress::None, Method::Mesp),
+        (8, ActCompress::None, Method::Mebp),
+        (0, ActCompress::Int8, Method::StoreH),
+        (8, ActCompress::Int8, Method::StoreH),
+    ] {
+        let mut cfg = base.clone();
+        cfg.method = method;
+        cfg.loss_chunk = chunk;
+        cfg.act_compress = ac;
+        let spec = JobSpec::from_base(&cfg);
+        let predicted = job_cost_bytes(&spec).unwrap()
+            + job_weight_class(&spec).unwrap().bytes;
+        let mut sess = mesp::coordinator::TrainSession::builder(cfg.clone())
+            .build()
+            .unwrap();
+        let summary = sess.run(3).unwrap();
+        let measured = summary.peak_bytes.max(sess.tracker.peak());
+        assert!(
+            measured <= predicted,
+            "{}/chunk {chunk}/{}: measured peak {measured} B exceeds \
+             predicted cost {predicted} B",
+            method.name(),
+            ac.name()
+        );
+    }
+    // And chunking must actually LOWER the charged cost where the loss
+    // head matters (MeSP's loss head is the full logits without it).
+    let mut chunked = JobSpec::from_base(&base);
+    chunked.loss_chunk = 8;
+    let unchunked = JobSpec::from_base(&base);
+    assert!(
+        job_cost_bytes(&chunked).unwrap() < job_cost_bytes(&unchunked).unwrap(),
+        "a chunked job must be cheaper to admit"
+    );
 }
 
 #[test]

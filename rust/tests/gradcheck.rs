@@ -7,7 +7,8 @@
 //! same assertions exercise the PJRT artifact runtime when built with
 //! `--features pjrt` and TrainConfig selects it.
 
-use mesp::config::{presets, KernelKind, Method, QuantMode, TrainConfig};
+use mesp::config::{presets, ActCompress, KernelKind, Method, QuantMode, TrainConfig, PROJS};
+use mesp::model::actquant;
 use mesp::coordinator::TrainSession;
 use mesp::memory::MemoryTracker;
 use mesp::model::{quant, ModelSpec};
@@ -214,6 +215,198 @@ fn q4_finite_difference_gradcheck_da_db() {
              {norm:.6} (tol {tol:.4})"
         );
     }
+}
+
+/// Finite-difference gradcheck of dA/dB THROUGH `--act-compress int8`:
+/// the stored h = xA set is round-tripped through the engine's exact
+/// compression path (one flat blob per layer, PROJS order), fed to the
+/// stored-h backward, and the resulting analytic grads are checked by
+/// directional finite differences of the f32 oracle loss. dA never reads
+/// the stored h, so it must stay BITWISE equal to the recompute (MeSP)
+/// path; dB absorbs the ≲1% int8 round-trip error, which the fd
+/// tolerance covers.
+#[test]
+fn int8_act_compress_finite_difference_gradcheck_da_db() {
+    let dims = presets::compiled("toy").unwrap();
+    let tracker = MemoryTracker::new();
+    let rt = ReferenceBackend::with_kernels(
+        dims.clone(),
+        tracker.clone(),
+        KernelOptions { kind: KernelKind::Tiled, threads: 1 },
+    );
+    let (model, adapters) =
+        ModelSpec::new(dims.clone(), 17, QuantMode::F32).build(&tracker);
+    let frozen: Vec<HostTensor> = model.block_tensors(0).to_vec();
+    let mut rng = Rng::new(77);
+    let lora: Vec<HostTensor> = adapters.lora[0]
+        .tensors
+        .iter()
+        .map(|t| HostTensor::randn(&t.shape, 0.1, &mut rng))
+        .collect();
+    let x = HostTensor::randn(&[dims.batch, dims.seq, dims.d_model], 0.5, &mut rng);
+    let g = HostTensor::randn(&[dims.batch, dims.seq, dims.d_model], 1.0, &mut rng);
+
+    // Capture the seven h = xA, then round-trip them exactly the way
+    // StoreHEngine does under --act-compress int8.
+    let mut args: Vec<Arg> = vec![Arg::Host(&x)];
+    for t in frozen.iter().chain(&lora) {
+        args.push(Arg::Host(t));
+    }
+    let mut outs = rt.execute("block_fwd_saveh", &args).unwrap();
+    drop(args);
+    let hs: Vec<HostTensor> = outs.drain(1..).collect();
+    let mut flat = Vec::new();
+    for t in &hs {
+        flat.extend_from_slice(t.as_f32());
+    }
+    let blob = actquant::compress(&flat);
+    assert!(
+        blob.bytes() * 2 < (flat.len() * 4) as u64,
+        "the int8 blob must be well under half of f32"
+    );
+    let rest = actquant::decompress(&blob);
+    let (m, r) = (dims.m(), dims.rank);
+    let hs_i8: Vec<HostTensor> = (0..PROJS.len())
+        .map(|i| HostTensor::f32(&[m, r], rest[i * m * r..(i + 1) * m * r].to_vec()))
+        .collect();
+
+    let run_bwd = |name: &str, hs: Option<&[HostTensor]>| -> Vec<HostTensor> {
+        let mut args: Vec<Arg> = vec![Arg::Host(&x), Arg::Host(&g)];
+        if let Some(hs) = hs {
+            for t in hs {
+                args.push(Arg::Host(t));
+            }
+        }
+        for t in frozen.iter().chain(&lora) {
+            args.push(Arg::Host(t));
+        }
+        let mut outs = rt.execute(name, &args).unwrap();
+        outs.remove(0); // drop g_x; keep the 14 LoRA grads
+        outs
+    };
+    let int8_grads = run_bwd("block_bwd_storeh", Some(&hs_i8));
+    let mesp_grads = run_bwd("block_bwd_mesp", None);
+    assert_eq!(int8_grads.len(), 14);
+
+    // dA (even indices) never consumes stored h: compression-blind.
+    for i in (0..14).step_by(2) {
+        assert_eq!(
+            int8_grads[i].as_f32(),
+            mesp_grads[i].as_f32(),
+            "dA tensor {i} must not feel the compression"
+        );
+    }
+    // dB (odd indices): close to the exact twin, direction preserved.
+    for i in (1..14).step_by(2) {
+        let cos = stats::cosine(int8_grads[i].as_f32(), mesp_grads[i].as_f32());
+        assert!(cos > 0.999, "dB tensor {i}: cosine {cos} vs exact");
+    }
+
+    // Directional finite differences of the f32 oracle along each
+    // analytic int8 gradient: fd ≈ |dθ| within fd noise + int8 error.
+    let oracle_loss = |replace_idx: usize, replaced: &HostTensor| -> f64 {
+        let mut args: Vec<Arg> = vec![Arg::Host(&x)];
+        for t in &frozen {
+            args.push(Arg::Host(t));
+        }
+        for (i, t) in lora.iter().enumerate() {
+            args.push(Arg::Host(if i == replace_idx { replaced } else { t }));
+        }
+        let y = rt.execute("block_fwd", &args).unwrap()
+            .into_iter().next().unwrap();
+        y.as_f32().iter().zip(g.as_f32())
+            .map(|(yv, gv)| (*yv as f64) * (*gv as f64)).sum()
+    };
+    for idx in [0usize, 1, 7, 13] {
+        let dtheta = &int8_grads[idx];
+        let norm: f64 = dtheta.as_f32().iter()
+            .map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt();
+        assert!(norm > 1e-4, "int8 grad {idx} suspiciously small: {norm}");
+        let eps = 2e-2f64;
+        let perturb = |sign: f64| -> HostTensor {
+            let data: Vec<f32> = lora[idx]
+                .as_f32()
+                .iter()
+                .zip(dtheta.as_f32())
+                .map(|(p, d)| p + (sign * eps * (*d as f64) / norm) as f32)
+                .collect();
+            HostTensor::f32(&lora[idx].shape, data)
+        };
+        let lp = oracle_loss(idx, &perturb(1.0));
+        let lm = oracle_loss(idx, &perturb(-1.0));
+        let fd = (lp - lm) / (2.0 * eps);
+        let tol = 0.05 * norm + 0.02;
+        assert!(
+            (fd - norm).abs() < tol,
+            "int8 lora tensor {idx}: finite diff {fd:.6} vs analytic |g| \
+             {norm:.6} (tol {tol:.4})"
+        );
+    }
+}
+
+#[test]
+fn storeh_int8_session_grads_match_f32_within_quant_tolerance() {
+    // Whole-stack version of the unit check above: a store-h session
+    // under --act-compress int8 produces gradients within the int8
+    // round-trip error of its uncompressed twin — close, but NOT
+    // bitwise (the compression must actually engage).
+    let run = |ac: ActCompress| -> Vec<Vec<f32>> {
+        let mut cfg = base("toy", 31);
+        cfg.method = Method::StoreH;
+        cfg.act_compress = ac;
+        let mut sess = TrainSession::builder(cfg).build().expect("session");
+        let (batch, _g) = sess.loader.next();
+        sess.engine.gradients(&batch).expect("gradients")
+    };
+    let f32_g = run(ActCompress::None);
+    let i8_g = run(ActCompress::Int8);
+    assert_ne!(f32_g, i8_g, "int8 compression silently disabled");
+    for (l, (a, b)) in f32_g.iter().zip(&i8_g).enumerate() {
+        let err = stats::rel_error(a, b);
+        assert!(err < 2e-2, "layer {l}: int8 rel err {err:.3e}");
+        let cos = stats::cosine(a, b);
+        assert!(cos > 0.999, "layer {l}: int8 cosine {cos}");
+    }
+}
+
+#[test]
+fn loss_chunk_session_parity_is_bitwise() {
+    // --loss-chunk is a pure memory shape: gradients and the training
+    // trajectory must be BITWISE identical to the unchunked oracle, for
+    // chunk sizes that divide m, leave a ragged tail, and exceed m.
+    let run = |chunk: usize| -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut cfg = base("toy", 23);
+        cfg.method = Method::Mesp;
+        cfg.loss_chunk = chunk;
+        cfg.lr = 1e-2;
+        let mut sess = TrainSession::builder(cfg).build().expect("session");
+        let (batch, _g) = sess.loader.next();
+        let grads = sess.engine.gradients(&batch).expect("gradients");
+        sess.run(2).expect("steps");
+        (grads, sess.engine.ctx().adapters.lora[0].flatten())
+    };
+    let (g0, p0) = run(0);
+    for chunk in [1, 5, 16, 1 << 20] {
+        let (gc, pc) = run(chunk);
+        for (l, (a, b)) in g0.iter().zip(&gc).enumerate() {
+            assert_eq!(a, b, "layer {l} grads differ at chunk {chunk}");
+        }
+        assert_eq!(p0, pc, "params diverged at chunk {chunk}");
+    }
+
+    // Same claim through the q4 forward: the loss head sees only the
+    // final hidden state, so quantized weights change nothing about
+    // chunking parity.
+    let run_q4 = |chunk: usize| -> Vec<Vec<f32>> {
+        let mut cfg = base("toy", 23);
+        cfg.method = Method::Mesp;
+        cfg.quant = QuantMode::Q4;
+        cfg.loss_chunk = chunk;
+        let mut sess = TrainSession::builder(cfg).build().expect("session");
+        let (batch, _g) = sess.loader.next();
+        sess.engine.gradients(&batch).expect("gradients")
+    };
+    assert_eq!(run_q4(0), run_q4(5), "q4 chunk parity broken");
 }
 
 #[test]
