@@ -124,6 +124,17 @@ pub const FLEET_FLAGS: &[&str] = &[
     "snapshot-dir", "print-cost", "trace", "metrics-out", "tune",
     "loss-chunk", "act-compress",
 ];
+pub const SERVE_FLAGS: &[&str] = &[
+    "config", "backend", "steps", "lr", "seed", "optimizer", "kernel",
+    "threads", "quant", "loss-chunk", "act-compress", "artifacts",
+    "socket", "snapshot-dir", "budget-mb", "workers", "budget-schedule",
+    "checkpoint-every", "quota", "tenant-weights", "metrics-out",
+];
+pub const LOADGEN_FLAGS: &[&str] = &[
+    "socket", "arrivals", "rate", "tenants", "sim-us", "seed", "steps",
+    "out", "time-scale", "squeeze", "diurnal-amp", "diurnal-period",
+    "burst-every", "burst-len", "burst-x", "real", "shutdown",
+];
 pub const SIMULATE_FLAGS: &[&str] = &["model", "seq", "rank", "breakdown"];
 pub const GRADCHECK_FLAGS: &[&str] = &[
     "config", "backend", "seeds", "tol", "artifacts", "kernel", "threads",
@@ -142,6 +153,8 @@ pub fn known_flags(command: &str) -> Option<&'static [&'static str]> {
     match command {
         "train" => Some(TRAIN_FLAGS),
         "fleet" => Some(FLEET_FLAGS),
+        "serve" => Some(SERVE_FLAGS),
+        "loadgen" => Some(LOADGEN_FLAGS),
         "simulate" => Some(SIMULATE_FLAGS),
         "gradcheck" => Some(GRADCHECK_FLAGS),
         "mezo-quality" => Some(MEZO_QUALITY_FLAGS),
@@ -211,6 +224,35 @@ COMMANDS
               --loss-chunk N / --act-compress none|int8 (as in train;
               both feed the admission cost model, so chunked /
               compressed jobs admit more densely under one budget)
+  serve       Long-lived fleet daemon on a Unix socket: JSONL protocol
+              (submit/status/cancel/set-budget/drain/shutdown), per-
+              tenant quotas, weighted-fair dispatch, crash recovery.
+              Full spec: docs/serving.md. Exit codes: 0 clean, 1 runtime
+              failure, 2 job failures, 3 startup failure.
+              --socket PATH  --snapshot-dir DIR (sidecars + checkpoints;
+              rescanned on startup to re-admit interrupted jobs bitwise)
+              --budget-mb N  --workers N
+              --checkpoint-every N (checkpoint running jobs every N
+              steps; 0 = only on preemption/shutdown)
+              --budget-schedule step:mb,step:mb (as in fleet)
+              --quota tenant:mb,... (per-tenant admission quotas)
+              --tenant-weights tenant:w,... (WFQ dispatch weights)
+              --metrics-out PATH.jsonl (registry snapshot at exit)
+              Base-config flags as in train: --config --backend --steps
+              --lr --seed --optimizer --kernel --threads --quant
+              --loss-chunk --act-compress --artifacts
+  loadgen     Replay a synthetic arrival trace against a live serve
+              daemon; writes BENCH_serve.json (latency percentiles,
+              preempt churn, per-tenant fairness).
+              --socket PATH  --arrivals N  --rate JOBS/S  --tenants N
+              --steps N (per job)  --sim-us N (virtual step latency)
+              --seed N (same seed = identical trace)  --out PATH.json
+              --time-scale F (1 = real time, 0 = flat out)
+              --squeeze idx:mb,... (set-budget after arrival idx)
+              --diurnal-amp F  --diurnal-period SECS (rate sine wave)
+              --burst-every N  --burst-len N  --burst-x F (burst shape)
+              --real (full training jobs instead of sim jobs)
+              --shutdown (send shutdown after the trace drains)
   simulate    Evaluate the analytical memory model at Qwen2.5 dims.
               --model 0.5b|1.5b|3b  --seq N  --rank N  [--breakdown]
   gradcheck   Assert MeSP ≡ MeBP ≡ store-h gradients on a runnable config.
@@ -305,9 +347,9 @@ mod tests {
 
     #[test]
     fn every_subcommand_has_an_allowlist() {
-        for cmd in ["train", "fleet", "simulate", "gradcheck",
-                    "mezo-quality", "reproduce", "inspect", "report",
-                    "help", ""] {
+        for cmd in ["train", "fleet", "serve", "loadgen", "simulate",
+                    "gradcheck", "mezo-quality", "reproduce", "inspect",
+                    "report", "help", ""] {
             assert!(known_flags(cmd).is_some(), "missing allowlist: {cmd}");
         }
         assert!(known_flags("nope").is_none());
@@ -316,9 +358,9 @@ mod tests {
     #[test]
     fn usage_documents_every_subcommand_flag() {
         // keep USAGE and the allowlists from drifting apart
-        for flags in [TRAIN_FLAGS, FLEET_FLAGS, SIMULATE_FLAGS,
-                      GRADCHECK_FLAGS, MEZO_QUALITY_FLAGS, REPRODUCE_FLAGS,
-                      INSPECT_FLAGS, REPORT_FLAGS] {
+        for flags in [TRAIN_FLAGS, FLEET_FLAGS, SERVE_FLAGS, LOADGEN_FLAGS,
+                      SIMULATE_FLAGS, GRADCHECK_FLAGS, MEZO_QUALITY_FLAGS,
+                      REPRODUCE_FLAGS, INSPECT_FLAGS, REPORT_FLAGS] {
             for f in flags {
                 assert!(USAGE.contains(&format!("--{f}")),
                         "USAGE missing --{f}");

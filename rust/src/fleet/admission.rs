@@ -27,6 +27,20 @@
 //! the permit (returning the reservation) and re-queues the job to
 //! resume later. Resumed admissions carry no ticket — they re-enter
 //! whenever the budget next has room.
+//!
+//! # Tenants and quotas
+//!
+//! `mesp serve` admits on behalf of named tenants
+//! ([`Admission::admit_job_tenant`]). A tenant with a quota
+//! ([`Admission::set_tenant_quota`]) may never have more than that many
+//! bytes of per-job cost committed at once: a waiter whose tenant is at
+//! its quota is SKIPPED by the grant selection (other tenants' waiters
+//! proceed — a capped tenant cannot starve the fleet), and a single job
+//! whose cost alone exceeds its tenant's quota is refused outright.
+//! Shared frozen-base weight bytes are fleet-wide and are NOT charged
+//! against any tenant's quota — only the per-job activation/queue cost
+//! is. Weighted-fair queuing across tenants happens one level up, in
+//! the serve daemon's dispatch queue; the gate only enforces hard caps.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -135,6 +149,10 @@ struct RunningEntry {
 struct Waiter {
     wid: u64,
     priority: u8,
+    /// Per-job cost the waiter will commit — what its tenant's quota is
+    /// checked against during grant selection.
+    cost: u64,
+    tenant: Option<String>,
 }
 
 #[derive(Debug, Default)]
@@ -153,6 +171,9 @@ struct AdmState {
     active: usize,
     /// Next initial job id to be granted (arrival-ticket gate).
     next_ticket: usize,
+    /// Closed gates refuse every admit (serve shutdown unblocks its
+    /// workers through this).
+    closed: bool,
     preempt_enabled: bool,
     running: Vec<RunningEntry>,
     waiters: Vec<Waiter>,
@@ -173,6 +194,11 @@ struct AdmState {
     weight_shared_admissions: usize,
     /// High-water of weight bytes simultaneously committed.
     peak_weight_bytes: u64,
+    /// Hard per-tenant caps on committed per-job cost bytes (weights
+    /// excluded — they are fleet-wide).
+    tenant_quota: HashMap<String, u64>,
+    /// Per-tenant committed per-job cost bytes currently outstanding.
+    tenant_committed: HashMap<String, u64>,
 }
 
 impl AdmState {
@@ -184,6 +210,16 @@ impl AdmState {
             Some(c) if !self.weights.contains_key(&c.key) => c.bytes,
             _ => 0,
         }
+    }
+
+    /// Whether `cost` more bytes for `tenant` would stay within the
+    /// tenant's quota (no tenant / no quota: always). Weight-class
+    /// bytes are deliberately excluded — shared bases are fleet-wide.
+    fn tenant_fits(&self, tenant: &Option<String>, cost: u64) -> bool {
+        let Some(t) = tenant else { return true };
+        let Some(q) = self.tenant_quota.get(t) else { return true };
+        let used = self.tenant_committed.get(t).copied().unwrap_or(0);
+        used.saturating_add(cost) <= *q
     }
 
     /// Sum of costs of running jobs already flagged for preemption —
@@ -287,6 +323,20 @@ impl Admission {
         self.state.lock().unwrap().budget
     }
 
+    /// The current refusal ceiling (highest still-reachable budget).
+    pub fn ceiling(&self) -> u64 {
+        self.state.lock().unwrap().ceiling
+    }
+
+    /// Close the gate: every blocked admit fails immediately and all
+    /// future admits are refused. The serve daemon's shutdown path —
+    /// parked work persists on disk, so refusing late arrivals loses
+    /// nothing.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
     /// Change the budget mid-run. If the new budget no longer covers
     /// the running set and preemption is enabled, lowest-priority
     /// running jobs are flagged until the survivors fit. The refusal
@@ -334,7 +384,27 @@ impl Admission {
         ticket: Option<usize>,
         weights: Option<WeightClass>,
     ) -> anyhow::Result<Permit<'_>> {
+        self.admit_job_tenant(method, cost, priority, ticket, weights, None)
+    }
+
+    /// [`Self::admit_job_shared`] on behalf of a named tenant: `cost`
+    /// is additionally charged against the tenant's quota (if one is
+    /// set) for as long as the permit lives. A waiter whose tenant is
+    /// at quota is skipped by grant selection so other tenants keep
+    /// flowing; a job whose cost alone exceeds the quota is refused
+    /// outright ("can never be admitted", like a cost over the budget
+    /// ceiling).
+    pub fn admit_job_tenant(
+        &self,
+        method: Method,
+        cost: u64,
+        priority: u8,
+        ticket: Option<usize>,
+        weights: Option<WeightClass>,
+        tenant: Option<&str>,
+    ) -> anyhow::Result<Permit<'_>> {
         let name = method.name();
+        let tenant: Option<String> = tenant.map(String::from);
         // A job alone on an empty gate pays cost + its full weight
         // class; only that exceeding the ceiling is a permanent refusal
         // (sharing can only lower the real charge).
@@ -345,25 +415,56 @@ impl Admission {
                 st = self.cv.wait(st).unwrap();
             }
         }
-        // Budget phase: register as a waiter; only the top waiter
-        // (highest priority, earliest arrival within a priority) may
-        // claim freed budget or request preemption.
+        // Budget phase: register as a waiter; only the grantable waiter
+        // (highest priority, earliest arrival within a priority, tenant
+        // under quota) may claim freed budget or request preemption.
         st.wait_seq += 1;
         let wid = st.wait_seq;
-        st.waiters.push(Waiter { wid, priority });
+        st.waiters.push(Waiter {
+            wid,
+            priority,
+            cost,
+            tenant: tenant.clone(),
+        });
+        let mut refusal = String::new();
         let granted = loop {
+            if st.closed {
+                refusal =
+                    "admission gate closed (daemon shutting down)".to_string();
+                break false;
+            }
             // Refuse only against the ceiling: under a budget schedule
             // the current budget may be a transient dip the job should
             // wait (or stay parked) through, not die on.
             if solo > st.ceiling {
+                refusal = format!(
+                    "job cost {} MB exceeds the fleet budget ceiling {} MB \
+                     — it can never be admitted",
+                    fmt_mb(solo),
+                    fmt_mb(st.ceiling)
+                );
                 break false;
             }
-            let top = st
+            if let Some(t) = &tenant {
+                if let Some(q) = st.tenant_quota.get(t) {
+                    if cost > *q {
+                        refusal = format!(
+                            "job cost {} MB exceeds tenant '{t}' quota {} MB \
+                             — it can never be admitted",
+                            fmt_mb(cost),
+                            fmt_mb(*q)
+                        );
+                        break false;
+                    }
+                }
+            }
+            let grantable = st
                 .waiters
                 .iter()
+                .filter(|w| st.tenant_fits(&w.tenant, w.cost))
                 .max_by_key(|w| (w.priority, std::cmp::Reverse(w.wid)))
                 .map(|w| w.wid);
-            if top == Some(wid) {
+            if grantable == Some(wid) {
                 // The weight term depends on who is admitted RIGHT NOW:
                 // re-evaluate per wakeup (a holder may have arrived or
                 // left while we slept).
@@ -385,15 +486,12 @@ impl Admission {
             st.next_ticket += 1;
         }
         if !granted {
-            let ceiling = st.ceiling;
             drop(st);
             self.cv.notify_all();
-            anyhow::bail!(
-                "job cost {} MB exceeds the fleet budget ceiling {} MB — it \
-                 can never be admitted",
-                fmt_mb(solo),
-                fmt_mb(ceiling)
-            );
+            anyhow::bail!("{refusal}");
+        }
+        if let Some(t) = &tenant {
+            *st.tenant_committed.entry(t.clone()).or_insert(0) += cost;
         }
         let wneed = st.weight_need(&weights);
         if let Some(w) = &weights {
@@ -429,7 +527,28 @@ impl Admission {
         });
         drop(st);
         self.cv.notify_all();
-        Ok(Permit { adm: self, reg, method: name, cost, weights, flag })
+        Ok(Permit { adm: self, reg, method: name, cost, weights, flag, tenant })
+    }
+
+    /// Cap `tenant`'s simultaneously-committed per-job cost bytes.
+    pub fn set_tenant_quota(&self, tenant: &str, bytes: u64) {
+        self.state
+            .lock()
+            .unwrap()
+            .tenant_quota
+            .insert(tenant.to_string(), bytes);
+        self.cv.notify_all();
+    }
+
+    /// Per-job cost bytes currently committed on behalf of `tenant`.
+    pub fn tenant_committed(&self, tenant: &str) -> u64 {
+        self.state
+            .lock()
+            .unwrap()
+            .tenant_committed
+            .get(tenant)
+            .copied()
+            .unwrap_or(0)
     }
 
     /// [`Self::admit_job_shared`] without a weight class — jobs whose
@@ -473,10 +592,19 @@ impl Admission {
         method: &'static str,
         cost: u64,
         weights: Option<WeightClass>,
+        tenant: Option<&str>,
     ) {
         {
             let mut st = self.state.lock().unwrap();
             st.committed = st.committed.saturating_sub(cost);
+            if let Some(t) = tenant {
+                if let Some(c) = st.tenant_committed.get_mut(t) {
+                    *c = c.saturating_sub(cost);
+                    if *c == 0 {
+                        st.tenant_committed.remove(t);
+                    }
+                }
+            }
             if let Some(w) = weights {
                 if let Some(e) = st.weights.get_mut(&w.key) {
                     e.holders -= 1;
@@ -509,6 +637,7 @@ pub struct Permit<'a> {
     cost: u64,
     weights: Option<WeightClass>,
     flag: Arc<AtomicBool>,
+    tenant: Option<String>,
 }
 
 impl Permit<'_> {
@@ -526,8 +655,13 @@ impl Permit<'_> {
 
 impl Drop for Permit<'_> {
     fn drop(&mut self) {
-        self.adm
-            .release(self.reg, self.method, self.cost, self.weights);
+        self.adm.release(
+            self.reg,
+            self.method,
+            self.cost,
+            self.weights,
+            self.tenant.as_deref(),
+        );
     }
 }
 
@@ -874,5 +1008,75 @@ mod tests {
         // ticket 1 must still be grantable
         let p = adm.admit_job(Method::Mesp, 50, 0, Some(1)).unwrap();
         drop(p);
+    }
+
+    #[test]
+    fn tenant_over_quota_waits_and_does_not_block_other_tenants() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let adm = Arc::new(Admission::new(1000));
+        adm.set_tenant_quota("a", 100);
+        let p1 = adm
+            .admit_job_tenant(Method::Mesp, 80, 0, None, None, Some("a"))
+            .unwrap();
+        assert_eq!(adm.tenant_committed("a"), 80);
+        // Second "a" job would push the tenant to 160 > 100: must wait.
+        let admitted = Arc::new(AtomicBool::new(false));
+        let (adm2, flag) = (Arc::clone(&adm), Arc::clone(&admitted));
+        let h = std::thread::spawn(move || {
+            let _p = adm2
+                .admit_job_tenant(Method::Mesp, 80, 0, None, None, Some("a"))
+                .unwrap();
+            flag.store(true, Ordering::SeqCst);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(!admitted.load(Ordering::SeqCst), "quota must gate tenant a");
+        // A DIFFERENT tenant must flow past the quota-blocked waiter
+        // even though that waiter arrived first.
+        let pb = adm
+            .admit_job_tenant(Method::Mebp, 80, 0, None, None, Some("b"))
+            .unwrap();
+        drop(pb);
+        assert!(!admitted.load(Ordering::SeqCst));
+        drop(p1); // tenant a frees its quota: the waiter admits
+        h.join().unwrap();
+        assert!(admitted.load(Ordering::SeqCst));
+        assert_eq!(adm.tenant_committed("a"), 0, "all permits released");
+        assert_eq!(adm.tenant_committed("b"), 0);
+    }
+
+    #[test]
+    fn job_over_its_tenant_quota_refused_by_name() {
+        let adm = Admission::new(1000);
+        adm.set_tenant_quota("a", 50);
+        let err = adm
+            .admit_job_tenant(Method::Mesp, 80, 0, None, None, Some("a"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("tenant 'a' quota"), "{err}");
+        // The same job under no tenant (or an unquota'd one) is fine.
+        let p = adm
+            .admit_job_tenant(Method::Mesp, 80, 0, None, None, Some("b"))
+            .unwrap();
+        drop(p);
+        let p = adm.admit(Method::Mesp, 80).unwrap();
+        drop(p);
+    }
+
+    #[test]
+    fn tenant_committed_tracks_permit_lifetimes() {
+        let adm = Admission::new(1000);
+        let p1 = adm
+            .admit_job_tenant(Method::Mesp, 100, 0, None, None, Some("t"))
+            .unwrap();
+        let p2 = adm
+            .admit_job_tenant(Method::Mebp, 50, 0, None, None, Some("t"))
+            .unwrap();
+        assert_eq!(adm.tenant_committed("t"), 150);
+        drop(p1);
+        assert_eq!(adm.tenant_committed("t"), 50);
+        drop(p2);
+        assert_eq!(adm.tenant_committed("t"), 0);
+        assert_eq!(adm.tenant_committed("nobody"), 0);
     }
 }

@@ -207,10 +207,14 @@ pub fn load_jobs(path: &Path, base: &TrainConfig) -> anyhow::Result<Vec<Job>> {
         if line.trim().is_empty() {
             continue;
         }
-        let j = Json::parse(line)
-            .map_err(|e| anyhow::anyhow!("job file line {}: {e}", lineno + 1))?;
-        let mut spec = JobSpec::from_json(&j, base)
-            .map_err(|e| anyhow::anyhow!("job file line {}: {e}", lineno + 1))?;
+        // Malformed lines name the file AND the line — a fleet launched
+        // from several stitched job files must point at the real source.
+        let j = Json::parse(line).map_err(|e| {
+            anyhow::anyhow!("job file {}:{}: {e}", path.display(), lineno + 1)
+        })?;
+        let mut spec = JobSpec::from_json(&j, base).map_err(|e| {
+            anyhow::anyhow!("job file {}:{}: {e}", path.display(), lineno + 1)
+        })?;
         if j.get("seed").is_none() {
             spec.seed = derive(job_seed, jobs.len() as u64);
         }
@@ -402,13 +406,18 @@ mod tests {
     }
 
     #[test]
-    fn jsonl_bad_line_reports_lineno() {
+    fn jsonl_bad_line_reports_file_and_lineno() {
         let dir = std::env::temp_dir().join("mesp-test-fleet-badjobs");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("jobs.jsonl");
         std::fs::write(&path, "{\"method\": \"mesp\"}\nnot json\n").unwrap();
         let err = load_jobs(&path, &base()).unwrap_err().to_string();
-        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("jobs.jsonl:2:"), "must name file:line — {err}");
+        // A bad value (valid JSON, invalid spec) points at its line too.
+        std::fs::write(&path, "{\"mthod\": \"mesp\"}\n").unwrap();
+        let err = load_jobs(&path, &base()).unwrap_err().to_string();
+        assert!(err.contains("jobs.jsonl:1:"), "{err}");
+        assert!(err.contains("unknown job key"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,639 @@
+//! `mesp loadgen`: trace-driven load generation against a live `mesp
+//! serve` daemon.
+//!
+//! The generator synthesizes a deterministic arrival trace from a seed —
+//! Poisson inter-arrivals whose rate is modulated by a diurnal sine wave
+//! and periodic bursts — and replays it over the daemon's Unix socket:
+//! hundreds of thousands of submits flowing through the REAL protocol
+//! parser, admission gate, tenant quotas and WFQ dispatch. Mid-run
+//! budget squeezes (`--squeeze idx:mb,...`) exercise the
+//! preempt-to-disk path under load.
+//!
+//! Jobs are submitted as `sim` jobs by default (real admission costs,
+//! virtual step loops) so a 100k-arrival replay finishes in minutes;
+//! `--real` switches to full training sessions for small traces.
+//!
+//! The run report — throughput, latency percentiles from the daemon's
+//! own histogram, preempt churn, per-tenant fairness — is written as
+//! `BENCH_serve.json` (same convention as the other `BENCH_*.json`
+//! artifacts CI uploads).
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::protocol::{self, Response, PROTOCOL_VERSION};
+
+/// Everything `mesp loadgen` is configured with.
+#[derive(Debug, Clone)]
+pub struct LoadgenOptions {
+    /// Daemon socket to replay against.
+    pub socket: PathBuf,
+    /// Total arrivals to generate.
+    pub arrivals: usize,
+    /// Mean arrival rate in jobs per second of TRACE time.
+    pub rate: f64,
+    /// Number of synthetic tenants (`t0`, `t1`, …).
+    pub tenants: usize,
+    /// Per-step virtual latency of submitted sim jobs, microseconds.
+    pub sim_us: u64,
+    /// Trace seed: same seed, same trace, bit for bit.
+    pub seed: u64,
+    /// Steps per submitted job.
+    pub steps: usize,
+    /// Replay pacing: 1.0 = real time, 2.0 = twice as fast, 0.0 = flat
+    /// out (ignore trace timestamps entirely).
+    pub time_scale: f64,
+    /// Diurnal modulation amplitude in [0,1): rate(t) swings by ±amp.
+    pub diurnal_amp: f64,
+    /// Diurnal period in trace seconds.
+    pub diurnal_period_s: f64,
+    /// Every N arrivals, a burst begins… (0 disables bursts)
+    pub burst_every: usize,
+    /// …lasting this many arrivals…
+    pub burst_len: usize,
+    /// …at this rate multiplier.
+    pub burst_x: f64,
+    /// Budget squeezes: after arrival index N, set the budget to BYTES
+    /// (ceiling untouched, so squeezed-out jobs park, not die).
+    pub squeezes: Vec<(usize, u64)>,
+    /// Submit real training jobs instead of sim jobs.
+    pub real: bool,
+    /// Send `shutdown` after the trace drains (CI wants the full
+    /// lifecycle; interactive runs leave the daemon up).
+    pub shutdown: bool,
+    /// Where to write the benchmark JSON (default `BENCH_serve.json`).
+    pub out: PathBuf,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> Self {
+        LoadgenOptions {
+            socket: PathBuf::from("mesp.sock"),
+            arrivals: 1000,
+            rate: 200.0,
+            tenants: 3,
+            sim_us: 0,
+            seed: 42,
+            steps: 4,
+            time_scale: 0.0,
+            diurnal_amp: 0.5,
+            diurnal_period_s: 60.0,
+            burst_every: 500,
+            burst_len: 50,
+            burst_x: 5.0,
+            squeezes: Vec::new(),
+            real: false,
+            shutdown: false,
+            out: PathBuf::from("BENCH_serve.json"),
+        }
+    }
+}
+
+/// Parse `--squeeze idx:mb,idx:mb` (budget in MB, applied after the
+/// given arrival index; indices strictly ascending).
+pub fn parse_squeezes(s: &str) -> anyhow::Result<Vec<(usize, u64)>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        let (idx, mb) = p.split_once(':').ok_or_else(|| {
+            anyhow::anyhow!("squeeze entry '{p}' is not idx:mb")
+        })?;
+        let idx: usize = idx.trim().parse().map_err(|_| {
+            anyhow::anyhow!("squeeze index '{idx}' is not an integer")
+        })?;
+        let mb: u64 = mb.trim().parse().map_err(|_| {
+            anyhow::anyhow!("squeeze budget '{mb}' is not an integer (MB)")
+        })?;
+        anyhow::ensure!(mb > 0, "squeeze budget must be positive MB");
+        out.push((idx, mb << 20));
+    }
+    anyhow::ensure!(!out.is_empty(), "empty squeeze list '{s}'");
+    for w in out.windows(2) {
+        anyhow::ensure!(
+            w[0].0 < w[1].0,
+            "squeeze indices must be strictly ascending ({} then {})",
+            w[0].0,
+            w[1].0
+        );
+    }
+    Ok(out)
+}
+
+/// One synthetic arrival.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arrival {
+    /// Trace-time offset from the start, seconds.
+    pub at_s: f64,
+    pub tenant: String,
+    /// 0..=9; most arrivals are 0, ~10% get a priority bump.
+    pub priority: u8,
+}
+
+/// Instantaneous rate multiplier at trace time `t` for arrival index
+/// `i`: diurnal sine wave times burst factor.
+fn rate_factor(opts: &LoadgenOptions, t: f64, i: usize) -> f64 {
+    let diurnal = if opts.diurnal_amp > 0.0 && opts.diurnal_period_s > 0.0 {
+        1.0 + opts.diurnal_amp
+            * (2.0 * std::f64::consts::PI * t / opts.diurnal_period_s).sin()
+    } else {
+        1.0
+    };
+    let burst = if opts.burst_every > 0
+        && opts.burst_len > 0
+        && i % opts.burst_every < opts.burst_len
+    {
+        opts.burst_x.max(1.0)
+    } else {
+        1.0
+    };
+    (diurnal * burst).max(1e-6)
+}
+
+/// Synthesize the arrival trace. Deterministic in `opts.seed` (and the
+/// shape knobs): the same options always produce the identical trace,
+/// so a benchmark regression is a scheduler change, not trace noise.
+pub fn synth_trace(opts: &LoadgenOptions) -> Vec<Arrival> {
+    let mut rng = Rng::new(opts.seed);
+    let mut t = 0.0_f64;
+    let mut out = Vec::with_capacity(opts.arrivals);
+    for i in 0..opts.arrivals {
+        let rate = opts.rate.max(1e-6) * rate_factor(opts, t, i);
+        // Exponential inter-arrival: -ln(1-u)/λ (Poisson process).
+        let u = rng.uniform() as f64;
+        t += -(1.0 - u).max(1e-12).ln() / rate;
+        let tenant = format!("t{}", rng.below(opts.tenants.max(1)));
+        let priority = if rng.uniform() < 0.1 {
+            1 + rng.below(9) as u8
+        } else {
+            0
+        };
+        out.push(Arrival { at_s: t, tenant, priority });
+    }
+    out
+}
+
+/// A blocking JSONL client on the daemon socket: one request out, one
+/// response in, strictly in order. Shared by the loadgen and the
+/// integration tests.
+pub struct Client {
+    reader: BufReader<UnixStream>,
+    writer: UnixStream,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(socket: &Path) -> anyhow::Result<Client> {
+        let stream = UnixStream::connect(socket).map_err(|e| {
+            anyhow::anyhow!("connect to {}: {e}", socket.display())
+        })?;
+        let writer = stream.try_clone().map_err(|e| {
+            anyhow::anyhow!("clone socket stream: {e}")
+        })?;
+        Ok(Client { reader: BufReader::new(stream), writer, next_id: 0 })
+    }
+
+    /// Send one raw line, read one raw line. The escape hatch for tests
+    /// that need to send malformed frames.
+    pub fn call_raw(&mut self, line: &str) -> anyhow::Result<String> {
+        writeln!(self.writer, "{line}")
+            .map_err(|e| anyhow::anyhow!("socket write: {e}"))?;
+        let mut resp = String::new();
+        let n = self
+            .reader
+            .read_line(&mut resp)
+            .map_err(|e| anyhow::anyhow!("socket read: {e}"))?;
+        anyhow::ensure!(n > 0, "daemon closed the connection");
+        Ok(resp)
+    }
+
+    /// Send a verb with fields, return the parsed response. `fields`
+    /// must not contain `v`/`id`/`verb` (they are supplied here).
+    pub fn call(
+        &mut self,
+        verb: &str,
+        fields: Vec<(&str, Json)>,
+    ) -> anyhow::Result<Response> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut pairs = vec![
+            ("v", Json::num(PROTOCOL_VERSION as f64)),
+            ("id", Json::num(id as f64)),
+            ("verb", Json::str(verb)),
+        ];
+        pairs.extend(fields);
+        let line = Json::obj(pairs).to_string();
+        let resp = self.call_raw(&line)?;
+        let r = protocol::parse_response(&resp)?;
+        anyhow::ensure!(
+            r.id == Some(id),
+            "response id {:?} does not match request id {id}",
+            r.id
+        );
+        Ok(r)
+    }
+}
+
+/// Per-tenant service observed at the end of the run.
+#[derive(Debug, Clone)]
+pub struct TenantService {
+    pub tenant: String,
+    pub weight: u64,
+    pub done: u64,
+    pub steps: u64,
+}
+
+/// Everything one loadgen run measured.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub arrivals: usize,
+    pub accepted: usize,
+    /// Rejections by protocol error code.
+    pub rejected: Vec<(String, usize)>,
+    pub wall_secs: f64,
+    pub jobs_done: u64,
+    pub jobs_failed: u64,
+    /// (count, mean, p50, p90, p99, max) of submit→done seconds, from
+    /// the daemon's own histogram.
+    pub latency_s: Option<(u64, f64, f64, f64, f64, f64)>,
+    pub preempts: u64,
+    pub resumes: u64,
+    pub fleet_steps: u64,
+    pub squeezes_applied: usize,
+    pub tenants: Vec<TenantService>,
+}
+
+impl LoadgenReport {
+    pub fn jobs_per_sec(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.jobs_done as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Weighted-fairness ratio: max over min of per-tenant
+    /// steps-per-weight. 1.0 = perfectly weight-proportional service;
+    /// the CI gate allows slack for arrival randomness.
+    pub fn fairness_ratio(&self) -> f64 {
+        let shares: Vec<f64> = self
+            .tenants
+            .iter()
+            .filter(|t| t.weight > 0)
+            .map(|t| t.steps as f64 / t.weight as f64)
+            .collect();
+        let lo = shares.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = shares.iter().cloned().fold(0.0_f64, f64::max);
+        if shares.len() < 2 || lo <= 0.0 {
+            1.0
+        } else {
+            hi / lo
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let latency = match self.latency_s {
+            Some((count, mean, p50, p90, p99, max)) => Json::obj(vec![
+                ("count", Json::num(count as f64)),
+                ("mean", Json::Num(mean)),
+                ("p50", Json::Num(p50)),
+                ("p90", Json::Num(p90)),
+                ("p99", Json::Num(p99)),
+                ("max", Json::Num(max)),
+            ]),
+            None => Json::Null,
+        };
+        let rejected = Json::Obj(
+            self.rejected
+                .iter()
+                .map(|(c, n)| (c.clone(), Json::num(*n as f64)))
+                .collect(),
+        );
+        let tenants = Json::Obj(
+            self.tenants
+                .iter()
+                .map(|t| {
+                    (
+                        t.tenant.clone(),
+                        Json::obj(vec![
+                            ("weight", Json::num(t.weight as f64)),
+                            ("done", Json::num(t.done as f64)),
+                            ("steps", Json::num(t.steps as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("bench", Json::str("serve")),
+            ("arrivals", Json::num(self.arrivals as f64)),
+            ("accepted", Json::num(self.accepted as f64)),
+            ("rejected", rejected),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("jobs_done", Json::num(self.jobs_done as f64)),
+            ("jobs_failed", Json::num(self.jobs_failed as f64)),
+            ("jobs_per_sec", Json::Num(self.jobs_per_sec())),
+            ("latency_s", latency),
+            ("preempts", Json::num(self.preempts as f64)),
+            ("resumes", Json::num(self.resumes as f64)),
+            ("fleet_steps", Json::num(self.fleet_steps as f64)),
+            ("squeezes_applied", Json::num(self.squeezes_applied as f64)),
+            ("fairness_ratio", Json::Num(self.fairness_ratio())),
+            ("tenants", tenants),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::from("## loadgen report\n\n");
+        out.push_str(&format!(
+            "arrivals {} | accepted {} | rejected {} | wall {:.2}s | \
+             {:.0} jobs/s\n",
+            self.arrivals,
+            self.accepted,
+            self.rejected.iter().map(|(_, n)| n).sum::<usize>(),
+            self.wall_secs,
+            self.jobs_per_sec()
+        ));
+        out.push_str(&format!(
+            "done {} | failed {} | preempts {} | resumes {} | fleet steps \
+             {} | squeezes {}\n",
+            self.jobs_done,
+            self.jobs_failed,
+            self.preempts,
+            self.resumes,
+            self.fleet_steps,
+            self.squeezes_applied
+        ));
+        if let Some((count, mean, p50, p90, p99, max)) = self.latency_s {
+            out.push_str(&format!(
+                "latency (n={count}): mean {mean:.4}s p50 {p50:.4}s p90 \
+                 {p90:.4}s p99 {p99:.4}s max {max:.4}s\n"
+            ));
+        }
+        out.push_str(&format!(
+            "fairness ratio {:.3} across {} tenants\n",
+            self.fairness_ratio(),
+            self.tenants.len()
+        ));
+        for t in &self.tenants {
+            out.push_str(&format!(
+                "  {}: weight {} done {} steps {}\n",
+                t.tenant, t.weight, t.done, t.steps
+            ));
+        }
+        out
+    }
+}
+
+fn get_u64(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64
+}
+
+/// Replay the trace against a live daemon and collect the report.
+pub fn run(opts: &LoadgenOptions) -> anyhow::Result<LoadgenReport> {
+    anyhow::ensure!(opts.arrivals > 0, "loadgen needs at least one arrival");
+    anyhow::ensure!(opts.tenants > 0, "loadgen needs at least one tenant");
+    let trace = synth_trace(opts);
+    let mut client = Client::connect(&opts.socket)?;
+
+    let start = Instant::now();
+    let mut accepted = 0usize;
+    let mut rejected: Vec<(String, usize)> = Vec::new();
+    let mut squeezes = opts.squeezes.iter().peekable();
+    let mut squeezes_applied = 0usize;
+
+    for (i, a) in trace.iter().enumerate() {
+        // Pace against trace time when asked to.
+        if opts.time_scale > 0.0 {
+            let due = Duration::from_secs_f64(a.at_s / opts.time_scale);
+            let elapsed = start.elapsed();
+            if due > elapsed {
+                std::thread::sleep(due - elapsed);
+            }
+        }
+        let mut spec = vec![("steps", Json::num(opts.steps as f64))];
+        if a.priority > 0 {
+            spec.push(("priority", Json::num(a.priority as f64)));
+        }
+        let mut fields = vec![
+            ("spec", Json::obj(spec)),
+            ("tenant", Json::str(&a.tenant)),
+        ];
+        if !opts.real {
+            fields.push(("sim", Json::Bool(true)));
+            if opts.sim_us > 0 {
+                fields.push(("sim_us", Json::num(opts.sim_us as f64)));
+            }
+        }
+        let r = client.call("submit", fields)?;
+        if r.ok {
+            accepted += 1;
+        } else {
+            let code = r
+                .error
+                .map(|(c, _)| c)
+                .unwrap_or_else(|| "internal".to_string());
+            match rejected.iter_mut().find(|(c, _)| *c == code) {
+                Some((_, n)) => *n += 1,
+                None => rejected.push((code, 1)),
+            }
+        }
+        if let Some(&&(idx, bytes)) = squeezes.peek() {
+            if i >= idx {
+                squeezes.next();
+                let r = client.call(
+                    "set-budget",
+                    vec![("budget_bytes", Json::num(bytes as f64))],
+                )?;
+                anyhow::ensure!(
+                    r.ok,
+                    "squeeze at arrival {idx} rejected: {:?}",
+                    r.error
+                );
+                squeezes_applied += 1;
+            }
+        }
+    }
+
+    // Drain: poll status until nothing is queued, running or parked.
+    let status = loop {
+        let r = client.call("status", vec![])?;
+        anyhow::ensure!(r.ok, "status rejected: {:?}", r.error);
+        let jobs = r.data.get("jobs").cloned().unwrap_or(Json::Null);
+        let active = get_u64(&jobs, "queued")
+            + get_u64(&jobs, "running")
+            + get_u64(&jobs, "parked");
+        if active == 0 {
+            break r.data;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    let wall_secs = start.elapsed().as_secs_f64();
+
+    let jobs = status.get("jobs").cloned().unwrap_or(Json::Null);
+    let latency_s = status.get("latency_s").and_then(|l| {
+        l.as_obj().map(|_| {
+            (
+                get_u64(l, "count"),
+                l.get("mean").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                l.get("p50").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                l.get("p90").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                l.get("p99").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                l.get("max").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            )
+        })
+    });
+    let tenants = status
+        .get("tenants")
+        .and_then(|t| t.as_obj())
+        .map(|obj| {
+            obj.iter()
+                .map(|(name, t)| TenantService {
+                    tenant: name.clone(),
+                    weight: get_u64(t, "weight"),
+                    done: get_u64(t, "done"),
+                    steps: get_u64(t, "steps"),
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+
+    if opts.shutdown {
+        let r = client.call("shutdown", vec![])?;
+        anyhow::ensure!(r.ok, "shutdown rejected: {:?}", r.error);
+    }
+
+    let report = LoadgenReport {
+        arrivals: opts.arrivals,
+        accepted,
+        rejected,
+        wall_secs,
+        jobs_done: get_u64(&jobs, "done"),
+        jobs_failed: get_u64(&jobs, "failed"),
+        latency_s,
+        preempts: get_u64(&status, "preempts"),
+        resumes: get_u64(&status, "resumes"),
+        fleet_steps: get_u64(&status, "fleet_steps"),
+        squeezes_applied,
+        tenants,
+    };
+    std::fs::write(&opts.out, report.to_json().to_string()).map_err(|e| {
+        anyhow::anyhow!("write {}: {e}", opts.out.display())
+    })?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_in_the_seed() {
+        let opts = LoadgenOptions { arrivals: 500, ..Default::default() };
+        let a = synth_trace(&opts);
+        let b = synth_trace(&opts);
+        assert_eq!(a, b, "same seed, same trace, bit for bit");
+        let c = synth_trace(&LoadgenOptions { seed: 43, ..opts });
+        assert_ne!(a, c, "different seed, different trace");
+    }
+
+    #[test]
+    fn trace_arrivals_are_ordered_and_spread_over_tenants() {
+        let opts = LoadgenOptions {
+            arrivals: 2000,
+            tenants: 4,
+            ..Default::default()
+        };
+        let trace = synth_trace(&opts);
+        assert_eq!(trace.len(), 2000);
+        for w in trace.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s, "arrival times must ascend");
+        }
+        for t in 0..4 {
+            let name = format!("t{t}");
+            let n = trace.iter().filter(|a| a.tenant == name).count();
+            assert!(
+                n > 2000 / 4 / 2,
+                "tenant {name} got only {n} of 2000 arrivals"
+            );
+        }
+        let bumped = trace.iter().filter(|a| a.priority > 0).count();
+        assert!(
+            bumped > 100 && bumped < 400,
+            "~10% of arrivals get a priority bump, got {bumped}"
+        );
+    }
+
+    #[test]
+    fn bursts_compress_inter_arrival_times() {
+        let base = LoadgenOptions {
+            arrivals: 1000,
+            burst_every: 0,
+            diurnal_amp: 0.0,
+            ..Default::default()
+        };
+        let calm = synth_trace(&base);
+        let bursty = synth_trace(&LoadgenOptions {
+            burst_every: 100,
+            burst_len: 100, // every arrival is in a burst
+            burst_x: 10.0,
+            ..base
+        });
+        // Identical seed: same uniforms, so an always-on 10x burst
+        // divides the total span by ~10.
+        let span = |t: &[Arrival]| t.last().unwrap().at_s;
+        assert!(
+            span(&bursty) < span(&calm) / 5.0,
+            "bursts must compress the trace: calm {:.2}s bursty {:.2}s",
+            span(&calm),
+            span(&bursty)
+        );
+    }
+
+    #[test]
+    fn squeeze_list_parses_and_validates() {
+        let s = parse_squeezes("100:48,500:24").unwrap();
+        assert_eq!(s, vec![(100, 48 << 20), (500, 24 << 20)]);
+        for bad in ["", "100", "100:", ":48", "x:48", "100:0", "500:24,100:48"]
+        {
+            assert!(parse_squeezes(bad).is_err(), "must reject '{bad}'");
+        }
+    }
+
+    #[test]
+    fn fairness_ratio_of_proportional_service_is_one() {
+        let mk = |w: u64, steps: u64| TenantService {
+            tenant: format!("t{w}"),
+            weight: w,
+            done: 1,
+            steps,
+        };
+        let rep = LoadgenReport {
+            arrivals: 0,
+            accepted: 0,
+            rejected: Vec::new(),
+            wall_secs: 1.0,
+            jobs_done: 0,
+            jobs_failed: 0,
+            latency_s: None,
+            preempts: 0,
+            resumes: 0,
+            fleet_steps: 0,
+            squeezes_applied: 0,
+            tenants: vec![mk(1, 100), mk(2, 200), mk(4, 400)],
+        };
+        assert!((rep.fairness_ratio() - 1.0).abs() < 1e-9);
+        let skewed = LoadgenReport {
+            tenants: vec![mk(1, 100), mk(2, 600)],
+            ..rep
+        };
+        assert!((skewed.fairness_ratio() - 3.0).abs() < 1e-9);
+    }
+}

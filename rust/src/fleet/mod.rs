@@ -28,17 +28,32 @@
 //! admission charges each weight class ([`admission::WeightClass`]) once
 //! across all its holders, so a budget sized for two private-weight jobs
 //! overlaps many shared-weight ones.
+//!
+//! On top of the batch scheduler sits the daemon form: [`serve`] accepts
+//! jobs over a Unix socket for as long as it lives (JSONL protocol in
+//! [`protocol`], per-tenant quotas and weighted-fair dispatch, crash
+//! recovery from `--snapshot-dir`), and [`loadgen`] replays synthetic
+//! arrival traces against it to benchmark the serving path end to end.
+//! `docs/serving.md` is the operator-facing specification.
 
 pub mod admission;
 pub mod job;
+pub mod loadgen;
+pub mod protocol;
 pub mod scheduler;
+pub mod serve;
 
 pub use admission::{
     job_cost_bytes, job_weight_class, Admission, AdmissionStats, Permit,
     WeightClass,
 };
 pub use job::{grid, load_jobs, Job, JobSpec, MAX_PRIORITY};
+pub use loadgen::{LoadgenOptions, LoadgenReport};
 pub use scheduler::{
     parse_budget_schedule, BudgetChange, FleetOptions, FleetReport, JobOutcome,
     JobResult, MethodStats, Scheduler,
+};
+pub use serve::{
+    ServeOptions, ServeSummary, Server, EXIT_JOB_FAILURES, EXIT_OK,
+    EXIT_RUNTIME, EXIT_STARTUP,
 };

@@ -1,0 +1,506 @@
+//! The `mesp serve` wire protocol: versioned JSONL frames over a Unix
+//! socket.
+//!
+//! One request per line, one response per line, always in order. Every
+//! request carries the protocol version (`"v"`), a client-chosen
+//! correlation id (`"id"`, echoed back verbatim), and a `"verb"`; the
+//! remaining keys are verb-specific and ALLOWLISTED — an unknown key is
+//! a hard error, the same discipline as the CLI flag allowlists and the
+//! job-file keys. Responses are `{"v":1,"id":N,"ok":true,"data":{...}}`
+//! or `{"v":1,"id":N,"ok":false,"error":{"code":"...","message":"..."}}`.
+//!
+//! Parsing NEVER panics on any input (property-tested): truncated,
+//! garbage, oversized and version-skewed frames all map to a named
+//! [`code`] with a human message. The daemon replies to a malformed
+//! frame (rather than dropping the connection) so a client can correlate
+//! the failure — `id` is `null` in the reply only when the frame was too
+//! broken to recover it.
+//!
+//! The full operator-facing specification (every verb, field and error
+//! code, with worked examples) lives in `docs/serving.md` and must stay
+//! in sync with this module.
+
+use crate::util::json::Json;
+
+/// Protocol version. Bump on ANY incompatible frame change; the daemon
+/// rejects other versions with [`code::BAD_VERSION`] so an old client
+/// fails loudly instead of misbehaving quietly.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Upper bound on one frame (request line) in bytes. A frame past this
+/// is rejected with [`code::OVERSIZED_FRAME`] — a defense against a
+/// stuck client streaming an unterminated line at the daemon.
+pub const MAX_FRAME_BYTES: usize = 64 * 1024;
+
+/// Named protocol error codes. Stable strings: clients switch on these,
+/// tests assert on them, `docs/serving.md` documents each one.
+pub mod code {
+    /// The line is not valid JSON (or not a JSON object).
+    pub const BAD_JSON: &str = "bad-json";
+    /// `"v"` is missing or not [`super::PROTOCOL_VERSION`].
+    pub const BAD_VERSION: &str = "bad-version";
+    /// The request line exceeds [`super::MAX_FRAME_BYTES`].
+    pub const OVERSIZED_FRAME: &str = "oversized-frame";
+    /// A required field is absent.
+    pub const MISSING_FIELD: &str = "missing-field";
+    /// A field is present but has the wrong type/value, or is not in
+    /// the verb's allowlist.
+    pub const BAD_FIELD: &str = "bad-field";
+    /// `"verb"` names no known verb.
+    pub const UNKNOWN_VERB: &str = "unknown-verb";
+    /// `cancel`/`status` named a job id the daemon has never seen.
+    pub const UNKNOWN_JOB: &str = "unknown-job";
+    /// `submit`'s `"spec"` failed job-spec validation (unknown key, bad
+    /// value, unknown config, ...).
+    pub const BAD_SPEC: &str = "bad-spec";
+    /// The spec is valid but its solo footprint can never fit the
+    /// budget ceiling — admitting it would only ever fail.
+    pub const OVER_BUDGET: &str = "over-budget";
+    /// The spec's cost alone exceeds the submitting tenant's quota, so
+    /// the job could never be admitted for that tenant.
+    pub const QUOTA_EXCEEDED: &str = "quota-exceeded";
+    /// The daemon is draining (or shutting down) and accepts no new work.
+    pub const DRAINING: &str = "draining";
+    /// The daemon hit an unexpected internal error serving the request.
+    pub const INTERNAL: &str = "internal";
+}
+
+/// A protocol-level failure: a stable machine code plus a human message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtoError {
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl ProtoError {
+    pub fn new(code: &'static str, message: impl Into<String>) -> ProtoError {
+        ProtoError { code, message: message.into() }
+    }
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code, self.message)
+    }
+}
+
+/// The tenant a submit without an explicit `"tenant"` lands in.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// One parsed request verb with its validated fields.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Verb {
+    /// Submit one job. `spec` is the raw job object (validated against
+    /// the daemon's base config by `fleet::job::JobSpec::from_json` at
+    /// dispatch — the protocol layer only checks it IS an object).
+    Submit { spec: Json, tenant: String, sim: bool, sim_us: u64 },
+    /// Aggregate daemon status (`job: None`) or one job's status.
+    Status { job: Option<u64> },
+    /// Cooperatively cancel a job (queued: immediate; running: at the
+    /// next step boundary; parked: immediate, snapshot deleted).
+    Cancel { job: u64 },
+    /// Change the admission budget mid-run (the loadgen's squeeze lever).
+    /// `ceiling_bytes: None` keeps the refusal ceiling where it was, so
+    /// a squeeze parks jobs instead of permanently refusing them.
+    SetBudget { budget_bytes: u64, ceiling_bytes: Option<u64> },
+    /// Stop accepting submits; the daemon exits once all work is done.
+    Drain,
+    /// Stop now: running jobs park to snapshots, the daemon exits.
+    Shutdown,
+}
+
+/// A parsed, validated request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Client correlation id, echoed in the response.
+    pub id: u64,
+    pub verb: Verb,
+}
+
+fn missing(key: &str) -> ProtoError {
+    ProtoError::new(code::MISSING_FIELD, format!("missing field '{key}'"))
+}
+
+fn bad_field(key: &str, why: impl std::fmt::Display) -> ProtoError {
+    ProtoError::new(code::BAD_FIELD, format!("field '{key}': {why}"))
+}
+
+/// A field that must be a non-negative integer within f64's exact range
+/// (ids, byte counts): fractional, negative and huge values are errors,
+/// never silent truncations.
+fn as_u64(v: &Json, key: &str) -> Result<u64, ProtoError> {
+    let n = v
+        .as_f64()
+        .ok_or_else(|| bad_field(key, "must be a number"))?;
+    if !(n >= 0.0 && n.fract() == 0.0 && n <= (1u64 << 53) as f64) {
+        return Err(bad_field(
+            key,
+            format!("must be a non-negative integer <= 2^53, got {n}"),
+        ));
+    }
+    Ok(n as u64)
+}
+
+fn as_bool(v: &Json, key: &str) -> Result<bool, ProtoError> {
+    match v {
+        Json::Bool(b) => Ok(*b),
+        _ => Err(bad_field(key, "must be a boolean")),
+    }
+}
+
+/// Keys every request frame carries.
+const COMMON_KEYS: &[&str] = &["v", "id", "verb"];
+
+/// Per-verb extra-key allowlists (mirrors the CLI's per-subcommand flag
+/// allowlists; asserted against the parser by a test below).
+pub const SUBMIT_KEYS: &[&str] = &["spec", "tenant", "sim", "sim_us"];
+pub const STATUS_KEYS: &[&str] = &["job"];
+pub const CANCEL_KEYS: &[&str] = &["job"];
+pub const SET_BUDGET_KEYS: &[&str] = &["budget_bytes", "ceiling_bytes"];
+
+/// Every verb the protocol knows, in documentation order.
+pub const VERBS: &[&str] =
+    &["submit", "status", "cancel", "set-budget", "drain", "shutdown"];
+
+/// Parse and validate one request line. Returns a named [`ProtoError`]
+/// for every malformed input; never panics.
+pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
+    if line.len() > MAX_FRAME_BYTES {
+        return Err(ProtoError::new(
+            code::OVERSIZED_FRAME,
+            format!(
+                "frame is {} bytes, limit {MAX_FRAME_BYTES}",
+                line.len()
+            ),
+        ));
+    }
+    let j = Json::parse(line.trim())
+        .map_err(|e| ProtoError::new(code::BAD_JSON, format!("{e}")))?;
+    let obj = j.as_obj().ok_or_else(|| {
+        ProtoError::new(code::BAD_JSON, "frame must be a JSON object")
+    })?;
+    let v = as_u64(obj.get("v").ok_or_else(|| missing("v"))?, "v")?;
+    if v != PROTOCOL_VERSION {
+        return Err(ProtoError::new(
+            code::BAD_VERSION,
+            format!("protocol version {v}, daemon speaks {PROTOCOL_VERSION}"),
+        ));
+    }
+    let id = as_u64(obj.get("id").ok_or_else(|| missing("id"))?, "id")?;
+    let verb_name = obj
+        .get("verb")
+        .ok_or_else(|| missing("verb"))?
+        .as_str()
+        .ok_or_else(|| bad_field("verb", "must be a string"))?;
+    let extra: &[&str] = match verb_name {
+        "submit" => SUBMIT_KEYS,
+        "status" => STATUS_KEYS,
+        "cancel" => CANCEL_KEYS,
+        "set-budget" => SET_BUDGET_KEYS,
+        "drain" | "shutdown" => &[],
+        other => {
+            return Err(ProtoError::new(
+                code::UNKNOWN_VERB,
+                format!("unknown verb '{other}' (known: {})", VERBS.join(", ")),
+            ))
+        }
+    };
+    for k in obj.keys() {
+        if !COMMON_KEYS.contains(&k.as_str()) && !extra.contains(&k.as_str()) {
+            return Err(bad_field(
+                k,
+                format!(
+                    "not a '{verb_name}' field (known: {})",
+                    extra.join(", ")
+                ),
+            ));
+        }
+    }
+    let verb = match verb_name {
+        "submit" => {
+            let spec = obj.get("spec").ok_or_else(|| missing("spec"))?;
+            if spec.as_obj().is_none() {
+                return Err(bad_field("spec", "must be a JSON object"));
+            }
+            let tenant = match obj.get("tenant") {
+                None => DEFAULT_TENANT.to_string(),
+                Some(t) => {
+                    let t = t
+                        .as_str()
+                        .ok_or_else(|| bad_field("tenant", "must be a string"))?;
+                    if t.is_empty() {
+                        return Err(bad_field("tenant", "must be non-empty"));
+                    }
+                    t.to_string()
+                }
+            };
+            let sim = match obj.get("sim") {
+                None => false,
+                Some(b) => as_bool(b, "sim")?,
+            };
+            let sim_us = match obj.get("sim_us") {
+                None => 0,
+                Some(n) => as_u64(n, "sim_us")?,
+            };
+            Verb::Submit { spec: spec.clone(), tenant, sim, sim_us }
+        }
+        "status" => Verb::Status {
+            job: obj.get("job").map(|v| as_u64(v, "job")).transpose()?,
+        },
+        "cancel" => Verb::Cancel {
+            job: as_u64(obj.get("job").ok_or_else(|| missing("job"))?, "job")?,
+        },
+        "set-budget" => Verb::SetBudget {
+            budget_bytes: as_u64(
+                obj.get("budget_bytes")
+                    .ok_or_else(|| missing("budget_bytes"))?,
+                "budget_bytes",
+            )?,
+            ceiling_bytes: obj
+                .get("ceiling_bytes")
+                .map(|v| as_u64(v, "ceiling_bytes"))
+                .transpose()?,
+        },
+        "drain" => Verb::Drain,
+        "shutdown" => Verb::Shutdown,
+        _ => unreachable!("verb allowlist matched above"),
+    };
+    Ok(Request { id, verb })
+}
+
+/// Serialize a success response frame.
+pub fn ok_frame(id: u64, data: Json) -> String {
+    Json::obj(vec![
+        ("v", Json::num(PROTOCOL_VERSION as f64)),
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(true)),
+        ("data", data),
+    ])
+    .to_string()
+}
+
+/// Serialize an error response frame. `id: None` (the frame was too
+/// malformed to recover one) serializes as `"id": null`.
+pub fn err_frame(id: Option<u64>, e: &ProtoError) -> String {
+    Json::obj(vec![
+        ("v", Json::num(PROTOCOL_VERSION as f64)),
+        ("id", id.map_or(Json::Null, |i| Json::num(i as f64))),
+        ("ok", Json::Bool(false)),
+        (
+            "error",
+            Json::obj(vec![
+                ("code", Json::str(e.code)),
+                ("message", Json::str(&e.message)),
+            ]),
+        ),
+    ])
+    .to_string()
+}
+
+/// A response frame as the CLIENT sees it (loadgen, tests).
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: Option<u64>,
+    pub ok: bool,
+    /// Present iff `ok`.
+    pub data: Json,
+    /// `(code, message)`, present iff `!ok`.
+    pub error: Option<(String, String)>,
+}
+
+/// Parse a response line on the client side.
+pub fn parse_response(line: &str) -> anyhow::Result<Response> {
+    let j = Json::parse(line.trim())
+        .map_err(|e| anyhow::anyhow!("bad response frame: {e}"))?;
+    let v = j
+        .get("v")
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow::anyhow!("response missing 'v'"))?;
+    anyhow::ensure!(
+        v == PROTOCOL_VERSION as f64,
+        "response protocol version {v}, client speaks {PROTOCOL_VERSION}"
+    );
+    let id = match j.get("id") {
+        Some(Json::Null) | None => None,
+        Some(n) => Some(n.as_f64().ok_or_else(|| {
+            anyhow::anyhow!("response 'id' must be a number or null")
+        })? as u64),
+    };
+    let ok = match j.get("ok") {
+        Some(Json::Bool(b)) => *b,
+        _ => anyhow::bail!("response missing boolean 'ok'"),
+    };
+    let error = if ok {
+        None
+    } else {
+        let e = j
+            .get("error")
+            .ok_or_else(|| anyhow::anyhow!("error response missing 'error'"))?;
+        Some((
+            e.get("code")
+                .and_then(|c| c.as_str())
+                .unwrap_or("internal")
+                .to_string(),
+            e.get("message")
+                .and_then(|m| m.as_str())
+                .unwrap_or("")
+                .to_string(),
+        ))
+    };
+    Ok(Response {
+        id,
+        ok,
+        data: j.get("data").cloned().unwrap_or(Json::Null),
+        error,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(s: &str) -> Result<Request, ProtoError> {
+        parse_request(s)
+    }
+
+    #[test]
+    fn submit_roundtrip_with_defaults() {
+        let r = req(r#"{"v":1,"id":7,"verb":"submit","spec":{"steps":3}}"#)
+            .unwrap();
+        assert_eq!(r.id, 7);
+        match r.verb {
+            Verb::Submit { spec, tenant, sim, sim_us } => {
+                assert_eq!(spec.get("steps").unwrap().as_usize(), Some(3));
+                assert_eq!(tenant, DEFAULT_TENANT);
+                assert!(!sim);
+                assert_eq!(sim_us, 0);
+            }
+            v => panic!("wrong verb: {v:?}"),
+        }
+    }
+
+    #[test]
+    fn submit_with_tenant_and_sim() {
+        let r = req(
+            r#"{"v":1,"id":1,"verb":"submit","spec":{},"tenant":"alice","sim":true,"sim_us":50}"#,
+        )
+        .unwrap();
+        match r.verb {
+            Verb::Submit { tenant, sim, sim_us, .. } => {
+                assert_eq!(tenant, "alice");
+                assert!(sim);
+                assert_eq!(sim_us, 50);
+            }
+            v => panic!("wrong verb: {v:?}"),
+        }
+    }
+
+    #[test]
+    fn every_verb_parses() {
+        // VERBS is the advertised list; each must parse with minimal
+        // valid fields (the docs' spec table mirrors this).
+        for (verb, extra) in [
+            ("submit", r#","spec":{}"#),
+            ("status", ""),
+            ("cancel", r#","job":0"#),
+            ("set-budget", r#","budget_bytes":1048576"#),
+            ("drain", ""),
+            ("shutdown", ""),
+        ] {
+            assert!(VERBS.contains(&verb), "test table missing {verb}");
+            let line = format!(r#"{{"v":1,"id":0,"verb":"{verb}"{extra}}}"#);
+            assert!(req(&line).is_ok(), "advertised verb '{verb}' rejected");
+        }
+        assert_eq!(VERBS.len(), 6, "update the table when adding verbs");
+    }
+
+    #[test]
+    fn garbage_maps_to_bad_json() {
+        for bad in ["", "not json", "{", "[1,2]", "42", "\"str\"", "{}x"] {
+            let e = req(bad).unwrap_err();
+            assert_eq!(e.code, code::BAD_JSON, "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn version_skew_rejected() {
+        let e = req(r#"{"v":2,"id":0,"verb":"drain"}"#).unwrap_err();
+        assert_eq!(e.code, code::BAD_VERSION);
+        let e = req(r#"{"id":0,"verb":"drain"}"#).unwrap_err();
+        assert_eq!(e.code, code::MISSING_FIELD);
+        let e = req(r#"{"v":"one","id":0,"verb":"drain"}"#).unwrap_err();
+        assert_eq!(e.code, code::BAD_FIELD);
+    }
+
+    #[test]
+    fn missing_and_bad_fields_are_named() {
+        let e = req(r#"{"v":1,"verb":"drain"}"#).unwrap_err();
+        assert_eq!(e.code, code::MISSING_FIELD);
+        assert!(e.message.contains("'id'"), "{e}");
+        let e = req(r#"{"v":1,"id":0,"verb":"cancel"}"#).unwrap_err();
+        assert_eq!(e.code, code::MISSING_FIELD);
+        assert!(e.message.contains("'job'"), "{e}");
+        let e = req(r#"{"v":1,"id":0,"verb":"submit"}"#).unwrap_err();
+        assert_eq!(e.code, code::MISSING_FIELD);
+        let e =
+            req(r#"{"v":1,"id":0,"verb":"submit","spec":[]}"#).unwrap_err();
+        assert_eq!(e.code, code::BAD_FIELD);
+        let e = req(r#"{"v":1,"id":0,"verb":"cancel","job":-1}"#).unwrap_err();
+        assert_eq!(e.code, code::BAD_FIELD);
+        let e =
+            req(r#"{"v":1,"id":0,"verb":"cancel","job":1.5}"#).unwrap_err();
+        assert_eq!(e.code, code::BAD_FIELD);
+    }
+
+    #[test]
+    fn unknown_verb_and_unknown_key_rejected() {
+        let e = req(r#"{"v":1,"id":0,"verb":"frobnicate"}"#).unwrap_err();
+        assert_eq!(e.code, code::UNKNOWN_VERB);
+        assert!(e.message.contains("submit"), "lists known verbs: {e}");
+        let e = req(r#"{"v":1,"id":0,"verb":"drain","spec":{}}"#).unwrap_err();
+        assert_eq!(e.code, code::BAD_FIELD);
+        let e = req(r#"{"v":1,"id":0,"verb":"status","jov":3}"#).unwrap_err();
+        assert_eq!(e.code, code::BAD_FIELD);
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let line = format!(
+            r#"{{"v":1,"id":0,"verb":"submit","spec":{{"config":"{}"}}}}"#,
+            "x".repeat(MAX_FRAME_BYTES)
+        );
+        let e = req(&line).unwrap_err();
+        assert_eq!(e.code, code::OVERSIZED_FRAME);
+    }
+
+    #[test]
+    fn response_frames_roundtrip() {
+        let f = ok_frame(9, Json::obj(vec![("job", Json::num(3.0))]));
+        let r = parse_response(&f).unwrap();
+        assert_eq!(r.id, Some(9));
+        assert!(r.ok);
+        assert_eq!(r.data.get("job").unwrap().as_usize(), Some(3));
+
+        let f = err_frame(
+            None,
+            &ProtoError::new(code::BAD_JSON, "line 1 is not JSON"),
+        );
+        let r = parse_response(&f).unwrap();
+        assert_eq!(r.id, None);
+        assert!(!r.ok);
+        let (c, m) = r.error.unwrap();
+        assert_eq!(c, code::BAD_JSON);
+        assert!(m.contains("not JSON"));
+    }
+
+    #[test]
+    fn truncated_frames_error_not_panic() {
+        let full = r#"{"v":1,"id":7,"verb":"submit","spec":{"steps":3},"tenant":"aé"}"#;
+        for (n, _) in full.char_indices() {
+            let cut = &full[..n];
+            if let Err(e) = req(cut) {
+                assert!(!e.code.is_empty());
+            }
+        }
+    }
+}

@@ -356,21 +356,35 @@ struct QueueState {
     total: usize,
 }
 
-/// Fleet-wide step counter driving the budget schedule.
-struct Progress {
+/// Fleet-wide step counter driving the budget schedule. Shared with the
+/// serve daemon (`fleet::serve`), whose sim and real steps both bump it.
+pub(crate) struct Progress {
     steps: AtomicU64,
     schedule: Vec<BudgetChange>,
     next: Mutex<usize>,
 }
 
 impl Progress {
+    pub(crate) fn new(schedule: Vec<BudgetChange>) -> Progress {
+        Progress {
+            steps: AtomicU64::new(0),
+            schedule,
+            next: Mutex::new(0),
+        }
+    }
+
+    /// Total optimization steps completed fleet-wide so far.
+    pub(crate) fn total(&self) -> u64 {
+        self.steps.load(Ordering::SeqCst)
+    }
+
     /// Record one completed optimization step; apply every schedule
     /// point the new total has crossed. Each application also lowers
     /// the refusal ceiling to the max of the new budget and every
     /// still-pending point, so a transient dip parks jobs (they wait
     /// for the growth the schedule promises) while a permanent shrink
     /// below a job's cost eventually refuses it honestly.
-    fn bump(&self, admission: &Admission) {
+    pub(crate) fn bump(&self, admission: &Admission) {
         let total = self.steps.fetch_add(1, Ordering::SeqCst) + 1;
         if self.schedule.is_empty() {
             return;
@@ -447,11 +461,7 @@ impl Scheduler {
         if preempt_enabled {
             admission.enable_preemption();
         }
-        let progress = Progress {
-            steps: AtomicU64::new(0),
-            schedule: opts.budget_schedule.clone(),
-            next: Mutex::new(0),
-        };
+        let progress = Progress::new(opts.budget_schedule.clone());
         let aggregate = MemoryTracker::new();
         // One weight cache per fleet run: every session of this run
         // interns its frozen base here, so same-base jobs share one

@@ -1,0 +1,1764 @@
+//! `mesp serve`: a long-lived fleet daemon behind a Unix socket.
+//!
+//! Where `mesp fleet` runs a fixed job list to completion, `serve`
+//! accepts jobs over the [`super::protocol`] JSONL protocol for as long
+//! as it lives, schedules them through the SAME admission/preemption
+//! engine ([`super::admission`]), and survives being SIGKILLed: every
+//! accepted job is journaled to a JSON sidecar in `--snapshot-dir`, and
+//! running jobs checkpoint to bitwise-resumable snapshots
+//! ([`crate::persist`]), so a restarted daemon rescans the directory and
+//! re-admits every interrupted job exactly where it stopped.
+//!
+//! # Scheduling: weighted-fair queuing over tenants
+//!
+//! Every submit names a tenant (default [`super::protocol::DEFAULT_TENANT`]).
+//! Dispatch is stride scheduling: each tenant holds a FIFO queue and a
+//! `pass` counter; a free worker serves the tenant with the lowest pass,
+//! which then advances by `STRIDE / weight`. A tenant with weight 2 gets
+//! twice the dispatch share of a weight-1 tenant under contention, and an
+//! idle tenant's unused share flows to the others. Below dispatch, the
+//! admission gate enforces the byte budget and optional per-tenant
+//! quotas ([`Admission::set_tenant_quota`]) — WFQ decides *order*,
+//! admission decides *fit*.
+//!
+//! # Crash recovery contract
+//!
+//! - On submit, a sidecar `job-<id>.json` (tenant + full resolved spec,
+//!   seeds encoded exactly) is written atomically BEFORE the ack frame.
+//! - Running real jobs checkpoint every `--checkpoint-every` steps and
+//!   park to a snapshot on preemption or shutdown.
+//! - On startup, the daemon acquires `serve.lock`
+//!   ([`crate::persist::LockFile`]), rescans the dir, and re-admits each
+//!   sidecar-journaled job — resuming from its newest `job-<id>-step-N.snap`
+//!   when one exists, from scratch otherwise. Either way the final
+//!   adapter bits match an uninterrupted run (the persist contract).
+//! - Terminal jobs remove their sidecar; completed real jobs leave a
+//!   `job-<id>-final.snap` so tests (and operators) can compare runs
+//!   bitwise.
+//!
+//! # Exit codes
+//!
+//! The `mesp serve` process distinguishes how it died (CI scripts branch
+//! on this): [`EXIT_OK`] clean drain/shutdown, [`EXIT_RUNTIME`] runtime
+//! failure, [`EXIT_JOB_FAILURES`] clean exit but some jobs failed,
+//! [`EXIT_STARTUP`] could not start (bad socket, live lock holder,
+//! corrupt sidecar). `mesp fleet` uses the same scheme.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::{
+    ActCompress, Method, OptimizerKind, QuantMode, TrainConfig,
+};
+use crate::coordinator::TrainSession;
+use crate::memory::MemoryTracker;
+use crate::model::WeightCache;
+use crate::obs::MetricsRegistry;
+use crate::persist::LockFile;
+use crate::util::json::Json;
+use crate::util::rng::{derive, stream};
+use crate::util::stats::fmt_mb;
+
+use super::admission::{job_cost_bytes, job_weight_class, Admission, Permit};
+use super::job::JobSpec;
+use super::protocol::{self, code, ProtoError, Verb};
+use super::scheduler::{kernel_thread_budget, BudgetChange, Progress};
+
+/// Clean exit: drained or shut down with every completed job healthy.
+pub const EXIT_OK: i32 = 0;
+/// The daemon (or fleet) itself failed at runtime.
+pub const EXIT_RUNTIME: i32 = 1;
+/// Clean exit, but at least one job FAILED (vs cancelled/parked).
+pub const EXIT_JOB_FAILURES: i32 = 2;
+/// Could not start: bad socket path, live lock holder, corrupt sidecar…
+pub const EXIT_STARTUP: i32 = 3;
+
+/// Stride-scheduling quantum: a tenant's pass advances by
+/// `STRIDE / weight` per dispatch, so relative dispatch rates follow
+/// relative weights exactly.
+const STRIDE: u64 = 1 << 20;
+
+/// How long the accept loop sleeps when no connection is pending.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+/// Everything `mesp serve` is configured with.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Unix socket path the daemon listens on.
+    pub socket: PathBuf,
+    /// Sidecars, checkpoints and the liveness lock live here; rescanned
+    /// on startup for crash recovery.
+    pub snapshot_dir: PathBuf,
+    /// Shared admission budget in bytes.
+    pub budget_bytes: u64,
+    /// Worker threads running admitted jobs.
+    pub workers: usize,
+    /// Checkpoint running REAL jobs every N steps (0 = only on
+    /// preemption/shutdown). Smaller = less lost work on SIGKILL.
+    pub checkpoint_every: usize,
+    /// Budget changes keyed on total fleet steps (same engine as
+    /// `mesp fleet --budget-schedule`).
+    pub budget_schedule: Vec<BudgetChange>,
+    /// Per-tenant admission quotas in bytes (tenant, quota).
+    pub quotas: Vec<(String, u64)>,
+    /// Per-tenant WFQ weights (tenant, weight); unlisted tenants get 1.
+    pub tenant_weights: Vec<(String, u64)>,
+    /// Export the metrics-registry JSONL here on exit.
+    pub metrics_out: Option<PathBuf>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            socket: PathBuf::from("mesp.sock"),
+            snapshot_dir: PathBuf::from("serve-state"),
+            budget_bytes: 1 << 30,
+            workers: 1,
+            checkpoint_every: 0,
+            budget_schedule: Vec::new(),
+            quotas: Vec::new(),
+            tenant_weights: Vec::new(),
+            metrics_out: None,
+        }
+    }
+}
+
+/// Parse `tenant:MB,tenant:MB` (quotas) or `tenant:weight` lists.
+/// `mb` scales values by 2^20 (the CLI speaks MB, quotas are bytes).
+pub fn parse_tenant_list(
+    s: &str,
+    what: &str,
+    mb: bool,
+) -> anyhow::Result<Vec<(String, u64)>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        let (tenant, val) = p.split_once(':').ok_or_else(|| {
+            anyhow::anyhow!("{what} entry '{p}' is not tenant:value")
+        })?;
+        let tenant = tenant.trim();
+        anyhow::ensure!(!tenant.is_empty(), "{what} entry '{p}' has no tenant");
+        let v: u64 = val.trim().parse().map_err(|_| {
+            anyhow::anyhow!("{what} value '{val}' is not an integer")
+        })?;
+        anyhow::ensure!(v > 0, "{what} value for '{tenant}' must be positive");
+        let v = if mb {
+            v.checked_mul(1 << 20)
+                .ok_or_else(|| anyhow::anyhow!("{what} {v} MB overflows"))?
+        } else {
+            v
+        };
+        out.push((tenant.to_string(), v));
+    }
+    anyhow::ensure!(!out.is_empty(), "empty {what} list '{s}'");
+    Ok(out)
+}
+
+/// Lifecycle of one daemon job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum JobState {
+    Queued,
+    Running,
+    Parked,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Parked => "parked",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Incrementally-maintained state tallies — `status` must not scan the
+/// whole job table per poll (the loadgen polls it thousands of times).
+#[derive(Debug, Default, Clone, Copy)]
+struct Counts {
+    queued: usize,
+    running: usize,
+    parked: usize,
+    done: usize,
+    failed: usize,
+    cancelled: usize,
+}
+
+impl Counts {
+    fn slot(&mut self, s: JobState) -> &mut usize {
+        match s {
+            JobState::Queued => &mut self.queued,
+            JobState::Running => &mut self.running,
+            JobState::Parked => &mut self.parked,
+            JobState::Done => &mut self.done,
+            JobState::Failed => &mut self.failed,
+            JobState::Cancelled => &mut self.cancelled,
+        }
+    }
+
+    /// Jobs the daemon still owes work to.
+    fn active(&self) -> usize {
+        self.queued + self.running + self.parked
+    }
+}
+
+/// One tenant's dispatch queue, stride state and service tallies.
+#[derive(Debug)]
+struct Tenant {
+    queue: VecDeque<u64>,
+    /// Stride pass: lowest pass is served next.
+    pass: u64,
+    weight: u64,
+    submitted: u64,
+    done: u64,
+    failed: u64,
+    cancelled: u64,
+    /// Optimization steps completed for this tenant (service measure —
+    /// the loadgen's fairness ratio is built on this).
+    steps: u64,
+}
+
+/// One job the daemon has accepted.
+#[derive(Debug)]
+struct JobRecord {
+    tenant: String,
+    spec: JobSpec,
+    sim: bool,
+    sim_us: u64,
+    state: JobState,
+    submitted: Instant,
+    /// Virtual steps completed so far (sim jobs park in memory).
+    sim_steps_done: usize,
+    /// Newest parked snapshot (real jobs).
+    parked_snap: Option<PathBuf>,
+    preempts: u64,
+    resumes: u64,
+    error: Option<String>,
+    /// Cooperative-cancel flag, polled at step boundaries.
+    cancel: Arc<AtomicBool>,
+    /// Submit-to-done seconds, set at completion.
+    latency_s: Option<f64>,
+    /// Re-admitted by a crash-recovery rescan (not a live submit).
+    recovered: bool,
+}
+
+/// Everything behind the daemon's state mutex.
+struct DaemonState {
+    jobs: BTreeMap<u64, JobRecord>,
+    tenants: BTreeMap<String, Tenant>,
+    counts: Counts,
+    next_id: u64,
+    draining: bool,
+}
+
+impl DaemonState {
+    fn tenant_entry(&mut self, name: &str, weight: u64) -> &mut Tenant {
+        // A newcomer starts at the minimum live pass so it neither jumps
+        // the whole queue nor waits out everyone's accumulated strides.
+        let floor =
+            self.tenants.values().map(|t| t.pass).min().unwrap_or(0);
+        self.tenants.entry(name.to_string()).or_insert_with(|| Tenant {
+            queue: VecDeque::new(),
+            pass: floor,
+            weight,
+            submitted: 0,
+            done: 0,
+            failed: 0,
+            cancelled: 0,
+            steps: 0,
+        })
+    }
+}
+
+/// Serve the tenant with the lowest pass (ties broken by name for
+/// determinism); pop its head job and mark it Running.
+fn pick_wfq(st: &mut DaemonState) -> Option<u64> {
+    let name = st
+        .tenants
+        .iter()
+        .filter(|(_, t)| !t.queue.is_empty())
+        .min_by(|a, b| a.1.pass.cmp(&b.1.pass).then(a.0.cmp(b.0)))
+        .map(|(n, _)| n.clone())?;
+    let t = st.tenants.get_mut(&name).expect("tenant just observed");
+    let id = t.queue.pop_front().expect("queue non-empty by filter");
+    t.pass += STRIDE / t.weight.max(1);
+    let rec = st.jobs.get_mut(&id).expect("queued job has a record");
+    let from = rec.state;
+    rec.state = JobState::Running;
+    *st.counts.slot(from) -= 1;
+    st.counts.running += 1;
+    Some(id)
+}
+
+// ---------------------------------------------------------------------
+// Job sidecars: the journal half of the crash-recovery contract.
+// Seeds are encoded as DECIMAL STRINGS, not JSON numbers — derived
+// per-job seeds use the full u64 range and must survive the round trip
+// bit-exactly (JSON numbers go through f64).
+// ---------------------------------------------------------------------
+
+fn optimizer_name(o: OptimizerKind) -> &'static str {
+    match o {
+        OptimizerKind::Sgd => "sgd",
+        OptimizerKind::Momentum { .. } => "momentum",
+        OptimizerKind::Adam { .. } => "adam",
+    }
+}
+
+fn sidecar_json(
+    id: u64,
+    tenant: &str,
+    sim: bool,
+    sim_us: u64,
+    spec: &JobSpec,
+) -> Json {
+    let spec_obj = Json::obj(vec![
+        ("config", Json::str(&spec.config)),
+        ("method", Json::str(spec.method.name())),
+        ("steps", Json::num(spec.steps as f64)),
+        ("seed", Json::str(spec.seed.to_string())),
+        ("lr", Json::Num(spec.lr as f64)),
+        ("optimizer", Json::str(optimizer_name(spec.optimizer))),
+        ("quant", Json::str(spec.quant.name())),
+        ("loss_chunk", Json::num(spec.loss_chunk as f64)),
+        ("act_compress", Json::str(spec.act_compress.name())),
+        (
+            "model_seed",
+            spec.model_seed
+                .map_or(Json::Null, |s| Json::str(s.to_string())),
+        ),
+        ("priority", Json::num(spec.priority as f64)),
+    ]);
+    Json::obj(vec![
+        ("v", Json::num(1.0)),
+        ("id", Json::num(id as f64)),
+        ("tenant", Json::str(tenant)),
+        ("sim", Json::Bool(sim)),
+        ("sim_us", Json::num(sim_us as f64)),
+        ("spec", spec_obj),
+    ])
+}
+
+fn seed_field(j: &Json, key: &str) -> anyhow::Result<u64> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("sidecar spec missing '{key}'"))?
+        .parse()
+        .map_err(|_| anyhow::anyhow!("sidecar '{key}' is not a u64"))
+}
+
+/// A job reconstructed from its sidecar during the startup rescan.
+struct RecoveredJob {
+    id: u64,
+    tenant: String,
+    sim: bool,
+    sim_us: u64,
+    spec: JobSpec,
+    snap: Option<PathBuf>,
+}
+
+fn sidecar_parse(j: &Json) -> anyhow::Result<RecoveredJob> {
+    let ver = j.get("v").and_then(|v| v.as_usize()).unwrap_or(0);
+    anyhow::ensure!(ver == 1, "sidecar version {ver}, expected 1");
+    let id = j
+        .get("id")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow::anyhow!("sidecar missing 'id'"))?
+        as u64;
+    let tenant = j
+        .get("tenant")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("sidecar missing 'tenant'"))?
+        .to_string();
+    let sim = matches!(j.get("sim"), Some(Json::Bool(true)));
+    let sim_us =
+        j.get("sim_us").and_then(|v| v.as_usize()).unwrap_or(0) as u64;
+    let s = j
+        .get("spec")
+        .ok_or_else(|| anyhow::anyhow!("sidecar missing 'spec'"))?;
+    let field = |key: &str| -> anyhow::Result<&str> {
+        s.get(key)
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("sidecar spec missing '{key}'"))
+    };
+    let num = |key: &str| -> anyhow::Result<usize> {
+        s.get(key)
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("sidecar spec missing '{key}'"))
+    };
+    let lr = s
+        .get("lr")
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow::anyhow!("sidecar spec missing 'lr'"))?;
+    let model_seed = match s.get("model_seed") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_str()
+                .ok_or_else(|| {
+                    anyhow::anyhow!("sidecar 'model_seed' is not a string")
+                })?
+                .parse()
+                .map_err(|_| {
+                    anyhow::anyhow!("sidecar 'model_seed' is not a u64")
+                })?,
+        ),
+    };
+    let spec = JobSpec {
+        config: field("config")?.to_string(),
+        method: Method::parse(field("method")?)?,
+        steps: num("steps")?,
+        seed: seed_field(s, "seed")?,
+        lr: lr as f32,
+        optimizer: OptimizerKind::parse(field("optimizer")?)?,
+        quant: QuantMode::parse(field("quant")?)?,
+        loss_chunk: num("loss_chunk")?,
+        act_compress: ActCompress::parse(field("act_compress")?)?,
+        model_seed,
+        priority: num("priority")? as u8,
+    };
+    Ok(RecoveredJob { id, tenant, sim, sim_us, spec, snap: None })
+}
+
+/// Scan `dir` for job sidecars and their newest step snapshots. A
+/// corrupt sidecar is a STARTUP error (named file) — sidecars are
+/// written atomically, so corruption means something other than a crash
+/// touched the dir.
+fn scan_recovery(dir: &Path) -> anyhow::Result<Vec<RecoveredJob>> {
+    let mut out: Vec<RecoveredJob> = Vec::new();
+    let mut snaps: HashMap<u64, (usize, PathBuf)> = HashMap::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(out), // fresh dir: nothing to recover
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        let Some(rest) = name.strip_prefix("job-") else { continue };
+        if let Some(ids) = rest.strip_suffix(".json") {
+            if ids.parse::<u64>().is_err() {
+                continue; // tmp files and friends
+            }
+            let text = std::fs::read_to_string(&path).map_err(|e| {
+                anyhow::anyhow!("read job sidecar {}: {e}", path.display())
+            })?;
+            let j = Json::parse(&text).map_err(|e| {
+                anyhow::anyhow!("corrupt job sidecar {}: {e}", path.display())
+            })?;
+            out.push(sidecar_parse(&j).map_err(|e| {
+                anyhow::anyhow!("corrupt job sidecar {}: {e}", path.display())
+            })?);
+        } else if let Some(stem) = rest.strip_suffix(".snap") {
+            // job-<id>-step-<n>.snap — keep the newest per job.
+            let Some((ids, step)) = stem.split_once("-step-") else {
+                continue;
+            };
+            let (Ok(id), Ok(step)) =
+                (ids.parse::<u64>(), step.parse::<usize>())
+            else {
+                continue;
+            };
+            match snaps.get(&id) {
+                Some((best, _)) if *best >= step => {}
+                _ => {
+                    snaps.insert(id, (step, path.clone()));
+                }
+            }
+        }
+    }
+    for r in &mut out {
+        r.snap = snaps.remove(&r.id).map(|(_, p)| p);
+    }
+    out.sort_by_key(|r| r.id);
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// The daemon proper.
+// ---------------------------------------------------------------------
+
+/// Shared daemon core: verb dispatch mutates the state table, workers
+/// drain it through the admission gate.
+struct Daemon {
+    st: Mutex<DaemonState>,
+    cv: Condvar,
+    /// Set once on shutdown (verb, drain completion, or fatal accept
+    /// error); workers and step loops poll it.
+    stop: AtomicBool,
+    admission: Admission,
+    registry: MetricsRegistry,
+    aggregate: MemoryTracker,
+    weight_cache: WeightCache,
+    progress: Progress,
+    base: TrainConfig,
+    opts: ServeOptions,
+    quotas: HashMap<String, u64>,
+    weights: HashMap<String, u64>,
+    /// Root of the per-job derived seed streams (same discipline as
+    /// `fleet::job::load_jobs`).
+    job_seed: u64,
+    started: Instant,
+    recovered: u64,
+}
+
+impl Daemon {
+    fn weight_of(&self, tenant: &str) -> u64 {
+        self.weights.get(tenant).copied().unwrap_or(1)
+    }
+
+    fn sidecar_path(&self, id: u64) -> PathBuf {
+        self.opts.snapshot_dir.join(format!("job-{id}.json"))
+    }
+
+    fn snap_path(&self, id: u64, step: usize) -> PathBuf {
+        self.opts.snapshot_dir.join(format!("job-{id}-step-{step}.snap"))
+    }
+
+    fn final_path(&self, id: u64) -> PathBuf {
+        self.opts.snapshot_dir.join(format!("job-{id}-final.snap"))
+    }
+
+    /// Atomically persist one job's sidecar (tmp + rename): a SIGKILL
+    /// mid-write must never leave a half sidecar for the next rescan.
+    fn write_sidecar(
+        &self,
+        id: u64,
+        tenant: &str,
+        sim: bool,
+        sim_us: u64,
+        spec: &JobSpec,
+    ) -> anyhow::Result<()> {
+        let path = self.sidecar_path(id);
+        let tmp = path.with_extension("json.tmp");
+        let text = sidecar_json(id, tenant, sim, sim_us, spec).to_string();
+        std::fs::write(&tmp, text).map_err(|e| {
+            anyhow::anyhow!("write sidecar {}: {e}", tmp.display())
+        })?;
+        std::fs::rename(&tmp, &path).map_err(|e| {
+            anyhow::anyhow!("persist sidecar {}: {e}", path.display())
+        })?;
+        Ok(())
+    }
+
+    /// Remove a terminal job's on-disk footprint. `keep_final` leaves
+    /// `job-<id>-final.snap` behind (completed real jobs — the bitwise
+    /// comparison artifact).
+    fn cleanup_files(&self, id: u64, keep_final: bool) {
+        let _ = std::fs::remove_file(self.sidecar_path(id));
+        let prefix = format!("job-{id}-step-");
+        if let Ok(entries) = std::fs::read_dir(&self.opts.snapshot_dir) {
+            for entry in entries.flatten() {
+                let p = entry.path();
+                if let Some(name) = p.file_name().and_then(|n| n.to_str()) {
+                    if name.starts_with(&prefix) && name.ends_with(".snap") {
+                        let _ = std::fs::remove_file(&p);
+                    }
+                }
+            }
+        }
+        if !keep_final {
+            let _ = std::fs::remove_file(self.final_path(id));
+        }
+    }
+
+    /// Move a job to a terminal state and settle every ledger: counts,
+    /// tenant service tallies, latency histogram, lifecycle counters,
+    /// and the on-disk footprint.
+    fn finish(&self, id: u64, to: JobState, error: Option<String>) {
+        debug_assert!(matches!(
+            to,
+            JobState::Done | JobState::Failed | JobState::Cancelled
+        ));
+        let steps;
+        {
+            let mut st = self.st.lock().unwrap();
+            let rec = st.jobs.get_mut(&id).expect("finishing a known job");
+            let from = rec.state;
+            rec.state = to;
+            rec.error = error;
+            steps = rec.spec.steps as u64;
+            let latency = rec.submitted.elapsed().as_secs_f64();
+            if to == JobState::Done {
+                rec.latency_s = Some(latency);
+            }
+            let tenant = rec.tenant.clone();
+            *st.counts.slot(from) -= 1;
+            *st.counts.slot(to) += 1;
+            let w = self.weight_of(&tenant);
+            let t = st.tenant_entry(&tenant, w);
+            match to {
+                JobState::Done => {
+                    t.done += 1;
+                    t.steps += steps;
+                }
+                JobState::Failed => t.failed += 1,
+                JobState::Cancelled => t.cancelled += 1,
+                _ => unreachable!(),
+            }
+            if to == JobState::Done {
+                self.registry.observe("serve/latency_s", latency);
+            }
+        }
+        let counter = match to {
+            JobState::Done => "serve/done",
+            JobState::Failed => "serve/failed",
+            JobState::Cancelled => "serve/cancelled",
+            _ => unreachable!(),
+        };
+        self.registry.counter_add(counter, 1);
+        self.cleanup_files(id, to == JobState::Done);
+        self.cv.notify_all();
+    }
+
+    /// Park a job back into its tenant queue (preemption, or shutdown
+    /// with work left). `snap` is the fresh checkpoint for real jobs;
+    /// sim jobs park their virtual step count in memory instead.
+    fn park(&self, id: u64, snap: Option<PathBuf>, preempted: bool) {
+        {
+            let mut st = self.st.lock().unwrap();
+            let rec = st.jobs.get_mut(&id).expect("parking a known job");
+            let from = rec.state;
+            rec.state = JobState::Parked;
+            if snap.is_some() {
+                rec.parked_snap = snap;
+            }
+            if preempted {
+                rec.preempts += 1;
+            }
+            let tenant = rec.tenant.clone();
+            *st.counts.slot(from) -= 1;
+            st.counts.parked += 1;
+            let w = self.weight_of(&tenant);
+            st.tenant_entry(&tenant, w).queue.push_back(id);
+        }
+        if preempted {
+            self.registry.counter_add("fleet/preempts", 1);
+        }
+        self.cv.notify_all();
+    }
+
+    // -----------------------------------------------------------------
+    // Worker side.
+    // -----------------------------------------------------------------
+
+    fn worker_loop(&self, workers: usize) {
+        loop {
+            let id = {
+                let mut st = self.st.lock().unwrap();
+                loop {
+                    if self.stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    if let Some(id) = pick_wfq(&mut st) {
+                        break id;
+                    }
+                    st = self.cv.wait(st).unwrap();
+                }
+            };
+            self.run_one(id, workers);
+        }
+    }
+
+    /// Cost → admit (tenant-aware, blocking) → run to completion, a
+    /// park, a cancel, or a failure.
+    fn run_one(&self, id: u64, workers: usize) {
+        let (spec, tenant, sim, sim_us, cancel, parked_snap, sim_done) = {
+            let st = self.st.lock().unwrap();
+            let r = &st.jobs[&id];
+            (
+                r.spec.clone(),
+                r.tenant.clone(),
+                r.sim,
+                r.sim_us,
+                r.cancel.clone(),
+                r.parked_snap.clone(),
+                r.sim_steps_done,
+            )
+        };
+        if cancel.load(Ordering::SeqCst) {
+            self.finish(id, JobState::Cancelled, None);
+            return;
+        }
+        let cost = match job_cost_bytes(&spec) {
+            Ok(c) => c,
+            Err(e) => {
+                self.finish(
+                    id,
+                    JobState::Failed,
+                    Some(format!("costing failed: {e:#}")),
+                );
+                return;
+            }
+        };
+        let wclass = match job_weight_class(&spec) {
+            Ok(w) => w,
+            Err(e) => {
+                self.finish(
+                    id,
+                    JobState::Failed,
+                    Some(format!("costing failed: {e:#}")),
+                );
+                return;
+            }
+        };
+        let queued = Instant::now();
+        let permit = match self.admission.admit_job_tenant(
+            spec.method,
+            cost,
+            spec.priority,
+            None,
+            Some(wclass),
+            Some(&tenant),
+        ) {
+            Ok(p) => p,
+            Err(e) => {
+                if self.stop.load(Ordering::SeqCst) {
+                    // Gate closed by shutdown: the job is not failed,
+                    // just unserved — park it for the next daemon life.
+                    self.park(id, None, false);
+                } else {
+                    self.finish(id, JobState::Failed, Some(format!("{e:#}")));
+                }
+                return;
+            }
+        };
+        self.registry
+            .observe("serve/admission_wait_s", queued.elapsed().as_secs_f64());
+        if sim {
+            self.run_sim(id, &spec, sim_us, sim_done, &cancel, permit);
+        } else {
+            self.run_real(id, &spec, &cancel, parked_snap, permit, workers);
+        }
+    }
+
+    /// Virtual job: real admission reservation, virtual step loop. This
+    /// is what lets the loadgen push hundreds of thousands of arrivals
+    /// through the REAL scheduling machinery in minutes.
+    fn run_sim(
+        &self,
+        id: u64,
+        spec: &JobSpec,
+        sim_us: u64,
+        mut done: usize,
+        cancel: &AtomicBool,
+        permit: Permit<'_>,
+    ) {
+        let target = spec.steps;
+        while done < target {
+            if cancel.load(Ordering::SeqCst) {
+                drop(permit);
+                self.finish(id, JobState::Cancelled, None);
+                return;
+            }
+            let stopping = self.stop.load(Ordering::SeqCst);
+            if stopping || permit.preempt_requested() {
+                {
+                    let mut st = self.st.lock().unwrap();
+                    st.jobs
+                        .get_mut(&id)
+                        .expect("running job has a record")
+                        .sim_steps_done = done;
+                }
+                drop(permit);
+                self.park(id, None, !stopping);
+                return;
+            }
+            if sim_us > 0 {
+                std::thread::sleep(Duration::from_micros(sim_us));
+            }
+            done += 1;
+            self.progress.bump(&self.admission);
+        }
+        drop(permit);
+        self.finish(id, JobState::Done, None);
+    }
+
+    /// Real job: full `TrainSession`, resumed from its newest snapshot
+    /// when one exists, checkpointed per `--checkpoint-every`, parked
+    /// bitwise-resumable on preemption or shutdown.
+    fn run_real(
+        &self,
+        id: u64,
+        spec: &JobSpec,
+        cancel: &AtomicBool,
+        parked_snap: Option<PathBuf>,
+        permit: Permit<'_>,
+        workers: usize,
+    ) {
+        let mut cfg = spec.to_train_config(&self.base);
+        if cfg.threads == 0 {
+            cfg.threads = kernel_thread_budget(
+                crate::runtime::kernels::auto_threads(),
+                workers,
+            );
+        }
+        let target = cfg.steps;
+        let mut builder = TrainSession::builder(cfg)
+            .tracker(self.aggregate.child())
+            .weight_cache(self.weight_cache.clone())
+            .registry(self.registry.clone());
+        if let Some(p) = &parked_snap {
+            builder = builder.resume_from(p);
+        }
+        let mut sess = match builder.build() {
+            Ok(s) => s,
+            Err(e) => {
+                drop(permit);
+                self.finish(
+                    id,
+                    JobState::Failed,
+                    Some(format!("session build: {e:#}")),
+                );
+                return;
+            }
+        };
+        let mut last_snap = parked_snap;
+        if last_snap.is_some() {
+            self.registry.counter_add("fleet/resumes", 1);
+            let mut st = self.st.lock().unwrap();
+            st.jobs.get_mut(&id).expect("running job").resumes += 1;
+        }
+        loop {
+            if cancel.load(Ordering::SeqCst) {
+                drop(sess);
+                drop(permit);
+                self.finish(id, JobState::Cancelled, None);
+                return;
+            }
+            let stopping = self.stop.load(Ordering::SeqCst);
+            if stopping || permit.preempt_requested() {
+                let path = self.snap_path(id, sess.steps_done());
+                match sess.save_snapshot(&path) {
+                    Ok(_) => {
+                        if let Some(old) = &last_snap {
+                            if old != &path {
+                                let _ = std::fs::remove_file(old);
+                            }
+                        }
+                        drop(sess);
+                        drop(permit);
+                        self.park(id, Some(path), !stopping);
+                    }
+                    Err(e) => {
+                        drop(sess);
+                        drop(permit);
+                        self.finish(
+                            id,
+                            JobState::Failed,
+                            Some(format!("snapshot: {e:#}")),
+                        );
+                    }
+                }
+                return;
+            }
+            if sess.steps_done() >= target {
+                break;
+            }
+            if let Err(e) = sess.step_once() {
+                drop(sess);
+                drop(permit);
+                self.finish(id, JobState::Failed, Some(format!("{e:#}")));
+                return;
+            }
+            self.progress.bump(&self.admission);
+            let n = sess.steps_done();
+            if self.opts.checkpoint_every > 0
+                && n < target
+                && n % self.opts.checkpoint_every == 0
+            {
+                // Crash-recovery checkpoint: best-effort (a failed write
+                // only costs recovery granularity, not correctness).
+                let path = self.snap_path(id, n);
+                if sess.save_snapshot(&path).is_ok() {
+                    if let Some(old) = last_snap.replace(path) {
+                        let _ = std::fs::remove_file(&old);
+                    }
+                }
+            }
+        }
+        // Completed: the final snapshot is the bitwise-comparison
+        // artifact (`job-<id>-final.snap` survives cleanup).
+        if let Err(e) = sess.save_snapshot(&self.final_path(id)) {
+            drop(sess);
+            drop(permit);
+            self.finish(
+                id,
+                JobState::Failed,
+                Some(format!("final snapshot: {e:#}")),
+            );
+            return;
+        }
+        drop(sess);
+        drop(permit);
+        self.finish(id, JobState::Done, None);
+    }
+
+    // -----------------------------------------------------------------
+    // Protocol side.
+    // -----------------------------------------------------------------
+
+    /// One request line in, one response line out. Never panics; a
+    /// malformed line is answered (with its id when recoverable) so the
+    /// client can correlate the failure.
+    fn dispatch_line(&self, line: &str) -> String {
+        match protocol::parse_request(line) {
+            Ok(req) => match self.dispatch(req.verb) {
+                Ok(data) => protocol::ok_frame(req.id, data),
+                Err(e) => protocol::err_frame(Some(req.id), &e),
+            },
+            Err(e) => {
+                // Best-effort id recovery for correlation.
+                let id = Json::parse(line.trim()).ok().and_then(|j| {
+                    j.get("id").and_then(|v| v.as_f64()).and_then(|n| {
+                        (n >= 0.0 && n.fract() == 0.0).then_some(n as u64)
+                    })
+                });
+                protocol::err_frame(id, &e)
+            }
+        }
+    }
+
+    fn dispatch(&self, verb: Verb) -> Result<Json, ProtoError> {
+        match verb {
+            Verb::Submit { spec, tenant, sim, sim_us } => {
+                self.submit(&spec, tenant, sim, sim_us)
+            }
+            Verb::Status { job: Some(id) } => self.job_status(id),
+            Verb::Status { job: None } => Ok(self.aggregate_status()),
+            Verb::Cancel { job } => self.cancel(job),
+            Verb::SetBudget { budget_bytes, ceiling_bytes } => {
+                let ceiling = ceiling_bytes
+                    .unwrap_or_else(|| {
+                        self.admission.ceiling().max(budget_bytes)
+                    })
+                    .max(budget_bytes);
+                self.admission.set_budget_with_ceiling(budget_bytes, ceiling);
+                Ok(Json::obj(vec![
+                    ("budget_bytes", Json::num(budget_bytes as f64)),
+                    ("ceiling_bytes", Json::num(ceiling as f64)),
+                ]))
+            }
+            Verb::Drain => {
+                let pending = {
+                    let mut st = self.st.lock().unwrap();
+                    st.draining = true;
+                    st.counts.active()
+                };
+                self.cv.notify_all();
+                Ok(Json::obj(vec![
+                    ("draining", Json::Bool(true)),
+                    ("pending", Json::num(pending as f64)),
+                ]))
+            }
+            Verb::Shutdown => {
+                self.stop.store(true, Ordering::SeqCst);
+                self.admission.close();
+                self.cv.notify_all();
+                Ok(Json::obj(vec![("stopping", Json::Bool(true))]))
+            }
+        }
+    }
+
+    fn submit(
+        &self,
+        spec_json: &Json,
+        tenant: String,
+        sim: bool,
+        sim_us: u64,
+    ) -> Result<Json, ProtoError> {
+        let mut spec = JobSpec::from_json(spec_json, &self.base)
+            .map_err(|e| ProtoError::new(code::BAD_SPEC, format!("{e:#}")))?;
+        let cost = job_cost_bytes(&spec)
+            .map_err(|e| ProtoError::new(code::BAD_SPEC, format!("{e:#}")))?;
+        let wbytes = job_weight_class(&spec)
+            .map_err(|e| ProtoError::new(code::BAD_SPEC, format!("{e:#}")))?
+            .bytes;
+        // Permanent refusals are diagnosed at SUBMIT, not when a worker
+        // finally gets to the job: the client hears "never" now.
+        let ceiling = self.admission.ceiling();
+        if cost.saturating_add(wbytes) > ceiling {
+            return Err(ProtoError::new(
+                code::OVER_BUDGET,
+                format!(
+                    "job needs {} MB solo ({} activations + {} weights) but \
+                     the budget ceiling is {} MB — it can never be admitted",
+                    fmt_mb(cost + wbytes),
+                    fmt_mb(cost),
+                    fmt_mb(wbytes),
+                    fmt_mb(ceiling)
+                ),
+            ));
+        }
+        if let Some(&quota) = self.quotas.get(&tenant) {
+            if cost > quota {
+                return Err(ProtoError::new(
+                    code::QUOTA_EXCEEDED,
+                    format!(
+                        "job cost {} MB exceeds tenant '{tenant}' quota {} MB",
+                        fmt_mb(cost),
+                        fmt_mb(quota)
+                    ),
+                ));
+            }
+        }
+        let id = {
+            let mut st = self.st.lock().unwrap();
+            if st.draining || self.stop.load(Ordering::SeqCst) {
+                return Err(ProtoError::new(
+                    code::DRAINING,
+                    "daemon is draining; no new jobs accepted",
+                ));
+            }
+            let id = st.next_id;
+            st.next_id += 1;
+            if spec_json.get("seed").is_none() {
+                // Same discipline as the fleet's job file: jobs that do
+                // not pin a seed get a derived per-job data stream.
+                spec.seed = derive(self.job_seed, id);
+            }
+            // Journal BEFORE ack: once the client hears the id, a crash
+            // must not lose the job.
+            if let Err(e) =
+                self.write_sidecar(id, &tenant, sim, sim_us, &spec)
+            {
+                st.next_id -= 1;
+                return Err(ProtoError::new(
+                    code::INTERNAL,
+                    format!("{e:#}"),
+                ));
+            }
+            st.jobs.insert(
+                id,
+                JobRecord {
+                    tenant: tenant.clone(),
+                    spec,
+                    sim,
+                    sim_us,
+                    state: JobState::Queued,
+                    submitted: Instant::now(),
+                    sim_steps_done: 0,
+                    parked_snap: None,
+                    preempts: 0,
+                    resumes: 0,
+                    error: None,
+                    cancel: Arc::new(AtomicBool::new(false)),
+                    latency_s: None,
+                    recovered: false,
+                },
+            );
+            st.counts.queued += 1;
+            let w = self.weight_of(&tenant);
+            let t = st.tenant_entry(&tenant, w);
+            t.submitted += 1;
+            t.queue.push_back(id);
+            id
+        };
+        self.registry.counter_add("serve/submitted", 1);
+        self.cv.notify_all();
+        Ok(Json::obj(vec![
+            ("job", Json::num(id as f64)),
+            ("tenant", Json::str(tenant)),
+            ("cost_bytes", Json::num(cost as f64)),
+        ]))
+    }
+
+    fn job_status(&self, id: u64) -> Result<Json, ProtoError> {
+        let st = self.st.lock().unwrap();
+        let rec = st.jobs.get(&id).ok_or_else(|| {
+            ProtoError::new(code::UNKNOWN_JOB, format!("no job {id}"))
+        })?;
+        let mut pairs = vec![
+            ("job", Json::num(id as f64)),
+            ("state", Json::str(rec.state.name())),
+            ("tenant", Json::str(&rec.tenant)),
+            ("preempts", Json::num(rec.preempts as f64)),
+            ("resumes", Json::num(rec.resumes as f64)),
+            ("recovered", Json::Bool(rec.recovered)),
+        ];
+        if rec.cancel.load(Ordering::SeqCst) && rec.state == JobState::Running
+        {
+            pairs.push(("cancelling", Json::Bool(true)));
+        }
+        if let Some(e) = &rec.error {
+            pairs.push(("error", Json::str(e)));
+        }
+        if let Some(l) = rec.latency_s {
+            pairs.push(("latency_s", Json::Num(l)));
+        }
+        Ok(Json::obj(pairs))
+    }
+
+    fn aggregate_status(&self) -> Json {
+        let st = self.st.lock().unwrap();
+        let c = st.counts;
+        let tenants = Json::Obj(
+            st.tenants
+                .iter()
+                .map(|(name, t)| {
+                    (
+                        name.clone(),
+                        Json::obj(vec![
+                            ("weight", Json::num(t.weight as f64)),
+                            ("queued", Json::num(t.queue.len() as f64)),
+                            ("submitted", Json::num(t.submitted as f64)),
+                            ("done", Json::num(t.done as f64)),
+                            ("failed", Json::num(t.failed as f64)),
+                            ("cancelled", Json::num(t.cancelled as f64)),
+                            ("steps", Json::num(t.steps as f64)),
+                            (
+                                "committed_bytes",
+                                Json::num(
+                                    self.admission.tenant_committed(name)
+                                        as f64,
+                                ),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let total = st.jobs.len();
+        let draining = st.draining;
+        drop(st);
+        let latency = match self.registry.histogram("serve/latency_s") {
+            Some(h) => Json::obj(vec![
+                ("count", Json::num(h.count as f64)),
+                ("mean", Json::Num(h.mean)),
+                ("p50", Json::Num(h.p50)),
+                ("p90", Json::Num(h.p90)),
+                ("p99", Json::Num(h.p99)),
+                ("max", Json::Num(h.max)),
+            ]),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("uptime_s", Json::Num(self.started.elapsed().as_secs_f64())),
+            ("draining", Json::Bool(draining)),
+            ("budget_bytes", Json::num(self.admission.budget() as f64)),
+            ("ceiling_bytes", Json::num(self.admission.ceiling() as f64)),
+            (
+                "jobs",
+                Json::obj(vec![
+                    ("total", Json::num(total as f64)),
+                    ("queued", Json::num(c.queued as f64)),
+                    ("running", Json::num(c.running as f64)),
+                    ("parked", Json::num(c.parked as f64)),
+                    ("done", Json::num(c.done as f64)),
+                    ("failed", Json::num(c.failed as f64)),
+                    ("cancelled", Json::num(c.cancelled as f64)),
+                ]),
+            ),
+            ("recovered", Json::num(self.recovered as f64)),
+            (
+                "preempts",
+                Json::num(self.registry.counter("fleet/preempts") as f64),
+            ),
+            (
+                "resumes",
+                Json::num(self.registry.counter("fleet/resumes") as f64),
+            ),
+            ("fleet_steps", Json::num(self.progress.total() as f64)),
+            ("latency_s", latency),
+            ("tenants", tenants),
+        ])
+    }
+
+    fn cancel(&self, id: u64) -> Result<Json, ProtoError> {
+        let outcome = {
+            let mut st = self.st.lock().unwrap();
+            let rec = st.jobs.get_mut(&id).ok_or_else(|| {
+                ProtoError::new(code::UNKNOWN_JOB, format!("no job {id}"))
+            })?;
+            rec.cancel.store(true, Ordering::SeqCst);
+            match rec.state {
+                JobState::Queued | JobState::Parked => {
+                    let tenant = rec.tenant.clone();
+                    if let Some(t) = st.tenants.get_mut(&tenant) {
+                        t.queue.retain(|j| *j != id);
+                    }
+                    None // settle below, outside the lock
+                }
+                s => Some(s),
+            }
+        };
+        match outcome {
+            None => {
+                self.finish(id, JobState::Cancelled, None);
+                Ok(Json::obj(vec![
+                    ("job", Json::num(id as f64)),
+                    ("state", Json::str("cancelled")),
+                ]))
+            }
+            Some(JobState::Running) => Ok(Json::obj(vec![
+                ("job", Json::num(id as f64)),
+                ("state", Json::str("running")),
+                ("cancelling", Json::Bool(true)),
+            ])),
+            Some(s) => Ok(Json::obj(vec![
+                // Terminal already: idempotent, report where it ended.
+                ("job", Json::num(id as f64)),
+                ("state", Json::str(s.name())),
+            ])),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The server shell: startup (exit-code 3 territory) vs runtime.
+// ---------------------------------------------------------------------
+
+/// What the daemon did over its lifetime (rendered at exit; `failed > 0`
+/// maps to [`EXIT_JOB_FAILURES`]).
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub submitted: u64,
+    pub done: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    /// Jobs still queued/parked at exit — journaled on disk, recovered
+    /// by the next daemon on this snapshot dir.
+    pub pending: u64,
+    pub recovered: u64,
+    pub preempts: u64,
+    pub resumes: u64,
+    pub uptime_s: f64,
+}
+
+impl ServeSummary {
+    pub fn jobs_per_sec(&self) -> f64 {
+        if self.uptime_s > 0.0 {
+            self.done as f64 / self.uptime_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "## serve summary\n\n\
+             jobs: {} submitted ({} recovered), {} done, {} failed, \
+             {} cancelled, {} pending\n\
+             preempts {} | resumes {} | uptime {:.2}s | {:.2} jobs/s\n",
+            self.submitted,
+            self.recovered,
+            self.done,
+            self.failed,
+            self.cancelled,
+            self.pending,
+            self.preempts,
+            self.resumes,
+            self.uptime_s,
+            self.jobs_per_sec()
+        )
+    }
+}
+
+/// A started-but-not-yet-serving daemon. [`Server::start`] does every
+/// failable setup step (lock, recovery rescan, socket bind) so the CLI
+/// can map its errors to [`EXIT_STARTUP`]; [`Server::run`] errors are
+/// runtime failures ([`EXIT_RUNTIME`]).
+pub struct Server {
+    daemon: Arc<Daemon>,
+    listener: UnixListener,
+    /// Held for the daemon's lifetime; released (file removed) on drop.
+    _lock: LockFile,
+}
+
+impl Server {
+    pub fn start(opts: ServeOptions, base: TrainConfig) -> anyhow::Result<Server> {
+        anyhow::ensure!(opts.budget_bytes > 0, "serve budget must be positive");
+        anyhow::ensure!(opts.workers > 0, "serve needs at least one worker");
+        // sun_path is ~108 bytes; overlong paths fail at bind with an
+        // opaque OS error, so name the limit ourselves.
+        anyhow::ensure!(
+            opts.socket.as_os_str().len() <= 100,
+            "socket path {} is too long for a Unix socket (limit ~100 bytes)",
+            opts.socket.display()
+        );
+        let lock = LockFile::acquire(&opts.snapshot_dir, "serve.lock")?;
+        let recovered_jobs = scan_recovery(&opts.snapshot_dir)?;
+
+        // A socket file left by a SIGKILLed daemon must be cleared before
+        // bind; a CONNECTABLE one means someone is live on it (the lock
+        // should have caught that, but a different snapshot dir with the
+        // same socket path would not).
+        if opts.socket.exists() {
+            if UnixStream::connect(&opts.socket).is_ok() {
+                anyhow::bail!(
+                    "socket {} is already being served",
+                    opts.socket.display()
+                );
+            }
+            std::fs::remove_file(&opts.socket).map_err(|e| {
+                anyhow::anyhow!(
+                    "remove stale socket {}: {e}",
+                    opts.socket.display()
+                )
+            })?;
+        }
+        let listener = UnixListener::bind(&opts.socket).map_err(|e| {
+            anyhow::anyhow!("bind socket {}: {e}", opts.socket.display())
+        })?;
+        listener.set_nonblocking(true).map_err(|e| {
+            anyhow::anyhow!("set socket non-blocking: {e}")
+        })?;
+
+        let admission = Admission::new(opts.budget_bytes);
+        let ceiling = opts
+            .budget_schedule
+            .iter()
+            .map(|c| c.budget_bytes)
+            .max()
+            .unwrap_or(0)
+            .max(opts.budget_bytes);
+        admission.set_budget_with_ceiling(opts.budget_bytes, ceiling);
+        admission.enable_preemption();
+        for (tenant, quota) in &opts.quotas {
+            admission.set_tenant_quota(tenant, *quota);
+        }
+        let quotas: HashMap<String, u64> =
+            opts.quotas.iter().cloned().collect();
+        let weights: HashMap<String, u64> =
+            opts.tenant_weights.iter().cloned().collect();
+
+        let aggregate = MemoryTracker::new();
+        let weight_cache = WeightCache::new(aggregate.child());
+        let registry = MetricsRegistry::new();
+        let progress = Progress::new(opts.budget_schedule.clone());
+
+        // Re-admit every journaled job: parked where a snapshot exists,
+        // queued-from-scratch otherwise (sim jobs always requeue fresh —
+        // their virtual progress died with the process, and replaying it
+        // is free by construction).
+        let mut st = DaemonState {
+            jobs: BTreeMap::new(),
+            tenants: BTreeMap::new(),
+            counts: Counts::default(),
+            next_id: 0,
+            draining: false,
+        };
+        let recovered = recovered_jobs.len() as u64;
+        for r in recovered_jobs {
+            let state = if r.snap.is_some() {
+                JobState::Parked
+            } else {
+                JobState::Queued
+            };
+            *st.counts.slot(state) += 1;
+            st.next_id = st.next_id.max(r.id + 1);
+            let w = weights.get(&r.tenant).copied().unwrap_or(1);
+            let t = st.tenant_entry(&r.tenant, w);
+            t.submitted += 1;
+            t.queue.push_back(r.id);
+            st.jobs.insert(
+                r.id,
+                JobRecord {
+                    tenant: r.tenant,
+                    spec: r.spec,
+                    sim: r.sim,
+                    sim_us: r.sim_us,
+                    state,
+                    submitted: Instant::now(),
+                    sim_steps_done: 0,
+                    parked_snap: r.snap,
+                    preempts: 0,
+                    resumes: 0,
+                    error: None,
+                    cancel: Arc::new(AtomicBool::new(false)),
+                    latency_s: None,
+                    recovered: true,
+                },
+            );
+        }
+        registry.counter_add("serve/recovered", recovered);
+
+        let job_seed = derive(base.seed, stream::JOB);
+        let daemon = Arc::new(Daemon {
+            st: Mutex::new(st),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            admission,
+            registry,
+            aggregate,
+            weight_cache,
+            progress,
+            base,
+            opts,
+            quotas,
+            weights,
+            job_seed,
+            started: Instant::now(),
+            recovered,
+        });
+        Ok(Server { daemon, listener, _lock: lock })
+    }
+
+    /// Serve until a `shutdown` verb or until draining completes.
+    /// Connection handlers are detached threads (a lingering client must
+    /// not block exit); workers are joined so running jobs finish
+    /// parking before the summary is computed.
+    pub fn run(self) -> anyhow::Result<ServeSummary> {
+        let d = &self.daemon;
+        let workers = d.opts.workers;
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let d = Arc::clone(d);
+                std::thread::spawn(move || d.worker_loop(workers))
+            })
+            .collect();
+
+        let result = loop {
+            if d.stop.load(Ordering::SeqCst) {
+                break Ok(());
+            }
+            {
+                let st = d.st.lock().unwrap();
+                if st.draining && st.counts.active() == 0 {
+                    drop(st);
+                    d.stop.store(true, Ordering::SeqCst);
+                    d.admission.close();
+                    d.cv.notify_all();
+                    break Ok(());
+                }
+            }
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let d = Arc::clone(d);
+                    std::thread::spawn(move || handle_conn(&d, stream));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) => {
+                    d.stop.store(true, Ordering::SeqCst);
+                    d.admission.close();
+                    d.cv.notify_all();
+                    break Err(anyhow::anyhow!("accept failed: {e}"));
+                }
+            }
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        let _ = std::fs::remove_file(&d.opts.socket);
+        result?;
+
+        let uptime_s = d.started.elapsed().as_secs_f64();
+        d.registry.gauge_set("serve/uptime_s", uptime_s);
+        d.registry
+            .gauge_set("serve/aggregate_peak_bytes", d.aggregate.peak() as f64);
+        if let Some(p) = &d.opts.metrics_out {
+            d.registry.export_jsonl(p)?;
+        }
+        let st = d.st.lock().unwrap();
+        Ok(ServeSummary {
+            submitted: st.jobs.len() as u64,
+            done: st.counts.done as u64,
+            failed: st.counts.failed as u64,
+            cancelled: st.counts.cancelled as u64,
+            pending: st.counts.active() as u64,
+            recovered: d.recovered,
+            preempts: d.registry.counter("fleet/preempts"),
+            resumes: d.registry.counter("fleet/resumes"),
+            uptime_s,
+        })
+    }
+
+    /// The daemon's socket path (tests connect to it while `run` serves
+    /// on another thread).
+    pub fn socket(&self) -> &Path {
+        &self.daemon.opts.socket
+    }
+}
+
+/// One client connection: JSONL request/response in lockstep. Reads are
+/// length-capped so an unterminated line cannot balloon memory — an
+/// oversized frame is answered, then the connection dropped (the stream
+/// is desynced past the limit).
+fn handle_conn(d: &Daemon, stream: UnixStream) {
+    // The listener is non-blocking; accepted streams must not be.
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let Ok(mut out) = stream.try_clone() else { return };
+    let mut reader =
+        BufReader::new(stream).take(protocol::MAX_FRAME_BYTES as u64 + 2);
+    loop {
+        reader.set_limit(protocol::MAX_FRAME_BYTES as u64 + 2);
+        let mut buf = Vec::new();
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => return, // client hung up
+            Ok(_) => {}
+            Err(_) => return,
+        }
+        if !buf.ends_with(b"\n") && buf.len() >= protocol::MAX_FRAME_BYTES {
+            let e = ProtoError::new(
+                code::OVERSIZED_FRAME,
+                format!(
+                    "frame exceeds {} bytes; closing connection",
+                    protocol::MAX_FRAME_BYTES
+                ),
+            );
+            let _ = writeln!(out, "{}", protocol::err_frame(None, &e));
+            return;
+        }
+        let line = match String::from_utf8(buf) {
+            Ok(s) => s,
+            Err(_) => {
+                let e =
+                    ProtoError::new(code::BAD_JSON, "frame is not UTF-8");
+                if writeln!(out, "{}", protocol::err_frame(None, &e)).is_err()
+                {
+                    return;
+                }
+                continue;
+            }
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        if writeln!(out, "{}", d.dispatch_line(&line)).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exit_codes_are_pinned() {
+        // CI scripts and docs/serving.md hard-code these.
+        assert_eq!(EXIT_OK, 0);
+        assert_eq!(EXIT_RUNTIME, 1);
+        assert_eq!(EXIT_JOB_FAILURES, 2);
+        assert_eq!(EXIT_STARTUP, 3);
+    }
+
+    #[test]
+    fn sidecar_roundtrips_full_u64_seeds() {
+        // Derived seeds use all 64 bits; a JSON-number encoding would
+        // shear them through f64. The sidecar must be exact.
+        let mut spec = JobSpec::from_base(&TrainConfig::default());
+        spec.seed = 0xDEAD_BEEF_CAFE_F00D; // not representable in f64
+        spec.model_seed = Some(u64::MAX - 1);
+        spec.steps = 17;
+        spec.priority = 3;
+        spec.quant = QuantMode::Q4;
+        spec.lr = 0.0123;
+        let j = sidecar_json(42, "alice", true, 50, &spec);
+        let text = j.to_string();
+        let back = sidecar_parse(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.id, 42);
+        assert_eq!(back.tenant, "alice");
+        assert!(back.sim);
+        assert_eq!(back.sim_us, 50);
+        assert_eq!(back.spec.seed, spec.seed, "seed must survive bit-exact");
+        assert_eq!(back.spec.model_seed, spec.model_seed);
+        assert_eq!(back.spec.steps, 17);
+        assert_eq!(back.spec.priority, 3);
+        assert_eq!(back.spec.quant, QuantMode::Q4);
+        assert_eq!(back.spec.lr, spec.lr, "lr must survive bit-exact");
+        assert_eq!(back.spec.method, spec.method);
+    }
+
+    #[test]
+    fn sidecar_null_model_seed_roundtrips() {
+        let mut spec = JobSpec::from_base(&TrainConfig::default());
+        spec.model_seed = None;
+        let j = sidecar_json(0, "default", false, 0, &spec);
+        let back = sidecar_parse(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.spec.model_seed, None);
+        assert!(!back.sim);
+    }
+
+    fn state_with(tenants: &[(&str, u64, &[u64])]) -> DaemonState {
+        let mut st = DaemonState {
+            jobs: BTreeMap::new(),
+            tenants: BTreeMap::new(),
+            counts: Counts::default(),
+            next_id: 0,
+            draining: false,
+        };
+        for (name, weight, ids) in tenants {
+            let t = st.tenant_entry(name, *weight);
+            for id in *ids {
+                t.queue.push_back(*id);
+            }
+            for id in *ids {
+                st.jobs.insert(
+                    *id,
+                    JobRecord {
+                        tenant: name.to_string(),
+                        spec: JobSpec::from_base(&TrainConfig::default()),
+                        sim: true,
+                        sim_us: 0,
+                        state: JobState::Queued,
+                        submitted: Instant::now(),
+                        sim_steps_done: 0,
+                        parked_snap: None,
+                        preempts: 0,
+                        resumes: 0,
+                        error: None,
+                        cancel: Arc::new(AtomicBool::new(false)),
+                        latency_s: None,
+                        recovered: false,
+                    },
+                );
+                st.counts.queued += 1;
+            }
+        }
+        st
+    }
+
+    #[test]
+    fn wfq_dispatch_follows_weights() {
+        // Tenant b (weight 2) must get exactly twice tenant a's (weight
+        // 1) dispatches while both stay backlogged.
+        let mut st = state_with(&[
+            ("a", 1, &[0, 1, 2, 3, 4, 5]),
+            ("b", 2, &[10, 11, 12, 13, 14, 15]),
+        ]);
+        let mut a = 0;
+        let mut b = 0;
+        for _ in 0..9 {
+            let id = pick_wfq(&mut st).unwrap();
+            if id < 10 {
+                a += 1;
+            } else {
+                b += 1;
+            }
+        }
+        assert_eq!((a, b), (3, 6), "weight-2 tenant gets a 2:1 share");
+        assert_eq!(st.counts.running, 9);
+        assert_eq!(st.counts.queued, 3);
+    }
+
+    #[test]
+    fn wfq_idle_tenant_share_flows_to_the_backlogged() {
+        let mut st = state_with(&[("a", 1, &[0, 1, 2]), ("b", 8, &[])]);
+        for want in [0, 1, 2] {
+            assert_eq!(pick_wfq(&mut st), Some(want), "idle b never blocks a");
+        }
+        assert_eq!(pick_wfq(&mut st), None);
+    }
+
+    #[test]
+    fn wfq_newcomer_starts_at_the_pass_floor() {
+        let mut st = state_with(&[("a", 1, &[0, 1, 2, 3])]);
+        // a accumulates pass…
+        assert_eq!(pick_wfq(&mut st), Some(0));
+        assert_eq!(pick_wfq(&mut st), Some(1));
+        // …then z arrives. It must start at a's pass (the floor), not at
+        // zero-minus-history: it gets its fair share from NOW on, not a
+        // make-up monopoly over everything a already consumed.
+        let t = st.tenant_entry("z", 1);
+        t.queue.push_back(100);
+        st.jobs.insert(
+            100,
+            JobRecord {
+                tenant: "z".into(),
+                spec: JobSpec::from_base(&TrainConfig::default()),
+                sim: true,
+                sim_us: 0,
+                state: JobState::Queued,
+                submitted: Instant::now(),
+                sim_steps_done: 0,
+                parked_snap: None,
+                preempts: 0,
+                resumes: 0,
+                error: None,
+                cancel: Arc::new(AtomicBool::new(false)),
+                latency_s: None,
+                recovered: false,
+            },
+        );
+        st.counts.queued += 1;
+        let za = st.tenants["z"].pass;
+        let aa = st.tenants["a"].pass;
+        assert_eq!(za, aa, "newcomer pass equals the current floor");
+        // Alternating service from here (name breaks the tie).
+        assert_eq!(pick_wfq(&mut st), Some(2), "tie broken by name: a first");
+        assert_eq!(pick_wfq(&mut st), Some(100));
+        assert_eq!(pick_wfq(&mut st), Some(3));
+    }
+
+    #[test]
+    fn tenant_list_parses_and_validates() {
+        let q = parse_tenant_list("a:64,b:128", "quota", true).unwrap();
+        assert_eq!(
+            q,
+            vec![("a".to_string(), 64 << 20), ("b".to_string(), 128 << 20)]
+        );
+        let w = parse_tenant_list("a:1, b:3", "weight", false).unwrap();
+        assert_eq!(w, vec![("a".to_string(), 1), ("b".to_string(), 3)]);
+        for bad in ["", "a", "a:", ":3", "a:x", "a:0"] {
+            assert!(
+                parse_tenant_list(bad, "quota", true).is_err(),
+                "must reject '{bad}'"
+            );
+        }
+    }
+
+    #[test]
+    fn recovery_scan_pairs_sidecars_with_newest_snapshots() {
+        let dir = std::env::temp_dir().join("mesp-test-serve-scan");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = JobSpec::from_base(&TrainConfig::default());
+        for id in [3u64, 7] {
+            std::fs::write(
+                dir.join(format!("job-{id}.json")),
+                sidecar_json(id, "t", false, 0, &spec).to_string(),
+            )
+            .unwrap();
+        }
+        // job 3: two checkpoints — the newest must win. job 7: none.
+        std::fs::write(dir.join("job-3-step-2.snap"), b"old").unwrap();
+        std::fs::write(dir.join("job-3-step-10.snap"), b"new").unwrap();
+        // Noise that must be ignored: final snaps without sidecars,
+        // tmp files, unrelated names.
+        std::fs::write(dir.join("job-9-final.snap"), b"done").unwrap();
+        std::fs::write(dir.join("job-4.json.tmp"), b"half").unwrap();
+        std::fs::write(dir.join("serve.lock"), b"123").unwrap();
+
+        let rec = scan_recovery(&dir).unwrap();
+        assert_eq!(rec.len(), 2);
+        assert_eq!(rec[0].id, 3);
+        assert_eq!(
+            rec[0].snap.as_deref(),
+            Some(dir.join("job-3-step-10.snap").as_path()),
+            "newest checkpoint wins"
+        );
+        assert_eq!(rec[1].id, 7);
+        assert!(rec[1].snap.is_none(), "no checkpoint → requeue from scratch");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovery_scan_names_a_corrupt_sidecar() {
+        let dir = std::env::temp_dir().join("mesp-test-serve-corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("job-0.json"), "{not json").unwrap();
+        let err = scan_recovery(&dir).unwrap_err().to_string();
+        assert!(err.contains("job-0.json"), "names the file: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

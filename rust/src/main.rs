@@ -22,29 +22,39 @@ use mesp::util::stats::fmt_mb;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    if let Err(e) = run(args) {
-        eprintln!("error: {e:#}");
-        std::process::exit(1);
-    }
+    // Exit codes (pinned in fleet::serve): 0 clean, 1 runtime failure,
+    // 2 completed-with-job-failures, 3 startup failure. The long-running
+    // commands (`fleet`, `serve`) classify their own errors and return
+    // the code; anything that escapes as an Err is a runtime failure.
+    let code = match run(args) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            fleet::EXIT_RUNTIME
+        }
+    };
+    std::process::exit(code);
 }
 
-fn run(argv: Vec<String>) -> anyhow::Result<()> {
+fn run(argv: Vec<String>) -> anyhow::Result<i32> {
     let args = Args::parse(argv)?;
     // Per-subcommand flag allowlists (config::cli::known_flags): typo'd
     // flags and unknown subcommands fail here with the USAGE text.
     args.validate()?;
     match args.command.as_str() {
-        "train" => cmd_train(&args),
+        "train" => cmd_train(&args).map(|()| fleet::EXIT_OK),
         "fleet" => cmd_fleet(&args),
-        "simulate" => cmd_simulate(&args),
-        "gradcheck" => cmd_gradcheck(&args),
-        "mezo-quality" => cmd_mezo_quality(&args),
-        "reproduce" => cmd_reproduce(&args),
-        "inspect" => cmd_inspect(&args),
-        "report" => cmd_report(&args),
+        "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
+        "simulate" => cmd_simulate(&args).map(|()| fleet::EXIT_OK),
+        "gradcheck" => cmd_gradcheck(&args).map(|()| fleet::EXIT_OK),
+        "mezo-quality" => cmd_mezo_quality(&args).map(|()| fleet::EXIT_OK),
+        "reproduce" => cmd_reproduce(&args).map(|()| fleet::EXIT_OK),
+        "inspect" => cmd_inspect(&args).map(|()| fleet::EXIT_OK),
+        "report" => cmd_report(&args).map(|()| fleet::EXIT_OK),
         "help" | "" => {
             println!("{USAGE}");
-            Ok(())
+            Ok(fleet::EXIT_OK)
         }
         // validate() already rejected commands without an allowlist, so
         // reaching this arm means cli::known_flags knows a command this
@@ -199,8 +209,76 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+fn cmd_fleet(args: &Args) -> anyhow::Result<i32> {
     maybe_tune(args);
+    // Everything up to Scheduler::run is startup: bad flags, an
+    // unparsable job file, an overflowing budget. Those failures exit 3
+    // so wrappers can tell "never started" from "started and broke" (1)
+    // from "finished but some jobs failed" (2).
+    let (base, opts, jobs, budget_mb) = match fleet_setup(args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return Ok(fleet::EXIT_STARTUP);
+        }
+    };
+    if args.bool("print-cost") {
+        // Script-friendly admission costs (CI sizes preemption and
+        // shared-weight budgets with this: the per-job cost depends on
+        // the machine's core count via the kernel packing-panel term,
+        // and the weight class is charged once per distinct base).
+        let mut seen = std::collections::BTreeSet::new();
+        let mut classes = std::collections::BTreeSet::new();
+        for job in &jobs {
+            if seen.insert(job.spec.method.name()) {
+                let c = fleet::job_cost_bytes(&job.spec)?;
+                println!(
+                    "cost {} {c} bytes ({} MB)",
+                    job.spec.method.name(),
+                    fmt_mb(c)
+                );
+            }
+            let w = fleet::job_weight_class(&job.spec)?;
+            if classes.insert(w.key) {
+                println!(
+                    "weights {:016x} {} bytes ({} MB, charged once per base)",
+                    w.key,
+                    w.bytes,
+                    fmt_mb(w.bytes)
+                );
+            }
+        }
+        return Ok(fleet::EXIT_OK);
+    }
+    println!(
+        "fleet: {} jobs on config {} | budget {budget_mb} MB | {} workers \
+         | quant {}{}",
+        jobs.len(), base.config, opts.workers, base.quant.name(),
+        if opts.preempt || !opts.budget_schedule.is_empty() {
+            " | preemption on"
+        } else {
+            ""
+        }
+    );
+    let report = Scheduler::run(&opts, &base, jobs)?;
+    print!("{}", report.render());
+    if let Some(p) = &opts.trace_path {
+        println!("trace written: {} (chrome://tracing or ui.perfetto.dev)",
+                 p.display());
+    }
+    if let Some(p) = &opts.metrics_out {
+        println!("metrics written: {}", p.display());
+    }
+    if report.failed() > 0 {
+        eprintln!("{} fleet job(s) failed (see report)", report.failed());
+        return Ok(fleet::EXIT_JOB_FAILURES);
+    }
+    Ok(fleet::EXIT_OK)
+}
+
+type FleetSetup = (TrainConfig, FleetOptions, Vec<fleet::Job>, u64);
+
+fn fleet_setup(args: &Args) -> anyhow::Result<FleetSetup> {
     let base = TrainConfig {
         config: args.str("config", "toy"),
         backend: BackendKind::parse(&args.str("backend", "reference"))?,
@@ -250,59 +328,134 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             fleet::grid(&base, &methods, args.usize("jobs", 8)?.max(1))
         }
     };
-    if args.bool("print-cost") {
-        // Script-friendly admission costs (CI sizes preemption and
-        // shared-weight budgets with this: the per-job cost depends on
-        // the machine's core count via the kernel packing-panel term,
-        // and the weight class is charged once per distinct base).
-        let mut seen = std::collections::BTreeSet::new();
-        let mut classes = std::collections::BTreeSet::new();
-        for job in &jobs {
-            if seen.insert(job.spec.method.name()) {
-                let c = fleet::job_cost_bytes(&job.spec)?;
-                println!(
-                    "cost {} {c} bytes ({} MB)",
-                    job.spec.method.name(),
-                    fmt_mb(c)
-                );
-            }
-            let w = fleet::job_weight_class(&job.spec)?;
-            if classes.insert(w.key) {
-                println!(
-                    "weights {:016x} {} bytes ({} MB, charged once per base)",
-                    w.key,
-                    w.bytes,
-                    fmt_mb(w.bytes)
-                );
-            }
+    Ok((base, opts, jobs, budget_mb))
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
+    use mesp::fleet::{ServeOptions, Server};
+
+    maybe_tune(args);
+    let setup = || -> anyhow::Result<(ServeOptions, TrainConfig)> {
+        let base = TrainConfig {
+            config: args.str("config", "toy"),
+            backend: BackendKind::parse(&args.str("backend", "reference"))?,
+            steps: args.usize("steps", 5)?,
+            lr: args.f32("lr", 1e-4)?,
+            seed: args.u64("seed", 42)?,
+            optimizer: OptimizerKind::parse(&args.str("optimizer", "sgd"))?,
+            log_every: usize::MAX, // jobs log through `status`, not stdout
+            artifacts_dir: args.str("artifacts", "artifacts"),
+            kernel: KernelKind::parse(&args.str("kernel", "parallel"))?,
+            threads: args.usize("threads", 0)?,
+            quant: QuantMode::parse(&args.str("quant", "f32"))?,
+            loss_chunk: args.usize("loss-chunk", 0)?,
+            act_compress: ActCompress::parse(&args.str("act-compress", "none"))?,
+            ..Default::default()
+        };
+        let budget_mb = args.u64("budget-mb", 1024)?;
+        anyhow::ensure!(budget_mb > 0, "--budget-mb must be positive");
+        let budget_bytes = budget_mb
+            .checked_mul(1 << 20)
+            .ok_or_else(|| anyhow::anyhow!("--budget-mb {budget_mb} overflows"))?;
+        let budget_schedule = match args.opt_str("budget-schedule") {
+            Some(s) => fleet::parse_budget_schedule(&s)?,
+            None => Vec::new(),
+        };
+        let quotas = match args.opt_str("quota") {
+            Some(s) => fleet::serve::parse_tenant_list(&s, "quota", true)?,
+            None => Vec::new(),
+        };
+        let tenant_weights = match args.opt_str("tenant-weights") {
+            Some(s) => fleet::serve::parse_tenant_list(&s, "weight", false)?,
+            None => Vec::new(),
+        };
+        let defaults = ServeOptions::default();
+        let opts = ServeOptions {
+            socket: args
+                .opt_str("socket")
+                .map(std::path::PathBuf::from)
+                .unwrap_or(defaults.socket),
+            snapshot_dir: args
+                .opt_str("snapshot-dir")
+                .map(std::path::PathBuf::from)
+                .unwrap_or(defaults.snapshot_dir),
+            budget_bytes,
+            workers: args.usize("workers", 2)?.max(1),
+            checkpoint_every: args.usize("checkpoint-every", 0)?,
+            budget_schedule,
+            quotas,
+            tenant_weights,
+            metrics_out: args.opt_str("metrics-out").map(std::path::PathBuf::from),
+        };
+        Ok((opts, base))
+    };
+    // Startup failures — bad flags, a held lock, a corrupt recovery
+    // sidecar, an unbindable socket — exit 3 so supervisors don't
+    // confuse "never came up" with a crash of a running daemon (1).
+    let server = match setup().and_then(|(opts, base)| Server::start(opts, base)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return Ok(fleet::EXIT_STARTUP);
         }
-        return Ok(());
+    };
+    println!("serve: listening on {}", server.socket().display());
+    let summary = server.run()?;
+    print!("{}", summary.render());
+    if summary.failed > 0 {
+        eprintln!("{} serve job(s) failed (see status output)", summary.failed);
+        return Ok(fleet::EXIT_JOB_FAILURES);
     }
-    println!(
-        "fleet: {} jobs on config {} | budget {budget_mb} MB | {} workers \
-         | quant {}{}",
-        jobs.len(), base.config, opts.workers, base.quant.name(),
-        if opts.preempt || !opts.budget_schedule.is_empty() {
-            " | preemption on"
-        } else {
-            ""
+    Ok(fleet::EXIT_OK)
+}
+
+fn cmd_loadgen(args: &Args) -> anyhow::Result<i32> {
+    use mesp::fleet::loadgen;
+
+    let setup = || -> anyhow::Result<loadgen::LoadgenOptions> {
+        let d = loadgen::LoadgenOptions::default();
+        Ok(loadgen::LoadgenOptions {
+            socket: args
+                .opt_str("socket")
+                .map(std::path::PathBuf::from)
+                .unwrap_or(d.socket),
+            arrivals: args.usize("arrivals", d.arrivals)?,
+            rate: args.f32("rate", d.rate as f32)? as f64,
+            tenants: args.usize("tenants", d.tenants)?.max(1),
+            sim_us: args.u64("sim-us", d.sim_us)?,
+            seed: args.u64("seed", d.seed)?,
+            steps: args.usize("steps", d.steps)?.max(1),
+            time_scale: args.f32("time-scale", d.time_scale as f32)? as f64,
+            diurnal_amp: args.f32("diurnal-amp", d.diurnal_amp as f32)? as f64,
+            diurnal_period_s: args
+                .f32("diurnal-period", d.diurnal_period_s as f32)?
+                as f64,
+            burst_every: args.usize("burst-every", d.burst_every)?,
+            burst_len: args.usize("burst-len", d.burst_len)?,
+            burst_x: args.f32("burst-x", d.burst_x as f32)? as f64,
+            squeezes: match args.opt_str("squeeze") {
+                Some(s) => loadgen::parse_squeezes(&s)?,
+                None => Vec::new(),
+            },
+            real: args.bool("real"),
+            shutdown: args.bool("shutdown"),
+            out: args
+                .opt_str("out")
+                .map(std::path::PathBuf::from)
+                .unwrap_or(d.out),
+        })
+    };
+    let opts = match setup() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return Ok(fleet::EXIT_STARTUP);
         }
-    );
-    let report = Scheduler::run(&opts, &base, jobs)?;
+    };
+    let report = loadgen::run(&opts)?;
     print!("{}", report.render());
-    if let Some(p) = &opts.trace_path {
-        println!("trace written: {} (chrome://tracing or ui.perfetto.dev)",
-                 p.display());
-    }
-    if let Some(p) = &opts.metrics_out {
-        println!("metrics written: {}", p.display());
-    }
-    anyhow::ensure!(
-        report.failed() == 0,
-        "{} fleet job(s) failed (see report)",
-        report.failed()
-    );
-    Ok(())
+    println!("benchmark written: {}", opts.out.display());
+    Ok(fleet::EXIT_OK)
 }
 
 /// `mesp report` — per-step memory profile from the tracker's event

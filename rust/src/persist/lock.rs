@@ -1,0 +1,115 @@
+//! Daemon liveness lock: one `mesp serve` per snapshot directory.
+//!
+//! Crash recovery re-admits every parked session found in
+//! `--snapshot-dir`, so two daemons scanning the same directory would
+//! resume the same jobs twice. The lock is a plain pid file (the
+//! offline build has no `flock` crate): acquisition reads any existing
+//! file and refuses only if the recorded pid is still alive (its
+//! `/proc/<pid>` entry exists). A stale file — the previous daemon was
+//! SIGKILLed — is silently replaced; that is exactly the crash-recovery
+//! path. On clean shutdown the lock removes itself (RAII drop).
+//!
+//! Liveness via `/proc` is Linux-pragmatic: on a system without procfs
+//! every lock looks stale. The failure mode is the benign direction for
+//! a development machine (a forgotten lock never wedges recovery), and
+//! the deployment target of the paper is Linux-kernel devices.
+
+use std::path::{Path, PathBuf};
+
+/// RAII pid-file lock on a directory. See the module docs.
+#[derive(Debug)]
+pub struct LockFile {
+    path: PathBuf,
+}
+
+/// Whether `pid` names a live process (procfs probe).
+fn pid_alive(pid: u32) -> bool {
+    pid != 0 && Path::new(&format!("/proc/{pid}")).exists()
+}
+
+impl LockFile {
+    /// Acquire `dir/name`, creating `dir` if needed. Fails if another
+    /// LIVE process holds the lock; replaces a stale (dead-pid) file.
+    pub fn acquire(dir: &Path, name: &str) -> anyhow::Result<LockFile> {
+        std::fs::create_dir_all(dir).map_err(|e| {
+            anyhow::anyhow!("create lock dir {}: {e}", dir.display())
+        })?;
+        let path = dir.join(name);
+        if let Ok(existing) = std::fs::read_to_string(&path) {
+            let pid: u32 = existing.trim().parse().unwrap_or(0);
+            if pid_alive(pid) {
+                anyhow::bail!(
+                    "lock file {} is held by live pid {pid} — another \
+                     daemon is serving this snapshot dir",
+                    path.display()
+                );
+            }
+        }
+        std::fs::write(&path, format!("{}\n", std::process::id())).map_err(
+            |e| anyhow::anyhow!("write lock file {}: {e}", path.display()),
+        )?;
+        Ok(LockFile { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for LockFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("mesp-test-lock-{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn acquire_write_release_cycle() {
+        let d = dir("cycle");
+        let lock = LockFile::acquire(&d, "serve.lock").unwrap();
+        let on_disk = std::fs::read_to_string(lock.path()).unwrap();
+        assert_eq!(
+            on_disk.trim().parse::<u32>().unwrap(),
+            std::process::id()
+        );
+        let path = lock.path().to_path_buf();
+        drop(lock);
+        assert!(!path.exists(), "clean release removes the file");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn live_holder_blocks_second_acquire() {
+        let d = dir("live");
+        // Our own pid is as live as it gets.
+        let lock = LockFile::acquire(&d, "serve.lock").unwrap();
+        let err = LockFile::acquire(&d, "serve.lock").unwrap_err().to_string();
+        assert!(err.contains("held by live pid"), "{err}");
+        drop(lock);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn stale_lock_is_replaced() {
+        let d = dir("stale");
+        std::fs::create_dir_all(&d).unwrap();
+        // A pid far beyond any default pid_max: certainly not alive.
+        std::fs::write(d.join("serve.lock"), "4999999999\n").unwrap();
+        let lock = LockFile::acquire(&d, "serve.lock").unwrap();
+        drop(lock);
+        // Garbage content is treated as stale too (SIGKILL can truncate).
+        std::fs::write(d.join("serve.lock"), "not a pid\n").unwrap();
+        let lock = LockFile::acquire(&d, "serve.lock").unwrap();
+        drop(lock);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -28,8 +28,16 @@
 //! cached [`crate::model::WeightCache`] entry for the same base is live,
 //! restore shares it instead of regenerating.
 
+//!
+//! The `mesp serve` daemon builds its crash-recovery contract on the
+//! same files: a per-job JSON sidecar plus the newest step snapshot in
+//! `--snapshot-dir` fully describe an interrupted job, and [`lock`]
+//! guarantees only one daemon at a time rescans (and re-admits) them.
+
 pub mod codec;
+pub mod lock;
 pub mod snapshot;
 
 pub use codec::{fnv1a64, fnv1a64_tensor, Reader, Writer};
+pub use lock::LockFile;
 pub use snapshot::{RngStreams, Snapshot, HEADER_LEN, MAGIC, VERSION};

@@ -226,6 +226,12 @@ impl<'a> Parser<'a> {
                         b'b' => s.push('\u{8}'),
                         b'f' => s.push('\u{c}'),
                         b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                anyhow::bail!(
+                                    "truncated \\u escape at byte {}",
+                                    self.i
+                                );
+                            }
                             let hex = std::str::from_utf8(
                                 &self.b[self.i..self.i + 4],
                             )?;
@@ -240,6 +246,9 @@ impl<'a> Parser<'a> {
                     // collect the full UTF-8 sequence
                     let start = self.i - 1;
                     let len = utf8_len(c);
+                    if start + len > self.b.len() {
+                        anyhow::bail!("truncated UTF-8 at byte {start}");
+                    }
                     self.i = start + len;
                     s.push_str(std::str::from_utf8(&self.b[start..self.i])?);
                 }

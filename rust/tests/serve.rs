@@ -1,0 +1,625 @@
+//! Integration tests for `mesp serve`: the daemon lifecycle over a real
+//! Unix socket, the JSONL protocol's error surface, and the crash-
+//! recovery contract (SIGKILL mid-run, restart, bitwise-identical final
+//! adapter).
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use mesp::config::TrainConfig;
+use mesp::fleet::loadgen::Client;
+use mesp::fleet::protocol::{self, code};
+use mesp::fleet::{job_cost_bytes, job_weight_class, JobSpec, ServeOptions, Server};
+use mesp::util::{Json, Rng};
+
+/// A unique scratch dir per test (tests run in parallel).
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("mesp-serve-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Connect to a daemon socket, retrying while it comes up.
+fn connect(socket: &Path) -> Client {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match Client::connect(socket) {
+            Ok(c) => return c,
+            Err(e) => {
+                assert!(
+                    Instant::now() < deadline,
+                    "daemon never came up on {}: {e:#}",
+                    socket.display()
+                );
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+fn submit_sim(client: &mut Client, tenant: &str, steps: usize, sim_us: u64) -> u64 {
+    let mut fields = vec![
+        ("spec", Json::obj(vec![("steps", Json::num(steps as f64))])),
+        ("tenant", Json::str(tenant)),
+        ("sim", Json::Bool(true)),
+    ];
+    if sim_us > 0 {
+        fields.push(("sim_us", Json::num(sim_us as f64)));
+    }
+    let r = client.call("submit", fields).unwrap();
+    assert!(r.ok, "submit rejected: {:?}", r.error);
+    r.data.get("job").and_then(|v| v.as_f64()).unwrap() as u64
+}
+
+fn in_process_server(dir: &Path, opts_mut: impl FnOnce(&mut ServeOptions)) -> Server {
+    let mut opts = ServeOptions {
+        socket: dir.join("d.sock"),
+        snapshot_dir: dir.join("state"),
+        budget_bytes: 256 << 20,
+        workers: 2,
+        ..ServeOptions::default()
+    };
+    opts_mut(&mut opts);
+    Server::start(opts, TrainConfig::default()).unwrap()
+}
+
+// ---------------------------------------------------------------------
+// In-process daemon lifecycle.
+// ---------------------------------------------------------------------
+
+#[test]
+fn daemon_smoke_submit_status_drain() {
+    let dir = scratch("smoke");
+    let server = in_process_server(&dir, |_| {});
+    let socket = server.socket().to_path_buf();
+    let handle = std::thread::spawn(move || server.run());
+    let mut client = connect(&socket);
+
+    for i in 0..6u64 {
+        let tenant = if i % 2 == 0 { "alice" } else { "bob" };
+        let id = submit_sim(&mut client, tenant, 3, 0);
+        assert_eq!(id, i, "ids are sequential from 0");
+    }
+
+    // set-budget round-trips (budget unchanged, ceiling preserved).
+    let r = client
+        .call(
+            "set-budget",
+            vec![("budget_bytes", Json::num((256u64 << 20) as f64))],
+        )
+        .unwrap();
+    assert!(r.ok, "set-budget rejected: {:?}", r.error);
+
+    // Aggregate status carries both tenants.
+    let r = client.call("status", vec![]).unwrap();
+    assert!(r.ok);
+    let tenants = r.data.get("tenants").unwrap();
+    assert!(tenants.get("alice").is_some() && tenants.get("bob").is_some());
+
+    // Per-job status: poll until job 0 is done (sim jobs are fast).
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let r = client
+            .call("status", vec![("job", Json::num(0.0))])
+            .unwrap();
+        assert!(r.ok);
+        let state = r.data.get("state").and_then(|v| v.as_str()).unwrap().to_string();
+        if state == "done" {
+            assert!(
+                r.data.get("latency_s").and_then(|v| v.as_f64()).is_some(),
+                "done jobs report latency"
+            );
+            break;
+        }
+        assert!(Instant::now() < deadline, "job 0 stuck in state {state}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let r = client.call("drain", vec![]).unwrap();
+    assert!(r.ok);
+    let summary = handle.join().unwrap().unwrap();
+    assert_eq!(summary.submitted, 6);
+    assert_eq!(summary.done, 6);
+    assert_eq!(summary.failed, 0);
+    assert_eq!(summary.pending, 0);
+    assert!(!socket.exists(), "socket removed on clean exit");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cancel_queued_and_running_jobs() {
+    let dir = scratch("cancel");
+    let server = in_process_server(&dir, |o| o.workers = 1);
+    let socket = server.socket().to_path_buf();
+    let handle = std::thread::spawn(move || server.run());
+    let mut client = connect(&socket);
+
+    // Job 0 runs ~1s (200 virtual steps x 5ms) — plenty of margin for
+    // the cancel to land mid-run; job 1 queues behind it on the single
+    // worker.
+    let slow = submit_sim(&mut client, "t", 200, 5000);
+    let queued = submit_sim(&mut client, "t", 200, 5000);
+    let r = client
+        .call("cancel", vec![("job", Json::num(queued as f64))])
+        .unwrap();
+    assert!(r.ok, "cancel rejected: {:?}", r.error);
+    let r = client
+        .call("cancel", vec![("job", Json::num(slow as f64))])
+        .unwrap();
+    assert!(r.ok, "cancel rejected: {:?}", r.error);
+    // Idempotent: cancelling again reports the terminal state instead of
+    // erroring (the job may need a step boundary to settle first).
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let r = client
+            .call("cancel", vec![("job", Json::num(slow as f64))])
+            .unwrap();
+        assert!(r.ok);
+        if r.data.get("state").and_then(|v| v.as_str()) == Some("cancelled") {
+            break;
+        }
+        assert!(Instant::now() < deadline, "job never settled cancelled");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let r = client.call("drain", vec![]).unwrap();
+    assert!(r.ok);
+    let summary = handle.join().unwrap().unwrap();
+    assert_eq!(summary.cancelled, 2);
+    assert_eq!(summary.done, 0);
+    assert_eq!(summary.failed, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn submit_refusals_are_diagnosed_at_submit_time() {
+    let spec = JobSpec::from_base(&TrainConfig::default());
+    let cost = job_cost_bytes(&spec).unwrap();
+    let solo = cost + job_weight_class(&spec).unwrap().bytes;
+
+    // Daemon 1: a ceiling below any toy job's solo footprint.
+    let dir = scratch("refuse-budget");
+    let server = in_process_server(&dir, |o| o.budget_bytes = (solo / 2).max(1));
+    let socket = server.socket().to_path_buf();
+    let handle = std::thread::spawn(move || server.run());
+    let mut client = connect(&socket);
+    let r = client
+        .call(
+            "submit",
+            vec![("spec", Json::obj(vec![])), ("sim", Json::Bool(true))],
+        )
+        .unwrap();
+    assert!(!r.ok, "a can-never-fit job must be refused at submit");
+    assert_eq!(r.error.as_ref().unwrap().0, code::OVER_BUDGET);
+    let r = client.call("shutdown", vec![]).unwrap();
+    assert!(r.ok);
+    let summary = handle.join().unwrap().unwrap();
+    assert_eq!(summary.submitted, 0, "refused jobs never enter the table");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Daemon 2: a roomy budget but one tenant's quota below the job cost.
+    let dir = scratch("refuse-quota");
+    let server = in_process_server(&dir, |o| {
+        o.quotas = vec![("capped".to_string(), (cost / 2).max(1))];
+    });
+    let socket = server.socket().to_path_buf();
+    let handle = std::thread::spawn(move || server.run());
+    let mut client = connect(&socket);
+    let r = client
+        .call(
+            "submit",
+            vec![
+                ("spec", Json::obj(vec![])),
+                ("tenant", Json::str("capped")),
+                ("sim", Json::Bool(true)),
+            ],
+        )
+        .unwrap();
+    assert!(!r.ok, "a job over its tenant quota must be refused at submit");
+    assert_eq!(r.error.as_ref().unwrap().0, code::QUOTA_EXCEEDED);
+    // Another tenant with no quota sails through the same daemon.
+    let id = submit_sim(&mut client, "free", 2, 0);
+    assert_eq!(id, 0);
+    let r = client.call("drain", vec![]).unwrap();
+    assert!(r.ok);
+    let summary = handle.join().unwrap().unwrap();
+    assert_eq!(summary.submitted, 1);
+    assert_eq!(summary.done, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn draining_daemon_refuses_new_work() {
+    let dir = scratch("drainref");
+    let server = in_process_server(&dir, |_| {});
+    let socket = server.socket().to_path_buf();
+    let handle = std::thread::spawn(move || server.run());
+    let mut client = connect(&socket);
+    let mut other = connect(&socket);
+
+    // Keep one job in flight (~500ms) so the daemon is still up when the
+    // post-drain submit arrives.
+    let _slow = submit_sim(&mut client, "t", 100, 5000);
+    let r = client.call("drain", vec![]).unwrap();
+    assert!(r.ok);
+    assert!(matches!(r.data.get("draining"), Some(Json::Bool(true))));
+    // New submits — on any connection — bounce with the draining code.
+    let r = other
+        .call(
+            "submit",
+            vec![("spec", Json::obj(vec![])), ("sim", Json::Bool(true))],
+        )
+        .unwrap();
+    assert!(!r.ok);
+    assert_eq!(r.error.as_ref().unwrap().0, code::DRAINING);
+
+    let summary = handle.join().unwrap().unwrap();
+    assert_eq!(summary.done, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Protocol error surface over the real socket.
+// ---------------------------------------------------------------------
+
+#[test]
+fn protocol_errors_over_the_socket() {
+    let dir = scratch("proto");
+    let server = in_process_server(&dir, |_| {});
+    let socket = server.socket().to_path_buf();
+    let handle = std::thread::spawn(move || server.run());
+    let mut client = connect(&socket);
+
+    // Garbage: answered (id null), connection stays usable.
+    let resp = client.call_raw("this is not json").unwrap();
+    let r = protocol::parse_response(&resp).unwrap();
+    assert!(!r.ok);
+    assert_eq!(r.id, None);
+    assert_eq!(r.error.as_ref().unwrap().0, code::BAD_JSON);
+
+    // Version skew: named code, id recovered for correlation.
+    let resp = client
+        .call_raw(r#"{"v":2,"id":7,"verb":"status"}"#)
+        .unwrap();
+    let r = protocol::parse_response(&resp).unwrap();
+    assert!(!r.ok);
+    assert_eq!(r.id, Some(7));
+    assert_eq!(r.error.as_ref().unwrap().0, code::BAD_VERSION);
+
+    // Unknown verb.
+    let resp = client
+        .call_raw(r#"{"v":1,"id":8,"verb":"frobnicate"}"#)
+        .unwrap();
+    let r = protocol::parse_response(&resp).unwrap();
+    assert_eq!(r.error.as_ref().unwrap().0, code::UNKNOWN_VERB);
+
+    // Missing verb.
+    let resp = client.call_raw(r#"{"v":1,"id":9}"#).unwrap();
+    let r = protocol::parse_response(&resp).unwrap();
+    assert_eq!(r.error.as_ref().unwrap().0, code::MISSING_FIELD);
+
+    // Unknown job id.
+    let r = client
+        .call("status", vec![("job", Json::num(99999.0))])
+        .unwrap();
+    assert!(!r.ok);
+    assert_eq!(r.error.as_ref().unwrap().0, code::UNKNOWN_JOB);
+
+    // Bad spec: unknown key inside the spec object.
+    let r = client
+        .call(
+            "submit",
+            vec![
+                ("spec", Json::obj(vec![("flux", Json::num(1.0))])),
+                ("sim", Json::Bool(true)),
+            ],
+        )
+        .unwrap();
+    assert!(!r.ok);
+    assert_eq!(r.error.as_ref().unwrap().0, code::BAD_SPEC);
+
+    // Oversized frame: answered with the named code, then the (desynced)
+    // connection is closed.
+    let huge = format!(
+        r#"{{"v":1,"id":10,"verb":"status","pad":"{}"}}"#,
+        "A".repeat(protocol::MAX_FRAME_BYTES + 100)
+    );
+    let resp = client.call_raw(&huge).unwrap();
+    let r = protocol::parse_response(&resp).unwrap();
+    assert!(!r.ok);
+    assert_eq!(r.error.as_ref().unwrap().0, code::OVERSIZED_FRAME);
+    assert!(
+        client.call_raw(r#"{"v":1,"id":11,"verb":"status"}"#).is_err(),
+        "connection is closed after an oversized frame"
+    );
+
+    // A fresh connection still works — the daemon is unharmed.
+    let mut fresh = connect(&socket);
+    let r = fresh.call("status", vec![]).unwrap();
+    assert!(r.ok);
+    let r = fresh.call("shutdown", vec![]).unwrap();
+    assert!(r.ok);
+    handle.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Protocol property tests: no input may panic the parser.
+// ---------------------------------------------------------------------
+
+/// Run `cases` random cases of a property, reporting the failing seed
+/// (same in-house pattern as tests/proptests.rs — no proptest crate in
+/// the offline build).
+fn forall(seed0: u64, cases: u64, mut prop: impl FnMut(&mut Rng)) {
+    for c in 0..cases {
+        let mut rng = Rng::new(seed0 ^ c.wrapping_mul(0x9e3779b97f4a7c15));
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(e) = r {
+            panic!("property failed at case {c} (seed0 {seed0}): {e:?}");
+        }
+    }
+}
+
+fn valid_frames() -> Vec<String> {
+    vec![
+        r#"{"v":1,"id":0,"verb":"status"}"#.to_string(),
+        r#"{"v":1,"id":1,"verb":"status","job":3}"#.to_string(),
+        r#"{"v":1,"id":2,"verb":"cancel","job":0}"#.to_string(),
+        r#"{"v":1,"id":3,"verb":"drain"}"#.to_string(),
+        r#"{"v":1,"id":4,"verb":"shutdown"}"#.to_string(),
+        r#"{"v":1,"id":5,"verb":"set-budget","budget_bytes":1048576}"#
+            .to_string(),
+        concat!(
+            r#"{"v":1,"id":6,"verb":"submit","tenant":"alice","sim":true,"#,
+            r#""sim_us":50,"spec":{"steps":4,"priority":2,"method":"mesp"}}"#
+        )
+        .to_string(),
+    ]
+}
+
+#[test]
+fn prop_truncated_frames_never_panic_and_never_parse() {
+    forall(0xC0FFEE, 300, |rng| {
+        let frames = valid_frames();
+        let f = &frames[rng.below(frames.len())];
+        let cut = rng.below(f.len()); // strictly shorter than the frame
+        let truncated = String::from_utf8_lossy(&f.as_bytes()[..cut]);
+        let r = protocol::parse_request(&truncated);
+        // Truncating valid JSON cannot yield a different valid frame:
+        // every prefix is rejected, with a named code, never a panic.
+        assert!(r.is_err(), "prefix of len {cut} parsed: {truncated}");
+    });
+}
+
+#[test]
+fn prop_mutated_frames_never_panic() {
+    forall(0xBADF00D, 300, |rng| {
+        let frames = valid_frames();
+        let mut bytes = frames[rng.below(frames.len())].clone().into_bytes();
+        for _ in 0..1 + rng.below(6) {
+            let i = rng.below(bytes.len());
+            match rng.below(3) {
+                0 => bytes[i] = (rng.next_u64() & 0xFF) as u8,
+                1 => {
+                    bytes.insert(i, (rng.next_u64() & 0x7F) as u8);
+                }
+                _ => {
+                    bytes.remove(i);
+                }
+            }
+            if bytes.is_empty() {
+                bytes.push(b'{');
+            }
+        }
+        let line = String::from_utf8_lossy(&bytes);
+        // Must not panic; Ok is allowed (a mutation can be harmless).
+        let _ = protocol::parse_request(&line);
+    });
+}
+
+#[test]
+fn prop_version_skew_is_always_named() {
+    forall(0x5EED, 200, |rng| {
+        let v = rng.below(1000) as u64;
+        if v == protocol::PROTOCOL_VERSION {
+            return;
+        }
+        let line = format!(r#"{{"v":{v},"id":1,"verb":"status"}}"#);
+        let e = protocol::parse_request(&line).unwrap_err();
+        assert_eq!(e.code, code::BAD_VERSION);
+    });
+}
+
+// ---------------------------------------------------------------------
+// The spawned binary: exit codes and SIGKILL crash recovery.
+// ---------------------------------------------------------------------
+
+fn mesp() -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_mesp"));
+    c.stdout(Stdio::null()).stderr(Stdio::null());
+    c
+}
+
+fn spawn_serve(dir: &Path, socket: &Path) -> Child {
+    mesp()
+        .current_dir(dir) // keep artifacts/ out of the repo tree
+        .args([
+            "serve",
+            "--config",
+            "toy",
+            "--budget-mb",
+            "256",
+            "--workers",
+            "1",
+            "--checkpoint-every",
+            "1",
+        ])
+        .arg("--snapshot-dir")
+        .arg(dir)
+        .arg("--socket")
+        .arg(socket)
+        .spawn()
+        .unwrap()
+}
+
+/// Submit one REAL toy job (no pinned seed: the daemon derives it from
+/// the job id, identically on every daemon life).
+fn submit_real(client: &mut Client, steps: usize) -> u64 {
+    let r = client
+        .call(
+            "submit",
+            vec![("spec", Json::obj(vec![("steps", Json::num(steps as f64))]))],
+        )
+        .unwrap();
+    assert!(r.ok, "submit rejected: {:?}", r.error);
+    r.data.get("job").and_then(|v| v.as_f64()).unwrap() as u64
+}
+
+fn wait_exit(mut child: Child, what: &str) -> i32 {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        if let Some(status) = child.try_wait().unwrap() {
+            return status.code().unwrap_or(-1);
+        }
+        assert!(Instant::now() < deadline, "{what} never exited");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+const RECOVERY_STEPS: usize = 40;
+
+#[test]
+fn sigkill_recovery_resumes_bitwise() {
+    // Control: an uninterrupted daemon runs job 0 to completion.
+    let c_dir = scratch("ctl");
+    let c_sock = c_dir.join("d.sock");
+    let control = spawn_serve(&c_dir, &c_sock);
+    let mut client = connect(&c_sock);
+    assert_eq!(submit_real(&mut client, RECOVERY_STEPS), 0);
+    let r = client.call("drain", vec![]).unwrap();
+    assert!(r.ok);
+    drop(client);
+    assert_eq!(wait_exit(control, "control daemon"), 0, "clean drain exits 0");
+    let control_final = std::fs::read(c_dir.join("job-0-final.snap")).unwrap();
+
+    // Crash run: SIGKILL the daemon once the first checkpoint lands.
+    let k_dir = scratch("kill");
+    let k_sock = k_dir.join("d.sock");
+    let mut victim = spawn_serve(&k_dir, &k_sock);
+    let mut client = connect(&k_sock);
+    assert_eq!(submit_real(&mut client, RECOVERY_STEPS), 0);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let has_snap = std::fs::read_dir(&k_dir).unwrap().flatten().any(|e| {
+            let n = e.file_name();
+            let n = n.to_string_lossy().into_owned();
+            n.starts_with("job-0-step-") && n.ends_with(".snap")
+        });
+        if has_snap {
+            break;
+        }
+        assert!(Instant::now() < deadline, "no checkpoint ever appeared");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    victim.kill().unwrap(); // SIGKILL on unix: no cleanup of any kind
+    victim.wait().unwrap();
+    drop(client);
+    assert!(
+        k_dir.join("job-0.json").exists(),
+        "the sidecar journal survives the kill"
+    );
+
+    // Restart on the same snapshot dir: the job is re-admitted from its
+    // newest checkpoint and runs to the SAME final bits.
+    let revived = spawn_serve(&k_dir, &k_sock);
+    let mut client = connect(&k_sock);
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let r = client
+            .call("status", vec![("job", Json::num(0.0))])
+            .unwrap();
+        assert!(r.ok, "recovered daemon must know job 0: {:?}", r.error);
+        assert!(
+            matches!(r.data.get("recovered"), Some(Json::Bool(true))),
+            "job 0 must be marked recovered"
+        );
+        let state = r.data.get("state").and_then(|v| v.as_str()).unwrap();
+        if state == "done" {
+            let resumes =
+                r.data.get("resumes").and_then(|v| v.as_f64()).unwrap() as u64;
+            assert!(resumes >= 1, "job must have resumed from its snapshot");
+            break;
+        }
+        assert!(
+            state != "failed" && state != "cancelled",
+            "recovered job ended {state}"
+        );
+        assert!(Instant::now() < deadline, "recovered job stuck in {state}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let r = client.call("drain", vec![]).unwrap();
+    assert!(r.ok);
+    drop(client);
+    assert_eq!(wait_exit(revived, "revived daemon"), 0);
+
+    let revived_final = std::fs::read(k_dir.join("job-0-final.snap")).unwrap();
+    assert_eq!(
+        control_final, revived_final,
+        "final adapter bits after SIGKILL + recovery must match an \
+         uninterrupted run bitwise"
+    );
+    let _ = std::fs::remove_dir_all(&c_dir);
+    let _ = std::fs::remove_dir_all(&k_dir);
+}
+
+#[test]
+fn serve_startup_failure_exits_3() {
+    // A socket path past the sun_path limit can never bind.
+    let dir = scratch("exit3");
+    let long = dir.join("x".repeat(150)).with_extension("sock");
+    let status = mesp()
+        .current_dir(&dir)
+        .args(["serve", "--budget-mb", "64"])
+        .arg("--snapshot-dir")
+        .arg(dir.join("state"))
+        .arg("--socket")
+        .arg(long)
+        .status()
+        .unwrap();
+    assert_eq!(status.code(), Some(3));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fleet_bad_job_file_exits_3() {
+    let dir = scratch("exit3f");
+    let status = mesp()
+        .current_dir(&dir)
+        .args(["fleet", "--job-file", "/definitely/not/here.jsonl"])
+        .status()
+        .unwrap();
+    assert_eq!(status.code(), Some(3), "fleet startup failure exits 3");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fleet_job_failures_exit_2() {
+    let dir = scratch("exit2");
+    let jobs = dir.join("jobs.jsonl");
+    // Parses fine, fails at runtime: no such model config.
+    std::fs::write(&jobs, "{\"config\": \"no-such-config\"}\n").unwrap();
+    let status = mesp()
+        .current_dir(&dir)
+        .args(["fleet", "--budget-mb", "64"])
+        .arg("--job-file")
+        .arg(&jobs)
+        .status()
+        .unwrap();
+    assert_eq!(status.code(), Some(2), "completed-with-failures exits 2");
+    let _ = std::fs::remove_dir_all(&dir);
+}

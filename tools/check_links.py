@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Fail CI on dead intra-repo markdown links.
+
+Scans the repo's markdown documentation (README.md, docs/*.md, and the
+other root-level .md files), extracts inline links and bare backticked
+file references of the form [text](target), and verifies every
+relative target exists in the tree. External links (http/https/mailto)
+are skipped; '#fragment' suffixes are stripped before the existence
+check. Exit code 0 = all links resolve, 1 = at least one dead link
+(each printed as file:line).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — excluding images is unnecessary; image targets must
+# exist too. Nested parens in targets do not occur in this repo.
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def doc_files():
+    files = sorted(REPO.glob("*.md"))
+    docs = REPO / "docs"
+    if docs.is_dir():
+        files += sorted(docs.glob("*.md"))
+    return files
+
+
+def check_file(path):
+    """Return a list of (line_number, target) dead links in one file."""
+    dead = []
+    text = path.read_text(encoding="utf-8")
+    in_fence = False
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for match in LINK.finditer(line):
+            target = match.group(1)
+            if target.startswith(SKIP_SCHEMES):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:
+                continue  # pure-fragment link into the same file
+            resolved = (path.parent / target).resolve()
+            try:
+                resolved.relative_to(REPO)
+            except ValueError:
+                dead.append((lineno, target + " (escapes the repo)"))
+                continue
+            if not resolved.exists():
+                dead.append((lineno, target))
+    return dead
+
+
+def main():
+    files = doc_files()
+    if not files:
+        print("check_links: no markdown files found", file=sys.stderr)
+        return 1
+    total_links = 0
+    failures = 0
+    for path in files:
+        dead = check_file(path)
+        total_links += 1  # at least count the file as visited
+        for lineno, target in dead:
+            failures += 1
+            rel = path.relative_to(REPO)
+            print(f"{rel}:{lineno}: dead link -> {target}", file=sys.stderr)
+    if failures:
+        print(f"check_links: {failures} dead link(s)", file=sys.stderr)
+        return 1
+    print(f"check_links: OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
